@@ -1,0 +1,54 @@
+//! Shared bench plumbing: artifact/model loading with graceful fallback to
+//! a random model when `make artifacts` hasn't run.
+
+use hisolo::data::corpus::Corpus;
+use hisolo::data::dataset::windows;
+use hisolo::model::{ModelConfig, Transformer, WeightFile};
+use hisolo::runtime::ArtifactDir;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+pub struct BenchEnv {
+    pub model: Arc<Transformer>,
+    pub windows: Vec<Vec<u32>>,
+    pub from_artifacts: bool,
+    pub dir: Option<PathBuf>,
+}
+
+/// Load the trained artifact model + corpus windows, or fall back to a
+/// random model + synthetic tokens so benches always run.
+pub fn load_env(n_windows: usize) -> BenchEnv {
+    let dir = ArtifactDir::default_path();
+    if dir.join("manifest.json").exists() {
+        let a = ArtifactDir::load(&dir).expect("manifest parse");
+        let wf = WeightFile::load(&dir.join("model.hwt")).expect("weights");
+        let model = Transformer::from_weights(&wf, a.model_config).expect("model");
+        let corpus = Corpus::load(&dir.join("corpus_test.txt")).expect("corpus");
+        let ws = windows(&corpus.tokens, a.model_config.seq_len, n_windows);
+        BenchEnv {
+            model: Arc::new(model),
+            windows: ws,
+            from_artifacts: true,
+            dir: Some(dir),
+        }
+    } else {
+        eprintln!("WARN: artifacts/ missing — using a random model (run `make artifacts`)");
+        let cfg = ModelConfig::default();
+        let model = Transformer::random(cfg, 7);
+        let toks: Vec<u32> = (0..40_000u32).map(|i| (i * 1103515245 + 12345) % 256).collect();
+        let ws = windows(&toks, cfg.seq_len, n_windows);
+        BenchEnv {
+            model: Arc::new(model),
+            windows: ws,
+            from_artifacts: false,
+            dir: None,
+        }
+    }
+}
+
+pub fn threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(16)
+}

@@ -1,0 +1,111 @@
+//! Figure 1 reproduction: low-rankness of off-diagonal blocks.
+//!
+//! The paper motivates HSS by showing attention interacts weakly with
+//! far-away tokens, making off-diagonal blocks numerically low-rank. We
+//! measure the singular-value decay of (a) the off-diagonal blocks of the
+//! trained W_Q/W_K/W_V projections and (b) an actual attention-score matrix
+//! QKᵀ from a corpus window, and compare against the diagonal blocks.
+//!
+//!     cargo bench --bench fig1_lowrank
+
+mod common;
+
+use hisolo::linalg::svd::svd;
+use hisolo::linalg::Matrix;
+use hisolo::util::timer::Table;
+
+fn effective_rank(s: &[f32], frac: f32) -> usize {
+    let s0 = s.first().copied().unwrap_or(0.0);
+    s.iter().filter(|&&x| x > frac * s0).count()
+}
+
+fn sv_series(m: &Matrix, k: usize) -> (Vec<f32>, usize) {
+    let f = svd(m);
+    let s0 = f.s.first().copied().unwrap_or(1.0).max(1e-30);
+    let series: Vec<f32> = f.s.iter().take(k).map(|&x| x / s0).collect();
+    let er = effective_rank(&f.s, 0.01);
+    (series, er)
+}
+
+fn main() {
+    let env = common::load_env(2);
+    let model = &env.model;
+    let n = model.cfg.d_model;
+    let half = n / 2;
+
+    println!("== Figure 1: singular-value decay (normalized sigma_i / sigma_1) ==\n");
+    let mut t = Table::new(&[
+        "matrix", "block", "s8", "s16", "s32", "eff rank (1%)", "of n",
+    ]);
+
+    for (name, w) in model.qkv_projections().into_iter().take(3) {
+        let a = w.transpose();
+        for (block_name, block) in [
+            ("off-diag (1,2)", a.slice(0, half, half, n)),
+            ("off-diag (2,1)", a.slice(half, n, 0, half)),
+            ("diag (1,1)", a.slice(0, half, 0, half)),
+        ] {
+            let (s, er) = sv_series(&block, 33);
+            t.row(&[
+                name.clone(),
+                block_name.to_string(),
+                format!("{:.3}", s.get(8).copied().unwrap_or(0.0)),
+                format!("{:.3}", s.get(16).copied().unwrap_or(0.0)),
+                format!("{:.3}", s.get(32).copied().unwrap_or(0.0)),
+                er.to_string(),
+                half.to_string(),
+            ]);
+        }
+    }
+
+    // actual attention scores QK^T on a real window (first layer, head 0)
+    let w0 = &env.windows[0];
+    let tokens = &w0[..model.cfg.seq_len];
+    let tlen = tokens.len();
+    // embed + ln + project with layer-0 weights
+    let mut h = Matrix::zeros(tlen, n);
+    for (i, &tok) in tokens.iter().enumerate() {
+        let te = model.tok_emb.row(tok as usize);
+        let pe = model.pos_emb.row(i);
+        for j in 0..n {
+            h.set(i, j, te[j] + pe[j]);
+        }
+    }
+    let l0 = &model.layers[0];
+    let a = hisolo::model::transformer::layernorm(&h, &l0.ln1_g, &l0.ln1_b);
+    let q = a.matmul(&l0.wq);
+    let k = a.matmul(&l0.wk);
+    let scores = {
+        let mut s = Matrix::zeros(tlen, tlen);
+        q.matmul_bt_into(&k, &mut s);
+        s
+    };
+    let th = tlen / 2;
+    for (bn, block) in [
+        ("QK^T off-diag (2,1)", scores.slice(th, tlen, 0, th)),
+        ("QK^T diag (1,1)", scores.slice(0, th, 0, th)),
+    ] {
+        let (s, er) = sv_series(&block, 33);
+        t.row(&[
+            "attention".to_string(),
+            bn.to_string(),
+            format!("{:.3}", s.get(8).copied().unwrap_or(0.0)),
+            format!("{:.3}", s.get(16).copied().unwrap_or(0.0)),
+            format!("{:.3}", s.get(32).copied().unwrap_or(0.0)),
+            er.to_string(),
+            th.to_string(),
+        ]);
+    }
+    t.print();
+
+    println!(
+        "\npaper's claim reproduced if off-diagonal blocks decay faster\n\
+         (smaller eff rank) than diagonal blocks — the compression headroom\n\
+         sHSS exploits. Source: {}",
+        if env.from_artifacts {
+            "trained artifact model"
+        } else {
+            "random fallback model (run `make artifacts`)"
+        }
+    );
+}

@@ -1,0 +1,92 @@
+//! Figure 3 reproduction: storage vs perplexity scatter + §5 headline.
+//!
+//! Sweeps rank × sparsity for the paper's Fig-3 methods (Original, sSVD,
+//! sR-SVD, sHSS, sHSS-RCM), prints the scatter sorted by storage, and
+//! reports the headline: max storage reduction with PPL on-par (≤ +2%) vs
+//! the dense baseline (paper claims up to 1.7× on the targeted params).
+//!
+//!     cargo bench --bench fig3_storage_ppl
+
+mod common;
+
+use hisolo::compress::{CompressorConfig, Method};
+use hisolo::eval::sweep::{sweep, to_csv};
+use hisolo::util::timer::Table;
+
+fn main() {
+    let env = common::load_env(12);
+    let threads = common::threads();
+
+    let ranks = [8usize, 16, 32, 64];
+    let sparsities = [0.1, 0.2, 0.3];
+    let mut configs = Vec::new();
+    for &r in &ranks {
+        for &sp in &sparsities {
+            configs.push(CompressorConfig {
+                rank: r,
+                sparsity: sp,
+                depth: 3,
+                ..Default::default()
+            });
+        }
+    }
+    println!(
+        "== Figure 3: storage vs PPL ({} methods x {} configs, {} windows, {} threads) ==\n",
+        Method::FIG3.len(),
+        configs.len(),
+        env.windows.len(),
+        threads
+    );
+
+    let mut points = sweep(&env.model, &Method::FIG3, &configs, &env.windows, threads);
+    let dense_ppl = points
+        .iter()
+        .find(|p| p.method == Method::Dense)
+        .map(|p| p.ppl)
+        .unwrap();
+    points.sort_by(|a, b| a.qkv_bytes.cmp(&b.qkv_bytes));
+
+    let mut t = Table::new(&[
+        "method", "rank", "sp", "qkv MB", "qkv ratio", "ppl", "d_ppl",
+    ]);
+    for p in &points {
+        t.row(&[
+            p.method.paper_label().to_string(),
+            p.rank.to_string(),
+            format!("{:.1}", p.sparsity),
+            format!("{:.3}", p.qkv_bytes as f64 / 1e6),
+            format!("{:.3}", p.qkv_ratio()),
+            format!("{:.4}", p.ppl),
+            format!("{:+.4}", p.ppl - dense_ppl),
+        ]);
+    }
+    t.print();
+
+    // headline: best qkv reduction with on-par PPL (<= +2% of dense)
+    println!("\n== §5 headline ==");
+    for m in [Method::SHssRcm, Method::SHss, Method::SSvd, Method::SRsvd] {
+        let best = points
+            .iter()
+            .filter(|p| p.method == m && p.ppl <= dense_ppl * 1.02)
+            .min_by(|a, b| a.qkv_bytes.cmp(&b.qkv_bytes));
+        match best {
+            Some(p) => println!(
+                "{:<9} best on-par point: {:.2}x qkv reduction (rank {} sp {:.1}, ppl {:.4} vs dense {:.4})",
+                m.paper_label(),
+                1.0 / p.qkv_ratio(),
+                p.rank,
+                p.sparsity,
+                p.ppl,
+                dense_ppl
+            ),
+            None => println!("{:<9} no on-par point in grid", m.paper_label()),
+        }
+    }
+    println!("(paper: up to 1.7x storage reduction on the 1.6B targeted params, PPL on-par or better)");
+
+    let csv = to_csv(&points);
+    let out = "bench_fig3.csv";
+    if std::fs::write(out, &csv).is_ok() {
+        println!("\nwrote {out}");
+    }
+}

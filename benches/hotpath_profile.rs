@@ -1,0 +1,116 @@
+//! §Perf microbenches: the three native hot paths (matmul, HSS matvec,
+//! transformer forward) with achieved-GFLOP/s so optimization progress is
+//! measurable against the scalar-CPU roofline.
+//!
+//!     cargo bench --bench hotpath_profile
+
+use hisolo::compress::{Compressor, CompressorConfig, Method};
+use hisolo::data::synthetic;
+use hisolo::linalg::Matrix;
+use hisolo::model::{ModelConfig, Transformer};
+use hisolo::util::timer::{bench, fmt_ns, Table};
+use std::time::Duration;
+
+fn main() {
+    let mut t = Table::new(&["hot path", "size", "time", "GFLOP/s"]);
+
+    // --- dense matmul (drives fwd + compression) ---------------------------
+    for n in [128usize, 256, 512] {
+        let a = Matrix::randn(n, n, 1);
+        let b = Matrix::randn(n, n, 2);
+        let bt = b.transpose();
+        let mut c = Matrix::zeros(n, n);
+        let s = bench(
+            || a.matmul_bt_into(std::hint::black_box(&bt), &mut c),
+            3,
+            Duration::from_millis(400),
+            10_000,
+        );
+        let flops = 2.0 * (n as f64).powi(3);
+        t.row(&[
+            "matmul_bt".into(),
+            format!("{n}x{n}"),
+            fmt_ns(s.mean_ns),
+            format!("{:.2}", flops / s.mean_ns),
+        ]);
+    }
+
+    // --- dense matvec -------------------------------------------------------
+    for n in [256usize, 1024] {
+        let a = Matrix::randn(n, n, 3);
+        let x = vec![1.0f32; n];
+        let mut y = vec![0.0f32; n];
+        let s = bench(
+            || a.matvec_into(std::hint::black_box(&x), &mut y),
+            3,
+            Duration::from_millis(300),
+            100_000,
+        );
+        let flops = 2.0 * (n as f64) * (n as f64);
+        t.row(&[
+            "matvec".into(),
+            format!("{n}x{n}"),
+            fmt_ns(s.mean_ns),
+            format!("{:.2}", flops / s.mean_ns),
+        ]);
+    }
+
+    // --- HSS matvec ---------------------------------------------------------
+    for n in [256usize, 1024] {
+        let w = synthetic::trained_like(n, 4);
+        let c = Compressor::new(CompressorConfig {
+            rank: n / 8,
+            sparsity: 0.1,
+            depth: 3,
+            ..Default::default()
+        })
+        .compress(&w, Method::SHssRcm);
+        let x = vec![1.0f32; n];
+        let mut y = vec![0.0f32; n];
+        let mut ws = c.workspace();
+        let s = bench(
+            || c.matvec_with(std::hint::black_box(&x), &mut y, &mut ws),
+            3,
+            Duration::from_millis(300),
+            100_000,
+        );
+        let flops = 2.0 * c.params() as f64; // one mul+add per stored param
+        t.row(&[
+            "hss matvec".into(),
+            format!("{n}x{n}"),
+            fmt_ns(s.mean_ns),
+            format!("{:.2}", flops / s.mean_ns),
+        ]);
+    }
+
+    // --- full transformer forward (the eval/serving unit) -------------------
+    let cfg = ModelConfig::default();
+    let model = Transformer::random(cfg, 5);
+    let tokens: Vec<u32> = (0..cfg.seq_len as u32).map(|i| i % 256).collect();
+    let s = bench(
+        || {
+            std::hint::black_box(model.forward(std::hint::black_box(&tokens)));
+        },
+        1,
+        Duration::from_secs(3),
+        50,
+    );
+    // fwd flops: per layer 4 d^2 t (qkvo) + 2 t^2 d (attn) + 4 d dff t (mlp),
+    // plus 2 t d V logits
+    let (d, tt, ff, v) = (
+        cfg.d_model as f64,
+        cfg.seq_len as f64,
+        cfg.d_ff as f64,
+        cfg.vocab as f64,
+    );
+    let flops = cfg.n_layers as f64 * (2.0 * 4.0 * d * d * tt + 2.0 * 2.0 * tt * tt * d + 2.0 * 2.0 * d * ff * tt)
+        + 2.0 * tt * d * v;
+    t.row(&[
+        "transformer fwd".into(),
+        format!("t={} d={}", cfg.seq_len, cfg.d_model),
+        fmt_ns(s.mean_ns),
+        format!("{:.2}", flops / s.mean_ns),
+    ]);
+
+    t.print();
+}

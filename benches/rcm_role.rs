@@ -1,0 +1,89 @@
+//! §5.4 reproduction: the role of RCM reordering.
+//!
+//! Measures, per trained projection: pattern bandwidth and diagonal-band
+//! magnitude mass before/after RCM, and the HSS reconstruction error with
+//! and without reordering, at each sparsity level. Also the isolated
+//! shuffled-banded case where RCM provably wins.
+//!
+//!     cargo bench --bench rcm_role
+
+mod common;
+
+use hisolo::data::synthetic;
+use hisolo::hss::{build, HssOptions};
+use hisolo::linalg::norms::rel_fro_error;
+use hisolo::sparse::bandwidth::{bandwidth, mass_within_band};
+use hisolo::sparse::graph::{magnitude_quantile, Graph};
+use hisolo::sparse::{rcm, top_p_extract};
+use hisolo::util::timer::Table;
+
+fn main() {
+    let env = common::load_env(1);
+
+    println!("== §5.4: RCM effect on trained projections ==\n");
+    let mut t = Table::new(&[
+        "projection", "sp", "bw before", "bw after", "mass@16 before",
+        "mass@16 after", "err sHSS", "err sHSS-RCM",
+    ]);
+    for (name, w) in env.model.qkv_projections().into_iter().take(3) {
+        let a = w.transpose();
+        for sp in [0.10, 0.30] {
+            let (_s, resid) = top_p_extract(&a, sp);
+            let g = Graph::from_pattern(&resid, 0.90);
+            let p = rcm(&g);
+            let reordered = resid.permute_sym(p.indices());
+            let thresh = magnitude_quantile(&resid, 0.90);
+
+            let mk = |use_rcm| HssOptions {
+                rank: 32,
+                sparsity: sp,
+                depth: 3,
+                use_rcm,
+                ..Default::default()
+            };
+            let err_plain = rel_fro_error(&build(&a, &mk(false)).reconstruct(), &a);
+            let err_rcm = rel_fro_error(&build(&a, &mk(true)).reconstruct(), &a);
+
+            t.row(&[
+                name.clone(),
+                format!("{:.0}%", sp * 100.0),
+                bandwidth(&resid, thresh).to_string(),
+                bandwidth(&reordered, thresh).to_string(),
+                format!("{:.3}", mass_within_band(&resid, 16)),
+                format!("{:.3}", mass_within_band(&reordered, 16)),
+                format!("{err_plain:.4}"),
+                format!("{err_rcm:.4}"),
+            ]);
+        }
+    }
+    t.print();
+
+    println!("\n== isolated case: banded structure hidden by a permutation ==\n");
+    let mut t2 = Table::new(&["n", "err sHSS", "err sHSS-RCM", "rcm wins"]);
+    for n in [128usize, 256] {
+        let a = synthetic::shuffled_banded(n, 6, 42);
+        let mk = |use_rcm| HssOptions {
+            rank: 8,
+            sparsity: 0.0,
+            depth: 2,
+            use_rcm,
+            pattern_quantile: 0.85,
+            rsvd: false,
+            ..Default::default()
+        };
+        let e0 = rel_fro_error(&build(&a, &mk(false)).reconstruct(), &a);
+        let e1 = rel_fro_error(&build(&a, &mk(true)).reconstruct(), &a);
+        t2.row(&[
+            n.to_string(),
+            format!("{e0:.4}"),
+            format!("{e1:.4}"),
+            (e1 < e0).to_string(),
+        ]);
+    }
+    t2.print();
+    println!(
+        "\npaper shape: on trained LLM projections RCM is a slight, mostly\n\
+         consistent gain (\"slight gain with RCM\"); on latent banded\n\
+         structure it is decisive."
+    );
+}

@@ -1,0 +1,50 @@
+//! Quickstart: compress a single trained-like matrix with every method and
+//! compare error vs storage — the paper's core trade-off in 30 lines.
+//!
+//!     cargo run --release --example quickstart
+
+use hisolo::compress::{Compressor, CompressorConfig, Method};
+use hisolo::data::synthetic;
+use hisolo::util::timer::Table;
+
+fn main() {
+    // a 256x256 matrix with the structure trained projections show:
+    // low-rank bulk + a few large-magnitude "spikes"
+    let w = synthetic::trained_like(256, 42);
+
+    let cfg = CompressorConfig {
+        rank: 32,      // outer rank (d/8, scaling the paper's 512@4096)
+        sparsity: 0.3, // sp30
+        depth: 3,      // paper's Algorithm 1
+        ..Default::default()
+    };
+    let comp = Compressor::new(cfg);
+
+    let mut table = Table::new(&["method", "rel error", "storage ratio", "params"]);
+    for m in Method::ALL {
+        let c = comp.compress(&w, m);
+        table.row(&[
+            m.paper_label().to_string(),
+            format!("{:.4}", c.rel_error(&w)),
+            format!("{:.3}", c.storage_ratio()),
+            c.params().to_string(),
+        ]);
+    }
+    table.print();
+
+    // the compressed matvec is a drop-in replacement for y = W x
+    let c = comp.compress(&w, Method::SHssRcm);
+    let x: Vec<f32> = (0..256).map(|i| (i as f32 * 0.1).sin()).collect();
+    let y = c.matvec(&x);
+    let y_exact = {
+        let mut out = vec![0.0; 256];
+        w.matvec_into(&x, &mut out);
+        out
+    };
+    let err: f32 = y
+        .iter()
+        .zip(&y_exact)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f32::max);
+    println!("\nsHSS-RCM matvec max abs deviation from dense: {err:.4}");
+}

@@ -1,0 +1,77 @@
+//! RCM reordering ablation (paper §5.4): what does the permutation actually
+//! buy? Measures bandwidth / diagonal mass concentration before and after
+//! RCM on real trained projections, and the resulting HSS reconstruction
+//! error with and without reordering.
+//!
+//!     make artifacts && cargo run --release --example reorder_ablation
+
+use hisolo::hss::{build, HssOptions};
+use hisolo::linalg::norms::rel_fro_error;
+use hisolo::model::{Transformer, WeightFile};
+use hisolo::runtime::ArtifactDir;
+use hisolo::sparse::bandwidth::{bandwidth, mass_within_band};
+use hisolo::sparse::graph::Graph;
+use hisolo::sparse::{rcm, top_p_extract};
+use hisolo::util::timer::Table;
+
+fn main() -> anyhow::Result<()> {
+    let dir = ArtifactDir::default_path();
+    let artifacts = ArtifactDir::load(&dir)?;
+    let weights = WeightFile::load(&dir.join("model.hwt"))?;
+    let model = Transformer::from_weights(&weights, artifacts.model_config)?;
+
+    let mut t = Table::new(&[
+        "projection",
+        "bandwidth before",
+        "bandwidth after",
+        "mass@band16 before",
+        "mass@band16 after",
+        "hss err",
+        "hss-rcm err",
+    ]);
+
+    for (name, w) in model.qkv_projections().into_iter().take(6) {
+        let a = w.transpose();
+        // isolate the residual the HSS stage actually sees (sp10)
+        let (_s, resid) = top_p_extract(&a, 0.10);
+        let g = Graph::from_pattern(&resid, 0.90);
+        let p = rcm(&g);
+        let reordered = resid.permute_sym(p.indices());
+
+        // pattern bandwidth at the same quantile threshold
+        let thresh = hisolo::sparse::graph::magnitude_quantile(&resid, 0.90);
+        let bw_before = bandwidth_at(&resid, thresh);
+        let bw_after = bandwidth_at(&reordered, thresh);
+
+        let mk = |use_rcm| HssOptions {
+            rank: 16,
+            sparsity: 0.10,
+            depth: 3,
+            use_rcm,
+            ..Default::default()
+        };
+        let err_plain = rel_fro_error(&build(&a, &mk(false)).reconstruct(), &a);
+        let err_rcm = rel_fro_error(&build(&a, &mk(true)).reconstruct(), &a);
+
+        t.row(&[
+            name,
+            bw_before.to_string(),
+            bw_after.to_string(),
+            format!("{:.3}", mass_within_band(&resid, 16)),
+            format!("{:.3}", mass_within_band(&reordered, 16)),
+            format!("{err_plain:.4}"),
+            format!("{err_rcm:.4}"),
+        ]);
+    }
+    t.print();
+    println!(
+        "\npaper §5.4: RCM gives a slight but consistent gain; the reordered\n\
+         residual concentrates large entries near the diagonal, shrinking\n\
+         the numerical rank of the off-diagonal HSS blocks."
+    );
+    Ok(())
+}
+
+fn bandwidth_at(m: &hisolo::linalg::Matrix, thresh: f32) -> usize {
+    bandwidth(m, thresh)
+}

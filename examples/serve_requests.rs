@@ -1,0 +1,81 @@
+//! Serving demo: start the coordinator with dense + sHSS PJRT executables,
+//! fire batched scoring requests, and report latency/throughput — the
+//! paper's "compressed models retain full inference speed" claim, measured.
+//!
+//!     make artifacts && cargo run --release --example serve_requests
+
+use hisolo::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, Variant};
+use hisolo::data::corpus::Corpus;
+use hisolo::data::dataset::windows;
+use hisolo::model::WeightFile;
+use hisolo::runtime::{ArtifactDir, Runtime};
+use hisolo::util::timer::Table;
+use std::time::{Duration, Instant};
+
+fn main() -> anyhow::Result<()> {
+    let dir = ArtifactDir::default_path();
+    let artifacts = ArtifactDir::load(&dir)?;
+    let seq = artifacts.model_config.seq_len;
+
+    let mut coord = Coordinator::new(CoordinatorConfig {
+        batcher: BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+            capacity: 1024,
+        },
+    });
+
+    // workers construct their own PJRT client (the xla client is !Send)
+    for (variant, exe) in [
+        (Variant::Dense, "model_dense_b8"),
+        (Variant::Hss, "model_hss_b8"),
+    ] {
+        let dir = dir.clone();
+        coord.add_worker_factory(variant, move || {
+            let a = ArtifactDir::load(&dir)?;
+            let weights = WeightFile::load(&dir.join("model.hwt"))?;
+            let rt = Runtime::cpu()?;
+            println!("[worker {}] compiling {exe} on {}", variant.name(), rt.platform());
+            if exe.contains("hss") {
+                let ops = WeightFile::load(&dir.join("hss_operands.hwt"))?;
+                rt.load_model(&a, exe, &[&weights, &ops])
+            } else {
+                rt.load_model(&a, exe, &[&weights])
+            }
+        });
+    }
+
+    let corpus = Corpus::load(&dir.join("corpus_test.txt"))?;
+    let ws = windows(&corpus.tokens, seq, 48);
+    println!("submitting {} requests per variant...\n", ws.len());
+
+    let mut table = Table::new(&[
+        "variant", "ppl", "req/s", "p50 ms", "p95 ms", "mean batch",
+    ]);
+    for variant in [Variant::Dense, Variant::Hss] {
+        let t0 = Instant::now();
+        let resps = coord.submit_all(variant, &ws)?;
+        let wall = t0.elapsed().as_secs_f64();
+        if let Some(e) = resps.iter().find_map(|r| r.error.clone()) {
+            anyhow::bail!("variant {}: {e}", variant.name());
+        }
+        let nll: f64 = resps.iter().map(|r| r.nll).sum();
+        let toks: usize = resps.iter().map(|r| r.tokens).sum();
+        let mut lat: Vec<u64> = resps.iter().map(|r| r.latency_us).collect();
+        lat.sort_unstable();
+        let mean_batch =
+            resps.iter().map(|r| r.batch_size).sum::<usize>() as f64 / resps.len() as f64;
+        table.row(&[
+            variant.name().to_string(),
+            format!("{:.4}", (nll / toks as f64).exp()),
+            format!("{:.1}", resps.len() as f64 / wall),
+            format!("{:.1}", lat[lat.len() / 2] as f64 / 1e3),
+            format!("{:.1}", lat[lat.len() * 95 / 100] as f64 / 1e3),
+            format!("{mean_batch:.2}"),
+        ]);
+    }
+    table.print();
+    println!("\ncoordinator metrics: {}", coord.metrics.summary());
+    coord.shutdown();
+    Ok(())
+}

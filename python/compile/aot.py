@@ -1,0 +1,186 @@
+"""AOT lowering: JAX graphs -> HLO text artifacts for the Rust runtime.
+
+Emits, under artifacts/:
+    model_dense_b{1,8}.hlo.txt  dense forward      (tokens + params -> logits)
+    model_hss_b{1,8}.hlo.txt    compressed forward (tokens + params + hss ops)
+    model.hwt                   trained weights (from compile.train)
+    hss_operands.hwt            flattened sHSS-RCM operands, canonical order
+    manifest.json               operand order/shapes per executable
+
+HLO **text** is the interchange format, not `.serialize()`: jax >= 0.5 emits
+protos with 64-bit instruction ids that xla_extension 0.5.1 (the version the
+`xla` crate binds) rejects; the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Usage: python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import hss_np, hwt, model, train
+
+QKV = ("wq", "wk", "wv")
+SERVE_BATCHES = (1, 8)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_name(a: np.ndarray) -> str:
+    return {np.dtype(np.float32): "f32", np.dtype(np.int32): "i32",
+            np.dtype(np.float16): "f16"}[a.dtype]
+
+
+def _input_list(named: List[Tuple[str, np.ndarray]]) -> List[Dict]:
+    return [{"name": n, "dtype": _dtype_name(a), "shape": list(a.shape)}
+            for n, a in named]
+
+
+def build_hss(params: Dict[str, np.ndarray], cfg: hss_np.HssConfig):
+    """Compress every q/k/v projection (as W^T — see model.hss_project)."""
+    specs: Dict[str, Dict] = {}
+    ops: List[Tuple[str, np.ndarray]] = []
+    for i in range(model.CONFIG["n_layers"]):
+        for p in QKV:
+            name = f"layer{i}.{p}"
+            tree = hss_np.build(params[name].T.astype(np.float64), cfg)
+            specs[name] = hss_np.spec(tree)
+            ops.extend(hss_np.flatten(tree, name))
+    return specs, ops
+
+
+def lower_dense(params_named: List[Tuple[str, np.ndarray]], batch: int) -> str:
+    seq = model.CONFIG["seq_len"]
+    names = [n for n, _ in params_named]
+
+    def f(tokens, *flat):
+        p = dict(zip(names, flat))
+        return (model.fwd(p, tokens),)
+
+    args = [jax.ShapeDtypeStruct((batch, seq), jnp.int32)]
+    args += [jax.ShapeDtypeStruct(a.shape, a.dtype) for _, a in params_named]
+    return to_hlo_text(jax.jit(f).lower(*args))
+
+
+def non_qkv(params_named: List[Tuple[str, np.ndarray]]) -> List[Tuple[str, np.ndarray]]:
+    """Drop wq/wk/wv — the compressed graph replaces them, and JAX prunes
+    unused arguments at lowering time (so they must not be in the operand
+    list either)."""
+    return [(n, a) for n, a in params_named
+            if not n.endswith((".wq", ".wk", ".wv"))]
+
+
+def lower_hss(params_named: List[Tuple[str, np.ndarray]],
+              specs: Dict[str, Dict], ops_named: List[Tuple[str, np.ndarray]],
+              batch: int) -> str:
+    seq = model.CONFIG["seq_len"]
+    params_named = non_qkv(params_named)
+    pnames = [n for n, _ in params_named]
+    onames = [n for n, _ in ops_named]
+    n_params = len(pnames)
+
+    def f(tokens, *flat):
+        p = dict(zip(pnames, flat[:n_params]))
+        o = dict(zip(onames, flat[n_params:]))
+        return (model.fwd(p, tokens, hss=(specs, o)),)
+
+    args = [jax.ShapeDtypeStruct((batch, seq), jnp.int32)]
+    args += [jax.ShapeDtypeStruct(a.shape, a.dtype) for _, a in params_named]
+    args += [jax.ShapeDtypeStruct(a.shape, a.dtype) for _, a in ops_named]
+    return to_hlo_text(jax.jit(f).lower(*args))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--rank", type=int, default=32)
+    ap.add_argument("--sparsity", type=float, default=0.30)
+    ap.add_argument("--depth", type=int, default=3)
+    ap.add_argument("--no-rcm", action="store_true")
+    ap.add_argument("--train-steps", type=int, default=400)
+    args = ap.parse_args()
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+
+    wpath = os.path.join(out, "model.hwt")
+    if not os.path.exists(wpath):
+        train.train(out, steps=args.train_steps)
+    params_named = hwt.load_ordered(wpath)
+    params = dict(params_named)
+    assert [n for n, _ in params_named] == model.param_names(), "operand order drift"
+
+    cfg = hss_np.HssConfig(rank=args.rank, sparsity=args.sparsity,
+                           depth=args.depth, use_rcm=not args.no_rcm)
+    print(f"aot: building sHSS{'-RCM' if cfg.use_rcm else ''} operands "
+          f"(rank={cfg.rank} sp={cfg.sparsity} depth={cfg.depth})", flush=True)
+    specs, ops_named = build_hss(params, cfg)
+    hwt.save(os.path.join(out, "hss_operands.hwt"), ops_named)
+
+    # Dense params the compressed graph still consumes (wq/wk/wv are unused
+    # inside the traced fn but kept in the operand list so both executables
+    # share one feeding order — rust passes the same weight file to both).
+    manifest = {
+        "model_config": model.CONFIG,
+        "hss_config": {"rank": cfg.rank, "sparsity": cfg.sparsity,
+                       "depth": cfg.depth, "use_rcm": cfg.use_rcm,
+                       "tol": cfg.tol},
+        "executables": {},
+    }
+
+    for b in SERVE_BATCHES:
+        name = f"model_dense_b{b}"
+        path = os.path.join(out, f"{name}.hlo.txt")
+        print(f"aot: lowering {name}", flush=True)
+        with open(path, "w") as f:
+            f.write(lower_dense(params_named, b))
+        manifest["executables"][name] = {
+            "file": f"{name}.hlo.txt",
+            "batch": b,
+            "inputs": ([{"name": "tokens", "dtype": "i32",
+                         "shape": [b, model.CONFIG["seq_len"]]}]
+                       + _input_list(params_named)),
+            "output": {"dtype": "f32",
+                       "shape": [b, model.CONFIG["seq_len"],
+                                 model.CONFIG["vocab"]]},
+        }
+
+    for b in SERVE_BATCHES:
+        name = f"model_hss_b{b}"
+        path = os.path.join(out, f"{name}.hlo.txt")
+        print(f"aot: lowering {name}", flush=True)
+        with open(path, "w") as f:
+            f.write(lower_hss(params_named, specs, ops_named, b))
+        manifest["executables"][name] = {
+            "file": f"{name}.hlo.txt",
+            "batch": b,
+            "inputs": ([{"name": "tokens", "dtype": "i32",
+                         "shape": [b, model.CONFIG["seq_len"]]}]
+                       + _input_list(non_qkv(params_named))
+                       + _input_list(ops_named)),
+            "output": {"dtype": "f32",
+                       "shape": [b, model.CONFIG["seq_len"],
+                                 model.CONFIG["vocab"]]},
+        }
+
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print("aot: wrote manifest.json")
+
+
+if __name__ == "__main__":
+    main()

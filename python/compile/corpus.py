@@ -1,0 +1,140 @@
+"""Deterministic synthetic corpus generator (build path).
+
+The paper evaluates perplexity on WikiText-103; offline we substitute a
+synthetic English-like corpus with learnable structure: a small probabilistic
+grammar over templated sentences (subject/verb/object agreement, numbers,
+punctuation, topic persistence within paragraphs). A byte-level LM trained on
+it reaches a clearly sub-uniform perplexity, giving the compression methods a
+non-trivial signal to preserve — which is what the storage-vs-PPL comparison
+needs (method *ordering*, not absolute WikiText PPL, is the reproduced claim).
+
+Usage: python -m compile.corpus --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+# Deterministic PRNG (splitmix64) so the corpus is reproducible and the Rust
+# side can regenerate identical benchmark workloads if needed.
+MASK = (1 << 64) - 1
+
+
+class SplitMix64:
+    def __init__(self, seed: int):
+        self.state = seed & MASK
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+        return z ^ (z >> 31)
+
+    def below(self, n: int) -> int:
+        return self.next_u64() % n
+
+    def choice(self, seq):
+        return seq[self.below(len(seq))]
+
+    def uniform(self) -> float:
+        return self.next_u64() / float(1 << 64)
+
+
+SUBJECTS = [
+    "the model", "a transformer", "the matrix", "the encoder", "a researcher",
+    "the gradient", "the network", "an attention head", "the optimizer",
+    "the dataset", "a sparse block", "the low rank factor", "the scheduler",
+    "the compiler", "a permutation", "the residual", "the kernel",
+]
+VERBS = [
+    "compresses", "approximates", "projects", "factorizes", "reorders",
+    "multiplies", "reduces", "preserves", "updates", "evaluates", "encodes",
+    "partitions", "truncates", "scales", "permutes", "accumulates",
+]
+OBJECTS = [
+    "the weight matrix", "the hidden state", "the attention scores",
+    "the singular values", "the diagonal block", "the sparse residual",
+    "the token embedding", "the key projection", "the value projection",
+    "the off diagonal block", "the query projection", "the loss surface",
+    "the perplexity score", "the memory footprint", "the storage budget",
+]
+ADVERBS = [
+    "quickly", "hierarchically", "recursively", "sparsely", "efficiently",
+    "accurately", "approximately", "iteratively", "globally", "locally",
+]
+CONNECTIVES = ["and", "while", "because", "so", "but", "whereas"]
+OPENERS = [
+    "in practice", "at scale", "during training", "after pruning",
+    "under a fixed budget", "at inference time", "in each layer",
+    "for large ranks", "near the diagonal", "at every level",
+]
+
+
+def sentence(rng: SplitMix64) -> str:
+    parts = []
+    if rng.uniform() < 0.3:
+        parts.append(rng.choice(OPENERS) + ",")
+    parts.append(rng.choice(SUBJECTS))
+    parts.append(rng.choice(VERBS))
+    parts.append(rng.choice(OBJECTS))
+    if rng.uniform() < 0.4:
+        parts.append(rng.choice(ADVERBS))
+    if rng.uniform() < 0.35:
+        parts.append(rng.choice(CONNECTIVES))
+        parts.append(rng.choice(SUBJECTS))
+        parts.append(rng.choice(VERBS))
+        parts.append(rng.choice(OBJECTS))
+    if rng.uniform() < 0.15:
+        parts.append("with rank " + str(1 << rng.below(10)))
+    text = " ".join(parts)
+    return text[0].upper() + text[1:] + "."
+
+
+def paragraph(rng: SplitMix64) -> str:
+    n = 2 + rng.below(5)
+    return " ".join(sentence(rng) for _ in range(n))
+
+
+def generate(n_bytes: int, seed: int) -> str:
+    rng = SplitMix64(seed)
+    chunks = []
+    total = 0
+    while total < n_bytes:
+        p = paragraph(rng)
+        chunks.append(p)
+        total += len(p) + 1
+    return "\n".join(chunks)[:n_bytes]
+
+
+SPLITS = {
+    # (bytes, seed): train is enough for a few hundred steps of batch 16x128
+    "train": (2_000_000, 0x5EED_0001),
+    "valid": (100_000, 0x5EED_0002),
+    "test": (200_000, 0x5EED_0003),
+}
+
+
+def write_splits(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    for name, (size, seed) in SPLITS.items():
+        path = os.path.join(out_dir, f"corpus_{name}.txt")
+        if os.path.exists(path) and os.path.getsize(path) == size:
+            print(f"corpus: {path} up to date")
+            continue
+        text = generate(size, seed)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"corpus: wrote {len(text)} bytes to {path}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    write_splits(args.out)
+
+
+if __name__ == "__main__":
+    main()

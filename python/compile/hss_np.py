@@ -1,0 +1,246 @@
+"""Build-time sHSS / sHSS-RCM compression pipeline (numpy).
+
+Mirrors the Rust-native implementation in `rust/src/hss/` (the runtime path);
+this copy exists so `aot.py` can bake a compressed model into an AOT HLO
+graph, and so the two independent implementations cross-validate each other
+in tests.
+
+Algorithm (paper §4.5, Algorithm 1), per node at every recursion level:
+  1. carve the top-p% magnitude entries of the current block into a COO
+     sparse matrix S (fixed capacity => static shapes for XLA),
+  2. optionally RCM-reorder the residual (symmetrized magnitude pattern) so
+     large entries concentrate near the diagonal,
+  3. split 2x2; truncated (randomized) SVD of the off-diagonal blocks at the
+     level's rank; halve the rank and recurse into the diagonal blocks.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+from scipy.sparse import csr_matrix
+from scipy.sparse.csgraph import reverse_cuthill_mckee
+
+
+@dataclass
+class HssConfig:
+    rank: int = 32              # outer rank (halved each level, floor 1)
+    sparsity: float = 0.1       # fraction of entries carved into S
+    # True re-extracts top-p% at every level (§4.5's literal reading —
+    # ablation only, inflates storage); default False = one S at the root,
+    # matching the paper's storage numbers and the Rust default.
+    sparse_per_level: bool = False
+    depth: int = 3              # number of split levels (leaves at n / 2**depth)
+    tol: float = 1e-6           # singular values below tol are dropped
+    use_rcm: bool = True
+    min_leaf: int = 16          # stop splitting below this block size
+    pattern_quantile: float = 0.90  # |R| quantile defining the RCM graph
+    rsvd: bool = True           # randomized SVD for the off-diagonal factors
+    oversample: int = 8
+    power_iters: int = 1
+    seed: int = 0
+
+
+@dataclass
+class HssNode:
+    n: int
+    # fixed-capacity COO of this level's spikes, in this node's coordinates
+    rows: np.ndarray
+    cols: np.ndarray
+    vals: np.ndarray
+    perm: np.ndarray                       # int32 [n]; residual_p = R[perm][:, perm]
+    leaf: Optional[np.ndarray] = None      # dense block if this is a leaf
+    u0: Optional[np.ndarray] = None        # A12 ~ u0 @ r0   (n0 x k)(k x n1)
+    r0: Optional[np.ndarray] = None
+    u1: Optional[np.ndarray] = None        # A21 ~ u1 @ r1   (n1 x k)(k x n0)
+    r1: Optional[np.ndarray] = None
+    child0: Optional["HssNode"] = None
+    child1: Optional["HssNode"] = None
+
+    @property
+    def is_leaf(self) -> bool:
+        return self.leaf is not None
+
+
+def top_p_coo(a: np.ndarray, p: float) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Top-p% magnitude entries as row-sorted COO with exact capacity."""
+    n2 = a.size
+    k = int(np.floor(p * n2))
+    if k == 0:
+        z = np.zeros(0)
+        return z.astype(np.int32), z.astype(np.int32), z.astype(np.float32)
+    flat = np.abs(a).ravel()
+    idx = np.argpartition(flat, n2 - k)[n2 - k:]
+    idx = idx[np.argsort(idx)]           # row-major order == row-sorted
+    rows = (idx // a.shape[1]).astype(np.int32)
+    cols = (idx % a.shape[1]).astype(np.int32)
+    vals = a.ravel()[idx].astype(np.float32)
+    return rows, cols, vals
+
+
+def coo_to_dense(rows, cols, vals, shape) -> np.ndarray:
+    s = np.zeros(shape, dtype=np.float64)
+    np.add.at(s, (rows, cols), vals)
+    return s
+
+
+def rcm_permutation(r: np.ndarray, quantile: float) -> np.ndarray:
+    """RCM ordering of the symmetrized magnitude pattern of the residual."""
+    n = r.shape[0]
+    mag = np.abs(r)
+    thresh = np.quantile(mag, quantile)
+    pattern = mag >= max(thresh, 1e-30)
+    pattern = pattern | pattern.T
+    np.fill_diagonal(pattern, True)
+    graph = csr_matrix(pattern.astype(np.int8))
+    perm = reverse_cuthill_mckee(graph, symmetric_mode=True)
+    return np.asarray(perm, dtype=np.int32)
+
+
+def _truncated_svd(a: np.ndarray, k: int, tol: float) -> Tuple[np.ndarray, np.ndarray]:
+    u, s, vt = np.linalg.svd(a, full_matrices=False)
+    k = min(k, int(np.sum(s > tol)))
+    k = max(k, 1)
+    sq = np.sqrt(s[:k])
+    return (u[:, :k] * sq[None, :]).astype(np.float32), (sq[:, None] * vt[:k]).astype(np.float32)
+
+
+def _randomized_svd(a: np.ndarray, k: int, tol: float, oversample: int,
+                    power_iters: int, rng: np.random.Generator
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    m, n = a.shape
+    l = min(k + oversample, min(m, n))
+    omega = rng.standard_normal((n, l))
+    y = a @ omega
+    for _ in range(power_iters):
+        y, _ = np.linalg.qr(a @ (a.T @ y))
+    q, _ = np.linalg.qr(y)
+    b = q.T @ a
+    ub, s, vt = np.linalg.svd(b, full_matrices=False)
+    kk = max(1, min(k, int(np.sum(s > tol))))
+    sq = np.sqrt(s[:kk])
+    u = q @ ub[:, :kk]
+    return (u * sq[None, :]).astype(np.float32), (sq[:, None] * vt[:kk]).astype(np.float32)
+
+
+def build(a: np.ndarray, cfg: HssConfig, _depth: Optional[int] = None,
+          _rank: Optional[int] = None, _rng: Optional[np.random.Generator] = None
+          ) -> HssNode:
+    """Recursively build the sparse-plus-HSS tree for square matrix `a`."""
+    assert a.shape[0] == a.shape[1], "HSS requires square blocks"
+    n = a.shape[0]
+    depth = cfg.depth if _depth is None else _depth
+    rank = cfg.rank if _rank is None else _rank
+    rng = np.random.default_rng(cfg.seed) if _rng is None else _rng
+
+    if depth == 0 or n // 2 < cfg.min_leaf:
+        e = np.zeros(0)
+        return HssNode(n=n, rows=e.astype(np.int32), cols=e.astype(np.int32),
+                       vals=e.astype(np.float32),
+                       perm=np.arange(n, dtype=np.int32),
+                       leaf=a.astype(np.float32))
+
+    is_root = _depth is None or _depth == cfg.depth
+    p = cfg.sparsity if (is_root or cfg.sparse_per_level) else 0.0
+    rows, cols, vals = top_p_coo(a, p)
+    resid = a - coo_to_dense(rows, cols, vals, a.shape)
+    if cfg.use_rcm:
+        perm = rcm_permutation(resid, cfg.pattern_quantile)
+    else:
+        perm = np.arange(n, dtype=np.int32)
+    rp = resid[np.ix_(perm, perm)]
+
+    n0 = n // 2
+    a11, a12 = rp[:n0, :n0], rp[:n0, n0:]
+    a21, a22 = rp[n0:, :n0], rp[n0:, n0:]
+    k = max(1, rank)
+    if cfg.rsvd:
+        u0, r0 = _randomized_svd(a12, k, cfg.tol, cfg.oversample, cfg.power_iters, rng)
+        u1, r1 = _randomized_svd(a21, k, cfg.tol, cfg.oversample, cfg.power_iters, rng)
+    else:
+        u0, r0 = _truncated_svd(a12, k, cfg.tol)
+        u1, r1 = _truncated_svd(a21, k, cfg.tol)
+
+    child_rank = max(1, rank // 2)
+    return HssNode(
+        n=n, rows=rows, cols=cols, vals=vals, perm=perm,
+        u0=u0, r0=r0, u1=u1, r1=r1,
+        child0=build(a11, cfg, depth - 1, child_rank, rng),
+        child1=build(a22, cfg, depth - 1, child_rank, rng),
+    )
+
+
+def apply(node: HssNode, x: np.ndarray) -> np.ndarray:
+    """y = A_hss @ x for column-batched x [n, b] (numpy reference)."""
+    if node.is_leaf:
+        return node.leaf.astype(np.float64) @ x
+    ys = np.zeros_like(x, dtype=np.float64)
+    if node.vals.size:
+        np.add.at(ys, node.rows, node.vals[:, None].astype(np.float64) * x[node.cols])
+    xp = x[node.perm]
+    n0 = node.n // 2
+    x0, x1 = xp[:n0], xp[n0:]
+    y0 = apply(node.child0, x0) + node.u0.astype(np.float64) @ (node.r0.astype(np.float64) @ x1)
+    y1 = apply(node.child1, x1) + node.u1.astype(np.float64) @ (node.r1.astype(np.float64) @ x0)
+    yh = np.concatenate([y0, y1], axis=0)
+    y = np.empty_like(yh)
+    y[node.perm] = yh
+    return ys + y
+
+
+def reconstruct(node: HssNode) -> np.ndarray:
+    """Dense matrix represented by the tree (testing/verification only)."""
+    if node.is_leaf:
+        return node.leaf.astype(np.float64)
+    n0 = node.n // 2
+    rp = np.zeros((node.n, node.n))
+    rp[:n0, :n0] = reconstruct(node.child0)
+    rp[n0:, n0:] = reconstruct(node.child1)
+    rp[:n0, n0:] = node.u0 @ node.r0
+    rp[n0:, :n0] = node.u1 @ node.r1
+    resid = np.empty_like(rp)
+    resid[np.ix_(node.perm, node.perm)] = rp
+    return coo_to_dense(node.rows, node.cols, node.vals, (node.n, node.n)) + resid
+
+
+def storage_params(node: HssNode) -> int:
+    """Number of stored parameters (matching the Rust accounting)."""
+    if node.is_leaf:
+        return node.leaf.size
+    own = node.vals.size + node.u0.size + node.r0.size + node.u1.size + node.r1.size
+    return own + storage_params(node.child0) + storage_params(node.child1)
+
+
+def flatten(node: HssNode, prefix: str) -> List[Tuple[str, np.ndarray]]:
+    """Deterministic (name, array) traversal used for AOT operand order."""
+    out: List[Tuple[str, np.ndarray]] = []
+    if node.is_leaf:
+        out.append((f"{prefix}.leaf", node.leaf))
+        return out
+    if node.vals.size:  # empty triples would be pruned by jax at lowering
+        out.append((f"{prefix}.rows", node.rows))
+        out.append((f"{prefix}.cols", node.cols))
+        out.append((f"{prefix}.vals", node.vals))
+    out.append((f"{prefix}.perm", node.perm))
+    for nm in ("u0", "r0", "u1", "r1"):
+        out.append((f"{prefix}.{nm}", getattr(node, nm)))
+    out.extend(flatten(node.child0, prefix + ".c0"))
+    out.extend(flatten(node.child1, prefix + ".c1"))
+    return out
+
+
+def spec(node: HssNode) -> Dict:
+    """Static structure description (shapes only) for rebuilding at trace time."""
+    if node.is_leaf:
+        return {"n": node.n, "leaf": True}
+    return {
+        "n": node.n,
+        "leaf": False,
+        "nnz": int(node.vals.size),
+        "k0": int(node.u0.shape[1]),
+        "k1": int(node.u1.shape[1]),
+        "c0": spec(node.child0),
+        "c1": spec(node.child1),
+    }

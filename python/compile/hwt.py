@@ -1,0 +1,74 @@
+"""HWT — the hisolo weight/tensor interchange format (python side).
+
+A deliberately simple little-endian binary container shared with the Rust
+reader (`rust/src/model/weights.rs`). Layout:
+
+    magic   b"HWT1"
+    u32     n_tensors
+    repeat n_tensors times:
+        u32                 name_len
+        name_len bytes      utf-8 name
+        u8                  dtype (0 = f32, 1 = f16, 2 = i32)
+        u32                 ndim
+        ndim * u32          dims
+        prod(dims) * size   raw data, little endian, C order
+
+Names are ordered; the order in the file defines the operand order for AOT
+executables (mirrored in artifacts/manifest.json).
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+MAGIC = b"HWT1"
+DTYPES = {0: np.float32, 1: np.float16, 2: np.int32}
+DTYPE_CODES = {np.dtype(np.float32): 0, np.dtype(np.float16): 1, np.dtype(np.int32): 2}
+
+
+def save(path: str, tensors: List[Tuple[str, np.ndarray]]) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors:
+            # np.ascontiguousarray would promote 0-d to 1-d; asarray keeps rank
+            arr = np.asarray(arr, order="C")
+            if arr.dtype not in DTYPE_CODES:
+                raise ValueError(f"unsupported dtype {arr.dtype} for {name}")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<B", DTYPE_CODES[arr.dtype]))
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def load(path: str) -> Dict[str, np.ndarray]:
+    out: Dict[str, np.ndarray] = {}
+    for name, arr in load_ordered(path):
+        out[name] = arr
+    return out
+
+
+def load_ordered(path: str) -> List[Tuple[str, np.ndarray]]:
+    out: List[Tuple[str, np.ndarray]] = []
+    with open(path, "rb") as f:
+        if f.read(4) != MAGIC:
+            raise ValueError(f"{path}: bad magic")
+        (n,) = struct.unpack("<I", f.read(4))
+        for _ in range(n):
+            (nl,) = struct.unpack("<I", f.read(4))
+            name = f.read(nl).decode("utf-8")
+            (code,) = struct.unpack("<B", f.read(1))
+            (ndim,) = struct.unpack("<I", f.read(4))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            dt = np.dtype(DTYPES[code])
+            count = int(np.prod(dims)) if ndim else 1
+            data = np.frombuffer(f.read(count * dt.itemsize), dtype=dt)
+            out.append((name, data.reshape(dims)))
+    return out

@@ -1,0 +1,54 @@
+"""Pallas kernel: causal multi-head attention for the L2 transformer.
+
+One grid step per (batch*head); each step keeps the full [t, hd] q/k/v
+panels in VMEM (t=128, hd=32 at our scale: 3 * 128*32*2B = 24 KiB, far under
+budget) and runs the two MXU matmuls plus a fused masked softmax. At larger t
+this would tile over key blocks flash-style; for the reproduction scale a
+single-panel kernel is the right structure and keeps interpret-mode runtime
+reasonable.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref):
+    # q,k,v: [1, t, hd] -> o: [1, t, hd]
+    q = q_ref[0]
+    k = k_ref[0]
+    v = v_ref[0]
+    t = q.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    scores = jnp.dot(q, k.T, preferred_element_type=q.dtype) * scale
+    ri = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
+    ci = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
+    scores = jnp.where(ri >= ci, scores, jnp.finfo(scores.dtype).min)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(p, v, preferred_element_type=q.dtype)
+
+
+@jax.jit
+def attention_apply(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Causal MHA. q,k,v: [bh, t, hd] -> [bh, t, hd]."""
+    bh, t, hd = q.shape
+    spec = pl.BlockSpec((1, t, hd), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        _kernel,
+        grid=(bh,),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((bh, t, hd), q.dtype),
+        interpret=True,
+    )(q, k, v)
+
+
+def vmem_bytes(t: int, hd: int, itemsize: int = 2) -> int:
+    """Per-step VMEM: q, k, v, out panels + scores/probs buffer."""
+    return itemsize * (4 * t * hd + 2 * t * t)

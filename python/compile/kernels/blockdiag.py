@@ -1,0 +1,61 @@
+"""Pallas kernel: block-diagonal matmul over the HSS leaf blocks.
+
+This is the dense hot-spot of the sHSS matvec — at the deepest level the
+residual matrix is a block-diagonal collection of L small dense blocks D_i,
+and Y[l] = D[l] @ X[l] for every leaf simultaneously.
+
+TPU mapping (see DESIGN.md §8): one grid step per (leaf, batch-tile); the
+BlockSpec keeps a full n×n leaf plus an n×bt activation tile resident in
+VMEM and drives the MXU with a single (n,n)x(n,bt) matmul per step. Leaves
+are streamed HBM→VMEM in grid order, which is the TPU analogue of the
+paper's one-threadblock-per-block CUDA schedule.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered to plain HLO (same numerics).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Batch tile: multiples of the 128-lane MXU width. For CPU interpret mode the
+# value only affects structure, not wallclock fidelity.
+DEFAULT_BT = 128
+
+
+def _kernel(d_ref, x_ref, o_ref):
+    # d_ref: [1, n, n], x_ref: [1, n, bt], o_ref: [1, n, bt]
+    o_ref[0] = jnp.dot(d_ref[0], x_ref[0], preferred_element_type=o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bt",))
+def blockdiag_apply(d: jax.Array, x: jax.Array, bt: int = DEFAULT_BT) -> jax.Array:
+    """Y[l] = D[l] @ X[l].  d: [L, n, n], x: [L, n, b] -> [L, n, b]."""
+    l, n, _ = d.shape
+    b = x.shape[2]
+    bt = min(bt, b)
+    pad = (-b) % bt
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, pad)))
+    bp = x.shape[2]
+    out = pl.pallas_call(
+        _kernel,
+        grid=(l, bp // bt),
+        in_specs=[
+            pl.BlockSpec((1, n, n), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, n, bt), lambda i, j: (i, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, n, bt), lambda i, j: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((l, n, bp), x.dtype),
+        interpret=True,
+    )(d, x)
+    return out[:, :, :b] if pad else out
+
+
+def vmem_bytes(n: int, bt: int = DEFAULT_BT, itemsize: int = 2) -> int:
+    """Estimated VMEM residency per grid step (leaf + in tile + out tile)."""
+    return itemsize * (n * n + 2 * n * bt)

@@ -1,0 +1,209 @@
+"""L2: the JAX transformer LM — dense and sHSS-compressed forward graphs.
+
+The dense forward is the training/eval graph for the substitute model
+(byte-level LM standing in for LLaMA-7B, see DESIGN.md §2). The compressed
+forward swaps each q/k/v projection for the paper's sparse-plus-HSS apply,
+whose hot spots run as Pallas kernels (L1):
+
+    leaf dense blocks  -> kernels.blockdiag
+    off-diag couplings -> kernels.lowrank
+    COO spike matrix   -> kernels.sparse_coo
+    attention          -> kernels.attention
+
+Both graphs are lowered once by aot.py to HLO text and executed from Rust;
+python never runs at serving time.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.attention import attention_apply
+from .kernels.blockdiag import blockdiag_apply
+from .kernels.lowrank import lowrank_apply
+from .kernels.sparse_coo import sparse_coo_apply
+
+# ---------------------------------------------------------------------------
+# Configuration — scaled-down stand-in for LLaMA-7B (see DESIGN.md §2).
+# ---------------------------------------------------------------------------
+
+CONFIG = {
+    "vocab": 256,      # byte-level
+    "d_model": 256,
+    "n_heads": 8,
+    "n_layers": 4,
+    "d_ff": 1024,
+    "seq_len": 128,
+}
+
+
+def param_names(cfg: Dict = CONFIG) -> List[str]:
+    """Deterministic parameter order — the AOT operand order and the .hwt order."""
+    names = ["tok_emb", "pos_emb"]
+    for i in range(cfg["n_layers"]):
+        for p in ("ln1_g", "ln1_b", "wq", "wk", "wv", "wo",
+                  "ln2_g", "ln2_b", "w1", "b1", "w2", "b2"):
+            names.append(f"layer{i}.{p}")
+    names += ["lnf_g", "lnf_b"]
+    return names
+
+
+def param_shapes(cfg: Dict = CONFIG) -> Dict[str, Tuple[int, ...]]:
+    v, d, f, t = cfg["vocab"], cfg["d_model"], cfg["d_ff"], cfg["seq_len"]
+    shapes: Dict[str, Tuple[int, ...]] = {"tok_emb": (v, d), "pos_emb": (t, d)}
+    for i in range(cfg["n_layers"]):
+        pre = f"layer{i}."
+        shapes.update({
+            pre + "ln1_g": (d,), pre + "ln1_b": (d,),
+            pre + "wq": (d, d), pre + "wk": (d, d),
+            pre + "wv": (d, d), pre + "wo": (d, d),
+            pre + "ln2_g": (d,), pre + "ln2_b": (d,),
+            pre + "w1": (d, f), pre + "b1": (f,),
+            pre + "w2": (f, d), pre + "b2": (d,),
+        })
+    shapes.update({"lnf_g": (d,), "lnf_b": (d,)})
+    return shapes
+
+
+def init_params(seed: int = 0, cfg: Dict = CONFIG) -> Dict[str, jax.Array]:
+    rng = np.random.default_rng(seed)
+    params: Dict[str, jax.Array] = {}
+    for name, shape in param_shapes(cfg).items():
+        base = name.split(".")[-1]
+        if base.endswith("_g"):
+            arr = np.ones(shape, np.float32)
+        elif base.endswith("_b") or base in ("b1", "b2"):
+            arr = np.zeros(shape, np.float32)
+        else:
+            arr = rng.standard_normal(shape).astype(np.float32) / math.sqrt(shape[0])
+        params[name] = jnp.asarray(arr)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+def layernorm(x: jax.Array, g: jax.Array, b: jax.Array) -> jax.Array:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * g + b
+
+
+def gelu(x: jax.Array) -> jax.Array:
+    # tanh approximation — mirrored exactly by the Rust forward pass
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x * x * x)))
+
+
+def _mha(q: jax.Array, k: jax.Array, v: jax.Array, n_heads: int,
+         use_pallas: bool = True) -> jax.Array:
+    """q,k,v: [B,T,D] -> causal attention output [B,T,D].
+
+    use_pallas=False switches to the jnp oracle — needed on the training path
+    because pallas_call has no autodiff rule; inference/AOT graphs keep the
+    kernel.
+    """
+    bsz, t, d = q.shape
+    hd = d // n_heads
+
+    def split(x):
+        return (x.reshape(bsz, t, n_heads, hd)
+                 .transpose(0, 2, 1, 3)
+                 .reshape(bsz * n_heads, t, hd))
+
+    if use_pallas:
+        o = attention_apply(split(q), split(k), split(v))
+    else:
+        from .kernels.ref import attention_ref
+        o = jax.vmap(attention_ref)(split(q), split(k), split(v))
+    return (o.reshape(bsz, n_heads, t, hd)
+             .transpose(0, 2, 1, 3)
+             .reshape(bsz, t, d))
+
+
+# --- sHSS apply at trace time ---------------------------------------------
+#
+# The tree arrives as (static spec, flat operand dict); see hss_np.flatten.
+# Operands represent A = W^T so that rows(X) @ W == (A @ X^T)^T; hss_apply
+# works on column-major batches [n, B].
+
+def hss_apply(spec: Dict, ops: Dict[str, jax.Array], prefix: str,
+              x: jax.Array) -> jax.Array:
+    if spec["leaf"]:
+        d = ops[prefix + ".leaf"]
+        return blockdiag_apply(d[None], x[None])[0]
+    n = spec["n"]
+    n0 = n // 2
+    if spec.get("nnz", 0) > 0:
+        ys = sparse_coo_apply(ops[prefix + ".rows"], ops[prefix + ".cols"],
+                              ops[prefix + ".vals"], x, n)
+    else:
+        ys = jnp.zeros_like(x)
+    perm = ops[prefix + ".perm"]
+    xp = x[perm, :]
+    x0, x1 = xp[:n0], xp[n0:]
+    y0 = hss_apply(spec["c0"], ops, prefix + ".c0", x0) + lowrank_apply(
+        ops[prefix + ".u0"], ops[prefix + ".r0"], x1)
+    y1 = hss_apply(spec["c1"], ops, prefix + ".c1", x1) + lowrank_apply(
+        ops[prefix + ".u1"], ops[prefix + ".r1"], x0)
+    yh = jnp.concatenate([y0, y1], axis=0)
+    y = jnp.zeros_like(yh).at[perm, :].set(yh)
+    return ys + y
+
+
+def hss_project(spec: Dict, ops: Dict[str, jax.Array], prefix: str,
+                a: jax.Array) -> jax.Array:
+    """rows(a) @ W for a: [B,T,D], where ops encode A = W^T."""
+    bsz, t, d = a.shape
+    x = a.reshape(bsz * t, d).T          # [D, B*T] column batch
+    y = hss_apply(spec, ops, prefix, x)  # [D, B*T]
+    return y.T.reshape(bsz, t, d)
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def fwd(params: Dict[str, jax.Array], tokens: jax.Array,
+        cfg: Dict = CONFIG, hss=None, use_pallas: bool = True) -> jax.Array:
+    """Logits [B,T,V]. If `hss=(specs, ops)` is given, q/k/v run compressed.
+
+    specs[f"layer{i}.w{q,k,v}"] is the static tree spec from hss_np.spec and
+    ops holds all flat operand arrays (names prefixed the same way).
+    """
+    bsz, t = tokens.shape
+    h = params["tok_emb"][tokens] + params["pos_emb"][None, :t, :]
+    for i in range(cfg["n_layers"]):
+        pre = f"layer{i}."
+        a = layernorm(h, params[pre + "ln1_g"], params[pre + "ln1_b"])
+        if hss is None:
+            q = a @ params[pre + "wq"]
+            k = a @ params[pre + "wk"]
+            v = a @ params[pre + "wv"]
+        else:
+            specs, ops = hss
+            q = hss_project(specs[pre + "wq"], ops, pre + "wq", a)
+            k = hss_project(specs[pre + "wk"], ops, pre + "wk", a)
+            v = hss_project(specs[pre + "wv"], ops, pre + "wv", a)
+        o = _mha(q, k, v, cfg["n_heads"], use_pallas=use_pallas)
+        h = h + o @ params[pre + "wo"]
+        m = layernorm(h, params[pre + "ln2_g"], params[pre + "ln2_b"])
+        h = h + gelu(m @ params[pre + "w1"] + params[pre + "b1"]) @ params[pre + "w2"] \
+            + params[pre + "b2"]
+    hf = layernorm(h, params["lnf_g"], params["lnf_b"])
+    return hf @ params["tok_emb"].T
+
+
+def loss_fn(params: Dict[str, jax.Array], tokens: jax.Array,
+            cfg: Dict = CONFIG) -> jax.Array:
+    """Next-token cross-entropy (mean nats/token) over tokens [B, T+1]."""
+    logits = fwd(params, tokens[:, :-1], cfg, use_pallas=False)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)

@@ -1,0 +1,129 @@
+"""Train the substitute byte-level LM (build path only).
+
+Adam from scratch (no optax offline), a few hundred steps on the synthetic
+corpus — enough for the q/k/v projections to acquire the trained structure
+(magnitude spikes + off-diagonal low-rankness) the compression methods
+exploit. Weights land in artifacts/model.hwt in the canonical operand order.
+
+Usage: python -m compile.train --out ../artifacts [--steps 400]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus, hwt, model
+
+
+def load_tokens(path: str) -> np.ndarray:
+    with open(path, "rb") as f:
+        return np.frombuffer(f.read(), dtype=np.uint8).astype(np.int32)
+
+
+def batches(tokens: np.ndarray, batch: int, seq: int, seed: int):
+    rng = np.random.default_rng(seed)
+    n = len(tokens) - seq - 1
+    while True:
+        idx = rng.integers(0, n, batch)
+        yield np.stack([tokens[i:i + seq + 1] for i in idx])
+
+
+def adam_init(params: Dict[str, jax.Array]):
+    zeros = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": zeros, "v": {k: jnp.zeros_like(v) for k, v in params.items()},
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def make_step(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.99,
+              eps: float = 1e-8, clip: float = 1.0, cfg=None,
+              weight_decay: float = 0.05):
+    """AdamW. The decoupled weight decay matters for the reproduction: it
+    induces the low-rank structure in trained projections that the paper's
+    LLaMA-7B weights exhibit (and that sHSS exploits)."""
+    cfg = model.CONFIG if cfg is None else cfg
+
+    @jax.jit
+    def step(params, opt, tokens):
+        loss, grads = jax.value_and_grad(model.loss_fn)(params, tokens, cfg)
+        gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads.values()))
+        scale = jnp.minimum(1.0, clip / (gnorm + 1e-12))
+        t = opt["t"] + 1
+        tf = t.astype(jnp.float32)
+        new_m, new_v, new_p = {}, {}, {}
+        for k, g in grads.items():
+            g = g * scale
+            m = b1 * opt["m"][k] + (1 - b1) * g
+            v = b2 * opt["v"][k] + (1 - b2) * g * g
+            mhat = m / (1 - b1 ** tf)
+            vhat = v / (1 - b2 ** tf)
+            # decay only matrix weights (not gains/biases/embeddings)
+            wd = weight_decay if (k.split(".")[-1].startswith("w")) else 0.0
+            new_p[k] = params[k] - lr * (mhat / (jnp.sqrt(vhat) + eps)
+                                         + wd * params[k])
+            new_m[k], new_v[k] = m, v
+        return new_p, {"m": new_m, "v": new_v, "t": t}, loss
+
+    return step
+
+
+def eval_ppl(params, tokens: np.ndarray, batch: int, seq: int,
+             n_batches: int = 8, seed: int = 7) -> float:
+    it = batches(tokens, batch, seq, seed)
+    losses = []
+    lf = jax.jit(model.loss_fn)
+    for _ in range(n_batches):
+        losses.append(float(lf(params, jnp.asarray(next(it)))))
+    return float(np.exp(np.mean(losses)))
+
+
+def train(out_dir: str, steps: int = 400, batch: int = 16, seed: int = 0,
+          log_every: int = 50) -> Dict[str, np.ndarray]:
+    corpus.write_splits(out_dir)
+    seq = model.CONFIG["seq_len"]
+    train_toks = load_tokens(os.path.join(out_dir, "corpus_train.txt"))
+    valid_toks = load_tokens(os.path.join(out_dir, "corpus_valid.txt"))
+
+    params = model.init_params(seed)
+    opt = adam_init(params)
+    step = make_step()
+    it = batches(train_toks, batch, seq, seed + 1)
+
+    t0 = time.time()
+    for s in range(1, steps + 1):
+        params, opt, loss = step(params, opt, jnp.asarray(next(it)))
+        if s % log_every == 0 or s == 1:
+            print(f"step {s:4d}  loss {float(loss):.4f}  "
+                  f"({time.time() - t0:.1f}s)", flush=True)
+    vppl = eval_ppl(params, valid_toks, batch, seq)
+    print(f"train done: valid ppl (byte-level) = {vppl:.4f}")
+
+    np_params = {k: np.asarray(v) for k, v in params.items()}
+    path = os.path.join(out_dir, "model.hwt")
+    hwt.save(path, [(n, np_params[n]) for n in model.param_names()])
+    print(f"saved weights to {path}")
+    return np_params
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    path = os.path.join(args.out, "model.hwt")
+    if os.path.exists(path) and not args.force:
+        print(f"train: {path} exists, skipping (use --force to retrain)")
+        return
+    train(args.out, steps=args.steps, batch=args.batch)
+
+
+if __name__ == "__main__":
+    main()

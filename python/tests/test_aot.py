@@ -1,0 +1,81 @@
+"""AOT lowering path: HLO text generation, operand lists, corpus determinism."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, corpus, hss_np, model
+
+
+class TestHloText:
+    def test_small_fn_lowered_to_hlo_text(self):
+        def f(x, y):
+            return (jnp.matmul(x, y) + 1.0,)
+
+        spec = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+        text = aot.to_hlo_text(jax.jit(f).lower(spec, spec))
+        assert "HloModule" in text
+        assert "f32[4,4]" in text
+
+    def test_pallas_kernel_lowered_to_plain_hlo(self):
+        # interpret=True pallas must produce executable-anywhere HLO
+        from compile.kernels.lowrank import lowrank_apply
+
+        def f(u, r, x):
+            return (lowrank_apply(u, r, x),)
+
+        u = jax.ShapeDtypeStruct((16, 4), jnp.float32)
+        r = jax.ShapeDtypeStruct((4, 16), jnp.float32)
+        x = jax.ShapeDtypeStruct((16, 8), jnp.float32)
+        text = aot.to_hlo_text(jax.jit(f).lower(u, r, x))
+        assert "HloModule" in text
+        assert "custom-call" not in text.lower()  # no Mosaic — CPU-runnable
+
+
+class TestOperandLists:
+    def test_non_qkv_drops_projections(self):
+        params = [(n, np.zeros((2, 2), np.float32))
+                  for n in model.param_names()]
+        kept = aot.non_qkv(params)
+        names = [n for n, _ in kept]
+        assert not any(n.endswith((".wq", ".wk", ".wv")) for n in names)
+        # 12 projections dropped from the default 4-layer model
+        assert len(params) - len(kept) == 12
+
+    def test_flatten_skips_empty_sparse(self):
+        rng = np.random.default_rng(0)
+        a = rng.standard_normal((64, 64))
+        cfg = hss_np.HssConfig(rank=8, sparsity=0.1, depth=2, min_leaf=4)
+        tree = hss_np.build(a, cfg)
+        names = [n for n, arr in hss_np.flatten(tree, "w")]
+        # root sparse present, child sparse absent (root-only default)
+        assert "w.rows" in names
+        assert "w.c0.rows" not in names
+
+    def test_spec_nnz_matches_flatten(self):
+        rng = np.random.default_rng(1)
+        a = rng.standard_normal((64, 64))
+        cfg = hss_np.HssConfig(rank=8, sparsity=0.2, depth=2, min_leaf=4)
+        tree = hss_np.build(a, cfg)
+        sp = hss_np.spec(tree)
+        assert sp["nnz"] == int(0.2 * 64 * 64)
+        assert sp["c0"]["nnz"] == 0
+
+
+class TestCorpus:
+    def test_deterministic(self):
+        a = corpus.generate(5000, 123)
+        b = corpus.generate(5000, 123)
+        assert a == b
+
+    def test_different_seeds_differ(self):
+        assert corpus.generate(2000, 1) != corpus.generate(2000, 2)
+
+    def test_ascii_only(self):
+        text = corpus.generate(10_000, 7)
+        assert all(ord(c) < 128 for c in text)
+
+    def test_has_sentence_structure(self):
+        text = corpus.generate(20_000, 9)
+        assert text.count(".") > 50
+        assert "the" in text.lower()

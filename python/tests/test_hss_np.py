@@ -1,0 +1,152 @@
+"""Build-time compression pipeline invariants (hss_np)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import hss_np
+
+
+def trained_like(n, seed=0, spikes=None):
+    """Matrix with the structure the method exploits: smooth low-rank-ish
+    bulk + a few large-magnitude spikes."""
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((n, n)) * 0.02
+    a += (rng.standard_normal((n, 8)) @ rng.standard_normal((8, n))) * 0.1
+    ns = spikes if spikes is not None else 3 * n
+    idx = rng.integers(0, n, (ns, 2))
+    a[idx[:, 0], idx[:, 1]] += rng.standard_normal(ns) * 2
+    return a
+
+
+class TestTopP:
+    def test_capacity_exact(self):
+        a = trained_like(32)
+        rows, cols, vals = hss_np.top_p_coo(a, 0.1)
+        assert len(vals) == int(0.1 * 32 * 32)
+
+    def test_picks_largest(self):
+        a = np.zeros((8, 8))
+        a[3, 5] = 10.0
+        a[1, 2] = -20.0
+        rows, cols, vals = hss_np.top_p_coo(a, 2 / 64)
+        got = set(zip(rows.tolist(), cols.tolist()))
+        assert got == {(3, 5), (1, 2)}
+
+    def test_rows_sorted(self):
+        a = trained_like(64, seed=3)
+        rows, _, _ = hss_np.top_p_coo(a, 0.2)
+        assert np.all(np.diff(rows) >= 0)
+
+    def test_zero_budget(self):
+        rows, cols, vals = hss_np.top_p_coo(trained_like(16), 0.0)
+        assert len(vals) == 0
+
+    def test_residual_plus_sparse_is_exact(self):
+        a = trained_like(32, seed=5)
+        rows, cols, vals = hss_np.top_p_coo(a, 0.15)
+        s = hss_np.coo_to_dense(rows, cols, vals, a.shape)
+        resid = a - s
+        np.testing.assert_allclose(s + resid, a, rtol=1e-6, atol=1e-7)
+
+
+class TestRcm:
+    def test_is_permutation(self):
+        a = trained_like(64, seed=1)
+        p = hss_np.rcm_permutation(a, 0.9)
+        assert sorted(p.tolist()) == list(range(64))
+
+    def test_reduces_bandwidth_on_banded_shuffled(self):
+        n = 64
+        rng = np.random.default_rng(2)
+        band = np.zeros((n, n))
+        for i in range(n):
+            for j in range(max(0, i - 3), min(n, i + 4)):
+                band[i, j] = rng.standard_normal() + 1.0
+        perm = rng.permutation(n)
+        shuffled = band[np.ix_(perm, perm)]
+
+        def bandwidth(m):
+            r, c = np.nonzero(np.abs(m) > 1e-12)
+            return int(np.max(np.abs(r - c))) if len(r) else 0
+
+        p = hss_np.rcm_permutation(shuffled, 0.0)
+        reordered = shuffled[np.ix_(p, p)]
+        assert bandwidth(reordered) < bandwidth(shuffled)
+
+
+class TestBuild:
+    @pytest.mark.parametrize("use_rcm", [False, True])
+    @pytest.mark.parametrize("depth", [1, 2, 3])
+    def test_matvec_equals_reconstruct(self, use_rcm, depth):
+        a = trained_like(64, seed=depth)
+        cfg = hss_np.HssConfig(rank=8, sparsity=0.1, depth=depth,
+                               use_rcm=use_rcm, min_leaf=4)
+        node = hss_np.build(a, cfg)
+        rec = hss_np.reconstruct(node)
+        x = np.random.default_rng(0).standard_normal((64, 5))
+        np.testing.assert_allclose(hss_np.apply(node, x), rec @ x,
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_full_rank_depth1_exact(self):
+        a = trained_like(32, seed=9)
+        cfg = hss_np.HssConfig(rank=16, sparsity=0.2, depth=1, rsvd=False)
+        node = hss_np.build(a, cfg)
+        err = np.linalg.norm(hss_np.reconstruct(node) - a) / np.linalg.norm(a)
+        assert err < 1e-6
+
+    def test_error_decreases_with_rank(self):
+        a = trained_like(64, seed=4)
+        errs = []
+        for rank in (2, 8, 32):
+            cfg = hss_np.HssConfig(rank=rank, sparsity=0.1, depth=2, rsvd=False)
+            rec = hss_np.reconstruct(hss_np.build(a, cfg))
+            errs.append(np.linalg.norm(rec - a) / np.linalg.norm(a))
+        assert errs[0] > errs[1] > errs[2]
+
+    def test_error_decreases_with_sparsity(self):
+        a = trained_like(64, seed=6)
+        errs = []
+        for sp in (0.0, 0.1, 0.3):
+            cfg = hss_np.HssConfig(rank=4, sparsity=sp, depth=2, rsvd=False)
+            rec = hss_np.reconstruct(hss_np.build(a, cfg))
+            errs.append(np.linalg.norm(rec - a) / np.linalg.norm(a))
+        assert errs[0] > errs[1] > errs[2]
+
+    def test_rank_halves_per_level(self):
+        a = trained_like(128, seed=7)
+        cfg = hss_np.HssConfig(rank=16, sparsity=0.05, depth=3, min_leaf=4,
+                               tol=0.0)
+        node = hss_np.build(a, cfg)
+        assert node.u0.shape[1] == 16
+        assert node.child0.u0.shape[1] == 8
+        assert node.child0.child0.u0.shape[1] == 4
+
+    def test_storage_less_than_dense(self):
+        a = trained_like(128, seed=8)
+        cfg = hss_np.HssConfig(rank=8, sparsity=0.1, depth=3)
+        node = hss_np.build(a, cfg)
+        assert hss_np.storage_params(node) < a.size
+
+    def test_flatten_spec_roundtrip_consistency(self):
+        a = trained_like(64, seed=10)
+        cfg = hss_np.HssConfig(rank=8, sparsity=0.1, depth=2)
+        node = hss_np.build(a, cfg)
+        names = [n for n, _ in hss_np.flatten(node, "w")]
+        assert len(names) == len(set(names))
+        sp = hss_np.spec(node)
+        assert sp["n"] == 64 and not sp["leaf"]
+        assert sp["c0"]["n"] == 32
+
+    @settings(max_examples=8, deadline=None)
+    @given(n=st.sampled_from([32, 64]), rank=st.integers(2, 12),
+           sp=st.floats(0.0, 0.3), rcm=st.booleans())
+    def test_matvec_reconstruct_sweep(self, n, rank, sp, rcm):
+        a = trained_like(n, seed=rank)
+        cfg = hss_np.HssConfig(rank=rank, sparsity=sp, depth=2,
+                               use_rcm=rcm, min_leaf=4)
+        node = hss_np.build(a, cfg)
+        rec = hss_np.reconstruct(node)
+        x = np.random.default_rng(1).standard_normal((n, 3))
+        np.testing.assert_allclose(hss_np.apply(node, x), rec @ x,
+                                   rtol=1e-5, atol=1e-6)

@@ -1,0 +1,61 @@
+"""HWT container format round-trip (the python half of the cross-language
+contract; rust/src/model/weights.rs has the mirror tests + a shared golden
+fixture under tests/fixtures)."""
+
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from compile import hwt
+
+
+def roundtrip(tensors):
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "t.hwt")
+        hwt.save(path, tensors)
+        return hwt.load_ordered(path)
+
+
+class TestHwt:
+    def test_f32_roundtrip(self):
+        a = np.arange(12, dtype=np.float32).reshape(3, 4)
+        out = roundtrip([("a", a)])
+        assert out[0][0] == "a"
+        np.testing.assert_array_equal(out[0][1], a)
+
+    def test_f16_and_i32(self):
+        h = np.asarray([1.5, -2.25], np.float16)
+        i = np.asarray([[1, 2], [3, 4]], np.int32)
+        out = dict(roundtrip([("h", h), ("i", i)]))
+        np.testing.assert_array_equal(out["h"], h)
+        np.testing.assert_array_equal(out["i"], i)
+        assert out["h"].dtype == np.float16
+        assert out["i"].dtype == np.int32
+
+    def test_order_preserved(self):
+        tensors = [(f"t{k}", np.full((2,), k, np.float32)) for k in range(20)]
+        out = roundtrip(tensors)
+        assert [n for n, _ in out] == [f"t{k}" for k in range(20)]
+
+    def test_scalar_and_empty(self):
+        out = dict(roundtrip([("s", np.float32(3.5).reshape(())),
+                              ("e", np.zeros((0,), np.float32))]))
+        assert out["s"].shape == ()
+        assert float(out["s"]) == 3.5
+        assert out["e"].size == 0
+
+    def test_bad_magic_raises(self):
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "bad.hwt")
+            with open(path, "wb") as f:
+                f.write(b"NOPE" + b"\x00" * 16)
+            with pytest.raises(ValueError):
+                hwt.load(path)
+
+    def test_unsupported_dtype_raises(self):
+        with tempfile.TemporaryDirectory() as d:
+            with pytest.raises(ValueError):
+                hwt.save(os.path.join(d, "x.hwt"),
+                         [("x", np.zeros(3, np.float64))])

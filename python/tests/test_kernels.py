@@ -1,0 +1,180 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes (and the batch-tile padding edge cases); fixed-seed
+numpy provides the data. This is the core correctness signal for the kernels
+that end up inside the AOT HLO graphs.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import attention_apply
+from compile.kernels.blockdiag import blockdiag_apply
+from compile.kernels.lowrank import lowrank_apply
+from compile.kernels.sparse_coo import sparse_coo_apply
+
+RNG = np.random.default_rng(0xC0DE)
+TOL = dict(rtol=2e-4, atol=2e-4)
+
+
+def randf(*shape):
+    return jnp.asarray(RNG.standard_normal(shape), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# blockdiag
+# ---------------------------------------------------------------------------
+
+class TestBlockDiag:
+    def test_basic(self):
+        d, x = randf(4, 32, 32), randf(4, 32, 16)
+        np.testing.assert_allclose(blockdiag_apply(d, x),
+                                   ref.blockdiag_ref(d, x), **TOL)
+
+    def test_single_leaf(self):
+        d, x = randf(1, 64, 64), randf(1, 64, 1)
+        np.testing.assert_allclose(blockdiag_apply(d, x),
+                                   ref.blockdiag_ref(d, x), **TOL)
+
+    def test_batch_not_multiple_of_tile(self):
+        d, x = randf(2, 16, 16), randf(2, 16, 200)  # 200 % 128 != 0
+        np.testing.assert_allclose(blockdiag_apply(d, x, bt=128),
+                                   ref.blockdiag_ref(d, x), **TOL)
+
+    def test_identity_blocks(self):
+        n = 16
+        d = jnp.stack([jnp.eye(n)] * 3)
+        x = randf(3, n, 5)
+        np.testing.assert_allclose(blockdiag_apply(d, x), x, **TOL)
+
+    @settings(max_examples=15, deadline=None)
+    @given(l=st.integers(1, 6), n=st.sampled_from([8, 16, 32, 64]),
+           b=st.integers(1, 40))
+    def test_shapes_sweep(self, l, n, b):
+        d, x = randf(l, n, n), randf(l, n, b)
+        np.testing.assert_allclose(blockdiag_apply(d, x),
+                                   ref.blockdiag_ref(d, x), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# lowrank
+# ---------------------------------------------------------------------------
+
+class TestLowRank:
+    def test_basic(self):
+        u, r, x = randf(64, 8), randf(8, 96), randf(96, 33)
+        np.testing.assert_allclose(lowrank_apply(u, r, x),
+                                   ref.lowrank_ref(u, r, x), **TOL)
+
+    def test_rank_one(self):
+        u, r, x = randf(32, 1), randf(1, 32), randf(32, 7)
+        np.testing.assert_allclose(lowrank_apply(u, r, x),
+                                   ref.lowrank_ref(u, r, x), **TOL)
+
+    def test_rectangular(self):
+        u, r, x = randf(128, 16), randf(16, 64), randf(64, 130)
+        np.testing.assert_allclose(lowrank_apply(u, r, x),
+                                   ref.lowrank_ref(u, r, x), **TOL)
+
+    @settings(max_examples=15, deadline=None)
+    @given(m=st.sampled_from([16, 32, 64]), k=st.integers(1, 16),
+           n=st.sampled_from([16, 32, 64]), b=st.integers(1, 40))
+    def test_shapes_sweep(self, m, k, n, b):
+        u, r, x = randf(m, k), randf(k, n), randf(n, b)
+        np.testing.assert_allclose(lowrank_apply(u, r, x),
+                                   ref.lowrank_ref(u, r, x), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# sparse_coo
+# ---------------------------------------------------------------------------
+
+def rand_coo(k, n):
+    rows = jnp.asarray(RNG.integers(0, n, k), jnp.int32)
+    cols = jnp.asarray(RNG.integers(0, n, k), jnp.int32)
+    vals = jnp.asarray(RNG.standard_normal(k), jnp.float32)
+    return rows, cols, vals
+
+
+class TestSparseCoo:
+    def test_basic(self):
+        n = 64
+        rows, cols, vals = rand_coo(100, n)
+        x = randf(n, 17)
+        np.testing.assert_allclose(
+            sparse_coo_apply(rows, cols, vals, x, n),
+            ref.sparse_coo_ref(rows, cols, vals, x, n), **TOL)
+
+    def test_empty(self):
+        n = 16
+        z = jnp.zeros(0, jnp.int32)
+        out = sparse_coo_apply(z, z, jnp.zeros(0, jnp.float32), randf(n, 3), n)
+        np.testing.assert_allclose(out, np.zeros((n, 3)), **TOL)
+
+    def test_duplicate_entries_accumulate(self):
+        n = 8
+        rows = jnp.asarray([2, 2, 2], jnp.int32)
+        cols = jnp.asarray([3, 3, 3], jnp.int32)
+        vals = jnp.asarray([1.0, 2.0, 3.0], jnp.float32)
+        x = jnp.zeros((n, 1), jnp.float32).at[3, 0].set(1.0)
+        out = sparse_coo_apply(rows, cols, vals, x, n)
+        assert float(out[2, 0]) == pytest.approx(6.0)
+
+    def test_zero_padding_contributes_nothing(self):
+        n = 16
+        rows = jnp.asarray([1, 0, 0], jnp.int32)
+        cols = jnp.asarray([1, 0, 0], jnp.int32)
+        vals = jnp.asarray([5.0, 0.0, 0.0], jnp.float32)
+        x = jnp.ones((n, 2), jnp.float32)
+        out = sparse_coo_apply(rows, cols, vals, x, n)
+        expect = np.zeros((n, 2)); expect[1] = 5.0
+        np.testing.assert_allclose(out, expect, **TOL)
+
+    @settings(max_examples=15, deadline=None)
+    @given(k=st.integers(1, 200), n=st.sampled_from([16, 32, 64]),
+           b=st.integers(1, 20))
+    def test_shapes_sweep(self, k, n, b):
+        rows, cols, vals = rand_coo(k, n)
+        x = randf(n, b)
+        np.testing.assert_allclose(
+            sparse_coo_apply(rows, cols, vals, x, n),
+            ref.sparse_coo_ref(rows, cols, vals, x, n), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+class TestAttention:
+    def test_basic(self):
+        q, k, v = randf(4, 32, 16), randf(4, 32, 16), randf(4, 32, 16)
+        expect = jax.vmap(ref.attention_ref)(q, k, v)
+        np.testing.assert_allclose(attention_apply(q, k, v), expect, **TOL)
+
+    def test_causality(self):
+        """Changing future keys/values must not change earlier outputs."""
+        q, k, v = randf(1, 16, 8), randf(1, 16, 8), randf(1, 16, 8)
+        base = attention_apply(q, k, v)
+        k2 = k.at[0, 10:].add(100.0)
+        v2 = v.at[0, 10:].add(100.0)
+        pert = attention_apply(q, k2, v2)
+        np.testing.assert_allclose(base[0, :10], pert[0, :10], **TOL)
+
+    def test_softmax_rows_via_uniform_v(self):
+        """With V = ones, output must be exactly ones (rows sum to 1)."""
+        q, k = randf(2, 12, 8), randf(2, 12, 8)
+        v = jnp.ones((2, 12, 8), jnp.float32)
+        np.testing.assert_allclose(attention_apply(q, k, v),
+                                   np.ones((2, 12, 8)), **TOL)
+
+    @settings(max_examples=10, deadline=None)
+    @given(bh=st.integers(1, 6), t=st.sampled_from([8, 16, 64, 128]),
+           hd=st.sampled_from([8, 16, 32]))
+    def test_shapes_sweep(self, bh, t, hd):
+        q, k, v = randf(bh, t, hd), randf(bh, t, hd), randf(bh, t, hd)
+        expect = jax.vmap(ref.attention_ref)(q, k, v)
+        np.testing.assert_allclose(attention_apply(q, k, v), expect, **TOL)

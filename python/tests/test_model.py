@@ -1,0 +1,110 @@
+"""L2 model tests: shapes, compressed-vs-dense agreement, trainability."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import hss_np, model
+
+TINY = dict(model.CONFIG, d_model=64, n_heads=4, n_layers=2, d_ff=128,
+            seq_len=32)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(0, TINY)
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    rng = np.random.default_rng(0)
+    return jnp.asarray(rng.integers(0, TINY["vocab"], (2, TINY["seq_len"])),
+                       jnp.int32)
+
+
+def build_hss_for(params, cfg):
+    specs, ops = {}, {}
+    for i in range(TINY["n_layers"]):
+        for p in ("wq", "wk", "wv"):
+            name = f"layer{i}.{p}"
+            tree = hss_np.build(np.asarray(params[name]).T.astype(np.float64),
+                                cfg)
+            specs[name] = hss_np.spec(tree)
+            for n, a in hss_np.flatten(tree, name):
+                ops[n] = jnp.asarray(a)
+    return specs, ops
+
+
+class TestDenseFwd:
+    def test_logit_shape(self, params, tokens):
+        logits = model.fwd(params, tokens, TINY)
+        assert logits.shape == (2, TINY["seq_len"], TINY["vocab"])
+
+    def test_causality(self, params, tokens):
+        """Perturbing token t must not change logits before t."""
+        logits = model.fwd(params, tokens, TINY)
+        toks2 = tokens.at[0, 20].set((tokens[0, 20] + 1) % 256)
+        logits2 = model.fwd(params, toks2, TINY)
+        np.testing.assert_allclose(logits[0, :20], logits2[0, :20],
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_pallas_vs_jnp_attention_paths_agree(self, params, tokens):
+        a = model.fwd(params, tokens, TINY, use_pallas=True)
+        b = model.fwd(params, tokens, TINY, use_pallas=False)
+        np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)
+
+    def test_param_names_match_shapes(self):
+        names = model.param_names(TINY)
+        shapes = model.param_shapes(TINY)
+        assert set(names) == set(shapes)
+        assert names[0] == "tok_emb"
+
+
+class TestCompressedFwd:
+    def test_near_exact_config_matches_dense(self, params, tokens):
+        cfg = hss_np.HssConfig(rank=32, sparsity=0.3, depth=1, rsvd=False)
+        hss = build_hss_for(params, cfg)
+        dense = model.fwd(params, tokens, TINY)
+        comp = model.fwd(params, tokens, TINY, hss=hss)
+        np.testing.assert_allclose(comp, dense, rtol=1e-3, atol=1e-3)
+
+    def test_lossy_config_close_in_distribution(self, params, tokens):
+        cfg = hss_np.HssConfig(rank=8, sparsity=0.2, depth=2)
+        hss = build_hss_for(params, cfg)
+        dense = jax.nn.log_softmax(model.fwd(params, tokens, TINY))
+        comp = jax.nn.log_softmax(model.fwd(params, tokens, TINY, hss=hss))
+        # lossy, but the predictive distribution must stay in the same
+        # ballpark (mean |delta log p| well under 1 nat for init weights)
+        assert float(jnp.mean(jnp.abs(dense - comp))) < 1.0
+
+    def test_depth3_runs(self, params, tokens):
+        cfg = hss_np.HssConfig(rank=8, sparsity=0.1, depth=3, min_leaf=4)
+        hss = build_hss_for(params, cfg)
+        logits = model.fwd(params, tokens, TINY, hss=hss)
+        assert logits.shape == (2, TINY["seq_len"], TINY["vocab"])
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+class TestTraining:
+    def test_loss_decreases(self):
+        from compile import train as train_mod
+        params = model.init_params(1, TINY)
+        opt = train_mod.adam_init(params)
+        step = train_mod.make_step(lr=1e-3, cfg=TINY)
+        rng = np.random.default_rng(3)
+        # single repeated batch: loss must drop fast if grads flow
+        toks = jnp.asarray(rng.integers(0, 64, (4, TINY["seq_len"] + 1)),
+                           jnp.int32)
+        first = None
+        for _ in range(30):
+            params, opt, loss = step(params, opt, toks)
+            first = first if first is not None else float(loss)
+        assert float(loss) < first * 0.8
+
+    def test_loss_fn_finite(self):
+        params = model.init_params(2, TINY)
+        rng = np.random.default_rng(4)
+        toks = jnp.asarray(rng.integers(0, 256, (2, TINY["seq_len"] + 1)),
+                           jnp.int32)
+        assert np.isfinite(float(model.loss_fn(params, toks, TINY)))

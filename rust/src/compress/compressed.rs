@@ -1,0 +1,242 @@
+//! The runtime representation every method compresses into, with the three
+//! operations all experiments need: apply, storage, error.
+
+use crate::hss::matvec::Workspace;
+use crate::hss::storage::{INDEX_BYTES, VALUE_BYTES};
+use crate::hss::HssNode;
+use crate::linalg::norms::rel_fro_error;
+use crate::linalg::Matrix;
+use crate::sparse::Csr;
+
+/// A compressed square matrix.
+pub enum CompressedMatrix {
+    /// the uncompressed baseline
+    Dense { w: Matrix },
+    /// (optionally sparse-plus-) low-rank: W ≈ S + L·R
+    LowRank {
+        l: Matrix,
+        r: Matrix,
+        sparse: Option<Csr>,
+    },
+    /// sparse-plus-HSS tree (sHSS / sHSS-RCM)
+    Hss { tree: HssNode },
+}
+
+impl CompressedMatrix {
+    pub fn n(&self) -> usize {
+        match self {
+            CompressedMatrix::Dense { w } => w.rows,
+            CompressedMatrix::LowRank { l, .. } => l.rows,
+            CompressedMatrix::Hss { tree } => tree.n(),
+        }
+    }
+
+    /// y = W x.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        let mut y = vec![0.0; self.n()];
+        let mut ws = self.workspace();
+        self.matvec_with(x, &mut y, &mut ws);
+        y
+    }
+
+    /// Pre-sized scratch for allocation-free repeated applies.
+    pub fn workspace(&self) -> ApplyWorkspace {
+        match self {
+            CompressedMatrix::Hss { tree } => ApplyWorkspace {
+                hss: Workspace::for_node(tree),
+                t: Vec::new(),
+            },
+            CompressedMatrix::LowRank { r, .. } => ApplyWorkspace {
+                hss: Workspace::default(),
+                t: vec![0.0; r.rows],
+            },
+            CompressedMatrix::Dense { .. } => ApplyWorkspace {
+                hss: Workspace::default(),
+                t: Vec::new(),
+            },
+        }
+    }
+
+    /// y = W x with reusable workspace (request-path form).
+    pub fn matvec_with(&self, x: &[f32], y: &mut [f32], ws: &mut ApplyWorkspace) {
+        match self {
+            CompressedMatrix::Dense { w } => w.matvec_into(x, y),
+            CompressedMatrix::LowRank { l, r, sparse } => {
+                // y = L (R x) [+ S x]
+                if ws.t.len() < r.rows {
+                    ws.t.resize(r.rows, 0.0);
+                }
+                let t = &mut ws.t[..r.rows];
+                r.matvec_into(x, t);
+                l.matvec_into(t, y);
+                if let Some(s) = sparse {
+                    s.matvec_add(x, y);
+                }
+            }
+            CompressedMatrix::Hss { tree } => tree.matvec_with(x, y, &mut ws.hss),
+        }
+    }
+
+    /// Column-batched apply.
+    pub fn matmat(&self, x_cols: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        let mut ws = self.workspace();
+        x_cols
+            .iter()
+            .map(|x| {
+                let mut y = vec![0.0; self.n()];
+                self.matvec_with(x, &mut y, &mut ws);
+                y
+            })
+            .collect()
+    }
+
+    /// Dense matrix this representation stands for (testing/eval only).
+    pub fn reconstruct(&self) -> Matrix {
+        match self {
+            CompressedMatrix::Dense { w } => w.clone(),
+            CompressedMatrix::LowRank { l, r, sparse } => {
+                let mut m = l.matmul(r);
+                if let Some(s) = sparse {
+                    m = m.add(&s.to_dense());
+                }
+                m
+            }
+            CompressedMatrix::Hss { tree } => tree.reconstruct(),
+        }
+    }
+
+    /// Relative Frobenius reconstruction error vs the original.
+    pub fn rel_error(&self, original: &Matrix) -> f64 {
+        rel_fro_error(&self.reconstruct(), original)
+    }
+
+    /// Stored parameter count (values only).
+    pub fn params(&self) -> usize {
+        match self {
+            CompressedMatrix::Dense { w } => w.data.len(),
+            CompressedMatrix::LowRank { l, r, sparse } => {
+                l.data.len() + r.data.len() + sparse.as_ref().map_or(0, |s| s.nnz())
+            }
+            CompressedMatrix::Hss { tree } => tree.storage().params,
+        }
+    }
+
+    /// Total bytes at fp16 including index overhead.
+    pub fn bytes(&self) -> usize {
+        match self {
+            CompressedMatrix::Dense { w } => w.data.len() * VALUE_BYTES,
+            CompressedMatrix::LowRank { l, r, sparse } => {
+                (l.data.len() + r.data.len()) * VALUE_BYTES
+                    + sparse
+                        .as_ref()
+                        .map_or(0, |s| s.nnz() * (VALUE_BYTES + 2 * INDEX_BYTES))
+            }
+            CompressedMatrix::Hss { tree } => tree.storage().bytes,
+        }
+    }
+
+    /// params / dense-params — the paper's storage axis (< 1 means
+    /// compression). Use [`CompressedMatrix::bytes`] for the
+    /// index-overhead-aware byte count.
+    pub fn storage_ratio(&self) -> f64 {
+        self.params() as f64 / (self.n() * self.n()) as f64
+    }
+}
+
+/// Scratch reused across `matvec_with` calls.
+pub struct ApplyWorkspace {
+    hss: Workspace,
+    t: Vec<f32>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Compressor, CompressorConfig, Method};
+    use crate::util::proptest::slices_close;
+    use crate::util::rng::Rng;
+
+    fn spiky(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut a = Matrix::randn(n, n, seed).scale(0.05);
+        for _ in 0..2 * n {
+            let i = rng.below(n);
+            let j = rng.below(n);
+            a.data[i * n + j] += rng.gaussian_f32();
+        }
+        a
+    }
+
+    #[test]
+    fn lowrank_matvec_with_sparse() {
+        let w = spiky(48, 1);
+        let cfg = CompressorConfig {
+            rank: 8,
+            sparsity: 0.2,
+            ..Default::default()
+        };
+        let c = Compressor::new(cfg).compress(&w, Method::SSvd);
+        let mut rng = Rng::new(2);
+        let x: Vec<f32> = (0..48).map(|_| rng.gaussian_f32()).collect();
+        let expect = c.reconstruct().matvec(&x);
+        slices_close(&c.matvec(&x), &expect, 1e-4, 1e-4, "ssvd matvec").unwrap();
+    }
+
+    #[test]
+    fn storage_ordering_dense_vs_compressed() {
+        let w = spiky(64, 3);
+        let comp = Compressor::new(CompressorConfig {
+            rank: 4,
+            sparsity: 0.05,
+            depth: 2,
+            ..Default::default()
+        });
+        let dense = comp.compress(&w, Method::Dense);
+        for m in [Method::Svd, Method::SSvd, Method::SHss, Method::SHssRcm] {
+            let c = comp.compress(&w, m);
+            assert!(
+                c.bytes() < dense.bytes(),
+                "{m:?} bytes {} !< dense {}",
+                c.bytes(),
+                dense.bytes()
+            );
+        }
+    }
+
+    #[test]
+    fn workspace_reuse_stable() {
+        let w = spiky(32, 4);
+        let comp = Compressor::new(CompressorConfig {
+            rank: 6,
+            sparsity: 0.1,
+            depth: 2,
+            ..Default::default()
+        });
+        for m in Method::ALL {
+            let c = comp.compress(&w, m);
+            let mut ws = c.workspace();
+            let x: Vec<f32> = (0..32).map(|i| (i as f32).cos()).collect();
+            let mut y1 = vec![0.0; 32];
+            let mut y2 = vec![0.0; 32];
+            c.matvec_with(&x, &mut y1, &mut ws);
+            c.matvec_with(&x, &mut y2, &mut ws);
+            assert_eq!(y1, y2, "{m:?}");
+        }
+    }
+
+    #[test]
+    fn params_positive_and_sane() {
+        let w = spiky(32, 5);
+        let comp = Compressor::new(CompressorConfig {
+            rank: 4,
+            sparsity: 0.1,
+            depth: 2,
+            ..Default::default()
+        });
+        for m in Method::ALL {
+            let c = comp.compress(&w, m);
+            assert!(c.params() > 0, "{m:?}");
+            assert!(c.params() <= 2 * 32 * 32, "{m:?} params {}", c.params());
+        }
+    }
+}

@@ -1,0 +1,96 @@
+//! Compression configuration shared across all methods.
+
+use crate::hss::HssOptions;
+use crate::linalg::rsvd::RsvdOptions;
+
+/// Parameters sweeping the paper's experiment axes: rank, sparsity (sp10/
+/// sp20/sp30), HSS depth, tolerance (fixed 1e-6 in the paper).
+#[derive(Clone, Copy, Debug)]
+pub struct CompressorConfig {
+    /// outer rank k (512 at d=4096 in the paper ⇒ d/8 scaled here)
+    pub rank: usize,
+    /// fraction of entries carved into S (0.10 / 0.20 / 0.30 in the paper)
+    pub sparsity: f64,
+    /// §4.5-literal per-level re-extraction (ablation; see HssOptions)
+    pub sparse_per_level: bool,
+    /// HSS split levels (paper Algorithm 1 uses 3; Fig 2 reports depth 4)
+    pub depth: usize,
+    /// singular-value drop tolerance (paper: 1e-6)
+    pub tol: f32,
+    /// HSS recursion floor
+    pub min_leaf: usize,
+    /// |residual| quantile forming the RCM graph
+    pub pattern_quantile: f64,
+    /// randomized-SVD oversampling / power iterations / seed
+    pub oversample: usize,
+    pub power_iters: usize,
+    pub seed: u64,
+    /// use randomized SVD inside the HSS builder (paper §4.5)
+    pub hss_rsvd: bool,
+}
+
+impl Default for CompressorConfig {
+    fn default() -> Self {
+        CompressorConfig {
+            rank: 32,
+            sparsity: 0.1,
+            sparse_per_level: false,
+            depth: 3,
+            tol: 1e-6,
+            min_leaf: 16,
+            pattern_quantile: 0.90,
+            oversample: 8,
+            power_iters: 1,
+            seed: 0x5EED,
+            hss_rsvd: true,
+        }
+    }
+}
+
+impl CompressorConfig {
+    pub fn hss_options(&self, use_rcm: bool) -> HssOptions {
+        HssOptions {
+            rank: self.rank,
+            sparsity: self.sparsity,
+            sparse_per_level: self.sparse_per_level,
+            depth: self.depth,
+            tol: self.tol,
+            use_rcm,
+            min_leaf: self.min_leaf,
+            pattern_quantile: self.pattern_quantile,
+            rsvd: self.hss_rsvd,
+            rsvd_opts: RsvdOptions {
+                oversample: self.oversample,
+                power_iters: self.power_iters,
+                seed: self.seed,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = CompressorConfig::default();
+        assert_eq!(c.depth, 3);
+        assert!((c.tol - 1e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hss_options_propagate() {
+        let c = CompressorConfig {
+            rank: 64,
+            sparsity: 0.3,
+            depth: 4,
+            ..Default::default()
+        };
+        let o = c.hss_options(true);
+        assert_eq!(o.rank, 64);
+        assert_eq!(o.depth, 4);
+        assert!(o.use_rcm);
+        assert!(!c.hss_options(false).use_rcm);
+    }
+}

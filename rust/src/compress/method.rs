@@ -1,0 +1,131 @@
+//! The seven methods the paper's §5 compares under one formulation.
+
+use std::fmt;
+use std::str::FromStr;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// uncompressed baseline ("Original" in Fig 3)
+    Dense,
+    /// truncated exact SVD (§3.2)
+    Svd,
+    /// randomized SVD (§3.3)
+    Rsvd,
+    /// sparse + exact SVD on the residual (§3.4, "sSVD")
+    SSvd,
+    /// sparse + randomized SVD on the residual (§3.5, "sR-SVD")
+    SRsvd,
+    /// sparse + hierarchical low rank (§4.5, "sHSS")
+    SHss,
+    /// sHSS with Reverse Cuthill–McKee reordering ("sHSS-RCM")
+    SHssRcm,
+}
+
+impl Method {
+    pub const ALL: [Method; 7] = [
+        Method::Dense,
+        Method::Svd,
+        Method::Rsvd,
+        Method::SSvd,
+        Method::SRsvd,
+        Method::SHss,
+        Method::SHssRcm,
+    ];
+
+    /// The methods plotted in the paper's Fig 3.
+    pub const FIG3: [Method; 5] = [
+        Method::Dense,
+        Method::SSvd,
+        Method::SRsvd,
+        Method::SHss,
+        Method::SHssRcm,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Dense => "dense",
+            Method::Svd => "svd",
+            Method::Rsvd => "rsvd",
+            Method::SSvd => "ssvd",
+            Method::SRsvd => "srsvd",
+            Method::SHss => "shss",
+            Method::SHssRcm => "shss-rcm",
+        }
+    }
+
+    /// Label as printed in the paper's figures.
+    pub fn paper_label(&self) -> &'static str {
+        match self {
+            Method::Dense => "Original",
+            Method::Svd => "SVD",
+            Method::Rsvd => "R-SVD",
+            Method::SSvd => "sSVD",
+            Method::SRsvd => "sR-SVD",
+            Method::SHss => "sHSS",
+            Method::SHssRcm => "sHSS-RCM",
+        }
+    }
+
+    pub fn uses_sparsity(&self) -> bool {
+        matches!(
+            self,
+            Method::SSvd | Method::SRsvd | Method::SHss | Method::SHssRcm
+        )
+    }
+
+    pub fn is_hierarchical(&self) -> bool {
+        matches!(self, Method::SHss | Method::SHssRcm)
+    }
+}
+
+impl fmt::Display for Method {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for Method {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Method, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "dense" | "original" => Ok(Method::Dense),
+            "svd" => Ok(Method::Svd),
+            "rsvd" | "r-svd" => Ok(Method::Rsvd),
+            "ssvd" | "s-svd" => Ok(Method::SSvd),
+            "srsvd" | "sr-svd" => Ok(Method::SRsvd),
+            "shss" => Ok(Method::SHss),
+            "shss-rcm" | "shssrcm" => Ok(Method::SHssRcm),
+            other => Err(format!(
+                "unknown method '{other}' (expected one of: dense svd rsvd ssvd srsvd shss shss-rcm)"
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for m in Method::ALL {
+            assert_eq!(m.name().parse::<Method>().unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn parse_aliases() {
+        assert_eq!("Original".parse::<Method>().unwrap(), Method::Dense);
+        assert_eq!("sR-SVD".parse::<Method>().unwrap(), Method::SRsvd);
+        assert!("bogus".parse::<Method>().is_err());
+    }
+
+    #[test]
+    fn classification() {
+        assert!(Method::SHssRcm.is_hierarchical());
+        assert!(!Method::SSvd.is_hierarchical());
+        assert!(Method::SSvd.uses_sparsity());
+        assert!(!Method::Svd.uses_sparsity());
+    }
+}

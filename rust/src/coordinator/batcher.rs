@@ -1,0 +1,215 @@
+//! Dynamic batcher: collects requests into batches of up to `max_batch`,
+//! waiting at most `max_wait` after the first request arrives (the standard
+//! latency/throughput knob of serving systems; cf. vLLM's batch scheduler).
+//!
+//! Generic over the item type so unit tests run without a PJRT client.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    /// queue capacity; pushes beyond it are rejected (backpressure)
+    pub capacity: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+            capacity: 1024,
+        }
+    }
+}
+
+struct State<T> {
+    queue: VecDeque<T>,
+    closed: bool,
+}
+
+/// MPMC dynamic batching queue.
+pub struct Batcher<T> {
+    cfg: BatcherConfig,
+    state: Mutex<State<T>>,
+    cv: Condvar,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(cfg: BatcherConfig) -> Batcher<T> {
+        Batcher {
+            cfg,
+            state: Mutex::new(State {
+                queue: VecDeque::new(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Enqueue; returns Err(item) if the queue is full or closed.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut s = self.state.lock().unwrap();
+        if s.closed || s.queue.len() >= self.cfg.capacity {
+            return Err(item);
+        }
+        s.queue.push_back(item);
+        drop(s);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop of the next batch. Returns None when closed and drained.
+    /// Waits for the first item indefinitely, then up to `max_wait` for the
+    /// batch to fill.
+    pub fn pop_batch(&self) -> Option<Vec<T>> {
+        let mut s = self.state.lock().unwrap();
+        // wait for the first item (or close)
+        while s.queue.is_empty() {
+            if s.closed {
+                return None;
+            }
+            s = self.cv.wait(s).unwrap();
+        }
+        // batch-fill window
+        let deadline = Instant::now() + self.cfg.max_wait;
+        while s.queue.len() < self.cfg.max_batch && !s.closed {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (ns, timeout) = self.cv.wait_timeout(s, deadline - now).unwrap();
+            s = ns;
+            if timeout.timed_out() {
+                break;
+            }
+        }
+        let take = s.queue.len().min(self.cfg.max_batch);
+        Some(s.queue.drain(..take).collect())
+    }
+
+    /// Close the queue; pending items are still drained by pop_batch.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::thread;
+
+    fn cfg(max_batch: usize, wait_ms: u64, cap: usize) -> BatcherConfig {
+        BatcherConfig {
+            max_batch,
+            max_wait: Duration::from_millis(wait_ms),
+            capacity: cap,
+        }
+    }
+
+    #[test]
+    fn batches_up_to_max() {
+        let b = Batcher::new(cfg(3, 5, 100));
+        for i in 0..7 {
+            b.push(i).unwrap();
+        }
+        assert_eq!(b.pop_batch().unwrap(), vec![0, 1, 2]);
+        assert_eq!(b.pop_batch().unwrap(), vec![3, 4, 5]);
+        assert_eq!(b.pop_batch().unwrap(), vec![6]);
+    }
+
+    #[test]
+    fn waits_for_first_item() {
+        let b = Arc::new(Batcher::new(cfg(4, 1, 100)));
+        let b2 = b.clone();
+        let h = thread::spawn(move || b2.pop_batch());
+        thread::sleep(Duration::from_millis(20));
+        b.push(42).unwrap();
+        let got = h.join().unwrap().unwrap();
+        assert_eq!(got, vec![42]);
+    }
+
+    #[test]
+    fn fills_batch_within_wait_window() {
+        let b = Arc::new(Batcher::new(cfg(4, 50, 100)));
+        let b2 = b.clone();
+        let h = thread::spawn(move || b2.pop_batch());
+        thread::sleep(Duration::from_millis(5));
+        for i in 0..4 {
+            b.push(i).unwrap();
+            thread::sleep(Duration::from_millis(2));
+        }
+        let got = h.join().unwrap().unwrap();
+        assert_eq!(got.len(), 4, "batch should fill during the wait window");
+    }
+
+    #[test]
+    fn backpressure_rejects_over_capacity() {
+        let b = Batcher::new(cfg(4, 1, 2));
+        assert!(b.push(1).is_ok());
+        assert!(b.push(2).is_ok());
+        assert_eq!(b.push(3), Err(3));
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let b = Batcher::new(cfg(4, 1, 100));
+        b.push(1).unwrap();
+        b.close();
+        assert!(b.push(2).is_err());
+        assert_eq!(b.pop_batch().unwrap(), vec![1]);
+        assert!(b.pop_batch().is_none());
+    }
+
+    #[test]
+    fn concurrent_producers_consumers() {
+        let b = Arc::new(Batcher::new(cfg(8, 2, 10_000)));
+        let total = 500;
+        let mut producers = Vec::new();
+        for p in 0..4 {
+            let b = b.clone();
+            producers.push(thread::spawn(move || {
+                for i in 0..total {
+                    while b.push(p * total + i).is_err() {
+                        thread::yield_now();
+                    }
+                }
+            }));
+        }
+        let consumer = {
+            let b = b.clone();
+            thread::spawn(move || {
+                let mut seen = Vec::new();
+                while let Some(batch) = b.pop_batch() {
+                    seen.extend(batch);
+                }
+                seen
+            })
+        };
+        for p in producers {
+            p.join().unwrap();
+        }
+        // give the consumer time to drain, then close
+        while !b.is_empty() {
+            thread::yield_now();
+        }
+        b.close();
+        let mut seen = consumer.join().unwrap();
+        seen.sort_unstable();
+        assert_eq!(seen.len(), 4 * total);
+        assert_eq!(seen, (0..4 * total).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,137 @@
+//! Lock-free serving metrics: request counters and a log-bucketed latency
+//! histogram with percentile queries.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+const BUCKETS: usize = 40; // log2 buckets over 1us .. ~1099s
+
+/// Atomic metrics registry (one per coordinator).
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub rejected: AtomicU64,
+    pub errors: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_requests: AtomicU64,
+    latency_buckets: [AtomicU64; BUCKETS],
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_requests: AtomicU64::new(0),
+            latency_buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    pub fn record_latency_us(&self, us: u64) {
+        let b = (64 - us.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
+        self.latency_buckets[b].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_requests
+            .fetch_add(size as u64, Ordering::Relaxed);
+    }
+
+    /// Approximate latency percentile (upper bucket bound), p in [0,1].
+    pub fn latency_percentile_us(&self, p: f64) -> u64 {
+        let counts: Vec<u64> = self
+            .latency_buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let want = ((p * total as f64).ceil() as u64).clamp(1, total);
+        let mut acc = 0u64;
+        for (i, c) in counts.iter().enumerate() {
+            acc += c;
+            if acc >= want {
+                return 1u64 << (i + 1); // upper bound of bucket i
+            }
+        }
+        1u64 << BUCKETS
+    }
+
+    /// Mean requests per executed batch.
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "submitted={} completed={} rejected={} errors={} batches={} mean_batch={:.2} p50={}us p95={}us p99={}us",
+            self.submitted.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
+            self.errors.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch_size(),
+            self.latency_percentile_us(0.5),
+            self.latency_percentile_us(0.95),
+            self.latency_percentile_us(0.99),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_monotone() {
+        let m = Metrics::new();
+        for us in [10u64, 100, 1000, 10_000, 100_000] {
+            for _ in 0..100 {
+                m.record_latency_us(us);
+            }
+        }
+        let p50 = m.latency_percentile_us(0.5);
+        let p95 = m.latency_percentile_us(0.95);
+        let p99 = m.latency_percentile_us(0.99);
+        assert!(p50 <= p95 && p95 <= p99);
+        assert!(p50 >= 1000 && p50 <= 2048, "{p50}");
+    }
+
+    #[test]
+    fn empty_percentile_zero() {
+        let m = Metrics::new();
+        assert_eq!(m.latency_percentile_us(0.99), 0);
+    }
+
+    #[test]
+    fn batch_stats() {
+        let m = Metrics::new();
+        m.record_batch(8);
+        m.record_batch(4);
+        assert!((m.mean_batch_size() - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_contains_counters() {
+        let m = Metrics::new();
+        m.submitted.fetch_add(3, Ordering::Relaxed);
+        let s = m.summary();
+        assert!(s.contains("submitted=3"));
+    }
+}

@@ -1,0 +1,20 @@
+//! L3 serving coordinator: dynamic batcher, worker threads per model
+//! variant, round-robin routing, and metrics.
+//!
+//! The paper's contribution lives at the compression layer, so the
+//! coordinator is the serving shell around it (DESIGN.md §3): requests are
+//! token windows to score; workers own either an AOT PJRT executable
+//! (dense / sHSS graphs) or a native forward pass, batch up to the
+//! executable's static batch size, and return per-window NLL.
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod server;
+pub mod worker;
+
+pub use batcher::{Batcher, BatcherConfig};
+pub use metrics::Metrics;
+pub use request::{ScoreRequest, ScoreResponse, Variant};
+pub use server::{Coordinator, CoordinatorConfig};
+pub use worker::Scorer;

@@ -1,0 +1,91 @@
+//! Request/response types for the scoring service.
+
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+/// Which model variant serves the request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Variant {
+    /// uncompressed AOT graph / dense native fwd
+    Dense,
+    /// sHSS-RCM compressed graph / native compressed fwd
+    Hss,
+}
+
+impl Variant {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Variant::Dense => "dense",
+            Variant::Hss => "hss",
+        }
+    }
+}
+
+impl std::str::FromStr for Variant {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Variant, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "dense" => Ok(Variant::Dense),
+            "hss" | "shss" | "shss-rcm" => Ok(Variant::Hss),
+            o => Err(format!("unknown variant '{o}' (dense|hss)")),
+        }
+    }
+}
+
+/// A scoring request: one token window; the response reports its NLL.
+pub struct ScoreRequest {
+    pub id: u64,
+    pub variant: Variant,
+    /// window of seq_len + 1 tokens (inputs + targets)
+    pub window: Vec<u32>,
+    pub submitted: Instant,
+    pub reply: Sender<ScoreResponse>,
+}
+
+/// The scored result.
+#[derive(Clone, Debug)]
+pub struct ScoreResponse {
+    pub id: u64,
+    pub variant: Variant,
+    /// total NLL over the window (nats) and token count
+    pub nll: f64,
+    pub tokens: usize,
+    /// end-to-end latency (queue + batch wait + execute)
+    pub latency_us: u64,
+    /// how many requests shared the executed batch
+    pub batch_size: usize,
+    pub error: Option<String>,
+}
+
+impl ScoreResponse {
+    pub fn ppl(&self) -> f64 {
+        (self.nll / self.tokens.max(1) as f64).exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_parse() {
+        assert_eq!("dense".parse::<Variant>().unwrap(), Variant::Dense);
+        assert_eq!("sHSS-RCM".parse::<Variant>().unwrap(), Variant::Hss);
+        assert!("x".parse::<Variant>().is_err());
+    }
+
+    #[test]
+    fn response_ppl() {
+        let r = ScoreResponse {
+            id: 0,
+            variant: Variant::Dense,
+            nll: 2.0 * 10.0_f64.ln(),
+            tokens: 2,
+            latency_us: 1,
+            batch_size: 1,
+            error: None,
+        };
+        assert!((r.ppl() - 10.0).abs() < 1e-9);
+    }
+}

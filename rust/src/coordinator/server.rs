@@ -1,0 +1,250 @@
+//! The coordinator facade: one batcher + worker thread per model variant,
+//! a submit API with backpressure, metrics, and graceful shutdown.
+
+use crate::coordinator::batcher::{Batcher, BatcherConfig};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{ScoreRequest, ScoreResponse, Variant};
+use crate::coordinator::worker::{run_worker, Scorer};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CoordinatorConfig {
+    pub batcher: BatcherConfig,
+}
+
+struct VariantLane {
+    batcher: Arc<Batcher<ScoreRequest>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+/// The serving coordinator. Register one or more scorers per variant, then
+/// `submit` windows and collect responses.
+pub struct Coordinator {
+    lanes: HashMap<Variant, VariantLane>,
+    pub metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+    cfg: CoordinatorConfig,
+}
+
+impl Coordinator {
+    pub fn new(cfg: CoordinatorConfig) -> Coordinator {
+        Coordinator {
+            lanes: HashMap::new(),
+            metrics: Arc::new(Metrics::new()),
+            next_id: AtomicU64::new(0),
+            cfg,
+        }
+    }
+
+    /// Add a worker for `variant`; multiple workers share the variant queue.
+    pub fn add_worker<S: Scorer + Send + 'static>(&mut self, variant: Variant, scorer: S) {
+        self.add_worker_factory(variant, move || Ok(scorer));
+    }
+
+    /// Add a worker whose scorer is constructed *on the worker thread* —
+    /// required for PJRT-backed scorers: the xla client is `!Send`, so each
+    /// worker owns its own client/executable.
+    pub fn add_worker_factory<S, F>(&mut self, variant: Variant, factory: F)
+    where
+        S: Scorer + 'static,
+        F: FnOnce() -> anyhow::Result<S> + Send + 'static,
+    {
+        let lane = self.lanes.entry(variant).or_insert_with(|| VariantLane {
+            batcher: Arc::new(Batcher::new(self.cfg.batcher)),
+            workers: Vec::new(),
+        });
+        let batcher = lane.batcher.clone();
+        let metrics = self.metrics.clone();
+        lane.workers.push(std::thread::spawn(move || {
+            match factory() {
+                Ok(scorer) => run_worker(scorer, batcher, metrics),
+                Err(e) => {
+                    crate::util::logging::log(
+                        crate::util::logging::Level::Error,
+                        format_args!("worker factory failed: {e:#}"),
+                    );
+                    // drain queue with errors so submitters don't hang
+                    while let Some(batch) = batcher.pop_batch() {
+                        for req in batch {
+                            metrics.errors.fetch_add(1, Ordering::Relaxed);
+                            let _ = req.reply.send(ScoreResponse {
+                                id: req.id,
+                                variant: req.variant,
+                                nll: f64::NAN,
+                                tokens: 0,
+                                latency_us: 0,
+                                batch_size: 0,
+                                error: Some(format!("worker init failed: {e:#}")),
+                            });
+                        }
+                    }
+                }
+            }
+        }));
+    }
+
+    /// Submit one window; the response arrives on the returned receiver.
+    /// Errors (backpressure / unknown variant) are returned immediately.
+    pub fn submit(
+        &self,
+        variant: Variant,
+        window: Vec<u32>,
+    ) -> anyhow::Result<Receiver<ScoreResponse>> {
+        let lane = self
+            .lanes
+            .get(&variant)
+            .ok_or_else(|| anyhow::anyhow!("no worker registered for variant {variant:?}"))?;
+        let (tx, rx) = channel();
+        let req = ScoreRequest {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            variant,
+            window,
+            submitted: Instant::now(),
+            reply: tx,
+        };
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        lane.batcher.push(req).map_err(|_| {
+            self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            anyhow::anyhow!("queue full (backpressure) for {variant:?}")
+        })?;
+        Ok(rx)
+    }
+
+    /// Submit many windows and block for all responses (order preserved).
+    pub fn submit_all(
+        &self,
+        variant: Variant,
+        windows: &[Vec<u32>],
+    ) -> anyhow::Result<Vec<ScoreResponse>> {
+        let rxs: Vec<Receiver<ScoreResponse>> = windows
+            .iter()
+            .map(|w| self.submit(variant, w.clone()))
+            .collect::<anyhow::Result<_>>()?;
+        rxs.into_iter()
+            .map(|rx| rx.recv().map_err(|e| anyhow::anyhow!("worker gone: {e}")))
+            .collect()
+    }
+
+    /// Close all queues and join workers.
+    pub fn shutdown(mut self) {
+        for (_, lane) in self.lanes.iter() {
+            lane.batcher.close();
+        }
+        for (_, lane) in self.lanes.drain() {
+            for w in lane.workers {
+                let _ = w.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::worker::tests::MockScorer;
+    use std::time::Duration;
+
+    fn coordinator_with_mock(fail: bool) -> Coordinator {
+        let mut c = Coordinator::new(CoordinatorConfig {
+            batcher: BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(2),
+                capacity: 32,
+            },
+        });
+        c.add_worker(
+            Variant::Dense,
+            MockScorer {
+                vocab: 16,
+                seq: 8,
+                batch: 4,
+                fail,
+            },
+        );
+        c
+    }
+
+    #[test]
+    fn submit_roundtrip() {
+        let c = coordinator_with_mock(false);
+        let rx = c.submit(Variant::Dense, (0..9).collect()).unwrap();
+        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(resp.error.is_none());
+        assert!(resp.nll < 1e-3);
+        c.shutdown();
+    }
+
+    #[test]
+    fn submit_all_preserves_order() {
+        let c = coordinator_with_mock(false);
+        let windows: Vec<Vec<u32>> = (0..10u32)
+            .map(|s| (s..s + 9).map(|v| v % 16).collect())
+            .collect();
+        let resps = c.submit_all(Variant::Dense, &windows).unwrap();
+        assert_eq!(resps.len(), 10);
+        for (i, r) in resps.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert!(r.error.is_none());
+        }
+        // batching actually happened (mean batch > 1 given burst submit)
+        assert!(c.metrics.mean_batch_size() >= 1.0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn unknown_variant_rejected() {
+        let c = coordinator_with_mock(false);
+        assert!(c.submit(Variant::Hss, (0..9).collect()).is_err());
+        c.shutdown();
+    }
+
+    #[test]
+    fn errors_propagate() {
+        let c = coordinator_with_mock(true);
+        let rx = c.submit(Variant::Dense, (0..9).collect()).unwrap();
+        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(resp.error.is_some());
+        c.shutdown();
+    }
+
+    #[test]
+    fn multiple_variants_routed_independently() {
+        let mut c = Coordinator::new(CoordinatorConfig::default());
+        c.add_worker(
+            Variant::Dense,
+            MockScorer {
+                vocab: 16,
+                seq: 8,
+                batch: 4,
+                fail: false,
+            },
+        );
+        c.add_worker(
+            Variant::Hss,
+            MockScorer {
+                vocab: 16,
+                seq: 8,
+                batch: 4,
+                fail: true, // hss lane fails, dense succeeds
+            },
+        );
+        let ok = c
+            .submit(Variant::Dense, (0..9).collect())
+            .unwrap()
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap();
+        let bad = c
+            .submit(Variant::Hss, (0..9).collect())
+            .unwrap()
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap();
+        assert!(ok.error.is_none());
+        assert!(bad.error.is_some());
+        c.shutdown();
+    }
+}

@@ -1,0 +1,290 @@
+//! Worker: pulls batches for one model variant, scores them, replies.
+//!
+//! Workers are generic over [`Scorer`] so the same loop drives an AOT PJRT
+//! executable, the native forward pass, or a test mock.
+
+use crate::coordinator::batcher::Batcher;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{ScoreRequest, ScoreResponse};
+use crate::eval::perplexity::window_nll;
+use crate::linalg::Matrix;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+/// Anything that can score a batch of token windows into per-window logits.
+/// Not `Send`: PJRT-backed scorers are constructed on their worker thread
+/// (see `Coordinator::add_worker_factory`).
+pub trait Scorer {
+    /// Max windows per call (static batch for AOT executables).
+    fn max_batch(&self) -> usize;
+    /// Input window length the scorer expects (tokens fed = seq_len).
+    fn seq_len(&self) -> usize;
+    /// logits [t, vocab] per window; `windows` carry seq_len + 1 tokens and
+    /// the scorer sees the first seq_len.
+    fn score(&self, inputs: &[Vec<u32>]) -> anyhow::Result<Vec<Matrix>>;
+}
+
+/// Run the worker loop until the batcher closes.
+pub fn run_worker<S: Scorer>(
+    scorer: S,
+    batcher: Arc<Batcher<ScoreRequest>>,
+    metrics: Arc<Metrics>,
+) {
+    while let Some(batch) = batcher.pop_batch() {
+        let size = batch.len();
+        metrics.record_batch(size);
+        // chunk by the scorer's static batch
+        for chunk in batch.chunks(scorer.max_batch()) {
+            let inputs: Vec<Vec<u32>> = chunk
+                .iter()
+                .map(|r| r.window[..r.window.len() - 1].to_vec())
+                .collect();
+            match scorer.score(&inputs) {
+                Ok(logits) => {
+                    for (req, lg) in chunk.iter().zip(&logits) {
+                        let (nll, tokens) = window_nll(lg, &req.window);
+                        let latency_us = req.submitted.elapsed().as_micros() as u64;
+                        metrics.record_latency_us(latency_us);
+                        metrics.completed.fetch_add(1, Ordering::Relaxed);
+                        let _ = req.reply.send(ScoreResponse {
+                            id: req.id,
+                            variant: req.variant,
+                            nll,
+                            tokens,
+                            latency_us,
+                            batch_size: size,
+                            error: None,
+                        });
+                    }
+                }
+                Err(e) => {
+                    metrics.errors.fetch_add(size as u64, Ordering::Relaxed);
+                    for req in chunk {
+                        let _ = req.reply.send(ScoreResponse {
+                            id: req.id,
+                            variant: req.variant,
+                            nll: f64::NAN,
+                            tokens: 0,
+                            latency_us: req.submitted.elapsed().as_micros() as u64,
+                            batch_size: size,
+                            error: Some(format!("{e:#}")),
+                        });
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Native scorer around the dense transformer.
+pub struct NativeDenseScorer {
+    pub model: Arc<crate::model::Transformer>,
+    pub max_batch: usize,
+}
+
+impl Scorer for NativeDenseScorer {
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn seq_len(&self) -> usize {
+        self.model.cfg.seq_len
+    }
+
+    fn score(&self, inputs: &[Vec<u32>]) -> anyhow::Result<Vec<Matrix>> {
+        Ok(inputs.iter().map(|w| self.model.forward(w)).collect())
+    }
+}
+
+/// Native scorer around a compressed model.
+pub struct NativeCompressedScorer {
+    pub model: Arc<crate::model::CompressedModel>,
+    pub max_batch: usize,
+}
+
+impl Scorer for NativeCompressedScorer {
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn seq_len(&self) -> usize {
+        self.model.base.cfg.seq_len
+    }
+
+    fn score(&self, inputs: &[Vec<u32>]) -> anyhow::Result<Vec<Matrix>> {
+        Ok(inputs.iter().map(|w| self.model.forward(w)).collect())
+    }
+}
+
+/// PJRT-backed scorer (AOT executable with device-resident weights).
+impl Scorer for crate::runtime::LoadedModel {
+    fn max_batch(&self) -> usize {
+        self.batch()
+    }
+
+    fn seq_len(&self) -> usize {
+        crate::runtime::LoadedModel::seq_len(self)
+    }
+
+    fn score(&self, inputs: &[Vec<u32>]) -> anyhow::Result<Vec<Matrix>> {
+        crate::runtime::LoadedModel::score(self, inputs)
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::coordinator::batcher::BatcherConfig;
+    use crate::coordinator::request::Variant;
+    use std::sync::mpsc::channel;
+    use std::time::{Duration, Instant};
+
+    /// Mock scorer: logits put all mass on token (i+1) mod vocab — so NLL is
+    /// tiny iff the window is the successor sequence.
+    pub struct MockScorer {
+        pub vocab: usize,
+        pub seq: usize,
+        pub batch: usize,
+        pub fail: bool,
+    }
+
+    impl Scorer for MockScorer {
+        fn max_batch(&self) -> usize {
+            self.batch
+        }
+
+        fn seq_len(&self) -> usize {
+            self.seq
+        }
+
+        fn score(&self, inputs: &[Vec<u32>]) -> anyhow::Result<Vec<Matrix>> {
+            if self.fail {
+                anyhow::bail!("mock failure");
+            }
+            Ok(inputs
+                .iter()
+                .map(|w| {
+                    let mut m = Matrix::zeros(w.len(), self.vocab);
+                    for (i, &t) in w.iter().enumerate() {
+                        m.set(i, ((t + 1) as usize) % self.vocab, 30.0);
+                    }
+                    m
+                })
+                .collect())
+        }
+    }
+
+    fn mk_req(id: u64, window: Vec<u32>) -> (ScoreRequest, std::sync::mpsc::Receiver<ScoreResponse>) {
+        let (tx, rx) = channel();
+        (
+            ScoreRequest {
+                id,
+                variant: Variant::Dense,
+                window,
+                submitted: Instant::now(),
+                reply: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn worker_scores_and_replies() {
+        let batcher = Arc::new(Batcher::new(BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            capacity: 64,
+        }));
+        let metrics = Arc::new(Metrics::new());
+        // successor window => near-zero NLL under the mock
+        let w: Vec<u32> = (0..9).collect();
+        let (req, rx) = mk_req(7, w);
+        assert!(batcher.push(req).is_ok());
+        let b2 = batcher.clone();
+        let m2 = metrics.clone();
+        let h = std::thread::spawn(move || {
+            run_worker(
+                MockScorer {
+                    vocab: 16,
+                    seq: 8,
+                    batch: 4,
+                    fail: false,
+                },
+                b2,
+                m2,
+            )
+        });
+        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.id, 7);
+        assert!(resp.error.is_none());
+        assert!(resp.nll < 1e-3, "nll {}", resp.nll);
+        assert_eq!(resp.tokens, 8);
+        batcher.close();
+        h.join().unwrap();
+        assert_eq!(metrics.completed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn worker_reports_errors() {
+        let batcher = Arc::new(Batcher::new(BatcherConfig::default()));
+        let metrics = Arc::new(Metrics::new());
+        let (req, rx) = mk_req(1, (0..9).collect());
+        assert!(batcher.push(req).is_ok());
+        let b2 = batcher.clone();
+        let m2 = metrics.clone();
+        let h = std::thread::spawn(move || {
+            run_worker(
+                MockScorer {
+                    vocab: 16,
+                    seq: 8,
+                    batch: 4,
+                    fail: true,
+                },
+                b2,
+                m2,
+            )
+        });
+        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(resp.error.is_some());
+        batcher.close();
+        h.join().unwrap();
+        assert_eq!(metrics.errors.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn oversized_batches_chunked_to_scorer_limit() {
+        let batcher = Arc::new(Batcher::new(BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(20),
+            capacity: 64,
+        }));
+        let metrics = Arc::new(Metrics::new());
+        let mut rxs = Vec::new();
+        for i in 0..8 {
+            let (req, rx) = mk_req(i, (0..9).collect());
+            assert!(batcher.push(req).is_ok());
+            rxs.push(rx);
+        }
+        let b2 = batcher.clone();
+        let m2 = metrics.clone();
+        let h = std::thread::spawn(move || {
+            run_worker(
+                MockScorer {
+                    vocab: 16,
+                    seq: 8,
+                    batch: 2, // scorer narrower than the batcher
+                    fail: false,
+                },
+                b2,
+                m2,
+            )
+        });
+        for rx in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert!(resp.error.is_none());
+        }
+        batcher.close();
+        h.join().unwrap();
+        assert_eq!(metrics.completed.load(Ordering::Relaxed), 8);
+    }
+}

@@ -1,0 +1,63 @@
+//! Corpus loading (the artifact text splits produced by
+//! `python/compile/corpus.py`).
+
+use crate::model::tokenizer::ByteTokenizer;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A tokenized corpus split.
+pub struct Corpus {
+    pub tokens: Vec<u32>,
+}
+
+impl Corpus {
+    pub fn load(path: &Path) -> Result<Corpus> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading corpus {}", path.display()))?;
+        Ok(Corpus {
+            tokens: ByteTokenizer.encode_bytes(&bytes),
+        })
+    }
+
+    pub fn from_text(text: &str) -> Corpus {
+        Corpus {
+            tokens: ByteTokenizer.encode(text),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_text_tokenizes() {
+        let c = Corpus::from_text("abc");
+        assert_eq!(c.tokens, vec![97, 98, 99]);
+        assert_eq!(c.len(), 3);
+    }
+
+    #[test]
+    fn load_missing_file_errors() {
+        assert!(Corpus::load(Path::new("/nonexistent/corpus.txt")).is_err());
+    }
+
+    #[test]
+    fn loads_artifact_corpus_if_present() {
+        let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/corpus_test.txt");
+        if !path.exists() {
+            return;
+        }
+        let c = Corpus::load(&path).unwrap();
+        assert!(c.len() > 10_000);
+        assert!(c.tokens.iter().all(|&t| t < 256));
+    }
+}

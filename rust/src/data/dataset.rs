@@ -1,0 +1,61 @@
+//! Evaluation windowing: deterministic, evenly spaced token windows of
+//! length `seq + 1` (inputs + next-token targets).
+
+/// Evenly spaced windows over a token stream. Returns up to `count` windows
+/// of length `seq + 1`; deterministic so every method sees identical data.
+pub fn windows(tokens: &[u32], seq: usize, count: usize) -> Vec<Vec<u32>> {
+    let need = seq + 1;
+    if tokens.len() < need || count == 0 {
+        return Vec::new();
+    }
+    let max_start = tokens.len() - need;
+    let count = count.min(max_start + 1);
+    let stride = if count > 1 { max_start / (count - 1) } else { 0 };
+    (0..count)
+        .map(|i| {
+            let s = i * stride;
+            tokens[s..s + need].to_vec()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn produces_requested_count() {
+        let toks: Vec<u32> = (0..1000).map(|i| i % 256).collect();
+        let w = windows(&toks, 32, 8);
+        assert_eq!(w.len(), 8);
+        assert!(w.iter().all(|x| x.len() == 33));
+    }
+
+    #[test]
+    fn deterministic() {
+        let toks: Vec<u32> = (0..500).map(|i| (i * 7) % 256).collect();
+        assert_eq!(windows(&toks, 16, 5), windows(&toks, 16, 5));
+    }
+
+    #[test]
+    fn covers_start_and_end() {
+        let toks: Vec<u32> = (0..100).collect();
+        let w = windows(&toks, 9, 4);
+        assert_eq!(w[0][0], 0);
+        assert_eq!(*w.last().unwrap().last().unwrap(), 99);
+    }
+
+    #[test]
+    fn short_stream_returns_empty() {
+        let toks: Vec<u32> = (0..10).collect();
+        assert!(windows(&toks, 32, 4).is_empty());
+    }
+
+    #[test]
+    fn caps_count_to_available() {
+        let toks: Vec<u32> = (0..12).collect();
+        let w = windows(&toks, 10, 100);
+        assert!(w.len() <= 2);
+        assert!(!w.is_empty());
+    }
+}

@@ -1,0 +1,9 @@
+//! Data layer: corpus reading, evaluation windowing, and the synthetic
+//! matrix workloads the benches sweep.
+
+pub mod corpus;
+pub mod dataset;
+pub mod synthetic;
+
+pub use corpus::Corpus;
+pub use dataset::windows;

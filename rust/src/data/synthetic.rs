@@ -1,0 +1,82 @@
+//! Synthetic matrix workloads for benches and tests: matrices with the
+//! structure the paper exploits (low-rank bulk + magnitude spikes), plus
+//! shuffled-banded matrices that isolate the RCM effect.
+
+use crate::linalg::Matrix;
+use crate::util::rng::Rng;
+
+/// "Trained-projection-like" matrix: smooth low-rank bulk, small noise,
+/// and ~3N large-magnitude spikes — the profile §3.4 describes.
+pub fn trained_like(n: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    let u = Matrix::randn(n, 8.min(n), seed.wrapping_add(1));
+    let v = Matrix::randn(8.min(n), n, seed.wrapping_add(2));
+    let mut a = u.matmul(&v).scale(0.1);
+    for x in a.data.iter_mut() {
+        *x += 0.02 * rng.gaussian_f32();
+    }
+    for _ in 0..3 * n {
+        let i = rng.below(n);
+        let j = rng.below(n);
+        a.data[i * n + j] += 2.0 * rng.gaussian_f32();
+    }
+    a
+}
+
+/// Banded matrix hidden behind a random symmetric permutation — the
+/// motivating case where RCM recovers diagonal concentration.
+pub fn shuffled_banded(n: usize, half_band: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    let band = Matrix::from_fn(n, n, |i, j| {
+        if i.abs_diff(j) <= half_band {
+            rng.gaussian_f32()
+        } else {
+            0.01 * rng.gaussian_f32()
+        }
+    });
+    let mut p: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut p);
+    band.permute_sym(&p)
+}
+
+/// Exactly low-rank matrix plus Gaussian noise (rsvd stress case).
+pub fn low_rank_noise(n: usize, rank: usize, noise: f32, seed: u64) -> Matrix {
+    let u = Matrix::randn(n, rank, seed.wrapping_add(10));
+    let v = Matrix::randn(rank, n, seed.wrapping_add(11));
+    let mut a = u.matmul(&v);
+    let e = Matrix::randn(n, n, seed.wrapping_add(12));
+    for (x, y) in a.data.iter_mut().zip(&e.data) {
+        *x += noise * y;
+    }
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::svd::svd;
+
+    #[test]
+    fn trained_like_has_spikes() {
+        let a = trained_like(64, 1);
+        let max = a.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let mean: f32 =
+            a.data.iter().map(|v| v.abs()).sum::<f32>() / a.data.len() as f32;
+        assert!(max > 8.0 * mean, "max {max} mean {mean}");
+    }
+
+    #[test]
+    fn low_rank_noise_spectrum_decays() {
+        let a = low_rank_noise(32, 4, 0.01, 2);
+        let f = svd(&a);
+        assert!(f.s[3] > 10.0 * f.s[4], "σ4 {} σ5 {}", f.s[3], f.s[4]);
+    }
+
+    #[test]
+    fn shuffled_banded_deterministic() {
+        assert_eq!(
+            shuffled_banded(32, 2, 3).data,
+            shuffled_banded(32, 2, 3).data
+        );
+    }
+}

@@ -1,0 +1,8 @@
+//! Evaluation harness: perplexity over corpus windows and the
+//! storage-vs-PPL sweeps that regenerate the paper's figures.
+
+pub mod perplexity;
+pub mod sweep;
+
+pub use perplexity::{perplexity, perplexity_parallel, PplResult};
+pub use sweep::{sweep, SweepPoint};

@@ -1,0 +1,154 @@
+//! Perplexity evaluation (the paper's §5.1 metric) over deterministic
+//! corpus windows, with a thread-parallel variant for sweeps.
+
+use crate::linalg::Matrix;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Perplexity result: exp(mean NLL in nats/token).
+#[derive(Clone, Copy, Debug)]
+pub struct PplResult {
+    pub ppl: f64,
+    pub mean_nll: f64,
+    pub tokens: usize,
+}
+
+/// Mean next-token NLL of one window given its logits [t, vocab];
+/// targets are `window[1..=t]`.
+pub fn window_nll(logits: &Matrix, window: &[u32]) -> (f64, usize) {
+    let t = logits.rows;
+    assert!(window.len() >= t + 1);
+    let mut total = 0.0f64;
+    for i in 0..t {
+        let row = logits.row(i);
+        let target = window[i + 1] as usize;
+        // log-softmax, numerically stable
+        let maxv = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+        let lse: f64 = row
+            .iter()
+            .map(|&v| ((v - maxv) as f64).exp())
+            .sum::<f64>()
+            .ln()
+            + maxv as f64;
+        total += lse - row[target] as f64;
+    }
+    (total, t)
+}
+
+/// Perplexity over windows with any forward function (dense/compressed/HLO).
+pub fn perplexity<F: Fn(&[u32]) -> Matrix>(windows: &[Vec<u32>], fwd: F) -> PplResult {
+    let mut nll = 0.0f64;
+    let mut count = 0usize;
+    for w in windows {
+        let logits = fwd(&w[..w.len() - 1]);
+        let (n, t) = window_nll(&logits, w);
+        nll += n;
+        count += t;
+    }
+    finish(nll, count)
+}
+
+/// Thread-parallel perplexity (windows are independent).
+pub fn perplexity_parallel<F: Fn(&[u32]) -> Matrix + Sync>(
+    windows: &[Vec<u32>],
+    fwd: F,
+    threads: usize,
+) -> PplResult {
+    if threads <= 1 || windows.len() <= 1 {
+        return perplexity(windows, fwd);
+    }
+    let next = AtomicUsize::new(0);
+    let results: Vec<(f64, usize)> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for _ in 0..threads.min(windows.len()) {
+            let next = &next;
+            let fwd = &fwd;
+            handles.push(scope.spawn(move || {
+                let mut nll = 0.0f64;
+                let mut count = 0usize;
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= windows.len() {
+                        break;
+                    }
+                    let w = &windows[i];
+                    let logits = fwd(&w[..w.len() - 1]);
+                    let (n, t) = window_nll(&logits, w);
+                    nll += n;
+                    count += t;
+                }
+                (nll, count)
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let nll: f64 = results.iter().map(|r| r.0).sum();
+    let count: usize = results.iter().map(|r| r.1).sum();
+    finish(nll, count)
+}
+
+fn finish(nll: f64, count: usize) -> PplResult {
+    let mean = if count > 0 { nll / count as f64 } else { f64::NAN };
+    PplResult {
+        ppl: mean.exp(),
+        mean_nll: mean,
+        tokens: count,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// fwd that always predicts uniform distribution
+    fn uniform_fwd(vocab: usize) -> impl Fn(&[u32]) -> Matrix {
+        move |tokens: &[u32]| Matrix::zeros(tokens.len(), vocab)
+    }
+
+    /// fwd that puts all mass on the true next token (needs the window)
+    fn oracle_logits(window: &[u32], vocab: usize) -> Matrix {
+        let t = window.len() - 1;
+        let mut m = Matrix::zeros(t, vocab);
+        for i in 0..t {
+            m.set(i, window[i + 1] as usize, 50.0);
+        }
+        m
+    }
+
+    #[test]
+    fn uniform_model_ppl_equals_vocab() {
+        let windows: Vec<Vec<u32>> = vec![(0..33).map(|i| i % 7).collect()];
+        let r = perplexity(&windows, uniform_fwd(128));
+        assert!((r.ppl - 128.0).abs() < 1e-6, "{}", r.ppl);
+    }
+
+    #[test]
+    fn oracle_model_ppl_near_one() {
+        let w: Vec<u32> = (0..17).map(|i| (i * 3) % 11).collect();
+        let windows = vec![w.clone()];
+        let r = perplexity(&windows, |toks| {
+            let mut full = toks.to_vec();
+            full.push(w[toks.len()]);
+            oracle_logits(&full, 16)
+        });
+        assert!(r.ppl < 1.001, "{}", r.ppl);
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let windows: Vec<Vec<u32>> = (0..6)
+            .map(|s| (0..21).map(|i| ((i + s) * 5) % 64).collect())
+            .collect();
+        let f = uniform_fwd(64);
+        let serial = perplexity(&windows, &f);
+        let par = perplexity_parallel(&windows, &f, 4);
+        assert!((serial.ppl - par.ppl).abs() < 1e-9);
+        assert_eq!(serial.tokens, par.tokens);
+    }
+
+    #[test]
+    fn token_count_accumulates() {
+        let windows: Vec<Vec<u32>> = vec![vec![0; 11], vec![1; 11]];
+        let r = perplexity(&windows, uniform_fwd(4));
+        assert_eq!(r.tokens, 20);
+    }
+}

@@ -1,0 +1,212 @@
+//! Storage-vs-perplexity sweeps — the engine behind Fig 2 / Fig 3 and the
+//! headline table.
+
+use crate::compress::{CompressorConfig, Method};
+use crate::eval::perplexity::{perplexity_parallel, PplResult};
+use crate::model::{CompressedModel, Transformer};
+use std::sync::Arc;
+
+/// One point of the storage-PPL plane (a marker in the paper's Fig 3).
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub method: Method,
+    pub rank: usize,
+    pub sparsity: f64,
+    pub depth: usize,
+    pub ppl: f64,
+    pub mean_nll: f64,
+    /// compressed q/k/v bytes (fp16 accounting incl. indices)
+    pub qkv_bytes: usize,
+    pub qkv_dense_bytes: usize,
+    /// whole-model storage ratio (non-qkv stays dense)
+    pub model_ratio: f64,
+    pub mean_rel_error: f64,
+    pub compress_secs: f64,
+}
+
+impl SweepPoint {
+    pub fn qkv_ratio(&self) -> f64 {
+        self.qkv_bytes as f64 / self.qkv_dense_bytes as f64
+    }
+}
+
+/// Evaluate one (method, config) cell.
+pub fn eval_point(
+    base: &Arc<Transformer>,
+    method: Method,
+    cfg: CompressorConfig,
+    windows: &[Vec<u32>],
+    threads: usize,
+) -> SweepPoint {
+    let t0 = std::time::Instant::now();
+    let result: (PplResult, usize, usize, f64, f64);
+    if method == Method::Dense {
+        let ppl = perplexity_parallel(windows, |toks| base.forward(toks), threads);
+        let qkv_dense = base.cfg.qkv_params() * crate::hss::storage::VALUE_BYTES;
+        result = (ppl, qkv_dense, qkv_dense, 1.0, 0.0);
+    } else {
+        let cm = CompressedModel::compress(base.clone(), method, cfg);
+        let compress_secs = t0.elapsed().as_secs_f64();
+        let ppl = perplexity_parallel(windows, |toks| cm.forward(toks), threads);
+        result = (
+            ppl,
+            cm.qkv_bytes(),
+            cm.qkv_dense_bytes(),
+            cm.model_storage_ratio(),
+            cm.mean_rel_error(),
+        );
+        return SweepPoint {
+            method,
+            rank: cfg.rank,
+            sparsity: cfg.sparsity,
+            depth: cfg.depth,
+            ppl: result.0.ppl,
+            mean_nll: result.0.mean_nll,
+            qkv_bytes: result.1,
+            qkv_dense_bytes: result.2,
+            model_ratio: result.3,
+            mean_rel_error: result.4,
+            compress_secs,
+        };
+    }
+    SweepPoint {
+        method,
+        rank: 0,
+        sparsity: 0.0,
+        depth: 0,
+        ppl: result.0.ppl,
+        mean_nll: result.0.mean_nll,
+        qkv_bytes: result.1,
+        qkv_dense_bytes: result.2,
+        model_ratio: result.3,
+        mean_rel_error: result.4,
+        compress_secs: 0.0,
+    }
+}
+
+/// Grid sweep: every method × config cell (dense evaluated once).
+pub fn sweep(
+    base: &Arc<Transformer>,
+    methods: &[Method],
+    configs: &[CompressorConfig],
+    windows: &[Vec<u32>],
+    threads: usize,
+) -> Vec<SweepPoint> {
+    let mut out = Vec::new();
+    for &m in methods {
+        if m == Method::Dense {
+            out.push(eval_point(base, m, CompressorConfig::default(), windows, threads));
+            continue;
+        }
+        for &cfg in configs {
+            out.push(eval_point(base, m, cfg, windows, threads));
+        }
+    }
+    out
+}
+
+/// CSV emitter (plot-ready, one row per point).
+pub fn to_csv(points: &[SweepPoint]) -> String {
+    let mut s = String::from(
+        "method,rank,sparsity,depth,ppl,mean_nll,qkv_bytes,qkv_dense_bytes,qkv_ratio,model_ratio,rel_error,compress_secs\n",
+    );
+    for p in points {
+        s.push_str(&format!(
+            "{},{},{},{},{:.6},{:.6},{},{},{:.4},{:.4},{:.6},{:.3}\n",
+            p.method,
+            p.rank,
+            p.sparsity,
+            p.depth,
+            p.ppl,
+            p.mean_nll,
+            p.qkv_bytes,
+            p.qkv_dense_bytes,
+            p.qkv_ratio(),
+            p.model_ratio,
+            p.mean_rel_error,
+            p.compress_secs
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::windows as mk_windows;
+    use crate::model::ModelConfig;
+
+    fn tiny() -> (Arc<Transformer>, Vec<Vec<u32>>) {
+        let cfg = ModelConfig {
+            vocab: 64,
+            d_model: 32,
+            n_heads: 4,
+            n_layers: 1,
+            d_ff: 64,
+            seq_len: 16,
+        };
+        let m = Arc::new(Transformer::random(cfg, 1));
+        let toks: Vec<u32> = (0..300).map(|i| (i * 13 + i / 7) as u32 % 64).collect();
+        let w = mk_windows(&toks, 16, 3);
+        (m, w)
+    }
+
+    #[test]
+    fn sweep_produces_all_cells() {
+        let (base, w) = tiny();
+        let cfgs = [CompressorConfig {
+            rank: 4,
+            sparsity: 0.1,
+            depth: 1,
+            min_leaf: 4,
+            ..Default::default()
+        }];
+        let pts = sweep(
+            &base,
+            &[Method::Dense, Method::SSvd, Method::SHssRcm],
+            &cfgs,
+            &w,
+            2,
+        );
+        assert_eq!(pts.len(), 3);
+        assert!(pts.iter().all(|p| p.ppl.is_finite() && p.ppl > 0.0));
+    }
+
+    #[test]
+    fn dense_point_has_unit_ratio() {
+        let (base, w) = tiny();
+        let p = eval_point(&base, Method::Dense, CompressorConfig::default(), &w, 1);
+        assert!((p.model_ratio - 1.0).abs() < 1e-12);
+        assert!((p.qkv_ratio() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn near_exact_compression_matches_dense_ppl() {
+        let (base, w) = tiny();
+        let dense = eval_point(&base, Method::Dense, CompressorConfig::default(), &w, 1);
+        let cfg = CompressorConfig {
+            rank: 16,
+            sparsity: 0.2,
+            depth: 1,
+            hss_rsvd: false,
+            min_leaf: 4,
+            ..Default::default()
+        };
+        let comp = eval_point(&base, Method::SHssRcm, cfg, &w, 1);
+        assert!(
+            (comp.ppl - dense.ppl).abs() / dense.ppl < 0.02,
+            "dense {} vs compressed {}",
+            dense.ppl,
+            comp.ppl
+        );
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let (base, w) = tiny();
+        let pts = sweep(&base, &[Method::Dense], &[], &w, 1);
+        let csv = to_csv(&pts);
+        assert!(csv.starts_with("method,"));
+        assert_eq!(csv.lines().count(), 2);
+    }
+}

@@ -1,0 +1,243 @@
+//! HSS matrix-vector multiply — the paper's §4.4 inference operation.
+//!
+//! `y = S x + Pᵀ([c0 x0 + U0(R0 x1); c1 x1 + U1(R1 x0)])` recursively.
+//! The workspace-based variant reuses per-level scratch buffers so the
+//! request-path apply performs no allocation after warmup.
+
+use crate::hss::HssNode;
+
+impl HssNode {
+    /// y = A x (allocating convenience wrapper).
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        let mut ws = Workspace::for_node(self);
+        let mut y = vec![0.0; self.n()];
+        self.matvec_with(x, &mut y, &mut ws);
+        y
+    }
+
+    /// y = A x using a reusable workspace (no allocation after warmup).
+    pub fn matvec_with(&self, x: &[f32], y: &mut [f32], ws: &mut Workspace) {
+        assert_eq!(x.len(), self.n());
+        assert_eq!(y.len(), self.n());
+        ws.ensure(self);
+        self.apply_rec(x, y, &mut ws.levels);
+    }
+
+    fn apply_rec(&self, x: &[f32], y: &mut [f32], levels: &mut [LevelBufs]) {
+        match self {
+            HssNode::Leaf { d } => {
+                d.matvec_into(x, y);
+            }
+            HssNode::Branch {
+                n,
+                sparse,
+                perm,
+                u0,
+                r0,
+                u1,
+                r1,
+                c0,
+                c1,
+            } => {
+                let n0 = n / 2;
+                let (buf, rest) = levels
+                    .split_first_mut()
+                    .expect("workspace depth too small");
+                let xp = &mut buf.xp[..*n];
+                let yp = &mut buf.yp[..*n];
+                let t = &mut buf.t[..];
+
+                // (2) permute input down: xp = x[perm]
+                perm.apply_into(x, xp);
+
+                // (3) recurse into diagonal blocks of the permuted residual
+                let (x0, x1) = xp.split_at(n0);
+                let (y0, y1) = yp.split_at_mut(n0);
+                c0.apply_rec(x0, y0, rest);
+                c1.apply_rec(x1, y1, rest);
+
+                // couplings: y0 += U0 (R0 x1), y1 += U1 (R1 x0)
+                let t0 = &mut t[..r0.rows];
+                r0.matvec_into(x1, t0);
+                u0.matvec_add(t0, y0);
+                let t1 = &mut t[..r1.rows];
+                r1.matvec_into(x0, t1);
+                u1.matvec_add(t1, y1);
+
+                // (4) inverse-permute up: y[perm[i]] = yp[i]
+                perm.apply_inv_into(yp, y);
+
+                // (1)+(5) add the spike contribution in original coordinates
+                sparse.matvec_add(x, y);
+            }
+        }
+    }
+
+    /// Y = A·X column-wise for a batch of input columns (eval batching).
+    pub fn matmat(&self, x_cols: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        let mut ws = Workspace::for_node(self);
+        x_cols
+            .iter()
+            .map(|x| {
+                let mut y = vec![0.0; self.n()];
+                self.matvec_with(x, &mut y, &mut ws);
+                y
+            })
+            .collect()
+    }
+}
+
+/// Per-level scratch buffers; level `i` serves all nodes at depth `i`
+/// (siblings run sequentially, so one buffer set per level suffices).
+#[derive(Default)]
+pub struct Workspace {
+    levels: Vec<LevelBufs>,
+}
+
+struct LevelBufs {
+    xp: Vec<f32>,
+    yp: Vec<f32>,
+    t: Vec<f32>,
+}
+
+impl Workspace {
+    pub fn for_node(node: &HssNode) -> Workspace {
+        let mut ws = Workspace::default();
+        ws.ensure(node);
+        ws
+    }
+
+    /// Grow buffers to fit `node` (idempotent).
+    pub fn ensure(&mut self, node: &HssNode) {
+        let mut dims: Vec<(usize, usize)> = Vec::new(); // (n, max coupling rank) per level
+        collect_dims(node, 0, &mut dims);
+        for (lvl, (n, k)) in dims.into_iter().enumerate() {
+            if self.levels.len() <= lvl {
+                self.levels.push(LevelBufs {
+                    xp: vec![0.0; n],
+                    yp: vec![0.0; n],
+                    t: vec![0.0; k],
+                });
+            } else {
+                let b = &mut self.levels[lvl];
+                if b.xp.len() < n {
+                    b.xp.resize(n, 0.0);
+                    b.yp.resize(n, 0.0);
+                }
+                if b.t.len() < k {
+                    b.t.resize(k, 0.0);
+                }
+            }
+        }
+    }
+}
+
+fn collect_dims(node: &HssNode, level: usize, dims: &mut Vec<(usize, usize)>) {
+    if let HssNode::Branch {
+        n, u0, u1, c0, c1, ..
+    } = node
+    {
+        let k = u0.cols.max(u1.cols).max(1);
+        if dims.len() <= level {
+            dims.push((*n, k));
+        } else {
+            dims[level].0 = dims[level].0.max(*n);
+            dims[level].1 = dims[level].1.max(k);
+        }
+        collect_dims(c0, level + 1, dims);
+        collect_dims(c1, level + 1, dims);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hss::build::tests::trained_like;
+    use crate::hss::{build, HssOptions};
+    use crate::util::proptest::{check, slices_close};
+    use crate::util::rng::Rng;
+
+    fn opts(rank: usize, sp: f64, depth: usize, rcm: bool) -> HssOptions {
+        HssOptions {
+            rank,
+            sparsity: sp,
+            depth,
+            use_rcm: rcm,
+            min_leaf: 4,
+            rsvd: false,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn matvec_equals_reconstruct_times_x() {
+        check(10, |rng| {
+            let n = 32 + 16 * rng.below(3);
+            let a = trained_like(n, rng.next_u64());
+            let depth = 1 + rng.below(3);
+            let rcm = rng.below(2) == 1;
+            let node = build(&a, &opts(8, 0.1, depth, rcm));
+            let rec = node.reconstruct();
+            let x: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+            let expect = rec.matvec(&x);
+            let got = node.matvec(&x);
+            slices_close(&got, &expect, 1e-3, 1e-3, "hss matvec")
+        });
+    }
+
+    #[test]
+    fn workspace_reuse_is_consistent() {
+        let a = trained_like(64, 9);
+        let node = build(&a, &opts(8, 0.1, 3, true));
+        let mut ws = Workspace::for_node(&node);
+        let mut rng = Rng::new(1);
+        let mut first: Option<Vec<f32>> = None;
+        let x: Vec<f32> = (0..64).map(|_| rng.gaussian_f32()).collect();
+        for _ in 0..3 {
+            let mut y = vec![0.0; 64];
+            node.matvec_with(&x, &mut y, &mut ws);
+            if let Some(f) = &first {
+                assert_eq!(&y, f);
+            } else {
+                first = Some(y);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_input_gives_zero() {
+        let a = trained_like(32, 10);
+        let node = build(&a, &opts(4, 0.2, 2, true));
+        let y = node.matvec(&vec![0.0; 32]);
+        assert!(y.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn linearity() {
+        let a = trained_like(32, 11);
+        let node = build(&a, &opts(6, 0.1, 2, false));
+        let mut rng = Rng::new(2);
+        let x1: Vec<f32> = (0..32).map(|_| rng.gaussian_f32()).collect();
+        let x2: Vec<f32> = (0..32).map(|_| rng.gaussian_f32()).collect();
+        let sum: Vec<f32> = x1.iter().zip(&x2).map(|(a, b)| a + b).collect();
+        let y1 = node.matvec(&x1);
+        let y2 = node.matvec(&x2);
+        let ysum = node.matvec(&sum);
+        let expect: Vec<f32> = y1.iter().zip(&y2).map(|(a, b)| a + b).collect();
+        slices_close(&ysum, &expect, 1e-4, 1e-4, "linearity").unwrap();
+    }
+
+    #[test]
+    fn matmat_matches_column_matvecs() {
+        let a = trained_like(32, 12);
+        let node = build(&a, &opts(6, 0.1, 2, true));
+        let mut rng = Rng::new(3);
+        let cols: Vec<Vec<f32>> = (0..4)
+            .map(|_| (0..32).map(|_| rng.gaussian_f32()).collect())
+            .collect();
+        let ys = node.matmat(&cols);
+        for (x, y) in cols.iter().zip(&ys) {
+            assert_eq!(&node.matvec(x), y);
+        }
+    }
+}

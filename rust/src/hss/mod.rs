@@ -1,0 +1,17 @@
+//! Hierarchically Semi-Separable (HSS) core — the paper's contribution.
+//!
+//! A sparse-plus-HSS tree ([`HssNode`]) stores, per recursion level:
+//! the level's COO spike matrix S, the RCM permutation P of the residual,
+//! low-rank factors U·R of the two off-diagonal blocks (rank halving each
+//! level), and recurses into the diagonal blocks until `min_leaf`.
+//!
+//! `y = A x` follows §4.4/§4.5 of the paper: sparse multiply, permute down,
+//! recurse + thin couplings, inverse-permute up — O(N·r) total.
+
+pub mod build;
+pub mod matvec;
+pub mod node;
+pub mod storage;
+
+pub use build::{build, HssOptions};
+pub use node::HssNode;

@@ -1,0 +1,80 @@
+//! The sparse-plus-HSS tree node and dense reconstruction (for testing).
+
+use crate::linalg::{Matrix, Permutation};
+use crate::sparse::Csr;
+
+/// One node of the sparse-plus-HSS tree over an n×n block.
+#[derive(Clone, Debug)]
+pub enum HssNode {
+    /// Undecomposed dense diagonal block (recursion floor).
+    Leaf { d: Matrix },
+    /// Split node: `A ≈ S + Pᵀ [[c0, u0·r0], [u1·r1, c1]] P` where P is the
+    /// RCM (or identity) permutation applied to the residual A − S.
+    Branch {
+        n: usize,
+        /// this level's spike matrix, in this node's (pre-permutation) coords
+        sparse: Csr,
+        /// residual permutation: resid_p = resid[perm][:, perm]
+        perm: Permutation,
+        /// off-diagonal factors of the permuted residual:
+        /// A12 ≈ u0 (n0×k) · r0 (k×n1), A21 ≈ u1 (n1×k) · r1 (k×n0)
+        u0: Matrix,
+        r0: Matrix,
+        u1: Matrix,
+        r1: Matrix,
+        c0: Box<HssNode>,
+        c1: Box<HssNode>,
+    },
+}
+
+impl HssNode {
+    pub fn n(&self) -> usize {
+        match self {
+            HssNode::Leaf { d } => d.rows,
+            HssNode::Branch { n, .. } => *n,
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        match self {
+            HssNode::Leaf { .. } => 0,
+            HssNode::Branch { c0, c1, .. } => 1 + c0.depth().max(c1.depth()),
+        }
+    }
+
+    pub fn num_leaves(&self) -> usize {
+        match self {
+            HssNode::Leaf { .. } => 1,
+            HssNode::Branch { c0, c1, .. } => c0.num_leaves() + c1.num_leaves(),
+        }
+    }
+
+    /// Dense matrix represented by the tree (testing/verification only).
+    pub fn reconstruct(&self) -> Matrix {
+        match self {
+            HssNode::Leaf { d } => d.clone(),
+            HssNode::Branch {
+                n,
+                sparse,
+                perm,
+                u0,
+                r0,
+                u1,
+                r1,
+                c0,
+                c1,
+            } => {
+                let n0 = n / 2;
+                let mut rp = Matrix::zeros(*n, *n);
+                rp.set_block(0, 0, &c0.reconstruct());
+                rp.set_block(n0, n0, &c1.reconstruct());
+                rp.set_block(0, n0, &u0.matmul(r0));
+                rp.set_block(n0, 0, &u1.matmul(r1));
+                // undo the symmetric permutation: resid[perm[i], perm[j]] = rp[i, j]
+                let inv = perm.inverse();
+                let resid = rp.permute_sym(inv.indices());
+                sparse.to_dense().add(&resid)
+            }
+        }
+    }
+}

@@ -1,0 +1,154 @@
+//! Storage accounting for the sparse-plus-HSS representation.
+//!
+//! Matches the paper's "storage" axis: parameters are counted exactly and
+//! bytes assume fp16 values. Sparse COO entries pay their index overhead
+//! (2×u16 per entry at N ≤ 65536) and each level's permutation costs N·u16.
+
+use crate::hss::HssNode;
+
+/// Bytes per stored value (paper: fp16 end-to-end).
+pub const VALUE_BYTES: usize = 2;
+/// Bytes per sparse/permutation index (u16 suffices for N ≤ 65536).
+pub const INDEX_BYTES: usize = 2;
+
+/// Storage breakdown in parameters and bytes.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Storage {
+    /// stored numeric parameters (values only)
+    pub params: usize,
+    /// total bytes incl. index/permutation overhead at fp16
+    pub bytes: usize,
+    pub sparse_nnz: usize,
+    pub lowrank_params: usize,
+    pub leaf_params: usize,
+    pub perm_entries: usize,
+}
+
+impl Storage {
+    fn add(&mut self, other: Storage) {
+        self.params += other.params;
+        self.bytes += other.bytes;
+        self.sparse_nnz += other.sparse_nnz;
+        self.lowrank_params += other.lowrank_params;
+        self.leaf_params += other.leaf_params;
+        self.perm_entries += other.perm_entries;
+    }
+}
+
+impl HssNode {
+    /// Full storage accounting for this tree.
+    pub fn storage(&self) -> Storage {
+        match self {
+            HssNode::Leaf { d } => {
+                let params = d.data.len();
+                Storage {
+                    params,
+                    bytes: params * VALUE_BYTES,
+                    leaf_params: params,
+                    ..Default::default()
+                }
+            }
+            HssNode::Branch {
+                sparse,
+                perm,
+                u0,
+                r0,
+                u1,
+                r1,
+                c0,
+                c1,
+                ..
+            } => {
+                let nnz = sparse.nnz();
+                let lr = u0.data.len() + r0.data.len() + u1.data.len() + r1.data.len();
+                let perm_entries = if perm.is_identity() { 0 } else { perm.len() };
+                let mut s = Storage {
+                    params: nnz + lr,
+                    bytes: (nnz + lr) * VALUE_BYTES
+                        + nnz * 2 * INDEX_BYTES
+                        + perm_entries * INDEX_BYTES,
+                    sparse_nnz: nnz,
+                    lowrank_params: lr,
+                    leaf_params: 0,
+                    perm_entries,
+                };
+                s.add(c0.storage());
+                s.add(c1.storage());
+                s
+            }
+        }
+    }
+
+    /// Dense baseline bytes for the same matrix at fp16.
+    pub fn dense_bytes(&self) -> usize {
+        self.n() * self.n() * VALUE_BYTES
+    }
+
+    /// params(HSS) / params(dense) — the paper's storage axis (stored
+    /// values at a common precision). `storage().bytes` additionally
+    /// accounts for sparse-index and permutation overhead.
+    pub fn storage_ratio(&self) -> f64 {
+        self.storage().params as f64 / (self.n() * self.n()) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::hss::build::tests::trained_like;
+    use crate::hss::{build, HssOptions};
+
+    fn opts(rank: usize, sp: f64, depth: usize) -> HssOptions {
+        HssOptions {
+            rank,
+            sparsity: sp,
+            depth,
+            min_leaf: 4,
+            rsvd: false,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn leaf_only_matches_dense_params() {
+        let a = trained_like(32, 1);
+        let node = build(&a, &opts(8, 0.1, 0));
+        let s = node.storage();
+        assert_eq!(s.params, 32 * 32);
+        assert_eq!(s.leaf_params, 32 * 32);
+        assert_eq!(s.sparse_nnz, 0);
+    }
+
+    #[test]
+    fn compresses_at_low_rank() {
+        let a = trained_like(128, 2);
+        let node = build(&a, &opts(4, 0.05, 3));
+        assert!(
+            node.storage_ratio() < 1.0,
+            "ratio {}",
+            node.storage_ratio()
+        );
+    }
+
+    #[test]
+    fn storage_monotone_in_rank() {
+        let a = trained_like(64, 3);
+        let s1 = build(&a, &opts(2, 0.1, 2)).storage().bytes;
+        let s2 = build(&a, &opts(8, 0.1, 2)).storage().bytes;
+        assert!(s1 < s2, "{s1} vs {s2}");
+    }
+
+    #[test]
+    fn storage_monotone_in_sparsity() {
+        let a = trained_like(64, 4);
+        let s1 = build(&a, &opts(4, 0.05, 2)).storage().bytes;
+        let s2 = build(&a, &opts(4, 0.30, 2)).storage().bytes;
+        assert!(s1 < s2, "{s1} vs {s2}");
+    }
+
+    #[test]
+    fn breakdown_sums_to_params() {
+        let a = trained_like(64, 5);
+        let s = build(&a, &opts(8, 0.1, 2)).storage();
+        assert_eq!(s.params, s.sparse_nnz + s.lowrank_params + s.leaf_params);
+    }
+}

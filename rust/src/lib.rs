@@ -1,0 +1,51 @@
+//! # hisolo — Hierarchical Sparse Plus Low-Rank compression of LLMs
+//!
+//! A production-shaped reproduction of *"Hierarchical Sparse Plus Low Rank
+//! Compression of LLM"* (Kumar & Gupta, CODS '25) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! - **L1/L2 (build path, python/)** — Pallas kernels + the JAX transformer
+//!   are lowered once to HLO text artifacts (`make artifacts`).
+//! - **L3 (this crate)** — everything at runtime: the compression library
+//!   itself (native [`linalg`], [`sparse`], [`hss`], [`compress`]), the
+//!   model/eval harness ([`model`], [`data`], [`eval`]), the PJRT runtime
+//!   ([`runtime`]) and the serving coordinator ([`coordinator`]).
+//!
+//! The paper's method, in one expression:
+//!
+//! ```text
+//! W  ≈  S  +  Pᵀ · [ D₀      U₀R₀ᵀ ] · P         (recursively, per level:
+//!             [ U₁R₁ᵀ   D₁    ]                 sparse spikes out, RCM
+//!                                               reorder, 2×2 split, low-rank
+//!                                               off-diagonals, rank halves)
+//! ```
+//!
+//! Quickstart (after `make artifacts`):
+//!
+//! ```no_run
+//! use hisolo::compress::{Compressor, CompressorConfig, Method};
+//! use hisolo::linalg::Matrix;
+//!
+//! let w = Matrix::randn(256, 256, 42);
+//! let cfg = CompressorConfig { rank: 32, sparsity: 0.3, ..Default::default() };
+//! let compressed = Compressor::new(cfg).compress(&w, Method::SHssRcm);
+//! let x = vec![1.0f32; 256];
+//! let y = compressed.matvec(&x);
+//! println!("storage: {} of dense, rel err {:.4}",
+//!          compressed.storage_ratio(), compressed.rel_error(&w));
+//! # let _ = y;
+//! ```
+
+pub mod compress;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod hss;
+pub mod linalg;
+pub mod model;
+pub mod runtime;
+pub mod sparse;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,385 @@
+//! Row-major dense f32 matrix with the operations the stack needs.
+//!
+//! Matmul is cache-blocked with a transposed-B microkernel; `matvec` and
+//! `matvec_into` are the allocation-free hot-path variants used by the HSS
+//! apply and the transformer forward pass.
+
+use crate::util::rng::Rng;
+use std::fmt;
+
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Matrix({}x{})", self.rows, self.cols)
+    }
+}
+
+/// matmul block sizes (tuned in EXPERIMENTS.md §Perf)
+const MC: usize = 64;
+const NC: usize = 256;
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Matrix {
+        assert_eq!(data.len(), rows * cols, "data length mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    pub fn from_fn<F: FnMut(usize, usize) -> f32>(rows: usize, cols: usize, mut f: F) -> Matrix {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    pub fn identity(n: usize) -> Matrix {
+        Matrix::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    /// Standard-Gaussian random matrix (deterministic by seed).
+    pub fn randn(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut m = Matrix::zeros(rows, cols);
+        rng.fill_gaussian(&mut m.data);
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn is_square(&self) -> bool {
+        self.rows == self.cols
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        // simple blocked transpose for cache friendliness
+        const B: usize = 32;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        t.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// Copy a contiguous submatrix [r0..r1) x [c0..c1).
+    pub fn slice(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Matrix {
+        assert!(r1 <= self.rows && c1 <= self.cols && r0 <= r1 && c0 <= c1);
+        let mut out = Matrix::zeros(r1 - r0, c1 - c0);
+        for i in r0..r1 {
+            out.row_mut(i - r0)
+                .copy_from_slice(&self.row(i)[c0..c1]);
+        }
+        out
+    }
+
+    /// Write `src` into the block starting at (r0, c0).
+    pub fn set_block(&mut self, r0: usize, c0: usize, src: &Matrix) {
+        assert!(r0 + src.rows <= self.rows && c0 + src.cols <= self.cols);
+        for i in 0..src.rows {
+            self.row_mut(r0 + i)[c0..c0 + src.cols].copy_from_slice(src.row(i));
+        }
+    }
+
+    // --- arithmetic ---------------------------------------------------------
+
+    pub fn add(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a + b)
+            .collect();
+        Matrix::from_vec(self.rows, self.cols, data)
+    }
+
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a - b)
+            .collect();
+        Matrix::from_vec(self.rows, self.cols, data)
+    }
+
+    pub fn scale(&self, s: f32) -> Matrix {
+        Matrix::from_vec(self.rows, self.cols, self.data.iter().map(|a| a * s).collect())
+    }
+
+    /// C = A @ B, cache-blocked over a transposed copy of B.
+    pub fn matmul(&self, b: &Matrix) -> Matrix {
+        assert_eq!(self.cols, b.rows, "matmul shape mismatch");
+        let mut c = Matrix::zeros(self.rows, b.cols);
+        self.matmul_into(b, &mut c);
+        c
+    }
+
+    /// C = A @ B without allocating C (C must be pre-sized; it is overwritten).
+    pub fn matmul_into(&self, b: &Matrix, c: &mut Matrix) {
+        assert_eq!(self.cols, b.rows, "matmul shape mismatch");
+        assert_eq!((c.rows, c.cols), (self.rows, b.cols), "output shape mismatch");
+        let bt = b.transpose();
+        self.matmul_bt_into(&bt, c);
+    }
+
+    /// C = A @ Bᵀ given B already transposed — the dot-product microkernel.
+    pub fn matmul_bt_into(&self, bt: &Matrix, c: &mut Matrix) {
+        assert_eq!(self.cols, bt.cols, "inner dim mismatch");
+        assert_eq!((c.rows, c.cols), (self.rows, bt.rows));
+        let k = self.cols;
+        for ib in (0..self.rows).step_by(MC) {
+            let imax = (ib + MC).min(self.rows);
+            for jb in (0..bt.rows).step_by(NC) {
+                let jmax = (jb + NC).min(bt.rows);
+                for i in ib..imax {
+                    let arow = self.row(i);
+                    let crow = c.row_mut(i);
+                    for j in jb..jmax {
+                        let brow = bt.row(j);
+                        crow[j] = dot(arow, brow, k);
+                    }
+                }
+            }
+        }
+    }
+
+    /// y = A @ x (allocates y).
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        let mut y = vec![0.0; self.rows];
+        self.matvec_into(x, &mut y);
+        y
+    }
+
+    /// y = A @ x without allocation; y is overwritten.
+    pub fn matvec_into(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        for i in 0..self.rows {
+            y[i] = dot(self.row(i), x, self.cols);
+        }
+    }
+
+    /// y += A @ x.
+    pub fn matvec_add(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        for i in 0..self.rows {
+            y[i] += dot(self.row(i), x, self.cols);
+        }
+    }
+
+    /// y = Aᵀ @ x without materializing the transpose.
+    pub fn matvec_t(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.rows);
+        let mut y = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let xi = x[i];
+            if xi != 0.0 {
+                let row = self.row(i);
+                for j in 0..self.cols {
+                    y[j] += xi * row[j];
+                }
+            }
+        }
+        y
+    }
+
+    /// Symmetric permutation A[p, p] (rows and columns).
+    pub fn permute_sym(&self, perm: &[usize]) -> Matrix {
+        assert!(self.is_square());
+        let n = self.rows;
+        assert_eq!(perm.len(), n);
+        let mut out = Matrix::zeros(n, n);
+        for i in 0..n {
+            let src = self.row(perm[i]);
+            let dst = out.row_mut(i);
+            for j in 0..n {
+                dst[j] = src[perm[j]];
+            }
+        }
+        out
+    }
+}
+
+/// Unrolled dot product — the innermost kernel of everything dense.
+/// Eight independent accumulators over exact slices: with
+/// `-C target-cpu=native` LLVM turns this into AVX2/AVX-512 FMA lanes
+/// (measured in EXPERIMENTS.md §Perf).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32], k: usize) -> f32 {
+    let a = &a[..k];
+    let b = &b[..k];
+    let mut acc = [0.0f32; 8];
+    let chunks = k / 8;
+    for c in 0..chunks {
+        let i = c * 8;
+        let (aa, bb) = (&a[i..i + 8], &b[i..i + 8]);
+        for l in 0..8 {
+            acc[l] += aa[l] * bb[l];
+        }
+    }
+    let mut total = acc.iter().sum::<f32>();
+    for i in chunks * 8..k {
+        total += a[i] * b[i];
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, slices_close};
+
+    fn naive_matmul(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0;
+                for l in 0..a.cols {
+                    s += a.at(i, l) * b.at(l, j);
+                }
+                c.set(i, j, s);
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let a = Matrix::randn(37, 53, 1);
+        let b = Matrix::randn(53, 29, 2);
+        let c = a.matmul(&b);
+        let expect = naive_matmul(&a, &b);
+        for (x, y) in c.data.iter().zip(&expect.data) {
+            assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Matrix::randn(16, 16, 3);
+        let c = a.matmul(&Matrix::identity(16));
+        slices_close(&c.data, &a.data, 1e-6, 1e-6, "a*I").unwrap();
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let a = Matrix::randn(24, 31, 4);
+        let x: Vec<f32> = (0..31).map(|i| i as f32 * 0.1).collect();
+        let xm = Matrix::from_vec(31, 1, x.clone());
+        let via_mm = a.matmul(&xm);
+        let via_mv = a.matvec(&x);
+        slices_close(&via_mv, &via_mm.data, 1e-5, 1e-5, "matvec").unwrap();
+    }
+
+    #[test]
+    fn matvec_t_matches_transpose() {
+        let a = Matrix::randn(20, 15, 5);
+        let x: Vec<f32> = (0..20).map(|i| (i as f32).sin()).collect();
+        let expect = a.transpose().matvec(&x);
+        let got = a.matvec_t(&x);
+        slices_close(&got, &expect, 1e-5, 1e-5, "matvec_t").unwrap();
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = Matrix::randn(13, 47, 6);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn slice_and_set_block_roundtrip() {
+        let a = Matrix::randn(10, 10, 7);
+        let block = a.slice(2, 6, 3, 9);
+        assert_eq!((block.rows, block.cols), (4, 6));
+        assert_eq!(block.at(0, 0), a.at(2, 3));
+        let mut b = Matrix::zeros(10, 10);
+        b.set_block(2, 3, &block);
+        assert_eq!(b.at(5, 8), a.at(5, 8));
+        assert_eq!(b.at(0, 0), 0.0);
+    }
+
+    #[test]
+    fn permute_sym_identity_is_noop() {
+        let a = Matrix::randn(8, 8, 8);
+        let id: Vec<usize> = (0..8).collect();
+        assert_eq!(a.permute_sym(&id), a);
+    }
+
+    #[test]
+    fn permute_sym_reverses() {
+        let a = Matrix::from_fn(3, 3, |i, j| (i * 3 + j) as f32);
+        let p = vec![2usize, 1, 0];
+        let ap = a.permute_sym(&p);
+        assert_eq!(ap.at(0, 0), a.at(2, 2));
+        assert_eq!(ap.at(0, 2), a.at(2, 0));
+        assert_eq!(ap.at(1, 1), a.at(1, 1));
+    }
+
+    #[test]
+    fn matmul_associativity_property() {
+        check(10, |rng| {
+            let n = 4 + rng.below(12);
+            let a = Matrix::randn(n, n, rng.next_u64());
+            let b = Matrix::randn(n, n, rng.next_u64());
+            let x: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+            // (A B) x == A (B x)
+            let lhs = a.matmul(&b).matvec(&x);
+            let rhs = a.matvec(&b.matvec(&x));
+            slices_close(&lhs, &rhs, 1e-3, 1e-3, "assoc")
+        });
+    }
+
+    #[test]
+    fn dot_handles_remainders() {
+        for k in 0..9 {
+            let a: Vec<f32> = (0..k).map(|i| i as f32).collect();
+            let b = vec![2.0f32; k];
+            let expect: f32 = a.iter().sum::<f32>() * 2.0;
+            assert_eq!(dot(&a, &b, k), expect);
+        }
+    }
+}

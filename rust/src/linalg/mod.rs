@@ -1,0 +1,19 @@
+//! Dense linear algebra substrate: row-major [`Matrix`], blocked matmul,
+//! Householder QR, one-sided Jacobi SVD, randomized SVD, norms, and
+//! [`Permutation`].
+//!
+//! Everything the compression pipeline needs is implemented natively (the
+//! offline environment has no BLAS/LAPACK crates); the hot paths are blocked
+//! and allocation-free per DESIGN.md §10.
+
+pub mod matrix;
+pub mod norms;
+pub mod permutation;
+pub mod qr;
+pub mod rsvd;
+pub mod svd;
+
+pub use matrix::Matrix;
+pub use permutation::Permutation;
+pub use rsvd::{randomized_svd, RsvdOptions};
+pub use svd::{truncated_svd, Svd};

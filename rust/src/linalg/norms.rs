@@ -1,0 +1,86 @@
+//! Matrix/vector norms and error metrics.
+
+use crate::linalg::Matrix;
+
+/// Frobenius norm.
+pub fn fro(m: &Matrix) -> f64 {
+    m.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+}
+
+/// Vector 2-norm.
+pub fn norm2(x: &[f32]) -> f64 {
+    x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+}
+
+/// Relative Frobenius error ‖a − b‖_F / ‖b‖_F.
+pub fn rel_fro_error(a: &Matrix, b: &Matrix) -> f64 {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+    let mut num = 0.0f64;
+    for (x, y) in a.data.iter().zip(&b.data) {
+        let d = (*x - *y) as f64;
+        num += d * d;
+    }
+    let den = fro(b).max(1e-30);
+    num.sqrt() / den
+}
+
+/// Spectral-norm estimate by power iteration (‖A‖₂).
+pub fn spectral_est(m: &Matrix, iters: usize, seed: u64) -> f64 {
+    let mut x = Matrix::randn(m.cols, 1, seed).data;
+    let nx = norm2(&x).max(1e-30);
+    x.iter_mut().for_each(|v| *v /= nx as f32);
+    let mut sigma = 0.0;
+    for _ in 0..iters {
+        let y = m.matvec(&x); // A x
+        let z = m.matvec_t(&y); // Aᵀ A x
+        let nz = norm2(&z);
+        if nz < 1e-30 {
+            return 0.0;
+        }
+        sigma = norm2(&y);
+        x = z.iter().map(|&v| (v as f64 / nz) as f32).collect();
+    }
+    sigma
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fro_of_identity() {
+        let i = Matrix::identity(9);
+        assert!((fro(&i) - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rel_error_zero_for_equal() {
+        let a = Matrix::randn(6, 6, 1);
+        assert!(rel_fro_error(&a, &a) < 1e-12);
+    }
+
+    #[test]
+    fn rel_error_one_for_zero_vs_a() {
+        let a = Matrix::randn(6, 6, 2);
+        let z = Matrix::zeros(6, 6);
+        assert!((rel_fro_error(&z, &a) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn spectral_of_diagonal() {
+        // diag(3, 1, 0.5) has spectral norm 3
+        let mut d = Matrix::zeros(3, 3);
+        d.set(0, 0, 3.0);
+        d.set(1, 1, 1.0);
+        d.set(2, 2, 0.5);
+        let s = spectral_est(&d, 50, 3);
+        assert!((s - 3.0).abs() < 1e-3, "{s}");
+    }
+
+    #[test]
+    fn spectral_bounded_by_fro() {
+        let a = Matrix::randn(20, 20, 4);
+        let s = spectral_est(&a, 30, 5);
+        assert!(s <= fro(&a) + 1e-3);
+    }
+}

@@ -1,0 +1,168 @@
+//! Permutations with the conventions the paper's matvec needs:
+//! `apply` gathers (`y[i] = x[p[i]]`, i.e. the row permutation `P·x` where
+//! `P = I[p, :]`), `apply_inv` scatters back (`y[p[i]] = x[i]`).
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Permutation {
+    p: Vec<usize>,
+}
+
+impl Permutation {
+    pub fn identity(n: usize) -> Permutation {
+        Permutation {
+            p: (0..n).collect(),
+        }
+    }
+
+    /// Construct from indices; panics if not a valid permutation.
+    pub fn from_vec(p: Vec<usize>) -> Permutation {
+        let n = p.len();
+        let mut seen = vec![false; n];
+        for &i in &p {
+            assert!(i < n && !seen[i], "invalid permutation");
+            seen[i] = true;
+        }
+        Permutation { p }
+    }
+
+    pub fn len(&self) -> usize {
+        self.p.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.p.is_empty()
+    }
+
+    pub fn indices(&self) -> &[usize] {
+        &self.p
+    }
+
+    pub fn is_identity(&self) -> bool {
+        self.p.iter().enumerate().all(|(i, &v)| i == v)
+    }
+
+    /// The inverse permutation q with q[p[i]] = i.
+    pub fn inverse(&self) -> Permutation {
+        let mut q = vec![0usize; self.p.len()];
+        for (i, &v) in self.p.iter().enumerate() {
+            q[v] = i;
+        }
+        Permutation { p: q }
+    }
+
+    /// Gather: y[i] = x[p[i]]  (this is x_shuffled = P x in the paper).
+    pub fn apply<T: Copy>(&self, x: &[T]) -> Vec<T> {
+        assert_eq!(x.len(), self.p.len());
+        self.p.iter().map(|&i| x[i]).collect()
+    }
+
+    /// Gather into a preallocated buffer.
+    pub fn apply_into<T: Copy>(&self, x: &[T], y: &mut [T]) {
+        assert_eq!(x.len(), self.p.len());
+        assert_eq!(y.len(), self.p.len());
+        for (yi, &i) in y.iter_mut().zip(&self.p) {
+            *yi = x[i];
+        }
+    }
+
+    /// Scatter: y[p[i]] = x[i]  (this is y = Pᵀ x_shuffled in the paper).
+    pub fn apply_inv<T: Copy>(&self, x: &[T]) -> Vec<T>
+    where
+        T: Default + Clone,
+    {
+        assert_eq!(x.len(), self.p.len());
+        let mut y = vec![T::default(); x.len()];
+        self.apply_inv_into(x, &mut y);
+        y
+    }
+
+    /// Scatter into a preallocated buffer.
+    pub fn apply_inv_into<T: Copy>(&self, x: &[T], y: &mut [T]) {
+        assert_eq!(x.len(), self.p.len());
+        assert_eq!(y.len(), self.p.len());
+        for (xi, &i) in x.iter().zip(&self.p) {
+            y[i] = *xi;
+        }
+    }
+
+    /// Compose: (self ∘ other)(x) == self.apply(other.apply(x)).
+    pub fn compose(&self, other: &Permutation) -> Permutation {
+        assert_eq!(self.len(), other.len());
+        // (self∘other).apply(x)[i] = other.apply(x)[self.p[i]] = x[other.p[self.p[i]]]
+        Permutation {
+            p: self.p.iter().map(|&i| other.p[i]).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    fn random_perm(rng: &mut Rng, n: usize) -> Permutation {
+        let mut p: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut p);
+        Permutation::from_vec(p)
+    }
+
+    #[test]
+    fn apply_then_inverse_is_identity() {
+        check(20, |rng| {
+            let n = 1 + rng.below(64);
+            let p = random_perm(rng, n);
+            let x: Vec<f32> = (0..n).map(|i| i as f32).collect();
+            let y = p.apply_inv(&p.apply(&x));
+            if y == x {
+                Ok(())
+            } else {
+                Err("p⁻¹(p(x)) != x".into())
+            }
+        });
+    }
+
+    #[test]
+    fn inverse_matches_apply_inv() {
+        check(20, |rng| {
+            let n = 1 + rng.below(32);
+            let p = random_perm(rng, n);
+            let x: Vec<f32> = (0..n).map(|i| (i * i) as f32).collect();
+            if p.inverse().apply(&x) == p.apply_inv(&x) {
+                Ok(())
+            } else {
+                Err("inverse().apply != apply_inv".into())
+            }
+        });
+    }
+
+    #[test]
+    fn compose_semantics() {
+        check(20, |rng| {
+            let n = 2 + rng.below(20);
+            let p = random_perm(rng, n);
+            let q = random_perm(rng, n);
+            let x: Vec<u32> = (0..n as u32).collect();
+            let via_compose = p.compose(&q).apply(&x);
+            let via_seq = p.apply(&q.apply(&x));
+            if via_compose == via_seq {
+                Ok(())
+            } else {
+                Err("compose mismatch".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid permutation")]
+    fn rejects_duplicates() {
+        Permutation::from_vec(vec![0, 0, 1]);
+    }
+
+    #[test]
+    fn identity_checks() {
+        let id = Permutation::identity(5);
+        assert!(id.is_identity());
+        assert_eq!(id.inverse(), id);
+    }
+}

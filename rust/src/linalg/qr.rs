@@ -1,0 +1,145 @@
+//! Householder QR factorization (thin Q), the workhorse behind the
+//! randomized SVD's orthonormalization step.
+
+use crate::linalg::Matrix;
+
+/// Thin QR: A (m×n, m ≥ n) = Q (m×n, orthonormal cols) · R (n×n upper).
+pub struct Qr {
+    pub q: Matrix,
+    pub r: Matrix,
+}
+
+/// Householder QR with column-major scratch; returns thin Q and R.
+pub fn qr(a: &Matrix) -> Qr {
+    let m = a.rows;
+    let n = a.cols;
+    assert!(m >= n, "qr expects m >= n (got {m}x{n})");
+    // work on a column-major copy for contiguous column access
+    let mut w = a.transpose(); // w.row(j) is column j of A, length m
+    let mut vs: Vec<Vec<f32>> = Vec::with_capacity(n); // householder vectors
+
+    for j in 0..n {
+        // compute householder vector for column j below the diagonal
+        let col = &w.row(j)[j..];
+        let alpha = {
+            let norm = col.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+            if col[0] >= 0.0 {
+                -norm
+            } else {
+                norm
+            }
+        } as f32;
+        let mut v = col.to_vec();
+        v[0] -= alpha;
+        let vnorm2: f64 = v.iter().map(|&x| (x as f64) * (x as f64)).sum();
+        if vnorm2 > 1e-30 {
+            // apply H = I - 2 v vᵀ / (vᵀv) to remaining columns j..n
+            for jj in j..n {
+                let cj = &mut w.row_mut(jj)[j..];
+                let dot: f64 = v.iter().zip(cj.iter()).map(|(&a, &b)| a as f64 * b as f64).sum();
+                let beta = (2.0 * dot / vnorm2) as f32;
+                for (ci, &vi) in cj.iter_mut().zip(&v) {
+                    *ci -= beta * vi;
+                }
+            }
+        }
+        vs.push(v);
+    }
+
+    // R = upper n×n of transformed matrix
+    let mut r = Matrix::zeros(n, n);
+    for j in 0..n {
+        for i in 0..=j {
+            r.set(i, j, w.row(j)[i]);
+        }
+    }
+
+    // Q = H_0 H_1 ... H_{n-1} applied to the first n columns of I (thin Q),
+    // built column-major then transposed.
+    let mut qt = Matrix::zeros(n, m); // row j = column j of Q
+    for j in 0..n {
+        let qcol = qt.row_mut(j);
+        qcol[j] = 1.0;
+        // apply H_k for k = n-1 .. 0
+        for k in (0..=j.min(vs.len() - 1)).rev() {
+            let v = &vs[k];
+            let vnorm2: f64 = v.iter().map(|&x| (x as f64) * (x as f64)).sum();
+            if vnorm2 <= 1e-30 {
+                continue;
+            }
+            let seg = &mut qcol[k..];
+            let dot: f64 = v.iter().zip(seg.iter()).map(|(&a, &b)| a as f64 * b as f64).sum();
+            let beta = (2.0 * dot / vnorm2) as f32;
+            for (si, &vi) in seg.iter_mut().zip(v) {
+                *si -= beta * vi;
+            }
+        }
+    }
+    Qr {
+        q: qt.transpose(),
+        r,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::norms::rel_fro_error;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn reconstructs_a() {
+        let a = Matrix::randn(20, 8, 1);
+        let f = qr(&a);
+        let qa = f.q.matmul(&f.r);
+        assert!(rel_fro_error(&qa, &a) < 1e-4, "{}", rel_fro_error(&qa, &a));
+    }
+
+    #[test]
+    fn q_orthonormal() {
+        let a = Matrix::randn(30, 10, 2);
+        let f = qr(&a);
+        let qtq = f.q.transpose().matmul(&f.q);
+        let i = Matrix::identity(10);
+        assert!(rel_fro_error(&qtq, &i) < 1e-4);
+    }
+
+    #[test]
+    fn r_upper_triangular() {
+        let a = Matrix::randn(12, 12, 3);
+        let f = qr(&a);
+        for i in 0..12 {
+            for j in 0..i {
+                assert!(f.r.at(i, j).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn square_and_tall_shapes_property() {
+        check(10, |rng| {
+            let n = 2 + rng.below(12);
+            let m = n + rng.below(20);
+            let a = Matrix::randn(m, n, rng.next_u64());
+            let f = qr(&a);
+            let err = rel_fro_error(&f.q.matmul(&f.r), &a);
+            if err < 5e-4 {
+                Ok(())
+            } else {
+                Err(format!("qr reconstruction err {err}"))
+            }
+        });
+    }
+
+    #[test]
+    fn handles_rank_deficient() {
+        // two identical columns
+        let mut a = Matrix::randn(10, 3, 4);
+        for i in 0..10 {
+            let v = a.at(i, 0);
+            a.set(i, 1, v);
+        }
+        let f = qr(&a);
+        assert!(rel_fro_error(&f.q.matmul(&f.r), &a) < 1e-4);
+    }
+}

@@ -1,0 +1,151 @@
+//! Randomized SVD (Halko-Martinsson-Tropp): Gaussian sketch + QR range
+//! finder + small exact SVD, with oversampling and power iterations.
+//!
+//! This is the paper's scalable variant for the sparse-plus-low-rank
+//! baselines (sR-SVD) and the default factorizer inside the HSS builder.
+
+use crate::linalg::qr::qr;
+use crate::linalg::svd::{split_factors, svd};
+use crate::linalg::Matrix;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct RsvdOptions {
+    pub oversample: usize,
+    pub power_iters: usize,
+    pub seed: u64,
+}
+
+impl Default for RsvdOptions {
+    fn default() -> Self {
+        RsvdOptions {
+            oversample: 8,
+            power_iters: 1,
+            seed: 0x5EED,
+        }
+    }
+}
+
+/// Randomized truncated SVD in absorbed form (l = U√Σ, r = √ΣVᵀ).
+/// Rank capped by `max_rank` and the `tol` threshold; always ≥ 1.
+pub fn randomized_svd(
+    a: &Matrix,
+    max_rank: usize,
+    tol: f32,
+    opts: RsvdOptions,
+) -> (Matrix, Matrix) {
+    let (m, n) = (a.rows, a.cols);
+    let l = (max_rank + opts.oversample).min(m.min(n)).max(1);
+
+    // sketch: Y = A Ω, Ω n×l Gaussian
+    let mut rng = Rng::new(opts.seed);
+    let mut omega = Matrix::zeros(n, l);
+    rng.fill_gaussian(&mut omega.data);
+    let mut y = a.matmul(&omega);
+
+    // power iterations with re-orthonormalization: Y <- A (Aᵀ Q)
+    for _ in 0..opts.power_iters {
+        let q = qr(&y).q;
+        let atq = a.transpose().matmul(&q);
+        y = a.matmul(&atq);
+    }
+    let q = qr(&y).q; // m×l orthonormal range basis
+
+    // B = Qᵀ A is l×n, small exact SVD
+    let b = q.transpose().matmul(a);
+    let fb = svd(&b);
+    // lift: U = Q Ub
+    let u = q.matmul(&fb.u);
+    let lifted = crate::linalg::svd::Svd {
+        u,
+        s: fb.s,
+        v: fb.v,
+    };
+    split_factors(&lifted, max_rank, tol)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::norms::rel_fro_error;
+    use crate::linalg::svd::truncated_svd;
+    use crate::util::proptest::check;
+
+    fn low_rank_plus_noise(m: usize, n: usize, r: usize, noise: f32, seed: u64) -> Matrix {
+        let u = Matrix::randn(m, r, seed);
+        let v = Matrix::randn(r, n, seed + 1);
+        let mut a = u.matmul(&v);
+        let e = Matrix::randn(m, n, seed + 2);
+        for (x, y) in a.data.iter_mut().zip(&e.data) {
+            *x += noise * y;
+        }
+        a
+    }
+
+    #[test]
+    fn recovers_exact_low_rank() {
+        let a = low_rank_plus_noise(40, 30, 5, 0.0, 1);
+        let (l, r) = randomized_svd(&a, 5, 0.0, RsvdOptions::default());
+        assert!(rel_fro_error(&l.matmul(&r), &a) < 1e-3);
+    }
+
+    #[test]
+    fn close_to_exact_truncation() {
+        let a = low_rank_plus_noise(50, 50, 8, 0.05, 2);
+        let (le, re) = truncated_svd(&a, 8, 0.0);
+        let (lr, rr) = randomized_svd(
+            &a,
+            8,
+            0.0,
+            RsvdOptions {
+                oversample: 10,
+                power_iters: 2,
+                seed: 3,
+            },
+        );
+        let exact_err = rel_fro_error(&le.matmul(&re), &a);
+        let rand_err = rel_fro_error(&lr.matmul(&rr), &a);
+        // HMT bound: randomized within a small factor of optimal
+        assert!(rand_err <= exact_err * 1.25 + 1e-4, "{rand_err} vs {exact_err}");
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = low_rank_plus_noise(20, 20, 4, 0.1, 4);
+        let o = RsvdOptions::default();
+        let (l1, r1) = randomized_svd(&a, 4, 0.0, o);
+        let (l2, r2) = randomized_svd(&a, 4, 0.0, o);
+        assert_eq!(l1.data, l2.data);
+        assert_eq!(r1.data, r2.data);
+    }
+
+    #[test]
+    fn power_iterations_improve_noisy_case() {
+        let a = low_rank_plus_noise(60, 60, 6, 0.3, 5);
+        let err0 = {
+            let (l, r) = randomized_svd(&a, 6, 0.0, RsvdOptions { oversample: 2, power_iters: 0, seed: 6 });
+            rel_fro_error(&l.matmul(&r), &a)
+        };
+        let err2 = {
+            let (l, r) = randomized_svd(&a, 6, 0.0, RsvdOptions { oversample: 2, power_iters: 2, seed: 6 });
+            rel_fro_error(&l.matmul(&r), &a)
+        };
+        assert!(err2 <= err0 + 1e-4, "{err2} vs {err0}");
+    }
+
+    #[test]
+    fn shape_property() {
+        check(8, |rng| {
+            let m = 5 + rng.below(30);
+            let n = 5 + rng.below(30);
+            let k = 1 + rng.below(5);
+            let a = Matrix::randn(m, n, rng.next_u64());
+            let (l, r) = randomized_svd(&a, k, 0.0, RsvdOptions::default());
+            if l.rows == m && l.cols <= k && r.rows == l.cols && r.cols == n {
+                Ok(())
+            } else {
+                Err(format!("bad shapes {}x{} {}x{}", l.rows, l.cols, r.rows, r.cols))
+            }
+        });
+    }
+}

@@ -1,0 +1,255 @@
+//! One-sided Jacobi SVD and truncated-SVD helpers.
+//!
+//! Jacobi is chosen over Golub-Kahan for robustness and simplicity at the
+//! block sizes the HSS builder produces (≤ 2048); accuracy is to f32 working
+//! precision. `truncated_svd` returns the paper's absorbed-factor form
+//! U√Σ · √ΣVᵀ used by sSVD and the HSS off-diagonal couplings.
+
+use crate::linalg::Matrix;
+
+/// Full SVD result: a = u · diag(s) · vᵀ with u (m×r), v (n×r), r = min(m,n).
+pub struct Svd {
+    pub u: Matrix,
+    pub s: Vec<f32>,
+    pub v: Matrix,
+}
+
+/// One-sided Jacobi SVD (on AᵀA implicitly, by rotating columns of A).
+pub fn svd(a: &Matrix) -> Svd {
+    let (m, n) = (a.rows, a.cols);
+    if m < n {
+        // svd(Aᵀ) and swap factors
+        let t = svd(&a.transpose());
+        return Svd {
+            u: t.v,
+            s: t.s,
+            v: t.u,
+        };
+    }
+    // work on column-major copy: w.row(j) = column j of A (length m)
+    let mut w = a.transpose();
+    let eps = 1e-9f64;
+    let max_sweeps = 30;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // Need split borrow of rows p and q
+                let (alpha, beta, gamma) = {
+                    let cp = w.row(p);
+                    let cq = w.row(q);
+                    let mut alpha = 0.0f64; // ‖cp‖²
+                    let mut beta = 0.0f64; // ‖cq‖²
+                    let mut gamma = 0.0f64; // cp·cq
+                    for i in 0..m {
+                        let x = cp[i] as f64;
+                        let y = cq[i] as f64;
+                        alpha += x * x;
+                        beta += y * y;
+                        gamma += x * y;
+                    }
+                    (alpha, beta, gamma)
+                };
+                if gamma.abs() <= eps * (alpha * beta).sqrt() || gamma == 0.0 {
+                    continue;
+                }
+                off += gamma * gamma / (alpha * beta).max(1e-300);
+                // Jacobi rotation
+                let zeta = (beta - alpha) / (2.0 * gamma);
+                let t = zeta.signum() / (zeta.abs() + (1.0 + zeta * zeta).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                // rotate columns p and q
+                let cols = w.cols;
+                let (rp, rq) = {
+                    let (head, tail) = w.data.split_at_mut(q * cols);
+                    (
+                        &mut head[p * cols..p * cols + m],
+                        &mut tail[..m],
+                    )
+                };
+                for i in 0..m {
+                    let x = rp[i];
+                    let y = rq[i];
+                    rp[i] = (c * x as f64 - s * y as f64) as f32;
+                    rq[i] = (s * x as f64 + c * y as f64) as f32;
+                }
+            }
+        }
+        if off < 1e-18 {
+            break;
+        }
+    }
+    // singular values = column norms; U = normalized columns; V accumulated
+    // via V = Aᵀ U Σ⁻¹ (cheaper: recompute from original A)
+    let mut s: Vec<(f32, usize)> = (0..n)
+        .map(|j| {
+            let norm = w.row(j).iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt() as f32;
+            (norm, j)
+        })
+        .collect();
+    s.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+
+    let mut u = Matrix::zeros(m, n);
+    let mut sv = Vec::with_capacity(n);
+    for (out_j, &(sig, j)) in s.iter().enumerate() {
+        sv.push(sig);
+        if sig > 1e-30 {
+            let col = w.row(j);
+            for i in 0..m {
+                u.set(i, out_j, col[i] / sig);
+            }
+        }
+    }
+    // V from A v_j = ... : V = Aᵀ U Σ⁻¹
+    let at_u = a.transpose().matmul(&u); // n×n
+    let mut v = Matrix::zeros(n, n);
+    for j in 0..n {
+        let sig = sv[j];
+        if sig > 1e-30 {
+            for i in 0..n {
+                v.set(i, j, at_u.at(i, j) / sig);
+            }
+        }
+    }
+    Svd { u, s: sv, v }
+}
+
+/// Truncated SVD in absorbed form: a ≈ l · r with l = U_k √Σ_k (m×k) and
+/// r = √Σ_k V_kᵀ (k×n). Rank is capped by `max_rank` and by the count of
+/// singular values above `tol`. Always returns rank ≥ 1.
+pub fn truncated_svd(a: &Matrix, max_rank: usize, tol: f32) -> (Matrix, Matrix) {
+    let f = svd(a);
+    split_factors(&f, max_rank, tol)
+}
+
+/// Shared truncation logic (also used by the randomized path).
+pub(crate) fn split_factors(f: &Svd, max_rank: usize, tol: f32) -> (Matrix, Matrix) {
+    let above = f.s.iter().take_while(|&&s| s > tol).count();
+    let k = max_rank.min(f.s.len()).min(above).max(1);
+    let m = f.u.rows;
+    let n = f.v.rows;
+    let mut l = Matrix::zeros(m, k);
+    let mut r = Matrix::zeros(k, n);
+    for j in 0..k {
+        let sq = f.s[j].max(0.0).sqrt();
+        for i in 0..m {
+            l.set(i, j, f.u.at(i, j) * sq);
+        }
+        for i in 0..n {
+            r.set(j, i, f.v.at(i, j) * sq);
+        }
+    }
+    (l, r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::norms::{fro, rel_fro_error};
+    use crate::util::proptest::check;
+
+    #[test]
+    fn reconstructs_square() {
+        let a = Matrix::randn(16, 16, 1);
+        let f = svd(&a);
+        let mut usv = Matrix::zeros(16, 16);
+        for i in 0..16 {
+            for j in 0..16 {
+                let mut acc = 0.0;
+                for k in 0..16 {
+                    acc += f.u.at(i, k) * f.s[k] * f.v.at(j, k);
+                }
+                usv.set(i, j, acc);
+            }
+        }
+        assert!(rel_fro_error(&usv, &a) < 1e-4, "{}", rel_fro_error(&usv, &a));
+    }
+
+    #[test]
+    fn singular_values_sorted_nonneg() {
+        let a = Matrix::randn(12, 20, 2);
+        let f = svd(&a);
+        for w in f.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-6);
+        }
+        assert!(f.s.iter().all(|&s| s >= 0.0));
+    }
+
+    #[test]
+    fn u_v_orthonormal() {
+        let a = Matrix::randn(15, 10, 3);
+        let f = svd(&a);
+        let utu = f.u.transpose().matmul(&f.u);
+        let vtv = f.v.transpose().matmul(&f.v);
+        assert!(rel_fro_error(&utu, &Matrix::identity(10)) < 1e-3);
+        assert!(rel_fro_error(&vtv, &Matrix::identity(10)) < 1e-3);
+    }
+
+    #[test]
+    fn known_diagonal() {
+        let mut a = Matrix::zeros(3, 3);
+        a.set(0, 0, 5.0);
+        a.set(1, 1, 2.0);
+        a.set(2, 2, 1.0);
+        let f = svd(&a);
+        assert!((f.s[0] - 5.0).abs() < 1e-5);
+        assert!((f.s[1] - 2.0).abs() < 1e-5);
+        assert!((f.s[2] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn rank_one_matrix() {
+        // a = u vᵀ has one nonzero singular value = ‖u‖‖v‖
+        let u: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let v: Vec<f32> = (0..7).map(|i| 1.0 + i as f32).collect();
+        let a = Matrix::from_fn(10, 7, |i, j| u[i] * v[j]);
+        let f = svd(&a);
+        let nu: f32 = u.iter().map(|x| x * x).sum::<f32>().sqrt();
+        let nv: f32 = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((f.s[0] - nu * nv).abs() / (nu * nv) < 1e-4);
+        assert!(f.s[1] < 1e-3);
+    }
+
+    #[test]
+    fn truncated_is_best_rank_k_ish() {
+        // truncation error should match the tail singular values
+        let a = Matrix::randn(20, 20, 4);
+        let f = svd(&a);
+        let (l, r) = truncated_svd(&a, 5, 0.0);
+        assert_eq!(l.cols, 5);
+        let rec = l.matmul(&r);
+        let err = {
+            let d = rec.sub(&a);
+            fro(&d)
+        };
+        let tail: f64 = f.s[5..].iter().map(|&s| (s as f64) * (s as f64)).sum::<f64>().sqrt();
+        assert!((err - tail).abs() / tail.max(1e-9) < 0.05, "err {err} tail {tail}");
+    }
+
+    #[test]
+    fn truncated_respects_tol() {
+        let mut a = Matrix::zeros(8, 8);
+        a.set(0, 0, 10.0);
+        a.set(1, 1, 1e-8);
+        let (l, _r) = truncated_svd(&a, 8, 1e-4);
+        assert_eq!(l.cols, 1);
+    }
+
+    #[test]
+    fn reconstruction_property_random_shapes() {
+        check(8, |rng| {
+            let m = 3 + rng.below(15);
+            let n = 3 + rng.below(15);
+            let a = Matrix::randn(m, n, rng.next_u64());
+            let k = m.min(n);
+            let (l, r) = truncated_svd(&a, k, 0.0);
+            let err = rel_fro_error(&l.matmul(&r), &a);
+            if err < 5e-3 {
+                Ok(())
+            } else {
+                Err(format!("full-rank truncation err {err}"))
+            }
+        });
+    }
+}

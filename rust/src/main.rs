@@ -1,0 +1,384 @@
+//! `hisolo` — CLI for the Hierarchical Sparse Plus Low-Rank compression
+//! stack: compress matrices, evaluate compressed models, serve scoring
+//! requests through the coordinator, and run storage-vs-PPL sweeps.
+
+use anyhow::{bail, Context, Result};
+use hisolo::compress::{CompressorConfig, Method};
+use hisolo::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, Variant};
+use hisolo::data::corpus::Corpus;
+use hisolo::data::dataset::windows;
+use hisolo::data::synthetic;
+use hisolo::eval::sweep::{eval_point, sweep, to_csv};
+use hisolo::model::{Transformer, WeightFile};
+use hisolo::runtime::{ArtifactDir, Runtime};
+use hisolo::util::cli::Args;
+use hisolo::util::timer::Table;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const USAGE: &str = "\
+hisolo — Hierarchical Sparse Plus Low-Rank compression of LLMs
+
+USAGE: hisolo <command> [options]
+
+COMMANDS:
+  info                          show artifact manifest summary
+  compress                      compress one matrix, report error/storage
+      --n 256 --method shss-rcm --rank 32 --sparsity 0.3 --depth 3
+      [--weights artifacts/model.hwt --tensor layer0.wq]
+  eval                          perplexity of a compressed model (native path)
+      --method shss-rcm --rank 32 --sparsity 0.3 --depth 3 --windows 24
+      [--artifacts artifacts] [--threads N]
+  sweep                         full storage-vs-PPL grid (Fig 3 engine)
+      [--ranks 8,16,32,64] [--sparsities 0.1,0.2,0.3] [--out sweep.csv]
+  serve                         serve scoring requests via PJRT executables
+      [--variant both|dense|hss] [--requests 64] [--max-batch 8]
+      [--max-wait-ms 5] [--native]  (--native uses the Rust fwd, no PJRT)
+
+Artifacts default to ./artifacts (override with --artifacts or
+HISOLO_ARTIFACTS). Build them with `make artifacts`.";
+
+fn main() {
+    let args = Args::parse(&["native", "no-rcm", "help"]);
+    if args.flag("help") || args.subcommand().is_none() {
+        println!("{USAGE}");
+        return;
+    }
+    let result = match args.subcommand().unwrap() {
+        "info" => cmd_info(&args),
+        "compress" => cmd_compress(&args),
+        "eval" => cmd_eval(&args),
+        "sweep" => cmd_sweep(&args),
+        "serve" => cmd_serve(&args),
+        other => {
+            eprintln!("unknown command '{other}'\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn artifacts_path(args: &Args) -> PathBuf {
+    args.get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(ArtifactDir::default_path)
+}
+
+fn cfg_from_args(args: &Args) -> CompressorConfig {
+    CompressorConfig {
+        rank: args.get_usize("rank", 32),
+        sparsity: args.get_f64("sparsity", 0.3),
+        depth: args.get_usize("depth", 3),
+        tol: args.get_f64("tol", 1e-6) as f32,
+        min_leaf: args.get_usize("min-leaf", 16),
+        ..Default::default()
+    }
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = artifacts_path(args);
+    let a = ArtifactDir::load(&dir)?;
+    println!("artifacts: {}", dir.display());
+    println!("model: {:?}", a.model_config);
+    println!(
+        "qkv params (compression target): {}",
+        a.model_config.qkv_params()
+    );
+    if let Some(h) = &a.hss_config {
+        println!("hss config: {h}");
+    }
+    let mut t = Table::new(&["executable", "batch", "inputs", "output"]);
+    for e in &a.executables {
+        t.row(&[
+            e.name.clone(),
+            e.batch.to_string(),
+            e.inputs.len().to_string(),
+            format!("{:?}", e.output_shape),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_compress(args: &Args) -> Result<()> {
+    let method: Method = args
+        .get_str("method", "shss-rcm")
+        .parse()
+        .map_err(anyhow::Error::msg)?;
+    let cfg = cfg_from_args(args);
+    let w = if let Some(wpath) = args.get("weights") {
+        let tensor = args
+            .get("tensor")
+            .context("--tensor required with --weights")?;
+        WeightFile::load(&PathBuf::from(wpath))?
+            .matrix(tensor)?
+            .transpose()
+    } else {
+        synthetic::trained_like(args.get_usize("n", 256), args.get_usize("seed", 42) as u64)
+    };
+    println!(
+        "compressing {}x{} with {} (rank={} sp={} depth={})",
+        w.rows, w.cols, method, cfg.rank, cfg.sparsity, cfg.depth
+    );
+    let t0 = Instant::now();
+    let c = hisolo::compress::Compressor::new(cfg).compress(&w, method);
+    let dt = t0.elapsed();
+    println!("compress time: {:.3}s", dt.as_secs_f64());
+    println!("rel fro error: {:.6}", c.rel_error(&w));
+    println!(
+        "storage: {} params, {} bytes ({:.3}x of dense fp16)",
+        c.params(),
+        c.bytes(),
+        c.storage_ratio()
+    );
+    // matvec sanity + latency
+    let x = vec![1.0f32; w.cols];
+    let stats = hisolo::util::timer::quick_bench(|| {
+        std::hint::black_box(c.matvec(&x));
+    });
+    println!("matvec: {}", hisolo::util::timer::fmt_ns(stats.mean_ns));
+    Ok(())
+}
+
+fn load_model(args: &Args) -> Result<(Arc<Transformer>, ArtifactDir)> {
+    let dir = artifacts_path(args);
+    let a = ArtifactDir::load(&dir)?;
+    let weights = WeightFile::load(&dir.join("model.hwt"))?;
+    let model = Transformer::from_weights(&weights, a.model_config)?;
+    Ok((Arc::new(model), a))
+}
+
+fn eval_windows(a: &ArtifactDir, count: usize) -> Result<Vec<Vec<u32>>> {
+    let corpus = Corpus::load(&a.dir.join("corpus_test.txt"))?;
+    let ws = windows(&corpus.tokens, a.model_config.seq_len, count);
+    if ws.is_empty() {
+        bail!("corpus too short for seq_len {}", a.model_config.seq_len);
+    }
+    Ok(ws)
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let method: Method = args
+        .get_str("method", "shss-rcm")
+        .parse()
+        .map_err(anyhow::Error::msg)?;
+    let cfg = cfg_from_args(args);
+    let threads = args.get_usize("threads", default_threads());
+    let (model, a) = load_model(args)?;
+    let ws = eval_windows(&a, args.get_usize("windows", 24))?;
+    println!(
+        "evaluating {} (rank={} sp={} depth={}) on {} windows, {} threads",
+        method,
+        cfg.rank,
+        cfg.sparsity,
+        cfg.depth,
+        ws.len(),
+        threads
+    );
+    let dense = eval_point(&model, Method::Dense, cfg, &ws, threads);
+    let p = if method == Method::Dense {
+        dense.clone()
+    } else {
+        eval_point(&model, method, cfg, &ws, threads)
+    };
+    let mut t = Table::new(&[
+        "method",
+        "ppl",
+        "d_ppl vs dense",
+        "qkv ratio",
+        "model ratio",
+        "rel err",
+        "compress s",
+    ]);
+    for x in [&dense, &p] {
+        t.row(&[
+            x.method.paper_label().to_string(),
+            format!("{:.4}", x.ppl),
+            format!("{:+.4}", x.ppl - dense.ppl),
+            format!("{:.3}", x.qkv_ratio()),
+            format!("{:.3}", x.model_ratio),
+            format!("{:.4}", x.mean_rel_error),
+            format!("{:.2}", x.compress_secs),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let (model, a) = load_model(args)?;
+    let ws = eval_windows(&a, args.get_usize("windows", 16))?;
+    let threads = args.get_usize("threads", default_threads());
+    let ranks: Vec<usize> = parse_list(&args.get_str("ranks", "8,16,32,64"))?;
+    let sparsities: Vec<f64> = parse_list(&args.get_str("sparsities", "0.1,0.2,0.3"))?;
+    let depth = args.get_usize("depth", 3);
+    let mut configs = Vec::new();
+    for &r in &ranks {
+        for &sp in &sparsities {
+            configs.push(CompressorConfig {
+                rank: r,
+                sparsity: sp,
+                depth,
+                ..Default::default()
+            });
+        }
+    }
+    println!(
+        "sweep: {} methods x {} configs on {} windows",
+        Method::FIG3.len(),
+        configs.len(),
+        ws.len()
+    );
+    let points = sweep(&model, &Method::FIG3, &configs, &ws, threads);
+    let csv = to_csv(&points);
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, &csv)?;
+        println!("wrote {out}");
+    } else {
+        print!("{csv}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dir = artifacts_path(args);
+    let a = ArtifactDir::load(&dir)?;
+    let n_requests = args.get_usize("requests", 64);
+    let variant_sel = args.get_str("variant", "both");
+    let native = args.flag("native");
+    let coordinator_cfg = CoordinatorConfig {
+        batcher: BatcherConfig {
+            max_batch: args.get_usize("max-batch", 8),
+            max_wait: Duration::from_millis(args.get_usize("max-wait-ms", 5) as u64),
+            capacity: args.get_usize("capacity", 1024),
+        },
+    };
+    let mut coord = Coordinator::new(coordinator_cfg);
+    let variants: Vec<Variant> = match variant_sel.as_str() {
+        "both" => vec![Variant::Dense, Variant::Hss],
+        v => vec![v.parse().map_err(anyhow::Error::msg)?],
+    };
+
+    for &v in &variants {
+        if native {
+            let weights = WeightFile::load(&dir.join("model.hwt"))?;
+            let model = Arc::new(Transformer::from_weights(&weights, a.model_config)?);
+            match v {
+                Variant::Dense => coord.add_worker(
+                    v,
+                    hisolo::coordinator::worker::NativeDenseScorer {
+                        model,
+                        max_batch: 8,
+                    },
+                ),
+                Variant::Hss => {
+                    let cfg = cfg_from_args(args);
+                    let cm = Arc::new(hisolo::model::CompressedModel::compress(
+                        model,
+                        Method::SHssRcm,
+                        cfg,
+                    ));
+                    coord.add_worker(
+                        v,
+                        hisolo::coordinator::worker::NativeCompressedScorer {
+                            model: cm,
+                            max_batch: 8,
+                        },
+                    )
+                }
+            }
+        } else {
+            // PJRT scorers are built on the worker thread (client is !Send)
+            let dir = dir.clone();
+            let exe = match v {
+                Variant::Dense => "model_dense_b8",
+                Variant::Hss => "model_hss_b8",
+            };
+            coord.add_worker_factory(v, move || {
+                let a = ArtifactDir::load(&dir)?;
+                let weights = WeightFile::load(&dir.join("model.hwt"))?;
+                let rt = Runtime::cpu()?;
+                if exe.contains("hss") {
+                    let ops = WeightFile::load(&dir.join("hss_operands.hwt"))?;
+                    rt.load_model(&a, exe, &[&weights, &ops])
+                } else {
+                    rt.load_model(&a, exe, &[&weights])
+                }
+            });
+        }
+    }
+
+    let corpus = Corpus::load(&dir.join("corpus_test.txt"))?;
+    let ws = windows(&corpus.tokens, a.model_config.seq_len, n_requests);
+    println!(
+        "serving {} requests per variant ({} mode)",
+        ws.len(),
+        if native { "native" } else { "pjrt" }
+    );
+
+    let mut t = Table::new(&[
+        "variant",
+        "requests",
+        "ppl",
+        "throughput req/s",
+        "p50 ms",
+        "p95 ms",
+        "mean batch",
+    ]);
+    for &v in &variants {
+        let t0 = Instant::now();
+        let resps = coord.submit_all(v, &ws)?;
+        let wall = t0.elapsed().as_secs_f64();
+        let errors = resps.iter().filter(|r| r.error.is_some()).count();
+        if errors > 0 {
+            bail!(
+                "{errors} errors; first: {:?}",
+                resps.iter().find_map(|r| r.error.clone())
+            );
+        }
+        let nll: f64 = resps.iter().map(|r| r.nll).sum();
+        let toks: usize = resps.iter().map(|r| r.tokens).sum();
+        let mut lat: Vec<u64> = resps.iter().map(|r| r.latency_us).collect();
+        lat.sort_unstable();
+        let mean_batch =
+            resps.iter().map(|r| r.batch_size).sum::<usize>() as f64 / resps.len() as f64;
+        t.row(&[
+            v.name().to_string(),
+            resps.len().to_string(),
+            format!("{:.4}", (nll / toks as f64).exp()),
+            format!("{:.1}", resps.len() as f64 / wall),
+            format!("{:.1}", lat[lat.len() / 2] as f64 / 1e3),
+            format!("{:.1}", lat[lat.len() * 95 / 100] as f64 / 1e3),
+            format!("{mean_batch:.2}"),
+        ]);
+    }
+    t.print();
+    println!("metrics: {}", coord.metrics.summary());
+    coord.shutdown();
+    Ok(())
+}
+
+fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(16)
+}
+
+fn parse_list<T: std::str::FromStr>(s: &str) -> Result<Vec<T>>
+where
+    T::Err: std::fmt::Display,
+{
+    s.split(',')
+        .filter(|p| !p.is_empty())
+        .map(|p| {
+            p.trim()
+                .parse::<T>()
+                .map_err(|e| anyhow::anyhow!("bad list element '{p}': {e}"))
+        })
+        .collect()
+}

@@ -1,0 +1,210 @@
+//! Transformer with compressed q/k/v projections — the deployable unit the
+//! paper produces (everything else left dense, matching §5's targeting of
+//! q_proj/k_proj/v_proj only).
+
+use crate::compress::pipeline::{compress_model_qkv, summarize, LayerReport};
+use crate::compress::{CompressedMatrix, CompressorConfig, Method};
+use crate::linalg::Matrix;
+use crate::model::transformer::{Proj, QkvProjector, Transformer};
+use std::sync::Arc;
+
+/// A base model plus one compressed matrix per q/k/v projection.
+/// Owns the base via `Arc` so serving workers can hold it across threads.
+pub struct CompressedModel {
+    pub base: Arc<Transformer>,
+    pub method: Method,
+    /// per layer: [q, k, v] — each stores A = Wᵀ (column convention)
+    pub qkv: Vec<[CompressedMatrix; 3]>,
+    pub reports: Vec<LayerReport>,
+}
+
+impl CompressedModel {
+    /// Compress the base model's q/k/v with the given method/config.
+    pub fn compress(base: Arc<Transformer>, method: Method, cfg: CompressorConfig) -> Self {
+        let projections = base.qkv_projections();
+        let mut reports = compress_model_qkv(&projections, method, cfg);
+        let mut qkv = Vec::with_capacity(base.cfg.n_layers);
+        let mut drain = reports.drain(..).collect::<Vec<_>>();
+        // reports come in (wq, wk, wv) per layer order
+        let mut kept = Vec::with_capacity(drain.len());
+        for _ in 0..base.cfg.n_layers {
+            let q = drain.remove(0);
+            let k = drain.remove(0);
+            let v = drain.remove(0);
+            qkv.push([
+                q.compressed.clone_shallow(),
+                k.compressed.clone_shallow(),
+                v.compressed.clone_shallow(),
+            ]);
+            kept.push(q);
+            kept.push(k);
+            kept.push(v);
+        }
+        CompressedModel {
+            base,
+            method,
+            qkv,
+            reports: kept,
+        }
+    }
+
+    /// Logits [t, vocab] through the compressed projections.
+    pub fn forward(&self, tokens: &[u32]) -> Matrix {
+        self.base.forward_with(tokens, self)
+    }
+
+    /// Storage of the compressed q/k/v subset at fp16, paper-style (stored
+    /// values only; index overhead reported separately by `qkv_raw_bytes`).
+    pub fn qkv_bytes(&self) -> usize {
+        summarize(&self.reports).total_params * crate::hss::storage::VALUE_BYTES
+    }
+
+    /// Byte count including sparse-index/permutation overhead.
+    pub fn qkv_raw_bytes(&self) -> usize {
+        summarize(&self.reports).total_bytes
+    }
+
+    /// Dense fp16 bytes of the same subset.
+    pub fn qkv_dense_bytes(&self) -> usize {
+        summarize(&self.reports).total_dense_bytes
+    }
+
+    /// Whole-model storage ratio counting non-qkv params as dense (the
+    /// paper's storage axis: only q/k/v shrink).
+    pub fn model_storage_ratio(&self) -> f64 {
+        let total_dense =
+            self.base.cfg.param_count() * crate::hss::storage::VALUE_BYTES;
+        let qkv_dense = self.qkv_dense_bytes();
+        let rest = total_dense - qkv_dense;
+        (rest + self.qkv_bytes()) as f64 / total_dense as f64
+    }
+
+    pub fn mean_rel_error(&self) -> f64 {
+        summarize(&self.reports).mean_rel_error
+    }
+}
+
+impl QkvProjector for CompressedModel {
+    fn project(&self, layer: usize, which: Proj, a: &Matrix) -> Matrix {
+        let c = match which {
+            Proj::Q => &self.qkv[layer][0],
+            Proj::K => &self.qkv[layer][1],
+            Proj::V => &self.qkv[layer][2],
+        };
+        // c stores A = Wᵀ so each output row is A · a_row; one scratch
+        // vector reused across rows (no allocation in the token loop)
+        let mut out = Matrix::zeros(a.rows, a.cols);
+        let mut ws = c.workspace();
+        let mut y = vec![0.0; a.cols];
+        for i in 0..a.rows {
+            c.matvec_with(a.row(i), &mut y, &mut ws);
+            out.row_mut(i).copy_from_slice(&y);
+        }
+        out
+    }
+}
+
+impl CompressedMatrix {
+    /// Cheap structural clone (weights are shared semantics-free copies;
+    /// used when a report and the model both need the matrix).
+    pub fn clone_shallow(&self) -> CompressedMatrix {
+        match self {
+            CompressedMatrix::Dense { w } => CompressedMatrix::Dense { w: w.clone() },
+            CompressedMatrix::LowRank { l, r, sparse } => CompressedMatrix::LowRank {
+                l: l.clone(),
+                r: r.clone(),
+                sparse: sparse.clone(),
+            },
+            CompressedMatrix::Hss { tree } => CompressedMatrix::Hss { tree: tree.clone() },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            vocab: 64,
+            d_model: 64,
+            n_heads: 4,
+            n_layers: 2,
+            d_ff: 128,
+            seq_len: 16,
+        }
+    }
+
+    #[test]
+    fn near_exact_compression_matches_dense_forward() {
+        let base = std::sync::Arc::new(Transformer::random(tiny_cfg(), 1));
+        // depth-1, full off-diag rank, exact SVD => near-lossless
+        let cfg = CompressorConfig {
+            rank: 32,
+            sparsity: 0.2,
+            depth: 1,
+            hss_rsvd: false,
+            min_leaf: 4,
+            ..Default::default()
+        };
+        let cm = CompressedModel::compress(base.clone(), Method::SHssRcm, cfg);
+        let tokens: Vec<u32> = (0..16).map(|i| (i * 3) % 64).collect();
+        let dense = base.forward(&tokens);
+        let comp = cm.forward(&tokens);
+        let mut max_diff = 0.0f32;
+        for (a, b) in dense.data.iter().zip(&comp.data) {
+            max_diff = max_diff.max((a - b).abs());
+        }
+        assert!(max_diff < 2e-2, "max logit diff {max_diff}");
+    }
+
+    #[test]
+    fn lossy_compression_still_finite() {
+        let base = std::sync::Arc::new(Transformer::random(tiny_cfg(), 2));
+        let cfg = CompressorConfig {
+            rank: 4,
+            sparsity: 0.1,
+            depth: 2,
+            min_leaf: 4,
+            ..Default::default()
+        };
+        for m in [Method::SSvd, Method::SRsvd, Method::SHss, Method::SHssRcm] {
+            let cm = CompressedModel::compress(base.clone(), m, cfg);
+            let tokens: Vec<u32> = (0..16).map(|i| i % 64).collect();
+            let logits = cm.forward(&tokens);
+            assert!(logits.data.iter().all(|v| v.is_finite()), "{m:?}");
+            assert!(cm.qkv_bytes() < cm.qkv_dense_bytes(), "{m:?}");
+        }
+    }
+
+    #[test]
+    fn model_storage_ratio_below_one_when_compressed() {
+        let base = std::sync::Arc::new(Transformer::random(tiny_cfg(), 3));
+        let cfg = CompressorConfig {
+            rank: 4,
+            sparsity: 0.05,
+            depth: 2,
+            min_leaf: 4,
+            ..Default::default()
+        };
+        let cm = CompressedModel::compress(base.clone(), Method::SHssRcm, cfg);
+        let ratio = cm.model_storage_ratio();
+        assert!(ratio < 1.0 && ratio > 0.3, "ratio {ratio}");
+    }
+
+    #[test]
+    fn reports_cover_all_projections() {
+        let base = std::sync::Arc::new(Transformer::random(tiny_cfg(), 4));
+        let cm = CompressedModel::compress(
+            base.clone(),
+            Method::SSvd,
+            CompressorConfig {
+                rank: 8,
+                ..Default::default()
+            },
+        );
+        assert_eq!(cm.reports.len(), 6);
+        assert_eq!(cm.qkv.len(), 2);
+    }
+}

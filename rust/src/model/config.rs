@@ -1,0 +1,112 @@
+//! Transformer configuration (mirrors `python/compile/model.py::CONFIG`).
+
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+}
+
+impl Default for ModelConfig {
+    /// The artifact model (DESIGN.md §2 scaling of LLaMA-7B).
+    fn default() -> Self {
+        ModelConfig {
+            vocab: 256,
+            d_model: 256,
+            n_heads: 8,
+            n_layers: 4,
+            d_ff: 1024,
+            seq_len: 128,
+        }
+    }
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn param_count(&self) -> usize {
+        let d = self.d_model;
+        let per_layer = 4 * d * d + 2 * d * self.d_ff + self.d_ff + d + 4 * d;
+        self.vocab * d + self.seq_len * d + self.n_layers * per_layer + 2 * d
+    }
+
+    /// q/k/v parameters (the paper's compression target subset).
+    pub fn qkv_params(&self) -> usize {
+        3 * self.n_layers * self.d_model * self.d_model
+    }
+
+    /// Parse the `model_config` object of artifacts/manifest.json.
+    pub fn from_manifest(j: &Json) -> anyhow::Result<ModelConfig> {
+        let mc = j
+            .get("model_config")
+            .ok_or_else(|| anyhow::anyhow!("manifest missing model_config"))?;
+        let field = |k: &str| -> anyhow::Result<usize> {
+            mc.get(k)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow::anyhow!("model_config missing {k}"))
+        };
+        Ok(ModelConfig {
+            vocab: field("vocab")?,
+            d_model: field("d_model")?,
+            n_heads: field("n_heads")?,
+            n_layers: field("n_layers")?,
+            d_ff: field("d_ff")?,
+            seq_len: field("seq_len")?,
+        })
+    }
+
+    /// Canonical parameter order — must match python `model.param_names()`.
+    pub fn param_names(&self) -> Vec<String> {
+        let mut names = vec!["tok_emb".to_string(), "pos_emb".to_string()];
+        for i in 0..self.n_layers {
+            for p in [
+                "ln1_g", "ln1_b", "wq", "wk", "wv", "wo", "ln2_g", "ln2_b", "w1", "b1", "w2",
+                "b2",
+            ] {
+                names.push(format!("layer{i}.{p}"));
+            }
+        }
+        names.push("lnf_g".to_string());
+        names.push("lnf_b".to_string());
+        names
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_python() {
+        let c = ModelConfig::default();
+        assert_eq!(c.head_dim(), 32);
+        assert_eq!(c.param_names().len(), 2 + 4 * 12 + 2);
+        assert_eq!(c.param_names()[2], "layer0.ln1_g");
+        assert_eq!(c.qkv_params(), 3 * 4 * 256 * 256);
+    }
+
+    #[test]
+    fn from_manifest_parses() {
+        let j = Json::parse(
+            r#"{"model_config": {"vocab": 256, "d_model": 64, "n_heads": 4,
+                "n_layers": 2, "d_ff": 128, "seq_len": 32}}"#,
+        )
+        .unwrap();
+        let c = ModelConfig::from_manifest(&j).unwrap();
+        assert_eq!(c.d_model, 64);
+        assert_eq!(c.n_layers, 2);
+    }
+
+    #[test]
+    fn from_manifest_rejects_missing() {
+        let j = Json::parse(r#"{"model_config": {"vocab": 256}}"#).unwrap();
+        assert!(ModelConfig::from_manifest(&j).is_err());
+    }
+}

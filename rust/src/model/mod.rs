@@ -1,0 +1,15 @@
+//! The substitute transformer LM on the Rust side: config, `.hwt` weight
+//! IO (shared binary contract with `python/compile/hwt.py`), byte
+//! tokenizer, the native forward pass, and the compressed-projection
+//! variant used by the evaluation harness.
+
+pub mod compressed_model;
+pub mod config;
+pub mod tokenizer;
+pub mod transformer;
+pub mod weights;
+
+pub use compressed_model::CompressedModel;
+pub use config::ModelConfig;
+pub use transformer::Transformer;
+pub use weights::WeightFile;

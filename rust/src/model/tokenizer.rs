@@ -1,0 +1,50 @@
+//! Byte-level tokenizer (vocab = 256), matching the python training path
+//! which feeds raw corpus bytes as token ids.
+
+/// Byte tokenizer: token id == byte value.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub const VOCAB: usize = 256;
+
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        text.as_bytes().iter().map(|&b| b as u32).collect()
+    }
+
+    pub fn encode_bytes(&self, bytes: &[u8]) -> Vec<u32> {
+        bytes.iter().map(|&b| b as u32).collect()
+    }
+
+    /// Lossy decode (invalid utf-8 replaced).
+    pub fn decode(&self, tokens: &[u32]) -> String {
+        let bytes: Vec<u8> = tokens.iter().map(|&t| t as u8).collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let tok = ByteTokenizer;
+        let s = "the model compresses the weight matrix.";
+        assert_eq!(tok.decode(&tok.encode(s)), s);
+    }
+
+    #[test]
+    fn ids_are_bytes() {
+        let tok = ByteTokenizer;
+        assert_eq!(tok.encode("Ab"), vec![65, 98]);
+    }
+
+    #[test]
+    fn all_ids_below_vocab() {
+        let tok = ByteTokenizer;
+        let ids = tok.encode_bytes(&(0..=255u8).collect::<Vec<_>>());
+        assert!(ids.iter().all(|&t| (t as usize) < ByteTokenizer::VOCAB));
+        assert_eq!(ids.len(), 256);
+    }
+}

@@ -1,0 +1,368 @@
+//! Pure-Rust transformer forward pass, numerically mirroring
+//! `python/compile/model.py::fwd` (layernorm eps 1e-5, tanh-GELU, causal
+//! attention, learned positions, tied output embedding).
+//!
+//! This is the native eval path: the evaluation harness runs perplexity
+//! through it with either dense or compressed q/k/v projections (see
+//! [`crate::model::CompressedModel`]); the AOT HLO executables provide the
+//! serving path and a cross-check.
+
+use crate::linalg::Matrix;
+use crate::model::weights::WeightFile;
+use crate::model::ModelConfig;
+use anyhow::Result;
+
+/// Which projection a [`QkvProjector`] is asked for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Proj {
+    Q,
+    K,
+    V,
+}
+
+/// Strategy for the q/k/v projections — the only part the compression
+/// methods replace.
+pub trait QkvProjector {
+    /// a: [t, d] activations → [t, d] projection output (rows(a) · W).
+    fn project(&self, layer: usize, which: Proj, a: &Matrix) -> Matrix;
+}
+
+/// Dense projector reading the original weights.
+pub struct DenseProjector<'a> {
+    pub layers: &'a [LayerWeights],
+}
+
+impl QkvProjector for DenseProjector<'_> {
+    fn project(&self, layer: usize, which: Proj, a: &Matrix) -> Matrix {
+        let l = &self.layers[layer];
+        let w = match which {
+            Proj::Q => &l.wq,
+            Proj::K => &l.wk,
+            Proj::V => &l.wv,
+        };
+        a.matmul(w)
+    }
+}
+
+pub struct LayerWeights {
+    pub ln1_g: Vec<f32>,
+    pub ln1_b: Vec<f32>,
+    pub wq: Matrix,
+    pub wk: Matrix,
+    pub wv: Matrix,
+    pub wo: Matrix,
+    pub ln2_g: Vec<f32>,
+    pub ln2_b: Vec<f32>,
+    pub w1: Matrix,
+    pub b1: Vec<f32>,
+    pub w2: Matrix,
+    pub b2: Vec<f32>,
+}
+
+pub struct Transformer {
+    pub cfg: ModelConfig,
+    pub tok_emb: Matrix,
+    pub pos_emb: Matrix,
+    pub layers: Vec<LayerWeights>,
+    pub lnf_g: Vec<f32>,
+    pub lnf_b: Vec<f32>,
+}
+
+impl Transformer {
+    /// Load from a `.hwt` weight file in canonical order.
+    pub fn from_weights(wf: &WeightFile, cfg: ModelConfig) -> Result<Transformer> {
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for i in 0..cfg.n_layers {
+            let p = |s: &str| format!("layer{i}.{s}");
+            layers.push(LayerWeights {
+                ln1_g: wf.vec1(&p("ln1_g"))?,
+                ln1_b: wf.vec1(&p("ln1_b"))?,
+                wq: wf.matrix(&p("wq"))?,
+                wk: wf.matrix(&p("wk"))?,
+                wv: wf.matrix(&p("wv"))?,
+                wo: wf.matrix(&p("wo"))?,
+                ln2_g: wf.vec1(&p("ln2_g"))?,
+                ln2_b: wf.vec1(&p("ln2_b"))?,
+                w1: wf.matrix(&p("w1"))?,
+                b1: wf.vec1(&p("b1"))?,
+                w2: wf.matrix(&p("w2"))?,
+                b2: wf.vec1(&p("b2"))?,
+            });
+        }
+        Ok(Transformer {
+            cfg,
+            tok_emb: wf.matrix("tok_emb")?,
+            pos_emb: wf.matrix("pos_emb")?,
+            layers,
+            lnf_g: wf.vec1("lnf_g")?,
+            lnf_b: wf.vec1("lnf_b")?,
+        })
+    }
+
+    /// Random-init model (tests/benches).
+    pub fn random(cfg: ModelConfig, seed: u64) -> Transformer {
+        let d = cfg.d_model;
+        let scale = |m: Matrix, fan_in: usize| m.scale(1.0 / (fan_in as f32).sqrt());
+        let mut s = seed;
+        let mut next = || {
+            s += 1;
+            s
+        };
+        let layers = (0..cfg.n_layers)
+            .map(|_| LayerWeights {
+                ln1_g: vec![1.0; d],
+                ln1_b: vec![0.0; d],
+                wq: scale(Matrix::randn(d, d, next()), d),
+                wk: scale(Matrix::randn(d, d, next()), d),
+                wv: scale(Matrix::randn(d, d, next()), d),
+                wo: scale(Matrix::randn(d, d, next()), d),
+                ln2_g: vec![1.0; d],
+                ln2_b: vec![0.0; d],
+                w1: scale(Matrix::randn(d, cfg.d_ff, next()), d),
+                b1: vec![0.0; cfg.d_ff],
+                w2: scale(Matrix::randn(cfg.d_ff, d, next()), cfg.d_ff),
+                b2: vec![0.0; d],
+            })
+            .collect();
+        Transformer {
+            cfg,
+            tok_emb: scale(Matrix::randn(cfg.vocab, d, next()), cfg.vocab),
+            pos_emb: scale(Matrix::randn(cfg.seq_len, d, next()), cfg.seq_len),
+            layers,
+            lnf_g: vec![1.0; d],
+            lnf_b: vec![0.0; d],
+        }
+    }
+
+    /// The (name, Wᵀ-untransposed) q/k/v projections — compression targets.
+    pub fn qkv_projections(&self) -> Vec<(String, Matrix)> {
+        let mut out = Vec::new();
+        for (i, l) in self.layers.iter().enumerate() {
+            out.push((format!("layer{i}.wq"), l.wq.clone()));
+            out.push((format!("layer{i}.wk"), l.wk.clone()));
+            out.push((format!("layer{i}.wv"), l.wv.clone()));
+        }
+        out
+    }
+
+    /// Logits [t, vocab] for one token window, with the given projector.
+    pub fn forward_with<P: QkvProjector>(&self, tokens: &[u32], proj: &P) -> Matrix {
+        let t = tokens.len();
+        let d = self.cfg.d_model;
+        assert!(t <= self.cfg.seq_len, "window longer than seq_len");
+
+        // embeddings
+        let mut h = Matrix::zeros(t, d);
+        for (i, &tok) in tokens.iter().enumerate() {
+            let te = self.tok_emb.row(tok as usize);
+            let pe = self.pos_emb.row(i);
+            let row = h.row_mut(i);
+            for j in 0..d {
+                row[j] = te[j] + pe[j];
+            }
+        }
+
+        for (li, l) in self.layers.iter().enumerate() {
+            // attention block
+            let a = layernorm(&h, &l.ln1_g, &l.ln1_b);
+            let q = proj.project(li, Proj::Q, &a);
+            let k = proj.project(li, Proj::K, &a);
+            let v = proj.project(li, Proj::V, &a);
+            let o = causal_mha(&q, &k, &v, self.cfg.n_heads);
+            let oh = o.matmul(&l.wo);
+            h = h.add(&oh);
+
+            // mlp block
+            let m = layernorm(&h, &l.ln2_g, &l.ln2_b);
+            let mut ff = m.matmul(&l.w1);
+            for i in 0..t {
+                let row = ff.row_mut(i);
+                for (x, b) in row.iter_mut().zip(&l.b1) {
+                    *x = gelu(*x + *b);
+                }
+            }
+            let mut ff2 = ff.matmul(&l.w2);
+            for i in 0..t {
+                let row = ff2.row_mut(i);
+                for (x, b) in row.iter_mut().zip(&l.b2) {
+                    *x += *b;
+                }
+            }
+            h = h.add(&ff2);
+        }
+
+        let hf = layernorm(&h, &self.lnf_g, &self.lnf_b);
+        // tied output head: logits = hf @ tok_embᵀ
+        let mut logits = Matrix::zeros(t, self.cfg.vocab);
+        hf.matmul_bt_into(&self.tok_emb, &mut logits);
+        logits
+    }
+
+    /// Dense forward (original weights).
+    pub fn forward(&self, tokens: &[u32]) -> Matrix {
+        self.forward_with(
+            tokens,
+            &DenseProjector {
+                layers: &self.layers,
+            },
+        )
+    }
+}
+
+/// Row-wise layernorm matching jax (eps inside rsqrt).
+pub fn layernorm(x: &Matrix, g: &[f32], b: &[f32]) -> Matrix {
+    let mut out = Matrix::zeros(x.rows, x.cols);
+    let n = x.cols as f32;
+    for i in 0..x.rows {
+        let row = x.row(i);
+        let mu: f32 = row.iter().sum::<f32>() / n;
+        let var: f32 = row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / n;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        let orow = out.row_mut(i);
+        for j in 0..x.cols {
+            orow[j] = (row[j] - mu) * inv * g[j] + b[j];
+        }
+    }
+    out
+}
+
+/// tanh-approximation GELU, bit-matching the python model.
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + (0.797_884_6 * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// Multi-head causal attention. q,k,v: [t, d] → [t, d].
+pub fn causal_mha(q: &Matrix, k: &Matrix, v: &Matrix, n_heads: usize) -> Matrix {
+    let t = q.rows;
+    let d = q.cols;
+    let hd = d / n_heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut out = Matrix::zeros(t, d);
+    let mut probs = vec![0.0f32; t];
+    for h in 0..n_heads {
+        let c0 = h * hd;
+        for i in 0..t {
+            let qi = &q.row(i)[c0..c0 + hd];
+            // scores over keys 0..=i (causal), streaming softmax
+            let mut maxs = f32::NEG_INFINITY;
+            for j in 0..=i {
+                let kj = &k.row(j)[c0..c0 + hd];
+                let s = crate::linalg::matrix::dot(qi, kj, hd) * scale;
+                probs[j] = s;
+                maxs = maxs.max(s);
+            }
+            let mut denom = 0.0f32;
+            for p in probs[..=i].iter_mut() {
+                *p = (*p - maxs).exp();
+                denom += *p;
+            }
+            let inv = 1.0 / denom;
+            let orow = &mut out.row_mut(i)[c0..c0 + hd];
+            for j in 0..=i {
+                let w = probs[j] * inv;
+                let vj = &v.row(j)[c0..c0 + hd];
+                for (o, &vv) in orow.iter_mut().zip(vj) {
+                    *o += w * vv;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            vocab: 64,
+            d_model: 32,
+            n_heads: 4,
+            n_layers: 2,
+            d_ff: 64,
+            seq_len: 16,
+        }
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let m = Transformer::random(tiny_cfg(), 1);
+        let tokens: Vec<u32> = (0..16).map(|i| i % 64).collect();
+        let logits = m.forward(&tokens);
+        assert_eq!((logits.rows, logits.cols), (16, 64));
+        assert!(logits.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn causality() {
+        let m = Transformer::random(tiny_cfg(), 2);
+        let t1: Vec<u32> = (0..16).map(|i| i % 64).collect();
+        let mut t2 = t1.clone();
+        t2[10] = (t2[10] + 1) % 64; // perturb a later token
+        let l1 = m.forward(&t1);
+        let l2 = m.forward(&t2);
+        for i in 0..10 {
+            for j in 0..64 {
+                assert!(
+                    (l1.at(i, j) - l2.at(i, j)).abs() < 1e-5,
+                    "logits before perturbed position changed"
+                );
+            }
+        }
+        // and the perturbed position itself must change
+        let mut any = false;
+        for j in 0..64 {
+            if (l1.at(10, j) - l2.at(10, j)).abs() > 1e-6 {
+                any = true;
+            }
+        }
+        assert!(any);
+    }
+
+    #[test]
+    fn layernorm_normalizes() {
+        let x = Matrix::randn(4, 32, 3);
+        let g = vec![1.0; 32];
+        let b = vec![0.0; 32];
+        let y = layernorm(&x, &g, &b);
+        for i in 0..4 {
+            let row = y.row(i);
+            let mu: f32 = row.iter().sum::<f32>() / 32.0;
+            let var: f32 = row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / 32.0;
+            assert!(mu.abs() < 1e-5);
+            assert!((var - 1.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn gelu_reference_values() {
+        assert!((gelu(0.0)).abs() < 1e-7);
+        assert!((gelu(1.0) - 0.841192).abs() < 1e-4);
+        assert!((gelu(-1.0) + 0.158808).abs() < 1e-4);
+        assert!(gelu(10.0) > 9.99);
+    }
+
+    #[test]
+    fn attention_uniform_v_rows_sum_to_one() {
+        let t = 8;
+        let d = 16;
+        let q = Matrix::randn(t, d, 4);
+        let k = Matrix::randn(t, d, 5);
+        let v = Matrix::from_fn(t, d, |_i, _j| 1.0);
+        let o = causal_mha(&q, &k, &v, 4);
+        for val in &o.data {
+            assert!((val - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn qkv_projections_enumerated() {
+        let m = Transformer::random(tiny_cfg(), 6);
+        let projs = m.qkv_projections();
+        assert_eq!(projs.len(), 6);
+        assert_eq!(projs[0].0, "layer0.wq");
+        assert_eq!(projs[5].0, "layer1.wv");
+    }
+}

@@ -1,0 +1,278 @@
+//! HWT weight container (Rust side of the cross-language contract).
+//!
+//! Format (little endian, see `python/compile/hwt.py`):
+//! `"HWT1"` · u32 count · per tensor: u32 name-len, name, u8 dtype
+//! (0=f32, 1=f16, 2=i32), u32 ndim, u32×ndim dims, raw data.
+
+use crate::linalg::Matrix;
+use crate::util::fp16;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"HWT1";
+
+/// One named tensor; data always widened to f32 in memory (i32 kept raw).
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub f32_data: Vec<f32>,
+    pub i32_data: Vec<i32>,
+    pub dtype: Dtype,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    F16,
+    I32,
+}
+
+impl Tensor {
+    pub fn len(&self) -> usize {
+        if self.dims.is_empty() {
+            1
+        } else {
+            self.dims.iter().product()
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Interpret as a 2-D matrix.
+    pub fn to_matrix(&self) -> Result<Matrix> {
+        if self.dims.len() != 2 {
+            bail!("tensor {} has rank {} (want 2)", self.name, self.dims.len());
+        }
+        Ok(Matrix::from_vec(
+            self.dims[0],
+            self.dims[1],
+            self.f32_data.clone(),
+        ))
+    }
+
+    pub fn to_vec1(&self) -> Result<Vec<f32>> {
+        if self.dims.len() != 1 {
+            bail!("tensor {} has rank {} (want 1)", self.name, self.dims.len());
+        }
+        Ok(self.f32_data.clone())
+    }
+}
+
+/// An ordered collection of named tensors (order = AOT operand order).
+#[derive(Default)]
+pub struct WeightFile {
+    pub tensors: Vec<Tensor>,
+    index: BTreeMap<String, usize>,
+}
+
+impl WeightFile {
+    pub fn load(path: &Path) -> Result<WeightFile> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{}: bad magic {:?}", path.display(), magic);
+        }
+        let count = read_u32(&mut f)? as usize;
+        let mut out = WeightFile::default();
+        for _ in 0..count {
+            let name_len = read_u32(&mut f)? as usize;
+            let mut name_buf = vec![0u8; name_len];
+            f.read_exact(&mut name_buf)?;
+            let name = String::from_utf8(name_buf).context("tensor name not utf-8")?;
+            let mut dtype_b = [0u8; 1];
+            f.read_exact(&mut dtype_b)?;
+            let ndim = read_u32(&mut f)? as usize;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(read_u32(&mut f)? as usize);
+            }
+            // scalar (ndim=0) has one element; an explicit 0-dim is empty
+            let count: usize = if dims.is_empty() {
+                1
+            } else {
+                dims.iter().product()
+            };
+            let (dtype, f32_data, i32_data) = match dtype_b[0] {
+                0 => {
+                    let mut raw = vec![0u8; count * 4];
+                    f.read_exact(&mut raw)?;
+                    let data = raw
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect();
+                    (Dtype::F32, data, Vec::new())
+                }
+                1 => {
+                    let mut raw = vec![0u8; count * 2];
+                    f.read_exact(&mut raw)?;
+                    (Dtype::F16, fp16::decode_f16_le(&raw), Vec::new())
+                }
+                2 => {
+                    let mut raw = vec![0u8; count * 4];
+                    f.read_exact(&mut raw)?;
+                    let data: Vec<i32> = raw
+                        .chunks_exact(4)
+                        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect();
+                    (Dtype::I32, Vec::new(), data)
+                }
+                d => bail!("unknown dtype code {d}"),
+            };
+            out.push(Tensor {
+                name,
+                dims,
+                f32_data,
+                i32_data,
+                dtype,
+            });
+        }
+        Ok(out)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        f.write_all(MAGIC)?;
+        f.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for t in &self.tensors {
+            f.write_all(&(t.name.len() as u32).to_le_bytes())?;
+            f.write_all(t.name.as_bytes())?;
+            let code: u8 = match t.dtype {
+                Dtype::F32 => 0,
+                Dtype::F16 => 1,
+                Dtype::I32 => 2,
+            };
+            f.write_all(&[code])?;
+            f.write_all(&(t.dims.len() as u32).to_le_bytes())?;
+            for &d in &t.dims {
+                f.write_all(&(d as u32).to_le_bytes())?;
+            }
+            match t.dtype {
+                Dtype::F32 => {
+                    for v in &t.f32_data {
+                        f.write_all(&v.to_le_bytes())?;
+                    }
+                }
+                Dtype::F16 => f.write_all(&fp16::encode_f16_le(&t.f32_data))?,
+                Dtype::I32 => {
+                    for v in &t.i32_data {
+                        f.write_all(&v.to_le_bytes())?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn push(&mut self, t: Tensor) {
+        self.index.insert(t.name.clone(), self.tensors.len());
+        self.tensors.push(t);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.index
+            .get(name)
+            .map(|&i| &self.tensors[i])
+            .ok_or_else(|| anyhow!("tensor '{name}' not found"))
+    }
+
+    pub fn matrix(&self, name: &str) -> Result<Matrix> {
+        self.get(name)?.to_matrix()
+    }
+
+    pub fn vec1(&self, name: &str) -> Result<Vec<f32>> {
+        self.get(name)?.to_vec1()
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.tensors.iter().map(|t| t.name.as_str()).collect()
+    }
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tensor_f32(name: &str, dims: Vec<usize>, data: Vec<f32>) -> Tensor {
+        Tensor {
+            name: name.to_string(),
+            dims,
+            f32_data: data,
+            i32_data: Vec::new(),
+            dtype: Dtype::F32,
+        }
+    }
+
+    #[test]
+    fn roundtrip_f32_f16_i32() {
+        let dir = std::env::temp_dir().join("hisolo_test_hwt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rt.hwt");
+        let mut wf = WeightFile::default();
+        wf.push(tensor_f32("a", vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]));
+        wf.push(Tensor {
+            name: "h".into(),
+            dims: vec![4],
+            f32_data: vec![0.5, -1.5, 2.0, 0.0],
+            i32_data: Vec::new(),
+            dtype: Dtype::F16,
+        });
+        wf.push(Tensor {
+            name: "i".into(),
+            dims: vec![2],
+            f32_data: Vec::new(),
+            i32_data: vec![7, -9],
+            dtype: Dtype::I32,
+        });
+        wf.save(&path).unwrap();
+        let back = WeightFile::load(&path).unwrap();
+        assert_eq!(back.names(), vec!["a", "h", "i"]);
+        assert_eq!(back.get("a").unwrap().f32_data, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(back.get("h").unwrap().f32_data, vec![0.5, -1.5, 2.0, 0.0]);
+        assert_eq!(back.get("i").unwrap().i32_data, vec![7, -9]);
+        let m = back.matrix("a").unwrap();
+        assert_eq!((m.rows, m.cols), (2, 3));
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("hisolo_test_hwt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.hwt");
+        std::fs::write(&path, b"NOPE\x00\x00\x00\x00").unwrap();
+        assert!(WeightFile::load(&path).is_err());
+    }
+
+    #[test]
+    fn missing_tensor_error() {
+        let wf = WeightFile::default();
+        assert!(wf.get("nope").is_err());
+    }
+
+    #[test]
+    fn reads_python_written_artifacts_if_present() {
+        // cross-language check against the real artifact (skipped if absent)
+        let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/model.hwt");
+        if !path.exists() {
+            return;
+        }
+        let wf = WeightFile::load(&path).unwrap();
+        assert_eq!(wf.tensors[0].name, "tok_emb");
+        let m = wf.matrix("layer0.wq").unwrap();
+        assert_eq!((m.rows, m.cols), (256, 256));
+        assert!(m.data.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,176 @@
+//! Artifact manifest parsing (`artifacts/manifest.json` from aot.py):
+//! which executables exist, their operand order/shapes, batch sizes.
+
+use crate::model::ModelConfig;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct InputSpec {
+    pub name: String,
+    pub dtype: String, // "f32" | "i32" | "f16"
+    pub shape: Vec<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ExeSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub batch: usize,
+    pub inputs: Vec<InputSpec>,
+    pub output_shape: Vec<usize>,
+}
+
+pub struct ArtifactDir {
+    pub dir: PathBuf,
+    pub model_config: ModelConfig,
+    pub executables: Vec<ExeSpec>,
+    pub hss_config: Option<Json>,
+}
+
+impl ArtifactDir {
+    pub fn load(dir: &Path) -> Result<ArtifactDir> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let model_config = ModelConfig::from_manifest(&j)?;
+
+        let exes = j
+            .get("executables")
+            .ok_or_else(|| anyhow!("manifest missing executables"))?;
+        let Json::Obj(map) = exes else {
+            bail!("executables is not an object");
+        };
+        let mut executables = Vec::new();
+        for (name, e) in map {
+            let file = e
+                .get("file")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| anyhow!("{name}: missing file"))?;
+            let batch = e
+                .get("batch")
+                .and_then(|b| b.as_usize())
+                .ok_or_else(|| anyhow!("{name}: missing batch"))?;
+            let inputs = e
+                .get("inputs")
+                .and_then(|i| i.as_arr())
+                .ok_or_else(|| anyhow!("{name}: missing inputs"))?
+                .iter()
+                .map(parse_input)
+                .collect::<Result<Vec<_>>>()?;
+            let output_shape = e
+                .get("output")
+                .and_then(|o| o.get("shape"))
+                .and_then(|s| s.as_arr())
+                .ok_or_else(|| anyhow!("{name}: missing output shape"))?
+                .iter()
+                .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<Vec<_>>>()?;
+            executables.push(ExeSpec {
+                name: name.clone(),
+                file: dir.join(file),
+                batch,
+                inputs,
+                output_shape,
+            });
+        }
+        executables.sort_by(|a, b| a.name.cmp(&b.name));
+        Ok(ArtifactDir {
+            dir: dir.to_path_buf(),
+            model_config,
+            executables,
+            hss_config: j.get("hss_config").cloned(),
+        })
+    }
+
+    pub fn exe(&self, name: &str) -> Result<&ExeSpec> {
+        self.executables
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| {
+                anyhow!(
+                    "executable '{name}' not in manifest (have: {})",
+                    self.executables
+                        .iter()
+                        .map(|e| e.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })
+    }
+
+    /// Default artifact location: `$HISOLO_ARTIFACTS` or `./artifacts`.
+    pub fn default_path() -> PathBuf {
+        std::env::var("HISOLO_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+fn parse_input(j: &Json) -> Result<InputSpec> {
+    Ok(InputSpec {
+        name: j
+            .get("name")
+            .and_then(|n| n.as_str())
+            .ok_or_else(|| anyhow!("input missing name"))?
+            .to_string(),
+        dtype: j
+            .get("dtype")
+            .and_then(|d| d.as_str())
+            .ok_or_else(|| anyhow!("input missing dtype"))?
+            .to_string(),
+        shape: j
+            .get("shape")
+            .and_then(|s| s.as_arr())
+            .ok_or_else(|| anyhow!("input missing shape"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join("hisolo_test_manifest");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{
+              "model_config": {"vocab":256,"d_model":64,"n_heads":4,"n_layers":2,"d_ff":128,"seq_len":32},
+              "executables": {
+                "model_dense_b1": {"file":"model_dense_b1.hlo.txt","batch":1,
+                  "inputs":[{"name":"tokens","dtype":"i32","shape":[1,32]}],
+                  "output":{"dtype":"f32","shape":[1,32,256]}}
+              }
+            }"#,
+        )
+        .unwrap();
+        let a = ArtifactDir::load(&dir).unwrap();
+        assert_eq!(a.model_config.d_model, 64);
+        let e = a.exe("model_dense_b1").unwrap();
+        assert_eq!(e.batch, 1);
+        assert_eq!(e.inputs[0].shape, vec![1, 32]);
+        assert_eq!(e.output_shape, vec![1, 32, 256]);
+        assert!(a.exe("nope").is_err());
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let a = ArtifactDir::load(&dir).unwrap();
+        assert_eq!(a.executables.len(), 4);
+        let e = a.exe("model_hss_b8").unwrap();
+        assert_eq!(e.batch, 8);
+        assert_eq!(e.inputs[0].name, "tokens");
+        assert!(e.inputs.len() > 50); // params + hss operands
+    }
+}

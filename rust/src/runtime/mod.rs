@@ -1,0 +1,11 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts (L1 Pallas kernels inside
+//! L2 JAX graphs) and executes them from the Rust request path.
+//!
+//! Python runs only at `make artifacts` time; this module plus the weight
+//! files is everything serving needs.
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{ArtifactDir, ExeSpec, InputSpec};
+pub use client::{LoadedModel, Runtime};

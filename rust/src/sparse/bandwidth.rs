@@ -1,0 +1,95 @@
+//! Bandwidth/profile metrics — quantifies what RCM buys (§5.4 of the paper:
+//! "RCM brings the max entries closer to the diagonal").
+
+use crate::linalg::Matrix;
+
+/// Max |i − j| over entries with |value| > threshold.
+pub fn bandwidth(m: &Matrix, threshold: f32) -> usize {
+    let mut bw = 0usize;
+    for i in 0..m.rows {
+        for j in 0..m.cols {
+            if m.at(i, j).abs() > threshold {
+                bw = bw.max(i.abs_diff(j));
+            }
+        }
+    }
+    bw
+}
+
+/// Envelope/profile: sum over rows of (i − min column index with a nonzero).
+pub fn profile(m: &Matrix, threshold: f32) -> usize {
+    let mut total = 0usize;
+    for i in 0..m.rows {
+        let mut min_j = None;
+        for j in 0..m.cols {
+            if m.at(i, j).abs() > threshold {
+                min_j = Some(j);
+                break;
+            }
+        }
+        if let Some(j) = min_j {
+            total += i.saturating_sub(j);
+        }
+    }
+    total
+}
+
+/// Fraction of magnitude mass within |i − j| <= band (diagonal concentration).
+pub fn mass_within_band(m: &Matrix, band: usize) -> f64 {
+    let mut inside = 0.0f64;
+    let mut total = 0.0f64;
+    for i in 0..m.rows {
+        for j in 0..m.cols {
+            let v = m.at(i, j).abs() as f64;
+            total += v * v;
+            if i.abs_diff(j) <= band {
+                inside += v * v;
+            }
+        }
+    }
+    if total == 0.0 {
+        0.0
+    } else {
+        inside / total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diagonal_has_zero_bandwidth() {
+        let m = Matrix::identity(5);
+        assert_eq!(bandwidth(&m, 0.0), 0);
+    }
+
+    #[test]
+    fn corner_entry_max_bandwidth() {
+        let mut m = Matrix::zeros(6, 6);
+        m.set(0, 5, 1.0);
+        assert_eq!(bandwidth(&m, 0.0), 5);
+    }
+
+    #[test]
+    fn profile_of_lower_triangle() {
+        let m = Matrix::from_fn(4, 4, |i, j| if j <= i { 1.0 } else { 0.0 });
+        // each row's first nonzero is column 0 => profile = 0+1+2+3
+        assert_eq!(profile(&m, 0.0), 6);
+    }
+
+    #[test]
+    fn mass_within_band_bounds() {
+        let m = Matrix::randn(10, 10, 1);
+        let f0 = mass_within_band(&m, 0);
+        let f9 = mass_within_band(&m, 9);
+        assert!(f0 >= 0.0 && f0 <= f9);
+        assert!((f9 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_matrix_mass() {
+        let m = Matrix::zeros(4, 4);
+        assert_eq!(mass_within_band(&m, 2), 0.0);
+    }
+}

@@ -1,0 +1,112 @@
+//! Coordinate-format sparse matrix (the S "spike" matrix of the paper).
+
+use crate::linalg::Matrix;
+
+#[derive(Clone, Debug, Default)]
+pub struct Coo {
+    pub rows: usize,
+    pub cols: usize,
+    pub ri: Vec<u32>,
+    pub ci: Vec<u32>,
+    pub v: Vec<f32>,
+}
+
+impl Coo {
+    pub fn new(rows: usize, cols: usize) -> Coo {
+        Coo {
+            rows,
+            cols,
+            ri: Vec::new(),
+            ci: Vec::new(),
+            v: Vec::new(),
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.v.len()
+    }
+
+    pub fn push(&mut self, r: usize, c: usize, val: f32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.ri.push(r as u32);
+        self.ci.push(c as u32);
+        self.v.push(val);
+    }
+
+    /// y += S x.
+    pub fn matvec_add(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        for k in 0..self.v.len() {
+            y[self.ri[k] as usize] += self.v[k] * x[self.ci[k] as usize];
+        }
+    }
+
+    pub fn to_dense(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.rows, self.cols);
+        for k in 0..self.v.len() {
+            let (i, j) = (self.ri[k] as usize, self.ci[k] as usize);
+            m.data[i * self.cols + j] += self.v[k];
+        }
+        m
+    }
+
+    /// Sort entries row-major (the TPU segment-sum layout; also what the
+    /// python exporter emits).
+    pub fn sort_row_major(&mut self) {
+        let mut idx: Vec<usize> = (0..self.v.len()).collect();
+        idx.sort_by_key(|&k| (self.ri[k], self.ci[k]));
+        self.ri = idx.iter().map(|&k| self.ri[k]).collect();
+        self.ci = idx.iter().map(|&k| self.ci[k]).collect();
+        self.v = idx.iter().map(|&k| self.v[k]).collect();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matvec_matches_dense() {
+        let mut s = Coo::new(4, 4);
+        s.push(0, 1, 2.0);
+        s.push(3, 0, -1.0);
+        s.push(1, 1, 0.5);
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let mut y = vec![0.0; 4];
+        s.matvec_add(&x, &mut y);
+        let expect = s.to_dense().matvec(&x);
+        assert_eq!(y, expect);
+    }
+
+    #[test]
+    fn duplicates_accumulate() {
+        let mut s = Coo::new(2, 2);
+        s.push(0, 0, 1.0);
+        s.push(0, 0, 2.0);
+        assert_eq!(s.to_dense().at(0, 0), 3.0);
+        let mut y = vec![0.0; 2];
+        s.matvec_add(&[1.0, 0.0], &mut y);
+        assert_eq!(y[0], 3.0);
+    }
+
+    #[test]
+    fn sort_row_major_orders() {
+        let mut s = Coo::new(3, 3);
+        s.push(2, 1, 1.0);
+        s.push(0, 2, 2.0);
+        s.push(2, 0, 3.0);
+        s.sort_row_major();
+        assert_eq!(s.ri, vec![0, 2, 2]);
+        assert_eq!(s.ci, vec![2, 0, 1]);
+        assert_eq!(s.v, vec![2.0, 3.0, 1.0]);
+    }
+
+    #[test]
+    fn empty_matvec_is_noop() {
+        let s = Coo::new(3, 3);
+        let mut y = vec![1.0; 3];
+        s.matvec_add(&[1.0; 3], &mut y);
+        assert_eq!(y, vec![1.0; 3]);
+    }
+}

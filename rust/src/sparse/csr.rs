@@ -1,0 +1,164 @@
+//! Compressed-sparse-row matrix — the runtime format for the spike matrix S
+//! (row-contiguous spmv on the native hot path).
+
+use crate::linalg::Matrix;
+use crate::sparse::Coo;
+
+#[derive(Clone, Debug)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    pub indptr: Vec<u32>,
+    pub indices: Vec<u32>,
+    pub data: Vec<f32>,
+}
+
+impl Csr {
+    pub fn from_coo(coo: &Coo) -> Csr {
+        let mut counts = vec![0u32; coo.rows + 1];
+        for &r in &coo.ri {
+            counts[r as usize + 1] += 1;
+        }
+        for i in 0..coo.rows {
+            counts[i + 1] += counts[i];
+        }
+        let indptr = counts.clone();
+        let mut cursor = counts;
+        let nnz = coo.nnz();
+        let mut indices = vec![0u32; nnz];
+        let mut data = vec![0.0f32; nnz];
+        for k in 0..nnz {
+            let r = coo.ri[k] as usize;
+            let pos = cursor[r] as usize;
+            indices[pos] = coo.ci[k];
+            data[pos] = coo.v[k];
+            cursor[r] += 1;
+        }
+        Csr {
+            rows: coo.rows,
+            cols: coo.cols,
+            indptr,
+            indices,
+            data,
+        }
+    }
+
+    pub fn from_dense(m: &Matrix, threshold: f32) -> Csr {
+        let mut coo = Coo::new(m.rows, m.cols);
+        for i in 0..m.rows {
+            for j in 0..m.cols {
+                let v = m.at(i, j);
+                if v.abs() > threshold {
+                    coo.push(i, j, v);
+                }
+            }
+        }
+        Csr::from_coo(&coo)
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.data.len()
+    }
+
+    /// y += S x. Row loop with 4 independent accumulators — the gather
+    /// x[indices[k]] is the bound; unrolling hides its latency
+    /// (EXPERIMENTS.md §Perf).
+    pub fn matvec_add(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        for i in 0..self.rows {
+            let lo = self.indptr[i] as usize;
+            let hi = self.indptr[i + 1] as usize;
+            let idx = &self.indices[lo..hi];
+            let val = &self.data[lo..hi];
+            let n = idx.len();
+            let mut acc = [0.0f32; 4];
+            let chunks = n / 4;
+            for c in 0..chunks {
+                let b = c * 4;
+                for l in 0..4 {
+                    acc[l] += val[b + l] * x[idx[b + l] as usize];
+                }
+            }
+            let mut total = acc[0] + acc[1] + acc[2] + acc[3];
+            for k in chunks * 4..n {
+                total += val[k] * x[idx[k] as usize];
+            }
+            y[i] += total;
+        }
+    }
+
+    /// y = S x.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        let mut y = vec![0.0; self.rows];
+        self.matvec_add(x, &mut y);
+        y
+    }
+
+    pub fn to_dense(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            for k in self.indptr[i] as usize..self.indptr[i + 1] as usize {
+                // duplicates accumulate, matching Coo::to_dense semantics
+                m.data[i * self.cols + self.indices[k] as usize] += self.data[k];
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, slices_close};
+    use crate::util::rng::Rng;
+
+    fn random_coo(rng: &mut Rng, n: usize, nnz: usize) -> Coo {
+        let mut coo = Coo::new(n, n);
+        for _ in 0..nnz {
+            coo.push(rng.below(n), rng.below(n), rng.gaussian_f32());
+        }
+        coo
+    }
+
+    #[test]
+    fn from_coo_roundtrip_dense() {
+        let mut rng = Rng::new(1);
+        let coo = random_coo(&mut rng, 10, 30);
+        let csr = Csr::from_coo(&coo);
+        assert_eq!(csr.to_dense().data, coo.to_dense().data);
+    }
+
+    #[test]
+    fn spmv_matches_dense_property() {
+        check(20, |rng| {
+            let n = 2 + rng.below(40);
+            let nnz = rng.below(3 * n + 1);
+            let coo = random_coo(rng, n, nnz);
+            let csr = Csr::from_coo(&coo);
+            let x: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+            let expect = csr.to_dense().matvec(&x);
+            let got = csr.matvec(&x);
+            slices_close(&got, &expect, 1e-5, 1e-5, "spmv")
+        });
+    }
+
+    #[test]
+    fn from_dense_thresholds() {
+        let mut m = Matrix::zeros(3, 3);
+        m.set(0, 0, 5.0);
+        m.set(1, 2, 0.001);
+        let csr = Csr::from_dense(&m, 0.01);
+        assert_eq!(csr.nnz(), 1);
+        assert_eq!(csr.to_dense().at(0, 0), 5.0);
+    }
+
+    #[test]
+    fn empty_rows_handled() {
+        let mut coo = Coo::new(5, 5);
+        coo.push(4, 4, 1.0);
+        let csr = Csr::from_coo(&coo);
+        let y = csr.matvec(&[1.0; 5]);
+        assert_eq!(y, vec![0.0, 0.0, 0.0, 0.0, 1.0]);
+    }
+}

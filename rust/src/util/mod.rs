@@ -1,0 +1,14 @@
+//! Shared substrates: PRNG, fp16 codec, JSON, CLI parsing, bench timing,
+//! logging, and a tiny property-test driver.
+//!
+//! These exist as first-class modules because the build environment is fully
+//! offline: the usual crates (rand, serde, clap, criterion, proptest) are not
+//! available, and each substrate here is exercised by the rest of the stack.
+
+pub mod cli;
+pub mod fp16;
+pub mod json;
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+pub mod timer;

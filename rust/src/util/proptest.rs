@@ -1,0 +1,84 @@
+//! Tiny property-test driver (proptest is unavailable offline).
+//!
+//! `check(cases, |rng| ...)` runs a closure over `cases` seeded RNGs; on
+//! failure it reports the seed so the case can be replayed with
+//! `replay(seed, ...)`. Used by the linalg/sparse/hss invariant suites.
+
+use crate::util::rng::Rng;
+
+/// Run `prop` for `cases` deterministic seeds; panic with the failing seed.
+pub fn check<F: FnMut(&mut Rng) -> Result<(), String>>(cases: u64, mut prop: F) {
+    for seed in 0..cases {
+        let mut rng = Rng::new(0xD15EA5Eu64.wrapping_add(seed.wrapping_mul(0x9E3779B97F4A7C15)));
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Replay a single failing seed (for debugging).
+pub fn replay<F: FnMut(&mut Rng) -> Result<(), String>>(seed: u64, mut prop: F) {
+    let mut rng = Rng::new(0xD15EA5E + seed * 0x9E3779B97F4A7C15);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("property failed at seed {seed}: {msg}");
+    }
+}
+
+/// Assertion helper: relative closeness for floats with context.
+pub fn close(a: f64, b: f64, rtol: f64, atol: f64, what: &str) -> Result<(), String> {
+    if (a - b).abs() <= atol + rtol * b.abs().max(a.abs()) {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} != {b} (rtol {rtol}, atol {atol})"))
+    }
+}
+
+/// Assertion helper: element-wise slice closeness.
+pub fn slices_close(a: &[f32], b: &[f32], rtol: f32, atol: f32, what: &str) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("{what}: length {} != {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        if (x - y).abs() > atol + rtol * y.abs().max(x.abs()) {
+            return Err(format!("{what}[{i}]: {x} != {y}"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true_property() {
+        check(20, |rng| {
+            let x = rng.uniform();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failures() {
+        check(5, |rng| {
+            if rng.uniform() < 2.0 {
+                Err("always".to_string())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn close_helpers() {
+        assert!(close(1.0, 1.0 + 1e-9, 1e-6, 0.0, "x").is_ok());
+        assert!(close(1.0, 2.0, 1e-6, 0.0, "x").is_err());
+        assert!(slices_close(&[1.0, 2.0], &[1.0, 2.0], 1e-6, 1e-6, "v").is_ok());
+        assert!(slices_close(&[1.0], &[1.0, 2.0], 1e-6, 1e-6, "v").is_err());
+    }
+}

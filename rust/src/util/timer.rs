@@ -1,0 +1,184 @@
+//! Bench timing harness (criterion is unavailable offline).
+//!
+//! Provides warmup + repeated measurement with trimmed statistics, and an
+//! aligned table printer used by every `benches/` target so each bench emits
+//! the rows/series of the paper table it regenerates.
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics over repeated timed runs.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+    pub stddev_ns: f64,
+}
+
+impl Stats {
+    pub fn from_samples(mut ns: Vec<f64>) -> Stats {
+        assert!(!ns.is_empty());
+        ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = ns.len();
+        let mean = ns.iter().sum::<f64>() / n as f64;
+        let var = ns.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let pct = |p: f64| ns[((p * n as f64) as usize).min(n - 1)];
+        Stats {
+            iters: n,
+            mean_ns: mean,
+            p50_ns: pct(0.50),
+            p95_ns: pct(0.95),
+            p99_ns: pct(0.99),
+            min_ns: ns[0],
+            stddev_ns: var.sqrt(),
+        }
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+}
+
+/// Human-readable duration.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.2}s", ns / 1e9)
+    }
+}
+
+/// Time `f` with warmup; runs until `budget` is used or `max_iters` reached.
+pub fn bench<F: FnMut()>(mut f: F, warmup: usize, budget: Duration, max_iters: usize) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < budget && samples.len() < max_iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    if samples.is_empty() {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    Stats::from_samples(samples)
+}
+
+/// Quick bench with sane defaults (3 warmup, 2s budget, 10k iters).
+pub fn quick_bench<F: FnMut()>(f: F) -> Stats {
+    bench(f, 3, Duration::from_secs(2), 10_000)
+}
+
+/// Aligned plain-text table printer.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |cells: &[String], widths: &[usize], out: &mut String| {
+            for (i, c) in cells.iter().enumerate() {
+                out.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+            }
+            out.push('\n');
+        };
+        line(&self.headers, &widths, &mut out);
+        let total: usize = widths.iter().sum::<usize>() + widths.len() * 2;
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            line(row, &widths, &mut out);
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.to_string());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_percentiles_ordering() {
+        let s = Stats::from_samples((1..=100).map(|x| x as f64).collect());
+        assert!(s.min_ns <= s.p50_ns);
+        assert!(s.p50_ns <= s.p95_ns);
+        assert!(s.p95_ns <= s.p99_ns);
+        assert_eq!(s.iters, 100);
+        assert!((s.mean_ns - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bench_measures_something() {
+        let mut acc = 0u64;
+        let s = bench(
+            || {
+                for i in 0..1000 {
+                    acc = acc.wrapping_add(i);
+                }
+            },
+            1,
+            Duration::from_millis(50),
+            1000,
+        );
+        assert!(s.iters >= 1);
+        assert!(s.mean_ns > 0.0);
+        std::hint::black_box(acc);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["method", "ppl"]);
+        t.row(&["sHSS-RCM".into(), "1.64".into()]);
+        t.row(&["dense".into(), "1.7".into()]);
+        let s = t.to_string();
+        assert!(s.contains("sHSS-RCM"));
+        assert!(s.lines().count() == 4);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(500.0), "500ns");
+        assert!(fmt_ns(1.5e3).ends_with("us"));
+        assert!(fmt_ns(2.5e6).ends_with("ms"));
+        assert!(fmt_ns(3.0e9).ends_with('s'));
+    }
+}

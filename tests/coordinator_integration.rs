@@ -1,0 +1,150 @@
+//! Coordinator end-to-end over the native scorers: the serving path must
+//! produce exactly the same perplexity as the direct evaluation harness.
+
+use hisolo::compress::{CompressorConfig, Method};
+use hisolo::coordinator::worker::{NativeCompressedScorer, NativeDenseScorer};
+use hisolo::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, Variant};
+use hisolo::data::dataset::windows;
+use hisolo::eval::perplexity::perplexity;
+use hisolo::model::{CompressedModel, ModelConfig, Transformer};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn tiny_model() -> Arc<Transformer> {
+    Arc::new(Transformer::random(
+        ModelConfig {
+            vocab: 64,
+            d_model: 32,
+            n_heads: 4,
+            n_layers: 2,
+            d_ff: 64,
+            seq_len: 16,
+        },
+        5,
+    ))
+}
+
+fn tiny_windows(model: &Transformer, count: usize) -> Vec<Vec<u32>> {
+    let toks: Vec<u32> = (0..2000u32).map(|i| (i * 31 + i / 5) % 64).collect();
+    windows(&toks, model.cfg.seq_len, count)
+}
+
+#[test]
+fn coordinator_ppl_matches_direct_eval() {
+    let model = tiny_model();
+    let ws = tiny_windows(&model, 10);
+
+    let mut coord = Coordinator::new(CoordinatorConfig {
+        batcher: BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+            capacity: 64,
+        },
+    });
+    coord.add_worker(
+        Variant::Dense,
+        NativeDenseScorer {
+            model: model.clone(),
+            max_batch: 4,
+        },
+    );
+
+    let resps = coord.submit_all(Variant::Dense, &ws).unwrap();
+    assert!(resps.iter().all(|r| r.error.is_none()));
+    let nll: f64 = resps.iter().map(|r| r.nll).sum();
+    let toks: usize = resps.iter().map(|r| r.tokens).sum();
+    let served_ppl = (nll / toks as f64).exp();
+
+    let direct = perplexity(&ws, |t| model.forward(t));
+    assert!(
+        (served_ppl - direct.ppl).abs() < 1e-9,
+        "served {served_ppl} vs direct {}",
+        direct.ppl
+    );
+    coord.shutdown();
+}
+
+#[test]
+fn dense_and_compressed_lanes_agree_at_high_rank() {
+    let model = tiny_model();
+    let ws = tiny_windows(&model, 6);
+    let cm = Arc::new(CompressedModel::compress(
+        model.clone(),
+        Method::SHssRcm,
+        CompressorConfig {
+            rank: 16, // full off-diagonal rank at d=32 => near-lossless
+            sparsity: 0.2,
+            depth: 1,
+            hss_rsvd: false,
+            min_leaf: 4,
+            ..Default::default()
+        },
+    ));
+
+    let mut coord = Coordinator::new(CoordinatorConfig::default());
+    coord.add_worker(
+        Variant::Dense,
+        NativeDenseScorer {
+            model: model.clone(),
+            max_batch: 4,
+        },
+    );
+    coord.add_worker(
+        Variant::Hss,
+        NativeCompressedScorer {
+            model: cm,
+            max_batch: 4,
+        },
+    );
+
+    let dense = coord.submit_all(Variant::Dense, &ws).unwrap();
+    let hss = coord.submit_all(Variant::Hss, &ws).unwrap();
+    let ppl = |rs: &[hisolo::coordinator::ScoreResponse]| {
+        let nll: f64 = rs.iter().map(|r| r.nll).sum();
+        let toks: usize = rs.iter().map(|r| r.tokens).sum();
+        (nll / toks as f64).exp()
+    };
+    let (pd, ph) = (ppl(&dense), ppl(&hss));
+    assert!((pd - ph).abs() / pd < 0.02, "dense {pd} vs hss {ph}");
+    coord.shutdown();
+}
+
+#[test]
+fn backpressure_surfaces_as_errors_not_hangs() {
+    let model = tiny_model();
+    let mut coord = Coordinator::new(CoordinatorConfig {
+        batcher: BatcherConfig {
+            max_batch: 2,
+            max_wait: Duration::from_millis(1),
+            capacity: 2, // tiny queue
+        },
+    });
+    coord.add_worker(
+        Variant::Dense,
+        NativeDenseScorer {
+            model: model.clone(),
+            max_batch: 2,
+        },
+    );
+    let ws = tiny_windows(&model, 64);
+    // fire-hose submits; some may be rejected, none may hang
+    let mut accepted = Vec::new();
+    let mut rejected = 0usize;
+    for w in &ws {
+        match coord.submit(Variant::Dense, w.clone()) {
+            Ok(rx) => accepted.push(rx),
+            Err(_) => rejected += 1,
+        }
+    }
+    for rx in accepted {
+        let r = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert!(r.error.is_none());
+    }
+    // metrics are consistent
+    let m = &coord.metrics;
+    let sub = m.submitted.load(std::sync::atomic::Ordering::Relaxed);
+    let rej = m.rejected.load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(rej as usize, rejected);
+    assert_eq!(sub as usize, ws.len());
+    coord.shutdown();
+}
