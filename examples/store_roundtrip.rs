@@ -1,0 +1,104 @@
+//! Store round-trip demo: compress a model's q/k/v once, persist the HSB1
+//! artifact store, cold-start a serving coordinator from disk (no
+//! recompression), then hot-swap to a second variant under live traffic.
+//!
+//!     cargo run --release --example store_roundtrip
+
+use hisolo::compress::{CompressorConfig, Method};
+use hisolo::coordinator::worker::NativeCompressedScorer;
+use hisolo::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, Variant};
+use hisolo::data::dataset::windows;
+use hisolo::model::{CompressedModel, ModelConfig, Transformer};
+use hisolo::store::ModelStore;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() -> anyhow::Result<()> {
+    let base = Arc::new(Transformer::random(ModelConfig::default(), 42));
+    let store = ModelStore::open(std::env::temp_dir().join("hisolo_store_demo"));
+
+    // 1. compress twice (expensive) and persist both variants (cheap)
+    for (variant, method, rank) in [
+        ("shss-rcm-r32", Method::SHssRcm, 32),
+        ("shss-rcm-r16", Method::SHssRcm, 16),
+    ] {
+        let cfg = CompressorConfig {
+            rank,
+            sparsity: 0.3,
+            depth: 3,
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        let cm = CompressedModel::compress(base.clone(), method, cfg);
+        let compress_s = t0.elapsed().as_secs_f64();
+        let path = store.save_model(variant, &cm)?;
+        println!(
+            "{variant}: compressed in {compress_s:.2}s, {} bytes on disk ({:.3}x of dense qkv) -> {}",
+            store.variant_bytes(variant),
+            cm.qkv_raw_bytes() as f64 / cm.qkv_dense_bytes() as f64,
+            path.display()
+        );
+    }
+
+    // 2. cold start: load without recompression and serve
+    let t0 = Instant::now();
+    let first = Arc::new(store.load_model("shss-rcm-r32", base.clone())?);
+    println!(
+        "\ncold start from store: {:.1} ms (vs seconds of recompression)",
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+
+    let mut coord = Coordinator::new(CoordinatorConfig {
+        batcher: BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            capacity: 1024,
+        },
+    });
+    coord.add_worker(
+        Variant::Hss,
+        NativeCompressedScorer {
+            model: first,
+            max_batch: 8,
+        },
+    );
+
+    let toks: Vec<u32> = (0..20_000u32).map(|i| (i * 1103515245 + 12345) % 256).collect();
+    let ws = windows(&toks, base.cfg.seq_len, 24);
+
+    let before = coord.submit_all(Variant::Hss, &ws)?;
+    report("rank-32 variant", &before);
+
+    // 3. hot-swap to the rank-16 variant while the lane stays registered;
+    //    requests submitted during the swap are served by whichever scorer
+    //    owns the batch — never a torn mix
+    let swap_store = ModelStore::open(store.dir().to_path_buf());
+    let swap_base = base.clone();
+    let ticket = coord.swap_variant(Variant::Hss, move || {
+        let model = Arc::new(swap_store.load_model("shss-rcm-r16", swap_base.clone())?);
+        Ok(NativeCompressedScorer {
+            model,
+            max_batch: 8,
+        })
+    })?;
+    ticket.wait(Duration::from_secs(10))?;
+    println!("\nhot-swapped to rank-16 variant (no dropped requests)");
+
+    let after = coord.submit_all(Variant::Hss, &ws)?;
+    report("rank-16 variant", &after);
+
+    println!("\nmetrics: {}", coord.metrics.summary());
+    coord.shutdown();
+    Ok(())
+}
+
+fn report(label: &str, resps: &[hisolo::coordinator::ScoreResponse]) {
+    let nll: f64 = resps.iter().map(|r| r.nll).sum();
+    let toks: usize = resps.iter().map(|r| r.tokens).sum();
+    let errors = resps.iter().filter(|r| r.error.is_some()).count();
+    println!(
+        "{label}: {} responses, {errors} errors, ppl {:.4}",
+        resps.len(),
+        (nll / toks as f64).exp()
+    );
+}

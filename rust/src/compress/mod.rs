@@ -10,7 +10,7 @@ pub mod config;
 pub mod method;
 pub mod pipeline;
 
-pub use compressed::CompressedMatrix;
+pub use compressed::{ApplyWorkspace, CompressedMatrix};
 pub use config::CompressorConfig;
 pub use method::Method;
 pub use pipeline::{compress_model_qkv, LayerReport};

@@ -48,6 +48,18 @@ pub fn compress_model_qkv(
         .collect()
 }
 
+/// Persist a pipeline result as one `HSB1` store file (method and
+/// compression-time error recorded per entry, so a later
+/// `CompressedModel::from_store` needs no dense weights). Returns the byte
+/// count written.
+pub fn save_reports(reports: &[LayerReport], path: &std::path::Path) -> anyhow::Result<u64> {
+    let mut w = crate::store::StoreWriter::new();
+    for r in reports {
+        w.push_with_meta(&r.name, &r.compressed, Some(r.method), r.rel_error);
+    }
+    w.finish(path)
+}
+
 /// Aggregate totals over layer reports.
 pub struct PipelineSummary {
     pub total_params: usize,
@@ -124,6 +136,34 @@ mod tests {
         assert_eq!(s.total_bytes, reports.iter().map(|r| r.bytes).sum::<usize>());
         assert!(s.total_dense_bytes > s.total_bytes);
         assert!(s.mean_rel_error > 0.0);
+    }
+
+    #[test]
+    fn save_reports_roundtrips_through_store() {
+        let projs = fake_projections(32, 1);
+        let reports = compress_model_qkv(
+            &projs,
+            Method::SHssRcm,
+            CompressorConfig {
+                rank: 4,
+                sparsity: 0.1,
+                depth: 1,
+                min_leaf: 4,
+                ..Default::default()
+            },
+        );
+        let dir = std::env::temp_dir().join("hisolo_test_pipeline_save");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("qkv.hsb1");
+        let written = save_reports(&reports, &path).unwrap();
+        assert!(written > 0);
+        let file = crate::store::StoreFile::open(&path).unwrap();
+        assert_eq!(file.len(), 3);
+        for r in &reports {
+            let m = file.load(&r.name).unwrap();
+            assert_eq!(m.params(), r.params, "{}", r.name);
+            assert_eq!(file.meta(&r.name).unwrap().method, Some(Method::SHssRcm));
+        }
     }
 
     #[test]

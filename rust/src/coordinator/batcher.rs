@@ -31,6 +31,16 @@ struct State<T> {
     closed: bool,
 }
 
+/// Outcome of a bounded-wait [`Batcher::poll_batch`].
+pub enum BatchPoll<T> {
+    /// A non-empty batch of up to `max_batch` items.
+    Batch(Vec<T>),
+    /// Nothing arrived within the idle window; the queue is still open.
+    Idle,
+    /// Closed and fully drained.
+    Closed,
+}
+
 /// MPMC dynamic batching queue.
 pub struct Batcher<T> {
     cfg: BatcherConfig,
@@ -66,13 +76,33 @@ impl<T> Batcher<T> {
     /// Waits for the first item indefinitely, then up to `max_wait` for the
     /// batch to fill.
     pub fn pop_batch(&self) -> Option<Vec<T>> {
+        loop {
+            match self.poll_batch(Duration::from_millis(100)) {
+                BatchPoll::Batch(b) => return Some(b),
+                BatchPoll::Idle => continue,
+                BatchPoll::Closed => return None,
+            }
+        }
+    }
+
+    /// Bounded-wait pop: waits up to `idle_wait` for the first item, then up
+    /// to `max_wait` for the batch to fill. Returning [`BatchPoll::Idle`] on
+    /// an empty window gives the caller a chance to service control work
+    /// (e.g. a pending scorer hot-swap) without dropping requests.
+    pub fn poll_batch(&self, idle_wait: Duration) -> BatchPoll<T> {
         let mut s = self.state.lock().unwrap();
-        // wait for the first item (or close)
+        // wait for the first item (or close / idle timeout)
+        let idle_deadline = Instant::now() + idle_wait;
         while s.queue.is_empty() {
             if s.closed {
-                return None;
+                return BatchPoll::Closed;
             }
-            s = self.cv.wait(s).unwrap();
+            let now = Instant::now();
+            if now >= idle_deadline {
+                return BatchPoll::Idle;
+            }
+            let (ns, _) = self.cv.wait_timeout(s, idle_deadline - now).unwrap();
+            s = ns;
         }
         // batch-fill window
         let deadline = Instant::now() + self.cfg.max_wait;
@@ -88,7 +118,17 @@ impl<T> Batcher<T> {
             }
         }
         let take = s.queue.len().min(self.cfg.max_batch);
-        Some(s.queue.drain(..take).collect())
+        if take == 0 {
+            // another consumer drained the queue while this one released
+            // the lock inside the fill window — report Idle rather than an
+            // empty batch (which would pollute batch-size metrics)
+            return if s.closed {
+                BatchPoll::Closed
+            } else {
+                BatchPoll::Idle
+            };
+        }
+        BatchPoll::Batch(s.queue.drain(..take).collect())
     }
 
     /// Close the queue; pending items are still drained by pop_batch.
@@ -162,6 +202,27 @@ mod tests {
         assert!(b.push(1).is_ok());
         assert!(b.push(2).is_ok());
         assert_eq!(b.push(3), Err(3));
+    }
+
+    #[test]
+    fn poll_batch_reports_idle_then_batches() {
+        let b = Batcher::new(cfg(4, 1, 100));
+        let t0 = std::time::Instant::now();
+        assert!(matches!(
+            b.poll_batch(Duration::from_millis(5)),
+            BatchPoll::Idle
+        ));
+        assert!(t0.elapsed() >= Duration::from_millis(5));
+        b.push(9).unwrap();
+        match b.poll_batch(Duration::from_millis(5)) {
+            BatchPoll::Batch(v) => assert_eq!(v, vec![9]),
+            _ => panic!("expected a batch"),
+        }
+        b.close();
+        assert!(matches!(
+            b.poll_batch(Duration::from_millis(5)),
+            BatchPoll::Closed
+        ));
     }
 
     #[test]

@@ -13,6 +13,8 @@ pub struct Metrics {
     pub errors: AtomicU64,
     pub batches: AtomicU64,
     pub batched_requests: AtomicU64,
+    /// scorer hot-swaps applied by workers (see `Coordinator::swap_variant`)
+    pub swaps: AtomicU64,
     latency_buckets: [AtomicU64; BUCKETS],
 }
 
@@ -31,6 +33,7 @@ impl Metrics {
             errors: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             batched_requests: AtomicU64::new(0),
+            swaps: AtomicU64::new(0),
             latency_buckets: std::array::from_fn(|_| AtomicU64::new(0)),
         }
     }
@@ -80,11 +83,12 @@ impl Metrics {
 
     pub fn summary(&self) -> String {
         format!(
-            "submitted={} completed={} rejected={} errors={} batches={} mean_batch={:.2} p50={}us p95={}us p99={}us",
+            "submitted={} completed={} rejected={} errors={} swaps={} batches={} mean_batch={:.2} p50={}us p95={}us p99={}us",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
             self.errors.load(Ordering::Relaxed),
+            self.swaps.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.mean_batch_size(),
             self.latency_percentile_us(0.5),

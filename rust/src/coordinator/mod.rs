@@ -1,5 +1,5 @@
 //! L3 serving coordinator: dynamic batcher, worker threads per model
-//! variant, round-robin routing, and metrics.
+//! variant, round-robin routing, scorer hot-swap, and metrics.
 //!
 //! The paper's contribution lives at the compression layer, so the
 //! coordinator is the serving shell around it (DESIGN.md §3): requests are
@@ -13,8 +13,8 @@ pub mod request;
 pub mod server;
 pub mod worker;
 
-pub use batcher::{Batcher, BatcherConfig};
+pub use batcher::{BatchPoll, Batcher, BatcherConfig};
 pub use metrics::Metrics;
 pub use request::{ScoreRequest, ScoreResponse, Variant};
-pub use server::{Coordinator, CoordinatorConfig};
-pub use worker::Scorer;
+pub use server::{Coordinator, CoordinatorConfig, SwapTicket};
+pub use worker::{BoxScorer, Scorer, ScorerFactory, SwapRequest};

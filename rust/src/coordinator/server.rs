@@ -1,16 +1,19 @@
 //! The coordinator facade: one batcher + worker thread per model variant,
-//! a submit API with backpressure, metrics, and graceful shutdown.
+//! a submit API with backpressure, metrics, scorer hot-swap, and graceful
+//! shutdown.
 
 use crate::coordinator::batcher::{Batcher, BatcherConfig};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{ScoreRequest, ScoreResponse, Variant};
-use crate::coordinator::worker::{run_worker, Scorer};
+use crate::coordinator::worker::{
+    run_worker_init_failed, run_worker_swappable, BoxScorer, Scorer, SwapRequest,
+};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver};
-use std::sync::Arc;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 #[derive(Clone, Copy, Debug, Default)]
 pub struct CoordinatorConfig {
@@ -20,6 +23,8 @@ pub struct CoordinatorConfig {
 struct VariantLane {
     batcher: Arc<Batcher<ScoreRequest>>,
     workers: Vec<JoinHandle<()>>,
+    /// one swap mailbox per worker (mutexed so `Coordinator` stays `Sync`)
+    swap_txs: Vec<Mutex<Sender<SwapRequest>>>,
 }
 
 /// The serving coordinator. Register one or more scorers per variant, then
@@ -57,35 +62,69 @@ impl Coordinator {
         let lane = self.lanes.entry(variant).or_insert_with(|| VariantLane {
             batcher: Arc::new(Batcher::new(self.cfg.batcher)),
             workers: Vec::new(),
+            swap_txs: Vec::new(),
         });
         let batcher = lane.batcher.clone();
         let metrics = self.metrics.clone();
+        let (swap_tx, swap_rx) = channel();
+        lane.swap_txs.push(Mutex::new(swap_tx));
         lane.workers.push(std::thread::spawn(move || {
             match factory() {
-                Ok(scorer) => run_worker(scorer, batcher, metrics),
+                Ok(scorer) => {
+                    run_worker_swappable(Box::new(scorer), batcher, metrics, swap_rx)
+                }
                 Err(e) => {
                     crate::util::logging::log(
                         crate::util::logging::Level::Error,
                         format_args!("worker factory failed: {e:#}"),
                     );
-                    // drain queue with errors so submitters don't hang
-                    while let Some(batch) = batcher.pop_batch() {
-                        for req in batch {
-                            metrics.errors.fetch_add(1, Ordering::Relaxed);
-                            let _ = req.reply.send(ScoreResponse {
-                                id: req.id,
-                                variant: req.variant,
-                                nll: f64::NAN,
-                                tokens: 0,
-                                latency_us: 0,
-                                batch_size: 0,
-                                error: Some(format!("worker init failed: {e:#}")),
-                            });
-                        }
-                    }
+                    // drain requests with errors, but keep the swap mailbox
+                    // live so a later swap_variant can repair the lane
+                    run_worker_init_failed(format!("{e:#}"), batcher, metrics, swap_rx)
                 }
             }
         }));
+    }
+
+    /// Atomically replace the scorer(s) serving `variant` while requests
+    /// are in flight. The factory runs once per worker, *on that worker's
+    /// thread* (PJRT clients are `!Send`); each worker installs the new
+    /// scorer between batches, so every request is answered wholly by the
+    /// old or wholly by the new model — never a mix. A factory error keeps
+    /// the old scorer serving and surfaces through the returned
+    /// [`SwapTicket`].
+    pub fn swap_variant<S, F>(&self, variant: Variant, factory: F) -> anyhow::Result<SwapTicket>
+    where
+        S: Scorer + 'static,
+        F: Fn() -> anyhow::Result<S> + Send + Sync + 'static,
+    {
+        let lane = self
+            .lanes
+            .get(&variant)
+            .ok_or_else(|| anyhow::anyhow!("no worker registered for variant {variant:?}"))?;
+        let factory = Arc::new(factory);
+        let (ack_tx, ack_rx) = channel();
+        // deliver to every worker before judging the outcome: aborting on
+        // the first dead mailbox would leave earlier workers swapped while
+        // the caller believes nothing changed
+        let mut expected = 0;
+        let mut undelivered = 0;
+        for tx in &lane.swap_txs {
+            let f = factory.clone();
+            let req = SwapRequest {
+                factory: Box::new(move || (*f)().map(|s| Box::new(s) as BoxScorer)),
+                ack: ack_tx.clone(),
+            };
+            match tx.lock().unwrap().send(req) {
+                Ok(()) => expected += 1,
+                Err(_) => undelivered += 1, // worker thread has exited
+            }
+        }
+        Ok(SwapTicket {
+            expected,
+            undelivered,
+            acks: ack_rx,
+        })
     }
 
     /// Submit one window; the response arrives on the returned receiver.
@@ -130,6 +169,11 @@ impl Coordinator {
             .collect()
     }
 
+    /// Worker count for a variant (0 if unregistered).
+    pub fn worker_count(&self, variant: Variant) -> usize {
+        self.lanes.get(&variant).map_or(0, |l| l.workers.len())
+    }
+
     /// Close all queues and join workers.
     pub fn shutdown(mut self) {
         for (_, lane) in self.lanes.iter() {
@@ -140,6 +184,57 @@ impl Coordinator {
                 let _ = w.join();
             }
         }
+    }
+}
+
+/// Handle on an in-flight [`Coordinator::swap_variant`]: one ack per
+/// worker the request reached.
+pub struct SwapTicket {
+    expected: usize,
+    /// workers whose mailbox was gone (thread exited) at send time
+    undelivered: usize,
+    acks: Receiver<Result<(), String>>,
+}
+
+impl SwapTicket {
+    /// Workers that must acknowledge before the swap is complete.
+    pub fn expected_acks(&self) -> usize {
+        self.expected
+    }
+
+    /// Workers the swap never reached because their thread had exited.
+    pub fn undelivered(&self) -> usize {
+        self.undelivered
+    }
+
+    /// Block until every reachable worker applied the swap (or any
+    /// rejected it). Requests keep flowing the whole time — this only
+    /// waits for the *new* scorer to take over. Errors if any worker
+    /// rejected the swap or was unreachable, after collecting the acks
+    /// from the workers that did swap.
+    pub fn wait(self, timeout: Duration) -> anyhow::Result<()> {
+        let deadline = Instant::now() + timeout;
+        for done in 0..self.expected {
+            let left = deadline
+                .checked_duration_since(Instant::now())
+                .unwrap_or_default();
+            match self.acks.recv_timeout(left) {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => anyhow::bail!("swap rejected by a worker: {e}"),
+                Err(_) => anyhow::bail!(
+                    "swap not acknowledged in time ({done}/{} workers)",
+                    self.expected
+                ),
+            }
+        }
+        if self.undelivered > 0 {
+            anyhow::bail!(
+                "{} worker(s) had already exited and were not swapped ({} were)",
+                self.undelivered,
+                self.expected
+            );
+        }
+        Ok(())
     }
 }
 
@@ -209,6 +304,116 @@ mod tests {
         let rx = c.submit(Variant::Dense, (0..9).collect()).unwrap();
         let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
         assert!(resp.error.is_some());
+        c.shutdown();
+    }
+
+    #[test]
+    fn swap_variant_replaces_scorer_between_requests() {
+        let c = coordinator_with_mock(true); // dense lane starts failing
+        let before = c
+            .submit(Variant::Dense, (0..9).collect())
+            .unwrap()
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap();
+        assert!(before.error.is_some());
+
+        let ticket = c
+            .swap_variant(Variant::Dense, || {
+                Ok(MockScorer {
+                    vocab: 16,
+                    seq: 8,
+                    batch: 4,
+                    fail: false,
+                })
+            })
+            .unwrap();
+        assert_eq!(ticket.expected_acks(), 1);
+        ticket.wait(Duration::from_secs(5)).unwrap();
+
+        let after = c
+            .submit(Variant::Dense, (0..9).collect())
+            .unwrap()
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap();
+        assert!(after.error.is_none(), "{:?}", after.error);
+        assert_eq!(c.metrics.swaps.load(Ordering::Relaxed), 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn swap_unknown_variant_rejected() {
+        let c = coordinator_with_mock(false);
+        assert!(c
+            .swap_variant(Variant::Hss, || {
+                Ok(MockScorer {
+                    vocab: 16,
+                    seq: 8,
+                    batch: 4,
+                    fail: false,
+                })
+            })
+            .is_err());
+        c.shutdown();
+    }
+
+    #[test]
+    fn swap_repairs_a_lane_whose_init_factory_failed() {
+        let mut c = Coordinator::new(CoordinatorConfig {
+            batcher: BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(2),
+                capacity: 32,
+            },
+        });
+        c.add_worker_factory(Variant::Dense, || -> anyhow::Result<MockScorer> {
+            anyhow::bail!("artifacts missing at boot")
+        });
+        // requests error (no hang) while the lane is degraded
+        let r = c
+            .submit(Variant::Dense, (0..9).collect())
+            .unwrap()
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap();
+        assert!(r.error.as_deref().unwrap_or("").contains("worker init failed"));
+
+        // a successful swap repairs the lane in place
+        let ticket = c
+            .swap_variant(Variant::Dense, || {
+                Ok(MockScorer {
+                    vocab: 16,
+                    seq: 8,
+                    batch: 4,
+                    fail: false,
+                })
+            })
+            .unwrap();
+        ticket.wait(Duration::from_secs(5)).unwrap();
+        let r = c
+            .submit(Variant::Dense, (0..9).collect())
+            .unwrap()
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        c.shutdown();
+    }
+
+    #[test]
+    fn failed_swap_keeps_serving_on_old_scorer() {
+        let c = coordinator_with_mock(false);
+        let ticket = c
+            .swap_variant(Variant::Dense, || -> anyhow::Result<MockScorer> {
+                anyhow::bail!("store file corrupt")
+            })
+            .unwrap();
+        let err = ticket.wait(Duration::from_secs(5)).unwrap_err();
+        assert!(format!("{err}").contains("store file corrupt"), "{err}");
+        // lane still healthy on the original scorer
+        let resp = c
+            .submit(Variant::Dense, (0..9).collect())
+            .unwrap()
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap();
+        assert!(resp.error.is_none());
         c.shutdown();
     }
 

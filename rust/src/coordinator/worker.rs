@@ -1,15 +1,26 @@
 //! Worker: pulls batches for one model variant, scores them, replies.
 //!
 //! Workers are generic over [`Scorer`] so the same loop drives an AOT PJRT
-//! executable, the native forward pass, or a test mock.
+//! executable, the native forward pass, or a test mock. Each worker owns a
+//! swap mailbox: `Coordinator::swap_variant` sends a [`SwapRequest`] whose
+//! factory runs *on the worker thread* (PJRT clients are `!Send`), and the
+//! worker installs the replacement scorer between batches — every request
+//! is served entirely by one scorer, before or after the swap, never torn
+//! across it.
 
-use crate::coordinator::batcher::Batcher;
+use crate::coordinator::batcher::{BatchPoll, Batcher};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{ScoreRequest, ScoreResponse};
 use crate::eval::perplexity::window_nll;
 use crate::linalg::Matrix;
 use std::sync::atomic::Ordering;
+use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
+use std::time::Duration;
+
+/// How long an idle worker waits on the queue before checking its swap
+/// mailbox — the upper bound on swap latency under zero traffic.
+const IDLE_POLL: Duration = Duration::from_millis(25);
 
 /// Anything that can score a batch of token windows into per-window logits.
 /// Not `Send`: PJRT-backed scorers are constructed on their worker thread
@@ -24,13 +35,57 @@ pub trait Scorer {
     fn score(&self, inputs: &[Vec<u32>]) -> anyhow::Result<Vec<Matrix>>;
 }
 
-/// Run the worker loop until the batcher closes.
-pub fn run_worker<S: Scorer>(
+/// A worker-owned scorer behind dynamic dispatch (hot-swap replaces it).
+pub type BoxScorer = Box<dyn Scorer>;
+
+/// Builds a replacement scorer on the worker's own thread.
+pub type ScorerFactory = Box<dyn FnOnce() -> anyhow::Result<BoxScorer> + Send>;
+
+/// One pending hot-swap: the factory to run and an ack channel. On factory
+/// failure the worker keeps its current scorer and reports the error — a
+/// bad swap never takes a lane down.
+pub struct SwapRequest {
+    pub factory: ScorerFactory,
+    pub ack: Sender<Result<(), String>>,
+}
+
+/// Run the worker loop until the batcher closes (no hot-swap mailbox).
+pub fn run_worker<S: Scorer + 'static>(
     scorer: S,
     batcher: Arc<Batcher<ScoreRequest>>,
     metrics: Arc<Metrics>,
 ) {
-    while let Some(batch) = batcher.pop_batch() {
+    let (_tx, rx) = std::sync::mpsc::channel();
+    run_worker_swappable(Box::new(scorer), batcher, metrics, rx);
+}
+
+/// Worker loop with a hot-swap mailbox: pending swaps apply between
+/// batches, so in-flight requests always complete on the scorer that
+/// dequeued them.
+pub fn run_worker_swappable(
+    mut scorer: BoxScorer,
+    batcher: Arc<Batcher<ScoreRequest>>,
+    metrics: Arc<Metrics>,
+    swaps: Receiver<SwapRequest>,
+) {
+    loop {
+        while let Ok(req) = swaps.try_recv() {
+            match (req.factory)() {
+                Ok(next) => {
+                    scorer = next;
+                    metrics.swaps.fetch_add(1, Ordering::Relaxed);
+                    let _ = req.ack.send(Ok(()));
+                }
+                Err(e) => {
+                    let _ = req.ack.send(Err(format!("{e:#}")));
+                }
+            }
+        }
+        let batch = match batcher.poll_batch(IDLE_POLL) {
+            BatchPoll::Closed => return,
+            BatchPoll::Idle => continue,
+            BatchPoll::Batch(b) => b,
+        };
         let size = batch.len();
         metrics.record_batch(size);
         // chunk by the scorer's static batch
@@ -58,7 +113,7 @@ pub fn run_worker<S: Scorer>(
                     }
                 }
                 Err(e) => {
-                    metrics.errors.fetch_add(size as u64, Ordering::Relaxed);
+                    metrics.errors.fetch_add(chunk.len() as u64, Ordering::Relaxed);
                     for req in chunk {
                         let _ = req.reply.send(ScoreResponse {
                             id: req.id,
@@ -70,6 +125,51 @@ pub fn run_worker<S: Scorer>(
                             error: Some(format!("{e:#}")),
                         });
                     }
+                }
+            }
+        }
+    }
+}
+
+/// Degraded loop for a worker whose initial scorer failed to construct:
+/// drains requests with errors so submitters never hang, but keeps
+/// servicing the swap mailbox — a later successful
+/// `Coordinator::swap_variant` repairs the lane in place instead of
+/// leaving it permanently dead.
+pub fn run_worker_init_failed(
+    init_err: String,
+    batcher: Arc<Batcher<ScoreRequest>>,
+    metrics: Arc<Metrics>,
+    swaps: Receiver<SwapRequest>,
+) {
+    loop {
+        while let Ok(req) = swaps.try_recv() {
+            match (req.factory)() {
+                Ok(scorer) => {
+                    metrics.swaps.fetch_add(1, Ordering::Relaxed);
+                    let _ = req.ack.send(Ok(()));
+                    return run_worker_swappable(scorer, batcher, metrics, swaps);
+                }
+                Err(e) => {
+                    let _ = req.ack.send(Err(format!("{e:#}")));
+                }
+            }
+        }
+        match batcher.poll_batch(IDLE_POLL) {
+            BatchPoll::Closed => return,
+            BatchPoll::Idle => continue,
+            BatchPoll::Batch(batch) => {
+                for req in batch {
+                    metrics.errors.fetch_add(1, Ordering::Relaxed);
+                    let _ = req.reply.send(ScoreResponse {
+                        id: req.id,
+                        variant: req.variant,
+                        nll: f64::NAN,
+                        tokens: 0,
+                        latency_us: 0,
+                        batch_size: 0,
+                        error: Some(format!("worker init failed: {init_err}")),
+                    });
                 }
             }
         }
@@ -249,6 +349,83 @@ pub(crate) mod tests {
         batcher.close();
         h.join().unwrap();
         assert_eq!(metrics.errors.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn swap_applies_between_batches_and_bad_swap_keeps_old_scorer() {
+        let batcher = Arc::new(Batcher::new(BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            capacity: 64,
+        }));
+        let metrics = Arc::new(Metrics::new());
+        let (swap_tx, swap_rx) = channel();
+        let b2 = batcher.clone();
+        let m2 = metrics.clone();
+        let h = std::thread::spawn(move || {
+            run_worker_swappable(
+                Box::new(MockScorer {
+                    vocab: 16,
+                    seq: 8,
+                    batch: 4,
+                    fail: true, // initial scorer always errors
+                }),
+                b2,
+                m2,
+                swap_rx,
+            )
+        });
+
+        // before the swap: errors
+        let (req, rx) = mk_req(0, (0..9).collect());
+        batcher.push(req).unwrap();
+        assert!(rx
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap()
+            .error
+            .is_some());
+
+        // a failing factory is acked as an error and changes nothing
+        let (ack_tx, ack_rx) = channel();
+        swap_tx
+            .send(SwapRequest {
+                factory: Box::new(|| anyhow::bail!("no artifacts")),
+                ack: ack_tx,
+            })
+            .unwrap();
+        let ack = ack_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(ack.unwrap_err().contains("no artifacts"));
+
+        // swap in a healthy scorer
+        let (ack_tx, ack_rx) = channel();
+        swap_tx
+            .send(SwapRequest {
+                factory: Box::new(|| {
+                    Ok(Box::new(MockScorer {
+                        vocab: 16,
+                        seq: 8,
+                        batch: 4,
+                        fail: false,
+                    }) as BoxScorer)
+                }),
+                ack: ack_tx,
+            })
+            .unwrap();
+        ack_rx
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap()
+            .unwrap();
+
+        // after the swap: success
+        let (req, rx) = mk_req(1, (0..9).collect());
+        batcher.push(req).unwrap();
+        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(resp.error.is_none());
+        assert!(resp.nll < 1e-3);
+        assert_eq!(metrics.swaps.load(Ordering::Relaxed), 1);
+
+        batcher.close();
+        h.join().unwrap();
     }
 
     #[test]

@@ -49,6 +49,69 @@ impl HssNode {
         }
     }
 
+    /// Structural validation of the whole tree — shape consistency of the
+    /// split, coupling factors, permutation, and spike matrix. Used by the
+    /// `HSB1` store reader so a corrupt file can never build a tree whose
+    /// matvec would index out of bounds.
+    pub fn validate(&self) -> Result<(), String> {
+        match self {
+            HssNode::Leaf { d } => {
+                if d.rows != d.cols {
+                    return Err(format!("hss leaf not square: {}x{}", d.rows, d.cols));
+                }
+                Ok(())
+            }
+            HssNode::Branch {
+                n,
+                sparse,
+                perm,
+                u0,
+                r0,
+                u1,
+                r1,
+                c0,
+                c1,
+            } => {
+                let n0 = n / 2;
+                let n1 = n - n0;
+                if sparse.rows != *n || sparse.cols != *n {
+                    return Err(format!(
+                        "hss branch n={n}: spike matrix is {}x{}",
+                        sparse.rows, sparse.cols
+                    ));
+                }
+                sparse.validate()?;
+                if perm.len() != *n {
+                    return Err(format!(
+                        "hss branch n={n}: permutation has {} entries",
+                        perm.len()
+                    ));
+                }
+                if u0.rows != n0 || r0.cols != n1 || u0.cols != r0.rows {
+                    return Err(format!(
+                        "hss branch n={n}: u0 {}x{} r0 {}x{} (want {n0}xk, kx{n1})",
+                        u0.rows, u0.cols, r0.rows, r0.cols
+                    ));
+                }
+                if u1.rows != n1 || r1.cols != n0 || u1.cols != r1.rows {
+                    return Err(format!(
+                        "hss branch n={n}: u1 {}x{} r1 {}x{} (want {n1}xk, kx{n0})",
+                        u1.rows, u1.cols, r1.rows, r1.cols
+                    ));
+                }
+                if c0.n() != n0 || c1.n() != n1 {
+                    return Err(format!(
+                        "hss branch n={n}: children cover {}+{} (want {n0}+{n1})",
+                        c0.n(),
+                        c1.n()
+                    ));
+                }
+                c0.validate()?;
+                c1.validate()
+            }
+        }
+    }
+
     /// Dense matrix represented by the tree (testing/verification only).
     pub fn reconstruct(&self) -> Matrix {
         match self {

@@ -35,6 +35,41 @@
 //!          compressed.storage_ratio(), compressed.rel_error(&w));
 //! # let _ = y;
 //! ```
+//!
+//! Compression is minutes of SVD work; serving shouldn't repeat it. The
+//! [`store`] module persists any compressed matrix as a native `HSB1`
+//! artifact (crc-checked, fp16 factors) and loads it back — with its matvec
+//! workspace pre-sized — without recompression:
+//!
+//! ```no_run
+//! # fn main() -> anyhow::Result<()> {
+//! use hisolo::compress::{Compressor, CompressorConfig, Method};
+//! use hisolo::linalg::Matrix;
+//! use hisolo::store::{StoreFile, StoreWriter};
+//! use std::path::Path;
+//!
+//! let w = Matrix::randn(256, 256, 42);
+//! let cfg = CompressorConfig { rank: 32, sparsity: 0.3, ..Default::default() };
+//! let compressed = Compressor::new(cfg).compress(&w, Method::SHssRcm);
+//!
+//! // save once (atomic temp + rename) ...
+//! let mut writer = StoreWriter::new();
+//! writer.push("layer0.wq", &compressed);
+//! writer.finish(Path::new("layer0.hsb1"))?;
+//!
+//! // ... cold-start forever: parse + fp16-widen only, no SVD
+//! let file = StoreFile::open(Path::new("layer0.hsb1"))?;
+//! let (loaded, mut ws) = file.load_with_workspace("layer0.wq")?;
+//! let mut y = vec![0.0f32; 256];
+//! loaded.matvec_with(&vec![1.0f32; 256], &mut y, &mut ws);
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! Whole models go through [`store::ModelStore`] (one `HSB1` file per
+//! variant, entries keyed `(layer, projection)`); the serving
+//! [`coordinator`] cold-starts workers from it and atomically hot-swaps a
+//! variant under live traffic via `Coordinator::swap_variant`.
 
 pub mod compress;
 pub mod coordinator;
@@ -45,6 +80,7 @@ pub mod linalg;
 pub mod model;
 pub mod runtime;
 pub mod sparse;
+pub mod store;
 pub mod util;
 
 /// Crate-wide result alias.

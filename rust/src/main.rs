@@ -9,7 +9,8 @@ use hisolo::data::corpus::Corpus;
 use hisolo::data::dataset::windows;
 use hisolo::data::synthetic;
 use hisolo::eval::sweep::{eval_point, sweep, to_csv};
-use hisolo::model::{Transformer, WeightFile};
+use hisolo::model::{CompressedModel, ModelConfig, Transformer, WeightFile};
+use hisolo::store::ModelStore;
 use hisolo::runtime::{ArtifactDir, Runtime};
 use hisolo::util::cli::Args;
 use hisolo::util::timer::Table;
@@ -32,15 +33,22 @@ COMMANDS:
       [--artifacts artifacts] [--threads N]
   sweep                         full storage-vs-PPL grid (Fig 3 engine)
       [--ranks 8,16,32,64] [--sparsities 0.1,0.2,0.3] [--out sweep.csv]
+  save                          compress the model's q/k/v and persist the
+                                HSB1 artifact store (no recompression at load)
+      --method shss-rcm --rank 32 --sparsity 0.3 --depth 3
+      [--store store] [--variant <name>] (default: the method name)
+      [--synthetic]  (random base model when artifacts are absent)
   serve                         serve scoring requests via PJRT executables
       [--variant both|dense|hss] [--requests 64] [--max-batch 8]
       [--max-wait-ms 5] [--native]  (--native uses the Rust fwd, no PJRT)
+      [--from-store store [--store-variant shss-rcm]]  (with --native:
+      cold-start the hss lane from the HSB1 store instead of recompressing)
 
 Artifacts default to ./artifacts (override with --artifacts or
 HISOLO_ARTIFACTS). Build them with `make artifacts`.";
 
 fn main() {
-    let args = Args::parse(&["native", "no-rcm", "help"]);
+    let args = Args::parse(&["native", "no-rcm", "help", "synthetic"]);
     if args.flag("help") || args.subcommand().is_none() {
         println!("{USAGE}");
         return;
@@ -50,6 +58,7 @@ fn main() {
         "compress" => cmd_compress(&args),
         "eval" => cmd_eval(&args),
         "sweep" => cmd_sweep(&args),
+        "save" => cmd_save(&args),
         "serve" => cmd_serve(&args),
         other => {
             eprintln!("unknown command '{other}'\n{USAGE}");
@@ -209,6 +218,61 @@ fn cmd_eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Base transformer for `save`: the trained artifact model when present,
+/// else (with --synthetic) a random model so the store path works in
+/// environments that never ran `make artifacts`.
+fn base_model(args: &Args) -> Result<Arc<Transformer>> {
+    let dir = artifacts_path(args);
+    if dir.join("manifest.json").exists() {
+        let (model, _a) = load_model(args)?;
+        Ok(model)
+    } else if args.flag("synthetic") {
+        let seed = args.get_usize("seed", 7) as u64;
+        Ok(Arc::new(Transformer::random(ModelConfig::default(), seed)))
+    } else {
+        bail!(
+            "artifacts not found at {} — run `make artifacts`, or pass \
+             --synthetic to use a random base model",
+            dir.display()
+        );
+    }
+}
+
+fn cmd_save(args: &Args) -> Result<()> {
+    let method: Method = args
+        .get_str("method", "shss-rcm")
+        .parse()
+        .map_err(anyhow::Error::msg)?;
+    let cfg = cfg_from_args(args);
+    let store_dir = args.get_str("store", "store");
+    let variant = args.get_str("variant", method.name());
+    let model = base_model(args)?;
+    println!(
+        "compressing q/k/v of {} layers with {} (rank={} sp={} depth={})",
+        model.cfg.n_layers, method, cfg.rank, cfg.sparsity, cfg.depth
+    );
+    let t0 = Instant::now();
+    let cm = CompressedModel::compress(model, method, cfg);
+    let compress_secs = t0.elapsed().as_secs_f64();
+    let store = ModelStore::open(&store_dir);
+    let path = store.save_model(&variant, &cm)?;
+    println!("compress time: {compress_secs:.2}s");
+    println!("mean rel error: {:.4}", cm.mean_rel_error());
+    println!(
+        "qkv storage: {} bytes compressed vs {} dense fp16 ({:.3}x)",
+        cm.qkv_raw_bytes(),
+        cm.qkv_dense_bytes(),
+        cm.qkv_raw_bytes() as f64 / cm.qkv_dense_bytes() as f64
+    );
+    println!(
+        "wrote variant '{variant}' -> {} ({} bytes on disk)",
+        path.display(),
+        store.variant_bytes(&variant)
+    );
+    println!("serve it with: hisolo serve --native --from-store {store_dir} --store-variant {variant}");
+    Ok(())
+}
+
 fn cmd_sweep(args: &Args) -> Result<()> {
     let (model, a) = load_model(args)?;
     let ws = eval_windows(&a, args.get_usize("windows", 16))?;
@@ -250,6 +314,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n_requests = args.get_usize("requests", 64);
     let variant_sel = args.get_str("variant", "both");
     let native = args.flag("native");
+    let from_store = args.get_path("from-store");
+    if from_store.is_some() && !native {
+        bail!("--from-store requires --native (the PJRT path loads AOT graphs, not HSB1 stores)");
+    }
     let coordinator_cfg = CoordinatorConfig {
         batcher: BatcherConfig {
             max_batch: args.get_usize("max-batch", 8),
@@ -276,12 +344,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     },
                 ),
                 Variant::Hss => {
-                    let cfg = cfg_from_args(args);
-                    let cm = Arc::new(hisolo::model::CompressedModel::compress(
-                        model,
-                        Method::SHssRcm,
-                        cfg,
-                    ));
+                    let cm = if let Some(store_dir) = &from_store {
+                        // cold start from the HSB1 store: parse + fp16
+                        // widen only, no SVD/RCM recompression
+                        let store = ModelStore::open(store_dir);
+                        let vname = args.get_str("store-variant", "shss-rcm");
+                        let t0 = Instant::now();
+                        let loaded = Arc::new(store.load_model(&vname, model)?);
+                        println!(
+                            "cold-started '{vname}' from {} in {:.1} ms",
+                            store_dir.display(),
+                            t0.elapsed().as_secs_f64() * 1e3
+                        );
+                        loaded
+                    } else {
+                        let cfg = cfg_from_args(args);
+                        Arc::new(CompressedModel::compress(model, Method::SHssRcm, cfg))
+                    };
                     coord.add_worker(
                         v,
                         hisolo::coordinator::worker::NativeCompressedScorer {

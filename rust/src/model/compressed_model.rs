@@ -48,6 +48,63 @@ impl CompressedModel {
         }
     }
 
+    /// Rebuild from an `HSB1` store file **without recompression** — the
+    /// cold-start path. The store must hold `layer{i}.{wq,wk,wv}` for every
+    /// layer of `base`; layer reports are reconstructed from the stored
+    /// metadata (method, compression-time rel error) plus the decoded
+    /// matrices' own storage accounting.
+    pub fn from_store(
+        base: Arc<Transformer>,
+        store: &crate::store::StoreFile,
+    ) -> anyhow::Result<CompressedModel> {
+        let d = base.cfg.d_model;
+        let dense_bytes = d * d * crate::hss::storage::VALUE_BYTES;
+        let mut qkv = Vec::with_capacity(base.cfg.n_layers);
+        let mut reports = Vec::with_capacity(3 * base.cfg.n_layers);
+        let mut method: Option<Method> = None;
+        for layer in 0..base.cfg.n_layers {
+            let mut triple: Vec<CompressedMatrix> = Vec::with_capacity(3);
+            for p in [Proj::Q, Proj::K, Proj::V] {
+                let name = crate::store::entry_name(layer, p);
+                let meta = store
+                    .meta(&name)
+                    .ok_or_else(|| anyhow::anyhow!("store is missing entry '{name}'"))?
+                    .clone();
+                let c = store.load(&name)?;
+                if c.n() != d {
+                    anyhow::bail!(
+                        "entry '{name}' has n={} but the base model has d_model={d}",
+                        c.n()
+                    );
+                }
+                let m = meta.method_or_default();
+                method.get_or_insert(m);
+                reports.push(LayerReport {
+                    name,
+                    method: m,
+                    rel_error: meta.rel_error,
+                    params: c.params(),
+                    bytes: c.bytes(),
+                    dense_bytes,
+                    compressed: c.clone_shallow(),
+                });
+                triple.push(c);
+            }
+            let mut it = triple.into_iter();
+            qkv.push([
+                it.next().unwrap(),
+                it.next().unwrap(),
+                it.next().unwrap(),
+            ]);
+        }
+        Ok(CompressedModel {
+            base,
+            method: method.unwrap_or(Method::Dense),
+            qkv,
+            reports,
+        })
+    }
+
     /// Logits [t, vocab] through the compressed projections.
     pub fn forward(&self, tokens: &[u32]) -> Matrix {
         self.base.forward_with(tokens, self)

@@ -5,10 +5,14 @@
 //! (0=f32, 1=f16, 2=i32), u32 ndim, u32×ndim dims, raw data.
 
 use crate::linalg::Matrix;
+use crate::util::binio::{
+    check_magic, read_exact_vec, read_string, read_u32, read_u8, write_string, write_u32,
+    write_u8, DT_F16, DT_F32, DT_I32,
+};
 use crate::util::fp16;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
-use std::io::{Read, Write};
+use std::io::Write;
 use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"HWT1";
@@ -74,20 +78,13 @@ impl WeightFile {
     pub fn load(path: &Path) -> Result<WeightFile> {
         let mut f = std::fs::File::open(path)
             .with_context(|| format!("opening {}", path.display()))?;
-        let mut magic = [0u8; 4];
-        f.read_exact(&mut magic)?;
-        if &magic != MAGIC {
-            bail!("{}: bad magic {:?}", path.display(), magic);
-        }
+        check_magic(&mut f, MAGIC, "HWT1")
+            .with_context(|| format!("{}", path.display()))?;
         let count = read_u32(&mut f)? as usize;
         let mut out = WeightFile::default();
         for _ in 0..count {
-            let name_len = read_u32(&mut f)? as usize;
-            let mut name_buf = vec![0u8; name_len];
-            f.read_exact(&mut name_buf)?;
-            let name = String::from_utf8(name_buf).context("tensor name not utf-8")?;
-            let mut dtype_b = [0u8; 1];
-            f.read_exact(&mut dtype_b)?;
+            let name = read_string(&mut f).context("tensor name")?;
+            let dtype_code = read_u8(&mut f)?;
             let ndim = read_u32(&mut f)? as usize;
             let mut dims = Vec::with_capacity(ndim);
             for _ in 0..ndim {
@@ -99,24 +96,21 @@ impl WeightFile {
             } else {
                 dims.iter().product()
             };
-            let (dtype, f32_data, i32_data) = match dtype_b[0] {
-                0 => {
-                    let mut raw = vec![0u8; count * 4];
-                    f.read_exact(&mut raw)?;
+            let (dtype, f32_data, i32_data) = match dtype_code {
+                DT_F32 => {
+                    let raw = read_exact_vec(&mut f, count * 4)?;
                     let data = raw
                         .chunks_exact(4)
                         .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
                         .collect();
                     (Dtype::F32, data, Vec::new())
                 }
-                1 => {
-                    let mut raw = vec![0u8; count * 2];
-                    f.read_exact(&mut raw)?;
+                DT_F16 => {
+                    let raw = read_exact_vec(&mut f, count * 2)?;
                     (Dtype::F16, fp16::decode_f16_le(&raw), Vec::new())
                 }
-                2 => {
-                    let mut raw = vec![0u8; count * 4];
-                    f.read_exact(&mut raw)?;
+                DT_I32 => {
+                    let raw = read_exact_vec(&mut f, count * 4)?;
                     let data: Vec<i32> = raw
                         .chunks_exact(4)
                         .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
@@ -140,19 +134,18 @@ impl WeightFile {
         let mut f = std::fs::File::create(path)
             .with_context(|| format!("creating {}", path.display()))?;
         f.write_all(MAGIC)?;
-        f.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        write_u32(&mut f, self.tensors.len() as u32)?;
         for t in &self.tensors {
-            f.write_all(&(t.name.len() as u32).to_le_bytes())?;
-            f.write_all(t.name.as_bytes())?;
+            write_string(&mut f, &t.name)?;
             let code: u8 = match t.dtype {
-                Dtype::F32 => 0,
-                Dtype::F16 => 1,
-                Dtype::I32 => 2,
+                Dtype::F32 => DT_F32,
+                Dtype::F16 => DT_F16,
+                Dtype::I32 => DT_I32,
             };
-            f.write_all(&[code])?;
-            f.write_all(&(t.dims.len() as u32).to_le_bytes())?;
+            write_u8(&mut f, code)?;
+            write_u32(&mut f, t.dims.len() as u32)?;
             for &d in &t.dims {
-                f.write_all(&(d as u32).to_le_bytes())?;
+                write_u32(&mut f, d as u32)?;
             }
             match t.dtype {
                 Dtype::F32 => {
@@ -194,12 +187,6 @@ impl WeightFile {
     pub fn names(&self) -> Vec<&str> {
         self.tensors.iter().map(|t| t.name.as_str()).collect()
     }
-}
-
-fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
-    let mut b = [0u8; 4];
-    r.read_exact(&mut b)?;
-    Ok(u32::from_le_bytes(b))
 }
 
 #[cfg(test)]

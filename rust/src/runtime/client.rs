@@ -4,191 +4,255 @@
 //! transfers its token batch (see DESIGN.md §6). HLO **text** is the
 //! interchange format because xla_extension 0.5.1 rejects jax≥0.5's
 //! serialized protos (64-bit instruction ids).
+//!
+//! The `xla` bindings are not available in the offline build environment, so
+//! the real client is gated behind the `pjrt` cargo feature. Without it
+//! (the default), [`Runtime`] / [`LoadedModel`] keep the same API but
+//! [`Runtime::cpu`] returns an error — the native forward path and the
+//! store-backed serving path ([`crate::store`]) are unaffected.
 
-use crate::linalg::Matrix;
-use crate::model::weights::{Dtype, WeightFile};
-use crate::runtime::artifacts::{ArtifactDir, ExeSpec};
-use anyhow::{anyhow, bail, Context, Result};
+#[cfg(feature = "pjrt")]
+pub use pjrt_enabled::{LoadedModel, Runtime};
+#[cfg(not(feature = "pjrt"))]
+pub use pjrt_stub::{LoadedModel, Runtime};
 
-/// Shared PJRT client (CPU plugin).
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
+#[cfg(feature = "pjrt")]
+mod pjrt_enabled {
+    use crate::linalg::Matrix;
+    use crate::model::weights::{Dtype, WeightFile};
+    use crate::runtime::artifacts::{ArtifactDir, ExeSpec};
+    use anyhow::{anyhow, bail, Context, Result};
 
-impl Runtime {
-    pub fn cpu() -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().map_err(wrap)?;
-        Ok(Runtime { client })
+    /// Shared PJRT client (CPU plugin).
+    pub struct Runtime {
+        client: xla::PjRtClient,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Compile one manifest executable and bind its weight operands from
-    /// the given weight files (searched in order).
-    pub fn load_model(
-        &self,
-        artifacts: &ArtifactDir,
-        exe_name: &str,
-        weight_files: &[&WeightFile],
-    ) -> Result<LoadedModel> {
-        let spec = artifacts.exe(exe_name)?.clone();
-        let path = spec
-            .file
-            .to_str()
-            .ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .map_err(wrap)
-            .with_context(|| format!("parsing HLO text {path}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).map_err(wrap)?;
-
-        // upload every non-token operand once
-        let mut weight_buffers = Vec::with_capacity(spec.inputs.len().saturating_sub(1));
-        for input in spec.inputs.iter().skip(1) {
-            let buf = self.upload_named(input, weight_files)?;
-            weight_buffers.push(buf);
+    impl Runtime {
+        pub fn cpu() -> Result<Runtime> {
+            let client = xla::PjRtClient::cpu().map_err(wrap)?;
+            Ok(Runtime { client })
         }
-        Ok(LoadedModel {
-            exe,
-            spec,
-            weight_buffers,
-            client: self.client.clone(),
-        })
-    }
 
-    fn upload_named(
-        &self,
-        input: &crate::runtime::artifacts::InputSpec,
-        weight_files: &[&WeightFile],
-    ) -> Result<xla::PjRtBuffer> {
-        let tensor = weight_files
-            .iter()
-            .find_map(|wf| wf.get(&input.name).ok())
-            .ok_or_else(|| anyhow!("operand '{}' not found in weight files", input.name))?;
-        let expect: usize = if input.shape.is_empty() {
-            1
-        } else {
-            input.shape.iter().product()
-        };
-        match (input.dtype.as_str(), tensor.dtype) {
-            ("f32", Dtype::F32) | ("f32", Dtype::F16) => {
-                if tensor.f32_data.len() != expect {
-                    bail!(
-                        "operand '{}': manifest wants {expect} f32s, file has {}",
-                        input.name,
-                        tensor.f32_data.len()
-                    );
-                }
-                self.client
-                    .buffer_from_host_buffer::<f32>(&tensor.f32_data, &input.shape, None)
-                    .map_err(wrap)
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Compile one manifest executable and bind its weight operands from
+        /// the given weight files (searched in order).
+        pub fn load_model(
+            &self,
+            artifacts: &ArtifactDir,
+            exe_name: &str,
+            weight_files: &[&WeightFile],
+        ) -> Result<LoadedModel> {
+            let spec = artifacts.exe(exe_name)?.clone();
+            let path = spec
+                .file
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .map_err(wrap)
+                .with_context(|| format!("parsing HLO text {path}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).map_err(wrap)?;
+
+            // upload every non-token operand once
+            let mut weight_buffers = Vec::with_capacity(spec.inputs.len().saturating_sub(1));
+            for input in spec.inputs.iter().skip(1) {
+                let buf = self.upload_named(input, weight_files)?;
+                weight_buffers.push(buf);
             }
-            ("i32", Dtype::I32) => {
-                if tensor.i32_data.len() != expect {
-                    bail!(
-                        "operand '{}': manifest wants {expect} i32s, file has {}",
-                        input.name,
-                        tensor.i32_data.len()
-                    );
-                }
-                self.client
-                    .buffer_from_host_buffer::<i32>(&tensor.i32_data, &input.shape, None)
-                    .map_err(wrap)
-            }
-            (want, have) => bail!(
-                "operand '{}': dtype mismatch manifest={want} file={have:?}",
-                input.name
-            ),
-        }
-    }
-}
-
-/// A compiled executable with device-resident weights.
-pub struct LoadedModel {
-    exe: xla::PjRtLoadedExecutable,
-    pub spec: ExeSpec,
-    weight_buffers: Vec<xla::PjRtBuffer>,
-    client: xla::PjRtClient,
-}
-
-impl LoadedModel {
-    pub fn batch(&self) -> usize {
-        self.spec.batch
-    }
-
-    pub fn seq_len(&self) -> usize {
-        self.spec.inputs[0].shape[1]
-    }
-
-    /// Score a batch of token windows: returns per-sequence logits
-    /// [t, vocab]. Fewer than `batch` windows are padded with repeats of the
-    /// last window (results for padding are discarded).
-    pub fn score(&self, windows: &[Vec<u32>]) -> Result<Vec<Matrix>> {
-        let b = self.spec.batch;
-        let t = self.seq_len();
-        if windows.is_empty() || windows.len() > b {
-            bail!("score wants 1..={b} windows, got {}", windows.len());
-        }
-        for w in windows {
-            if w.len() != t {
-                bail!("window length {} != seq_len {t}", w.len());
-            }
-        }
-        // pack tokens [b, t], padding with the last window
-        let mut tokens = Vec::with_capacity(b * t);
-        for i in 0..b {
-            let w = windows.get(i).unwrap_or_else(|| windows.last().unwrap());
-            tokens.extend(w.iter().map(|&x| x as i32));
-        }
-        let tok_buf = self
-            .client
-            .buffer_from_host_buffer::<i32>(&tokens, &[b, t], None)
-            .map_err(wrap)?;
-
-        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + self.weight_buffers.len());
-        args.push(&tok_buf);
-        args.extend(self.weight_buffers.iter());
-
-        let outputs = self.exe.execute_b(&args).map_err(wrap)?;
-        let lit = outputs[0][0].to_literal_sync().map_err(wrap)?;
-        // aot.py lowers with return_tuple=True → 1-tuple of [b, t, vocab]
-        let out = lit.to_tuple1().map_err(wrap)?;
-        let flat: Vec<f32> = out.to_vec::<f32>().map_err(wrap)?;
-        let vocab = self.spec.output_shape[2];
-        if flat.len() != b * t * vocab {
-            bail!("unexpected output size {} != {}", flat.len(), b * t * vocab);
-        }
-        Ok(windows
-            .iter()
-            .enumerate()
-            .map(|(i, _)| {
-                Matrix::from_vec(t, vocab, flat[i * t * vocab..(i + 1) * t * vocab].to_vec())
+            Ok(LoadedModel {
+                exe,
+                spec,
+                weight_buffers,
+                client: self.client.clone(),
             })
-            .collect())
+        }
+
+        fn upload_named(
+            &self,
+            input: &crate::runtime::artifacts::InputSpec,
+            weight_files: &[&WeightFile],
+        ) -> Result<xla::PjRtBuffer> {
+            let tensor = weight_files
+                .iter()
+                .find_map(|wf| wf.get(&input.name).ok())
+                .ok_or_else(|| anyhow!("operand '{}' not found in weight files", input.name))?;
+            let expect: usize = if input.shape.is_empty() {
+                1
+            } else {
+                input.shape.iter().product()
+            };
+            match (input.dtype.as_str(), tensor.dtype) {
+                ("f32", Dtype::F32) | ("f32", Dtype::F16) => {
+                    if tensor.f32_data.len() != expect {
+                        bail!(
+                            "operand '{}': manifest wants {expect} f32s, file has {}",
+                            input.name,
+                            tensor.f32_data.len()
+                        );
+                    }
+                    self.client
+                        .buffer_from_host_buffer::<f32>(&tensor.f32_data, &input.shape, None)
+                        .map_err(wrap)
+                }
+                ("i32", Dtype::I32) => {
+                    if tensor.i32_data.len() != expect {
+                        bail!(
+                            "operand '{}': manifest wants {expect} i32s, file has {}",
+                            input.name,
+                            tensor.i32_data.len()
+                        );
+                    }
+                    self.client
+                        .buffer_from_host_buffer::<i32>(&tensor.i32_data, &input.shape, None)
+                        .map_err(wrap)
+                }
+                (want, have) => bail!(
+                    "operand '{}': dtype mismatch manifest={want} file={have:?}",
+                    input.name
+                ),
+            }
+        }
+    }
+
+    /// A compiled executable with device-resident weights.
+    pub struct LoadedModel {
+        exe: xla::PjRtLoadedExecutable,
+        pub spec: ExeSpec,
+        weight_buffers: Vec<xla::PjRtBuffer>,
+        client: xla::PjRtClient,
+    }
+
+    impl LoadedModel {
+        pub fn batch(&self) -> usize {
+            self.spec.batch
+        }
+
+        pub fn seq_len(&self) -> usize {
+            self.spec.inputs[0].shape[1]
+        }
+
+        /// Score a batch of token windows: returns per-sequence logits
+        /// [t, vocab]. Fewer than `batch` windows are padded with repeats of
+        /// the last window (results for padding are discarded).
+        pub fn score(&self, windows: &[Vec<u32>]) -> Result<Vec<Matrix>> {
+            let b = self.spec.batch;
+            let t = self.seq_len();
+            if windows.is_empty() || windows.len() > b {
+                bail!("score wants 1..={b} windows, got {}", windows.len());
+            }
+            for w in windows {
+                if w.len() != t {
+                    bail!("window length {} != seq_len {t}", w.len());
+                }
+            }
+            // pack tokens [b, t], padding with the last window
+            let mut tokens = Vec::with_capacity(b * t);
+            for i in 0..b {
+                let w = windows.get(i).unwrap_or_else(|| windows.last().unwrap());
+                tokens.extend(w.iter().map(|&x| x as i32));
+            }
+            let tok_buf = self
+                .client
+                .buffer_from_host_buffer::<i32>(&tokens, &[b, t], None)
+                .map_err(wrap)?;
+
+            let mut args: Vec<&xla::PjRtBuffer> =
+                Vec::with_capacity(1 + self.weight_buffers.len());
+            args.push(&tok_buf);
+            args.extend(self.weight_buffers.iter());
+
+            let outputs = self.exe.execute_b(&args).map_err(wrap)?;
+            let lit = outputs[0][0].to_literal_sync().map_err(wrap)?;
+            // aot.py lowers with return_tuple=True → 1-tuple of [b, t, vocab]
+            let out = lit.to_tuple1().map_err(wrap)?;
+            let flat: Vec<f32> = out.to_vec::<f32>().map_err(wrap)?;
+            let vocab = self.spec.output_shape[2];
+            if flat.len() != b * t * vocab {
+                bail!("unexpected output size {} != {}", flat.len(), b * t * vocab);
+            }
+            Ok(windows
+                .iter()
+                .enumerate()
+                .map(|(i, _)| {
+                    Matrix::from_vec(t, vocab, flat[i * t * vocab..(i + 1) * t * vocab].to_vec())
+                })
+                .collect())
+        }
+    }
+
+    /// xla::Error -> anyhow (the crate's error is not Sync-compatible with ?).
+    fn wrap(e: xla::Error) -> anyhow::Error {
+        anyhow!("xla: {e}")
     }
 }
 
-/// xla::Error -> anyhow (the crate's error is not Sync-compatible with ?).
-fn wrap(e: xla::Error) -> anyhow::Error {
-    anyhow!("xla: {e}")
+#[cfg(not(feature = "pjrt"))]
+mod pjrt_stub {
+    use crate::linalg::Matrix;
+    use crate::model::weights::WeightFile;
+    use crate::runtime::artifacts::{ArtifactDir, ExeSpec};
+    use anyhow::{bail, Result};
+
+    const UNAVAILABLE: &str =
+        "PJRT runtime unavailable: hisolo was built without the `pjrt` feature \
+         (the xla_extension bindings are not present in this environment); \
+         use the native serving path (`serve --native`) or the store-backed \
+         path (`serve --native --from-store`)";
+
+    /// API-compatible stand-in for the PJRT client when `pjrt` is disabled.
+    pub struct Runtime {
+        _private: (),
+    }
+
+    impl Runtime {
+        pub fn cpu() -> Result<Runtime> {
+            bail!("{UNAVAILABLE}");
+        }
+
+        pub fn platform(&self) -> String {
+            "pjrt-stub".to_string()
+        }
+
+        pub fn load_model(
+            &self,
+            _artifacts: &ArtifactDir,
+            _exe_name: &str,
+            _weight_files: &[&WeightFile],
+        ) -> Result<LoadedModel> {
+            bail!("{UNAVAILABLE}");
+        }
+    }
+
+    /// Stub executable handle; never constructible through [`Runtime`].
+    pub struct LoadedModel {
+        pub spec: ExeSpec,
+    }
+
+    impl LoadedModel {
+        pub fn batch(&self) -> usize {
+            self.spec.batch
+        }
+
+        pub fn seq_len(&self) -> usize {
+            self.spec.inputs[0].shape[1]
+        }
+
+        pub fn score(&self, _windows: &[Vec<u32>]) -> Result<Vec<Matrix>> {
+            bail!("{UNAVAILABLE}");
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
-    // Runtime tests that need a PJRT client live in tests/runtime_integration.rs
-    // (integration tests), keeping unit tests client-free. Here we only test
-    // pure helpers.
-    use super::*;
-
+    #[cfg(not(feature = "pjrt"))]
     #[test]
-    fn wrap_formats() {
-        let e = wrap(xla::Error::CannotCreateLiteralWithData {
-            data_len_in_bytes: 1,
-            ty: xla::PrimitiveType::F32,
-            dims: vec![2],
-        });
-        assert!(format!("{e}").contains("xla:"));
+    fn stub_runtime_errors_cleanly() {
+        let e = super::Runtime::cpu().unwrap_err();
+        assert!(format!("{e}").contains("pjrt"), "{e}");
     }
 }

@@ -60,6 +60,43 @@ impl Csr {
         self.data.len()
     }
 
+    /// Structural validation — used when a CSR comes from untrusted bytes
+    /// (the `HSB1` store) so corrupt indices surface as errors, not panics
+    /// or out-of-bounds reads in the matvec hot path.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.indptr.len() != self.rows + 1 {
+            return Err(format!(
+                "csr: indptr len {} != rows+1 {}",
+                self.indptr.len(),
+                self.rows + 1
+            ));
+        }
+        if self.indptr[0] != 0 {
+            return Err(format!("csr: indptr[0] = {} (want 0)", self.indptr[0]));
+        }
+        if self.indices.len() != self.data.len() {
+            return Err(format!(
+                "csr: {} indices vs {} values",
+                self.indices.len(),
+                self.data.len()
+            ));
+        }
+        if *self.indptr.last().unwrap() as usize != self.data.len() {
+            return Err(format!(
+                "csr: indptr end {} != nnz {}",
+                self.indptr.last().unwrap(),
+                self.data.len()
+            ));
+        }
+        if let Some(w) = self.indptr.windows(2).find(|w| w[0] > w[1]) {
+            return Err(format!("csr: indptr not monotone at {} > {}", w[0], w[1]));
+        }
+        if let Some(&j) = self.indices.iter().find(|&&j| j as usize >= self.cols) {
+            return Err(format!("csr: column index {j} >= cols {}", self.cols));
+        }
+        Ok(())
+    }
+
     /// y += S x. Row loop with 4 independent accumulators — the gather
     /// x[indices[k]] is the bound; unrolling hides its latency
     /// (EXPERIMENTS.md §Perf).
@@ -151,6 +188,25 @@ mod tests {
         let csr = Csr::from_dense(&m, 0.01);
         assert_eq!(csr.nnz(), 1);
         assert_eq!(csr.to_dense().at(0, 0), 5.0);
+    }
+
+    #[test]
+    fn validate_accepts_built_and_rejects_corrupt() {
+        let mut rng = Rng::new(7);
+        let csr = Csr::from_coo(&random_coo(&mut rng, 12, 40));
+        assert_eq!(csr.validate(), Ok(()));
+
+        let mut bad = csr.clone();
+        bad.indices[0] = 99; // column out of range
+        assert!(bad.validate().is_err());
+
+        let mut bad = csr.clone();
+        bad.indptr[3] = bad.indptr[4] + 1; // non-monotone
+        assert!(bad.validate().is_err());
+
+        let mut bad = csr.clone();
+        bad.data.pop(); // nnz mismatch
+        assert!(bad.validate().is_err());
     }
 
     #[test]

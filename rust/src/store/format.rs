@@ -1,0 +1,505 @@
+//! The `HSB1` on-disk grammar: section encoders/decoders shared by the
+//! [`crate::store::StoreWriter`] / [`crate::store::StoreFile`] pair.
+//!
+//! Layout (little endian throughout):
+//!
+//! ```text
+//! "HSB1" · u16 version · u16 flags · u32 entry_count
+//! per entry:
+//!   u32 name-len · name · u8 kind · u8 method · f64 rel_error
+//!   u64 payload-len · payload
+//! footer: u32 crc32 over every preceding byte
+//! ```
+//!
+//! Payload grammar per kind:
+//!
+//! ```text
+//! matrix  := u32 rows · u32 cols · u8 dtype(0=f32,1=f16) · data
+//! csr     := u32 rows · u32 cols · u32 nnz · indptr u32×(rows+1)
+//!            · indices u32×nnz · u8 dtype · values
+//! dense   := matrix(f32)
+//! lowrank := matrix l(f16) · matrix r(f16) · u8 has_sparse · [csr]
+//! node    := u8 0 · matrix d(f16)
+//!          | u8 1 · u32 n · csr · u8 has_perm · [perm u32×n]
+//!            · matrix u0 · matrix r0 · matrix u1 · matrix r1
+//!            · node c0 · node c1
+//! hss     := node
+//! ```
+//!
+//! Values are fp16 (the paper's storage precision) except the dense
+//! baseline, which stays f32 so `Dense` round-trips bit-exactly. The
+//! per-entry `payload-len` lets the reader index every section without
+//! decoding it — loading one matrix out of a many-entry file touches only
+//! that entry's bytes.
+
+use crate::compress::{CompressedMatrix, Method};
+use crate::hss::HssNode;
+use crate::linalg::{Matrix, Permutation};
+use crate::sparse::Csr;
+use crate::util::binio::{put_u32, ByteReader, DT_F16, DT_F32};
+use crate::util::fp16;
+use anyhow::{bail, Result};
+
+pub const MAGIC: &[u8; 4] = b"HSB1";
+pub const VERSION: u16 = 1;
+
+/// Fixed bytes before the first entry: magic + version + flags + count.
+pub const HEADER_BYTES: usize = 4 + 2 + 2 + 4;
+/// Trailing crc32.
+pub const FOOTER_BYTES: usize = 4;
+
+pub const KIND_DENSE: u8 = 0;
+pub const KIND_LOWRANK: u8 = 1;
+pub const KIND_HSS: u8 = 2;
+
+const NODE_LEAF: u8 = 0;
+const NODE_BRANCH: u8 = 1;
+
+/// `method` byte for entries saved without provenance.
+pub const METHOD_UNKNOWN: u8 = 255;
+
+/// Deepest HSS tree the decoder will follow (a legitimate tree halves `n`
+/// each level, so this is far beyond any real depth — it only bounds
+/// recursion on corrupt input).
+const MAX_NODE_DEPTH: usize = 64;
+
+/// Per-entry metadata carried next to the payload.
+#[derive(Clone, Debug)]
+pub struct EntryMeta {
+    pub name: String,
+    /// `KIND_DENSE` / `KIND_LOWRANK` / `KIND_HSS`
+    pub kind: u8,
+    /// compression method that produced the matrix, when known
+    pub method: Option<Method>,
+    /// reconstruction error recorded at compression time (NaN if unknown)
+    pub rel_error: f64,
+}
+
+impl EntryMeta {
+    /// The method, falling back to a kind-appropriate default for entries
+    /// saved without provenance.
+    pub fn method_or_default(&self) -> Method {
+        self.method.unwrap_or(match self.kind {
+            KIND_DENSE => Method::Dense,
+            KIND_LOWRANK => Method::Svd,
+            _ => Method::SHss,
+        })
+    }
+}
+
+pub fn kind_of(m: &CompressedMatrix) -> u8 {
+    match m {
+        CompressedMatrix::Dense { .. } => KIND_DENSE,
+        CompressedMatrix::LowRank { .. } => KIND_LOWRANK,
+        CompressedMatrix::Hss { .. } => KIND_HSS,
+    }
+}
+
+/// Stable one-byte on-disk code for a [`Method`]. Pinned explicitly (like
+/// the `KIND_*` constants) so reordering `Method::ALL` can never silently
+/// remap the provenance of existing store files.
+pub fn method_code(m: Method) -> u8 {
+    match m {
+        Method::Dense => 0,
+        Method::Svd => 1,
+        Method::Rsvd => 2,
+        Method::SSvd => 3,
+        Method::SRsvd => 4,
+        Method::SHss => 5,
+        Method::SHssRcm => 6,
+    }
+}
+
+pub fn method_from_code(c: u8) -> Option<Method> {
+    Some(match c {
+        0 => Method::Dense,
+        1 => Method::Svd,
+        2 => Method::Rsvd,
+        3 => Method::SSvd,
+        4 => Method::SRsvd,
+        5 => Method::SHss,
+        6 => Method::SHssRcm,
+        _ => return None,
+    })
+}
+
+// --------------------------------------------------------------- encoding
+
+/// Append a matrix section; `dtype` is `DT_F32` or `DT_F16`.
+pub fn put_matrix(out: &mut Vec<u8>, m: &Matrix, dtype: u8) {
+    put_u32(out, m.rows as u32);
+    put_u32(out, m.cols as u32);
+    out.push(dtype);
+    match dtype {
+        DT_F32 => {
+            for v in &m.data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        _ => out.extend_from_slice(&fp16::encode_f16_le(&m.data)),
+    }
+}
+
+/// Append a CSR section (values fp16).
+pub fn put_csr(out: &mut Vec<u8>, s: &Csr) {
+    put_u32(out, s.rows as u32);
+    put_u32(out, s.cols as u32);
+    put_u32(out, s.nnz() as u32);
+    for &p in &s.indptr {
+        put_u32(out, p);
+    }
+    for &j in &s.indices {
+        put_u32(out, j);
+    }
+    out.push(DT_F16);
+    out.extend_from_slice(&fp16::encode_f16_le(&s.data));
+}
+
+fn put_node(out: &mut Vec<u8>, node: &HssNode) {
+    match node {
+        HssNode::Leaf { d } => {
+            out.push(NODE_LEAF);
+            put_matrix(out, d, DT_F16);
+        }
+        HssNode::Branch {
+            n,
+            sparse,
+            perm,
+            u0,
+            r0,
+            u1,
+            r1,
+            c0,
+            c1,
+        } => {
+            out.push(NODE_BRANCH);
+            put_u32(out, *n as u32);
+            put_csr(out, sparse);
+            if perm.is_identity() {
+                out.push(0);
+            } else {
+                out.push(1);
+                for &i in perm.indices() {
+                    put_u32(out, i as u32);
+                }
+            }
+            put_matrix(out, u0, DT_F16);
+            put_matrix(out, r0, DT_F16);
+            put_matrix(out, u1, DT_F16);
+            put_matrix(out, r1, DT_F16);
+            put_node(out, c0);
+            put_node(out, c1);
+        }
+    }
+}
+
+/// Serialize one [`CompressedMatrix`] payload (everything after the entry
+/// header).
+pub fn encode_payload(m: &CompressedMatrix) -> Vec<u8> {
+    let mut out = Vec::with_capacity(m.bytes() + 64);
+    match m {
+        CompressedMatrix::Dense { w } => put_matrix(&mut out, w, DT_F32),
+        CompressedMatrix::LowRank { l, r, sparse } => {
+            put_matrix(&mut out, l, DT_F16);
+            put_matrix(&mut out, r, DT_F16);
+            match sparse {
+                Some(s) => {
+                    out.push(1);
+                    put_csr(&mut out, s);
+                }
+                None => out.push(0),
+            }
+        }
+        CompressedMatrix::Hss { tree } => put_node(&mut out, tree),
+    }
+    out
+}
+
+// --------------------------------------------------------------- decoding
+
+/// Parse a matrix section.
+pub fn get_matrix(r: &mut ByteReader) -> Result<Matrix> {
+    let rows = r.u32()? as usize;
+    let cols = r.u32()? as usize;
+    let dtype = r.u8()?;
+    let count = rows
+        .checked_mul(cols)
+        .ok_or_else(|| anyhow::anyhow!("matrix {rows}x{cols} overflows"))?;
+    let data = match dtype {
+        DT_F32 => r
+            .take(count.checked_mul(4).ok_or_else(|| anyhow::anyhow!("matrix too large"))?)?
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect(),
+        DT_F16 => fp16::decode_f16_le(
+            r.take(count.checked_mul(2).ok_or_else(|| anyhow::anyhow!("matrix too large"))?)?,
+        ),
+        d => bail!("matrix: unknown dtype code {d}"),
+    };
+    Ok(Matrix::from_vec(rows, cols, data))
+}
+
+/// Parse and structurally validate a CSR section.
+pub fn get_csr(r: &mut ByteReader) -> Result<Csr> {
+    let rows = r.u32()? as usize;
+    let cols = r.u32()? as usize;
+    let nnz = r.u32()? as usize;
+    let indptr_len = rows
+        .checked_add(1)
+        .ok_or_else(|| anyhow::anyhow!("csr rows overflow"))?;
+    let indptr: Vec<u32> = r
+        .take(indptr_len.checked_mul(4).ok_or_else(|| anyhow::anyhow!("csr too large"))?)?
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    let indices: Vec<u32> = r
+        .take(nnz.checked_mul(4).ok_or_else(|| anyhow::anyhow!("csr too large"))?)?
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    let dtype = r.u8()?;
+    let data = match dtype {
+        DT_F16 => fp16::decode_f16_le(r.take(nnz * 2)?),
+        DT_F32 => r
+            .take(nnz.checked_mul(4).ok_or_else(|| anyhow::anyhow!("csr too large"))?)?
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect(),
+        d => bail!("csr: unknown dtype code {d}"),
+    };
+    let csr = Csr {
+        rows,
+        cols,
+        indptr,
+        indices,
+        data,
+    };
+    csr.validate().map_err(anyhow::Error::msg)?;
+    Ok(csr)
+}
+
+fn get_perm(r: &mut ByteReader, n: usize) -> Result<Permutation> {
+    let raw = r.take(n.checked_mul(4).ok_or_else(|| anyhow::anyhow!("perm too large"))?)?;
+    let mut p = Vec::with_capacity(n);
+    let mut seen = vec![false; n];
+    for c in raw.chunks_exact(4) {
+        let i = u32::from_le_bytes([c[0], c[1], c[2], c[3]]) as usize;
+        if i >= n || seen[i] {
+            bail!("permutation entry {i} invalid for n={n}");
+        }
+        seen[i] = true;
+        p.push(i);
+    }
+    Ok(Permutation::from_vec(p))
+}
+
+fn get_node(r: &mut ByteReader, depth: usize) -> Result<HssNode> {
+    if depth > MAX_NODE_DEPTH {
+        bail!("hss tree deeper than {MAX_NODE_DEPTH} (corrupt file)");
+    }
+    match r.u8()? {
+        NODE_LEAF => Ok(HssNode::Leaf { d: get_matrix(r)? }),
+        NODE_BRANCH => {
+            let n = r.u32()? as usize;
+            let sparse = get_csr(r)?;
+            let perm = match r.u8()? {
+                0 => Permutation::identity(n),
+                1 => get_perm(r, n)?,
+                p => bail!("unknown permutation tag {p}"),
+            };
+            let u0 = get_matrix(r)?;
+            let r0 = get_matrix(r)?;
+            let u1 = get_matrix(r)?;
+            let r1 = get_matrix(r)?;
+            let c0 = Box::new(get_node(r, depth + 1)?);
+            let c1 = Box::new(get_node(r, depth + 1)?);
+            Ok(HssNode::Branch {
+                n,
+                sparse,
+                perm,
+                u0,
+                r0,
+                u1,
+                r1,
+                c0,
+                c1,
+            })
+        }
+        t => bail!("unknown hss node tag {t}"),
+    }
+}
+
+/// Deserialize one payload back into a [`CompressedMatrix`], consuming the
+/// whole slice and validating structure.
+pub fn decode_payload(kind: u8, payload: &[u8]) -> Result<CompressedMatrix> {
+    let mut r = ByteReader::new(payload);
+    let m = match kind {
+        KIND_DENSE => {
+            let w = get_matrix(&mut r)?;
+            if w.rows != w.cols {
+                bail!("dense entry not square: {}x{}", w.rows, w.cols);
+            }
+            CompressedMatrix::Dense { w }
+        }
+        KIND_LOWRANK => {
+            let l = get_matrix(&mut r)?;
+            let rm = get_matrix(&mut r)?;
+            if l.cols != rm.rows {
+                bail!("lowrank: l is {}x{} but r is {}x{}", l.rows, l.cols, rm.rows, rm.cols);
+            }
+            // the runtime represents square matrices (n() reads l.rows and
+            // matvec feeds length-n inputs to r): enforce it here so a
+            // crc-valid but malformed entry can't panic a worker thread
+            if l.rows != rm.cols {
+                bail!(
+                    "lowrank entry not square: l·r is {}x{}",
+                    l.rows,
+                    rm.cols
+                );
+            }
+            let sparse = match r.u8()? {
+                0 => None,
+                1 => {
+                    let s = get_csr(&mut r)?;
+                    if s.rows != l.rows || s.cols != rm.cols {
+                        bail!(
+                            "lowrank: spike matrix {}x{} vs factors {}x{}",
+                            s.rows,
+                            s.cols,
+                            l.rows,
+                            rm.cols
+                        );
+                    }
+                    Some(s)
+                }
+                t => bail!("unknown sparse tag {t}"),
+            };
+            CompressedMatrix::LowRank { l, r: rm, sparse }
+        }
+        KIND_HSS => {
+            let tree = get_node(&mut r, 0)?;
+            tree.validate().map_err(anyhow::Error::msg)?;
+            CompressedMatrix::Hss { tree }
+        }
+        k => bail!("unknown entry kind {k}"),
+    };
+    if r.remaining() != 0 {
+        bail!("{} trailing bytes after payload", r.remaining());
+    }
+    Ok(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Compressor, CompressorConfig};
+    use crate::data::synthetic;
+    use crate::util::proptest::slices_close;
+    use crate::util::rng::Rng;
+
+    fn compressed(n: usize, m: Method, seed: u64) -> CompressedMatrix {
+        let w = synthetic::trained_like(n, seed);
+        Compressor::new(CompressorConfig {
+            rank: 8,
+            sparsity: 0.15,
+            depth: 2,
+            min_leaf: 8,
+            ..Default::default()
+        })
+        .compress(&w, m)
+    }
+
+    #[test]
+    fn payload_roundtrip_preserves_structure_and_matvec() {
+        for m in [Method::Dense, Method::SSvd, Method::SHssRcm] {
+            let c = compressed(48, m, 3);
+            let payload = encode_payload(&c);
+            let back = decode_payload(kind_of(&c), &payload).unwrap();
+            assert_eq!(back.n(), c.n(), "{m:?}");
+            assert_eq!(back.params(), c.params(), "{m:?}");
+            assert_eq!(back.bytes(), c.bytes(), "{m:?}");
+            let mut rng = Rng::new(9);
+            let x: Vec<f32> = (0..48).map(|_| rng.gaussian_f32()).collect();
+            // fp16 quantization of the stored factors bounds the drift
+            slices_close(&back.matvec(&x), &c.matvec(&x), 2e-2, 2e-2, m.name()).unwrap();
+        }
+    }
+
+    #[test]
+    fn dense_payload_bit_exact() {
+        let c = compressed(32, Method::Dense, 4);
+        let back = decode_payload(KIND_DENSE, &encode_payload(&c)).unwrap();
+        let (CompressedMatrix::Dense { w: a }, CompressedMatrix::Dense { w: b }) = (&c, &back)
+        else {
+            panic!("wrong variants");
+        };
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn truncated_payload_rejected() {
+        let c = compressed(32, Method::SHssRcm, 5);
+        let payload = encode_payload(&c);
+        for cut in [1, payload.len() / 2, payload.len() - 1] {
+            assert!(
+                decode_payload(KIND_HSS, &payload[..cut]).is_err(),
+                "cut at {cut} accepted"
+            );
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let c = compressed(32, Method::SSvd, 6);
+        let mut payload = encode_payload(&c);
+        payload.push(0);
+        assert!(decode_payload(KIND_LOWRANK, &payload).is_err());
+    }
+
+    #[test]
+    fn corrupt_csr_indices_rejected_not_panicking() {
+        let c = compressed(32, Method::SSvd, 7);
+        let CompressedMatrix::LowRank { l, r, sparse: Some(s) } = &c else {
+            panic!("ssvd should carry a spike matrix");
+        };
+        let mut bad = s.clone();
+        if !bad.indices.is_empty() {
+            bad.indices[0] = 10_000; // far out of range
+        }
+        let corrupt = CompressedMatrix::LowRank {
+            l: l.clone(),
+            r: r.clone(),
+            sparse: Some(bad),
+        };
+        let payload = encode_payload(&corrupt);
+        let e = decode_payload(KIND_LOWRANK, &payload).unwrap_err();
+        assert!(format!("{e:#}").contains("csr"), "{e:#}");
+    }
+
+    #[test]
+    fn non_square_entries_rejected() {
+        // a crc-valid but non-square entry must fail decode, not panic the
+        // worker later in matvec
+        let lr = CompressedMatrix::LowRank {
+            l: crate::linalg::Matrix::zeros(4, 2),
+            r: crate::linalg::Matrix::zeros(2, 3),
+            sparse: None,
+        };
+        let e = decode_payload(KIND_LOWRANK, &encode_payload(&lr)).unwrap_err();
+        assert!(format!("{e:#}").contains("square"), "{e:#}");
+
+        let d = CompressedMatrix::Dense {
+            w: crate::linalg::Matrix::zeros(4, 3),
+        };
+        let e = decode_payload(KIND_DENSE, &encode_payload(&d)).unwrap_err();
+        assert!(format!("{e:#}").contains("square"), "{e:#}");
+    }
+
+    #[test]
+    fn method_codes_roundtrip() {
+        for m in Method::ALL {
+            assert_eq!(method_from_code(method_code(m)), Some(m));
+        }
+        assert_eq!(method_from_code(METHOD_UNKNOWN), None);
+    }
+}

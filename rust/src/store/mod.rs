@@ -1,0 +1,35 @@
+//! `store/` — the native on-disk format for compressed artifacts (`HSB1`)
+//! and the variant registry the serving coordinator cold-starts and
+//! hot-swaps from.
+//!
+//! The paper's headline claim is the compressed footprint, but a
+//! [`crate::compress::CompressedMatrix`] that only ever lives in RAM must be
+//! recompressed from dense weights on every process start — minutes of SVD
+//! work before the first request. `HSB1` persists every variant — CSR
+//! spikes, recursive HSS trees (U/R factors at fp16, per-level
+//! permutations, leaf blocks), and plain low-rank factors — behind a
+//! versioned header, per-section lengths, and a crc32 integrity footer:
+//!
+//! - [`StoreWriter`] serializes named entries and writes atomically
+//!   (temp + rename), so readers racing a writer never see a torn file;
+//! - [`StoreFile`] reads the file once, verifies the crc, indexes sections
+//!   in place, and decodes entries on demand —
+//!   [`StoreFile::load_with_workspace`] also pre-sizes the matvec scratch
+//!   so a cold-started worker's first request allocates nothing;
+//! - [`ModelStore`] keys entries by `(layer, variant)` across one file per
+//!   variant and rebuilds a [`crate::model::CompressedModel`] without
+//!   recompression — the input to `Coordinator::swap_variant`.
+//!
+//! Format details live in [`format`]; the binary primitives (magic,
+//! length-prefixed strings, dtype tags, crc32) are shared with the `HWT1`
+//! weight container via [`crate::util::binio`].
+
+pub mod format;
+pub mod model_store;
+pub mod reader;
+pub mod writer;
+
+pub use format::EntryMeta;
+pub use model_store::{entry_name, ModelStore};
+pub use reader::StoreFile;
+pub use writer::StoreWriter;

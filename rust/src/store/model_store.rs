@@ -1,0 +1,230 @@
+//! Variant-keyed registry over `HSB1` files — the coordinator's view of the
+//! store.
+//!
+//! One file per variant (`<dir>/<variant>.hsb1`), each holding every
+//! compressed q/k/v projection as `layer{i}.{wq,wk,wv}` entries. Lookups
+//! are keyed by `(layer, variant)`; whole-model loads rebuild a
+//! [`CompressedModel`] without recompression, which is what makes cold
+//! starts and live hot-swaps (`Coordinator::swap_variant`) cheap.
+
+use crate::compress::CompressedMatrix;
+use crate::model::transformer::Proj;
+use crate::model::{CompressedModel, Transformer};
+use crate::store::StoreFile;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// Canonical entry name for one projection: `layer{layer}.{wq|wk|wv}`.
+pub fn entry_name(layer: usize, proj: Proj) -> String {
+    let p = match proj {
+        Proj::Q => "wq",
+        Proj::K => "wk",
+        Proj::V => "wv",
+    };
+    format!("layer{layer}.{p}")
+}
+
+/// A directory of variant store files.
+pub struct ModelStore {
+    dir: PathBuf,
+}
+
+impl ModelStore {
+    /// Bind to a store directory (created lazily on first save).
+    pub fn open(dir: impl Into<PathBuf>) -> ModelStore {
+        ModelStore { dir: dir.into() }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// File backing one variant.
+    pub fn variant_path(&self, variant: &str) -> PathBuf {
+        self.dir.join(format!("{variant}.hsb1"))
+    }
+
+    pub fn has_variant(&self, variant: &str) -> bool {
+        self.variant_path(variant).exists()
+    }
+
+    /// Variant names present on disk (sorted).
+    pub fn variants(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        if let Ok(rd) = std::fs::read_dir(&self.dir) {
+            for e in rd.flatten() {
+                let path = e.path();
+                if path.extension().and_then(|x| x.to_str()) == Some("hsb1") {
+                    if let Some(stem) = path.file_stem().and_then(|s| s.to_str()) {
+                        out.push(stem.to_string());
+                    }
+                }
+            }
+        }
+        out.sort();
+        out
+    }
+
+    /// Persist a compressed model's q/k/v set as `variant`, atomically.
+    /// Returns the written path.
+    pub fn save_model(&self, variant: &str, model: &CompressedModel) -> Result<PathBuf> {
+        std::fs::create_dir_all(&self.dir)
+            .with_context(|| format!("creating store dir {}", self.dir.display()))?;
+        let path = self.variant_path(variant);
+        crate::compress::pipeline::save_reports(&model.reports, &path)?;
+        Ok(path)
+    }
+
+    /// Open one variant's store file.
+    pub fn open_variant(&self, variant: &str) -> Result<StoreFile> {
+        StoreFile::open(&self.variant_path(variant))
+            .with_context(|| format!("variant '{variant}'"))
+    }
+
+    /// Load a single projection matrix, keyed by `(layer, variant)`.
+    pub fn load_matrix(
+        &self,
+        variant: &str,
+        layer: usize,
+        proj: Proj,
+    ) -> Result<CompressedMatrix> {
+        self.open_variant(variant)?.load(&entry_name(layer, proj))
+    }
+
+    /// Cold-start a full [`CompressedModel`] for `base` from disk — no
+    /// recompression, workspaces pre-sized by the reader.
+    pub fn load_model(&self, variant: &str, base: Arc<Transformer>) -> Result<CompressedModel> {
+        let file = self.open_variant(variant)?;
+        CompressedModel::from_store(base, &file)
+            .with_context(|| format!("building model from variant '{variant}'"))
+    }
+
+    /// On-disk bytes of one variant (0 if absent).
+    pub fn variant_bytes(&self, variant: &str) -> u64 {
+        std::fs::metadata(self.variant_path(variant))
+            .map(|m| m.len())
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{CompressorConfig, Method};
+    use crate::model::ModelConfig;
+
+    fn tiny_base(seed: u64) -> Arc<Transformer> {
+        Arc::new(Transformer::random(
+            ModelConfig {
+                vocab: 64,
+                d_model: 32,
+                n_heads: 4,
+                n_layers: 2,
+                d_ff: 64,
+                seq_len: 16,
+            },
+            seed,
+        ))
+    }
+
+    fn temp_store(tag: &str) -> ModelStore {
+        let dir = std::env::temp_dir().join(format!("hisolo_test_model_store_{tag}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        ModelStore::open(dir)
+    }
+
+    #[test]
+    fn save_then_load_matches_forward() {
+        let base = tiny_base(3);
+        let cm = CompressedModel::compress(
+            base.clone(),
+            Method::SHssRcm,
+            CompressorConfig {
+                rank: 8,
+                sparsity: 0.15,
+                depth: 1,
+                min_leaf: 4,
+                ..Default::default()
+            },
+        );
+        let store = temp_store("roundtrip");
+        let path = store.save_model("hss", &cm).unwrap();
+        assert!(path.exists());
+        assert!(store.has_variant("hss"));
+        assert_eq!(store.variants(), vec!["hss".to_string()]);
+        assert!(store.variant_bytes("hss") > 0);
+
+        let loaded = store.load_model("hss", base.clone()).unwrap();
+        assert_eq!(loaded.method, Method::SHssRcm);
+        assert_eq!(loaded.qkv.len(), 2);
+        assert_eq!(loaded.reports.len(), 6);
+        // storage accounting must survive the trip exactly
+        for (a, b) in cm.reports.iter().zip(&loaded.reports) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.params, b.params);
+            assert_eq!(a.bytes, b.bytes);
+            assert_eq!(
+                a.compressed.storage_ratio(),
+                b.compressed.storage_ratio(),
+                "{}",
+                a.name
+            );
+        }
+        // forward pass agrees within fp16 storage tolerance
+        let tokens: Vec<u32> = (0..16).map(|i| (i * 5) % 64).collect();
+        let y0 = cm.forward(&tokens);
+        let y1 = loaded.forward(&tokens);
+        let mut max_diff = 0.0f32;
+        for (a, b) in y0.data.iter().zip(&y1.data) {
+            max_diff = max_diff.max((a - b).abs());
+        }
+        assert!(max_diff < 5e-2, "max logit diff {max_diff}");
+    }
+
+    #[test]
+    fn keyed_matrix_lookup() {
+        let base = tiny_base(4);
+        let cm = CompressedModel::compress(
+            base.clone(),
+            Method::SSvd,
+            CompressorConfig {
+                rank: 4,
+                sparsity: 0.1,
+                ..Default::default()
+            },
+        );
+        let store = temp_store("keyed");
+        store.save_model("ssvd", &cm).unwrap();
+        let m = store.load_matrix("ssvd", 1, Proj::K).unwrap();
+        assert_eq!(m.n(), 32);
+        assert!(store.load_matrix("ssvd", 7, Proj::K).is_err());
+        assert!(store.load_matrix("absent", 0, Proj::Q).is_err());
+    }
+
+    #[test]
+    fn multiple_variants_coexist() {
+        let base = tiny_base(5);
+        let store = temp_store("multi");
+        for (name, m) in [("dense", Method::Dense), ("hss", Method::SHss)] {
+            let cm = CompressedModel::compress(
+                base.clone(),
+                m,
+                CompressorConfig {
+                    rank: 8,
+                    sparsity: 0.1,
+                    depth: 1,
+                    min_leaf: 4,
+                    ..Default::default()
+                },
+            );
+            store.save_model(name, &cm).unwrap();
+        }
+        assert_eq!(
+            store.variants(),
+            vec!["dense".to_string(), "hss".to_string()]
+        );
+        // the compressed variant is the smaller artifact on disk
+        assert!(store.variant_bytes("hss") < store.variant_bytes("dense"));
+    }
+}

@@ -1,0 +1,256 @@
+//! `HSB1` reader: one read of the whole file, crc verification, then an
+//! in-place section index. Individual entries decode lazily — loading one
+//! matrix from a many-entry store touches only that entry's bytes — and
+//! [`StoreFile::load_with_workspace`] pre-sizes the matvec scratch at load
+//! time so the first request served from a cold start pays no allocation.
+
+use crate::compress::compressed::ApplyWorkspace;
+use crate::compress::CompressedMatrix;
+use crate::store::format::{
+    decode_payload, method_from_code, EntryMeta, FOOTER_BYTES, HEADER_BYTES, KIND_HSS, MAGIC,
+    METHOD_UNKNOWN, VERSION,
+};
+use crate::util::binio::{crc32, ByteReader};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+struct EntryIndex {
+    meta: EntryMeta,
+    /// payload byte range within the file buffer
+    start: usize,
+    len: usize,
+}
+
+/// A parsed, integrity-checked `HSB1` file.
+pub struct StoreFile {
+    buf: Vec<u8>,
+    entries: Vec<EntryIndex>,
+}
+
+impl StoreFile {
+    /// Read and validate `path`: magic, version, per-section lengths, and
+    /// the crc32 footer (any truncation or bit corruption is rejected here,
+    /// before any payload is decoded).
+    pub fn open(path: &Path) -> Result<StoreFile> {
+        let buf = std::fs::read(path)
+            .with_context(|| format!("reading store file {}", path.display()))?;
+        StoreFile::from_bytes(buf).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    /// Parse an in-memory `HSB1` image (the file-free path used by tests
+    /// and by transports that already hold the bytes).
+    pub fn from_bytes(buf: Vec<u8>) -> Result<StoreFile> {
+        if buf.len() < HEADER_BYTES + FOOTER_BYTES {
+            bail!("file too short ({} bytes) for an HSB1 store", buf.len());
+        }
+        let body = &buf[..buf.len() - FOOTER_BYTES];
+        let footer = &buf[buf.len() - FOOTER_BYTES..];
+        let want = u32::from_le_bytes([footer[0], footer[1], footer[2], footer[3]]);
+        let got = crc32(body);
+        if want != got {
+            bail!("crc mismatch: footer {want:#010x} vs computed {got:#010x} (corrupt or truncated store)");
+        }
+
+        let mut r = ByteReader::new(body);
+        r.expect_magic(MAGIC, "HSB1")?;
+        let version = r.u16()?;
+        if version != VERSION {
+            bail!("unsupported HSB1 version {version} (this build reads {VERSION})");
+        }
+        let _flags = r.u16()?;
+        let count = r.u32()? as usize;
+        let mut entries = Vec::with_capacity(count.min(1024));
+        for _ in 0..count {
+            let name = r.string()?;
+            let kind = r.u8()?;
+            if kind > KIND_HSS {
+                bail!("entry '{name}': unknown kind {kind}");
+            }
+            let method_byte = r.u8()?;
+            let method = if method_byte == METHOD_UNKNOWN {
+                None
+            } else {
+                Some(
+                    method_from_code(method_byte)
+                        .ok_or_else(|| anyhow::anyhow!("entry '{name}': bad method code {method_byte}"))?,
+                )
+            };
+            let rel_error = r.f64()?;
+            let len = r.u64()? as usize;
+            let start = r.pos();
+            r.take(len)
+                .with_context(|| format!("entry '{name}' payload"))?;
+            entries.push(EntryIndex {
+                meta: EntryMeta {
+                    name,
+                    kind,
+                    method,
+                    rel_error,
+                },
+                start,
+                len,
+            });
+        }
+        if r.remaining() != 0 {
+            bail!("{} trailing bytes after the last entry", r.remaining());
+        }
+        Ok(StoreFile { buf, entries })
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Total on-disk footprint, header and footer included.
+    pub fn total_bytes(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.iter().map(|e| e.meta.name.as_str()).collect()
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&EntryMeta> {
+        self.find(name).map(|e| &e.meta)
+    }
+
+    fn find(&self, name: &str) -> Option<&EntryIndex> {
+        self.entries.iter().find(|e| e.meta.name == name)
+    }
+
+    /// Decode one entry into its runtime representation — no recompression,
+    /// just parse + fp16 widen.
+    pub fn load(&self, name: &str) -> Result<CompressedMatrix> {
+        let e = self
+            .find(name)
+            .ok_or_else(|| anyhow::anyhow!("entry '{name}' not in store (have: {})", self.names().join(", ")))?;
+        decode_payload(e.meta.kind, &self.buf[e.start..e.start + e.len])
+            .with_context(|| format!("decoding entry '{name}'"))
+    }
+
+    /// Load plus a pre-sized [`ApplyWorkspace`], so the caller's first
+    /// `matvec_with` allocates nothing.
+    pub fn load_with_workspace(&self, name: &str) -> Result<(CompressedMatrix, ApplyWorkspace)> {
+        let m = self.load(name)?;
+        let ws = m.workspace();
+        Ok((m, ws))
+    }
+
+    /// Decode every entry in file order.
+    pub fn load_all(&self) -> Result<Vec<(String, CompressedMatrix)>> {
+        self.entries
+            .iter()
+            .map(|e| Ok((e.meta.name.clone(), self.load(&e.meta.name)?)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Compressor, CompressorConfig, Method};
+    use crate::data::synthetic;
+    use crate::store::StoreWriter;
+    use crate::util::proptest::slices_close;
+    use crate::util::rng::Rng;
+
+    fn sample_writer(n: usize) -> StoreWriter {
+        let w = synthetic::trained_like(n, 11);
+        let comp = Compressor::new(CompressorConfig {
+            rank: 8,
+            sparsity: 0.15,
+            depth: 2,
+            min_leaf: 8,
+            ..Default::default()
+        });
+        let mut sw = StoreWriter::new();
+        for (name, m) in [
+            ("dense", Method::Dense),
+            ("lowrank", Method::SSvd),
+            ("hss", Method::SHssRcm),
+        ] {
+            sw.push_with_meta(name, &comp.compress(&w, m), Some(m), 0.01);
+        }
+        sw
+    }
+
+    #[test]
+    fn container_roundtrip_in_memory() {
+        let sw = sample_writer(48);
+        let file = StoreFile::from_bytes(sw.to_bytes()).unwrap();
+        assert_eq!(file.names(), vec!["dense", "lowrank", "hss"]);
+        assert_eq!(file.len(), 3);
+        let meta = file.meta("hss").unwrap();
+        assert_eq!(meta.method, Some(Method::SHssRcm));
+        assert!((meta.rel_error - 0.01).abs() < 1e-12);
+        for name in ["dense", "lowrank", "hss"] {
+            let (m, mut ws) = file.load_with_workspace(name).unwrap();
+            assert_eq!(m.n(), 48);
+            let mut rng = Rng::new(1);
+            let x: Vec<f32> = (0..48).map(|_| rng.gaussian_f32()).collect();
+            let mut y = vec![0.0; 48];
+            m.matvec_with(&x, &mut y, &mut ws);
+            slices_close(&y, &m.matvec(&x), 1e-6, 1e-6, name).unwrap();
+        }
+        assert!(file.load("nope").is_err());
+    }
+
+    #[test]
+    fn file_roundtrip_atomic_write() {
+        let dir = std::env::temp_dir().join("hisolo_test_store_reader");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rt.hsb1");
+        let sw = sample_writer(32);
+        let written = sw.finish(&path).unwrap();
+        assert_eq!(written, std::fs::metadata(&path).unwrap().len());
+        let file = StoreFile::open(&path).unwrap();
+        assert_eq!(file.total_bytes() as u64, written);
+        assert_eq!(file.load_all().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn every_truncation_rejected() {
+        let bytes = sample_writer(32).to_bytes();
+        // chop at a spread of offsets including mid-header and mid-payload
+        for cut in [0, 3, 8, 11, bytes.len() / 3, bytes.len() - 5, bytes.len() - 1] {
+            assert!(
+                StoreFile::from_bytes(bytes[..cut].to_vec()).is_err(),
+                "truncation at {cut} accepted"
+            );
+        }
+    }
+
+    #[test]
+    fn bit_flips_rejected_by_crc() {
+        let bytes = sample_writer(32).to_bytes();
+        for pos in [4usize, 12, bytes.len() / 2, bytes.len() - 6] {
+            let mut bad = bytes.clone();
+            bad[pos] ^= 0x01;
+            let e = StoreFile::from_bytes(bad).unwrap_err();
+            assert!(format!("{e}").contains("crc"), "flip at {pos}: {e}");
+        }
+    }
+
+    #[test]
+    fn wrong_magic_and_version_rejected() {
+        let mut bytes = sample_writer(32).to_bytes();
+        // magic flip, with crc recomputed so only the magic check can fire
+        bytes[0] = b'X';
+        let body_len = bytes.len() - 4;
+        let crc = crate::util::binio::crc32(&bytes[..body_len]);
+        bytes[body_len..].copy_from_slice(&crc.to_le_bytes());
+        let e = StoreFile::from_bytes(bytes.clone()).unwrap_err();
+        assert!(format!("{e:#}").contains("magic"), "{e:#}");
+
+        bytes[0] = b'H';
+        bytes[4] = 99; // version
+        let crc = crate::util::binio::crc32(&bytes[..body_len]);
+        bytes[body_len..].copy_from_slice(&crc.to_le_bytes());
+        let e = StoreFile::from_bytes(bytes).unwrap_err();
+        assert!(format!("{e:#}").contains("version"), "{e:#}");
+    }
+}

@@ -1,0 +1,115 @@
+//! `HSB1` writer: collects named [`CompressedMatrix`] entries and emits one
+//! integrity-checked store file, atomically.
+
+use crate::compress::{CompressedMatrix, Method};
+use crate::store::format::{
+    encode_payload, kind_of, method_code, EntryMeta, MAGIC, METHOD_UNKNOWN, VERSION,
+};
+use crate::util::binio::{crc32, put_string, put_u16, put_u32, put_u64, put_f64};
+use anyhow::{Context, Result};
+use std::io::Write;
+use std::path::Path;
+
+/// Builder for an `HSB1` file. Entries are serialized on `push`, so the
+/// writer never holds the matrices themselves — only their encoded bytes.
+#[derive(Default)]
+pub struct StoreWriter {
+    entries: Vec<(EntryMeta, Vec<u8>)>,
+}
+
+impl StoreWriter {
+    pub fn new() -> StoreWriter {
+        StoreWriter::default()
+    }
+
+    /// Add an entry without provenance metadata.
+    pub fn push(&mut self, name: &str, m: &CompressedMatrix) {
+        self.push_with_meta(name, m, None, f64::NAN);
+    }
+
+    /// Add an entry recording the method and compression-time error, so a
+    /// loaded model can reconstruct its layer reports without the original
+    /// dense weights.
+    pub fn push_with_meta(
+        &mut self,
+        name: &str,
+        m: &CompressedMatrix,
+        method: Option<Method>,
+        rel_error: f64,
+    ) {
+        let meta = EntryMeta {
+            name: name.to_string(),
+            kind: kind_of(m),
+            method,
+            rel_error,
+        };
+        self.entries.push((meta, encode_payload(m)));
+    }
+
+    pub fn entry_count(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Serialize header, entries, and crc footer into one buffer.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let payload_total: usize = self.entries.iter().map(|(_, p)| p.len()).sum();
+        let mut out = Vec::with_capacity(payload_total + 64 * self.entries.len() + 16);
+        out.extend_from_slice(MAGIC);
+        put_u16(&mut out, VERSION);
+        put_u16(&mut out, 0); // flags, reserved
+        put_u32(&mut out, self.entries.len() as u32);
+        for (meta, payload) in &self.entries {
+            put_string(&mut out, &meta.name);
+            out.push(meta.kind);
+            out.push(meta.method.map_or(METHOD_UNKNOWN, method_code));
+            put_f64(&mut out, meta.rel_error);
+            put_u64(&mut out, payload.len() as u64);
+            out.extend_from_slice(payload);
+        }
+        let crc = crc32(&out);
+        put_u32(&mut out, crc);
+        out
+    }
+
+    /// Write the store to `path` atomically (temp file + rename), so a
+    /// serving coordinator hot-swapping from this path never observes a
+    /// half-written file. The temp name is unique per process and call,
+    /// so concurrent saves of the same variant cannot interleave into a
+    /// corrupt artifact — last rename wins, both renamed files are
+    /// complete. Returns the byte count written.
+    pub fn finish(&self, path: &Path) -> Result<u64> {
+        static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        let bytes = self.to_bytes();
+        let tmp = match path.file_name() {
+            Some(name) => {
+                let mut n = name.to_os_string();
+                n.push(format!(
+                    ".tmp.{}.{}",
+                    std::process::id(),
+                    SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+                ));
+                path.with_file_name(n)
+            }
+            None => anyhow::bail!("store path {} has no file name", path.display()),
+        };
+        {
+            // sync data before the rename becomes durable, so a crash can
+            // never replace the previous good artifact with unflushed bytes
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            f.write_all(&bytes)
+                .with_context(|| format!("writing {}", tmp.display()))?;
+            f.sync_all()
+                .with_context(|| format!("syncing {}", tmp.display()))?;
+        }
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming {} into place", tmp.display()))?;
+        // best-effort directory sync so the rename itself is durable
+        if let Some(dir) = path.parent() {
+            if let Ok(d) = std::fs::File::open(dir) {
+                let _ = d.sync_all();
+            }
+        }
+        Ok(bytes.len() as u64)
+    }
+}

@@ -1,0 +1,302 @@
+//! Shared little-endian binary-io substrate for the on-disk formats.
+//!
+//! Both weight containers — `HWT1` ([`crate::model::weights`], the
+//! python⇄rust contract) and `HSB1` ([`crate::store`], the native
+//! compressed-artifact store) — speak the same primitives: a 4-byte magic,
+//! u32 length-prefixed strings, one-byte dtype tags, and little-endian
+//! integers. This module is the single home for that plumbing, plus the
+//! CRC32 used by the `HSB1` integrity footer.
+//!
+//! Two styles are provided:
+//! - stream helpers over `std::io::{Read, Write}` for file-at-a-time IO;
+//! - [`ByteReader`], a bounds-checked cursor over an in-memory buffer, for
+//!   formats that read the whole file once and then parse sections in place
+//!   (no per-field syscalls, no intermediate copies).
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+
+/// Dtype tag shared by `HWT1` tensors and `HSB1` matrix sections.
+pub const DT_F32: u8 = 0;
+/// fp16 payload (decoded through [`crate::util::fp16`]).
+pub const DT_F16: u8 = 1;
+pub const DT_I32: u8 = 2;
+
+// ---------------------------------------------------------------- streams
+
+/// Read and verify a 4-byte magic; `what` names the format for the error.
+pub fn check_magic<R: Read>(r: &mut R, magic: &[u8; 4], what: &str) -> Result<()> {
+    let mut got = [0u8; 4];
+    r.read_exact(&mut got)
+        .with_context(|| format!("reading {what} magic"))?;
+    if &got != magic {
+        bail!("bad {what} magic {got:?} (want {magic:?})");
+    }
+    Ok(())
+}
+
+pub fn read_u8<R: Read>(r: &mut R) -> Result<u8> {
+    let mut b = [0u8; 1];
+    r.read_exact(&mut b)?;
+    Ok(b[0])
+}
+
+pub fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+pub fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// Read exactly `n` bytes into a fresh buffer.
+pub fn read_exact_vec<R: Read>(r: &mut R, n: usize) -> Result<Vec<u8>> {
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+/// Read a u32 length-prefixed utf-8 string.
+pub fn read_string<R: Read>(r: &mut R) -> Result<String> {
+    let len = read_u32(r)? as usize;
+    let buf = read_exact_vec(r, len)?;
+    String::from_utf8(buf).context("length-prefixed string not utf-8")
+}
+
+pub fn write_u8<W: Write>(w: &mut W, v: u8) -> Result<()> {
+    w.write_all(&[v])?;
+    Ok(())
+}
+
+pub fn write_u32<W: Write>(w: &mut W, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+pub fn write_u64<W: Write>(w: &mut W, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+/// Write a u32 length-prefixed utf-8 string.
+pub fn write_string<W: Write>(w: &mut W, s: &str) -> Result<()> {
+    write_u32(w, s.len() as u32)?;
+    w.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+// ----------------------------------------------------- in-memory encoding
+
+pub fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append a u32 length-prefixed utf-8 string.
+pub fn put_string(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+// -------------------------------------------------------------- ByteReader
+
+/// Bounds-checked little-endian cursor over an in-memory buffer.
+///
+/// Every accessor fails with a position-annotated error instead of
+/// panicking, so corrupt or truncated files surface as `Err` all the way up.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> ByteReader<'a> {
+        ByteReader { buf, pos: 0 }
+    }
+
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Borrow the next `n` bytes (zero-copy) and advance.
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.remaining() {
+            bail!(
+                "truncated: wanted {n} bytes at offset {}, only {} left",
+                self.pos,
+                self.remaining()
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> Result<u16> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_le_bytes(a))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        let b = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(f64::from_le_bytes(a))
+    }
+
+    /// u32 length-prefixed utf-8 string.
+    pub fn string(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).context("length-prefixed string not utf-8")
+    }
+
+    /// Verify a 4-byte magic; `what` names the format for the error.
+    pub fn expect_magic(&mut self, magic: &[u8; 4], what: &str) -> Result<()> {
+        let got = self.take(4).with_context(|| format!("reading {what} magic"))?;
+        if got != magic {
+            bail!("bad {what} magic {got:?} (want {magic:?})");
+        }
+        Ok(())
+    }
+}
+
+// ------------------------------------------------------------------ crc32
+
+const CRC_TABLE: [u32; 256] = crc_table();
+
+const fn crc_table() -> [u32; 256] {
+    let mut t = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 {
+                0xEDB8_8320 ^ (c >> 1)
+            } else {
+                c >> 1
+            };
+            k += 1;
+        }
+        t[i] = c;
+        i += 1;
+    }
+    t
+}
+
+/// CRC-32 (IEEE 802.3, the zlib/gzip polynomial) of `bytes`.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_check_value() {
+        // the standard CRC-32 check vector
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn crc32_detects_single_bit_flip() {
+        let mut data = b"hierarchical sparse plus low rank".to_vec();
+        let before = crc32(&data);
+        data[7] ^= 0x20;
+        assert_ne!(before, crc32(&data));
+    }
+
+    #[test]
+    fn stream_roundtrip() {
+        let mut out: Vec<u8> = Vec::new();
+        out.extend_from_slice(b"HSB1");
+        write_u32(&mut out, 7).unwrap();
+        write_u64(&mut out, u64::MAX - 1).unwrap();
+        write_string(&mut out, "layer0.wq").unwrap();
+        write_u8(&mut out, DT_F16).unwrap();
+
+        let mut r: &[u8] = &out;
+        check_magic(&mut r, b"HSB1", "test").unwrap();
+        assert_eq!(read_u32(&mut r).unwrap(), 7);
+        assert_eq!(read_u64(&mut r).unwrap(), u64::MAX - 1);
+        assert_eq!(read_string(&mut r).unwrap(), "layer0.wq");
+        assert_eq!(read_u8(&mut r).unwrap(), DT_F16);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut r: &[u8] = b"NOPE....";
+        assert!(check_magic(&mut r, b"HSB1", "test").is_err());
+    }
+
+    #[test]
+    fn byte_reader_roundtrip_and_bounds() {
+        let mut out = Vec::new();
+        put_u16(&mut out, 0xBEEF);
+        put_u32(&mut out, 12345);
+        put_u64(&mut out, 1 << 40);
+        put_f64(&mut out, -2.5);
+        put_string(&mut out, "spike");
+
+        let mut r = ByteReader::new(&out);
+        assert_eq!(r.u16().unwrap(), 0xBEEF);
+        assert_eq!(r.u32().unwrap(), 12345);
+        assert_eq!(r.u64().unwrap(), 1 << 40);
+        assert_eq!(r.f64().unwrap(), -2.5);
+        assert_eq!(r.string().unwrap(), "spike");
+        assert_eq!(r.remaining(), 0);
+        let e = r.take(1).unwrap_err();
+        assert!(format!("{e}").contains("truncated"), "{e}");
+    }
+
+    #[test]
+    fn byte_reader_truncated_string() {
+        let mut out = Vec::new();
+        put_u32(&mut out, 100); // claims 100 bytes, provides 3
+        out.extend_from_slice(b"abc");
+        let mut r = ByteReader::new(&out);
+        assert!(r.string().is_err());
+    }
+}

@@ -58,6 +58,10 @@ impl Args {
         self.get(name).unwrap_or(default).to_string()
     }
 
+    pub fn get_path(&self, name: &str) -> Option<std::path::PathBuf> {
+        self.get(name).map(std::path::PathBuf::from)
+    }
+
     pub fn get_usize(&self, name: &str, default: usize) -> usize {
         self.get(name)
             .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'")))
@@ -114,6 +118,16 @@ mod tests {
         let a = parse(&["--fast", "--rank", "4"], &[]);
         assert!(a.flag("fast"));
         assert_eq!(a.get_usize("rank", 0), 4);
+    }
+
+    #[test]
+    fn get_path_optional() {
+        let a = parse(&["--from-store", "store/dir"], &[]);
+        assert_eq!(
+            a.get_path("from-store"),
+            Some(std::path::PathBuf::from("store/dir"))
+        );
+        assert_eq!(a.get_path("absent"), None);
     }
 
     #[test]

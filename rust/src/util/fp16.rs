@@ -160,4 +160,96 @@ mod tests {
         let dec = decode_f16_le(&enc);
         assert_eq!(dec, xs);
     }
+
+    #[test]
+    fn subnormal_boundary_values() {
+        // smallest f16 subnormal is 2^-24; it must round-trip exactly
+        let min_sub = 2.0f32.powi(-24);
+        assert_eq!(f32_to_f16(min_sub), 0x0001);
+        assert_eq!(f16_to_f32(0x0001), min_sub);
+        assert_eq!(f16_to_f32(f32_to_f16(-min_sub)), -min_sub);
+
+        // largest f16 subnormal (2^-14 - 2^-24 = 1023 * 2^-24)
+        let max_sub = 1023.0 * 2.0f32.powi(-24);
+        assert_eq!(f32_to_f16(max_sub), 0x03ff);
+        assert_eq!(f16_to_f32(0x03ff), max_sub);
+
+        // smallest f16 normal sits right above
+        let min_norm = 2.0f32.powi(-14);
+        assert_eq!(f32_to_f16(min_norm), 0x0400);
+        assert_eq!(f16_to_f32(0x0400), min_norm);
+
+        // every subnormal bit pattern round-trips through f32 exactly
+        for h in 1u16..0x0400 {
+            assert_eq!(f32_to_f16(f16_to_f32(h)), h, "pattern {h:#06x}");
+        }
+    }
+
+    #[test]
+    fn subnormal_underflow_ties_to_even() {
+        // 2^-25 is exactly halfway between 0 and the smallest subnormal
+        // 2^-24: round-to-nearest-even picks 0 (even)
+        assert_eq!(f32_to_f16(2.0f32.powi(-25)), 0);
+        assert_eq!(f32_to_f16(-2.0f32.powi(-25)), 0x8000);
+        // anything strictly above the midpoint rounds up to the subnormal
+        let above = f32::from_bits(2.0f32.powi(-25).to_bits() + 1);
+        assert_eq!(f32_to_f16(above), 0x0001);
+        // 3 * 2^-25 is halfway between subnormals 1 and 2: ties to 2 (even)
+        assert_eq!(f32_to_f16(3.0 * 2.0f32.powi(-25)), 0x0002);
+    }
+
+    #[test]
+    fn infinities_roundtrip_and_saturate() {
+        assert_eq!(f16_to_f32(0x7c00), f32::INFINITY);
+        assert_eq!(f16_to_f32(0xfc00), f32::NEG_INFINITY);
+        assert_eq!(f32_to_f16(f16_to_f32(0x7c00)), 0x7c00);
+        assert_eq!(f32_to_f16(f16_to_f32(0xfc00)), 0xfc00);
+        // overflow past the max finite f16 (65504) saturates to ±inf
+        assert_eq!(f32_to_f16(65520.0), 0x7c00);
+        assert_eq!(f32_to_f16(-65520.0), 0xfc00);
+        assert_eq!(f32_to_f16(f32::MAX), 0x7c00);
+        // max finite value itself survives
+        assert_eq!(f32_to_f16(65504.0), 0x7bff);
+        assert_eq!(f16_to_f32(0x7bff), 65504.0);
+    }
+
+    #[test]
+    fn nan_payloads_preserved() {
+        // a quiet NaN with payload bits survives the f16 -> f32 -> f16 trip
+        for h in [0x7e00u16, 0x7e55, 0x7fff, 0xfe00, 0xffab] {
+            let f = f16_to_f32(h);
+            assert!(f.is_nan(), "{h:#06x}");
+            assert_eq!(f32_to_f16(f), h, "payload lost for {h:#06x}");
+        }
+        // f32 NaNs map to f16 NaNs with the quiet bit forced on
+        let q = f32_to_f16(f32::NAN);
+        assert_eq!(q & 0x7c00, 0x7c00);
+        assert_ne!(q & 0x03ff, 0, "NaN must not collapse to infinity");
+        // a signalling-style payload that would truncate to zero mantissa
+        // still decodes as NaN thanks to the forced quiet bit
+        let snan = f32::from_bits(0x7f80_0001);
+        assert!(f16_to_f32(f32_to_f16(snan)).is_nan());
+    }
+
+    #[test]
+    fn round_to_nearest_even_ties() {
+        // 1 + 2^-11 is exactly halfway between f16(1.0) and the next
+        // representable value: RNE keeps the even mantissa (1.0)
+        let tie_down = 1.0 + 2.0f32.powi(-11);
+        assert_eq!(f32_to_f16(tie_down), 0x3c00);
+        // 1 + 3*2^-11 is halfway between mantissa 1 and 2: RNE picks 2
+        let tie_up = 1.0 + 3.0 * 2.0f32.powi(-11);
+        assert_eq!(f32_to_f16(tie_up), 0x3c02);
+        // just above/below the midpoint resolves by magnitude, not parity
+        let above = f32::from_bits(tie_down.to_bits() + 1);
+        assert_eq!(f32_to_f16(above), 0x3c01);
+        let below = f32::from_bits(tie_down.to_bits() - 1);
+        assert_eq!(f32_to_f16(below), 0x3c00);
+        // tie at an odd mantissa rounding up must carry into the exponent:
+        // 2047.5 is halfway between f16(2047) = 0x67ff and f16(2048) = 0x6800
+        assert_eq!(f32_to_f16(2047.0), 0x67ff);
+        assert_eq!(f32_to_f16(2047.5), 0x6800);
+        assert_eq!(f16_to_f32(f32_to_f16(2047.0)), 2047.0);
+        assert_eq!(f16_to_f32(f32_to_f16(2047.5)), 2048.0);
+    }
 }

@@ -5,6 +5,7 @@
 //! offline: the usual crates (rand, serde, clap, criterion, proptest) are not
 //! available, and each substrate here is exercised by the rest of the stack.
 
+pub mod binio;
 pub mod cli;
 pub mod fp16;
 pub mod json;

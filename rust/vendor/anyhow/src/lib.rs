@@ -1,0 +1,249 @@
+//! Minimal, offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this vendored shim
+//! implements exactly the API subset the workspace uses: [`Error`],
+//! [`Result`], the [`Context`] extension trait, and the `anyhow!` / `bail!` /
+//! `ensure!` macros. Semantics follow the real crate where it matters:
+//!
+//! - `{}` shows the outermost message only, `{:#}` joins the whole context
+//!   chain with `": "`, and `{:?}` renders a `Caused by:` listing;
+//! - any `std::error::Error + Send + Sync + 'static` converts via `?`;
+//! - `Error` itself is `Send + Sync` so it crosses worker-thread boundaries.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Result alias defaulting the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A dynamic error with a chain of human-readable context frames.
+pub struct Error {
+    /// innermost message (the original failure)
+    msg: String,
+    /// original typed error, if any (kept for completeness/debugging)
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+    /// context frames, innermost first (pushed in wrap order)
+    context: Vec<String>,
+}
+
+impl Error {
+    /// Create from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            msg: message.to_string(),
+            source: None,
+            context: Vec::new(),
+        }
+    }
+
+    /// Create from a typed error, preserving it as the source.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Error {
+        Error {
+            msg: error.to_string(),
+            source: Some(Box::new(error)),
+            context: Vec::new(),
+        }
+    }
+
+    /// Wrap with an additional layer of context (outermost-last push).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.context.push(context.to_string());
+        self
+    }
+
+    /// The original typed error, if this `Error` was built from one.
+    pub fn source_ref(&self) -> Option<&(dyn StdError + 'static)> {
+        self.source.as_deref().map(|e| e as &(dyn StdError + 'static))
+    }
+
+    /// Messages outermost-first (most recent context down to the root cause).
+    fn frames(&self) -> impl Iterator<Item = &str> {
+        self.context
+            .iter()
+            .rev()
+            .map(String::as_str)
+            .chain(std::iter::once(self.msg.as_str()))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the full chain, anyhow-style
+            let mut first = true;
+            for frame in self.frames() {
+                if !first {
+                    f.write_str(": ")?;
+                }
+                f.write_str(frame)?;
+                first = false;
+            }
+            Ok(())
+        } else {
+            f.write_str(self.frames().next().unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut frames = self.frames();
+        if let Some(top) = frames.next() {
+            f.write_str(top)?;
+        }
+        let rest: Vec<&str> = frames.collect();
+        if !rest.is_empty() {
+            f.write_str("\n\nCaused by:")?;
+            for (i, frame) in rest.iter().enumerate() {
+                write!(f, "\n    {i}: {frame}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to results
+/// and options, mirroring `anyhow::Context`.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable expression.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`] when the condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_outermost_only() {
+        let e = Error::new(io_err()).context("loading weights");
+        assert_eq!(format!("{e}"), "loading weights");
+    }
+
+    #[test]
+    fn alternate_display_full_chain() {
+        let e = Error::new(io_err())
+            .context("loading weights")
+            .context("starting worker");
+        assert_eq!(
+            format!("{e:#}"),
+            "starting worker: loading weights: missing file"
+        );
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("ctx").unwrap_err();
+        assert_eq!(format!("{e:#}"), "ctx: missing file");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "thing")).unwrap_err();
+        assert_eq!(format!("{e}"), "missing thing");
+        assert_eq!(Some(5).context("x").unwrap(), 5);
+    }
+
+    #[test]
+    fn macros() {
+        fn f(fail: bool) -> Result<u32> {
+            ensure!(!fail, "failed with {}", 42);
+            Ok(1)
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        assert_eq!(format!("{}", f(true).unwrap_err()), "failed with 42");
+
+        fn g() -> Result<()> {
+            bail!("nope: {}", "reason");
+        }
+        assert_eq!(format!("{}", g().unwrap_err()), "nope: reason");
+
+        let e = anyhow!("literal {}", 7);
+        assert_eq!(format!("{e}"), "literal 7");
+        let e2 = Error::msg(String::from("owned"));
+        assert_eq!(format!("{e2}"), "owned");
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Error>();
+    }
+}

@@ -1,0 +1,283 @@
+//! End-to-end `store/` coverage: HSB1 round-trip equivalence for every
+//! `CompressedMatrix` variant, corruption rejection, and the coordinator
+//! serving correct responses before, during, and after a live hot-swap
+//! whose replacement model is cold-loaded from the store.
+
+use hisolo::compress::{CompressedMatrix, Compressor, CompressorConfig, Method};
+use hisolo::coordinator::worker::NativeCompressedScorer;
+use hisolo::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, Variant};
+use hisolo::data::dataset::windows;
+use hisolo::model::{CompressedModel, ModelConfig, Transformer};
+use hisolo::store::{ModelStore, StoreFile, StoreWriter};
+use hisolo::util::rng::Rng;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("hisolo_store_integration_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn spiky(n: usize, seed: u64) -> hisolo::linalg::Matrix {
+    let mut rng = Rng::new(seed);
+    let mut a = hisolo::linalg::Matrix::randn(n, n, seed).scale(0.05);
+    for _ in 0..3 * n {
+        let i = rng.below(n);
+        let j = rng.below(n);
+        a.data[i * n + j] += rng.gaussian_f32();
+    }
+    a
+}
+
+/// Acceptance invariant: for each of Dense / LowRank / Hss,
+/// `save(m); let m2 = load();` gives identical `storage_ratio()` and
+/// matvec outputs within fp16 tolerance.
+#[test]
+fn save_load_matvec_equivalence_all_variants() {
+    let n = 64;
+    let w = spiky(n, 42);
+    let comp = Compressor::new(CompressorConfig {
+        rank: 8,
+        sparsity: 0.15,
+        depth: 2,
+        min_leaf: 8,
+        ..Default::default()
+    });
+    let dir = temp_dir("equivalence");
+    for (method, kind) in [
+        (Method::Dense, "dense"),
+        (Method::SSvd, "lowrank"),
+        (Method::SHssRcm, "hss"),
+    ] {
+        let m = comp.compress(&w, method);
+        let path = dir.join(format!("{kind}.hsb1"));
+        let mut sw = StoreWriter::new();
+        sw.push_with_meta("w", &m, Some(method), m.rel_error(&w));
+        sw.finish(&path).unwrap();
+
+        let file = StoreFile::open(&path).unwrap();
+        let (m2, mut ws) = file.load_with_workspace("w").unwrap();
+
+        // storage accounting identical (shapes and nnz survive exactly)
+        assert_eq!(m2.storage_ratio(), m.storage_ratio(), "{kind}");
+        assert_eq!(m2.params(), m.params(), "{kind}");
+        assert_eq!(m2.bytes(), m.bytes(), "{kind}");
+        matches_kind(&m2, kind);
+
+        // matvec within fp16 tolerance of the pre-save matrix
+        let mut rng = Rng::new(7);
+        let x: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+        let expect = m.matvec(&x);
+        let mut got = vec![0.0f32; n];
+        m2.matvec_with(&x, &mut got, &mut ws);
+        let scale: f32 = expect.iter().map(|v| v.abs()).fold(0.0, f32::max).max(1.0);
+        for (i, (a, b)) in got.iter().zip(&expect).enumerate() {
+            assert!(
+                (a - b).abs() <= 2e-2 * scale,
+                "{kind}[{i}]: {a} vs {b} (scale {scale})"
+            );
+        }
+    }
+}
+
+fn matches_kind(m: &CompressedMatrix, kind: &str) {
+    let got = match m {
+        CompressedMatrix::Dense { .. } => "dense",
+        CompressedMatrix::LowRank { .. } => "lowrank",
+        CompressedMatrix::Hss { .. } => "hss",
+    };
+    assert_eq!(got, kind);
+}
+
+#[test]
+fn truncated_and_corrupted_stores_rejected() {
+    let dir = temp_dir("corruption");
+    let m = Compressor::new(CompressorConfig {
+        rank: 4,
+        sparsity: 0.1,
+        depth: 1,
+        min_leaf: 8,
+        ..Default::default()
+    })
+    .compress(&spiky(32, 1), Method::SHssRcm);
+    let mut sw = StoreWriter::new();
+    sw.push("w", &m);
+    let path = dir.join("good.hsb1");
+    sw.finish(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+
+    // truncations at every stride fail closed
+    for cut in (0..bytes.len()).step_by(bytes.len() / 17 + 1) {
+        let p = dir.join("truncated.hsb1");
+        std::fs::write(&p, &bytes[..cut]).unwrap();
+        assert!(StoreFile::open(&p).is_err(), "cut={cut}");
+    }
+    // single-byte corruption anywhere is caught by the crc footer
+    for pos in (0..bytes.len()).step_by(bytes.len() / 13 + 1) {
+        let mut bad = bytes.clone();
+        bad[pos] ^= 0x80;
+        let p = dir.join("corrupt.hsb1");
+        std::fs::write(&p, &bad).unwrap();
+        assert!(StoreFile::open(&p).is_err(), "pos={pos}");
+    }
+    // the pristine file still loads
+    assert!(StoreFile::open(&path).is_ok());
+}
+
+fn tiny_base() -> Arc<Transformer> {
+    Arc::new(Transformer::random(
+        ModelConfig {
+            vocab: 64,
+            d_model: 32,
+            n_heads: 4,
+            n_layers: 2,
+            d_ff: 64,
+            seq_len: 16,
+        },
+        9,
+    ))
+}
+
+/// Near-lossless config so dense and both stored variants agree on NLL:
+/// rank 32 is full rank for the d=32 sSVD factors and caps to the full
+/// off-diagonal rank (16) inside the depth-1 HSS tree.
+fn lossless_cfg() -> CompressorConfig {
+    CompressorConfig {
+        rank: 32,
+        sparsity: 0.2,
+        depth: 1,
+        hss_rsvd: false,
+        min_leaf: 4,
+        ..Default::default()
+    }
+}
+
+/// Acceptance invariant: `Coordinator::swap_variant` serves correct
+/// responses before, during, and after a hot-swap from the store.
+#[test]
+fn coordinator_serves_correctly_across_store_hot_swap() {
+    let base = tiny_base();
+    let store = ModelStore::open(temp_dir("hotswap"));
+
+    // persist two near-lossless variants, then drop the in-RAM models:
+    // everything the coordinator serves after this line comes from disk
+    for (name, method) in [("ssvd", Method::SSvd), ("shss-rcm", Method::SHssRcm)] {
+        let cm = CompressedModel::compress(base.clone(), method, lossless_cfg());
+        store.save_model(name, &cm).unwrap();
+    }
+
+    let toks: Vec<u32> = (0..4000u32).map(|i| (i * 31 + i / 5) % 64).collect();
+    let ws = windows(&toks, base.cfg.seq_len, 30);
+    let dense_nll: Vec<f64> = ws
+        .iter()
+        .map(|w| hisolo::eval::perplexity::window_nll(&base.forward(&w[..16]), w).0)
+        .collect();
+
+    let mut coord = Coordinator::new(CoordinatorConfig {
+        batcher: BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+            capacity: 256,
+        },
+    });
+    // cold start the lane from the store
+    let first = Arc::new(store.load_model("ssvd", base.clone()).unwrap());
+    assert_eq!(first.method, Method::SSvd);
+    coord.add_worker(
+        Variant::Hss,
+        NativeCompressedScorer {
+            model: first,
+            max_batch: 4,
+        },
+    );
+
+    let check = |resps: &[hisolo::coordinator::ScoreResponse], phase: &str| {
+        for (r, want) in resps.iter().zip(&dense_nll) {
+            assert!(r.error.is_none(), "{phase}: {:?}", r.error);
+            let rel = (r.nll - want).abs() / want.abs().max(1e-9);
+            assert!(rel < 0.05, "{phase}: nll {} vs dense {want} (rel {rel})", r.nll);
+        }
+    };
+
+    // BEFORE the swap
+    let before = coord.submit_all(Variant::Hss, &ws).unwrap();
+    check(&before, "before");
+
+    // DURING: fire the swap while a wave of requests is in flight; every
+    // response must be correct no matter which scorer answered it
+    let rxs: Vec<_> = ws
+        .iter()
+        .map(|w| coord.submit(Variant::Hss, w.clone()).unwrap())
+        .collect();
+    let swap_base = base.clone();
+    let swap_store = ModelStore::open(store.dir().to_path_buf());
+    let ticket = coord
+        .swap_variant(Variant::Hss, move || {
+            let model = Arc::new(swap_store.load_model("shss-rcm", swap_base.clone())?);
+            Ok(NativeCompressedScorer {
+                model,
+                max_batch: 4,
+            })
+        })
+        .unwrap();
+    let during: Vec<_> = rxs
+        .into_iter()
+        .map(|rx| rx.recv_timeout(Duration::from_secs(30)).unwrap())
+        .collect();
+    check(&during, "during");
+    ticket.wait(Duration::from_secs(10)).unwrap();
+    assert_eq!(
+        coord
+            .metrics
+            .swaps
+            .load(std::sync::atomic::Ordering::Relaxed),
+        1
+    );
+
+    // AFTER: the sHSS-RCM variant now serves, still correct
+    let after = coord.submit_all(Variant::Hss, &ws).unwrap();
+    check(&after, "after");
+    coord.shutdown();
+}
+
+/// A swap whose factory fails (missing variant) must leave the old model
+/// serving — a bad rollout can't take the lane down.
+#[test]
+fn failed_store_swap_keeps_lane_healthy() {
+    let base = tiny_base();
+    let store = ModelStore::open(temp_dir("badswap"));
+    let cm = CompressedModel::compress(base.clone(), Method::SHssRcm, lossless_cfg());
+    store.save_model("good", &cm).unwrap();
+
+    let mut coord = Coordinator::new(CoordinatorConfig::default());
+    let model = Arc::new(store.load_model("good", base.clone()).unwrap());
+    coord.add_worker(
+        Variant::Hss,
+        NativeCompressedScorer {
+            model,
+            max_batch: 4,
+        },
+    );
+
+    let swap_store = ModelStore::open(store.dir().to_path_buf());
+    let swap_base = base.clone();
+    let ticket = coord
+        .swap_variant(Variant::Hss, move || {
+            let model = Arc::new(swap_store.load_model("absent", swap_base.clone())?);
+            Ok(NativeCompressedScorer {
+                model,
+                max_batch: 4,
+            })
+        })
+        .unwrap();
+    assert!(ticket.wait(Duration::from_secs(10)).is_err());
+
+    let toks: Vec<u32> = (0..500u32).map(|i| i % 64).collect();
+    let ws = windows(&toks, base.cfg.seq_len, 4);
+    let resps = coord.submit_all(Variant::Hss, &ws).unwrap();
+    assert!(resps.iter().all(|r| r.error.is_none()));
+    coord.shutdown();
+}
