@@ -1,0 +1,82 @@
+//! One calibration step per `CompressedMatrix` variant at n=512 —
+//! forward + backward over a mini-batch plus the Adam update, reported as
+//! steps/sec so the training hot loop enters the perf trajectory next to
+//! the matvec/compress benches.
+//!
+//! Run: `cargo bench --bench train_step [-- --n 512 --batch 16]`
+
+use hisolo::compress::{Compressor, CompressorConfig, Method};
+use hisolo::data::synthetic;
+use hisolo::train::{accumulate_grad, num_params, GradWorkspace, Optimizer, OptimizerKind};
+use hisolo::util::cli::Args;
+use hisolo::util::rng::Rng;
+use hisolo::util::timer::{bench, fmt_ns, Table};
+use std::time::Duration;
+
+fn main() {
+    let args = Args::parse(&[]);
+    let n = args.get_usize("n", 512);
+    let batch = args.get_usize("batch", 16);
+    let rank = args.get_usize("rank", n / 16);
+    let teacher = synthetic::trained_like(n, 42);
+
+    let mut rng = Rng::new(7);
+    let xs: Vec<Vec<f32>> = (0..batch)
+        .map(|_| (0..n).map(|_| rng.gaussian_f32()).collect())
+        .collect();
+    let targets: Vec<Vec<f32>> = xs.iter().map(|x| teacher.matvec(x)).collect();
+
+    println!("train_step: n={n} batch={batch} rank={rank} (adam, one optimizer step)");
+    let mut table = Table::new(&["variant", "params", "step time", "steps/s", "samples/s"]);
+
+    let cases: [(&str, Method); 3] = [
+        ("lowrank (svd)", Method::Svd),
+        ("lowrank+csr (ssvd)", Method::SSvd),
+        ("hss (shss-rcm)", Method::SHssRcm),
+    ];
+    for (label, method) in cases {
+        let cfg = CompressorConfig {
+            rank,
+            sparsity: 0.1,
+            depth: 3,
+            ..Default::default()
+        };
+        let mut student = Compressor::new(cfg).compress(&teacher, method);
+        let np = num_params(&student);
+        let mut grad = vec![0.0f32; np];
+        let mut gws = GradWorkspace::for_matrix(&student);
+        let mut ws = student.workspace();
+        let mut y = vec![0.0f32; n];
+        let mut opt = OptimizerKind::Adam.build();
+
+        let stats = bench(
+            || {
+                grad.fill(0.0);
+                for (x, t) in xs.iter().zip(&targets) {
+                    student.matvec_with(x, &mut y, &mut ws);
+                    for (yy, &tt) in y.iter_mut().zip(t) {
+                        *yy -= tt;
+                    }
+                    accumulate_grad(&student, x, &y, &mut grad, &mut gws);
+                }
+                let inv = 1.0 / batch as f32;
+                for g in grad.iter_mut() {
+                    *g *= inv;
+                }
+                opt.step(&mut student, &grad, 1e-3);
+            },
+            2,
+            Duration::from_secs(2),
+            500,
+        );
+        let steps_per_s = 1e9 / stats.mean_ns;
+        table.row(&[
+            label.to_string(),
+            np.to_string(),
+            fmt_ns(stats.mean_ns),
+            format!("{steps_per_s:.1}"),
+            format!("{:.0}", steps_per_s * batch as f64),
+        ]);
+    }
+    table.print();
+}

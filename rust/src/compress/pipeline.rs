@@ -48,6 +48,48 @@ pub fn compress_model_qkv(
         .collect()
 }
 
+/// Refine stage: fine-tune every report's factors against its dense
+/// teacher on per-layer calibration activations (layer index =
+/// report position / 3, since reports run layer-major in q/k/v order and
+/// all three projections of a layer consume the same post-ln1 input).
+/// Reports are updated in place — `compressed` holds the refined factors
+/// and `rel_error` the post-refinement reconstruction error — so the
+/// result can flow straight into [`save_reports`]. Returns one
+/// calibration report per projection.
+pub fn refine_reports(
+    reports: &mut [LayerReport],
+    projections: &[(String, Matrix)],
+    activations: &[Vec<Vec<f32>>],
+    cfg: &crate::train::TrainConfig,
+) -> Vec<crate::train::CalibrationReport> {
+    assert_eq!(
+        reports.len(),
+        projections.len(),
+        "one projection per report"
+    );
+    assert!(
+        activations.len() * 3 >= reports.len(),
+        "activations cover {} layers but reports span {}",
+        activations.len(),
+        reports.len().div_ceil(3)
+    );
+    let mut out = Vec::with_capacity(reports.len());
+    for (i, rep) in reports.iter_mut().enumerate() {
+        // index pairing alone would silently calibrate against the wrong
+        // teacher if a caller reorders either list — fail loudly instead
+        assert_eq!(
+            rep.name, projections[i].0,
+            "report/projection order mismatch at {i}"
+        );
+        let teacher = projections[i].1.transpose();
+        let xs: &[Vec<f32>] = &activations[i / 3];
+        let cal = crate::train::calibrate_matrix(&rep.name, &teacher, &mut rep.compressed, xs, cfg);
+        rep.rel_error = cal.rel_err_after;
+        out.push(cal);
+    }
+    out
+}
+
 /// Persist a pipeline result as one `HSB1` store file (method and
 /// compression-time error recorded per entry, so a later
 /// `CompressedModel::from_store` needs no dense weights). Returns the byte
@@ -163,6 +205,44 @@ mod tests {
             let m = file.load(&r.name).unwrap();
             assert_eq!(m.params(), r.params, "{}", r.name);
             assert_eq!(file.meta(&r.name).unwrap().method, Some(Method::SHssRcm));
+        }
+    }
+
+    #[test]
+    fn refine_stage_updates_reports_in_place() {
+        let projs = fake_projections(32, 1);
+        let mut reports = compress_model_qkv(
+            &projs,
+            Method::SSvd,
+            CompressorConfig {
+                rank: 4,
+                sparsity: 0.05,
+                ..Default::default()
+            },
+        );
+        let before: Vec<f64> = reports.iter().map(|r| r.rel_error).collect();
+        let mut rng = crate::util::rng::Rng::new(11);
+        let xs: Vec<Vec<f32>> = (0..64)
+            .map(|_| (0..32).map(|_| rng.gaussian_f32()).collect())
+            .collect();
+        let activations = vec![xs];
+        let cfg = crate::train::TrainConfig {
+            steps: 100,
+            ..Default::default()
+        };
+        let cals = refine_reports(&mut reports, &projs, &activations, &cfg);
+        assert_eq!(cals.len(), 3);
+        for ((rep, cal), b) in reports.iter().zip(&cals).zip(&before) {
+            assert!(cal.steps_run > 0, "{}", rep.name);
+            assert!(rep.rel_error < *b, "{}: {} !< {b}", rep.name, rep.rel_error);
+            // the report's matrix really is the refined one
+            let a = projs
+                .iter()
+                .find(|(n, _)| *n == rep.name)
+                .unwrap()
+                .1
+                .transpose();
+            assert!((rep.compressed.rel_error(&a) - rep.rel_error).abs() < 1e-12);
         }
     }
 

@@ -39,6 +39,17 @@ pub fn shuffled_banded(n: usize, half_band: usize, seed: u64) -> Matrix {
     band.permute_sym(&p)
 }
 
+/// Deterministic synthetic token stream — stands in for a corpus split
+/// when artifacts are absent, so calibration/finetune paths run
+/// end-to-end in any environment. Uses the crate PRNG rather than a bare
+/// linear map of the index, which degenerates to a constant stream
+/// whenever the vocab shares a factor with the multiplier.
+pub fn token_stream(len: usize, vocab: usize) -> Vec<u32> {
+    assert!(vocab > 0);
+    let mut rng = Rng::new(0xC0FFEE);
+    (0..len).map(|_| rng.below(vocab) as u32).collect()
+}
+
 /// Exactly low-rank matrix plus Gaussian noise (rsvd stress case).
 pub fn low_rank_noise(n: usize, rank: usize, noise: f32, seed: u64) -> Matrix {
     let u = Matrix::randn(n, rank, seed.wrapping_add(10));
@@ -70,6 +81,24 @@ mod tests {
         let a = low_rank_noise(32, 4, 0.01, 2);
         let f = svd(&a);
         assert!(f.s[3] > 10.0 * f.s[4], "σ4 {} σ5 {}", f.s[3], f.s[4]);
+    }
+
+    #[test]
+    fn token_stream_in_vocab_and_deterministic() {
+        // vocabs sharing a factor with common LCG constants included —
+        // the stream must never degenerate to a constant
+        for vocab in [64usize, 15, 3, 5, 256] {
+            let a = token_stream(1000, vocab);
+            assert_eq!(a.len(), 1000);
+            assert!(a.iter().all(|&t| (t as usize) < vocab));
+            assert_eq!(a, token_stream(1000, vocab));
+            if vocab > 1 {
+                assert!(
+                    a.windows(2).any(|w| w[0] != w[1]),
+                    "constant stream at vocab {vocab}"
+                );
+            }
+        }
     }
 
     #[test]

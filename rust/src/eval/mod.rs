@@ -5,4 +5,4 @@ pub mod perplexity;
 pub mod sweep;
 
 pub use perplexity::{perplexity, perplexity_parallel, PplResult};
-pub use sweep::{sweep, SweepPoint};
+pub use sweep::{sweep, sweep_refined, SweepPoint};

@@ -3,7 +3,9 @@
 
 use crate::compress::{CompressorConfig, Method};
 use crate::eval::perplexity::{perplexity_parallel, PplResult};
+use crate::linalg::Matrix;
 use crate::model::{CompressedModel, Transformer};
+use crate::train::TrainConfig;
 use std::sync::Arc;
 
 /// One point of the storage-PPL plane (a marker in the paper's Fig 3).
@@ -20,8 +22,19 @@ pub struct SweepPoint {
     pub qkv_dense_bytes: usize,
     /// whole-model storage ratio (non-qkv stays dense)
     pub model_ratio: f64,
+    /// mean reconstruction error of the *one-shot* compression — stable
+    /// across refined and unrefined runs so rows stay comparable
     pub mean_rel_error: f64,
     pub compress_secs: f64,
+    /// perplexity after `train::calibrate` refinement (== `ppl` when no
+    /// refinement ran — the refined-vs-oneshot delta is then 0)
+    pub ppl_refined: f64,
+    /// mean calibration steps actually run per projection (0 = one-shot)
+    pub refine_steps: usize,
+    /// wall time of the refine stage (0 when no refinement ran) — the
+    /// cost side of the refined-vs-oneshot comparison, separate from
+    /// `compress_secs` which stays one-shot-only
+    pub refine_secs: f64,
 }
 
 impl SweepPoint {
@@ -38,49 +51,118 @@ pub fn eval_point(
     windows: &[Vec<u32>],
     threads: usize,
 ) -> SweepPoint {
-    let t0 = std::time::Instant::now();
-    let result: (PplResult, usize, usize, f64, f64);
+    eval_cell(base, method, cfg, None, windows, threads)
+}
+
+/// Precomputed refine-stage inputs, shared across grid cells: dense
+/// teachers and per-layer calibration activations.
+struct RefineData {
+    projections: Vec<(String, Matrix)>,
+    activations: Vec<Vec<Vec<f32>>>,
+}
+
+/// Calibration activations come from every *other* eval window, so half
+/// the windows both perplexities run over never feed the optimizer and
+/// the refined-vs-oneshot delta reflects more than overfitting to the
+/// eval set.
+fn refine_data(base: &Arc<Transformer>, windows: &[Vec<u32>]) -> RefineData {
+    let calib: Vec<Vec<u32>> = windows.iter().step_by(2).cloned().collect();
+    RefineData {
+        projections: base.qkv_projections(),
+        activations: crate::train::collect_activations(base, &calib),
+    }
+}
+
+/// Evaluate one cell twice — one-shot, then after `train::calibrate`
+/// refinement of the same compressed model — filling the
+/// `ppl_refined` / `refine_steps` comparison columns (see [`refine_data`]
+/// for the calibration/eval window split).
+pub fn eval_point_refined(
+    base: &Arc<Transformer>,
+    method: Method,
+    cfg: CompressorConfig,
+    train_cfg: &TrainConfig,
+    windows: &[Vec<u32>],
+    threads: usize,
+) -> SweepPoint {
+    if method == Method::Dense {
+        return eval_cell(base, method, cfg, None, windows, threads);
+    }
+    let data = refine_data(base, windows);
+    eval_cell(base, method, cfg, Some((train_cfg, &data)), windows, threads)
+}
+
+fn eval_cell(
+    base: &Arc<Transformer>,
+    method: Method,
+    cfg: CompressorConfig,
+    refine: Option<(&TrainConfig, &RefineData)>,
+    windows: &[Vec<u32>],
+    threads: usize,
+) -> SweepPoint {
     if method == Method::Dense {
         let ppl = perplexity_parallel(windows, |toks| base.forward(toks), threads);
         let qkv_dense = base.cfg.qkv_params() * crate::hss::storage::VALUE_BYTES;
-        result = (ppl, qkv_dense, qkv_dense, 1.0, 0.0);
-    } else {
-        let cm = CompressedModel::compress(base.clone(), method, cfg);
-        let compress_secs = t0.elapsed().as_secs_f64();
-        let ppl = perplexity_parallel(windows, |toks| cm.forward(toks), threads);
-        result = (
-            ppl,
-            cm.qkv_bytes(),
-            cm.qkv_dense_bytes(),
-            cm.model_storage_ratio(),
-            cm.mean_rel_error(),
-        );
         return SweepPoint {
             method,
-            rank: cfg.rank,
-            sparsity: cfg.sparsity,
-            depth: cfg.depth,
-            ppl: result.0.ppl,
-            mean_nll: result.0.mean_nll,
-            qkv_bytes: result.1,
-            qkv_dense_bytes: result.2,
-            model_ratio: result.3,
-            mean_rel_error: result.4,
-            compress_secs,
+            rank: 0,
+            sparsity: 0.0,
+            depth: 0,
+            ppl: ppl.ppl,
+            mean_nll: ppl.mean_nll,
+            qkv_bytes: qkv_dense,
+            qkv_dense_bytes: qkv_dense,
+            model_ratio: 1.0,
+            mean_rel_error: 0.0,
+            compress_secs: 0.0,
+            ppl_refined: ppl.ppl,
+            refine_steps: 0,
+            refine_secs: 0.0,
         };
     }
+    let t0 = std::time::Instant::now();
+    let mut cm = CompressedModel::compress(base.clone(), method, cfg);
+    let compress_secs = t0.elapsed().as_secs_f64();
+    let oneshot: PplResult = perplexity_parallel(windows, |toks| cm.forward(toks), threads);
+    // capture one-shot accounting before calibration touches the reports
+    let mean_rel_error = cm.mean_rel_error();
+    let (qkv_bytes, qkv_dense_bytes) = (cm.qkv_bytes(), cm.qkv_dense_bytes());
+    let model_ratio = cm.model_storage_ratio();
+    let (ppl_refined, refine_steps, refine_secs) = match refine {
+        Some((tc, data)) => {
+            let t1 = std::time::Instant::now();
+            let cals = crate::train::calibrate_model_with(
+                &mut cm,
+                &data.projections,
+                &data.activations,
+                tc,
+            );
+            let refine_secs = t1.elapsed().as_secs_f64();
+            let refined = perplexity_parallel(windows, |toks| cm.forward(toks), threads);
+            let steps = if cals.is_empty() {
+                0
+            } else {
+                cals.iter().map(|c| c.steps_run).sum::<usize>() / cals.len()
+            };
+            (refined.ppl, steps, refine_secs)
+        }
+        None => (oneshot.ppl, 0, 0.0),
+    };
     SweepPoint {
         method,
-        rank: 0,
-        sparsity: 0.0,
-        depth: 0,
-        ppl: result.0.ppl,
-        mean_nll: result.0.mean_nll,
-        qkv_bytes: result.1,
-        qkv_dense_bytes: result.2,
-        model_ratio: result.3,
-        mean_rel_error: result.4,
-        compress_secs: 0.0,
+        rank: cfg.rank,
+        sparsity: cfg.sparsity,
+        depth: cfg.depth,
+        ppl: oneshot.ppl,
+        mean_nll: oneshot.mean_nll,
+        qkv_bytes,
+        qkv_dense_bytes,
+        model_ratio,
+        mean_rel_error,
+        compress_secs,
+        ppl_refined,
+        refine_steps,
+        refine_secs,
     }
 }
 
@@ -92,6 +174,23 @@ pub fn sweep(
     windows: &[Vec<u32>],
     threads: usize,
 ) -> Vec<SweepPoint> {
+    sweep_refined(base, methods, configs, windows, threads, None)
+}
+
+/// Grid sweep with an optional refine stage: when `train_cfg` is given,
+/// every compressed cell is evaluated one-shot *and* after calibration,
+/// filling the refined-vs-oneshot comparison columns.
+pub fn sweep_refined(
+    base: &Arc<Transformer>,
+    methods: &[Method],
+    configs: &[CompressorConfig],
+    windows: &[Vec<u32>],
+    threads: usize,
+    train_cfg: Option<&TrainConfig>,
+) -> Vec<SweepPoint> {
+    // teachers + calibration activations depend only on (base, windows):
+    // capture them once for the whole grid, not once per cell
+    let data = train_cfg.map(|_| refine_data(base, windows));
     let mut out = Vec::new();
     for &m in methods {
         if m == Method::Dense {
@@ -99,20 +198,25 @@ pub fn sweep(
             continue;
         }
         for &cfg in configs {
-            out.push(eval_point(base, m, cfg, windows, threads));
+            let refine = match (train_cfg, &data) {
+                (Some(tc), Some(d)) => Some((tc, d)),
+                _ => None,
+            };
+            out.push(eval_cell(base, m, cfg, refine, windows, threads));
         }
     }
     out
 }
 
+const CSV_HEADER: &str = "method,rank,sparsity,depth,ppl,mean_nll,qkv_bytes,qkv_dense_bytes,qkv_ratio,model_ratio,rel_error,compress_secs,ppl_refined,refine_steps,refine_secs";
+
 /// CSV emitter (plot-ready, one row per point).
 pub fn to_csv(points: &[SweepPoint]) -> String {
-    let mut s = String::from(
-        "method,rank,sparsity,depth,ppl,mean_nll,qkv_bytes,qkv_dense_bytes,qkv_ratio,model_ratio,rel_error,compress_secs\n",
-    );
+    let mut s = String::from(CSV_HEADER);
+    s.push('\n');
     for p in points {
         s.push_str(&format!(
-            "{},{},{},{},{:.6},{:.6},{},{},{:.4},{:.4},{:.6},{:.3}\n",
+            "{},{},{},{},{:.6},{:.6},{},{},{:.4},{:.4},{:.6},{:.3},{:.6},{},{:.3}\n",
             p.method,
             p.rank,
             p.sparsity,
@@ -124,10 +228,60 @@ pub fn to_csv(points: &[SweepPoint]) -> String {
             p.qkv_ratio(),
             p.model_ratio,
             p.mean_rel_error,
-            p.compress_secs
+            p.compress_secs,
+            p.ppl_refined,
+            p.refine_steps,
+            p.refine_secs
         ));
     }
     s
+}
+
+fn parse_num<T: std::str::FromStr>(s: &str, lineno: usize) -> Result<T, String>
+where
+    T::Err: std::fmt::Display,
+{
+    s.parse::<T>()
+        .map_err(|e| format!("row {lineno}: bad value '{s}': {e}"))
+}
+
+/// Parse a CSV produced by [`to_csv`] back into sweep points (the
+/// derived `qkv_ratio` column is recomputed, not stored).
+pub fn from_csv(s: &str) -> Result<Vec<SweepPoint>, String> {
+    let mut lines = s.lines();
+    let header = lines.next().ok_or("empty csv")?;
+    if header != CSV_HEADER {
+        return Err(format!("unexpected csv header '{header}'"));
+    }
+    let mut out = Vec::new();
+    for (i, line) in lines.enumerate() {
+        if line.is_empty() {
+            continue;
+        }
+        let lineno = i + 2;
+        let cols: Vec<&str> = line.split(',').collect();
+        if cols.len() != 15 {
+            return Err(format!("row {lineno}: {} columns (want 15)", cols.len()));
+        }
+        out.push(SweepPoint {
+            method: cols[0].parse::<Method>()?,
+            rank: parse_num(cols[1], lineno)?,
+            sparsity: parse_num(cols[2], lineno)?,
+            depth: parse_num(cols[3], lineno)?,
+            ppl: parse_num(cols[4], lineno)?,
+            mean_nll: parse_num(cols[5], lineno)?,
+            qkv_bytes: parse_num(cols[6], lineno)?,
+            qkv_dense_bytes: parse_num(cols[7], lineno)?,
+            // cols[8] = qkv_ratio, derived
+            model_ratio: parse_num(cols[9], lineno)?,
+            mean_rel_error: parse_num(cols[10], lineno)?,
+            compress_secs: parse_num(cols[11], lineno)?,
+            ppl_refined: parse_num(cols[12], lineno)?,
+            refine_steps: parse_num(cols[13], lineno)?,
+            refine_secs: parse_num(cols[14], lineno)?,
+        });
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -207,6 +361,72 @@ mod tests {
         let pts = sweep(&base, &[Method::Dense], &[], &w, 1);
         let csv = to_csv(&pts);
         assert!(csv.starts_with("method,"));
+        assert!(csv
+            .lines()
+            .next()
+            .unwrap()
+            .ends_with("ppl_refined,refine_steps,refine_secs"));
         assert_eq!(csv.lines().count(), 2);
+    }
+
+    #[test]
+    fn csv_roundtrips_through_from_csv() {
+        let (base, w) = tiny();
+        let cfgs = [CompressorConfig {
+            rank: 4,
+            sparsity: 0.1,
+            depth: 1,
+            min_leaf: 4,
+            ..Default::default()
+        }];
+        let mut pts = sweep(&base, &[Method::Dense, Method::SSvd], &cfgs, &w, 1);
+        // exercise non-default refined columns too
+        pts[1].ppl_refined = pts[1].ppl * 0.9;
+        pts[1].refine_steps = 150;
+        pts[1].refine_secs = 4.2;
+        let csv = to_csv(&pts);
+        let parsed = from_csv(&csv).unwrap();
+        assert_eq!(parsed.len(), pts.len());
+        assert_eq!(to_csv(&parsed), csv, "reserialization must be lossless");
+        assert_eq!(parsed[1].refine_steps, 150);
+        assert_eq!(parsed[1].method, Method::SSvd);
+    }
+
+    #[test]
+    fn from_csv_rejects_garbage() {
+        assert!(from_csv("").is_err());
+        assert!(from_csv("wrong,header\n").is_err());
+        let bad_row = format!("{}\ndense,0,0,0,oops\n", to_csv(&[]).trim_end());
+        assert!(from_csv(&bad_row).is_err());
+    }
+
+    #[test]
+    fn refined_point_keeps_oneshot_columns_and_fills_refined() {
+        let (base, w) = tiny();
+        let cfg = CompressorConfig {
+            rank: 4,
+            sparsity: 0.05,
+            depth: 1,
+            min_leaf: 4,
+            ..Default::default()
+        };
+        let oneshot = eval_point(&base, Method::SSvd, cfg, &w, 1);
+        let tc = crate::train::TrainConfig {
+            steps: 60,
+            ..Default::default()
+        };
+        let refined = eval_point_refined(&base, Method::SSvd, cfg, &tc, &w, 1);
+        // the one-shot columns are identical between the two runs, so
+        // refined and unrefined sweep rows stay directly comparable
+        assert!((refined.ppl - oneshot.ppl).abs() < 1e-9);
+        assert!((refined.mean_rel_error - oneshot.mean_rel_error).abs() < 1e-12);
+        assert_eq!(refined.qkv_bytes, oneshot.qkv_bytes);
+        // ... and the refined columns are populated
+        assert!(refined.refine_steps > 0);
+        assert!(refined.refine_secs > 0.0);
+        assert!(refined.ppl_refined.is_finite() && refined.ppl_refined > 0.0);
+        assert_eq!(oneshot.refine_steps, 0);
+        assert_eq!(oneshot.refine_secs, 0.0);
+        assert!((oneshot.ppl_refined - oneshot.ppl).abs() < 1e-12);
     }
 }

@@ -132,7 +132,10 @@ impl Workspace {
     }
 }
 
-fn collect_dims(node: &HssNode, level: usize, dims: &mut Vec<(usize, usize)>) {
+/// (n, max coupling rank) per level — shared with the training backward
+/// pass (`train::grad::GradWorkspace`) so both directions size their
+/// per-level scratch identically.
+pub(crate) fn collect_dims(node: &HssNode, level: usize, dims: &mut Vec<(usize, usize)>) {
     if let HssNode::Branch {
         n, u0, u1, c0, c1, ..
     } = node

@@ -70,6 +70,12 @@
 //! variant, entries keyed `(layer, projection)`); the serving
 //! [`coordinator`] cold-starts workers from it and atomically hot-swaps a
 //! variant under live traffic via `Coordinator::swap_variant`.
+//!
+//! One-shot compression is only half the paper's deployment story: the
+//! [`train`] module fine-tunes the surviving factor values end-to-end
+//! against the dense teacher (layer-wise ‖W x − Ŵ x‖² calibration with
+//! SGD/Adam, frozen sparsity patterns), and the refined model rides the
+//! same store → hot-swap path (`hisolo finetune` on the CLI).
 
 pub mod compress;
 pub mod coordinator;
@@ -81,6 +87,7 @@ pub mod model;
 pub mod runtime;
 pub mod sparse;
 pub mod store;
+pub mod train;
 pub mod util;
 
 /// Crate-wide result alias.

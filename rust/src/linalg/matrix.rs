@@ -213,18 +213,26 @@ impl Matrix {
 
     /// y = Aᵀ @ x without materializing the transpose.
     pub fn matvec_t(&self, x: &[f32]) -> Vec<f32> {
-        assert_eq!(x.len(), self.rows);
         let mut y = vec![0.0; self.cols];
+        self.matvec_t_into(x, &mut y);
+        y
+    }
+
+    /// y = Aᵀ @ x into a preallocated buffer (y is overwritten) — the
+    /// allocation-free form the training backward pass runs in its hot loop.
+    pub fn matvec_t_into(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.rows);
+        assert_eq!(y.len(), self.cols);
+        y.fill(0.0);
         for i in 0..self.rows {
             let xi = x[i];
             if xi != 0.0 {
                 let row = self.row(i);
-                for j in 0..self.cols {
-                    y[j] += xi * row[j];
+                for (yj, &r) in y.iter_mut().zip(row) {
+                    *yj += xi * r;
                 }
             }
         }
-        y
     }
 
     /// Symmetric permutation A[p, p] (rows and columns).
@@ -322,6 +330,15 @@ mod tests {
         let expect = a.transpose().matvec(&x);
         let got = a.matvec_t(&x);
         slices_close(&got, &expect, 1e-5, 1e-5, "matvec_t").unwrap();
+    }
+
+    #[test]
+    fn matvec_t_into_overwrites_stale_buffer() {
+        let a = Matrix::randn(12, 9, 9);
+        let x: Vec<f32> = (0..12).map(|i| (i as f32).cos()).collect();
+        let mut y = vec![7.0f32; 9];
+        a.matvec_t_into(&x, &mut y);
+        slices_close(&y, &a.matvec_t(&x), 1e-6, 1e-6, "matvec_t_into").unwrap();
     }
 
     #[test]

@@ -8,10 +8,11 @@ use hisolo::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, Variant
 use hisolo::data::corpus::Corpus;
 use hisolo::data::dataset::windows;
 use hisolo::data::synthetic;
-use hisolo::eval::sweep::{eval_point, sweep, to_csv};
+use hisolo::eval::sweep::{eval_point, sweep_refined, to_csv};
 use hisolo::model::{CompressedModel, ModelConfig, Transformer, WeightFile};
 use hisolo::store::ModelStore;
 use hisolo::runtime::{ArtifactDir, Runtime};
+use hisolo::train::{calibrate_model, OptimizerKind, TrainConfig};
 use hisolo::util::cli::Args;
 use hisolo::util::timer::Table;
 use std::path::PathBuf;
@@ -33,6 +34,16 @@ COMMANDS:
       [--artifacts artifacts] [--threads N]
   sweep                         full storage-vs-PPL grid (Fig 3 engine)
       [--ranks 8,16,32,64] [--sparsities 0.1,0.2,0.3] [--out sweep.csv]
+      [--refine-steps N]  (also calibrate each cell; fills the
+      ppl_refined / refine_steps comparison columns)
+  finetune                      fine-tune compressed factors against the
+                                dense teacher (layer-wise calibration) and
+                                persist the refined model as a store variant
+      --method shss-rcm --steps 200 --lr 0.01 --batch 16
+      [--optimizer adam|sgd] [--windows 8] [--rank 32 --sparsity 0.3
+      --depth 3] [--store store] [--variant <method>-ft]
+      [--synthetic [--tiny]]  (random base model; --tiny shrinks it for
+      smoke tests)
   save                          compress the model's q/k/v and persist the
                                 HSB1 artifact store (no recompression at load)
       --method shss-rcm --rank 32 --sparsity 0.3 --depth 3
@@ -48,7 +59,7 @@ Artifacts default to ./artifacts (override with --artifacts or
 HISOLO_ARTIFACTS). Build them with `make artifacts`.";
 
 fn main() {
-    let args = Args::parse(&["native", "no-rcm", "help", "synthetic"]);
+    let args = Args::parse(&["native", "no-rcm", "help", "synthetic", "tiny"]);
     if args.flag("help") || args.subcommand().is_none() {
         println!("{USAGE}");
         return;
@@ -59,6 +70,7 @@ fn main() {
         "eval" => cmd_eval(&args),
         "sweep" => cmd_sweep(&args),
         "save" => cmd_save(&args),
+        "finetune" => cmd_finetune(&args),
         "serve" => cmd_serve(&args),
         other => {
             eprintln!("unknown command '{other}'\n{USAGE}");
@@ -273,6 +285,146 @@ fn cmd_save(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn train_cfg_from_args(args: &Args, steps: usize) -> Result<TrainConfig> {
+    let d = TrainConfig::default();
+    let optimizer: OptimizerKind = args
+        .get_str("optimizer", d.optimizer.name())
+        .parse()
+        .map_err(anyhow::Error::msg)?;
+    Ok(TrainConfig {
+        steps,
+        batch: args.get_usize("batch", d.batch),
+        lr: args.get_f64("lr", d.lr as f64) as f32,
+        optimizer,
+        eval_every: args.get_usize("eval-every", d.eval_every),
+        patience: args.get_usize("patience", d.patience),
+        seed: args.get_usize("train-seed", d.seed as usize) as u64,
+        ..d
+    })
+}
+
+/// `finetune` — the paper's end-to-end training claim as a deployment
+/// step: compress, calibrate every q/k/v projection against its dense
+/// teacher on corpus activations, and persist the refined model as a new
+/// store variant ready for `Coordinator::swap_variant`.
+fn cmd_finetune(args: &Args) -> Result<()> {
+    let method: Method = args
+        .get_str("method", "shss-rcm")
+        .parse()
+        .map_err(anyhow::Error::msg)?;
+    let cfg = cfg_from_args(args);
+    let store_dir = args.get_str("store", "store");
+    let variant = args.get_str("variant", &format!("{}-ft", method.name()));
+    let n_windows = args.get_usize("windows", 8);
+
+    // base model + calibration tokens: trained artifacts when present,
+    // otherwise (--synthetic) a random model over a synthetic stream;
+    // --tiny shrinks the synthetic model for CI smoke runs.
+    let dir = artifacts_path(args);
+    // an explicit --synthetic always wins over an artifacts directory that
+    // happens to exist — smoke runs must never touch the production model
+    let (model, tokens): (Arc<Transformer>, Vec<u32>) = if args.flag("synthetic") {
+        let mcfg = if args.flag("tiny") {
+            ModelConfig {
+                vocab: 64,
+                d_model: 64,
+                n_heads: 4,
+                n_layers: 2,
+                d_ff: 128,
+                seq_len: 32,
+            }
+        } else {
+            ModelConfig::default()
+        };
+        let seed = args.get_usize("seed", 7) as u64;
+        let model = Arc::new(Transformer::random(mcfg, seed));
+        (model, synthetic::token_stream(20_000, mcfg.vocab))
+    } else if dir.join("manifest.json").exists() {
+        let (model, a) = load_model(args)?;
+        let corpus = match Corpus::load(&a.dir.join("corpus_train.txt")) {
+            Ok(c) => c,
+            Err(_) => {
+                // calibrating on the eval split overstates refined-vs-
+                // oneshot numbers downstream — make the fallback loud
+                eprintln!(
+                    "WARN: corpus_train.txt missing — calibrating on corpus_test.txt, \
+                     which eval/sweep also measure perplexity on"
+                );
+                Corpus::load(&a.dir.join("corpus_test.txt"))?
+            }
+        };
+        (model, corpus.tokens)
+    } else {
+        bail!(
+            "artifacts not found at {} — run `make artifacts`, or pass \
+             --synthetic to use a random base model",
+            dir.display()
+        );
+    };
+    let ws = windows(&tokens, model.cfg.seq_len, n_windows);
+    if ws.is_empty() {
+        bail!("corpus too short for seq_len {}", model.cfg.seq_len);
+    }
+
+    println!(
+        "compressing q/k/v of {} layers with {} (rank={} sp={} depth={})",
+        model.cfg.n_layers, method, cfg.rank, cfg.sparsity, cfg.depth
+    );
+    let t0 = Instant::now();
+    let mut cm = CompressedModel::compress(model, method, cfg);
+    println!("compress time: {:.2}s", t0.elapsed().as_secs_f64());
+    println!("one-shot mean rel error: {:.4}", cm.mean_rel_error());
+
+    let train_cfg = train_cfg_from_args(args, args.get_usize("steps", 200))?;
+    println!(
+        "calibrating on {} windows ({} steps max, lr {}, batch {}, {})",
+        ws.len(),
+        train_cfg.steps,
+        train_cfg.lr,
+        train_cfg.batch,
+        train_cfg.optimizer.name()
+    );
+    let t0 = Instant::now();
+    let reports = calibrate_model(&mut cm, &ws, &train_cfg);
+    let train_secs = t0.elapsed().as_secs_f64();
+
+    let mut t = Table::new(&[
+        "projection",
+        "steps",
+        "rel err before",
+        "rel err after",
+        "loss before",
+        "loss after",
+    ]);
+    for r in &reports {
+        t.row(&[
+            r.name.clone(),
+            r.steps_run.to_string(),
+            format!("{:.4}", r.rel_err_before),
+            format!("{:.4}", r.rel_err_after),
+            format!("{:.5}", r.loss_before),
+            format!("{:.5}", r.loss_after),
+        ]);
+    }
+    t.print();
+    let total_steps: usize = reports.iter().map(|r| r.steps_run).sum();
+    println!(
+        "refined mean rel error: {:.4} ({total_steps} total steps in {train_secs:.2}s, {:.0} steps/s)",
+        cm.mean_rel_error(),
+        total_steps as f64 / train_secs.max(1e-9)
+    );
+
+    let store = ModelStore::open(&store_dir);
+    let path = store.save_model(&variant, &cm)?;
+    println!(
+        "wrote refined variant '{variant}' -> {} ({} bytes on disk)",
+        path.display(),
+        store.variant_bytes(&variant)
+    );
+    println!("serve it with: hisolo serve --native --from-store {store_dir} --store-variant {variant}");
+    Ok(())
+}
+
 fn cmd_sweep(args: &Args) -> Result<()> {
     let (model, a) = load_model(args)?;
     let ws = eval_windows(&a, args.get_usize("windows", 16))?;
@@ -291,13 +443,31 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             });
         }
     }
+    let refine_steps = args.get_usize("refine-steps", 0);
+    let train_cfg = if refine_steps > 0 {
+        Some(train_cfg_from_args(args, refine_steps)?)
+    } else {
+        None
+    };
     println!(
-        "sweep: {} methods x {} configs on {} windows",
+        "sweep: {} methods x {} configs on {} windows{}",
         Method::FIG3.len(),
         configs.len(),
-        ws.len()
+        ws.len(),
+        if refine_steps > 0 {
+            format!(" (+ refine stage, {refine_steps} steps)")
+        } else {
+            String::new()
+        }
     );
-    let points = sweep(&model, &Method::FIG3, &configs, &ws, threads);
+    let points = sweep_refined(
+        &model,
+        &Method::FIG3,
+        &configs,
+        &ws,
+        threads,
+        train_cfg.as_ref(),
+    );
     let csv = to_csv(&points);
     if let Some(out) = args.get("out") {
         std::fs::write(out, &csv)?;

@@ -147,6 +147,32 @@ impl Transformer {
 
     /// Logits [t, vocab] for one token window, with the given projector.
     pub fn forward_with<P: QkvProjector>(&self, tokens: &[u32], proj: &P) -> Matrix {
+        self.forward_inner(tokens, proj, None)
+    }
+
+    /// Calibration inputs for the q/k/v projections: the post-ln1
+    /// activations feeding each layer's attention block, one [t, d] matrix
+    /// per layer (q, k, and v of a layer all consume the same input). This
+    /// is the data side of the layer-wise reconstruction objective
+    /// ‖W x − Ŵ x‖² that `train::calibrate` minimises.
+    pub fn qkv_inputs(&self, tokens: &[u32]) -> Vec<Matrix> {
+        let mut cap = Vec::with_capacity(self.cfg.n_layers);
+        let _ = self.forward_inner(
+            tokens,
+            &DenseProjector {
+                layers: &self.layers,
+            },
+            Some(&mut cap),
+        );
+        cap
+    }
+
+    fn forward_inner<P: QkvProjector>(
+        &self,
+        tokens: &[u32],
+        proj: &P,
+        mut capture: Option<&mut Vec<Matrix>>,
+    ) -> Matrix {
         let t = tokens.len();
         let d = self.cfg.d_model;
         assert!(t <= self.cfg.seq_len, "window longer than seq_len");
@@ -165,6 +191,12 @@ impl Transformer {
         for (li, l) in self.layers.iter().enumerate() {
             // attention block
             let a = layernorm(&h, &l.ln1_g, &l.ln1_b);
+            if let Some(cap) = capture.as_mut() {
+                cap.push(a.clone());
+                if li + 1 == self.layers.len() {
+                    break; // nothing downstream of the last capture is read
+                }
+            }
             let q = proj.project(li, Proj::Q, &a);
             let k = proj.project(li, Proj::K, &a);
             let v = proj.project(li, Proj::V, &a);
@@ -189,6 +221,13 @@ impl Transformer {
                 }
             }
             h = h.add(&ff2);
+        }
+
+        // calibration capture needs only the per-layer inputs — skip the
+        // final layernorm and the unembedding matmul (the largest matmul
+        // in the pass at a realistic vocab) when nobody reads the logits
+        if capture.is_some() {
+            return Matrix::zeros(0, 0);
         }
 
         let hf = layernorm(&h, &self.lnf_g, &self.lnf_b);
@@ -355,6 +394,31 @@ mod tests {
         for val in &o.data {
             assert!((val - 1.0).abs() < 1e-5);
         }
+    }
+
+    #[test]
+    fn qkv_inputs_match_ln1_of_forward() {
+        let m = Transformer::random(tiny_cfg(), 7);
+        let tokens: Vec<u32> = (0..12).map(|i| (i * 7) % 64).collect();
+        let caps = m.qkv_inputs(&tokens);
+        assert_eq!(caps.len(), 2);
+        for a in &caps {
+            assert_eq!((a.rows, a.cols), (12, 32));
+            assert!(a.data.iter().all(|v| v.is_finite()));
+        }
+        // layer 0's capture is exactly layernorm(embeddings)
+        let d = m.cfg.d_model;
+        let mut h = Matrix::zeros(12, d);
+        for (i, &tok) in tokens.iter().enumerate() {
+            let te = m.tok_emb.row(tok as usize);
+            let pe = m.pos_emb.row(i);
+            let row = h.row_mut(i);
+            for j in 0..d {
+                row[j] = te[j] + pe[j];
+            }
+        }
+        let expect = layernorm(&h, &m.layers[0].ln1_g, &m.layers[0].ln1_b);
+        assert_eq!(caps[0].data, expect.data);
     }
 
     #[test]

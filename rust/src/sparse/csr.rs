@@ -125,6 +125,26 @@ impl Csr {
         }
     }
 
+    /// Value gradients with a frozen sparsity pattern: for the loss
+    /// L = ½‖y − t‖² with y = S x + …, the gradient of the k-th stored
+    /// value (row i, column indices[k]) is g[i]·x[indices[k]], where
+    /// g = ∂L/∂y. Accumulates into `out` (one slot per stored value, CSR
+    /// order) — the sparse half of the training backward pass.
+    pub fn value_grads_add(&self, x: &[f32], g: &[f32], out: &mut [f32]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(g.len(), self.rows);
+        assert_eq!(out.len(), self.nnz());
+        for i in 0..self.rows {
+            let gi = g[i];
+            if gi == 0.0 {
+                continue;
+            }
+            for k in self.indptr[i] as usize..self.indptr[i + 1] as usize {
+                out[k] += gi * x[self.indices[k] as usize];
+            }
+        }
+    }
+
     /// y = S x.
     pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
         let mut y = vec![0.0; self.rows];
@@ -207,6 +227,29 @@ mod tests {
         let mut bad = csr.clone();
         bad.data.pop(); // nnz mismatch
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn value_grads_match_dense_outer_product() {
+        // dense reference: dL/dS = g xᵀ restricted to the stored pattern
+        check(10, |rng| {
+            let n = 3 + rng.below(12);
+            let coo = random_coo(rng, n, 2 * n);
+            let csr = Csr::from_coo(&coo);
+            let x: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+            let g: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+            let mut got = vec![0.0f32; csr.nnz()];
+            csr.value_grads_add(&x, &g, &mut got);
+            for i in 0..csr.rows {
+                for k in csr.indptr[i] as usize..csr.indptr[i + 1] as usize {
+                    let want = g[i] * x[csr.indices[k] as usize];
+                    if (got[k] - want).abs() > 1e-5 {
+                        return Err(format!("grad[{k}]: {} != {want}", got[k]));
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -106,6 +106,44 @@ impl ModelStore {
             .map(|m| m.len())
             .unwrap_or(0)
     }
+
+    /// Retention: keep the newest `keep_last_n` variants (by file mtime,
+    /// name-descending on ties) and delete the rest. The actively-served
+    /// variant is never deleted, however old — it simply doesn't count
+    /// against the retention budget. Returns the deleted variant names
+    /// (sorted), so callers can log what a GC pass reclaimed.
+    ///
+    /// Caveat: on filesystems with coarse mtime granularity (~1s), two
+    /// variants saved within the same tick order by name, not save order.
+    /// A save-sequence number in the `HSB1` header would make retention
+    /// exact (tracked in the ROADMAP).
+    pub fn prune(&self, keep_last_n: usize, active: Option<&str>) -> Result<Vec<String>> {
+        let mut entries: Vec<(std::time::SystemTime, String)> = Vec::new();
+        for name in self.variants() {
+            let meta = std::fs::metadata(self.variant_path(&name))
+                .with_context(|| format!("stat variant '{name}'"))?;
+            let mtime = meta.modified().unwrap_or(std::time::SystemTime::UNIX_EPOCH);
+            entries.push((mtime, name));
+        }
+        // newest first; deterministic on mtime ties
+        entries.sort_by(|a, b| b.cmp(a));
+        let mut deleted = Vec::new();
+        let mut kept = 0usize;
+        for (_, name) in entries {
+            if active == Some(name.as_str()) {
+                continue; // refuse to touch the serving variant
+            }
+            if kept < keep_last_n {
+                kept += 1;
+                continue;
+            }
+            std::fs::remove_file(self.variant_path(&name))
+                .with_context(|| format!("deleting variant '{name}'"))?;
+            deleted.push(name);
+        }
+        deleted.sort();
+        Ok(deleted)
+    }
 }
 
 #[cfg(test)]
@@ -200,6 +238,45 @@ mod tests {
         assert_eq!(m.n(), 32);
         assert!(store.load_matrix("ssvd", 7, Proj::K).is_err());
         assert!(store.load_matrix("absent", 0, Proj::Q).is_err());
+    }
+
+    #[test]
+    fn prune_keeps_newest_and_never_deletes_active() {
+        let base = tiny_base(6);
+        let store = temp_store("prune");
+        let cm = CompressedModel::compress(
+            base.clone(),
+            Method::SSvd,
+            CompressorConfig {
+                rank: 4,
+                sparsity: 0.1,
+                ..Default::default()
+            },
+        );
+        for name in ["v0", "v1", "v2", "v3"] {
+            store.save_model(name, &cm).unwrap();
+            // distinct mtimes so retention order is unambiguous
+            std::thread::sleep(std::time::Duration::from_millis(15));
+        }
+        // keep the 2 newest; v0 is actively served and must survive
+        let deleted = store.prune(2, Some("v0")).unwrap();
+        assert_eq!(deleted, vec!["v1".to_string()]);
+        assert_eq!(
+            store.variants(),
+            vec!["v0".to_string(), "v2".to_string(), "v3".to_string()]
+        );
+        // the survivors still load
+        assert!(store.load_model("v0", base.clone()).is_ok());
+        assert!(store.load_model("v3", base.clone()).is_ok());
+
+        // prune to zero: only the active variant remains
+        let deleted = store.prune(0, Some("v0")).unwrap();
+        assert_eq!(deleted, vec!["v2".to_string(), "v3".to_string()]);
+        assert_eq!(store.variants(), vec!["v0".to_string()]);
+
+        // without an active variant, prune(0) empties the store
+        assert_eq!(store.prune(0, None).unwrap(), vec!["v0".to_string()]);
+        assert!(store.variants().is_empty());
     }
 
     #[test]

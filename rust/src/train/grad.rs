@@ -1,0 +1,540 @@
+//! Backward passes for every [`CompressedMatrix`] variant.
+//!
+//! The training objective is the layer-wise reconstruction loss
+//! L = ½‖Ŵ x − W x‖² per calibration sample. Every variant's matvec is
+//! linear in its parameters, so given the output-space gradient
+//! g = ∂L/∂y = Ŵ x − W x, parameter gradients are vector-Jacobian
+//! products that never need stored forward activations — each
+//! intermediate is recomputable from x during the backward walk:
+//!
+//! - `Dense`:    y = W x            ⇒ dW = g xᵀ
+//! - `LowRank`:  y = L (R x) + S x  ⇒ dL = g tᵀ (t = R x),
+//!               dR = (Lᵀ g) xᵀ, dS restricted to the frozen pattern
+//! - `Hss`:      recursive VJP — the permutation routes g down exactly
+//!               as it routes x (y = Pᵀ z ⇒ ∂L/∂z = P g), so leaves see
+//!               (x-slice, g-slice) pairs and couplings get rank-k outer
+//!               products, level by level.
+//!
+//! The flat parameter view (`visit_params` / `visit_params_mut`) fixes one
+//! canonical traversal order shared by gradient accumulation, optimizers,
+//! and snapshots: Dense → [W]; LowRank → [L, R, S-values]; Branch →
+//! [S-values, U0, R0, U1, R1, child0, child1]; Leaf → [D]. Sparsity
+//! patterns and permutations are frozen — only values train.
+//!
+//! [`GradWorkspace`] mirrors the `hss::matvec::Workspace` buffer
+//! discipline (one scratch set per tree level, sized by the same
+//! `collect_dims` walk) so the training hot loop allocates nothing after
+//! warmup.
+
+use crate::compress::CompressedMatrix;
+use crate::hss::matvec::collect_dims;
+use crate::hss::HssNode;
+
+/// Number of trainable parameters of a compressed matrix (the length of
+/// the flat gradient / optimizer-state vectors).
+pub fn num_params(m: &CompressedMatrix) -> usize {
+    let mut n = 0;
+    visit_params(m, &mut |chunk| n += chunk.len());
+    n
+}
+
+/// Visit every trainable parameter chunk in canonical order.
+pub fn visit_params<F: FnMut(&[f32])>(m: &CompressedMatrix, f: &mut F) {
+    match m {
+        CompressedMatrix::Dense { w } => f(&w.data),
+        CompressedMatrix::LowRank { l, r, sparse } => {
+            f(&l.data);
+            f(&r.data);
+            if let Some(s) = sparse {
+                f(&s.data);
+            }
+        }
+        CompressedMatrix::Hss { tree } => visit_node(tree, f),
+    }
+}
+
+fn visit_node<F: FnMut(&[f32])>(node: &HssNode, f: &mut F) {
+    match node {
+        HssNode::Leaf { d } => f(&d.data),
+        HssNode::Branch {
+            sparse,
+            u0,
+            r0,
+            u1,
+            r1,
+            c0,
+            c1,
+            ..
+        } => {
+            f(&sparse.data);
+            f(&u0.data);
+            f(&r0.data);
+            f(&u1.data);
+            f(&r1.data);
+            visit_node(c0, f);
+            visit_node(c1, f);
+        }
+    }
+}
+
+/// Visit every trainable parameter chunk mutably, in the same canonical
+/// order as [`visit_params`] — the write side used by optimizers and
+/// snapshot restore.
+pub fn visit_params_mut<F: FnMut(&mut [f32])>(m: &mut CompressedMatrix, f: &mut F) {
+    match m {
+        CompressedMatrix::Dense { w } => f(&mut w.data),
+        CompressedMatrix::LowRank { l, r, sparse } => {
+            f(&mut l.data);
+            f(&mut r.data);
+            if let Some(s) = sparse {
+                f(&mut s.data);
+            }
+        }
+        CompressedMatrix::Hss { tree } => visit_node_mut(tree, f),
+    }
+}
+
+fn visit_node_mut<F: FnMut(&mut [f32])>(node: &mut HssNode, f: &mut F) {
+    match node {
+        HssNode::Leaf { d } => f(&mut d.data),
+        HssNode::Branch {
+            sparse,
+            u0,
+            r0,
+            u1,
+            r1,
+            c0,
+            c1,
+            ..
+        } => {
+            f(&mut sparse.data);
+            f(&mut u0.data);
+            f(&mut r0.data);
+            f(&mut u1.data);
+            f(&mut r1.data);
+            visit_node_mut(c0, f);
+            visit_node_mut(c1, f);
+        }
+    }
+}
+
+/// Snapshot the flat parameter vector into a preallocated buffer.
+pub fn copy_params_into(m: &CompressedMatrix, out: &mut [f32]) {
+    let mut off = 0;
+    visit_params(m, &mut |chunk| {
+        out[off..off + chunk.len()].copy_from_slice(chunk);
+        off += chunk.len();
+    });
+    assert_eq!(off, out.len(), "param snapshot length mismatch");
+}
+
+/// Snapshot the flat parameter vector (allocating convenience form).
+pub fn copy_params(m: &CompressedMatrix) -> Vec<f32> {
+    let mut out = vec![0.0; num_params(m)];
+    copy_params_into(m, &mut out);
+    out
+}
+
+/// Restore parameters from a flat vector (inverse of [`copy_params`]).
+pub fn load_params(m: &mut CompressedMatrix, flat: &[f32]) {
+    let mut off = 0;
+    visit_params_mut(m, &mut |chunk| {
+        chunk.copy_from_slice(&flat[off..off + chunk.len()]);
+        off += chunk.len();
+    });
+    assert_eq!(off, flat.len(), "param restore length mismatch");
+}
+
+/// out += a bᵀ, row-major — the rank-1 update every factor gradient
+/// reduces to.
+pub fn outer_add(a: &[f32], b: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(out.len(), a.len() * b.len());
+    let cols = b.len();
+    for (i, &ai) in a.iter().enumerate() {
+        if ai == 0.0 {
+            continue;
+        }
+        let row = &mut out[i * cols..(i + 1) * cols];
+        for (o, &bj) in row.iter_mut().zip(b) {
+            *o += ai * bj;
+        }
+    }
+}
+
+struct GradLevel {
+    /// permuted input x[perm]
+    xp: Vec<f32>,
+    /// permuted output-gradient g[perm]
+    gp: Vec<f32>,
+    /// coupling intermediate t = R·x  (rank-sized)
+    t: Vec<f32>,
+    /// coupling cotangent v = Uᵀ·g  (rank-sized)
+    v: Vec<f32>,
+}
+
+/// Per-matrix scratch for [`accumulate_grad`]; same per-level discipline
+/// as the matvec `Workspace`, so repeated backward passes allocate
+/// nothing after warmup (including the dims scratch used to size levels).
+#[derive(Default)]
+pub struct GradWorkspace {
+    levels: Vec<GradLevel>,
+    /// LowRank intermediates (t = R x, v = Lᵀ g)
+    t: Vec<f32>,
+    v: Vec<f32>,
+    dims: Vec<(usize, usize)>,
+}
+
+impl GradWorkspace {
+    pub fn for_matrix(m: &CompressedMatrix) -> GradWorkspace {
+        let mut ws = GradWorkspace::default();
+        ws.ensure(m);
+        ws
+    }
+
+    /// Grow buffers to fit `m` (idempotent, allocation-free once warm).
+    pub fn ensure(&mut self, m: &CompressedMatrix) {
+        match m {
+            CompressedMatrix::Dense { .. } => {}
+            CompressedMatrix::LowRank { r, .. } => {
+                if self.t.len() < r.rows {
+                    self.t.resize(r.rows, 0.0);
+                    self.v.resize(r.rows, 0.0);
+                }
+            }
+            CompressedMatrix::Hss { tree } => {
+                self.dims.clear();
+                collect_dims(tree, 0, &mut self.dims);
+                for (lvl, &(n, k)) in self.dims.iter().enumerate() {
+                    if self.levels.len() <= lvl {
+                        self.levels.push(GradLevel {
+                            xp: vec![0.0; n],
+                            gp: vec![0.0; n],
+                            t: vec![0.0; k],
+                            v: vec![0.0; k],
+                        });
+                    } else {
+                        let b = &mut self.levels[lvl];
+                        if b.xp.len() < n {
+                            b.xp.resize(n, 0.0);
+                            b.gp.resize(n, 0.0);
+                        }
+                        if b.t.len() < k {
+                            b.t.resize(k, 0.0);
+                            b.v.resize(k, 0.0);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Accumulate ∂L/∂θ into `grad` (flat, canonical order) for one sample,
+/// given the input `x` and the output-space gradient `g = ŷ − t`.
+/// `grad` is accumulated into, not overwritten — callers average over a
+/// batch by zeroing once and dividing at the end.
+pub fn accumulate_grad(
+    m: &CompressedMatrix,
+    x: &[f32],
+    g: &[f32],
+    grad: &mut [f32],
+    ws: &mut GradWorkspace,
+) {
+    debug_assert_eq!(grad.len(), num_params(m));
+    ws.ensure(m);
+    match m {
+        CompressedMatrix::Dense { w } => {
+            debug_assert_eq!(x.len(), w.cols);
+            outer_add(g, x, grad);
+        }
+        CompressedMatrix::LowRank { l, r, sparse } => {
+            let t = &mut ws.t[..r.rows];
+            r.matvec_into(x, t);
+            let ln = l.data.len();
+            outer_add(g, t, &mut grad[..ln]);
+            let v = &mut ws.v[..l.cols];
+            l.matvec_t_into(g, v);
+            let rn = r.data.len();
+            outer_add(v, x, &mut grad[ln..ln + rn]);
+            if let Some(s) = sparse {
+                s.value_grads_add(x, g, &mut grad[ln + rn..]);
+            }
+        }
+        CompressedMatrix::Hss { tree } => {
+            let mut off = 0;
+            hss_grad(tree, x, g, grad, &mut off, &mut ws.levels);
+            debug_assert_eq!(off, grad.len());
+        }
+    }
+}
+
+/// Recursive VJP through one HSS node. `off` is the cursor into the flat
+/// gradient; the write order must match `visit_params` exactly.
+fn hss_grad(
+    node: &HssNode,
+    x: &[f32],
+    g: &[f32],
+    grad: &mut [f32],
+    off: &mut usize,
+    levels: &mut [GradLevel],
+) {
+    match node {
+        HssNode::Leaf { d } => {
+            let len = d.data.len();
+            outer_add(g, x, &mut grad[*off..*off + len]);
+            *off += len;
+        }
+        HssNode::Branch {
+            n,
+            sparse,
+            perm,
+            u0,
+            r0,
+            u1,
+            r1,
+            c0,
+            c1,
+        } => {
+            let n0 = n / 2;
+            // spike values see the unpermuted coordinates: y += S x
+            let nnz = sparse.nnz();
+            sparse.value_grads_add(x, g, &mut grad[*off..*off + nnz]);
+            *off += nnz;
+
+            let (buf, rest) = levels
+                .split_first_mut()
+                .expect("grad workspace depth too small");
+            // y = Pᵀ z ⇒ ∂L/∂z = P g: the gradient permutes down exactly
+            // like the input
+            let xp = &mut buf.xp[..*n];
+            perm.apply_into(x, xp);
+            let gp = &mut buf.gp[..*n];
+            perm.apply_into(g, gp);
+            let (x0, x1) = xp.split_at(n0);
+            let (g0, g1) = gp.split_at(n0);
+
+            // z0 += U0 (R0 x1): dU0 = g0 t0ᵀ, dR0 = (U0ᵀ g0) x1ᵀ
+            let t0 = &mut buf.t[..r0.rows];
+            r0.matvec_into(x1, t0);
+            let len = u0.data.len();
+            outer_add(g0, t0, &mut grad[*off..*off + len]);
+            *off += len;
+            let v0 = &mut buf.v[..u0.cols];
+            u0.matvec_t_into(g0, v0);
+            let len = r0.data.len();
+            outer_add(v0, x1, &mut grad[*off..*off + len]);
+            *off += len;
+
+            // z1 += U1 (R1 x0): dU1 = g1 t1ᵀ, dR1 = (U1ᵀ g1) x0ᵀ
+            let t1 = &mut buf.t[..r1.rows];
+            r1.matvec_into(x0, t1);
+            let len = u1.data.len();
+            outer_add(g1, t1, &mut grad[*off..*off + len]);
+            *off += len;
+            let v1 = &mut buf.v[..u1.cols];
+            u1.matvec_t_into(g1, v1);
+            let len = r1.data.len();
+            outer_add(v1, x0, &mut grad[*off..*off + len]);
+            *off += len;
+
+            // diagonal blocks: children consume (x-slice, g-slice) pairs
+            hss_grad(c0, x0, g0, grad, off, rest);
+            hss_grad(c1, x1, g1, grad, off, rest);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Compressor, CompressorConfig, Method};
+    use crate::linalg::Matrix;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    fn spiky(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut a = Matrix::randn(n, n, seed).scale(0.1);
+        for _ in 0..2 * n {
+            let i = rng.below(n);
+            let j = rng.below(n);
+            a.data[i * n + j] += rng.gaussian_f32();
+        }
+        a
+    }
+
+    /// ½‖Ŵx − t‖² accumulated in f64 (finite-difference reference).
+    fn loss(m: &CompressedMatrix, x: &[f32], tgt: &[f32]) -> f64 {
+        let y = m.matvec(x);
+        y.iter()
+            .zip(tgt)
+            .map(|(&a, &b)| {
+                let d = (a - b) as f64;
+                0.5 * d * d
+            })
+            .sum()
+    }
+
+    /// Central-difference check of every parameter. The loss is exactly
+    /// quadratic in each individual parameter (matvec is linear in θ_i),
+    /// so central differences carry no truncation error and a generous
+    /// step h keeps f32 round-off far below the 1e-3 tolerance.
+    fn fd_check_all(m: &mut CompressedMatrix, seed: u64, what: &str) {
+        let n = m.n();
+        let mut rng = Rng::new(seed);
+        let x: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+        let tgt: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+
+        let np = num_params(m);
+        assert!(np > 0, "{what}: no trainable params");
+        let mut grad = vec![0.0f32; np];
+        let mut ws = GradWorkspace::for_matrix(m);
+        let y = m.matvec(&x);
+        let g: Vec<f32> = y.iter().zip(&tgt).map(|(&a, &b)| a - b).collect();
+        accumulate_grad(m, &x, &g, &mut grad, &mut ws);
+
+        let mut flat = copy_params(m);
+        for i in 0..np {
+            let h = (1e-2 * flat[i].abs()).max(1e-2);
+            let orig = flat[i];
+            flat[i] = orig + h;
+            load_params(m, &flat);
+            let lp = loss(m, &x, &tgt);
+            flat[i] = orig - h;
+            load_params(m, &flat);
+            let lm = loss(m, &x, &tgt);
+            flat[i] = orig;
+            load_params(m, &flat);
+            let fd = ((lp - lm) / (2.0 * h as f64)) as f32;
+            let an = grad[i];
+            let tol = 1e-3 * an.abs().max(fd.abs()).max(1.0);
+            assert!(
+                (fd - an).abs() <= tol,
+                "{what}: grad[{i}] analytic {an} vs fd {fd}"
+            );
+        }
+    }
+
+    #[test]
+    fn fd_grads_lowrank() {
+        let w = spiky(16, 1);
+        let cfg = CompressorConfig {
+            rank: 4,
+            ..Default::default()
+        };
+        let mut c = Compressor::new(cfg).compress(&w, Method::Svd);
+        fd_check_all(&mut c, 11, "svd");
+    }
+
+    #[test]
+    fn fd_grads_lowrank_with_csr_values() {
+        let w = spiky(16, 2);
+        let cfg = CompressorConfig {
+            rank: 4,
+            sparsity: 0.15,
+            ..Default::default()
+        };
+        let mut c = Compressor::new(cfg).compress(&w, Method::SSvd);
+        if let CompressedMatrix::LowRank { sparse, .. } = &c {
+            assert!(sparse.as_ref().is_some_and(|s| s.nnz() > 0));
+        } else {
+            panic!("ssvd should produce LowRank + sparse");
+        }
+        fd_check_all(&mut c, 12, "ssvd");
+    }
+
+    #[test]
+    fn fd_grads_depth2_hss() {
+        let w = spiky(32, 3);
+        let cfg = CompressorConfig {
+            rank: 4,
+            sparsity: 0.1,
+            depth: 2,
+            min_leaf: 4,
+            ..Default::default()
+        };
+        let mut c = Compressor::new(cfg).compress(&w, Method::SHssRcm);
+        if let CompressedMatrix::Hss { tree } = &c {
+            assert_eq!(tree.depth(), 2, "want a depth-2 tree");
+        } else {
+            panic!("shss-rcm should produce Hss");
+        }
+        fd_check_all(&mut c, 13, "shss-rcm depth2");
+    }
+
+    #[test]
+    fn fd_grads_dense() {
+        let w = spiky(8, 4);
+        let mut c = CompressedMatrix::Dense { w };
+        fd_check_all(&mut c, 14, "dense");
+    }
+
+    #[test]
+    fn param_roundtrip_all_methods() {
+        check(8, |rng| {
+            let n = 16 + 16 * rng.below(2);
+            let w = spiky(n, rng.next_u64());
+            let cfg = CompressorConfig {
+                rank: 4,
+                sparsity: 0.1,
+                depth: 2,
+                min_leaf: 4,
+                ..Default::default()
+            };
+            let comp = Compressor::new(cfg);
+            for m in Method::ALL {
+                let mut c = comp.compress(&w, m);
+                let before = c.reconstruct();
+                let flat = copy_params(&c);
+                if flat.len() != num_params(&c) {
+                    return Err(format!("{m:?}: flat len mismatch"));
+                }
+                // perturb then restore — reconstruction must be identical
+                let zeros = vec![0.0; flat.len()];
+                load_params(&mut c, &zeros);
+                load_params(&mut c, &flat);
+                if c.reconstruct().data != before.data {
+                    return Err(format!("{m:?}: param roundtrip changed the matrix"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn grad_is_zero_at_the_optimum() {
+        // student == teacher ⇒ residual 0 ⇒ all gradients exactly 0
+        let w = spiky(16, 6);
+        let c = CompressedMatrix::Dense { w: w.clone() };
+        let x: Vec<f32> = (0..16).map(|i| (i as f32).sin()).collect();
+        let y = c.matvec(&x);
+        let t = w.matvec(&x);
+        let g: Vec<f32> = y.iter().zip(&t).map(|(&a, &b)| a - b).collect();
+        let mut grad = vec![0.0f32; num_params(&c)];
+        let mut ws = GradWorkspace::for_matrix(&c);
+        accumulate_grad(&c, &x, &g, &mut grad, &mut ws);
+        assert!(grad.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn workspace_reuse_gives_identical_grads() {
+        let w = spiky(32, 7);
+        let cfg = CompressorConfig {
+            rank: 4,
+            sparsity: 0.1,
+            depth: 2,
+            min_leaf: 4,
+            ..Default::default()
+        };
+        let c = Compressor::new(cfg).compress(&w, Method::SHss);
+        let mut rng = Rng::new(8);
+        let x: Vec<f32> = (0..32).map(|_| rng.gaussian_f32()).collect();
+        let g: Vec<f32> = (0..32).map(|_| rng.gaussian_f32()).collect();
+        let mut ws = GradWorkspace::for_matrix(&c);
+        let mut g1 = vec![0.0f32; num_params(&c)];
+        accumulate_grad(&c, &x, &g, &mut g1, &mut ws);
+        let mut g2 = vec![0.0f32; num_params(&c)];
+        accumulate_grad(&c, &x, &g, &mut g2, &mut ws);
+        assert_eq!(g1, g2);
+    }
+}

@@ -1,0 +1,43 @@
+//! End-to-end fine-tuning of compressed factors — the paper's claim that
+//! the hierarchical sparse-plus-low-rank representation "can be trained
+//! end-to-end with standard optimisers", made concrete.
+//!
+//! One-shot compression (top-k + SVD/rSVD, `compress::Compressor`) fixes
+//! the *structure* — sparsity patterns, tree shape, permutations, ranks —
+//! and this module recovers *accuracy* by training the surviving values
+//! against the dense teacher:
+//!
+//! - [`grad`] — backward passes for every `CompressedMatrix` variant:
+//!   CSR value gradients under a frozen pattern, low-rank L/R factor
+//!   gradients, and a recursive vector-Jacobian product through the HSS
+//!   tree (leaves, U/R couplings, spike values), with per-level scratch
+//!   reuse mirroring the matvec `Workspace` so the hot loop is
+//!   allocation-free after warmup. Also owns the canonical flat parameter
+//!   view (`visit_params`, `copy_params`, `load_params`).
+//! - [`optim`] — SGD (+momentum) and Adam (bias-corrected) over that flat
+//!   view.
+//! - [`calibrate`] — the layer-wise loop: minimise ‖W x − Ŵ x‖² over
+//!   batches of post-ln1 activations captured from corpus windows
+//!   (`Transformer::qkv_inputs`), cosine LR decay, early stopping on a
+//!   held-out split, best-checkpoint restore, per-layer progress via
+//!   `util::logging`.
+//!
+//! The refined factors flow back out through the existing deployment
+//! story: `compress::pipeline::refine_reports` updates layer reports in
+//! place, `ModelStore::save_model` persists the result as a new `HSB1`
+//! variant, and `Coordinator::swap_variant` hot-swaps it under live
+//! traffic — compress once, refine offline, swap without downtime.
+
+pub mod calibrate;
+pub mod grad;
+pub mod optim;
+
+pub use calibrate::{
+    calibrate_matrix, calibrate_model, calibrate_model_with, collect_activations,
+    CalibrationReport, TrainConfig,
+};
+pub use grad::{
+    accumulate_grad, copy_params, load_params, num_params, visit_params, visit_params_mut,
+    GradWorkspace,
+};
+pub use optim::{Adam, Optimizer, OptimizerKind, Sgd};

@@ -1,0 +1,242 @@
+//! Optimizers over the flat parameter view of a [`CompressedMatrix`].
+//!
+//! State (momentum / Adam moments) is laid out against the canonical
+//! parameter order of `train::grad`, so one optimizer instance tracks one
+//! matrix across steps. Updates walk the structure chunk-wise via
+//! `visit_params_mut` — no flatten/unflatten copies in the hot loop.
+
+use crate::compress::CompressedMatrix;
+use crate::train::grad::visit_params_mut;
+use std::str::FromStr;
+
+/// One optimizer update given the averaged flat gradient for this step.
+/// State is per-matrix: `calibrate_matrix` builds a fresh instance per
+/// projection, so there is deliberately no reset/clear method.
+pub trait Optimizer {
+    fn step(&mut self, m: &mut CompressedMatrix, grad: &[f32], lr: f32);
+    fn name(&self) -> &'static str;
+}
+
+/// SGD with classical momentum (momentum 0 = plain gradient descent).
+pub struct Sgd {
+    pub momentum: f32,
+    vel: Vec<f32>,
+}
+
+impl Sgd {
+    pub fn new(momentum: f32) -> Sgd {
+        Sgd {
+            momentum,
+            vel: Vec::new(),
+        }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, m: &mut CompressedMatrix, grad: &[f32], lr: f32) {
+        if self.vel.len() < grad.len() {
+            self.vel.resize(grad.len(), 0.0);
+        }
+        let mu = self.momentum;
+        let vel = &mut self.vel;
+        let mut off = 0;
+        visit_params_mut(m, &mut |chunk: &mut [f32]| {
+            for (j, p) in chunk.iter_mut().enumerate() {
+                let i = off + j;
+                let v = mu * vel[i] + grad[i];
+                vel[i] = v;
+                *p -= lr * v;
+            }
+            off += chunk.len();
+        });
+        debug_assert_eq!(off, grad.len());
+    }
+
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+}
+
+/// Adam with bias correction (Kingma & Ba defaults).
+pub struct Adam {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    t: u32,
+    m: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl Default for Adam {
+    fn default() -> Adam {
+        Adam {
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            t: 0,
+            m: Vec::new(),
+            v: Vec::new(),
+        }
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, model: &mut CompressedMatrix, grad: &[f32], lr: f32) {
+        if self.m.len() < grad.len() {
+            self.m.resize(grad.len(), 0.0);
+            self.v.resize(grad.len(), 0.0);
+        }
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        let (b1, b2, eps) = (self.beta1, self.beta2, self.eps);
+        let (ms, vs) = (&mut self.m, &mut self.v);
+        let mut off = 0;
+        visit_params_mut(model, &mut |chunk: &mut [f32]| {
+            for (j, p) in chunk.iter_mut().enumerate() {
+                let i = off + j;
+                let gi = grad[i];
+                ms[i] = b1 * ms[i] + (1.0 - b1) * gi;
+                vs[i] = b2 * vs[i] + (1.0 - b2) * gi * gi;
+                let mhat = ms[i] / bc1;
+                let vhat = vs[i] / bc2;
+                *p -= lr * mhat / (vhat.sqrt() + eps);
+            }
+            off += chunk.len();
+        });
+        debug_assert_eq!(off, grad.len());
+    }
+
+    fn name(&self) -> &'static str {
+        "adam"
+    }
+}
+
+/// Optimizer selector for configs / the CLI.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptimizerKind {
+    Sgd,
+    Adam,
+}
+
+impl OptimizerKind {
+    pub fn build(&self) -> Box<dyn Optimizer> {
+        match self {
+            OptimizerKind::Sgd => Box::new(Sgd::new(0.9)),
+            OptimizerKind::Adam => Box::new(Adam::default()),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OptimizerKind::Sgd => "sgd",
+            OptimizerKind::Adam => "adam",
+        }
+    }
+}
+
+impl FromStr for OptimizerKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<OptimizerKind, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "sgd" => Ok(OptimizerKind::Sgd),
+            "adam" => Ok(OptimizerKind::Adam),
+            other => Err(format!("unknown optimizer '{other}' (expected sgd|adam)")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::train::grad::{accumulate_grad, num_params, GradWorkspace};
+    use crate::util::rng::Rng;
+
+    /// Train a tiny dense matrix toward a fixed teacher on one input; any
+    /// reasonable optimizer must shrink the residual monotonically-ish.
+    fn residual_after(opt: &mut dyn Optimizer, steps: usize, lr: f32) -> f64 {
+        let teacher = Matrix::randn(8, 8, 1);
+        let mut student = CompressedMatrix::Dense {
+            w: Matrix::zeros(8, 8),
+        };
+        let mut rng = Rng::new(2);
+        let xs: Vec<Vec<f32>> = (0..16)
+            .map(|_| (0..8).map(|_| rng.gaussian_f32()).collect())
+            .collect();
+        let mut grad = vec![0.0f32; num_params(&student)];
+        let mut ws = GradWorkspace::for_matrix(&student);
+        for step in 0..steps {
+            grad.fill(0.0);
+            let x = &xs[step % xs.len()];
+            let y = student.matvec(x);
+            let t = teacher.matvec(x);
+            let g: Vec<f32> = y.iter().zip(&t).map(|(&a, &b)| a - b).collect();
+            accumulate_grad(&student, x, &g, &mut grad, &mut ws);
+            opt.step(&mut student, &grad, lr);
+        }
+        student.rel_error(&teacher)
+    }
+
+    #[test]
+    fn sgd_reduces_reconstruction_error() {
+        let before = residual_after(&mut Sgd::new(0.0), 0, 0.05);
+        let after = residual_after(&mut Sgd::new(0.0), 300, 0.05);
+        assert!(after < 0.5 * before, "sgd: {before} -> {after}");
+    }
+
+    #[test]
+    fn adam_reduces_reconstruction_error() {
+        let after = residual_after(&mut Adam::default(), 500, 0.05);
+        assert!(after < 0.5, "adam residual {after}");
+    }
+
+    #[test]
+    fn adam_bias_correction_first_step_is_full_sized() {
+        // with bias correction the very first step moves by ≈ lr, not
+        // lr·(1−β1)
+        let mut a = Adam::default();
+        let mut m = CompressedMatrix::Dense {
+            w: Matrix::zeros(2, 2),
+        };
+        a.step(&mut m, &[1.0, 1.0, 1.0, 1.0], 0.1);
+        if let CompressedMatrix::Dense { w } = &m {
+            for &p in &w.data {
+                assert!((p + 0.1).abs() < 1e-3, "first step {p}");
+            }
+        }
+    }
+
+    #[test]
+    fn kind_parse_and_build() {
+        assert_eq!("adam".parse::<OptimizerKind>().unwrap(), OptimizerKind::Adam);
+        assert_eq!("SGD".parse::<OptimizerKind>().unwrap(), OptimizerKind::Sgd);
+        assert!("rmsprop".parse::<OptimizerKind>().is_err());
+        assert_eq!(OptimizerKind::Adam.build().name(), "adam");
+        assert_eq!(OptimizerKind::Sgd.build().name(), "sgd");
+    }
+
+    #[test]
+    fn sgd_momentum_accumulates_velocity() {
+        let mut s = Sgd::new(0.9);
+        let mut m = CompressedMatrix::Dense {
+            w: Matrix::zeros(2, 2),
+        };
+        // two identical-gradient steps: second moves farther (velocity)
+        s.step(&mut m, &[1.0; 4], 0.1);
+        let after_one = if let CompressedMatrix::Dense { w } = &m {
+            w.data[0]
+        } else {
+            unreachable!()
+        };
+        s.step(&mut m, &[1.0; 4], 0.1);
+        let after_two = if let CompressedMatrix::Dense { w } = &m {
+            w.data[0]
+        } else {
+            unreachable!()
+        };
+        assert!((after_one + 0.1).abs() < 1e-6);
+        assert!((after_two - after_one + 0.19).abs() < 1e-6, "{after_two}");
+    }
+}

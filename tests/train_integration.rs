@@ -1,0 +1,210 @@
+//! End-to-end tests of the `train/` subsystem: calibration must beat the
+//! one-shot baseline for every compressed variant, and a refined model
+//! must round-trip through the `HSB1` store into a live
+//! `Coordinator::swap_variant` under simulated traffic.
+
+use hisolo::compress::{CompressorConfig, Method};
+use hisolo::coordinator::worker::NativeCompressedScorer;
+use hisolo::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, Variant};
+use hisolo::data::dataset::windows;
+use hisolo::model::{CompressedModel, ModelConfig, Transformer};
+use hisolo::store::ModelStore;
+use hisolo::train::{calibrate_model, TrainConfig};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig {
+        vocab: 64,
+        d_model: 32,
+        n_heads: 4,
+        n_layers: 2,
+        d_ff: 64,
+        seq_len: 16,
+    }
+}
+
+fn tiny_base(seed: u64) -> Arc<Transformer> {
+    Arc::new(Transformer::random(tiny_cfg(), seed))
+}
+
+fn calib_windows(count: usize) -> Vec<Vec<u32>> {
+    windows(&hisolo::data::synthetic::token_stream(2_000, 64), 16, count)
+}
+
+fn compressor_cfg() -> CompressorConfig {
+    CompressorConfig {
+        rank: 4,
+        sparsity: 0.08,
+        depth: 2,
+        min_leaf: 4,
+        ..Default::default()
+    }
+}
+
+fn train_cfg() -> TrainConfig {
+    TrainConfig {
+        steps: 200,
+        ..Default::default()
+    }
+}
+
+/// The acceptance bar: 200 calibration steps reduce the relative
+/// Frobenius reconstruction error vs the one-shot baseline for all three
+/// sparse-plus-X variants the paper deploys — sSVD and sR-SVD (LowRank
+/// factors + frozen-pattern CSR values) and sHSS-RCM (the recursive HSS
+/// tree). Plain SVD is excluded on purpose: its one-shot truncation is
+/// already the Frobenius-optimal rank-k matrix (Eckart–Young), so no
+/// training objective can improve that metric; the greedy sparse-plus-X
+/// one-shots are jointly suboptimal, which is exactly the gap layer-wise
+/// calibration recovers.
+#[test]
+fn calibration_beats_oneshot_for_all_variants() {
+    let base = tiny_base(1);
+    let ws = calib_windows(8);
+    for method in [Method::SSvd, Method::SRsvd, Method::SHssRcm] {
+        let mut cm = CompressedModel::compress(base.clone(), method, compressor_cfg());
+        let before = cm.mean_rel_error();
+        let reports = calibrate_model(&mut cm, &ws, &train_cfg());
+        let after = cm.mean_rel_error();
+        assert_eq!(reports.len(), 6, "{method:?}");
+        assert!(reports.iter().all(|r| r.steps_run > 0), "{method:?}");
+        assert!(
+            after < before,
+            "{method:?}: mean rel error {before} -> {after} (no improvement)"
+        );
+        // every individual projection improved, not just the mean
+        for r in &reports {
+            assert!(
+                r.rel_err_after < r.rel_err_before,
+                "{method:?} {}: {} -> {}",
+                r.name,
+                r.rel_err_before,
+                r.rel_err_after
+            );
+        }
+    }
+}
+
+/// finetune → ModelStore save → Coordinator::swap_variant: the refined
+/// variant must survive the fp16 store round trip and serve under
+/// simulated traffic, landing closer to the dense teacher than the
+/// one-shot model it replaced.
+#[test]
+fn refined_variant_roundtrips_through_store_and_hotswap() {
+    let base = tiny_base(2);
+    let ws = calib_windows(8);
+    let oneshot = Arc::new(CompressedModel::compress(
+        base.clone(),
+        Method::SHssRcm,
+        compressor_cfg(),
+    ));
+
+    // refine a second copy offline and persist it as a new variant
+    let mut refined = CompressedModel::compress(base.clone(), Method::SHssRcm, compressor_cfg());
+    calibrate_model(&mut refined, &ws, &train_cfg());
+    let dir = std::env::temp_dir().join("hisolo_test_train_roundtrip");
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = ModelStore::open(&dir);
+    store.save_model("shss-rcm-ft", &refined).unwrap();
+
+    // serve the one-shot model ...
+    let mut coord = Coordinator::new(CoordinatorConfig {
+        batcher: BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+            capacity: 256,
+        },
+    });
+    coord.add_worker(
+        Variant::Hss,
+        NativeCompressedScorer {
+            model: oneshot.clone(),
+            max_batch: 4,
+        },
+    );
+    let before = coord.submit_all(Variant::Hss, &ws).unwrap();
+    assert!(before.iter().all(|r| r.error.is_none()));
+
+    // ... hot-swap to the refined variant straight from the store
+    let swap_base = base.clone();
+    let swap_dir = dir.clone();
+    let ticket = coord
+        .swap_variant(Variant::Hss, move || {
+            let store = ModelStore::open(&swap_dir);
+            let model = Arc::new(store.load_model("shss-rcm-ft", swap_base.clone())?);
+            Ok(NativeCompressedScorer {
+                model,
+                max_batch: 4,
+            })
+        })
+        .unwrap();
+    ticket.wait(Duration::from_secs(30)).unwrap();
+
+    let after = coord.submit_all(Variant::Hss, &ws).unwrap();
+    assert!(after.iter().all(|r| r.error.is_none()));
+
+    // the served refined scores match the refined model evaluated locally
+    // through the same store round trip (fp16 quantization included)
+    let loaded = store.load_model("shss-rcm-ft", base.clone()).unwrap();
+    for (resp, w) in after.iter().zip(&ws) {
+        let logits = loaded.forward(&w[..w.len() - 1]);
+        let (nll, _) = hisolo::eval::perplexity::window_nll(&logits, w);
+        assert!(
+            (resp.nll - nll).abs() < 1e-6 * nll.abs().max(1.0),
+            "served nll {} vs local {}",
+            resp.nll,
+            nll
+        );
+    }
+
+    // and refinement really moved the served model toward the teacher:
+    // mean |logits − dense logits| shrinks vs the one-shot variant
+    let mut d_oneshot = 0.0f64;
+    let mut d_refined = 0.0f64;
+    let mut count = 0usize;
+    for w in &ws {
+        let toks = &w[..w.len() - 1];
+        let dense = base.forward(toks);
+        let a = oneshot.forward(toks);
+        let b = loaded.forward(toks);
+        for i in 0..dense.data.len() {
+            d_oneshot += (a.data[i] - dense.data[i]).abs() as f64;
+            d_refined += (b.data[i] - dense.data[i]).abs() as f64;
+            count += 1;
+        }
+    }
+    d_oneshot /= count as f64;
+    d_refined /= count as f64;
+    assert!(
+        d_refined < d_oneshot,
+        "refined logit gap {d_refined} !< one-shot {d_oneshot}"
+    );
+
+    coord.shutdown();
+}
+
+/// Store retention composes with the refine → save flow: old one-shot
+/// variants are pruned while the actively-served refined variant stays.
+#[test]
+fn prune_after_refinement_keeps_served_variant() {
+    let base = tiny_base(3);
+    let dir = std::env::temp_dir().join("hisolo_test_train_prune");
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = ModelStore::open(&dir);
+    for (i, name) in ["oneshot-a", "oneshot-b", "refined"].iter().enumerate() {
+        let cm = CompressedModel::compress(base.clone(), Method::SSvd, CompressorConfig {
+            rank: 4,
+            sparsity: 0.1,
+            seed: 100 + i as u64,
+            ..Default::default()
+        });
+        store.save_model(name, &cm).unwrap();
+        std::thread::sleep(Duration::from_millis(15));
+    }
+    // keep-0 with an active variant: everything but the served one goes
+    let deleted = store.prune(0, Some("refined")).unwrap();
+    assert_eq!(deleted, vec!["oneshot-a".to_string(), "oneshot-b".to_string()]);
+    assert_eq!(store.variants(), vec!["refined".to_string()]);
+    assert!(store.load_model("refined", base).is_ok());
+}
