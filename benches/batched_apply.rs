@@ -1,0 +1,168 @@
+//! Batched apply engine evidence: per-variant throughput of one
+//! `apply_batch` traversal vs a per-vector `matvec_with` loop at
+//! k ∈ {1, 8, 32, 128}, plus rows/s for the batched calibration step
+//! (one `apply_batch` + one rank-k `accumulate_grad` + Adam).
+//!
+//! The k = 32 numbers are emitted as a single JSON line (the bench
+//! trajectory record); `--json <path>` appends it to a file.
+//!
+//! Run: `cargo bench --bench batched_apply [-- --n 1024 --json traj.jsonl]`
+
+use hisolo::compress::{Compressor, CompressorConfig, Method};
+use hisolo::data::synthetic;
+use hisolo::linalg::Matrix;
+use hisolo::train::{accumulate_grad, num_params, GradWorkspace, Optimizer, OptimizerKind};
+use hisolo::util::cli::Args;
+use hisolo::util::json::{num, obj, s, Json};
+use hisolo::util::rng::Rng;
+use hisolo::util::timer::{bench, fmt_ns, Table};
+use std::time::Duration;
+
+fn main() {
+    let args = Args::parse(&[]);
+    let n = args.get_usize("n", 1024);
+    let rank = args.get_usize("rank", n / 8);
+    let budget = Duration::from_millis(args.get_usize("budget-ms", 300) as u64);
+    let ks = [1usize, 8, 32, 128];
+
+    let w = synthetic::trained_like(n, 99);
+    let comp = Compressor::new(CompressorConfig {
+        rank,
+        sparsity: 0.1,
+        depth: 3,
+        ..Default::default()
+    });
+
+    println!("== batched apply engine: n={n} rank={rank} depth=3 ==");
+    println!("   per-vector loop = k × matvec_with; batched = one apply_batch traversal\n");
+    let mut table = Table::new(&[
+        "variant",
+        "k",
+        "matvec loop",
+        "apply_batch",
+        "speedup",
+        "cols/s batched",
+    ]);
+
+    let cases: [(&str, Method); 4] = [
+        ("dense", Method::Dense),
+        ("lowrank (svd)", Method::Svd),
+        ("lowrank+csr (ssvd)", Method::SSvd),
+        ("shss-rcm", Method::SHssRcm),
+    ];
+    let mut k32_entries: Vec<(String, Json)> = Vec::new();
+
+    for (label, m) in cases {
+        let c = comp.compress(&w, m);
+        for &k in &ks {
+            let x = Matrix::randn(n, k, 7 + k as u64);
+            let cols: Vec<Vec<f32>> = (0..k).map(|c| x.col(c)).collect();
+
+            let mut ws1 = c.workspace();
+            let mut y1 = vec![0.0f32; n];
+            let loop_stats = bench(
+                || {
+                    for col in &cols {
+                        c.matvec_with(std::hint::black_box(col), &mut y1, &mut ws1);
+                    }
+                },
+                2,
+                budget,
+                10_000,
+            );
+
+            let mut ws = c.workspace_for(k);
+            let mut y = Matrix::zeros(n, k);
+            let batch_stats = bench(
+                || c.apply_batch(std::hint::black_box(&x), &mut y, &mut ws),
+                2,
+                budget,
+                10_000,
+            );
+
+            let speedup = loop_stats.mean_ns / batch_stats.mean_ns;
+            let cols_per_s = k as f64 * 1e9 / batch_stats.mean_ns;
+            table.row(&[
+                label.to_string(),
+                k.to_string(),
+                fmt_ns(loop_stats.mean_ns),
+                fmt_ns(batch_stats.mean_ns),
+                format!("{speedup:.2}x"),
+                format!("{cols_per_s:.0}"),
+            ]);
+            if k == 32 {
+                k32_entries.push((
+                    m.name().to_string(),
+                    obj(vec![
+                        ("loop_ns", num(loop_stats.mean_ns)),
+                        ("batch_ns", num(batch_stats.mean_ns)),
+                        ("speedup", num(speedup)),
+                    ]),
+                ));
+            }
+        }
+    }
+    table.print();
+
+    // batched calibration step: one apply_batch + rank-k accumulate_grad
+    // + Adam on the sHSS-RCM student, reported as rows (samples) per sec
+    let batch = 32;
+    let mut student = comp.compress(&w, Method::SHssRcm);
+    let mut rng = Rng::new(5);
+    let mut xb = Matrix::zeros(n, batch);
+    rng.fill_gaussian(&mut xb.data);
+    let targets: Vec<Vec<f32>> = (0..batch).map(|c| w.matvec(&xb.col(c))).collect();
+    let tb = Matrix::from_cols(&targets);
+    let mut gb = Matrix::zeros(n, batch);
+    let mut grad = vec![0.0f32; num_params(&student)];
+    let mut gws = GradWorkspace::for_matrix_batch(&student, batch);
+    let mut ws = student.workspace_for(batch);
+    let mut opt = OptimizerKind::Adam.build();
+    let cal_stats = bench(
+        || {
+            grad.fill(0.0);
+            student.apply_batch(&xb, &mut gb, &mut ws);
+            for (g, &t) in gb.data.iter_mut().zip(&tb.data) {
+                *g -= t;
+            }
+            accumulate_grad(&student, &xb, &gb, &mut grad, &mut gws);
+            let inv = 1.0 / batch as f32;
+            for g in grad.iter_mut() {
+                *g *= inv;
+            }
+            opt.step(&mut student, &grad, 1e-3);
+        },
+        2,
+        budget,
+        10_000,
+    );
+    let rows_per_s = batch as f64 * 1e9 / cal_stats.mean_ns;
+    println!(
+        "\nbatched calibration step (shss-rcm, batch={batch}): {} per step, {rows_per_s:.0} rows/s",
+        fmt_ns(cal_stats.mean_ns)
+    );
+
+    // one-line JSON trajectory record (k = 32 per-variant + calibration)
+    let record = obj(vec![
+        ("bench", s("batched_apply")),
+        ("n", num(n as f64)),
+        ("rank", num(rank as f64)),
+        (
+            "k32",
+            Json::Obj(k32_entries.into_iter().collect()),
+        ),
+        ("calib_batch", num(batch as f64)),
+        ("calib_rows_per_s", num(rows_per_s)),
+    ]);
+    println!("\nJSON: {record}");
+    if let Some(path) = args.get_path("json") {
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .expect("open json trajectory file");
+        writeln!(f, "{record}").expect("append trajectory line");
+        println!("appended k=32 trajectory line to {}", path.display());
+    }
+}

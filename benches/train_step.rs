@@ -1,12 +1,14 @@
 //! One calibration step per `CompressedMatrix` variant at n=512 —
-//! forward + backward over a mini-batch plus the Adam update, reported as
-//! steps/sec so the training hot loop enters the perf trajectory next to
-//! the matvec/compress benches.
+//! batched forward + rank-k backward over a mini-batch plus the Adam
+//! update (one `apply_batch` + one `accumulate_grad` call per step),
+//! reported as steps/sec so the training hot loop enters the perf
+//! trajectory next to the matvec/compress benches.
 //!
 //! Run: `cargo bench --bench train_step [-- --n 512 --batch 16]`
 
 use hisolo::compress::{Compressor, CompressorConfig, Method};
 use hisolo::data::synthetic;
+use hisolo::linalg::Matrix;
 use hisolo::train::{accumulate_grad, num_params, GradWorkspace, Optimizer, OptimizerKind};
 use hisolo::util::cli::Args;
 use hisolo::util::rng::Rng;
@@ -21,10 +23,11 @@ fn main() {
     let teacher = synthetic::trained_like(n, 42);
 
     let mut rng = Rng::new(7);
-    let xs: Vec<Vec<f32>> = (0..batch)
-        .map(|_| (0..n).map(|_| rng.gaussian_f32()).collect())
-        .collect();
-    let targets: Vec<Vec<f32>> = xs.iter().map(|x| teacher.matvec(x)).collect();
+    // sample block X [n, batch] and its dense-teacher targets T = W X
+    let mut xb = Matrix::zeros(n, batch);
+    rng.fill_gaussian(&mut xb.data);
+    let targets: Vec<Vec<f32>> = (0..batch).map(|c| teacher.matvec(&xb.col(c))).collect();
+    let tb = Matrix::from_cols(&targets);
 
     println!("train_step: n={n} batch={batch} rank={rank} (adam, one optimizer step)");
     let mut table = Table::new(&["variant", "params", "step time", "steps/s", "samples/s"]);
@@ -44,21 +47,19 @@ fn main() {
         let mut student = Compressor::new(cfg).compress(&teacher, method);
         let np = num_params(&student);
         let mut grad = vec![0.0f32; np];
-        let mut gws = GradWorkspace::for_matrix(&student);
-        let mut ws = student.workspace();
-        let mut y = vec![0.0f32; n];
+        let mut gws = GradWorkspace::for_matrix_batch(&student, batch);
+        let mut ws = student.workspace_for(batch);
+        let mut gb = Matrix::zeros(n, batch);
         let mut opt = OptimizerKind::Adam.build();
 
         let stats = bench(
             || {
                 grad.fill(0.0);
-                for (x, t) in xs.iter().zip(&targets) {
-                    student.matvec_with(x, &mut y, &mut ws);
-                    for (yy, &tt) in y.iter_mut().zip(t) {
-                        *yy -= tt;
-                    }
-                    accumulate_grad(&student, x, &y, &mut grad, &mut gws);
+                student.apply_batch(&xb, &mut gb, &mut ws);
+                for (g, &t) in gb.data.iter_mut().zip(&tb.data) {
+                    *g -= t; // G = Ŷ − T
                 }
+                accumulate_grad(&student, &xb, &gb, &mut grad, &mut gws);
                 let inv = 1.0 / batch as f32;
                 for g in grad.iter_mut() {
                     *g *= inv;

@@ -2,15 +2,15 @@
 //! dense, SVD, R-SVD, sSVD, sR-SVD, sHSS, sHSS-RCM (§3–§4).
 //!
 //! [`Compressor::compress`] produces a [`CompressedMatrix`] exposing
-//! `matvec`/`matmat`, storage accounting, and reconstruction error — the
-//! three axes every experiment in §5 sweeps.
+//! `matvec`/`apply_batch`, storage accounting, and reconstruction error —
+//! the three axes every experiment in §5 sweeps.
 
 pub mod compressed;
 pub mod config;
 pub mod method;
 pub mod pipeline;
 
-pub use compressed::{ApplyWorkspace, CompressedMatrix};
+pub use compressed::{BatchWorkspace, CompressedMatrix};
 pub use config::CompressorConfig;
 pub use method::Method;
 pub use pipeline::{compress_model_qkv, LayerReport};

@@ -56,6 +56,12 @@ pub fn compress_model_qkv(
 /// and `rel_error` the post-refinement reconstruction error — so the
 /// result can flow straight into [`save_reports`]. Returns one
 /// calibration report per projection.
+///
+/// The 3·L projections are independent, so they fan out across scoped
+/// worker threads (`cfg.threads`, 0 = all cores — the same work-stealing
+/// pattern as `perplexity_parallel`), each thread driving the batched
+/// apply/gradient kernels. Every projection seeds its own RNG from the
+/// config, so the result is identical at any thread count.
 pub fn refine_reports(
     reports: &mut [LayerReport],
     projections: &[(String, Matrix)],
@@ -73,29 +79,78 @@ pub fn refine_reports(
         activations.len(),
         reports.len().div_ceil(3)
     );
-    let mut out = Vec::with_capacity(reports.len());
-    for (i, rep) in reports.iter_mut().enumerate() {
+    for (i, rep) in reports.iter().enumerate() {
         // index pairing alone would silently calibrate against the wrong
         // teacher if a caller reorders either list — fail loudly instead
         assert_eq!(
             rep.name, projections[i].0,
             "report/projection order mismatch at {i}"
         );
+    }
+    let threads = if cfg.threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        cfg.threads
+    }
+    .min(reports.len())
+    .max(1);
+
+    let refine_one = |i: usize, rep: &mut LayerReport| {
         let teacher = projections[i].1.transpose();
         let xs: &[Vec<f32>] = &activations[i / 3];
         let cal = crate::train::calibrate_matrix(&rep.name, &teacher, &mut rep.compressed, xs, cfg);
         rep.rel_error = cal.rel_err_after;
-        out.push(cal);
+        cal
+    };
+
+    if threads <= 1 {
+        return reports
+            .iter_mut()
+            .enumerate()
+            .map(|(i, rep)| refine_one(i, rep))
+            .collect();
     }
-    out
+
+    // work-stealing queue of (index, &mut report); results reassemble in
+    // projection order afterwards
+    let queue: std::sync::Mutex<Vec<(usize, &mut LayerReport)>> =
+        std::sync::Mutex::new(reports.iter_mut().enumerate().collect());
+    let results: std::sync::Mutex<Vec<(usize, crate::train::CalibrationReport)>> =
+        std::sync::Mutex::new(Vec::with_capacity(projections.len()));
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let item = queue.lock().unwrap().pop();
+                let Some((i, rep)) = item else { break };
+                let cal = refine_one(i, rep);
+                results.lock().unwrap().push((i, cal));
+            });
+        }
+    });
+    let mut out = results.into_inner().unwrap();
+    out.sort_by_key(|(i, _)| *i);
+    out.into_iter().map(|(_, cal)| cal).collect()
 }
 
 /// Persist a pipeline result as one `HSB1` store file (method and
 /// compression-time error recorded per entry, so a later
 /// `CompressedModel::from_store` needs no dense weights). Returns the byte
-/// count written.
+/// count written. Files saved this way carry save-sequence 0; retention-
+/// exact saves go through [`save_reports_seq`] (what
+/// `ModelStore::save_model` stamps).
 pub fn save_reports(reports: &[LayerReport], path: &std::path::Path) -> anyhow::Result<u64> {
+    save_reports_seq(reports, path, 0)
+}
+
+/// [`save_reports`] with an explicit save-sequence number in the `HSB1`
+/// header, so `ModelStore::prune` can order variants exactly.
+pub fn save_reports_seq(
+    reports: &[LayerReport],
+    path: &std::path::Path,
+    save_seq: u64,
+) -> anyhow::Result<u64> {
     let mut w = crate::store::StoreWriter::new();
+    w.set_save_seq(save_seq);
     for r in reports {
         w.push_with_meta(&r.name, &r.compressed, Some(r.method), r.rel_error);
     }
@@ -243,6 +298,55 @@ mod tests {
                 .1
                 .transpose();
             assert!((rep.compressed.rel_error(&a) - rep.rel_error).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn parallel_refine_matches_sequential() {
+        // the fan-out must be a pure scheduling change: per-projection
+        // RNGs are seeded from the config, so any thread count produces
+        // bit-identical factors and reports
+        let projs = fake_projections(32, 2);
+        let mk = || {
+            compress_model_qkv(
+                &projs,
+                Method::SSvd,
+                CompressorConfig {
+                    rank: 4,
+                    sparsity: 0.05,
+                    ..Default::default()
+                },
+            )
+        };
+        let mut rng = crate::util::rng::Rng::new(13);
+        let xs: Vec<Vec<f32>> = (0..48)
+            .map(|_| (0..32).map(|_| rng.gaussian_f32()).collect())
+            .collect();
+        let activations = vec![xs.clone(), xs];
+        let cfg_seq = crate::train::TrainConfig {
+            steps: 40,
+            threads: 1,
+            ..Default::default()
+        };
+        let cfg_par = crate::train::TrainConfig {
+            threads: 4,
+            ..cfg_seq
+        };
+        let mut seq = mk();
+        let cals_seq = refine_reports(&mut seq, &projs, &activations, &cfg_seq);
+        let mut par = mk();
+        let cals_par = refine_reports(&mut par, &projs, &activations, &cfg_par);
+        assert_eq!(cals_seq.len(), cals_par.len());
+        for ((a, b), (ca, cb)) in seq.iter().zip(&par).zip(cals_seq.iter().zip(&cals_par)) {
+            assert_eq!(ca.name, cb.name, "report order must be projection order");
+            assert_eq!(ca.steps_run, cb.steps_run);
+            assert_eq!(
+                crate::train::grad::copy_params(&a.compressed),
+                crate::train::grad::copy_params(&b.compressed),
+                "{}",
+                a.name
+            );
+            assert_eq!(a.rel_error, b.rel_error);
         }
     }
 

@@ -176,7 +176,9 @@ pub fn run_worker_init_failed(
     }
 }
 
-/// Native scorer around the dense transformer.
+/// Native scorer around the dense transformer. A polled batch is scored
+/// in one `forward_batch` call: every layer's projections and MLP run as
+/// one tall matmul over all windows.
 pub struct NativeDenseScorer {
     pub model: Arc<crate::model::Transformer>,
     pub max_batch: usize,
@@ -192,11 +194,15 @@ impl Scorer for NativeDenseScorer {
     }
 
     fn score(&self, inputs: &[Vec<u32>]) -> anyhow::Result<Vec<Matrix>> {
-        Ok(inputs.iter().map(|w| self.model.forward(w)).collect())
+        let refs: Vec<&[u32]> = inputs.iter().map(|w| w.as_slice()).collect();
+        Ok(self.model.forward_batch(&refs))
     }
 }
 
-/// Native scorer around a compressed model.
+/// Native scorer around a compressed model. A polled batch is scored in
+/// one `forward_batch` call, so each compressed projection traverses its
+/// sparse-plus-low-rank structure **once per batch** instead of once per
+/// request (or, pre-batching, once per token).
 pub struct NativeCompressedScorer {
     pub model: Arc<crate::model::CompressedModel>,
     pub max_batch: usize,
@@ -212,7 +218,8 @@ impl Scorer for NativeCompressedScorer {
     }
 
     fn score(&self, inputs: &[Vec<u32>]) -> anyhow::Result<Vec<Matrix>> {
-        Ok(inputs.iter().map(|w| self.model.forward(w)).collect())
+        let refs: Vec<&[u32]> = inputs.iter().map(|w| w.as_slice()).collect();
+        Ok(self.model.forward_batch(&refs))
     }
 }
 

@@ -4,5 +4,7 @@
 pub mod perplexity;
 pub mod sweep;
 
-pub use perplexity::{perplexity, perplexity_parallel, PplResult};
+pub use perplexity::{
+    perplexity, perplexity_batched, perplexity_parallel, perplexity_parallel_batched, PplResult,
+};
 pub use sweep::{sweep, sweep_refined, SweepPoint};

@@ -86,6 +86,79 @@ pub fn perplexity_parallel<F: Fn(&[u32]) -> Matrix + Sync>(
     finish(nll, count)
 }
 
+/// Perplexity with windows scored as column blocks: `fwd_batch` receives
+/// up to `max_batch` windows (each already truncated to its input tokens)
+/// and returns one logits matrix per window — so a compressed model walks
+/// its structure once per chunk instead of once per window.
+pub fn perplexity_batched<F: Fn(&[&[u32]]) -> Vec<Matrix>>(
+    windows: &[Vec<u32>],
+    max_batch: usize,
+    fwd_batch: F,
+) -> PplResult {
+    let max_batch = max_batch.max(1);
+    let mut nll = 0.0f64;
+    let mut count = 0usize;
+    for chunk in windows.chunks(max_batch) {
+        let inputs: Vec<&[u32]> = chunk.iter().map(|w| &w[..w.len() - 1]).collect();
+        let logits = fwd_batch(&inputs);
+        assert_eq!(logits.len(), chunk.len(), "scorer returned wrong batch size");
+        for (lg, w) in logits.iter().zip(chunk) {
+            let (n, t) = window_nll(lg, w);
+            nll += n;
+            count += t;
+        }
+    }
+    finish(nll, count)
+}
+
+/// Thread-parallel batched perplexity: threads steal whole chunks of
+/// `max_batch` windows and drive the batched forward per chunk.
+pub fn perplexity_parallel_batched<F: Fn(&[&[u32]]) -> Vec<Matrix> + Sync>(
+    windows: &[Vec<u32>],
+    max_batch: usize,
+    fwd_batch: F,
+    threads: usize,
+) -> PplResult {
+    let max_batch = max_batch.max(1);
+    let chunks: Vec<&[Vec<u32>]> = windows.chunks(max_batch).collect();
+    if threads <= 1 || chunks.len() <= 1 {
+        return perplexity_batched(windows, max_batch, fwd_batch);
+    }
+    let next = AtomicUsize::new(0);
+    let results: Vec<(f64, usize)> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for _ in 0..threads.min(chunks.len()) {
+            let next = &next;
+            let fwd = &fwd_batch;
+            let chunks = &chunks;
+            handles.push(scope.spawn(move || {
+                let mut nll = 0.0f64;
+                let mut count = 0usize;
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= chunks.len() {
+                        break;
+                    }
+                    let chunk = chunks[i];
+                    let inputs: Vec<&[u32]> = chunk.iter().map(|w| &w[..w.len() - 1]).collect();
+                    let logits = fwd(&inputs);
+                    assert_eq!(logits.len(), chunk.len(), "scorer returned wrong batch size");
+                    for (lg, w) in logits.iter().zip(chunk) {
+                        let (n, t) = window_nll(lg, w);
+                        nll += n;
+                        count += t;
+                    }
+                }
+                (nll, count)
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let nll: f64 = results.iter().map(|r| r.0).sum();
+    let count: usize = results.iter().map(|r| r.1).sum();
+    finish(nll, count)
+}
+
 fn finish(nll: f64, count: usize) -> PplResult {
     let mean = if count > 0 { nll / count as f64 } else { f64::NAN };
     PplResult {
@@ -143,6 +216,24 @@ mod tests {
         let par = perplexity_parallel(&windows, &f, 4);
         assert!((serial.ppl - par.ppl).abs() < 1e-9);
         assert_eq!(serial.tokens, par.tokens);
+    }
+
+    #[test]
+    fn batched_matches_serial() {
+        let windows: Vec<Vec<u32>> = (0..7)
+            .map(|s| (0..21).map(|i| ((i + s) * 5) % 64).collect())
+            .collect();
+        let f = uniform_fwd(64);
+        let serial = perplexity(&windows, &f);
+        let fb = |inputs: &[&[u32]]| -> Vec<Matrix> { inputs.iter().map(|t| f(t)).collect() };
+        for max_batch in [1, 3, 16] {
+            let b = perplexity_batched(&windows, max_batch, fb);
+            assert!((serial.ppl - b.ppl).abs() < 1e-9, "max_batch {max_batch}");
+            assert_eq!(serial.tokens, b.tokens);
+            let p = perplexity_parallel_batched(&windows, max_batch, fb, 4);
+            assert!((serial.ppl - p.ppl).abs() < 1e-9, "parallel max_batch {max_batch}");
+            assert_eq!(serial.tokens, p.tokens);
+        }
     }
 
     #[test]

@@ -2,11 +2,15 @@
 //! headline table.
 
 use crate::compress::{CompressorConfig, Method};
-use crate::eval::perplexity::{perplexity_parallel, PplResult};
+use crate::eval::perplexity::{perplexity_parallel_batched, PplResult};
 use crate::linalg::Matrix;
 use crate::model::{CompressedModel, Transformer};
 use crate::train::TrainConfig;
 use std::sync::Arc;
+
+/// Windows per batched-forward call during sweep evaluation: each chunk is
+/// one `apply_batch` traversal per (layer, projection).
+const EVAL_BATCH: usize = 32;
 
 /// One point of the storage-PPL plane (a marker in the paper's Fig 3).
 #[derive(Clone, Debug)]
@@ -101,7 +105,8 @@ fn eval_cell(
     threads: usize,
 ) -> SweepPoint {
     if method == Method::Dense {
-        let ppl = perplexity_parallel(windows, |toks| base.forward(toks), threads);
+        let ppl =
+            perplexity_parallel_batched(windows, EVAL_BATCH, |ws| base.forward_batch(ws), threads);
         let qkv_dense = base.cfg.qkv_params() * crate::hss::storage::VALUE_BYTES;
         return SweepPoint {
             method,
@@ -123,7 +128,8 @@ fn eval_cell(
     let t0 = std::time::Instant::now();
     let mut cm = CompressedModel::compress(base.clone(), method, cfg);
     let compress_secs = t0.elapsed().as_secs_f64();
-    let oneshot: PplResult = perplexity_parallel(windows, |toks| cm.forward(toks), threads);
+    let oneshot: PplResult =
+        perplexity_parallel_batched(windows, EVAL_BATCH, |ws| cm.forward_batch(ws), threads);
     // capture one-shot accounting before calibration touches the reports
     let mean_rel_error = cm.mean_rel_error();
     let (qkv_bytes, qkv_dense_bytes) = (cm.qkv_bytes(), cm.qkv_dense_bytes());
@@ -138,7 +144,12 @@ fn eval_cell(
                 tc,
             );
             let refine_secs = t1.elapsed().as_secs_f64();
-            let refined = perplexity_parallel(windows, |toks| cm.forward(toks), threads);
+            let refined = perplexity_parallel_batched(
+                windows,
+                EVAL_BATCH,
+                |ws| cm.forward_batch(ws),
+                threads,
+            );
             let steps = if cals.is_empty() {
                 0
             } else {

@@ -1,13 +1,22 @@
-//! HSS matrix-vector multiply — the paper's §4.4 inference operation.
+//! Blocked HSS apply — the paper's §4.4 inference operation, batched.
 //!
-//! `y = S x + Pᵀ([c0 x0 + U0(R0 x1); c1 x1 + U1(R1 x0)])` recursively.
-//! The workspace-based variant reuses per-level scratch buffers so the
-//! request-path apply performs no allocation after warmup.
+//! `Y = S X + Pᵀ([c0 X0 + U0(R0 X1); c1 X1 + U1(R1 X0)])` recursively, for
+//! a row-major column block X of k independent inputs. The tree is walked
+//! **once** per batch: leaves run one dense block-multiply, couplings two
+//! thin ones, and permutations move whole k-wide rows — so the weight
+//! bytes stream through cache once for k inputs instead of k times. The
+//! single-vector `matvec_with` is exactly the k = 1 case of the same
+//! traversal; there is no separate per-vector code path.
+//!
+//! The workspace-based variants reuse per-level scratch buffers (widened
+//! to the batch) so the request-path apply performs no allocation after
+//! warmup.
 
 use crate::hss::HssNode;
+use crate::linalg::Matrix;
 
 impl HssNode {
-    /// y = A x (allocating convenience wrapper).
+    /// y = A x (allocating convenience wrapper; the k = 1 batch).
     pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
         let mut ws = Workspace::for_node(self);
         let mut y = vec![0.0; self.n()];
@@ -15,18 +24,35 @@ impl HssNode {
         y
     }
 
-    /// y = A x using a reusable workspace (no allocation after warmup).
+    /// y = A x using a reusable workspace — the k = 1 case of
+    /// [`HssNode::apply_batch`] (no allocation after warmup).
     pub fn matvec_with(&self, x: &[f32], y: &mut [f32], ws: &mut Workspace) {
-        assert_eq!(x.len(), self.n());
-        assert_eq!(y.len(), self.n());
-        ws.ensure(self);
-        self.apply_rec(x, y, &mut ws.levels);
+        self.apply_batch_with(x, y, 1, ws);
     }
 
-    fn apply_rec(&self, x: &[f32], y: &mut [f32], levels: &mut [LevelBufs]) {
+    /// Y = A X for a row-major column block of k independent inputs
+    /// (X, Y of shape [n, k]; column c is input c). One tree walk serves
+    /// the whole batch.
+    pub fn apply_batch(&self, x: &Matrix, y: &mut Matrix, ws: &mut Workspace) {
+        assert_eq!(x.rows, self.n(), "input block has {} rows, tree n = {}", x.rows, self.n());
+        assert_eq!((y.rows, y.cols), (x.rows, x.cols), "output block shape mismatch");
+        self.apply_batch_with(&x.data, &mut y.data, x.cols, ws);
+    }
+
+    /// Slice form of [`HssNode::apply_batch`]: `x`/`y` are length n·k
+    /// row-major [n, k] blocks. This is the only traversal implementation.
+    pub fn apply_batch_with(&self, x: &[f32], y: &mut [f32], k: usize, ws: &mut Workspace) {
+        assert!(k > 0, "empty batch");
+        assert_eq!(x.len(), self.n() * k);
+        assert_eq!(y.len(), self.n() * k);
+        ws.ensure(self, k);
+        self.apply_rec(x, y, k, &mut ws.levels);
+    }
+
+    fn apply_rec(&self, x: &[f32], y: &mut [f32], k: usize, levels: &mut [LevelBufs]) {
         match self {
             HssNode::Leaf { d } => {
-                d.matvec_into(x, y);
+                d.apply_batch_into(x, y, k);
             }
             HssNode::Branch {
                 n,
@@ -43,52 +69,45 @@ impl HssNode {
                 let (buf, rest) = levels
                     .split_first_mut()
                     .expect("workspace depth too small");
-                let xp = &mut buf.xp[..*n];
-                let yp = &mut buf.yp[..*n];
+                let xp = &mut buf.xp[..n * k];
+                let yp = &mut buf.yp[..n * k];
                 let t = &mut buf.t[..];
 
-                // (2) permute input down: xp = x[perm]
-                perm.apply_into(x, xp);
+                // (2) permute input down: xp.row(i) = x.row(perm[i])
+                perm.apply_cols_into(x, xp, k);
 
                 // (3) recurse into diagonal blocks of the permuted residual
-                let (x0, x1) = xp.split_at(n0);
-                let (y0, y1) = yp.split_at_mut(n0);
-                c0.apply_rec(x0, y0, rest);
-                c1.apply_rec(x1, y1, rest);
+                // (row ranges of a row-major block are contiguous, so the
+                // batch splits at the node boundary without copying)
+                let (x0, x1) = xp.split_at(n0 * k);
+                let (y0, y1) = yp.split_at_mut(n0 * k);
+                c0.apply_rec(x0, y0, k, rest);
+                c1.apply_rec(x1, y1, k, rest);
 
-                // couplings: y0 += U0 (R0 x1), y1 += U1 (R1 x0)
-                let t0 = &mut t[..r0.rows];
-                r0.matvec_into(x1, t0);
-                u0.matvec_add(t0, y0);
-                let t1 = &mut t[..r1.rows];
-                r1.matvec_into(x0, t1);
-                u1.matvec_add(t1, y1);
+                // couplings: Y0 += U0 (R0 X1), Y1 += U1 (R1 X0)
+                let t0 = &mut t[..r0.rows * k];
+                r0.apply_batch_into(x1, t0, k);
+                u0.apply_batch_add(t0, y0, k);
+                let t1 = &mut t[..r1.rows * k];
+                r1.apply_batch_into(x0, t1, k);
+                u1.apply_batch_add(t1, y1, k);
 
-                // (4) inverse-permute up: y[perm[i]] = yp[i]
-                perm.apply_inv_into(yp, y);
+                // (4) inverse-permute up: y.row(perm[i]) = yp.row(i)
+                perm.apply_inv_cols_into(yp, y, k);
 
                 // (1)+(5) add the spike contribution in original coordinates
-                sparse.matvec_add(x, y);
+                sparse.spmm_add(x, y, k);
             }
         }
     }
 
-    /// Y = A·X column-wise for a batch of input columns (eval batching).
-    pub fn matmat(&self, x_cols: &[Vec<f32>]) -> Vec<Vec<f32>> {
-        let mut ws = Workspace::for_node(self);
-        x_cols
-            .iter()
-            .map(|x| {
-                let mut y = vec![0.0; self.n()];
-                self.matvec_with(x, &mut y, &mut ws);
-                y
-            })
-            .collect()
-    }
 }
 
 /// Per-level scratch buffers; level `i` serves all nodes at depth `i`
 /// (siblings run sequentially, so one buffer set per level suffices).
+/// Buffers are sized n·k / rank·k for the widest batch seen so far and
+/// grow on demand — a k = 1 workspace warmed on the request path widens
+/// once when the first batch arrives, then stays allocation-free.
 #[derive(Default)]
 pub struct Workspace {
     levels: Vec<LevelBufs>,
@@ -101,31 +120,37 @@ struct LevelBufs {
 }
 
 impl Workspace {
+    /// Workspace sized for single-vector applies over `node`.
     pub fn for_node(node: &HssNode) -> Workspace {
+        Workspace::for_node_batch(node, 1)
+    }
+
+    /// Workspace pre-sized for batches of `k` columns over `node`.
+    pub fn for_node_batch(node: &HssNode, k: usize) -> Workspace {
         let mut ws = Workspace::default();
-        ws.ensure(node);
+        ws.ensure(node, k);
         ws
     }
 
-    /// Grow buffers to fit `node` (idempotent).
-    pub fn ensure(&mut self, node: &HssNode) {
+    /// Grow buffers to fit `node` at batch width `k` (idempotent).
+    pub fn ensure(&mut self, node: &HssNode, k: usize) {
         let mut dims: Vec<(usize, usize)> = Vec::new(); // (n, max coupling rank) per level
         collect_dims(node, 0, &mut dims);
-        for (lvl, (n, k)) in dims.into_iter().enumerate() {
+        for (lvl, (n, r)) in dims.into_iter().enumerate() {
             if self.levels.len() <= lvl {
                 self.levels.push(LevelBufs {
-                    xp: vec![0.0; n],
-                    yp: vec![0.0; n],
-                    t: vec![0.0; k],
+                    xp: vec![0.0; n * k],
+                    yp: vec![0.0; n * k],
+                    t: vec![0.0; r * k],
                 });
             } else {
                 let b = &mut self.levels[lvl];
-                if b.xp.len() < n {
-                    b.xp.resize(n, 0.0);
-                    b.yp.resize(n, 0.0);
+                if b.xp.len() < n * k {
+                    b.xp.resize(n * k, 0.0);
+                    b.yp.resize(n * k, 0.0);
                 }
-                if b.t.len() < k {
-                    b.t.resize(k, 0.0);
+                if b.t.len() < r * k {
+                    b.t.resize(r * k, 0.0);
                 }
             }
         }
@@ -189,6 +214,54 @@ mod tests {
     }
 
     #[test]
+    fn apply_batch_equals_per_column_matvec() {
+        // includes a permuted depth-3 tree and the k = 1 degenerate case
+        check(10, |rng| {
+            let n = 32 + 16 * rng.below(3);
+            let a = trained_like(n, rng.next_u64());
+            let node = build(&a, &opts(8, 0.1, 3, true));
+            let k = 1 + rng.below(8);
+            let mut x = Matrix::zeros(n, k);
+            for v in x.data.iter_mut() {
+                *v = rng.gaussian_f32();
+            }
+            let mut y = Matrix::zeros(n, k);
+            let mut ws = Workspace::for_node_batch(&node, k);
+            node.apply_batch(&x, &mut y, &mut ws);
+            for c in 0..k {
+                let expect = node.matvec(&x.col(c));
+                slices_close(&y.col(c), &expect, 1e-5, 1e-5, "batch col")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn workspace_widens_from_single_vector_use() {
+        // warm a workspace at k=1, then push a batch through it — ensure()
+        // must widen the level buffers instead of slicing out of bounds
+        let a = trained_like(64, 21);
+        let node = build(&a, &opts(8, 0.1, 3, true));
+        let mut ws = Workspace::for_node(&node);
+        let x: Vec<f32> = (0..64).map(|i| (i as f32).sin()).collect();
+        let mut y = vec![0.0; 64];
+        node.matvec_with(&x, &mut y, &mut ws);
+        let k = 5;
+        let mut xb = Matrix::zeros(64, k);
+        for c in 0..k {
+            for i in 0..64 {
+                xb.set(i, c, x[i]);
+            }
+        }
+        let mut yb = Matrix::zeros(64, k);
+        node.apply_batch(&xb, &mut yb, &mut ws);
+        for c in 0..k {
+            let got: Vec<f32> = (0..64).map(|i| yb.at(i, c)).collect();
+            slices_close(&got, &y, 1e-6, 1e-6, "widened col").unwrap();
+        }
+    }
+
+    #[test]
     fn workspace_reuse_is_consistent() {
         let a = trained_like(64, 9);
         let node = build(&a, &opts(8, 0.1, 3, true));
@@ -230,17 +303,4 @@ mod tests {
         slices_close(&ysum, &expect, 1e-4, 1e-4, "linearity").unwrap();
     }
 
-    #[test]
-    fn matmat_matches_column_matvecs() {
-        let a = trained_like(32, 12);
-        let node = build(&a, &opts(6, 0.1, 2, true));
-        let mut rng = Rng::new(3);
-        let cols: Vec<Vec<f32>> = (0..4)
-            .map(|_| (0..32).map(|_| rng.gaussian_f32()).collect())
-            .collect();
-        let ys = node.matmat(&cols);
-        for (x, y) in cols.iter().zip(&ys) {
-            assert_eq!(&node.matvec(x), y);
-        }
-    }
 }

@@ -52,6 +52,29 @@ impl Matrix {
         Matrix::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
     }
 
+    /// Build a row-major [n, k] column block from k equal-length column
+    /// vectors (column c of the result is `cols[c]`) — the batch layout
+    /// `apply_batch` consumes.
+    pub fn from_cols(cols: &[Vec<f32>]) -> Matrix {
+        let k = cols.len();
+        assert!(k > 0, "from_cols needs at least one column");
+        let n = cols[0].len();
+        let mut m = Matrix::zeros(n, k);
+        for (c, col) in cols.iter().enumerate() {
+            assert_eq!(col.len(), n, "ragged column lengths");
+            for (i, &v) in col.iter().enumerate() {
+                m.data[i * k + c] = v;
+            }
+        }
+        m
+    }
+
+    /// Copy column `c` out into a vector (the inverse of [`Matrix::from_cols`]).
+    pub fn col(&self, c: usize) -> Vec<f32> {
+        assert!(c < self.cols, "column out of range");
+        (0..self.rows).map(|i| self.data[i * self.cols + c]).collect()
+    }
+
     /// Standard-Gaussian random matrix (deterministic by seed).
     pub fn randn(rows: usize, cols: usize, seed: u64) -> Matrix {
         let mut rng = Rng::new(seed);
@@ -169,21 +192,16 @@ impl Matrix {
     pub fn matmul_bt_into(&self, bt: &Matrix, c: &mut Matrix) {
         assert_eq!(self.cols, bt.cols, "inner dim mismatch");
         assert_eq!((c.rows, c.cols), (self.rows, bt.rows));
-        let k = self.cols;
-        for ib in (0..self.rows).step_by(MC) {
-            let imax = (ib + MC).min(self.rows);
-            for jb in (0..bt.rows).step_by(NC) {
-                let jmax = (jb + NC).min(bt.rows);
-                for i in ib..imax {
-                    let arow = self.row(i);
-                    let crow = c.row_mut(i);
-                    for j in jb..jmax {
-                        let brow = bt.row(j);
-                        crow[j] = dot(arow, brow, k);
-                    }
-                }
-            }
-        }
+        c.data.fill(0.0);
+        gemm_nt_add(&self.data, &bt.data, self.rows, bt.rows, self.cols, &mut c.data);
+    }
+
+    /// C += A @ Bᵀ given B already transposed — the accumulating form the
+    /// batched gradient kernel reduces every rank-k factor update to.
+    pub fn matmul_bt_add(&self, bt: &Matrix, c: &mut Matrix) {
+        assert_eq!(self.cols, bt.cols, "inner dim mismatch");
+        assert_eq!((c.rows, c.cols), (self.rows, bt.rows));
+        gemm_nt_add(&self.data, &bt.data, self.rows, bt.rows, self.cols, &mut c.data);
     }
 
     /// y = A @ x (allocates y).
@@ -235,6 +253,97 @@ impl Matrix {
         }
     }
 
+    // --- batched column-block apply ----------------------------------------
+    //
+    // The batched hot path works on row-major column blocks: a block of k
+    // independent input vectors is one `&[f32]` of length n·k where column
+    // c of input row j lives at `x[j*k + c]` (i.e. a row-major [n, k]
+    // matrix whose columns are the batch). Row ranges of such a block are
+    // contiguous, which is what lets the HSS traversal split a batch at a
+    // node boundary without copying.
+
+    /// Y += A @ X for a row-major column block X [cols, k] → Y [rows, k].
+    /// The k=1 case degenerates to the dot-kernel matvec; for k > 1 the
+    /// inner loop is a 4-way-unrolled axpy over the contiguous k lane,
+    /// with X kept hot in cache by blocking over A's columns.
+    pub fn apply_batch_add(&self, x: &[f32], y: &mut [f32], k: usize) {
+        assert_eq!(x.len(), self.cols * k, "input block shape mismatch");
+        assert_eq!(y.len(), self.rows * k, "output block shape mismatch");
+        if k == 1 {
+            for i in 0..self.rows {
+                y[i] += dot(self.row(i), x, self.cols);
+            }
+            return;
+        }
+        for jb in (0..self.cols).step_by(NC) {
+            let jmax = (jb + NC).min(self.cols);
+            for i in 0..self.rows {
+                let arow = self.row(i);
+                let yrow = &mut y[i * k..(i + 1) * k];
+                let mut j = jb;
+                while j + 4 <= jmax {
+                    let (a0, a1, a2, a3) = (arow[j], arow[j + 1], arow[j + 2], arow[j + 3]);
+                    let x0 = &x[j * k..(j + 1) * k];
+                    let x1 = &x[(j + 1) * k..(j + 2) * k];
+                    let x2 = &x[(j + 2) * k..(j + 3) * k];
+                    let x3 = &x[(j + 3) * k..(j + 4) * k];
+                    for c in 0..k {
+                        yrow[c] += a0 * x0[c] + a1 * x1[c] + a2 * x2[c] + a3 * x3[c];
+                    }
+                    j += 4;
+                }
+                while j < jmax {
+                    let aij = arow[j];
+                    let xrow = &x[j * k..(j + 1) * k];
+                    for c in 0..k {
+                        yrow[c] += aij * xrow[c];
+                    }
+                    j += 1;
+                }
+            }
+        }
+    }
+
+    /// Y = A @ X for a row-major column block (overwrites Y).
+    pub fn apply_batch_into(&self, x: &[f32], y: &mut [f32], k: usize) {
+        assert_eq!(y.len(), self.rows * k, "output block shape mismatch");
+        if k == 1 {
+            self.matvec_into(x, y);
+            return;
+        }
+        y.fill(0.0);
+        self.apply_batch_add(x, y, k);
+    }
+
+    /// Y = Aᵀ @ X for a row-major column block X [rows, k] → Y [cols, k],
+    /// without materializing the transpose (overwrites Y). Blocked over
+    /// A's columns so the written Y rows stay cache-resident.
+    pub fn apply_batch_t_into(&self, x: &[f32], y: &mut [f32], k: usize) {
+        assert_eq!(x.len(), self.rows * k, "input block shape mismatch");
+        assert_eq!(y.len(), self.cols * k, "output block shape mismatch");
+        if k == 1 {
+            self.matvec_t_into(x, y);
+            return;
+        }
+        y.fill(0.0);
+        for jb in (0..self.cols).step_by(NC) {
+            let jmax = (jb + NC).min(self.cols);
+            for i in 0..self.rows {
+                let arow = &self.row(i)[jb..jmax];
+                let xrow = &x[i * k..(i + 1) * k];
+                for (jo, &aij) in arow.iter().enumerate() {
+                    if aij == 0.0 {
+                        continue;
+                    }
+                    let yrow = &mut y[(jb + jo) * k..(jb + jo + 1) * k];
+                    for c in 0..k {
+                        yrow[c] += aij * xrow[c];
+                    }
+                }
+            }
+        }
+    }
+
     /// Symmetric permutation A[p, p] (rows and columns).
     pub fn permute_sym(&self, perm: &[usize]) -> Matrix {
         assert!(self.is_square());
@@ -249,6 +358,28 @@ impl Matrix {
             }
         }
         out
+    }
+}
+
+/// OUT[m, n] += A[m, k] @ B[n, k]ᵀ over raw row-major slices — the shared
+/// rank-k update kernel behind `matmul_bt_into`/`matmul_bt_add` and every
+/// batched factor gradient (k = 1 is the classic outer-product update).
+pub fn gemm_nt_add(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "gemm_nt_add: A shape mismatch");
+    assert_eq!(b.len(), n * k, "gemm_nt_add: B shape mismatch");
+    assert_eq!(out.len(), m * n, "gemm_nt_add: OUT shape mismatch");
+    for ib in (0..m).step_by(MC) {
+        let imax = (ib + MC).min(m);
+        for jb in (0..n).step_by(NC) {
+            let jmax = (jb + NC).min(n);
+            for i in ib..imax {
+                let arow = &a[i * k..(i + 1) * k];
+                let orow = &mut out[i * n..(i + 1) * n];
+                for j in jb..jmax {
+                    orow[j] += dot(arow, &b[j * k..(j + 1) * k], k);
+                }
+            }
+        }
     }
 }
 
@@ -388,6 +519,85 @@ mod tests {
             let rhs = a.matvec(&b.matvec(&x));
             slices_close(&lhs, &rhs, 1e-3, 1e-3, "assoc")
         });
+    }
+
+    #[test]
+    fn from_cols_col_roundtrip() {
+        let xs: Vec<Vec<f32>> = vec![vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]];
+        let m = Matrix::from_cols(&xs);
+        assert_eq!((m.rows, m.cols), (3, 2));
+        assert_eq!(m.at(0, 1), 4.0);
+        assert_eq!(m.col(0), xs[0]);
+        assert_eq!(m.col(1), xs[1]);
+    }
+
+    #[test]
+    fn apply_batch_matches_per_column_matvec() {
+        check(10, |rng| {
+            let rows = 3 + rng.below(40);
+            let cols = 3 + rng.below(40);
+            let k = 1 + rng.below(9);
+            let a = Matrix::randn(rows, cols, rng.next_u64());
+            let xs: Vec<Vec<f32>> = (0..k)
+                .map(|_| (0..cols).map(|_| rng.gaussian_f32()).collect())
+                .collect();
+            let x = Matrix::from_cols(&xs);
+            let mut y = vec![7.0f32; rows * k]; // stale buffer must be overwritten
+            a.apply_batch_into(&x.data, &mut y, k);
+            for (c, xc) in xs.iter().enumerate() {
+                let expect = a.matvec(xc);
+                let got: Vec<f32> = (0..rows).map(|i| y[i * k + c]).collect();
+                slices_close(&got, &expect, 1e-4, 1e-4, "apply_batch col")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn apply_batch_t_matches_per_column_matvec_t() {
+        check(10, |rng| {
+            let rows = 3 + rng.below(30);
+            let cols = 3 + rng.below(30);
+            let k = 1 + rng.below(7);
+            let a = Matrix::randn(rows, cols, rng.next_u64());
+            let xs: Vec<Vec<f32>> = (0..k)
+                .map(|_| (0..rows).map(|_| rng.gaussian_f32()).collect())
+                .collect();
+            let x = Matrix::from_cols(&xs);
+            let mut y = vec![3.0f32; cols * k];
+            a.apply_batch_t_into(&x.data, &mut y, k);
+            for (c, xc) in xs.iter().enumerate() {
+                let expect = a.matvec_t(xc);
+                let got: Vec<f32> = (0..cols).map(|j| y[j * k + c]).collect();
+                slices_close(&got, &expect, 1e-4, 1e-4, "apply_batch_t col")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gemm_nt_add_matches_matmul_and_accumulates() {
+        let a = Matrix::randn(9, 5, 21);
+        let b = Matrix::randn(7, 5, 22);
+        let expect = a.matmul(&b.transpose());
+        let mut out = vec![1.0f32; 9 * 7];
+        gemm_nt_add(&a.data, &b.data, 9, 7, 5, &mut out);
+        for (o, e) in out.iter().zip(&expect.data) {
+            assert!((o - (e + 1.0)).abs() < 1e-4, "{o} vs {}", e + 1.0);
+        }
+    }
+
+    #[test]
+    fn matmul_bt_add_accumulates() {
+        let a = Matrix::randn(6, 4, 23);
+        let bt = Matrix::randn(5, 4, 24);
+        let mut c1 = Matrix::zeros(6, 5);
+        a.matmul_bt_into(&bt, &mut c1);
+        let mut c2 = c1.clone();
+        a.matmul_bt_add(&bt, &mut c2);
+        for (x, y) in c2.data.iter().zip(&c1.data) {
+            assert!((x - 2.0 * y).abs() < 1e-4);
+        }
     }
 
     #[test]

@@ -85,6 +85,30 @@ impl Permutation {
         }
     }
 
+    /// Row-gather over a row-major column block: `Y.row(i) = X.row(p[i])`
+    /// for X, Y of shape [n, k] stored as length-n·k slices — the batched
+    /// form of [`Permutation::apply_into`] the blocked HSS traversal uses
+    /// to permute all k batch columns in one pass.
+    pub fn apply_cols_into<T: Copy>(&self, x: &[T], y: &mut [T], k: usize) {
+        let n = self.p.len();
+        assert_eq!(x.len(), n * k, "input block shape mismatch");
+        assert_eq!(y.len(), n * k, "output block shape mismatch");
+        for (i, &src) in self.p.iter().enumerate() {
+            y[i * k..(i + 1) * k].copy_from_slice(&x[src * k..(src + 1) * k]);
+        }
+    }
+
+    /// Row-scatter over a row-major column block: `Y.row(p[i]) = X.row(i)`
+    /// — the batched form of [`Permutation::apply_inv_into`].
+    pub fn apply_inv_cols_into<T: Copy>(&self, x: &[T], y: &mut [T], k: usize) {
+        let n = self.p.len();
+        assert_eq!(x.len(), n * k, "input block shape mismatch");
+        assert_eq!(y.len(), n * k, "output block shape mismatch");
+        for (i, &dst) in self.p.iter().enumerate() {
+            y[dst * k..(dst + 1) * k].copy_from_slice(&x[i * k..(i + 1) * k]);
+        }
+    }
+
     /// Compose: (self ∘ other)(x) == self.apply(other.apply(x)).
     pub fn compose(&self, other: &Permutation) -> Permutation {
         assert_eq!(self.len(), other.len());
@@ -150,6 +174,35 @@ mod tests {
             } else {
                 Err("compose mismatch".into())
             }
+        });
+    }
+
+    #[test]
+    fn cols_roundtrip_and_match_per_column_apply() {
+        check(20, |rng| {
+            let n = 1 + rng.below(32);
+            let k = 1 + rng.below(8);
+            let p = random_perm(rng, n);
+            let x: Vec<f32> = (0..n * k).map(|i| i as f32).collect();
+            let mut shuffled = vec![0.0f32; n * k];
+            p.apply_cols_into(&x, &mut shuffled, k);
+            // column c of the block permutes exactly like a lone vector
+            for c in 0..k {
+                let col: Vec<f32> = (0..n).map(|i| x[i * k + c]).collect();
+                let expect = p.apply(&col);
+                for i in 0..n {
+                    if shuffled[i * k + c] != expect[i] {
+                        return Err(format!("apply_cols[{i},{c}] mismatch"));
+                    }
+                }
+            }
+            // scatter undoes gather: apply_inv_cols(apply_cols(x)) == x
+            let mut back = vec![0.0f32; n * k];
+            p.apply_inv_cols_into(&shuffled, &mut back, k);
+            if back != x {
+                return Err("apply_inv_cols(apply_cols(x)) != x".into());
+            }
+            Ok(())
         });
     }
 

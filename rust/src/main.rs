@@ -40,7 +40,9 @@ COMMANDS:
                                 dense teacher (layer-wise calibration) and
                                 persist the refined model as a store variant
       --method shss-rcm --steps 200 --lr 0.01 --batch 16
-      [--optimizer adam|sgd] [--windows 8] [--rank 32 --sparsity 0.3
+      [--optimizer adam|sgd] [--windows 8] [--threads N]  (N parallel
+      per-projection calibrations; 0 = all cores)
+      [--rank 32 --sparsity 0.3
       --depth 3] [--store store] [--variant <method>-ft]
       [--synthetic [--tiny]]  (random base model; --tiny shrinks it for
       smoke tests)
@@ -299,6 +301,8 @@ fn train_cfg_from_args(args: &Args, steps: usize) -> Result<TrainConfig> {
         eval_every: args.get_usize("eval-every", d.eval_every),
         patience: args.get_usize("patience", d.patience),
         seed: args.get_usize("train-seed", d.seed as usize) as u64,
+        // fan the independent per-projection calibrations across threads
+        threads: args.get_usize("threads", d.threads),
         ..d
     })
 }

@@ -110,6 +110,13 @@ impl CompressedModel {
         self.base.forward_with(tokens, self)
     }
 
+    /// Batched forward: logits per window, with each compressed q/k/v
+    /// projection applied to the whole batch in **one**
+    /// [`CompressedMatrix::apply_batch`] traversal per (layer, projection).
+    pub fn forward_batch(&self, windows: &[&[u32]]) -> Vec<Matrix> {
+        self.base.forward_batch_with(windows, self)
+    }
+
     /// Storage of the compressed q/k/v subset at fp16, paper-style (stored
     /// values only; index overhead reported separately by `qkv_raw_bytes`).
     pub fn qkv_bytes(&self) -> usize {
@@ -141,6 +148,14 @@ impl CompressedModel {
     }
 }
 
+thread_local! {
+    /// Per-thread apply scratch for the serving projector: `ensure` only
+    /// ever grows it, so one workspace serves every layer's q/k/v (and
+    /// every model on this thread) with no allocation after warmup.
+    static PROJECT_WS: std::cell::RefCell<crate::compress::BatchWorkspace> =
+        std::cell::RefCell::new(crate::compress::BatchWorkspace::default());
+}
+
 impl QkvProjector for CompressedModel {
     fn project(&self, layer: usize, which: Proj, a: &Matrix) -> Matrix {
         let c = match which {
@@ -148,16 +163,17 @@ impl QkvProjector for CompressedModel {
             Proj::K => &self.qkv[layer][1],
             Proj::V => &self.qkv[layer][2],
         };
-        // c stores A = Wᵀ so each output row is A · a_row; one scratch
-        // vector reused across rows (no allocation in the token loop)
-        let mut out = Matrix::zeros(a.rows, a.cols);
-        let mut ws = c.workspace();
-        let mut y = vec![0.0; a.cols];
-        for i in 0..a.rows {
-            c.matvec_with(a.row(i), &mut y, &mut ws);
-            out.row_mut(i).copy_from_slice(&y);
+        if a.rows == 0 {
+            return Matrix::zeros(0, a.cols);
         }
-        out
+        // c stores A = Wᵀ so Outᵀ = A · aᵀ: transpose the activations into
+        // a column block and run ONE batched traversal for all rows of `a`
+        // (every token of every stacked window at once), instead of one
+        // tree walk / spmv per token
+        let xt = a.transpose();
+        let mut yt = Matrix::zeros(a.cols, a.rows);
+        PROJECT_WS.with(|ws| c.apply_batch(&xt, &mut yt, &mut ws.borrow_mut()));
+        yt.transpose()
     }
 }
 

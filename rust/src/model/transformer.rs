@@ -145,9 +145,23 @@ impl Transformer {
         out
     }
 
-    /// Logits [t, vocab] for one token window, with the given projector.
+    /// Logits [t, vocab] for one token window, with the given projector —
+    /// the batch-of-one case of [`Transformer::forward_batch_with`].
     pub fn forward_with<P: QkvProjector>(&self, tokens: &[u32], proj: &P) -> Matrix {
-        self.forward_inner(tokens, proj, None)
+        self.forward_batch_with(&[tokens], proj)
+            .pop()
+            .expect("one window in, one logits matrix out")
+    }
+
+    /// Batched forward: logits per window, with every q/k/v projection
+    /// applied to the **whole batch at once**. The windows' activations
+    /// are stacked into one tall [Σt, d] block, so a compressed projector
+    /// traverses its sparse-plus-low-rank structure once per (layer,
+    /// projection) for the entire batch instead of once per window (or,
+    /// pre-batching, once per token). Only causal attention — inherently
+    /// per-window — loops over row ranges.
+    pub fn forward_batch_with<P: QkvProjector>(&self, windows: &[&[u32]], proj: &P) -> Vec<Matrix> {
+        self.forward_batch_inner(windows, proj, None)
     }
 
     /// Calibration inputs for the q/k/v projections: the post-ln1
@@ -156,9 +170,16 @@ impl Transformer {
     /// is the data side of the layer-wise reconstruction objective
     /// ‖W x − Ŵ x‖² that `train::calibrate` minimises.
     pub fn qkv_inputs(&self, tokens: &[u32]) -> Vec<Matrix> {
+        self.qkv_inputs_batch(&[tokens])
+    }
+
+    /// Batched capture: one tall [Σt, d] post-ln1 matrix per layer for
+    /// many windows at once (rows window-major), driving the whole
+    /// capture pass through the batched kernels.
+    pub fn qkv_inputs_batch(&self, windows: &[&[u32]]) -> Vec<Matrix> {
         let mut cap = Vec::with_capacity(self.cfg.n_layers);
-        let _ = self.forward_inner(
-            tokens,
+        let _ = self.forward_batch_inner(
+            windows,
             &DenseProjector {
                 layers: &self.layers,
             },
@@ -167,25 +188,32 @@ impl Transformer {
         cap
     }
 
-    fn forward_inner<P: QkvProjector>(
+    fn forward_batch_inner<P: QkvProjector>(
         &self,
-        tokens: &[u32],
+        windows: &[&[u32]],
         proj: &P,
         mut capture: Option<&mut Vec<Matrix>>,
-    ) -> Matrix {
-        let t = tokens.len();
+    ) -> Vec<Matrix> {
         let d = self.cfg.d_model;
-        assert!(t <= self.cfg.seq_len, "window longer than seq_len");
+        let ts: Vec<usize> = windows.iter().map(|w| w.len()).collect();
+        for &t in &ts {
+            assert!(t <= self.cfg.seq_len, "window longer than seq_len");
+        }
+        let total: usize = ts.iter().sum();
 
-        // embeddings
-        let mut h = Matrix::zeros(t, d);
-        for (i, &tok) in tokens.iter().enumerate() {
-            let te = self.tok_emb.row(tok as usize);
-            let pe = self.pos_emb.row(i);
-            let row = h.row_mut(i);
-            for j in 0..d {
-                row[j] = te[j] + pe[j];
+        // embeddings, windows stacked row-major (window-major order)
+        let mut h = Matrix::zeros(total, d);
+        let mut off = 0;
+        for (w, &t) in windows.iter().zip(&ts) {
+            for (i, &tok) in w.iter().enumerate() {
+                let te = self.tok_emb.row(tok as usize);
+                let pe = self.pos_emb.row(i);
+                let row = h.row_mut(off + i);
+                for j in 0..d {
+                    row[j] = te[j] + pe[j];
+                }
             }
+            off += t;
         }
 
         for (li, l) in self.layers.iter().enumerate() {
@@ -197,24 +225,34 @@ impl Transformer {
                     break; // nothing downstream of the last capture is read
                 }
             }
+            // one batched projection per q/k/v across every window
             let q = proj.project(li, Proj::Q, &a);
             let k = proj.project(li, Proj::K, &a);
             let v = proj.project(li, Proj::V, &a);
-            let o = causal_mha(&q, &k, &v, self.cfg.n_heads);
+            // causal attention never crosses a window boundary
+            let mut o = Matrix::zeros(total, d);
+            let mut off = 0;
+            for &t in &ts {
+                let qs = q.slice(off, off + t, 0, d);
+                let ks = k.slice(off, off + t, 0, d);
+                let vs = v.slice(off, off + t, 0, d);
+                o.set_block(off, 0, &causal_mha(&qs, &ks, &vs, self.cfg.n_heads));
+                off += t;
+            }
             let oh = o.matmul(&l.wo);
             h = h.add(&oh);
 
-            // mlp block
+            // mlp block (row-wise, so the stack batches it for free)
             let m = layernorm(&h, &l.ln2_g, &l.ln2_b);
             let mut ff = m.matmul(&l.w1);
-            for i in 0..t {
+            for i in 0..total {
                 let row = ff.row_mut(i);
                 for (x, b) in row.iter_mut().zip(&l.b1) {
                     *x = gelu(*x + *b);
                 }
             }
             let mut ff2 = ff.matmul(&l.w2);
-            for i in 0..t {
+            for i in 0..total {
                 let row = ff2.row_mut(i);
                 for (x, b) in row.iter_mut().zip(&l.b2) {
                     *x += *b;
@@ -227,20 +265,38 @@ impl Transformer {
         // final layernorm and the unembedding matmul (the largest matmul
         // in the pass at a realistic vocab) when nobody reads the logits
         if capture.is_some() {
-            return Matrix::zeros(0, 0);
+            return Vec::new();
         }
 
         let hf = layernorm(&h, &self.lnf_g, &self.lnf_b);
         // tied output head: logits = hf @ tok_embᵀ
-        let mut logits = Matrix::zeros(t, self.cfg.vocab);
+        let mut logits = Matrix::zeros(total, self.cfg.vocab);
         hf.matmul_bt_into(&self.tok_emb, &mut logits);
-        logits
+        // split back into per-window logits
+        let mut out = Vec::with_capacity(windows.len());
+        let mut off = 0;
+        for &t in &ts {
+            out.push(logits.slice(off, off + t, 0, self.cfg.vocab));
+            off += t;
+        }
+        out
     }
 
     /// Dense forward (original weights).
     pub fn forward(&self, tokens: &[u32]) -> Matrix {
         self.forward_with(
             tokens,
+            &DenseProjector {
+                layers: &self.layers,
+            },
+        )
+    }
+
+    /// Dense batched forward: logits per window, one batched projection
+    /// per layer across all windows.
+    pub fn forward_batch(&self, windows: &[&[u32]]) -> Vec<Matrix> {
+        self.forward_batch_with(
+            windows,
             &DenseProjector {
                 layers: &self.layers,
             },
@@ -419,6 +475,40 @@ mod tests {
         }
         let expect = layernorm(&h, &m.layers[0].ln1_g, &m.layers[0].ln1_b);
         assert_eq!(caps[0].data, expect.data);
+    }
+
+    #[test]
+    fn forward_batch_matches_per_window_forward() {
+        let m = Transformer::random(tiny_cfg(), 9);
+        // mixed lengths exercise the boundary bookkeeping
+        let w1: Vec<u32> = (0..16).map(|i| (i * 3) % 64).collect();
+        let w2: Vec<u32> = (0..9).map(|i| (i * 7 + 1) % 64).collect();
+        let w3: Vec<u32> = (0..13).map(|i| (i * 11 + 2) % 64).collect();
+        let batch = m.forward_batch(&[&w1, &w2, &w3]);
+        assert_eq!(batch.len(), 3);
+        for (w, lg) in [&w1, &w2, &w3].iter().zip(&batch) {
+            let solo = m.forward(w);
+            assert_eq!((lg.rows, lg.cols), (solo.rows, solo.cols));
+            for (a, b) in lg.data.iter().zip(&solo.data) {
+                assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn qkv_inputs_batch_stacks_window_major() {
+        let m = Transformer::random(tiny_cfg(), 10);
+        let w1: Vec<u32> = (0..8).map(|i| i % 64).collect();
+        let w2: Vec<u32> = (0..6).map(|i| (i * 5) % 64).collect();
+        let tall = m.qkv_inputs_batch(&[&w1, &w2]);
+        assert_eq!(tall.len(), 2);
+        let c1 = m.qkv_inputs(&w1);
+        let c2 = m.qkv_inputs(&w2);
+        for layer in 0..2 {
+            assert_eq!((tall[layer].rows, tall[layer].cols), (14, 32));
+            assert_eq!(tall[layer].slice(0, 8, 0, 32).data, c1[layer].data);
+            assert_eq!(tall[layer].slice(8, 14, 0, 32).data, c2[layer].data);
+        }
     }
 
     #[test]

@@ -125,22 +125,55 @@ impl Csr {
         }
     }
 
-    /// Value gradients with a frozen sparsity pattern: for the loss
-    /// L = ½‖y − t‖² with y = S x + …, the gradient of the k-th stored
-    /// value (row i, column indices[k]) is g[i]·x[indices[k]], where
-    /// g = ∂L/∂y. Accumulates into `out` (one slot per stored value, CSR
-    /// order) — the sparse half of the training backward pass.
-    pub fn value_grads_add(&self, x: &[f32], g: &[f32], out: &mut [f32]) {
-        assert_eq!(x.len(), self.cols);
-        assert_eq!(g.len(), self.rows);
+    /// Y += S @ X for a row-major column block X [cols, k] → Y [rows, k]
+    /// — the SpMM the batched apply engine runs. Each stored value becomes
+    /// one contiguous k-wide axpy (the gather jumps rows of X, but every
+    /// gathered row is k consecutive floats); the column loop is blocked
+    /// so a wide batch never thrashes the X working set.
+    pub fn spmm_add(&self, x: &[f32], y: &mut [f32], k: usize) {
+        assert_eq!(x.len(), self.cols * k, "input block shape mismatch");
+        assert_eq!(y.len(), self.rows * k, "output block shape mismatch");
+        if k == 1 {
+            return self.matvec_add(x, y);
+        }
+        const CB: usize = 128; // column block (floats per lane pass)
+        for cb in (0..k).step_by(CB) {
+            let cw = CB.min(k - cb);
+            for i in 0..self.rows {
+                let lo = self.indptr[i] as usize;
+                let hi = self.indptr[i + 1] as usize;
+                if lo == hi {
+                    continue;
+                }
+                let yrow = &mut y[i * k + cb..i * k + cb + cw];
+                for (j, v) in self.indices[lo..hi].iter().zip(&self.data[lo..hi]) {
+                    let xrow = &x[*j as usize * k + cb..*j as usize * k + cb + cw];
+                    for (yc, &xc) in yrow.iter_mut().zip(xrow) {
+                        *yc += v * xc;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Value gradients with a frozen sparsity pattern, batched: for the
+    /// loss L = ½‖Y − T‖² with Y = S X + …, the gradient of the stored
+    /// value at (row i, column j) is Σ_c G[i,c]·X[j,c] — a k-wide dot over
+    /// the row-major column blocks X [cols, k] and G [rows, k]. Accumulates
+    /// into `out` (one slot per stored value, CSR order); k = 1 is the
+    /// per-sample gradient g[i]·x[j].
+    pub fn value_grads_add(&self, x: &[f32], g: &[f32], k: usize, out: &mut [f32]) {
+        assert_eq!(x.len(), self.cols * k, "input block shape mismatch");
+        assert_eq!(g.len(), self.rows * k, "gradient block shape mismatch");
         assert_eq!(out.len(), self.nnz());
         for i in 0..self.rows {
-            let gi = g[i];
-            if gi == 0.0 {
+            let grow = &g[i * k..(i + 1) * k];
+            if k == 1 && grow[0] == 0.0 {
                 continue;
             }
-            for k in self.indptr[i] as usize..self.indptr[i + 1] as usize {
-                out[k] += gi * x[self.indices[k] as usize];
+            for kk in self.indptr[i] as usize..self.indptr[i + 1] as usize {
+                let j = self.indices[kk] as usize;
+                out[kk] += crate::linalg::matrix::dot(grow, &x[j * k..(j + 1) * k], k);
             }
         }
     }
@@ -239,7 +272,7 @@ mod tests {
             let x: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
             let g: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
             let mut got = vec![0.0f32; csr.nnz()];
-            csr.value_grads_add(&x, &g, &mut got);
+            csr.value_grads_add(&x, &g, 1, &mut got);
             for i in 0..csr.rows {
                 for k in csr.indptr[i] as usize..csr.indptr[i + 1] as usize {
                     let want = g[i] * x[csr.indices[k] as usize];
@@ -249,6 +282,62 @@ mod tests {
                 }
             }
             Ok(())
+        });
+    }
+
+    #[test]
+    fn spmm_matches_per_column_spmv() {
+        check(15, |rng| {
+            let n = 2 + rng.below(30);
+            let k = 1 + rng.below(9);
+            let csr = Csr::from_coo(&random_coo(rng, n, 3 * n));
+            let cols: Vec<Vec<f32>> = (0..k)
+                .map(|_| (0..n).map(|_| rng.gaussian_f32()).collect())
+                .collect();
+            let mut x = vec![0.0f32; n * k];
+            for (c, col) in cols.iter().enumerate() {
+                for (j, &v) in col.iter().enumerate() {
+                    x[j * k + c] = v;
+                }
+            }
+            let mut y = vec![0.0f32; n * k];
+            csr.spmm_add(&x, &mut y, k);
+            for (c, col) in cols.iter().enumerate() {
+                let expect = csr.matvec(col);
+                let got: Vec<f32> = (0..n).map(|i| y[i * k + c]).collect();
+                slices_close(&got, &expect, 1e-5, 1e-5, "spmm col")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn batched_value_grads_match_per_sample_sum() {
+        check(10, |rng| {
+            let n = 3 + rng.below(12);
+            let k = 2 + rng.below(5);
+            let csr = Csr::from_coo(&random_coo(rng, n, 2 * n));
+            let xs: Vec<Vec<f32>> = (0..k)
+                .map(|_| (0..n).map(|_| rng.gaussian_f32()).collect())
+                .collect();
+            let gs: Vec<Vec<f32>> = (0..k)
+                .map(|_| (0..n).map(|_| rng.gaussian_f32()).collect())
+                .collect();
+            let mut xb = vec![0.0f32; n * k];
+            let mut gb = vec![0.0f32; n * k];
+            for c in 0..k {
+                for j in 0..n {
+                    xb[j * k + c] = xs[c][j];
+                    gb[j * k + c] = gs[c][j];
+                }
+            }
+            let mut batched = vec![0.0f32; csr.nnz()];
+            csr.value_grads_add(&xb, &gb, k, &mut batched);
+            let mut summed = vec![0.0f32; csr.nnz()];
+            for c in 0..k {
+                csr.value_grads_add(&xs[c], &gs[c], 1, &mut summed);
+            }
+            slices_close(&batched, &summed, 1e-4, 1e-4, "value grads")
         });
     }
 

@@ -4,12 +4,17 @@
 //! Layout (little endian throughout):
 //!
 //! ```text
-//! "HSB1" · u16 version · u16 flags · u32 entry_count
+//! "HSB1" · u16 version · u16 flags · [v2+: u64 save_seq] · u32 entry_count
 //! per entry:
 //!   u32 name-len · name · u8 kind · u8 method · f64 rel_error
 //!   u64 payload-len · payload
 //! footer: u32 crc32 over every preceding byte
 //! ```
+//!
+//! `save_seq` (version 2) is a monotonically increasing save-sequence
+//! number stamped by `ModelStore::save_model`, so retention can order
+//! variants exactly instead of by coarse-granularity file mtime. Version 1
+//! files (no seq field) still parse and read back as seq = 0.
 //!
 //! Payload grammar per kind:
 //!
@@ -41,9 +46,14 @@ use crate::util::fp16;
 use anyhow::{bail, Result};
 
 pub const MAGIC: &[u8; 4] = b"HSB1";
-pub const VERSION: u16 = 1;
+/// Current write version (v2 added the `save_seq` header field).
+pub const VERSION: u16 = 2;
+/// Oldest version the reader still accepts (v1 files read as seq = 0).
+pub const MIN_VERSION: u16 = 1;
 
-/// Fixed bytes before the first entry: magic + version + flags + count.
+/// Minimum fixed bytes before the first entry (the v1 header:
+/// magic + version + flags + count; v2 headers carry 8 more for the
+/// save-sequence number).
 pub const HEADER_BYTES: usize = 4 + 2 + 2 + 4;
 /// Trailing crc32.
 pub const FOOTER_BYTES: usize = 4;

@@ -66,14 +66,33 @@ impl ModelStore {
         out
     }
 
-    /// Persist a compressed model's q/k/v set as `variant`, atomically.
-    /// Returns the written path.
+    /// Persist a compressed model's q/k/v set as `variant`, atomically,
+    /// stamping a save-sequence number one past the highest currently on
+    /// disk — the exact ordering key `prune` retains by. Returns the
+    /// written path.
     pub fn save_model(&self, variant: &str, model: &CompressedModel) -> Result<PathBuf> {
         std::fs::create_dir_all(&self.dir)
             .with_context(|| format!("creating store dir {}", self.dir.display()))?;
         let path = self.variant_path(variant);
-        crate::compress::pipeline::save_reports(&model.reports, &path)?;
+        let seq = self.max_save_seq().saturating_add(1);
+        crate::compress::pipeline::save_reports_seq(&model.reports, &path, seq)?;
         Ok(path)
+    }
+
+    /// Save-sequence of one variant (0 for pre-v2 files; None if the file
+    /// is absent or its header unreadable). A header-only peek — no full
+    /// read or crc pass — so `save_model`/`prune` stay O(1) per variant.
+    pub fn variant_save_seq(&self, variant: &str) -> Option<u64> {
+        crate::store::reader::peek_save_seq(&self.variant_path(variant))
+    }
+
+    /// Highest save-sequence present in the store (0 when empty).
+    fn max_save_seq(&self) -> u64 {
+        self.variants()
+            .iter()
+            .filter_map(|v| self.variant_save_seq(v))
+            .max()
+            .unwrap_or(0)
     }
 
     /// Open one variant's store file.
@@ -107,29 +126,30 @@ impl ModelStore {
             .unwrap_or(0)
     }
 
-    /// Retention: keep the newest `keep_last_n` variants (by file mtime,
-    /// name-descending on ties) and delete the rest. The actively-served
-    /// variant is never deleted, however old — it simply doesn't count
-    /// against the retention budget. Returns the deleted variant names
-    /// (sorted), so callers can log what a GC pass reclaimed.
-    ///
-    /// Caveat: on filesystems with coarse mtime granularity (~1s), two
-    /// variants saved within the same tick order by name, not save order.
-    /// A save-sequence number in the `HSB1` header would make retention
-    /// exact (tracked in the ROADMAP).
+    /// Retention: keep the newest `keep_last_n` variants and delete the
+    /// rest. "Newest" is the `HSB1` save-sequence number (exact —
+    /// `save_model` stamps a fresh one per save), falling back to file
+    /// mtime then name for pre-v2 files that all read as seq 0. The
+    /// actively-served variant is never deleted, however old — it simply
+    /// doesn't count against the retention budget. Returns the deleted
+    /// variant names (sorted), so callers can log what a GC pass
+    /// reclaimed.
     pub fn prune(&self, keep_last_n: usize, active: Option<&str>) -> Result<Vec<String>> {
-        let mut entries: Vec<(std::time::SystemTime, String)> = Vec::new();
+        let mut entries: Vec<(u64, std::time::SystemTime, String)> = Vec::new();
         for name in self.variants() {
             let meta = std::fs::metadata(self.variant_path(&name))
                 .with_context(|| format!("stat variant '{name}'"))?;
             let mtime = meta.modified().unwrap_or(std::time::SystemTime::UNIX_EPOCH);
-            entries.push((mtime, name));
+            // unreadable/corrupt files sort oldest (seq 0) so GC can
+            // reclaim them before healthy variants
+            let seq = self.variant_save_seq(&name).unwrap_or(0);
+            entries.push((seq, mtime, name));
         }
-        // newest first; deterministic on mtime ties
+        // newest first; seq is exact, mtime/name only break pre-v2 ties
         entries.sort_by(|a, b| b.cmp(a));
         let mut deleted = Vec::new();
         let mut kept = 0usize;
-        for (_, name) in entries {
+        for (_, _, name) in entries {
             if active == Some(name.as_str()) {
                 continue; // refuse to touch the serving variant
             }
@@ -253,10 +273,13 @@ mod tests {
                 ..Default::default()
             },
         );
+        // no sleeps needed: the save-sequence number orders same-tick
+        // saves exactly, even on coarse-mtime filesystems
         for name in ["v0", "v1", "v2", "v3"] {
             store.save_model(name, &cm).unwrap();
-            // distinct mtimes so retention order is unambiguous
-            std::thread::sleep(std::time::Duration::from_millis(15));
+        }
+        for (i, name) in ["v0", "v1", "v2", "v3"].iter().enumerate() {
+            assert_eq!(store.variant_save_seq(name), Some(i as u64 + 1), "{name}");
         }
         // keep the 2 newest; v0 is actively served and must survive
         let deleted = store.prune(2, Some("v0")).unwrap();
@@ -277,6 +300,31 @@ mod tests {
         // without an active variant, prune(0) empties the store
         assert_eq!(store.prune(0, None).unwrap(), vec!["v0".to_string()]);
         assert!(store.variants().is_empty());
+    }
+
+    #[test]
+    fn resaving_a_variant_moves_it_to_newest() {
+        let base = tiny_base(7);
+        let store = temp_store("reseq");
+        let cm = CompressedModel::compress(
+            base.clone(),
+            Method::SSvd,
+            CompressorConfig {
+                rank: 4,
+                sparsity: 0.1,
+                ..Default::default()
+            },
+        );
+        for name in ["a", "b", "c"] {
+            store.save_model(name, &cm).unwrap();
+        }
+        // re-save "a": it takes seq 4 and becomes the newest — mtime
+        // granularity can no longer misorder it
+        store.save_model("a", &cm).unwrap();
+        assert_eq!(store.variant_save_seq("a"), Some(4));
+        let deleted = store.prune(1, None).unwrap();
+        assert_eq!(deleted, vec!["b".to_string(), "c".to_string()]);
+        assert_eq!(store.variants(), vec!["a".to_string()]);
     }
 
     #[test]

@@ -4,11 +4,11 @@
 //! [`StoreFile::load_with_workspace`] pre-sizes the matvec scratch at load
 //! time so the first request served from a cold start pays no allocation.
 
-use crate::compress::compressed::ApplyWorkspace;
+use crate::compress::compressed::BatchWorkspace;
 use crate::compress::CompressedMatrix;
 use crate::store::format::{
     decode_payload, method_from_code, EntryMeta, FOOTER_BYTES, HEADER_BYTES, KIND_HSS, MAGIC,
-    METHOD_UNKNOWN, VERSION,
+    METHOD_UNKNOWN, MIN_VERSION, VERSION,
 };
 use crate::util::binio::{crc32, ByteReader};
 use anyhow::{bail, Context, Result};
@@ -21,10 +21,43 @@ struct EntryIndex {
     len: usize,
 }
 
+/// Header-only peek at a store file's save-sequence number: reads just the
+/// fixed header bytes — no payload read, no crc pass — so retention
+/// ordering stays O(1) per variant even on multi-GB stores. Returns `None`
+/// when the file is missing, too short, has the wrong magic, or an
+/// unsupported version; version-1 files (which predate the field) read as
+/// `Some(0)`. A corrupt file caught here simply sorts oldest; full
+/// validation still happens on [`StoreFile::open`].
+pub fn peek_save_seq(path: &Path) -> Option<u64> {
+    use std::io::Read;
+    let mut f = std::fs::File::open(path).ok()?;
+    // v2 header: magic(4) version(2) flags(2) save_seq(8)
+    let mut head = [0u8; 16];
+    let mut filled = 0;
+    while filled < head.len() {
+        match f.read(&mut head[filled..]) {
+            Ok(0) => break,
+            Ok(n) => filled += n,
+            Err(_) => return None,
+        }
+    }
+    if filled < 8 || &head[..4] != MAGIC {
+        return None;
+    }
+    match u16::from_le_bytes([head[4], head[5]]) {
+        1 => Some(0),
+        2 if filled == head.len() => {
+            Some(u64::from_le_bytes(head[8..16].try_into().expect("8-byte slice")))
+        }
+        _ => None,
+    }
+}
+
 /// A parsed, integrity-checked `HSB1` file.
 pub struct StoreFile {
     buf: Vec<u8>,
     entries: Vec<EntryIndex>,
+    save_seq: u64,
 }
 
 impl StoreFile {
@@ -54,10 +87,12 @@ impl StoreFile {
         let mut r = ByteReader::new(body);
         r.expect_magic(MAGIC, "HSB1")?;
         let version = r.u16()?;
-        if version != VERSION {
-            bail!("unsupported HSB1 version {version} (this build reads {VERSION})");
+        if !(MIN_VERSION..=VERSION).contains(&version) {
+            bail!("unsupported HSB1 version {version} (this build reads {MIN_VERSION}..={VERSION})");
         }
         let _flags = r.u16()?;
+        // v1 predates the save-sequence field; old files read as seq 0
+        let save_seq = if version >= 2 { r.u64()? } else { 0 };
         let count = r.u32()? as usize;
         let mut entries = Vec::with_capacity(count.min(1024));
         for _ in 0..count {
@@ -94,7 +129,17 @@ impl StoreFile {
         if r.remaining() != 0 {
             bail!("{} trailing bytes after the last entry", r.remaining());
         }
-        Ok(StoreFile { buf, entries })
+        Ok(StoreFile {
+            buf,
+            entries,
+            save_seq,
+        })
+    }
+
+    /// Save-sequence number stamped at write time (0 for v1 files and
+    /// writers that never set one) — the exact retention ordering key.
+    pub fn save_seq(&self) -> u64 {
+        self.save_seq
     }
 
     pub fn len(&self) -> usize {
@@ -132,9 +177,9 @@ impl StoreFile {
             .with_context(|| format!("decoding entry '{name}'"))
     }
 
-    /// Load plus a pre-sized [`ApplyWorkspace`], so the caller's first
+    /// Load plus a pre-sized [`BatchWorkspace`], so the caller's first
     /// `matvec_with` allocates nothing.
-    pub fn load_with_workspace(&self, name: &str) -> Result<(CompressedMatrix, ApplyWorkspace)> {
+    pub fn load_with_workspace(&self, name: &str) -> Result<(CompressedMatrix, BatchWorkspace)> {
         let m = self.load(name)?;
         let ws = m.workspace();
         Ok((m, ws))
@@ -233,6 +278,44 @@ mod tests {
             let e = StoreFile::from_bytes(bad).unwrap_err();
             assert!(format!("{e}").contains("crc"), "flip at {pos}: {e}");
         }
+    }
+
+    #[test]
+    fn save_seq_roundtrips_and_v1_files_read_as_seq_zero() {
+        let mut sw = sample_writer(32);
+        sw.set_save_seq(42);
+        let v2 = sw.to_bytes();
+        let file = StoreFile::from_bytes(v2.clone()).unwrap();
+        assert_eq!(file.save_seq(), 42);
+
+        // hand-build the version-1 image (header without the seq field)
+        // around the same entries: old files must keep parsing, as seq 0
+        let mut v1 = Vec::with_capacity(v2.len() - 8);
+        v1.extend_from_slice(&v2[..4]); // magic
+        v1.extend_from_slice(&1u16.to_le_bytes()); // version 1
+        v1.extend_from_slice(&v2[6..8]); // flags
+        v1.extend_from_slice(&v2[16..v2.len() - 4]); // count + entries
+        let crc = crate::util::binio::crc32(&v1);
+        v1.extend_from_slice(&crc.to_le_bytes());
+        let old = StoreFile::from_bytes(v1.clone()).unwrap();
+        assert_eq!(old.save_seq(), 0);
+        assert_eq!(old.names(), file.names());
+        for name in old.names() {
+            let a = old.load(name).unwrap();
+            let b = file.load(name).unwrap();
+            assert_eq!(a.params(), b.params(), "{name}");
+        }
+
+        // the header-only peek agrees with the full parse for both versions
+        let dir = std::env::temp_dir().join("hisolo_test_store_peek");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("v2.hsb1"), &v2).unwrap();
+        std::fs::write(dir.join("v1.hsb1"), &v1).unwrap();
+        std::fs::write(dir.join("junk.hsb1"), b"XXXX").unwrap();
+        assert_eq!(peek_save_seq(&dir.join("v2.hsb1")), Some(42));
+        assert_eq!(peek_save_seq(&dir.join("v1.hsb1")), Some(0));
+        assert_eq!(peek_save_seq(&dir.join("junk.hsb1")), None);
+        assert_eq!(peek_save_seq(&dir.join("absent.hsb1")), None);
     }
 
     #[test]

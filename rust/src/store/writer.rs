@@ -15,11 +15,19 @@ use std::path::Path;
 #[derive(Default)]
 pub struct StoreWriter {
     entries: Vec<(EntryMeta, Vec<u8>)>,
+    save_seq: u64,
 }
 
 impl StoreWriter {
     pub fn new() -> StoreWriter {
         StoreWriter::default()
+    }
+
+    /// Stamp the monotonically increasing save-sequence number written
+    /// into the v2 header (0 when never set — files saved outside
+    /// `ModelStore::save_model` sort as oldest).
+    pub fn set_save_seq(&mut self, seq: u64) {
+        self.save_seq = seq;
     }
 
     /// Add an entry without provenance metadata.
@@ -57,6 +65,7 @@ impl StoreWriter {
         out.extend_from_slice(MAGIC);
         put_u16(&mut out, VERSION);
         put_u16(&mut out, 0); // flags, reserved
+        put_u64(&mut out, self.save_seq);
         put_u32(&mut out, self.entries.len() as u32);
         for (meta, payload) in &self.entries {
             put_string(&mut out, &meta.name);

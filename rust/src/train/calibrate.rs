@@ -43,6 +43,10 @@ pub struct TrainConfig {
     /// stop after this many evaluations without improvement
     pub patience: usize,
     pub seed: u64,
+    /// threads for the per-projection calibration fan-out (0 = all
+    /// available cores); projections are independent, so the result is
+    /// identical at any thread count
+    pub threads: usize,
 }
 
 impl Default for TrainConfig {
@@ -57,6 +61,7 @@ impl Default for TrainConfig {
             eval_every: 25,
             patience: 4,
             seed: 0x7E57,
+            threads: 0,
         }
     }
 }
@@ -102,23 +107,44 @@ impl CalibrationReport {
     }
 }
 
-/// Relative activation loss Σ‖Ŵx − t‖² / Σ‖t‖² over an index set.
+/// Samples per `apply_batch` call during holdout evaluation.
+const EVAL_CHUNK: usize = 32;
+
+/// Pack sample columns `idxs` (via `xs`) into a fresh [n, k] column block.
+fn pack_block(xs: &[Vec<f32>], idxs: &[usize], n: usize) -> Matrix {
+    let k = idxs.len();
+    let mut xb = Matrix::zeros(n, k);
+    for (c, &i) in idxs.iter().enumerate() {
+        for (r, &v) in xs[i].iter().enumerate() {
+            xb.data[r * k + c] = v;
+        }
+    }
+    xb
+}
+
+/// Relative activation loss Σ‖ŴX − T‖² / Σ‖T‖² over an index set,
+/// evaluated in column blocks (one traversal per chunk).
 fn eval_loss(
     student: &CompressedMatrix,
     xs: &[Vec<f32>],
     targets: &[Vec<f32>],
     idxs: &[usize],
-    y: &mut [f32],
-    ws: &mut crate::compress::ApplyWorkspace,
+    ws: &mut crate::compress::BatchWorkspace,
 ) -> f64 {
+    let n = student.n();
     let mut num = 0.0f64;
     let mut den = 0.0f64;
-    for &i in idxs {
-        student.matvec_with(&xs[i], y, ws);
-        for (&yy, &tt) in y.iter().zip(&targets[i]) {
-            let d = (yy - tt) as f64;
-            num += d * d;
-            den += tt as f64 * tt as f64;
+    for chunk in idxs.chunks(EVAL_CHUNK) {
+        let k = chunk.len();
+        let xb = pack_block(xs, chunk, n);
+        let mut yb = Matrix::zeros(n, k);
+        student.apply_batch(&xb, &mut yb, ws);
+        for (c, &i) in chunk.iter().enumerate() {
+            for (r, &tt) in targets[i].iter().enumerate() {
+                let d = (yb.data[r * k + c] - tt) as f64;
+                num += d * d;
+                den += tt as f64 * tt as f64;
+            }
         }
     }
     if den > 0.0 {
@@ -169,12 +195,16 @@ pub fn calibrate_matrix(
     let eval_every = cfg.eval_every.max(1);
 
     let mut opt = cfg.optimizer.build();
-    let mut ws = student.workspace();
-    let mut gws = GradWorkspace::for_matrix(student);
+    let mut ws = student.workspace_for(batch.max(EVAL_CHUNK));
+    let mut gws = GradWorkspace::for_matrix_batch(student, batch);
     let mut grad = vec![0.0f32; np];
-    let mut y = vec![0.0f32; n];
+    // the whole mini-batch flows through one apply_batch + one rank-k
+    // accumulate_grad per step — these blocks are reused across steps
+    let mut batch_idx = vec![0usize; batch];
+    let mut xb = Matrix::zeros(n, batch);
+    let mut gb = Matrix::zeros(n, batch);
 
-    let loss_before = eval_loss(student, xs, &targets, eval_set, &mut y, &mut ws);
+    let loss_before = eval_loss(student, xs, &targets, eval_set, &mut ws);
     let mut best_loss = loss_before;
     let mut best_params = vec![0.0f32; np];
     copy_params_into(student, &mut best_params);
@@ -183,14 +213,20 @@ pub fn calibrate_matrix(
 
     for step in 0..cfg.steps {
         grad.fill(0.0);
-        for _ in 0..batch {
+        for (c, slot) in batch_idx.iter_mut().enumerate() {
             let i = train[rng.below(train.len())];
-            student.matvec_with(&xs[i], &mut y, &mut ws);
-            for (yy, &tt) in y.iter_mut().zip(&targets[i]) {
-                *yy -= tt; // y becomes the residual g = ŷ − t
+            *slot = i;
+            for (r, &v) in xs[i].iter().enumerate() {
+                xb.data[r * batch + c] = v;
             }
-            accumulate_grad(student, &xs[i], &y, &mut grad, &mut gws);
         }
+        student.apply_batch(&xb, &mut gb, &mut ws);
+        for (c, &i) in batch_idx.iter().enumerate() {
+            for (r, &tt) in targets[i].iter().enumerate() {
+                gb.data[r * batch + c] -= tt; // gb becomes the residual G = Ŷ − T
+            }
+        }
+        accumulate_grad(student, &xb, &gb, &mut grad, &mut gws);
         let inv = 1.0 / batch as f32;
         for g in grad.iter_mut() {
             *g *= inv;
@@ -199,7 +235,7 @@ pub fn calibrate_matrix(
         steps_run = step + 1;
 
         if !hold.is_empty() && steps_run % eval_every == 0 {
-            let l = eval_loss(student, xs, &targets, eval_set, &mut y, &mut ws);
+            let l = eval_loss(student, xs, &targets, eval_set, &mut ws);
             crate::log_debug!("calibrate {name}: step {steps_run} holdout {l:.5}");
             if l < best_loss {
                 best_loss = l;
@@ -218,7 +254,7 @@ pub fn calibrate_matrix(
     // best-checkpoint restore: never end worse than the best seen state.
     // The explicit NaN arm matters — a diverged run (loss NaN) must roll
     // back to the checkpoint, and NaN compares false under every ordering.
-    let final_loss = eval_loss(student, xs, &targets, eval_set, &mut y, &mut ws);
+    let final_loss = eval_loss(student, xs, &targets, eval_set, &mut ws);
     let loss_after = if final_loss.is_nan() || final_loss > best_loss {
         load_params(student, &best_params);
         best_loss
@@ -244,23 +280,25 @@ pub fn calibrate_matrix(
 
 /// Collect calibration activations for every layer: rows of the post-ln1
 /// matrices the q/k/v projections consume, over the given token windows
-/// (each truncated to the model's context length).
+/// (each truncated to the model's context length). All windows run as
+/// one batched capture pass — one tall projection per layer — instead of
+/// one forward per window.
 pub fn collect_activations(
     base: &crate::model::Transformer,
     windows: &[Vec<u32>],
 ) -> Vec<Vec<Vec<f32>>> {
+    let truncated: Vec<&[u32]> = windows
+        .iter()
+        .map(|w| &w[..w.len().min(base.cfg.seq_len)])
+        .filter(|w| !w.is_empty())
+        .collect();
     let mut per_layer: Vec<Vec<Vec<f32>>> = vec![Vec::new(); base.cfg.n_layers];
-    for w in windows {
-        let t = w.len().min(base.cfg.seq_len);
-        if t == 0 {
-            continue;
-        }
-        let caps = base.qkv_inputs(&w[..t]);
-        for (layer, a) in caps.into_iter().enumerate() {
-            for i in 0..a.rows {
-                per_layer[layer].push(a.row(i).to_vec());
-            }
-        }
+    if truncated.is_empty() {
+        return per_layer;
+    }
+    let tall = base.qkv_inputs_batch(&truncated);
+    for (layer, a) in tall.into_iter().enumerate() {
+        per_layer[layer] = (0..a.rows).map(|i| a.row(i).to_vec()).collect();
     }
     per_layer
 }

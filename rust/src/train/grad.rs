@@ -1,19 +1,24 @@
-//! Backward passes for every [`CompressedMatrix`] variant.
+//! Batched backward passes for every [`CompressedMatrix`] variant.
 //!
 //! The training objective is the layer-wise reconstruction loss
-//! L = ½‖Ŵ x − W x‖² per calibration sample. Every variant's matvec is
-//! linear in its parameters, so given the output-space gradient
-//! g = ∂L/∂y = Ŵ x − W x, parameter gradients are vector-Jacobian
-//! products that never need stored forward activations — each
-//! intermediate is recomputable from x during the backward walk:
+//! L = ½‖Ŵ X − W X‖² over a column block X of k calibration samples.
+//! Every variant's apply is linear in its parameters, so given the
+//! output-space gradient block G = ∂L/∂Y = Ŵ X − W X, parameter gradients
+//! are matrix-Jacobian products that never need stored forward
+//! activations — each intermediate is recomputable from X during the
+//! backward walk, and every factor update is one **rank-k** GEMM
+//! (`gemm_nt_add`, the kernel behind `Matrix::matmul_bt_into`) instead of
+//! k rank-1 outer products:
 //!
-//! - `Dense`:    y = W x            ⇒ dW = g xᵀ
-//! - `LowRank`:  y = L (R x) + S x  ⇒ dL = g tᵀ (t = R x),
-//!               dR = (Lᵀ g) xᵀ, dS restricted to the frozen pattern
-//! - `Hss`:      recursive VJP — the permutation routes g down exactly
-//!               as it routes x (y = Pᵀ z ⇒ ∂L/∂z = P g), so leaves see
-//!               (x-slice, g-slice) pairs and couplings get rank-k outer
-//!               products, level by level.
+//! - `Dense`:    Y = W X            ⇒ dW += G Xᵀ
+//! - `LowRank`:  Y = L (R X) + S X  ⇒ dL += G Tᵀ (T = R X),
+//!               dR += (Lᵀ G) Xᵀ, dS restricted to the frozen pattern
+//!               (a k-wide dot per stored value)
+//! - `Hss`:      recursive VJP — the permutation routes G down exactly
+//!               as it routes X (Y = Pᵀ Z ⇒ ∂L/∂Z = P G), so leaves see
+//!               (X-block, G-block) pairs and couplings get rank-k GEMM
+//!               updates, level by level. k = 1 recovers the per-sample
+//!               backward pass exactly.
 //!
 //! The flat parameter view (`visit_params` / `visit_params_mut`) fixes one
 //! canonical traversal order shared by gradient accumulation, optimizers,
@@ -23,12 +28,14 @@
 //!
 //! [`GradWorkspace`] mirrors the `hss::matvec::Workspace` buffer
 //! discipline (one scratch set per tree level, sized by the same
-//! `collect_dims` walk) so the training hot loop allocates nothing after
-//! warmup.
+//! `collect_dims` walk and widened to the batch) so the training hot loop
+//! allocates nothing after warmup.
 
 use crate::compress::CompressedMatrix;
 use crate::hss::matvec::collect_dims;
 use crate::hss::HssNode;
+use crate::linalg::matrix::gemm_nt_add;
+use crate::linalg::Matrix;
 
 /// Number of trainable parameters of a compressed matrix (the length of
 /// the flat gradient / optimizer-state vectors).
@@ -145,82 +152,75 @@ pub fn load_params(m: &mut CompressedMatrix, flat: &[f32]) {
     assert_eq!(off, flat.len(), "param restore length mismatch");
 }
 
-/// out += a bᵀ, row-major — the rank-1 update every factor gradient
-/// reduces to.
-pub fn outer_add(a: &[f32], b: &[f32], out: &mut [f32]) {
-    debug_assert_eq!(out.len(), a.len() * b.len());
-    let cols = b.len();
-    for (i, &ai) in a.iter().enumerate() {
-        if ai == 0.0 {
-            continue;
-        }
-        let row = &mut out[i * cols..(i + 1) * cols];
-        for (o, &bj) in row.iter_mut().zip(b) {
-            *o += ai * bj;
-        }
-    }
-}
-
 struct GradLevel {
-    /// permuted input x[perm]
+    /// permuted input block X[perm] ([n, k] row-major)
     xp: Vec<f32>,
-    /// permuted output-gradient g[perm]
+    /// permuted output-gradient block G[perm]
     gp: Vec<f32>,
-    /// coupling intermediate t = R·x  (rank-sized)
+    /// coupling intermediate T = R·X  (rank × k)
     t: Vec<f32>,
-    /// coupling cotangent v = Uᵀ·g  (rank-sized)
+    /// coupling cotangent V = Uᵀ·G  (rank × k)
     v: Vec<f32>,
 }
 
 /// Per-matrix scratch for [`accumulate_grad`]; same per-level discipline
-/// as the matvec `Workspace`, so repeated backward passes allocate
-/// nothing after warmup (including the dims scratch used to size levels).
+/// as the apply `Workspace` (widened to the batch), so repeated backward
+/// passes allocate nothing after warmup (including the dims scratch used
+/// to size levels).
 #[derive(Default)]
 pub struct GradWorkspace {
     levels: Vec<GradLevel>,
-    /// LowRank intermediates (t = R x, v = Lᵀ g)
+    /// LowRank intermediates (T = R X, V = Lᵀ G)
     t: Vec<f32>,
     v: Vec<f32>,
     dims: Vec<(usize, usize)>,
 }
 
 impl GradWorkspace {
+    /// Workspace sized for single-sample (k = 1) backward passes; grows
+    /// on demand when a wider batch comes through.
     pub fn for_matrix(m: &CompressedMatrix) -> GradWorkspace {
+        GradWorkspace::for_matrix_batch(m, 1)
+    }
+
+    /// Workspace pre-sized for batches of `k` samples.
+    pub fn for_matrix_batch(m: &CompressedMatrix, k: usize) -> GradWorkspace {
         let mut ws = GradWorkspace::default();
-        ws.ensure(m);
+        ws.ensure(m, k);
         ws
     }
 
-    /// Grow buffers to fit `m` (idempotent, allocation-free once warm).
-    pub fn ensure(&mut self, m: &CompressedMatrix) {
+    /// Grow buffers to fit `m` at batch width `k` (idempotent,
+    /// allocation-free once warm).
+    pub fn ensure(&mut self, m: &CompressedMatrix, k: usize) {
         match m {
             CompressedMatrix::Dense { .. } => {}
             CompressedMatrix::LowRank { r, .. } => {
-                if self.t.len() < r.rows {
-                    self.t.resize(r.rows, 0.0);
-                    self.v.resize(r.rows, 0.0);
+                if self.t.len() < r.rows * k {
+                    self.t.resize(r.rows * k, 0.0);
+                    self.v.resize(r.rows * k, 0.0);
                 }
             }
             CompressedMatrix::Hss { tree } => {
                 self.dims.clear();
                 collect_dims(tree, 0, &mut self.dims);
-                for (lvl, &(n, k)) in self.dims.iter().enumerate() {
+                for (lvl, &(n, rank)) in self.dims.iter().enumerate() {
                     if self.levels.len() <= lvl {
                         self.levels.push(GradLevel {
-                            xp: vec![0.0; n],
-                            gp: vec![0.0; n],
-                            t: vec![0.0; k],
-                            v: vec![0.0; k],
+                            xp: vec![0.0; n * k],
+                            gp: vec![0.0; n * k],
+                            t: vec![0.0; rank * k],
+                            v: vec![0.0; rank * k],
                         });
                     } else {
                         let b = &mut self.levels[lvl];
-                        if b.xp.len() < n {
-                            b.xp.resize(n, 0.0);
-                            b.gp.resize(n, 0.0);
+                        if b.xp.len() < n * k {
+                            b.xp.resize(n * k, 0.0);
+                            b.gp.resize(n * k, 0.0);
                         }
-                        if b.t.len() < k {
-                            b.t.resize(k, 0.0);
-                            b.v.resize(k, 0.0);
+                        if b.t.len() < rank * k {
+                            b.t.resize(rank * k, 0.0);
+                            b.v.resize(rank * k, 0.0);
                         }
                     }
                 }
@@ -229,51 +229,62 @@ impl GradWorkspace {
     }
 }
 
-/// Accumulate ∂L/∂θ into `grad` (flat, canonical order) for one sample,
-/// given the input `x` and the output-space gradient `g = ŷ − t`.
-/// `grad` is accumulated into, not overwritten — callers average over a
-/// batch by zeroing once and dividing at the end.
+/// Accumulate ∂L/∂θ into `grad` (flat, canonical order) for a column
+/// block of samples: `x` is [n, k] (column c = input c) and `g` the
+/// matching output-space gradient block G = Ŷ − T. Every factor update is
+/// a rank-k GEMM, so one call with k samples replaces k per-sample calls
+/// (k = 1 is exactly the old per-sample path). `grad` is accumulated
+/// into, not overwritten — callers average over a batch by zeroing once
+/// and dividing at the end.
 pub fn accumulate_grad(
     m: &CompressedMatrix,
-    x: &[f32],
-    g: &[f32],
+    x: &Matrix,
+    g: &Matrix,
     grad: &mut [f32],
     ws: &mut GradWorkspace,
 ) {
+    let n = m.n();
+    let k = x.cols;
+    assert!(k > 0, "empty sample block");
+    assert_eq!((x.rows, g.rows, g.cols), (n, n, k), "sample block shape mismatch");
     debug_assert_eq!(grad.len(), num_params(m));
-    ws.ensure(m);
+    ws.ensure(m, k);
     match m {
         CompressedMatrix::Dense { w } => {
-            debug_assert_eq!(x.len(), w.cols);
-            outer_add(g, x, grad);
+            // dW += G Xᵀ
+            gemm_nt_add(&g.data, &x.data, w.rows, w.cols, k, grad);
         }
         CompressedMatrix::LowRank { l, r, sparse } => {
-            let t = &mut ws.t[..r.rows];
-            r.matvec_into(x, t);
+            // T = R X; dL += G Tᵀ
+            let t = &mut ws.t[..r.rows * k];
+            r.apply_batch_into(&x.data, t, k);
             let ln = l.data.len();
-            outer_add(g, t, &mut grad[..ln]);
-            let v = &mut ws.v[..l.cols];
-            l.matvec_t_into(g, v);
+            gemm_nt_add(&g.data, t, l.rows, l.cols, k, &mut grad[..ln]);
+            // V = Lᵀ G; dR += V Xᵀ
+            let v = &mut ws.v[..l.cols * k];
+            l.apply_batch_t_into(&g.data, v, k);
             let rn = r.data.len();
-            outer_add(v, x, &mut grad[ln..ln + rn]);
+            gemm_nt_add(v, &x.data, r.rows, r.cols, k, &mut grad[ln..ln + rn]);
             if let Some(s) = sparse {
-                s.value_grads_add(x, g, &mut grad[ln + rn..]);
+                s.value_grads_add(&x.data, &g.data, k, &mut grad[ln + rn..]);
             }
         }
         CompressedMatrix::Hss { tree } => {
             let mut off = 0;
-            hss_grad(tree, x, g, grad, &mut off, &mut ws.levels);
+            hss_grad(tree, &x.data, &g.data, k, grad, &mut off, &mut ws.levels);
             debug_assert_eq!(off, grad.len());
         }
     }
 }
 
-/// Recursive VJP through one HSS node. `off` is the cursor into the flat
-/// gradient; the write order must match `visit_params` exactly.
+/// Recursive VJP through one HSS node over [·, k] column blocks. `off` is
+/// the cursor into the flat gradient; the write order must match
+/// `visit_params` exactly.
 fn hss_grad(
     node: &HssNode,
     x: &[f32],
     g: &[f32],
+    k: usize,
     grad: &mut [f32],
     off: &mut usize,
     levels: &mut [GradLevel],
@@ -281,7 +292,7 @@ fn hss_grad(
     match node {
         HssNode::Leaf { d } => {
             let len = d.data.len();
-            outer_add(g, x, &mut grad[*off..*off + len]);
+            gemm_nt_add(g, x, d.rows, d.cols, k, &mut grad[*off..*off + len]);
             *off += len;
         }
         HssNode::Branch {
@@ -296,50 +307,50 @@ fn hss_grad(
             c1,
         } => {
             let n0 = n / 2;
-            // spike values see the unpermuted coordinates: y += S x
+            // spike values see the unpermuted coordinates: Y += S X
             let nnz = sparse.nnz();
-            sparse.value_grads_add(x, g, &mut grad[*off..*off + nnz]);
+            sparse.value_grads_add(x, g, k, &mut grad[*off..*off + nnz]);
             *off += nnz;
 
             let (buf, rest) = levels
                 .split_first_mut()
                 .expect("grad workspace depth too small");
-            // y = Pᵀ z ⇒ ∂L/∂z = P g: the gradient permutes down exactly
-            // like the input
-            let xp = &mut buf.xp[..*n];
-            perm.apply_into(x, xp);
-            let gp = &mut buf.gp[..*n];
-            perm.apply_into(g, gp);
-            let (x0, x1) = xp.split_at(n0);
-            let (g0, g1) = gp.split_at(n0);
+            // Y = Pᵀ Z ⇒ ∂L/∂Z = P G: the gradient block permutes down
+            // exactly like the input block
+            let xp = &mut buf.xp[..n * k];
+            perm.apply_cols_into(x, xp, k);
+            let gp = &mut buf.gp[..n * k];
+            perm.apply_cols_into(g, gp, k);
+            let (x0, x1) = xp.split_at(n0 * k);
+            let (g0, g1) = gp.split_at(n0 * k);
 
-            // z0 += U0 (R0 x1): dU0 = g0 t0ᵀ, dR0 = (U0ᵀ g0) x1ᵀ
-            let t0 = &mut buf.t[..r0.rows];
-            r0.matvec_into(x1, t0);
+            // Z0 += U0 (R0 X1): dU0 += G0 T0ᵀ, dR0 += (U0ᵀ G0) X1ᵀ
+            let t0 = &mut buf.t[..r0.rows * k];
+            r0.apply_batch_into(x1, t0, k);
             let len = u0.data.len();
-            outer_add(g0, t0, &mut grad[*off..*off + len]);
+            gemm_nt_add(g0, t0, u0.rows, u0.cols, k, &mut grad[*off..*off + len]);
             *off += len;
-            let v0 = &mut buf.v[..u0.cols];
-            u0.matvec_t_into(g0, v0);
+            let v0 = &mut buf.v[..u0.cols * k];
+            u0.apply_batch_t_into(g0, v0, k);
             let len = r0.data.len();
-            outer_add(v0, x1, &mut grad[*off..*off + len]);
+            gemm_nt_add(v0, x1, r0.rows, r0.cols, k, &mut grad[*off..*off + len]);
             *off += len;
 
-            // z1 += U1 (R1 x0): dU1 = g1 t1ᵀ, dR1 = (U1ᵀ g1) x0ᵀ
-            let t1 = &mut buf.t[..r1.rows];
-            r1.matvec_into(x0, t1);
+            // Z1 += U1 (R1 X0): dU1 += G1 T1ᵀ, dR1 += (U1ᵀ G1) X0ᵀ
+            let t1 = &mut buf.t[..r1.rows * k];
+            r1.apply_batch_into(x0, t1, k);
             let len = u1.data.len();
-            outer_add(g1, t1, &mut grad[*off..*off + len]);
+            gemm_nt_add(g1, t1, u1.rows, u1.cols, k, &mut grad[*off..*off + len]);
             *off += len;
-            let v1 = &mut buf.v[..u1.cols];
-            u1.matvec_t_into(g1, v1);
+            let v1 = &mut buf.v[..u1.cols * k];
+            u1.apply_batch_t_into(g1, v1, k);
             let len = r1.data.len();
-            outer_add(v1, x0, &mut grad[*off..*off + len]);
+            gemm_nt_add(v1, x0, r1.rows, r1.cols, k, &mut grad[*off..*off + len]);
             *off += len;
 
-            // diagonal blocks: children consume (x-slice, g-slice) pairs
-            hss_grad(c0, x0, g0, grad, off, rest);
-            hss_grad(c1, x1, g1, grad, off, rest);
+            // diagonal blocks: children consume (X-block, G-block) pairs
+            hss_grad(c0, x0, g0, k, grad, off, rest);
+            hss_grad(c1, x1, g1, k, grad, off, rest);
         }
     }
 }
@@ -391,7 +402,9 @@ mod tests {
         let mut ws = GradWorkspace::for_matrix(m);
         let y = m.matvec(&x);
         let g: Vec<f32> = y.iter().zip(&tgt).map(|(&a, &b)| a - b).collect();
-        accumulate_grad(m, &x, &g, &mut grad, &mut ws);
+        let xm = Matrix::from_vec(n, 1, x.clone());
+        let gm = Matrix::from_vec(n, 1, g);
+        accumulate_grad(m, &xm, &gm, &mut grad, &mut ws);
 
         let mut flat = copy_params(m);
         for i in 0..np {
@@ -512,7 +525,9 @@ mod tests {
         let g: Vec<f32> = y.iter().zip(&t).map(|(&a, &b)| a - b).collect();
         let mut grad = vec![0.0f32; num_params(&c)];
         let mut ws = GradWorkspace::for_matrix(&c);
-        accumulate_grad(&c, &x, &g, &mut grad, &mut ws);
+        let xm = Matrix::from_vec(16, 1, x);
+        let gm = Matrix::from_vec(16, 1, g);
+        accumulate_grad(&c, &xm, &gm, &mut grad, &mut ws);
         assert!(grad.iter().all(|&v| v == 0.0));
     }
 
@@ -527,14 +542,57 @@ mod tests {
             ..Default::default()
         };
         let c = Compressor::new(cfg).compress(&w, Method::SHss);
-        let mut rng = Rng::new(8);
-        let x: Vec<f32> = (0..32).map(|_| rng.gaussian_f32()).collect();
-        let g: Vec<f32> = (0..32).map(|_| rng.gaussian_f32()).collect();
+        let x = Matrix::randn(32, 1, 81);
+        let g = Matrix::randn(32, 1, 82);
         let mut ws = GradWorkspace::for_matrix(&c);
         let mut g1 = vec![0.0f32; num_params(&c)];
         accumulate_grad(&c, &x, &g, &mut g1, &mut ws);
         let mut g2 = vec![0.0f32; num_params(&c)];
         accumulate_grad(&c, &x, &g, &mut g2, &mut ws);
         assert_eq!(g1, g2);
+    }
+
+    /// The satellite grad-check: on a fixed seed, the rank-k batched
+    /// `accumulate_grad` must match the old per-sample path (k = 1 calls
+    /// summed) for every variant — the batch is a pure kernel change, not
+    /// a semantic one.
+    #[test]
+    fn batched_grad_matches_per_sample_sum() {
+        let n = 32;
+        let k = 8;
+        let w = spiky(n, 9);
+        let cfg = CompressorConfig {
+            rank: 4,
+            sparsity: 0.1,
+            depth: 2,
+            min_leaf: 4,
+            ..Default::default()
+        };
+        let comp = Compressor::new(cfg);
+        for m in [Method::Dense, Method::Svd, Method::SSvd, Method::SHssRcm] {
+            let c = comp.compress(&w, m);
+            let np = num_params(&c);
+            let mut rng = Rng::new(10);
+            let mut x = Matrix::zeros(n, k);
+            let mut g = Matrix::zeros(n, k);
+            for v in x.data.iter_mut() {
+                *v = rng.gaussian_f32();
+            }
+            for v in g.data.iter_mut() {
+                *v = rng.gaussian_f32();
+            }
+            let mut batched = vec![0.0f32; np];
+            let mut ws = GradWorkspace::for_matrix_batch(&c, k);
+            accumulate_grad(&c, &x, &g, &mut batched, &mut ws);
+
+            let mut summed = vec![0.0f32; np];
+            let mut ws1 = GradWorkspace::for_matrix(&c);
+            for col in 0..k {
+                let xc = Matrix::from_vec(n, 1, x.col(col));
+                let gc = Matrix::from_vec(n, 1, g.col(col));
+                accumulate_grad(&c, &xc, &gc, &mut summed, &mut ws1);
+            }
+            crate::util::proptest::slices_close(&batched, &summed, 1e-4, 1e-4, m.name()).unwrap();
+        }
     }
 }

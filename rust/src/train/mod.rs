@@ -7,11 +7,12 @@
 //! and this module recovers *accuracy* by training the surviving values
 //! against the dense teacher:
 //!
-//! - [`grad`] — backward passes for every `CompressedMatrix` variant:
-//!   CSR value gradients under a frozen pattern, low-rank L/R factor
-//!   gradients, and a recursive vector-Jacobian product through the HSS
-//!   tree (leaves, U/R couplings, spike values), with per-level scratch
-//!   reuse mirroring the matvec `Workspace` so the hot loop is
+//! - [`grad`] — batched backward passes for every `CompressedMatrix`
+//!   variant over [n, k] sample blocks: CSR value gradients under a
+//!   frozen pattern (k-wide dots), low-rank L/R factor gradients as
+//!   rank-k GEMM updates, and a recursive matrix-Jacobian product through
+//!   the HSS tree (leaves, U/R couplings, spike values), with per-level
+//!   scratch reuse mirroring the apply `Workspace` so the hot loop is
 //!   allocation-free after warmup. Also owns the canonical flat parameter
 //!   view (`visit_params`, `copy_params`, `load_params`).
 //! - [`optim`] — SGD (+momentum) and Adam (bias-corrected) over that flat

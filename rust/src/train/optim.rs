@@ -173,7 +173,9 @@ mod tests {
             let y = student.matvec(x);
             let t = teacher.matvec(x);
             let g: Vec<f32> = y.iter().zip(&t).map(|(&a, &b)| a - b).collect();
-            accumulate_grad(&student, x, &g, &mut grad, &mut ws);
+            let xm = Matrix::from_vec(8, 1, x.clone());
+            let gm = Matrix::from_vec(8, 1, g);
+            accumulate_grad(&student, &xm, &gm, &mut grad, &mut ws);
             opt.step(&mut student, &grad, lr);
         }
         student.rel_error(&teacher)
