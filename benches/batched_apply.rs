@@ -1,10 +1,16 @@
 //! Batched apply engine evidence: per-variant throughput of one
-//! `apply_batch` traversal vs a per-vector `matvec_with` loop at
-//! k ∈ {1, 8, 32, 128}, plus rows/s for the batched calibration step
-//! (one `apply_batch` + one rank-k `accumulate_grad` + Adam).
+//! `apply_batch` traversal vs a per-vector `matvec_with` loop, swept over
+//! dtype ∈ {f32, f16} × k ∈ {1, 32}, plus rows/s for the batched
+//! calibration step (one `apply_batch` + one rank-k `accumulate_grad` +
+//! Adam).
 //!
-//! The k = 32 numbers are emitted as a single JSON line (the bench
-//! trajectory record); `--json <path>` appends it to a file.
+//! The f16 rows run the same kernels on f16-resident factors (widened
+//! lane-by-lane in-register), so the table shows what halving resident
+//! weight bytes costs — or wins — in throughput. The k = 32 numbers and
+//! resident bytes are emitted as a single JSON line (the bench trajectory
+//! record); `--json <path>` appends it to a file. The final
+//! `f16_resident_check` line is asserted by CI: f16 resident weight bytes
+//! must be under 60% of f32 for the HSS variant.
 //!
 //! Run: `cargo bench --bench batched_apply [-- --n 1024 --json traj.jsonl]`
 
@@ -23,7 +29,7 @@ fn main() {
     let n = args.get_usize("n", 1024);
     let rank = args.get_usize("rank", n / 8);
     let budget = Duration::from_millis(args.get_usize("budget-ms", 300) as u64);
-    let ks = [1usize, 8, 32, 128];
+    let ks = [1usize, 32];
 
     let w = synthetic::trained_like(n, 99);
     let comp = Compressor::new(CompressorConfig {
@@ -33,15 +39,17 @@ fn main() {
         ..Default::default()
     });
 
-    println!("== batched apply engine: n={n} rank={rank} depth=3 ==");
+    println!("== batched apply engine: n={n} rank={rank} depth=3, dtype x k sweep ==");
     println!("   per-vector loop = k × matvec_with; batched = one apply_batch traversal\n");
     let mut table = Table::new(&[
         "variant",
+        "dtype",
         "k",
         "matvec loop",
         "apply_batch",
         "speedup",
         "cols/s batched",
+        "resident bytes",
     ]);
 
     let cases: [(&str, Method); 4] = [
@@ -51,55 +59,77 @@ fn main() {
         ("shss-rcm", Method::SHssRcm),
     ];
     let mut k32_entries: Vec<(String, Json)> = Vec::new();
+    // (f32 resident, f16 resident, f32 batch_ns, f16 batch_ns) for shss-rcm
+    let mut hss_check: Option<(usize, usize, f64, f64)> = None;
 
     for (label, m) in cases {
-        let c = comp.compress(&w, m);
-        for &k in &ks {
-            let x = Matrix::randn(n, k, 7 + k as u64);
-            let cols: Vec<Vec<f32>> = (0..k).map(|c| x.col(c)).collect();
+        let c32 = comp.compress(&w, m);
+        let mut c16 = c32.clone_shallow();
+        c16.narrow_to_f16();
+        let mut k32_ns = [0.0f64; 2]; // [f32, f16] batch_ns at k = 32
+        for (di, c) in [&c32, &c16].into_iter().enumerate() {
+            let dtype = c.weights_dtype();
+            let resident = c.resident_weight_bytes();
+            for &k in &ks {
+                let x = Matrix::randn(n, k, 7 + k as u64);
+                let cols: Vec<Vec<f32>> = (0..k).map(|c| x.col(c)).collect();
 
-            let mut ws1 = c.workspace();
-            let mut y1 = vec![0.0f32; n];
-            let loop_stats = bench(
-                || {
-                    for col in &cols {
-                        c.matvec_with(std::hint::black_box(col), &mut y1, &mut ws1);
-                    }
-                },
-                2,
-                budget,
-                10_000,
-            );
+                let mut ws1 = c.workspace();
+                let mut y1 = vec![0.0f32; n];
+                let loop_stats = bench(
+                    || {
+                        for col in &cols {
+                            c.matvec_with(std::hint::black_box(col), &mut y1, &mut ws1);
+                        }
+                    },
+                    2,
+                    budget,
+                    10_000,
+                );
 
-            let mut ws = c.workspace_for(k);
-            let mut y = Matrix::zeros(n, k);
-            let batch_stats = bench(
-                || c.apply_batch(std::hint::black_box(&x), &mut y, &mut ws),
-                2,
-                budget,
-                10_000,
-            );
+                let mut ws = c.workspace_for(k);
+                let mut y = Matrix::zeros(n, k);
+                let batch_stats = bench(
+                    || c.apply_batch(std::hint::black_box(&x), &mut y, &mut ws),
+                    2,
+                    budget,
+                    10_000,
+                );
 
-            let speedup = loop_stats.mean_ns / batch_stats.mean_ns;
-            let cols_per_s = k as f64 * 1e9 / batch_stats.mean_ns;
-            table.row(&[
-                label.to_string(),
-                k.to_string(),
-                fmt_ns(loop_stats.mean_ns),
-                fmt_ns(batch_stats.mean_ns),
-                format!("{speedup:.2}x"),
-                format!("{cols_per_s:.0}"),
-            ]);
-            if k == 32 {
-                k32_entries.push((
-                    m.name().to_string(),
-                    obj(vec![
-                        ("loop_ns", num(loop_stats.mean_ns)),
-                        ("batch_ns", num(batch_stats.mean_ns)),
-                        ("speedup", num(speedup)),
-                    ]),
-                ));
+                let speedup = loop_stats.mean_ns / batch_stats.mean_ns;
+                let cols_per_s = k as f64 * 1e9 / batch_stats.mean_ns;
+                table.row(&[
+                    label.to_string(),
+                    dtype.name().to_string(),
+                    k.to_string(),
+                    fmt_ns(loop_stats.mean_ns),
+                    fmt_ns(batch_stats.mean_ns),
+                    format!("{speedup:.2}x"),
+                    format!("{cols_per_s:.0}"),
+                    resident.to_string(),
+                ]);
+                if k == 32 {
+                    k32_ns[di] = batch_stats.mean_ns;
+                    k32_entries.push((
+                        format!("{}_{}", m.name(), dtype.name()),
+                        obj(vec![
+                            ("loop_ns", num(loop_stats.mean_ns)),
+                            ("batch_ns", num(batch_stats.mean_ns)),
+                            ("speedup", num(speedup)),
+                            ("cols_per_s", num(cols_per_s)),
+                            ("resident_bytes", num(resident as f64)),
+                        ]),
+                    ));
+                }
             }
+        }
+        if m == Method::SHssRcm {
+            hss_check = Some((
+                c32.resident_weight_bytes(),
+                c16.resident_weight_bytes(),
+                k32_ns[0],
+                k32_ns[1],
+            ));
         }
     }
     table.print();
@@ -142,15 +172,16 @@ fn main() {
         fmt_ns(cal_stats.mean_ns)
     );
 
-    // one-line JSON trajectory record (k = 32 per-variant + calibration)
+    // one-line JSON trajectory record (k = 32 per variant×dtype + resident
+    // bytes + calibration)
+    let (hss_f32, hss_f16, hss_ns32, hss_ns16) = hss_check.expect("shss-rcm case ran");
     let record = obj(vec![
         ("bench", s("batched_apply")),
         ("n", num(n as f64)),
         ("rank", num(rank as f64)),
-        (
-            "k32",
-            Json::Obj(k32_entries.into_iter().collect()),
-        ),
+        ("k32", Json::Obj(k32_entries.into_iter().collect())),
+        ("hss_resident_bytes_f32", num(hss_f32 as f64)),
+        ("hss_resident_bytes_f16", num(hss_f16 as f64)),
         ("calib_batch", num(batch as f64)),
         ("calib_rows_per_s", num(rows_per_s)),
     ]);
@@ -165,4 +196,16 @@ fn main() {
         writeln!(f, "{record}").expect("append trajectory line");
         println!("appended k=32 trajectory line to {}", path.display());
     }
+
+    // CI-asserted checks: resident memory must actually halve (values are
+    // exactly 2 vs 4 bytes, so < 60% holds whenever any values exist) and
+    // f16 throughput is reported relative to f32 (informational)
+    let ratio = hss_f16 as f64 / hss_f32 as f64;
+    let verdict = if ratio < 0.60 { "PASS" } else { "FAIL" };
+    println!("f16_resident_check: shss-rcm f16/f32 = {ratio:.3} {verdict}");
+    let rel = hss_ns16 / hss_ns32;
+    println!(
+        "f16_throughput_info: shss-rcm k=32 batch_ns f16/f32 = {rel:.3} ({})",
+        if rel <= 1.10 { "within 10% or faster" } else { "slower than 10% budget" }
+    );
 }

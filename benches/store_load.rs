@@ -3,8 +3,8 @@
 //!
 //! The paper's storage claim only pays off in serving if the compressed
 //! artifact is what's on disk: this bench measures (a) recompress-from-dense
-//! (the pre-store cold start), (b) HSB1 parse + fp16-widen (the store cold
-//! start), and (c) bytes on disk per format.
+//! (the pre-store cold start), (b) HSB1 parse (the store cold start —
+//! fp16 factors stay f16-resident), and (c) bytes on disk per format.
 //!
 //!     cargo bench --bench store_load
 
@@ -30,7 +30,7 @@ fn main() {
         wf.push(Tensor {
             name: name.clone(),
             dims: vec![w.rows, w.cols],
-            f32_data: w.data.clone(),
+            f32_data: w.data.to_vec(),
             i32_data: Vec::new(),
             dtype: Dtype::F16,
         });

@@ -102,17 +102,78 @@ impl CompressedMatrix {
     }
 
     /// Dense matrix this representation stands for (testing/eval only).
+    /// Always f32 — f16-resident factors are widened on the way out.
     pub fn reconstruct(&self) -> Matrix {
         match self {
-            CompressedMatrix::Dense { w } => w.clone(),
+            CompressedMatrix::Dense { w } => w.widen(),
             CompressedMatrix::LowRank { l, r, sparse } => {
-                let mut m = l.matmul(r);
+                let mut m = l.widen().matmul(&r.widen());
                 if let Some(s) = sparse {
                     m = m.add(&s.to_dense());
                 }
                 m
             }
             CompressedMatrix::Hss { tree } => tree.reconstruct(),
+        }
+    }
+
+    /// Narrow every resident weight buffer to f16 in place (idempotent).
+    /// The apply kernels then widen lane-by-lane; accumulation stays f32,
+    /// so results are bit-identical to applying the fp16-quantized values
+    /// at f32 residency — only the memory halves.
+    pub fn narrow_to_f16(&mut self) {
+        match self {
+            CompressedMatrix::Dense { w } => w.narrow_to_f16(),
+            CompressedMatrix::LowRank { l, r, sparse } => {
+                l.narrow_to_f16();
+                r.narrow_to_f16();
+                if let Some(s) = sparse {
+                    s.narrow_to_f16();
+                }
+            }
+            CompressedMatrix::Hss { tree } => tree.narrow_to_f16(),
+        }
+    }
+
+    /// Widen every resident weight buffer back to f32 in place (exact;
+    /// idempotent) — required before `train::calibrate` touches the
+    /// factors (training is f32-only; `finetune` narrows again on save).
+    pub fn widen_to_f32(&mut self) {
+        match self {
+            CompressedMatrix::Dense { w } => w.widen_to_f32(),
+            CompressedMatrix::LowRank { l, r, sparse } => {
+                l.widen_to_f32();
+                r.widen_to_f32();
+                if let Some(s) = sparse {
+                    s.widen_to_f32();
+                }
+            }
+            CompressedMatrix::Hss { tree } => tree.widen_to_f32(),
+        }
+    }
+
+    /// Dtype of the resident weight buffers (narrow/widen keep every
+    /// factor of a matrix uniform).
+    pub fn weights_dtype(&self) -> crate::linalg::Dtype {
+        match self {
+            CompressedMatrix::Dense { w } => w.dtype(),
+            CompressedMatrix::LowRank { l, .. } => l.dtype(),
+            CompressedMatrix::Hss { tree } => tree.weights_dtype(),
+        }
+    }
+
+    /// Bytes actually resident for this matrix's weight values at their
+    /// current dtype (sparse-index/permutation overhead excluded — it is
+    /// dtype-independent and reported by [`CompressedMatrix::bytes`]).
+    pub fn resident_weight_bytes(&self) -> usize {
+        match self {
+            CompressedMatrix::Dense { w } => w.resident_bytes(),
+            CompressedMatrix::LowRank { l, r, sparse } => {
+                l.resident_bytes()
+                    + r.resident_bytes()
+                    + sparse.as_ref().map_or(0, |s| s.resident_value_bytes())
+            }
+            CompressedMatrix::Hss { tree } => tree.resident_weight_bytes(),
         }
     }
 
@@ -274,6 +335,78 @@ mod tests {
                 for col in 0..k {
                     let expect = c.matvec(&x.col(col));
                     slices_close(&y.col(col), &expect, 1e-6, 1e-6, &format!("{m:?} col {col}"))?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Satellite property test: f16-resident `apply_batch` pins against
+    /// the f32 reference for all three variants (permuted depth-3 HSS
+    /// included). Two claims: (a) vs the *unquantized* f32 model the
+    /// drift is bounded by the fp16 round-trip; (b) vs the f32 model with
+    /// fp16-quantized values the result is bit-identical — the widened
+    /// kernels change residency, not arithmetic.
+    #[test]
+    fn f16_apply_batch_matches_f32_reference_all_variants() {
+        use crate::util::proptest::check;
+        check(8, |rng| {
+            let n = 48 + 16 * rng.below(2);
+            let w = spiky(n, rng.next_u64());
+            let comp = Compressor::new(CompressorConfig {
+                rank: 6,
+                sparsity: 0.1,
+                depth: 3,
+                min_leaf: 4,
+                ..Default::default()
+            });
+            for m in [Method::Dense, Method::SSvd, Method::SHssRcm] {
+                let c = comp.compress(&w, m);
+                if let (Method::SHssRcm, CompressedMatrix::Hss { tree }) = (m, &c) {
+                    if tree.depth() != 3 {
+                        return Err(format!("want a depth-3 tree, got {}", tree.depth()));
+                    }
+                }
+                let mut h = c.clone_shallow();
+                h.narrow_to_f16();
+                if h.weights_dtype() != crate::linalg::Dtype::F16 {
+                    return Err(format!("{m:?}: narrow left dtype {}", h.weights_dtype()));
+                }
+                if 2 * h.resident_weight_bytes() != c.resident_weight_bytes() {
+                    return Err(format!(
+                        "{m:?}: resident {} !*2= {}",
+                        h.resident_weight_bytes(),
+                        c.resident_weight_bytes()
+                    ));
+                }
+                // format accounting must not change with residency
+                if h.params() != c.params() || h.bytes() != c.bytes() {
+                    return Err(format!("{m:?}: narrow changed params/bytes accounting"));
+                }
+
+                let k = 1 + rng.below(9);
+                let mut x = Matrix::zeros(n, k);
+                for v in x.data.iter_mut() {
+                    *v = 0.1 * rng.gaussian_f32();
+                }
+                let mut y32 = Matrix::zeros(n, k);
+                let mut ws32 = c.workspace_for(k);
+                c.apply_batch(&x, &mut y32, &mut ws32);
+                let mut y16 = Matrix::zeros(n, k);
+                let mut ws16 = h.workspace_for(k);
+                h.apply_batch(&x, &mut y16, &mut ws16);
+
+                // (a) fp16 round-trip tolerance vs the unquantized model
+                slices_close(&y16.data, &y32.data, 2e-2, 2e-2, &format!("{m:?} f16 vs f32"))?;
+
+                // (b) bit-identical to quantize-then-apply at f32 residency
+                let mut q = h.clone_shallow();
+                q.widen_to_f32();
+                let mut yq = Matrix::zeros(n, k);
+                let mut wsq = q.workspace_for(k);
+                q.apply_batch(&x, &mut yq, &mut wsq);
+                if yq.data != y16.data {
+                    return Err(format!("{m:?}: f16 apply != quantized f32 apply (bitwise)"));
                 }
             }
             Ok(())

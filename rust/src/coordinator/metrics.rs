@@ -1,6 +1,9 @@
-//! Lock-free serving metrics: request counters and a log-bucketed latency
-//! histogram with percentile queries.
+//! Lock-free serving metrics: request counters, a log-bucketed latency
+//! histogram with percentile queries, and a per-variant gauge of the
+//! resident weight bytes the installed scorers hold (the f16-serving
+//! halving shows up here, not just in benches).
 
+use crate::coordinator::request::Variant;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 const BUCKETS: usize = 40; // log2 buckets over 1us .. ~1099s
@@ -15,6 +18,9 @@ pub struct Metrics {
     pub batched_requests: AtomicU64,
     /// scorer hot-swaps applied by workers (see `Coordinator::swap_variant`)
     pub swaps: AtomicU64,
+    /// per-variant gauge: weight bytes resident in the most recently
+    /// installed scorer (set at worker start and on every hot-swap)
+    resident_weight_bytes: [AtomicU64; Variant::COUNT],
     latency_buckets: [AtomicU64; BUCKETS],
 }
 
@@ -34,8 +40,21 @@ impl Metrics {
             batches: AtomicU64::new(0),
             batched_requests: AtomicU64::new(0),
             swaps: AtomicU64::new(0),
+            resident_weight_bytes: std::array::from_fn(|_| AtomicU64::new(0)),
             latency_buckets: std::array::from_fn(|_| AtomicU64::new(0)),
         }
+    }
+
+    /// Record the resident weight bytes of the scorer now serving
+    /// `variant` (workers call this at start and after each hot-swap).
+    pub fn set_resident_weight_bytes(&self, variant: Variant, bytes: u64) {
+        self.resident_weight_bytes[variant.index()].store(bytes, Ordering::Relaxed);
+    }
+
+    /// Resident weight bytes of the scorer currently serving `variant`
+    /// (0 until a worker reports in).
+    pub fn resident_weight_bytes(&self, variant: Variant) -> u64 {
+        self.resident_weight_bytes[variant.index()].load(Ordering::Relaxed)
     }
 
     pub fn record_latency_us(&self, us: u64) {
@@ -83,7 +102,7 @@ impl Metrics {
 
     pub fn summary(&self) -> String {
         format!(
-            "submitted={} completed={} rejected={} errors={} swaps={} batches={} mean_batch={:.2} p50={}us p95={}us p99={}us",
+            "submitted={} completed={} rejected={} errors={} swaps={} batches={} mean_batch={:.2} p50={}us p95={}us p99={}us resident_bytes[dense]={} resident_bytes[hss]={}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
@@ -94,6 +113,8 @@ impl Metrics {
             self.latency_percentile_us(0.5),
             self.latency_percentile_us(0.95),
             self.latency_percentile_us(0.99),
+            self.resident_weight_bytes(Variant::Dense),
+            self.resident_weight_bytes(Variant::Hss),
         )
     }
 }
@@ -137,5 +158,19 @@ mod tests {
         m.submitted.fetch_add(3, Ordering::Relaxed);
         let s = m.summary();
         assert!(s.contains("submitted=3"));
+    }
+
+    #[test]
+    fn resident_bytes_gauge_per_variant() {
+        let m = Metrics::new();
+        assert_eq!(m.resident_weight_bytes(Variant::Hss), 0);
+        m.set_resident_weight_bytes(Variant::Hss, 4096);
+        m.set_resident_weight_bytes(Variant::Dense, 8192);
+        assert_eq!(m.resident_weight_bytes(Variant::Hss), 4096);
+        assert_eq!(m.resident_weight_bytes(Variant::Dense), 8192);
+        // gauge semantics: a swap overwrites, never accumulates
+        m.set_resident_weight_bytes(Variant::Hss, 2048);
+        assert_eq!(m.resident_weight_bytes(Variant::Hss), 2048);
+        assert!(m.summary().contains("resident_bytes[hss]=2048"));
     }
 }

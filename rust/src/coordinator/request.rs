@@ -13,10 +13,21 @@ pub enum Variant {
 }
 
 impl Variant {
+    /// Number of variants — sizes per-variant metric arrays.
+    pub const COUNT: usize = 2;
+
     pub fn name(&self) -> &'static str {
         match self {
             Variant::Dense => "dense",
             Variant::Hss => "hss",
+        }
+    }
+
+    /// Dense index into per-variant metric arrays (`0..Variant::COUNT`).
+    pub fn index(&self) -> usize {
+        match self {
+            Variant::Dense => 0,
+            Variant::Hss => 1,
         }
     }
 }

@@ -71,7 +71,7 @@ impl Coordinator {
         lane.workers.push(std::thread::spawn(move || {
             match factory() {
                 Ok(scorer) => {
-                    run_worker_swappable(Box::new(scorer), batcher, metrics, swap_rx)
+                    run_worker_swappable(variant, Box::new(scorer), batcher, metrics, swap_rx)
                 }
                 Err(e) => {
                     crate::util::logging::log(
@@ -80,7 +80,7 @@ impl Coordinator {
                     );
                     // drain requests with errors, but keep the swap mailbox
                     // live so a later swap_variant can repair the lane
-                    run_worker_init_failed(format!("{e:#}"), batcher, metrics, swap_rx)
+                    run_worker_init_failed(variant, format!("{e:#}"), batcher, metrics, swap_rx)
                 }
             }
         }));
@@ -123,6 +123,74 @@ impl Coordinator {
         Ok(SwapTicket {
             expected,
             undelivered,
+            acks: ack_rx,
+        })
+    }
+
+    /// [`Coordinator::swap_variant`] with **background prefetch**: the
+    /// factory runs on a helper thread — store parse, payload decode, and
+    /// workspace warmup all happen off the serving lanes — and each worker
+    /// receives an already-built scorer it merely installs between
+    /// batches. This shrinks the swap window from "parse + install" to
+    /// "install": for multi-GB stores the worker never stops serving while
+    /// the incoming variant is read. Requires `S: Send` (native scorers
+    /// are; PJRT-backed ones must keep using [`Coordinator::swap_variant`],
+    /// whose factory runs on the worker thread).
+    ///
+    /// Returns immediately; the [`SwapTicket`] resolves once every worker
+    /// installed its prefetched scorer (or any build failed — the old
+    /// scorer then keeps serving, exactly like a failed `swap_variant`).
+    pub fn swap_variant_prefetched<S, F>(
+        &self,
+        variant: Variant,
+        factory: F,
+    ) -> anyhow::Result<SwapTicket>
+    where
+        S: Scorer + Send + 'static,
+        F: Fn() -> anyhow::Result<S> + Send + Sync + 'static,
+    {
+        let lane = self
+            .lanes
+            .get(&variant)
+            .ok_or_else(|| anyhow::anyhow!("no worker registered for variant {variant:?}"))?;
+        let (ack_tx, ack_rx) = channel();
+        // snapshot the mailboxes so the helper thread owns its own senders
+        let txs: Vec<Sender<SwapRequest>> = lane
+            .swap_txs
+            .iter()
+            .map(|m| m.lock().unwrap().clone())
+            .collect();
+        let expected = txs.len();
+        std::thread::spawn(move || {
+            for tx in txs {
+                // build here, off the serving lane
+                match factory() {
+                    Ok(scorer) => {
+                        let mut slot = Some(scorer);
+                        let req = SwapRequest {
+                            factory: Box::new(move || {
+                                let s = slot.take().expect("prefetched scorer installed once");
+                                Ok(Box::new(s) as BoxScorer)
+                            }),
+                            ack: ack_tx.clone(),
+                        };
+                        if tx.send(req).is_err() {
+                            // worker thread exited after the snapshot:
+                            // surface it as a failed ack so wait() errors
+                            // instead of timing out
+                            let gone = "worker exited before the prefetched swap arrived";
+                            let _ = ack_tx.send(Err(gone.into()));
+                        }
+                    }
+                    Err(e) => {
+                        let _ = ack_tx.send(Err(format!("{e:#}")));
+                    }
+                }
+            }
+        });
+        Ok(SwapTicket {
+            expected,
+            undelivered: 0,
             acks: ack_rx,
         })
     }
@@ -337,6 +405,57 @@ mod tests {
             .unwrap();
         assert!(after.error.is_none(), "{:?}", after.error);
         assert_eq!(c.metrics.swaps.load(Ordering::Relaxed), 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn prefetched_swap_replaces_scorer_and_failed_build_keeps_old() {
+        use std::sync::atomic::AtomicUsize;
+        let c = coordinator_with_mock(true); // lane starts failing
+        // count factory runs: prefetch builds once per worker, on a helper
+        // thread, before any worker mailbox sees the request
+        let builds = Arc::new(AtomicUsize::new(0));
+        let b2 = builds.clone();
+        let ticket = c
+            .swap_variant_prefetched(Variant::Dense, move || {
+                b2.fetch_add(1, Ordering::SeqCst);
+                Ok(MockScorer {
+                    vocab: 16,
+                    seq: 8,
+                    batch: 4,
+                    fail: false,
+                })
+            })
+            .unwrap();
+        assert_eq!(ticket.expected_acks(), 1);
+        ticket.wait(Duration::from_secs(5)).unwrap();
+        assert_eq!(builds.load(Ordering::SeqCst), 1);
+
+        let resp = c
+            .submit(Variant::Dense, (0..9).collect())
+            .unwrap()
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert!(resp.nll < 1e-3);
+        assert_eq!(c.metrics.swaps.load(Ordering::Relaxed), 1);
+
+        // a failing prefetch build is surfaced and leaves the (now
+        // healthy) scorer serving
+        let err = c
+            .swap_variant_prefetched(Variant::Dense, || -> anyhow::Result<MockScorer> {
+                anyhow::bail!("store gone mid-prefetch")
+            })
+            .unwrap()
+            .wait(Duration::from_secs(5))
+            .unwrap_err();
+        assert!(format!("{err}").contains("store gone mid-prefetch"), "{err}");
+        let resp = c
+            .submit(Variant::Dense, (0..9).collect())
+            .unwrap()
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap();
+        assert!(resp.error.is_none());
         c.shutdown();
     }
 

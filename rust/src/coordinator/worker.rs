@@ -10,9 +10,10 @@
 
 use crate::coordinator::batcher::{BatchPoll, Batcher};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::request::{ScoreRequest, ScoreResponse};
+use crate::coordinator::request::{ScoreRequest, ScoreResponse, Variant};
 use crate::eval::perplexity::window_nll;
 use crate::linalg::Matrix;
+use crate::util::logging::{log, Level};
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
@@ -33,6 +34,14 @@ pub trait Scorer {
     /// logits [t, vocab] per window; `windows` carry seq_len + 1 tokens and
     /// the scorer sees the first seq_len.
     fn score(&self, inputs: &[Vec<u32>]) -> anyhow::Result<Vec<Matrix>>;
+    /// Bytes resident for the variant-specific weights this scorer holds
+    /// (0 when unknown, e.g. device-resident AOT executables). Workers
+    /// report it per variant via `Metrics::set_resident_weight_bytes` and
+    /// log it on every hot-swap, so the f16-resident halving is observable
+    /// in serving logs.
+    fn resident_weight_bytes(&self) -> u64 {
+        0
+    }
 }
 
 /// A worker-owned scorer behind dynamic dispatch (hot-swap replaces it).
@@ -51,29 +60,42 @@ pub struct SwapRequest {
 
 /// Run the worker loop until the batcher closes (no hot-swap mailbox).
 pub fn run_worker<S: Scorer + 'static>(
+    variant: Variant,
     scorer: S,
     batcher: Arc<Batcher<ScoreRequest>>,
     metrics: Arc<Metrics>,
 ) {
     let (_tx, rx) = std::sync::mpsc::channel();
-    run_worker_swappable(Box::new(scorer), batcher, metrics, rx);
+    run_worker_swappable(variant, Box::new(scorer), batcher, metrics, rx);
 }
 
 /// Worker loop with a hot-swap mailbox: pending swaps apply between
 /// batches, so in-flight requests always complete on the scorer that
-/// dequeued them.
+/// dequeued them. The resident weight bytes of the installed scorer are
+/// published to the per-variant gauge at start and on every swap.
 pub fn run_worker_swappable(
+    variant: Variant,
     mut scorer: BoxScorer,
     batcher: Arc<Batcher<ScoreRequest>>,
     metrics: Arc<Metrics>,
     swaps: Receiver<SwapRequest>,
 ) {
+    metrics.set_resident_weight_bytes(variant, scorer.resident_weight_bytes());
     loop {
         while let Ok(req) = swaps.try_recv() {
             match (req.factory)() {
                 Ok(next) => {
                     scorer = next;
                     metrics.swaps.fetch_add(1, Ordering::Relaxed);
+                    let resident = scorer.resident_weight_bytes();
+                    metrics.set_resident_weight_bytes(variant, resident);
+                    log(
+                        Level::Info,
+                        format_args!(
+                            "swap[{}]: installed scorer, resident weight bytes = {resident}",
+                            variant.name()
+                        ),
+                    );
                     let _ = req.ack.send(Ok(()));
                 }
                 Err(e) => {
@@ -137,6 +159,7 @@ pub fn run_worker_swappable(
 /// `Coordinator::swap_variant` repairs the lane in place instead of
 /// leaving it permanently dead.
 pub fn run_worker_init_failed(
+    variant: Variant,
     init_err: String,
     batcher: Arc<Batcher<ScoreRequest>>,
     metrics: Arc<Metrics>,
@@ -148,7 +171,7 @@ pub fn run_worker_init_failed(
                 Ok(scorer) => {
                     metrics.swaps.fetch_add(1, Ordering::Relaxed);
                     let _ = req.ack.send(Ok(()));
-                    return run_worker_swappable(scorer, batcher, metrics, swaps);
+                    return run_worker_swappable(variant, scorer, batcher, metrics, swaps);
                 }
                 Err(e) => {
                     let _ = req.ack.send(Err(format!("{e:#}")));
@@ -197,6 +220,11 @@ impl Scorer for NativeDenseScorer {
         let refs: Vec<&[u32]> = inputs.iter().map(|w| w.as_slice()).collect();
         Ok(self.model.forward_batch(&refs))
     }
+
+    fn resident_weight_bytes(&self) -> u64 {
+        // the variant-specific weights are the q/k/v projections, dense f32
+        self.model.cfg.qkv_params() as u64 * 4
+    }
 }
 
 /// Native scorer around a compressed model. A polled batch is scored in
@@ -220,6 +248,13 @@ impl Scorer for NativeCompressedScorer {
     fn score(&self, inputs: &[Vec<u32>]) -> anyhow::Result<Vec<Matrix>> {
         let refs: Vec<&[u32]> = inputs.iter().map(|w| w.as_slice()).collect();
         Ok(self.model.forward_batch(&refs))
+    }
+
+    fn resident_weight_bytes(&self) -> u64 {
+        // compressed q/k/v factors at their resident dtype: a store-loaded
+        // (f16-native) model reports half of what the same model widened
+        // to f32 would
+        self.model.resident_weight_bytes() as u64
     }
 }
 
@@ -311,6 +346,7 @@ pub(crate) mod tests {
         let m2 = metrics.clone();
         let h = std::thread::spawn(move || {
             run_worker(
+                Variant::Dense,
                 MockScorer {
                     vocab: 16,
                     seq: 8,
@@ -341,6 +377,7 @@ pub(crate) mod tests {
         let m2 = metrics.clone();
         let h = std::thread::spawn(move || {
             run_worker(
+                Variant::Dense,
                 MockScorer {
                     vocab: 16,
                     seq: 8,
@@ -371,6 +408,7 @@ pub(crate) mod tests {
         let m2 = metrics.clone();
         let h = std::thread::spawn(move || {
             run_worker_swappable(
+                Variant::Dense,
                 Box::new(MockScorer {
                     vocab: 16,
                     seq: 8,
@@ -453,6 +491,7 @@ pub(crate) mod tests {
         let m2 = metrics.clone();
         let h = std::thread::spawn(move || {
             run_worker(
+                Variant::Dense,
                 MockScorer {
                     vocab: 16,
                     seq: 8,

@@ -7,4 +7,4 @@ pub mod sweep;
 pub use perplexity::{
     perplexity, perplexity_batched, perplexity_parallel, perplexity_parallel_batched, PplResult,
 };
-pub use sweep::{sweep, sweep_refined, SweepPoint};
+pub use sweep::{eval_point, eval_point_dtyped, sweep, sweep_refined, SweepPoint};

@@ -3,7 +3,7 @@
 
 use crate::compress::{CompressorConfig, Method};
 use crate::eval::perplexity::{perplexity_parallel_batched, PplResult};
-use crate::linalg::Matrix;
+use crate::linalg::{Dtype, Matrix};
 use crate::model::{CompressedModel, Transformer};
 use crate::train::TrainConfig;
 use std::sync::Arc;
@@ -39,6 +39,13 @@ pub struct SweepPoint {
     /// cost side of the refined-vs-oneshot comparison, separate from
     /// `compress_secs` which stays one-shot-only
     pub refine_secs: f64,
+    /// resident dtype the perplexities were served at ("f32" or "f16") —
+    /// with `qkv_resident_bytes` this makes the memory/perplexity
+    /// trade-off the paper plots measurable end-to-end
+    pub dtype: String,
+    /// bytes actually resident for the compressed q/k/v weights at
+    /// `dtype` (f16 rows report half their f32 twin)
+    pub qkv_resident_bytes: usize,
 }
 
 impl SweepPoint {
@@ -47,7 +54,7 @@ impl SweepPoint {
     }
 }
 
-/// Evaluate one (method, config) cell.
+/// Evaluate one (method, config) cell at f32 serving residency.
 pub fn eval_point(
     base: &Arc<Transformer>,
     method: Method,
@@ -55,7 +62,21 @@ pub fn eval_point(
     windows: &[Vec<u32>],
     threads: usize,
 ) -> SweepPoint {
-    eval_cell(base, method, cfg, None, windows, threads)
+    eval_cell(base, method, cfg, None, windows, threads, Dtype::F32)
+}
+
+/// Evaluate one cell at an explicit serving dtype: `Dtype::F16` narrows
+/// the compressed factors before scoring, so the row's perplexity and
+/// `qkv_resident_bytes` reflect exactly what an f16-resident server runs.
+pub fn eval_point_dtyped(
+    base: &Arc<Transformer>,
+    method: Method,
+    cfg: CompressorConfig,
+    windows: &[Vec<u32>],
+    threads: usize,
+    dtype: Dtype,
+) -> SweepPoint {
+    eval_cell(base, method, cfg, None, windows, threads, dtype)
 }
 
 /// Precomputed refine-stage inputs, shared across grid cells: dense
@@ -90,10 +111,10 @@ pub fn eval_point_refined(
     threads: usize,
 ) -> SweepPoint {
     if method == Method::Dense {
-        return eval_cell(base, method, cfg, None, windows, threads);
+        return eval_cell(base, method, cfg, None, windows, threads, Dtype::F32);
     }
     let data = refine_data(base, windows);
-    eval_cell(base, method, cfg, Some((train_cfg, &data)), windows, threads)
+    eval_cell(base, method, cfg, Some((train_cfg, &data)), windows, threads, Dtype::F32)
 }
 
 fn eval_cell(
@@ -103,6 +124,7 @@ fn eval_cell(
     refine: Option<(&TrainConfig, &RefineData)>,
     windows: &[Vec<u32>],
     threads: usize,
+    dtype: Dtype,
 ) -> SweepPoint {
     if method == Method::Dense {
         let ppl =
@@ -123,11 +145,21 @@ fn eval_cell(
             ppl_refined: ppl.ppl,
             refine_steps: 0,
             refine_secs: 0.0,
+            // the dense baseline always serves f32 (the store keeps it
+            // bit-exact); its resident bytes are the f32 projections
+            dtype: Dtype::F32.name().to_string(),
+            qkv_resident_bytes: base.cfg.qkv_params() * 4,
         };
     }
     let t0 = std::time::Instant::now();
     let mut cm = CompressedModel::compress(base.clone(), method, cfg);
     let compress_secs = t0.elapsed().as_secs_f64();
+    if dtype == Dtype::F16 {
+        // serve at f16 residency: perplexities below measure exactly what
+        // an f16-resident server computes (fp16-quantized factors)
+        cm.narrow_to_f16();
+    }
+    let qkv_resident_bytes = cm.resident_weight_bytes();
     let oneshot: PplResult =
         perplexity_parallel_batched(windows, EVAL_BATCH, |ws| cm.forward_batch(ws), threads);
     // capture one-shot accounting before calibration touches the reports
@@ -137,12 +169,18 @@ fn eval_cell(
     let (ppl_refined, refine_steps, refine_secs) = match refine {
         Some((tc, data)) => {
             let t1 = std::time::Instant::now();
+            // training is f32-only; the refined model narrows back before
+            // its serving-dtype evaluation
+            cm.widen_to_f32();
             let cals = crate::train::calibrate_model_with(
                 &mut cm,
                 &data.projections,
                 &data.activations,
                 tc,
             );
+            if dtype == Dtype::F16 {
+                cm.narrow_to_f16();
+            }
             let refine_secs = t1.elapsed().as_secs_f64();
             let refined = perplexity_parallel_batched(
                 windows,
@@ -174,10 +212,13 @@ fn eval_cell(
         ppl_refined,
         refine_steps,
         refine_secs,
+        dtype: dtype.name().to_string(),
+        qkv_resident_bytes,
     }
 }
 
-/// Grid sweep: every method × config cell (dense evaluated once).
+/// Grid sweep: every method × config cell (dense evaluated once), served
+/// at f32 residency.
 pub fn sweep(
     base: &Arc<Transformer>,
     methods: &[Method],
@@ -185,12 +226,14 @@ pub fn sweep(
     windows: &[Vec<u32>],
     threads: usize,
 ) -> Vec<SweepPoint> {
-    sweep_refined(base, methods, configs, windows, threads, None)
+    sweep_refined(base, methods, configs, windows, threads, None, Dtype::F32)
 }
 
-/// Grid sweep with an optional refine stage: when `train_cfg` is given,
-/// every compressed cell is evaluated one-shot *and* after calibration,
-/// filling the refined-vs-oneshot comparison columns.
+/// Grid sweep with an optional refine stage and an explicit serving
+/// dtype: when `train_cfg` is given, every compressed cell is evaluated
+/// one-shot *and* after calibration, filling the refined-vs-oneshot
+/// comparison columns; `Dtype::F16` serves every compressed cell
+/// f16-resident (the dense baseline always stays f32).
 pub fn sweep_refined(
     base: &Arc<Transformer>,
     methods: &[Method],
@@ -198,6 +241,7 @@ pub fn sweep_refined(
     windows: &[Vec<u32>],
     threads: usize,
     train_cfg: Option<&TrainConfig>,
+    dtype: Dtype,
 ) -> Vec<SweepPoint> {
     // teachers + calibration activations depend only on (base, windows):
     // capture them once for the whole grid, not once per cell
@@ -213,13 +257,16 @@ pub fn sweep_refined(
                 (Some(tc), Some(d)) => Some((tc, d)),
                 _ => None,
             };
-            out.push(eval_cell(base, m, cfg, refine, windows, threads));
+            out.push(eval_cell(base, m, cfg, refine, windows, threads, dtype));
         }
     }
     out
 }
 
-const CSV_HEADER: &str = "method,rank,sparsity,depth,ppl,mean_nll,qkv_bytes,qkv_dense_bytes,qkv_ratio,model_ratio,rel_error,compress_secs,ppl_refined,refine_steps,refine_secs";
+const CSV_HEADER: &str = "method,rank,sparsity,depth,ppl,mean_nll,qkv_bytes,qkv_dense_bytes,qkv_ratio,model_ratio,rel_error,compress_secs,ppl_refined,refine_steps,refine_secs,dtype,qkv_resident_bytes";
+/// Pre-dtype header (15 columns) — still accepted by [`from_csv`] so
+/// sweeps written before the dtype column stay loadable.
+const LEGACY_CSV_HEADER: &str = "method,rank,sparsity,depth,ppl,mean_nll,qkv_bytes,qkv_dense_bytes,qkv_ratio,model_ratio,rel_error,compress_secs,ppl_refined,refine_steps,refine_secs";
 
 /// CSV emitter (plot-ready, one row per point).
 pub fn to_csv(points: &[SweepPoint]) -> String {
@@ -227,7 +274,7 @@ pub fn to_csv(points: &[SweepPoint]) -> String {
     s.push('\n');
     for p in points {
         s.push_str(&format!(
-            "{},{},{},{},{:.6},{:.6},{},{},{:.4},{:.4},{:.6},{:.3},{:.6},{},{:.3}\n",
+            "{},{},{},{},{:.6},{:.6},{},{},{:.4},{:.4},{:.6},{:.3},{:.6},{},{:.3},{},{}\n",
             p.method,
             p.rank,
             p.sparsity,
@@ -242,7 +289,9 @@ pub fn to_csv(points: &[SweepPoint]) -> String {
             p.compress_secs,
             p.ppl_refined,
             p.refine_steps,
-            p.refine_secs
+            p.refine_secs,
+            p.dtype,
+            p.qkv_resident_bytes
         ));
     }
     s
@@ -261,9 +310,12 @@ where
 pub fn from_csv(s: &str) -> Result<Vec<SweepPoint>, String> {
     let mut lines = s.lines();
     let header = lines.next().ok_or("empty csv")?;
-    if header != CSV_HEADER {
+    if header != CSV_HEADER && header != LEGACY_CSV_HEADER {
         return Err(format!("unexpected csv header '{header}'"));
     }
+    // rows must match the declared header: a truncated current-format row
+    // must error, not silently parse as a legacy (f32) row
+    let want_cols = if header == CSV_HEADER { 17 } else { 15 };
     let mut out = Vec::new();
     for (i, line) in lines.enumerate() {
         if line.is_empty() {
@@ -271,9 +323,19 @@ pub fn from_csv(s: &str) -> Result<Vec<SweepPoint>, String> {
         }
         let lineno = i + 2;
         let cols: Vec<&str> = line.split(',').collect();
-        if cols.len() != 15 {
-            return Err(format!("row {lineno}: {} columns (want 15)", cols.len()));
+        // 17 columns today; 15-column files (legacy header) predate the
+        // dtype / qkv_resident_bytes columns and read back as
+        // f32-resident with unknown (0) resident bytes
+        if cols.len() != want_cols {
+            return Err(format!("row {lineno}: {} columns (want {want_cols})", cols.len()));
         }
+        let dtype = if want_cols == 17 {
+            cols[15]
+                .parse::<Dtype>()
+                .map_err(|e| format!("row {lineno}: {e}"))?
+        } else {
+            Dtype::F32
+        };
         out.push(SweepPoint {
             method: cols[0].parse::<Method>()?,
             rank: parse_num(cols[1], lineno)?,
@@ -290,6 +352,12 @@ pub fn from_csv(s: &str) -> Result<Vec<SweepPoint>, String> {
             ppl_refined: parse_num(cols[12], lineno)?,
             refine_steps: parse_num(cols[13], lineno)?,
             refine_secs: parse_num(cols[14], lineno)?,
+            dtype: dtype.name().to_string(),
+            qkv_resident_bytes: if want_cols == 17 {
+                parse_num(cols[16], lineno)?
+            } else {
+                0 // unknown for pre-dtype files
+            },
         });
     }
     Ok(out)
@@ -376,8 +444,41 @@ mod tests {
             .lines()
             .next()
             .unwrap()
-            .ends_with("ppl_refined,refine_steps,refine_secs"));
+            .ends_with("refine_steps,refine_secs,dtype,qkv_resident_bytes"));
         assert_eq!(csv.lines().count(), 2);
+    }
+
+    #[test]
+    fn f16_point_halves_resident_bytes_within_ppl_tolerance() {
+        let (base, w) = tiny();
+        let cfg = CompressorConfig {
+            rank: 8,
+            sparsity: 0.1,
+            depth: 1,
+            min_leaf: 4,
+            ..Default::default()
+        };
+        let p32 = eval_point_dtyped(&base, Method::SHssRcm, cfg, &w, 1, Dtype::F32);
+        let p16 = eval_point_dtyped(&base, Method::SHssRcm, cfg, &w, 1, Dtype::F16);
+        assert_eq!(p32.dtype, "f32");
+        assert_eq!(p16.dtype, "f16");
+        // resident weight memory exactly halves; format accounting is
+        // unchanged, so the two rows stay comparable on the storage axis
+        assert_eq!(p16.qkv_resident_bytes * 2, p32.qkv_resident_bytes);
+        assert_eq!(p16.qkv_bytes, p32.qkv_bytes);
+        // fp16 round-trip tolerance on the quality axis
+        assert!(
+            (p16.ppl - p32.ppl).abs() / p32.ppl < 0.05,
+            "f32 ppl {} vs f16 ppl {}",
+            p32.ppl,
+            p16.ppl
+        );
+        // the dtype column round-trips through the csv
+        let csv = to_csv(&[p32, p16]);
+        let parsed = from_csv(&csv).unwrap();
+        assert_eq!(parsed[0].dtype, "f32");
+        assert_eq!(parsed[1].dtype, "f16");
+        assert_eq!(to_csv(&parsed), csv);
     }
 
     #[test]
@@ -401,6 +502,19 @@ mod tests {
         assert_eq!(to_csv(&parsed), csv, "reserialization must be lossless");
         assert_eq!(parsed[1].refine_steps, 150);
         assert_eq!(parsed[1].method, Method::SSvd);
+    }
+
+    #[test]
+    fn from_csv_accepts_legacy_15_column_files() {
+        let legacy = format!(
+            "{LEGACY_CSV_HEADER}\ndense,0,0,0,12.5,2.52,100,100,1.0,1.0,0.0,0.0,12.5,0,0.0\n"
+        );
+        let pts = from_csv(&legacy).unwrap();
+        assert_eq!(pts.len(), 1);
+        assert_eq!(pts[0].dtype, "f32");
+        assert_eq!(pts[0].qkv_resident_bytes, 0); // unknown pre-dtype
+        // re-serializes in the current 17-column format
+        assert!(to_csv(&pts).starts_with(CSV_HEADER));
     }
 
     #[test]

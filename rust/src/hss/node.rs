@@ -113,9 +113,10 @@ impl HssNode {
     }
 
     /// Dense matrix represented by the tree (testing/verification only).
+    /// Always f32 — f16-resident factors are widened on the way out.
     pub fn reconstruct(&self) -> Matrix {
         match self {
-            HssNode::Leaf { d } => d.clone(),
+            HssNode::Leaf { d } => d.widen(),
             HssNode::Branch {
                 n,
                 sparse,
@@ -131,13 +132,75 @@ impl HssNode {
                 let mut rp = Matrix::zeros(*n, *n);
                 rp.set_block(0, 0, &c0.reconstruct());
                 rp.set_block(n0, n0, &c1.reconstruct());
-                rp.set_block(0, n0, &u0.matmul(r0));
-                rp.set_block(n0, 0, &u1.matmul(r1));
+                rp.set_block(0, n0, &u0.widen().matmul(&r0.widen()));
+                rp.set_block(n0, 0, &u1.widen().matmul(&r1.widen()));
                 // undo the symmetric permutation: resid[perm[i], perm[j]] = rp[i, j]
                 let inv = perm.inverse();
                 let resid = rp.permute_sym(inv.indices());
                 sparse.to_dense().add(&resid)
             }
+        }
+    }
+
+    /// Narrow every resident weight buffer — leaf blocks, coupling
+    /// factors, and per-level spike values — to f16 in place (idempotent).
+    /// Permutations and sparse indices are untouched.
+    pub fn narrow_to_f16(&mut self) {
+        match self {
+            HssNode::Leaf { d } => d.narrow_to_f16(),
+            HssNode::Branch {
+                sparse,
+                u0,
+                r0,
+                u1,
+                r1,
+                c0,
+                c1,
+                ..
+            } => {
+                sparse.narrow_to_f16();
+                u0.narrow_to_f16();
+                r0.narrow_to_f16();
+                u1.narrow_to_f16();
+                r1.narrow_to_f16();
+                c0.narrow_to_f16();
+                c1.narrow_to_f16();
+            }
+        }
+    }
+
+    /// Widen every resident weight buffer back to f32 in place (exact;
+    /// idempotent) — required before training the tree.
+    pub fn widen_to_f32(&mut self) {
+        match self {
+            HssNode::Leaf { d } => d.widen_to_f32(),
+            HssNode::Branch {
+                sparse,
+                u0,
+                r0,
+                u1,
+                r1,
+                c0,
+                c1,
+                ..
+            } => {
+                sparse.widen_to_f32();
+                u0.widen_to_f32();
+                r0.widen_to_f32();
+                u1.widen_to_f32();
+                r1.widen_to_f32();
+                c0.widen_to_f32();
+                c1.widen_to_f32();
+            }
+        }
+    }
+
+    /// Dtype of the resident weight buffers (read off the first leaf —
+    /// narrow/widen keep the whole tree uniform).
+    pub fn weights_dtype(&self) -> crate::linalg::Dtype {
+        match self {
+            HssNode::Leaf { d } => d.dtype(),
+            HssNode::Branch { c0, .. } => c0.weights_dtype(),
         }
     }
 }

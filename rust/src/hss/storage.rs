@@ -84,6 +84,37 @@ impl HssNode {
         self.n() * self.n() * VALUE_BYTES
     }
 
+    /// Bytes the tree actually keeps resident for its weight values —
+    /// leaf blocks, coupling factors, and spike values at their current
+    /// dtype. Unlike [`HssNode::storage`] (the format's fp16 accounting),
+    /// this reflects in-memory residency: f32-resident trees pay 4 bytes
+    /// per value, f16-resident trees 2. Sparse-index and permutation
+    /// overhead is excluded (it is dtype-independent; `storage().bytes`
+    /// accounts for it).
+    pub fn resident_weight_bytes(&self) -> usize {
+        match self {
+            HssNode::Leaf { d } => d.resident_bytes(),
+            HssNode::Branch {
+                sparse,
+                u0,
+                r0,
+                u1,
+                r1,
+                c0,
+                c1,
+                ..
+            } => {
+                sparse.resident_value_bytes()
+                    + u0.resident_bytes()
+                    + r0.resident_bytes()
+                    + u1.resident_bytes()
+                    + r1.resident_bytes()
+                    + c0.resident_weight_bytes()
+                    + c1.resident_weight_bytes()
+            }
+        }
+    }
+
     /// params(HSS) / params(dense) — the paper's storage axis (stored
     /// values at a common precision). `storage().bytes` additionally
     /// accounts for sparse-index and permutation overhead.
@@ -143,6 +174,19 @@ mod tests {
         let s1 = build(&a, &opts(4, 0.05, 2)).storage().bytes;
         let s2 = build(&a, &opts(4, 0.30, 2)).storage().bytes;
         assert!(s1 < s2, "{s1} vs {s2}");
+    }
+
+    #[test]
+    fn narrowing_halves_resident_weight_bytes() {
+        let a = trained_like(64, 6);
+        let mut node = build(&a, &opts(4, 0.1, 2));
+        let f32_bytes = node.resident_weight_bytes();
+        // f32 residency: 4 bytes per stored value, indices excluded
+        assert_eq!(f32_bytes, node.storage().params * 4);
+        node.narrow_to_f16();
+        assert_eq!(node.resident_weight_bytes() * 2, f32_bytes);
+        // format accounting is dtype-independent
+        assert_eq!(node.storage().params * 2, node.resident_weight_bytes());
     }
 
     #[test]

@@ -57,9 +57,10 @@
 //! writer.push("layer0.wq", &compressed);
 //! writer.finish(Path::new("layer0.hsb1"))?;
 //!
-//! // ... cold-start forever: parse + fp16-widen only, no SVD
+//! // ... cold-start forever: parse only, no SVD — fp16 factors stay
+//! // f16-resident (half the bytes) and widen inside the batched kernels
 //! let file = StoreFile::open(Path::new("layer0.hsb1"))?;
-//! let (loaded, mut ws) = file.load_with_workspace("layer0.wq")?;
+//! let (loaded, mut ws) = file.load_native_with_workspace("layer0.wq")?;
 //! let mut y = vec![0.0f32; 256];
 //! loaded.matvec_with(&vec![1.0f32; 256], &mut y, &mut ws);
 //! # Ok(())
@@ -68,8 +69,12 @@
 //!
 //! Whole models go through [`store::ModelStore`] (one `HSB1` file per
 //! variant, entries keyed `(layer, projection)`); the serving
-//! [`coordinator`] cold-starts workers from it and atomically hot-swaps a
-//! variant under live traffic via `Coordinator::swap_variant`.
+//! [`coordinator`] cold-starts workers from it **at the store's dtype**
+//! (f16-resident factors — the format's memory claim is the resident
+//! memory claim), reports per-variant `resident_weight_bytes` in its
+//! metrics, and atomically hot-swaps a variant under live traffic via
+//! `Coordinator::swap_variant` (or `swap_variant_prefetched`, which
+//! parses the incoming variant on a helper thread).
 //!
 //! One-shot compression is only half the paper's deployment story: the
 //! [`train`] module fine-tunes the surviving factor values end-to-end

@@ -1,9 +1,19 @@
-//! Row-major dense f32 matrix with the operations the stack needs.
+//! Row-major dense matrix with the operations the stack needs.
 //!
 //! Matmul is cache-blocked with a transposed-B microkernel; `matvec` and
 //! `matvec_into` are the allocation-free hot-path variants used by the HSS
 //! apply and the transformer forward pass.
+//!
+//! Storage is dtype-generic ([`WeightBuf`]): factor matrices loaded from
+//! the `HSB1` store can stay f16-resident, and every batched kernel
+//! (`apply_batch_{into,add,t_into}`, the matvec family, `gemm_nt_add`)
+//! widens elements lane-by-lane in-register. Activations and accumulators
+//! are always f32 — only the resident weights narrow. f32-resident
+//! matrices behave exactly as before (`.data` derefs to `[f32]`);
+//! structural f32-only ops (`transpose`, `slice`, `row`, …) panic on an
+//! f16-resident matrix, which must be [`Matrix::widen`]ed first.
 
+use crate::linalg::weightbuf::{Dtype, WeightBuf, WeightElem};
 use crate::util::rng::Rng;
 use std::fmt;
 
@@ -11,12 +21,12 @@ use std::fmt;
 pub struct Matrix {
     pub rows: usize,
     pub cols: usize,
-    pub data: Vec<f32>,
+    pub data: WeightBuf,
 }
 
 impl fmt::Debug for Matrix {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(f, "Matrix({}x{})", self.rows, self.cols)
+        write!(f, "Matrix({}x{}, {})", self.rows, self.cols, self.data.dtype())
     }
 }
 
@@ -29,13 +39,28 @@ impl Matrix {
         Matrix {
             rows,
             cols,
-            data: vec![0.0; rows * cols],
+            data: WeightBuf::F32(vec![0.0; rows * cols]),
         }
     }
 
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Matrix {
         assert_eq!(data.len(), rows * cols, "data length mismatch");
-        Matrix { rows, cols, data }
+        Matrix {
+            rows,
+            cols,
+            data: WeightBuf::F32(data),
+        }
+    }
+
+    /// Build an f16-resident matrix from raw binary16 bit patterns — the
+    /// store's zero-widening load path.
+    pub fn from_f16_bits(rows: usize, cols: usize, bits: Vec<u16>) -> Matrix {
+        assert_eq!(bits.len(), rows * cols, "data length mismatch");
+        Matrix {
+            rows,
+            cols,
+            data: WeightBuf::F16(bits),
+        }
     }
 
     pub fn from_fn<F: FnMut(usize, usize) -> f32>(rows: usize, cols: usize, mut f: F) -> Matrix {
@@ -45,7 +70,44 @@ impl Matrix {
                 data.push(f(i, j));
             }
         }
-        Matrix { rows, cols, data }
+        Matrix::from_vec(rows, cols, data)
+    }
+
+    /// Element dtype of the resident storage.
+    pub fn dtype(&self) -> Dtype {
+        self.data.dtype()
+    }
+
+    /// Bytes this matrix keeps resident for its values.
+    pub fn resident_bytes(&self) -> usize {
+        self.data.resident_bytes()
+    }
+
+    /// Narrow the resident storage to f16 in place (round-to-nearest-even;
+    /// a no-op when already f16). The widened kernels then stream u16
+    /// weights directly.
+    pub fn narrow_to_f16(&mut self) {
+        if self.data.dtype() != Dtype::F16 {
+            self.data = self.data.to_f16();
+        }
+    }
+
+    /// Widen the resident storage to f32 in place (exact; a no-op when
+    /// already f32) — required before training or any structural
+    /// f32-only op.
+    pub fn widen_to_f32(&mut self) {
+        if self.data.dtype() != Dtype::F32 {
+            self.data = self.data.to_f32();
+        }
+    }
+
+    /// f32-resident copy (exact for either source dtype).
+    pub fn widen(&self) -> Matrix {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.to_f32(),
+        }
     }
 
     pub fn identity(n: usize) -> Matrix {
@@ -69,10 +131,11 @@ impl Matrix {
         m
     }
 
-    /// Copy column `c` out into a vector (the inverse of [`Matrix::from_cols`]).
+    /// Copy column `c` out into a vector (the inverse of
+    /// [`Matrix::from_cols`]); widens if the matrix is f16-resident.
     pub fn col(&self, c: usize) -> Vec<f32> {
         assert!(c < self.cols, "column out of range");
-        (0..self.rows).map(|i| self.data[i * self.cols + c]).collect()
+        (0..self.rows).map(|i| self.data.at(i * self.cols + c)).collect()
     }
 
     /// Standard-Gaussian random matrix (deterministic by seed).
@@ -86,7 +149,7 @@ impl Matrix {
     #[inline]
     pub fn at(&self, i: usize, j: usize) -> f32 {
         debug_assert!(i < self.rows && j < self.cols);
-        self.data[i * self.cols + j]
+        self.data.at(i * self.cols + j)
     }
 
     #[inline]
@@ -189,11 +252,12 @@ impl Matrix {
     }
 
     /// C = A @ Bᵀ given B already transposed — the dot-product microkernel.
+    /// Either operand may be f16-resident (widened in-register); C is f32.
     pub fn matmul_bt_into(&self, bt: &Matrix, c: &mut Matrix) {
         assert_eq!(self.cols, bt.cols, "inner dim mismatch");
         assert_eq!((c.rows, c.cols), (self.rows, bt.rows));
         c.data.fill(0.0);
-        gemm_nt_add(&self.data, &bt.data, self.rows, bt.rows, self.cols, &mut c.data);
+        self.matmul_bt_add(bt, c);
     }
 
     /// C += A @ Bᵀ given B already transposed — the accumulating form the
@@ -201,7 +265,21 @@ impl Matrix {
     pub fn matmul_bt_add(&self, bt: &Matrix, c: &mut Matrix) {
         assert_eq!(self.cols, bt.cols, "inner dim mismatch");
         assert_eq!((c.rows, c.cols), (self.rows, bt.rows));
-        gemm_nt_add(&self.data, &bt.data, self.rows, bt.rows, self.cols, &mut c.data);
+        let out = c.data.as_f32_mut();
+        match (&self.data, &bt.data) {
+            (WeightBuf::F32(a), WeightBuf::F32(b)) => {
+                gemm_nt_add_w(a.as_slice(), b.as_slice(), self.rows, bt.rows, self.cols, out)
+            }
+            (WeightBuf::F32(a), WeightBuf::F16(b)) => {
+                gemm_nt_add_w(a.as_slice(), b.as_slice(), self.rows, bt.rows, self.cols, out)
+            }
+            (WeightBuf::F16(a), WeightBuf::F32(b)) => {
+                gemm_nt_add_w(a.as_slice(), b.as_slice(), self.rows, bt.rows, self.cols, out)
+            }
+            (WeightBuf::F16(a), WeightBuf::F16(b)) => {
+                gemm_nt_add_w(a.as_slice(), b.as_slice(), self.rows, bt.rows, self.cols, out)
+            }
+        }
     }
 
     /// y = A @ x (allocates y).
@@ -215,8 +293,9 @@ impl Matrix {
     pub fn matvec_into(&self, x: &[f32], y: &mut [f32]) {
         assert_eq!(x.len(), self.cols);
         assert_eq!(y.len(), self.rows);
-        for i in 0..self.rows {
-            y[i] = dot(self.row(i), x, self.cols);
+        match &self.data {
+            WeightBuf::F32(w) => matvec_into_w(w.as_slice(), self.rows, self.cols, x, y),
+            WeightBuf::F16(w) => matvec_into_w(w.as_slice(), self.rows, self.cols, x, y),
         }
     }
 
@@ -224,8 +303,9 @@ impl Matrix {
     pub fn matvec_add(&self, x: &[f32], y: &mut [f32]) {
         assert_eq!(x.len(), self.cols);
         assert_eq!(y.len(), self.rows);
-        for i in 0..self.rows {
-            y[i] += dot(self.row(i), x, self.cols);
+        match &self.data {
+            WeightBuf::F32(w) => matvec_add_w(w.as_slice(), self.rows, self.cols, x, y),
+            WeightBuf::F16(w) => matvec_add_w(w.as_slice(), self.rows, self.cols, x, y),
         }
     }
 
@@ -242,14 +322,9 @@ impl Matrix {
         assert_eq!(x.len(), self.rows);
         assert_eq!(y.len(), self.cols);
         y.fill(0.0);
-        for i in 0..self.rows {
-            let xi = x[i];
-            if xi != 0.0 {
-                let row = self.row(i);
-                for (yj, &r) in y.iter_mut().zip(row) {
-                    *yj += xi * r;
-                }
-            }
+        match &self.data {
+            WeightBuf::F32(w) => matvec_t_add_w(w.as_slice(), self.rows, self.cols, x, y),
+            WeightBuf::F16(w) => matvec_t_add_w(w.as_slice(), self.rows, self.cols, x, y),
         }
     }
 
@@ -265,42 +340,15 @@ impl Matrix {
     /// Y += A @ X for a row-major column block X [cols, k] → Y [rows, k].
     /// The k=1 case degenerates to the dot-kernel matvec; for k > 1 the
     /// inner loop is a 4-way-unrolled axpy over the contiguous k lane,
-    /// with X kept hot in cache by blocking over A's columns.
+    /// with X kept hot in cache by blocking over A's columns. f16-resident
+    /// weights are widened once per element and reused across all k lanes
+    /// — the batch is what amortizes the u16 → f32 conversion.
     pub fn apply_batch_add(&self, x: &[f32], y: &mut [f32], k: usize) {
         assert_eq!(x.len(), self.cols * k, "input block shape mismatch");
         assert_eq!(y.len(), self.rows * k, "output block shape mismatch");
-        if k == 1 {
-            for i in 0..self.rows {
-                y[i] += dot(self.row(i), x, self.cols);
-            }
-            return;
-        }
-        for jb in (0..self.cols).step_by(NC) {
-            let jmax = (jb + NC).min(self.cols);
-            for i in 0..self.rows {
-                let arow = self.row(i);
-                let yrow = &mut y[i * k..(i + 1) * k];
-                let mut j = jb;
-                while j + 4 <= jmax {
-                    let (a0, a1, a2, a3) = (arow[j], arow[j + 1], arow[j + 2], arow[j + 3]);
-                    let x0 = &x[j * k..(j + 1) * k];
-                    let x1 = &x[(j + 1) * k..(j + 2) * k];
-                    let x2 = &x[(j + 2) * k..(j + 3) * k];
-                    let x3 = &x[(j + 3) * k..(j + 4) * k];
-                    for c in 0..k {
-                        yrow[c] += a0 * x0[c] + a1 * x1[c] + a2 * x2[c] + a3 * x3[c];
-                    }
-                    j += 4;
-                }
-                while j < jmax {
-                    let aij = arow[j];
-                    let xrow = &x[j * k..(j + 1) * k];
-                    for c in 0..k {
-                        yrow[c] += aij * xrow[c];
-                    }
-                    j += 1;
-                }
-            }
+        match &self.data {
+            WeightBuf::F32(w) => apply_batch_add_w(w.as_slice(), self.rows, self.cols, x, y, k),
+            WeightBuf::F16(w) => apply_batch_add_w(w.as_slice(), self.rows, self.cols, x, y, k),
         }
     }
 
@@ -326,21 +374,9 @@ impl Matrix {
             return;
         }
         y.fill(0.0);
-        for jb in (0..self.cols).step_by(NC) {
-            let jmax = (jb + NC).min(self.cols);
-            for i in 0..self.rows {
-                let arow = &self.row(i)[jb..jmax];
-                let xrow = &x[i * k..(i + 1) * k];
-                for (jo, &aij) in arow.iter().enumerate() {
-                    if aij == 0.0 {
-                        continue;
-                    }
-                    let yrow = &mut y[(jb + jo) * k..(jb + jo + 1) * k];
-                    for c in 0..k {
-                        yrow[c] += aij * xrow[c];
-                    }
-                }
-            }
+        match &self.data {
+            WeightBuf::F32(w) => apply_batch_t_add_w(w.as_slice(), self.rows, self.cols, x, y, k),
+            WeightBuf::F16(w) => apply_batch_t_add_w(w.as_slice(), self.rows, self.cols, x, y, k),
         }
     }
 
@@ -361,10 +397,32 @@ impl Matrix {
     }
 }
 
+// ---------------------------------------------------------------- kernels
+//
+// The generic kernels are monomorphized per weight dtype: `E::widen` is
+// the identity for f32 (compiling to exactly the pre-dtype-generic code)
+// and an in-register u16 → binary16 → f32 conversion for f16-resident
+// weights. Activations (`x`), outputs (`y`/`out`), and every accumulator
+// stay f32.
+
 /// OUT[m, n] += A[m, k] @ B[n, k]ᵀ over raw row-major slices — the shared
 /// rank-k update kernel behind `matmul_bt_into`/`matmul_bt_add` and every
 /// batched factor gradient (k = 1 is the classic outer-product update).
+/// The f32-slice form used by the training backward passes.
 pub fn gemm_nt_add(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, out: &mut [f32]) {
+    gemm_nt_add_w(a, b, m, n, k, out)
+}
+
+/// Dtype-generic [`gemm_nt_add`]: either operand may be a widened-on-read
+/// weight slice (f32 or f16-as-u16).
+pub fn gemm_nt_add_w<A: WeightElem, B: WeightElem>(
+    a: &[A],
+    b: &[B],
+    m: usize,
+    n: usize,
+    k: usize,
+    out: &mut [f32],
+) {
     assert_eq!(a.len(), m * k, "gemm_nt_add: A shape mismatch");
     assert_eq!(b.len(), n * k, "gemm_nt_add: B shape mismatch");
     assert_eq!(out.len(), m * n, "gemm_nt_add: OUT shape mismatch");
@@ -376,7 +434,7 @@ pub fn gemm_nt_add(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, out: &mut
                 let arow = &a[i * k..(i + 1) * k];
                 let orow = &mut out[i * n..(i + 1) * n];
                 for j in jb..jmax {
-                    orow[j] += dot(arow, &b[j * k..(j + 1) * k], k);
+                    orow[j] += dot_w(arow, &b[j * k..(j + 1) * k], k);
                 }
             }
         }
@@ -389,6 +447,12 @@ pub fn gemm_nt_add(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, out: &mut
 /// (measured in EXPERIMENTS.md §Perf).
 #[inline]
 pub fn dot(a: &[f32], b: &[f32], k: usize) -> f32 {
+    dot_w(a, b, k)
+}
+
+/// Dtype-generic [`dot`]: elements widen in-register as they stream.
+#[inline]
+pub fn dot_w<A: WeightElem, B: WeightElem>(a: &[A], b: &[B], k: usize) -> f32 {
     let a = &a[..k];
     let b = &b[..k];
     let mut acc = [0.0f32; 8];
@@ -397,14 +461,120 @@ pub fn dot(a: &[f32], b: &[f32], k: usize) -> f32 {
         let i = c * 8;
         let (aa, bb) = (&a[i..i + 8], &b[i..i + 8]);
         for l in 0..8 {
-            acc[l] += aa[l] * bb[l];
+            acc[l] += aa[l].widen() * bb[l].widen();
         }
     }
     let mut total = acc.iter().sum::<f32>();
     for i in chunks * 8..k {
-        total += a[i] * b[i];
+        total += a[i].widen() * b[i].widen();
     }
     total
+}
+
+/// y = W x over a raw row-major weight slice (the k = 1 dot kernel).
+fn matvec_into_w<E: WeightElem>(w: &[E], rows: usize, cols: usize, x: &[f32], y: &mut [f32]) {
+    for (i, yi) in y.iter_mut().enumerate().take(rows) {
+        *yi = dot_w(&w[i * cols..(i + 1) * cols], x, cols);
+    }
+}
+
+/// y += W x over a raw row-major weight slice.
+fn matvec_add_w<E: WeightElem>(w: &[E], rows: usize, cols: usize, x: &[f32], y: &mut [f32]) {
+    for (i, yi) in y.iter_mut().enumerate().take(rows) {
+        *yi += dot_w(&w[i * cols..(i + 1) * cols], x, cols);
+    }
+}
+
+/// y += Wᵀ x over a raw row-major weight slice (caller zeroes y for the
+/// overwriting form).
+fn matvec_t_add_w<E: WeightElem>(w: &[E], rows: usize, cols: usize, x: &[f32], y: &mut [f32]) {
+    for i in 0..rows {
+        let xi = x[i];
+        if xi != 0.0 {
+            let row = &w[i * cols..(i + 1) * cols];
+            for (yj, &r) in y.iter_mut().zip(row) {
+                *yj += xi * r.widen();
+            }
+        }
+    }
+}
+
+/// Y += W X over a raw row-major weight slice and [cols, k] column block.
+/// Each weight element is widened once and reused across all k lanes.
+fn apply_batch_add_w<E: WeightElem>(
+    w: &[E],
+    rows: usize,
+    cols: usize,
+    x: &[f32],
+    y: &mut [f32],
+    k: usize,
+) {
+    if k == 1 {
+        matvec_add_w(w, rows, cols, x, y);
+        return;
+    }
+    for jb in (0..cols).step_by(NC) {
+        let jmax = (jb + NC).min(cols);
+        for i in 0..rows {
+            let arow = &w[i * cols..(i + 1) * cols];
+            let yrow = &mut y[i * k..(i + 1) * k];
+            let mut j = jb;
+            while j + 4 <= jmax {
+                let (a0, a1, a2, a3) = (
+                    arow[j].widen(),
+                    arow[j + 1].widen(),
+                    arow[j + 2].widen(),
+                    arow[j + 3].widen(),
+                );
+                let x0 = &x[j * k..(j + 1) * k];
+                let x1 = &x[(j + 1) * k..(j + 2) * k];
+                let x2 = &x[(j + 2) * k..(j + 3) * k];
+                let x3 = &x[(j + 3) * k..(j + 4) * k];
+                for c in 0..k {
+                    yrow[c] += a0 * x0[c] + a1 * x1[c] + a2 * x2[c] + a3 * x3[c];
+                }
+                j += 4;
+            }
+            while j < jmax {
+                let aij = arow[j].widen();
+                let xrow = &x[j * k..(j + 1) * k];
+                for c in 0..k {
+                    yrow[c] += aij * xrow[c];
+                }
+                j += 1;
+            }
+        }
+    }
+}
+
+/// Y += Wᵀ X over a raw row-major weight slice and [rows, k] column block
+/// (caller zeroes Y for the overwriting form). Blocked over W's columns so
+/// the written Y rows stay cache-resident.
+fn apply_batch_t_add_w<E: WeightElem>(
+    w: &[E],
+    rows: usize,
+    cols: usize,
+    x: &[f32],
+    y: &mut [f32],
+    k: usize,
+) {
+    for jb in (0..cols).step_by(NC) {
+        let jmax = (jb + NC).min(cols);
+        for i in 0..rows {
+            let arow = &w[i * cols + jb..i * cols + jmax];
+            let xrow = &x[i * k..(i + 1) * k];
+            for (jo, &aij) in arow.iter().enumerate() {
+                let aij = aij.widen();
+                if aij == 0.0 {
+                    continue;
+                }
+                let yrow = &mut y[(jb + jo) * k..(jb + jo + 1) * k];
+                for c in 0..k {
+                    yrow[c] += aij * xrow[c];
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -598,6 +768,66 @@ mod tests {
         for (x, y) in c2.data.iter().zip(&c1.data) {
             assert!((x - 2.0 * y).abs() < 1e-4);
         }
+    }
+
+    /// The f16 contract: a narrowed matrix's kernels are bit-identical to
+    /// running the f32 kernels on the fp16-quantized values — same
+    /// arithmetic order, weights merely widened in-register.
+    #[test]
+    fn f16_kernels_bit_match_quantized_f32() {
+        use crate::util::fp16::quantize_f16;
+        check(10, |rng| {
+            let rows = 3 + rng.below(30);
+            let cols = 3 + rng.below(30);
+            let k = 1 + rng.below(9);
+            let a = Matrix::randn(rows, cols, rng.next_u64());
+            let mut q = a.clone();
+            quantize_f16(q.data.as_f32_mut());
+            let mut h = a.clone();
+            h.narrow_to_f16();
+            assert_eq!(h.dtype(), crate::linalg::Dtype::F16);
+            assert_eq!(h.resident_bytes() * 2, a.resident_bytes());
+
+            let x: Vec<f32> = (0..cols * k).map(|_| rng.gaussian_f32()).collect();
+            let mut yq = vec![0.0f32; rows * k];
+            let mut yh = vec![0.0f32; rows * k];
+            q.apply_batch_into(&x, &mut yq, k);
+            h.apply_batch_into(&x, &mut yh, k);
+            if yq != yh {
+                return Err("apply_batch f16 != quantized f32".into());
+            }
+
+            let xt: Vec<f32> = (0..rows * k).map(|_| rng.gaussian_f32()).collect();
+            let mut tq = vec![0.0f32; cols * k];
+            let mut th = vec![0.0f32; cols * k];
+            q.apply_batch_t_into(&xt, &mut tq, k);
+            h.apply_batch_t_into(&xt, &mut th, k);
+            if tq != th {
+                return Err("apply_batch_t f16 != quantized f32".into());
+            }
+
+            // widening recovers the quantized values exactly
+            if h.widen() != q {
+                return Err("widen() lost bits".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn f16_matmul_bt_matches_quantized() {
+        use crate::util::fp16::quantize_f16;
+        let a = Matrix::randn(9, 5, 31);
+        let bt = Matrix::randn(7, 5, 32);
+        let mut aq = a.clone();
+        quantize_f16(aq.data.as_f32_mut());
+        let mut ah = a.clone();
+        ah.narrow_to_f16();
+        let mut c1 = Matrix::zeros(9, 7);
+        let mut c2 = Matrix::zeros(9, 7);
+        aq.matmul_bt_into(&bt, &mut c1);
+        ah.matmul_bt_into(&bt, &mut c2);
+        assert_eq!(c1, c2);
     }
 
     #[test]

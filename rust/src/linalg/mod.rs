@@ -12,8 +12,10 @@ pub mod permutation;
 pub mod qr;
 pub mod rsvd;
 pub mod svd;
+pub mod weightbuf;
 
 pub use matrix::Matrix;
 pub use permutation::Permutation;
+pub use weightbuf::{Dtype, WeightBuf, WeightElem};
 pub use rsvd::{randomized_svd, RsvdOptions};
 pub use svd::{truncated_svd, Svd};

@@ -26,7 +26,7 @@ pub fn rel_fro_error(a: &Matrix, b: &Matrix) -> f64 {
 
 /// Spectral-norm estimate by power iteration (‖A‖₂).
 pub fn spectral_est(m: &Matrix, iters: usize, seed: u64) -> f64 {
-    let mut x = Matrix::randn(m.cols, 1, seed).data;
+    let mut x: Vec<f32> = Matrix::randn(m.cols, 1, seed).col(0);
     let nx = norm2(&x).max(1e-30);
     x.iter_mut().for_each(|v| *v /= nx as f32);
     let mut sigma = 0.0;

@@ -1,0 +1,288 @@
+//! Dtype-generic element storage for resident weights.
+//!
+//! The paper's storage accounting is fp16, and the `HSB1` store writes
+//! fp16 factors — but until this layer existed the loader widened every
+//! value to f32, so served models were resident at twice the bytes the
+//! format pays for. [`WeightBuf`] lets every weight-holding type
+//! ([`crate::linalg::Matrix`] factors, [`crate::sparse::Csr`] values, HSS
+//! leaves/couplings) stay half-precision in memory; the batched kernels
+//! widen lane-by-lane as the weights stream through, which the batch
+//! amortizes over its k columns.
+//!
+//! Residency contract:
+//! - **f32-resident** buffers behave exactly like `Vec<f32>` (the buffer
+//!   derefs to `[f32]`), so compression, training, and every pre-existing
+//!   f32 code path is unchanged.
+//! - **f16-resident** buffers only flow through dtype-aware code: the
+//!   widened kernels in `linalg::matrix` / `sparse::csr`, storage
+//!   accounting, and the store codec. Touching one through the f32 deref
+//!   panics with a pointed message — training requires an explicit
+//!   `widen_to_f32` first (`finetune` trains f32 and narrows on save).
+//!
+//! Because f16 → f32 conversion is exact and the kernels monomorphize the
+//! same arithmetic for both dtypes, an f16-resident apply is bit-identical
+//! to quantizing the same factors in f32 and applying those — halving
+//! memory changes no numerics beyond the fp16 rounding the store already
+//! imposed.
+
+use crate::util::fp16::{f16_to_f32, f32_to_f16};
+
+/// Element dtype of a resident weight buffer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    F16,
+}
+
+impl Dtype {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::F16 => "f16",
+        }
+    }
+
+    /// Resident bytes per stored value.
+    pub fn value_bytes(&self) -> usize {
+        match self {
+            Dtype::F32 => 4,
+            Dtype::F16 => 2,
+        }
+    }
+}
+
+impl std::fmt::Display for Dtype {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for Dtype {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Dtype, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "f32" | "fp32" => Ok(Dtype::F32),
+            "f16" | "fp16" | "half" => Ok(Dtype::F16),
+            o => Err(format!("unknown dtype '{o}' (f32|f16)")),
+        }
+    }
+}
+
+/// A weight element the generic kernels can widen to f32 in-register.
+/// `widen` is the identity for f32, so the f32 monomorphization compiles
+/// to exactly the pre-dtype-generic kernels.
+pub trait WeightElem: Copy {
+    fn widen(self) -> f32;
+}
+
+impl WeightElem for f32 {
+    #[inline(always)]
+    fn widen(self) -> f32 {
+        self
+    }
+}
+
+impl WeightElem for u16 {
+    #[inline(always)]
+    fn widen(self) -> f32 {
+        f16_to_f32(self)
+    }
+}
+
+/// Dtype-generic element storage: f32 values, or f16 stored as raw `u16`
+/// bit patterns (the store's on-disk representation, kept resident).
+#[derive(Clone, PartialEq)]
+pub enum WeightBuf {
+    F32(Vec<f32>),
+    F16(Vec<u16>),
+}
+
+impl WeightBuf {
+    pub fn len(&self) -> usize {
+        match self {
+            WeightBuf::F32(v) => v.len(),
+            WeightBuf::F16(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            WeightBuf::F32(_) => Dtype::F32,
+            WeightBuf::F16(_) => Dtype::F16,
+        }
+    }
+
+    /// Actual bytes this buffer keeps resident.
+    pub fn resident_bytes(&self) -> usize {
+        self.len() * self.dtype().value_bytes()
+    }
+
+    /// Widening single-element read (valid for either dtype).
+    #[inline]
+    pub fn at(&self, i: usize) -> f32 {
+        match self {
+            WeightBuf::F32(v) => v[i],
+            WeightBuf::F16(v) => f16_to_f32(v[i]),
+        }
+    }
+
+    /// The f32 payload; panics for f16-resident buffers (the f32-only
+    /// paths — training, factorization — must widen first).
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            WeightBuf::F32(v) => v,
+            WeightBuf::F16(_) => panic!(
+                "f16-resident weight buffer used on an f32-only path (widen_to_f32 first)"
+            ),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> &mut [f32] {
+        match self {
+            WeightBuf::F32(v) => v,
+            WeightBuf::F16(_) => panic!(
+                "f16-resident weight buffer used on an f32-only path (widen_to_f32 first)"
+            ),
+        }
+    }
+
+    /// The raw f16 bit patterns; panics for f32-resident buffers.
+    pub fn as_f16(&self) -> &[u16] {
+        match self {
+            WeightBuf::F16(v) => v,
+            WeightBuf::F32(_) => panic!("f32-resident weight buffer has no f16 payload"),
+        }
+    }
+
+    /// Narrow to f16 residency (round-to-nearest-even; idempotent).
+    pub fn to_f16(&self) -> WeightBuf {
+        match self {
+            WeightBuf::F32(v) => WeightBuf::F16(v.iter().map(|&x| f32_to_f16(x)).collect()),
+            WeightBuf::F16(v) => WeightBuf::F16(v.clone()),
+        }
+    }
+
+    /// Widen to f32 residency (exact; idempotent).
+    pub fn to_f32(&self) -> WeightBuf {
+        match self {
+            WeightBuf::F32(v) => WeightBuf::F32(v.clone()),
+            WeightBuf::F16(v) => WeightBuf::F32(v.iter().map(|&h| f16_to_f32(h)).collect()),
+        }
+    }
+}
+
+impl From<Vec<f32>> for WeightBuf {
+    fn from(v: Vec<f32>) -> WeightBuf {
+        WeightBuf::F32(v)
+    }
+}
+
+impl From<Vec<u16>> for WeightBuf {
+    fn from(v: Vec<u16>) -> WeightBuf {
+        WeightBuf::F16(v)
+    }
+}
+
+/// f32-resident buffers transparently behave as `[f32]` so the
+/// compression/training substrate is unchanged; f16-resident buffers
+/// panic here by design (see the module docs).
+impl std::ops::Deref for WeightBuf {
+    type Target = [f32];
+
+    fn deref(&self) -> &[f32] {
+        self.as_f32()
+    }
+}
+
+impl std::ops::DerefMut for WeightBuf {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        self.as_f32_mut()
+    }
+}
+
+impl<'a> IntoIterator for &'a WeightBuf {
+    type Item = &'a f32;
+    type IntoIter = std::slice::Iter<'a, f32>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.as_f32().iter()
+    }
+}
+
+impl std::fmt::Debug for WeightBuf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "WeightBuf::{}[{}]", self.dtype().name(), self.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::fp16::quantize_f16;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn f32_buffer_behaves_like_a_slice() {
+        let mut b = WeightBuf::from(vec![1.0f32, 2.0, 3.0]);
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.dtype(), Dtype::F32);
+        assert_eq!(b.resident_bytes(), 12);
+        assert_eq!(b[1], 2.0);
+        b[1] = 5.0;
+        assert_eq!(b.at(1), 5.0);
+        let total: f32 = (&b).into_iter().sum();
+        assert_eq!(total, 9.0);
+    }
+
+    #[test]
+    fn narrow_matches_quantize_and_halves_bytes() {
+        let mut rng = Rng::new(3);
+        let xs: Vec<f32> = (0..257).map(|_| rng.gaussian_f32()).collect();
+        let b = WeightBuf::from(xs.clone());
+        let h = b.to_f16();
+        assert_eq!(h.dtype(), Dtype::F16);
+        assert_eq!(h.resident_bytes() * 2, b.resident_bytes());
+        let mut q = xs.clone();
+        quantize_f16(&mut q);
+        // widening back reproduces the fp16 round-trip exactly
+        let w = h.to_f32();
+        assert_eq!(w.as_f32(), q.as_slice());
+        for (i, &want) in q.iter().enumerate() {
+            assert_eq!(h.at(i), want, "at({i})");
+        }
+        // narrowing is idempotent
+        assert_eq!(h.to_f16(), h);
+    }
+
+    #[test]
+    fn dtype_parse_and_names() {
+        assert_eq!("f16".parse::<Dtype>().unwrap(), Dtype::F16);
+        assert_eq!("FP32".parse::<Dtype>().unwrap(), Dtype::F32);
+        assert!("f64".parse::<Dtype>().is_err());
+        assert_eq!(Dtype::F16.name(), "f16");
+        assert_eq!(Dtype::F32.value_bytes(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "f32-only path")]
+    fn f16_buffer_rejects_f32_deref() {
+        let b = WeightBuf::from(vec![1.0f32, 2.0]).to_f16();
+        let _ = b[0]; // deref to [f32] must panic, not silently misread
+    }
+
+    #[test]
+    fn widen_is_exact_for_every_f16_pattern_class() {
+        // exhaustive over all finite f16 bit patterns: u16::widen equals
+        // the codec's decode
+        for h in 0u16..=0xffff {
+            let a = WeightElem::widen(h);
+            let b = crate::util::fp16::f16_to_f32(h);
+            assert!(a == b || (a.is_nan() && b.is_nan()), "{h:#06x}");
+        }
+    }
+}

@@ -36,6 +36,9 @@ COMMANDS:
       [--ranks 8,16,32,64] [--sparsities 0.1,0.2,0.3] [--out sweep.csv]
       [--refine-steps N]  (also calibrate each cell; fills the
       ppl_refined / refine_steps comparison columns)
+      [--dtype f32|f16]  (serving residency of the compressed cells:
+      f16 halves resident weight bytes; the dtype and
+      qkv_resident_bytes CSV columns record the trade-off)
   finetune                      fine-tune compressed factors against the
                                 dense teacher (layer-wise calibration) and
                                 persist the refined model as a store variant
@@ -453,8 +456,14 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     } else {
         None
     };
+    // serving residency for the compressed cells: f16 rows measure the
+    // memory/perplexity trade-off at the store's native dtype
+    let dtype: hisolo::linalg::Dtype = args
+        .get_str("dtype", "f32")
+        .parse()
+        .map_err(anyhow::Error::msg)?;
     println!(
-        "sweep: {} methods x {} configs on {} windows{}",
+        "sweep: {} methods x {} configs on {} windows at {dtype} residency{}",
         Method::FIG3.len(),
         configs.len(),
         ws.len(),
@@ -471,6 +480,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         &ws,
         threads,
         train_cfg.as_ref(),
+        dtype,
     );
     let csv = to_csv(&points);
     if let Some(out) = args.get("out") {
@@ -519,16 +529,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 ),
                 Variant::Hss => {
                     let cm = if let Some(store_dir) = &from_store {
-                        // cold start from the HSB1 store: parse + fp16
-                        // widen only, no SVD/RCM recompression
+                        // cold start from the HSB1 store: parse only — fp16
+                        // factors stay f16-resident (the batched kernels
+                        // widen lane-by-lane), no SVD/RCM recompression
                         let store = ModelStore::open(store_dir);
                         let vname = args.get_str("store-variant", "shss-rcm");
                         let t0 = Instant::now();
                         let loaded = Arc::new(store.load_model(&vname, model)?);
                         println!(
-                            "cold-started '{vname}' from {} in {:.1} ms",
+                            "cold-started '{vname}' from {} in {:.1} ms ({}-resident, {} weight bytes)",
                             store_dir.display(),
-                            t0.elapsed().as_secs_f64() * 1e3
+                            t0.elapsed().as_secs_f64() * 1e3,
+                            loaded.weights_dtype(),
+                            loaded.resident_weight_bytes()
                         );
                         loaded
                     } else {

@@ -53,6 +53,12 @@ impl CompressedModel {
     /// layer of `base`; layer reports are reconstructed from the stored
     /// metadata (method, compression-time rel error) plus the decoded
     /// matrices' own storage accounting.
+    ///
+    /// Entries keep their **on-disk dtype**: fp16 factors stay f16-resident
+    /// (the batched kernels widen lane-by-lane), so a served model is
+    /// resident at the bytes the format pays for — no load-time widening.
+    /// Training a store-loaded model requires
+    /// [`CompressedModel::widen_to_f32`] first.
     pub fn from_store(
         base: Arc<Transformer>,
         store: &crate::store::StoreFile,
@@ -70,7 +76,7 @@ impl CompressedModel {
                     .meta(&name)
                     .ok_or_else(|| anyhow::anyhow!("store is missing entry '{name}'"))?
                     .clone();
-                let c = store.load(&name)?;
+                let c = store.load_native(&name)?;
                 if c.n() != d {
                     anyhow::bail!(
                         "entry '{name}' has n={} but the base model has d_model={d}",
@@ -145,6 +151,55 @@ impl CompressedModel {
 
     pub fn mean_rel_error(&self) -> f64 {
         summarize(&self.reports).mean_rel_error
+    }
+
+    /// Narrow every compressed factor to f16 residency in place
+    /// (idempotent) — both the served `qkv` matrices and the layer
+    /// reports' copies, so whole-process factor memory really halves.
+    /// Serving numerics are bit-identical to applying the fp16-quantized
+    /// values at f32 residency — only the memory halves.
+    pub fn narrow_to_f16(&mut self) {
+        for triple in &mut self.qkv {
+            for m in triple {
+                m.narrow_to_f16();
+            }
+        }
+        for r in &mut self.reports {
+            r.compressed.narrow_to_f16();
+        }
+    }
+
+    /// Widen every compressed factor back to f32 residency (exact;
+    /// idempotent) — required before `train::calibrate` touches the
+    /// model (both `qkv` and the report copies the refine stage trains).
+    pub fn widen_to_f32(&mut self) {
+        for triple in &mut self.qkv {
+            for m in triple {
+                m.widen_to_f32();
+            }
+        }
+        for r in &mut self.reports {
+            r.compressed.widen_to_f32();
+        }
+    }
+
+    /// Dtype of the served (q/k/v) weight buffers.
+    pub fn weights_dtype(&self) -> crate::linalg::Dtype {
+        self.qkv
+            .first()
+            .map(|t| t[0].weights_dtype())
+            .unwrap_or(crate::linalg::Dtype::F32)
+    }
+
+    /// Bytes actually resident for the variant-specific (compressed q/k/v)
+    /// weights at their current dtype — the number the coordinator reports
+    /// per scorer and logs on hot-swap.
+    pub fn resident_weight_bytes(&self) -> usize {
+        self.qkv
+            .iter()
+            .flat_map(|t| t.iter())
+            .map(|m| m.resident_weight_bytes())
+            .sum()
     }
 }
 

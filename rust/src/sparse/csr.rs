@@ -1,6 +1,13 @@
 //! Compressed-sparse-row matrix — the runtime format for the spike matrix S
 //! (row-contiguous spmv on the native hot path).
+//!
+//! Values are dtype-generic ([`WeightBuf`]): a spike matrix loaded from
+//! the `HSB1` store can stay f16-resident, and `matvec_add`/`spmm_add`
+//! widen each stored value in-register as it streams (one widen per nnz,
+//! amortized over the k lanes of a batch). Indices are untouched — only
+//! the resident value bytes narrow.
 
+use crate::linalg::weightbuf::{Dtype, WeightBuf, WeightElem};
 use crate::linalg::Matrix;
 use crate::sparse::Coo;
 
@@ -10,7 +17,7 @@ pub struct Csr {
     pub cols: usize,
     pub indptr: Vec<u32>,
     pub indices: Vec<u32>,
-    pub data: Vec<f32>,
+    pub data: WeightBuf,
 }
 
 impl Csr {
@@ -39,7 +46,32 @@ impl Csr {
             cols: coo.cols,
             indptr,
             indices,
-            data,
+            data: WeightBuf::F32(data),
+        }
+    }
+
+    /// Value dtype of the resident storage.
+    pub fn dtype(&self) -> Dtype {
+        self.data.dtype()
+    }
+
+    /// Bytes resident for the stored values (indices excluded).
+    pub fn resident_value_bytes(&self) -> usize {
+        self.data.resident_bytes()
+    }
+
+    /// Narrow the stored values to f16 in place (a no-op when already f16).
+    pub fn narrow_to_f16(&mut self) {
+        if self.data.dtype() != Dtype::F16 {
+            self.data = self.data.to_f16();
+        }
+    }
+
+    /// Widen the stored values to f32 in place (exact; a no-op when
+    /// already f32).
+    pub fn widen_to_f32(&mut self) {
+        if self.data.dtype() != Dtype::F32 {
+            self.data = self.data.to_f32();
         }
     }
 
@@ -103,25 +135,9 @@ impl Csr {
     pub fn matvec_add(&self, x: &[f32], y: &mut [f32]) {
         assert_eq!(x.len(), self.cols);
         assert_eq!(y.len(), self.rows);
-        for i in 0..self.rows {
-            let lo = self.indptr[i] as usize;
-            let hi = self.indptr[i + 1] as usize;
-            let idx = &self.indices[lo..hi];
-            let val = &self.data[lo..hi];
-            let n = idx.len();
-            let mut acc = [0.0f32; 4];
-            let chunks = n / 4;
-            for c in 0..chunks {
-                let b = c * 4;
-                for l in 0..4 {
-                    acc[l] += val[b + l] * x[idx[b + l] as usize];
-                }
-            }
-            let mut total = acc[0] + acc[1] + acc[2] + acc[3];
-            for k in chunks * 4..n {
-                total += val[k] * x[idx[k] as usize];
-            }
-            y[i] += total;
+        match &self.data {
+            WeightBuf::F32(v) => spmv_add_w(&self.indptr, &self.indices, v.as_slice(), x, y),
+            WeightBuf::F16(v) => spmv_add_w(&self.indptr, &self.indices, v.as_slice(), x, y),
         }
     }
 
@@ -129,30 +145,17 @@ impl Csr {
     /// — the SpMM the batched apply engine runs. Each stored value becomes
     /// one contiguous k-wide axpy (the gather jumps rows of X, but every
     /// gathered row is k consecutive floats); the column loop is blocked
-    /// so a wide batch never thrashes the X working set.
+    /// so a wide batch never thrashes the X working set. f16-resident
+    /// values widen once per nnz per column block.
     pub fn spmm_add(&self, x: &[f32], y: &mut [f32], k: usize) {
         assert_eq!(x.len(), self.cols * k, "input block shape mismatch");
         assert_eq!(y.len(), self.rows * k, "output block shape mismatch");
         if k == 1 {
             return self.matvec_add(x, y);
         }
-        const CB: usize = 128; // column block (floats per lane pass)
-        for cb in (0..k).step_by(CB) {
-            let cw = CB.min(k - cb);
-            for i in 0..self.rows {
-                let lo = self.indptr[i] as usize;
-                let hi = self.indptr[i + 1] as usize;
-                if lo == hi {
-                    continue;
-                }
-                let yrow = &mut y[i * k + cb..i * k + cb + cw];
-                for (j, v) in self.indices[lo..hi].iter().zip(&self.data[lo..hi]) {
-                    let xrow = &x[*j as usize * k + cb..*j as usize * k + cb + cw];
-                    for (yc, &xc) in yrow.iter_mut().zip(xrow) {
-                        *yc += v * xc;
-                    }
-                }
-            }
+        match &self.data {
+            WeightBuf::F32(v) => spmm_add_w(&self.indptr, &self.indices, v.as_slice(), x, y, k),
+            WeightBuf::F16(v) => spmm_add_w(&self.indptr, &self.indices, v.as_slice(), x, y, k),
         }
     }
 
@@ -190,10 +193,66 @@ impl Csr {
         for i in 0..self.rows {
             for k in self.indptr[i] as usize..self.indptr[i + 1] as usize {
                 // duplicates accumulate, matching Coo::to_dense semantics
-                m.data[i * self.cols + self.indices[k] as usize] += self.data[k];
+                m.data[i * self.cols + self.indices[k] as usize] += self.data.at(k);
             }
         }
         m
+    }
+}
+
+/// y += S x over raw CSR slices, generic over the value dtype.
+fn spmv_add_w<E: WeightElem>(indptr: &[u32], indices: &[u32], val: &[E], x: &[f32], y: &mut [f32]) {
+    for (i, yi) in y.iter_mut().enumerate() {
+        let lo = indptr[i] as usize;
+        let hi = indptr[i + 1] as usize;
+        let idx = &indices[lo..hi];
+        let val = &val[lo..hi];
+        let n = idx.len();
+        let mut acc = [0.0f32; 4];
+        let chunks = n / 4;
+        for c in 0..chunks {
+            let b = c * 4;
+            for l in 0..4 {
+                acc[l] += val[b + l].widen() * x[idx[b + l] as usize];
+            }
+        }
+        let mut total = acc[0] + acc[1] + acc[2] + acc[3];
+        for k in chunks * 4..n {
+            total += val[k].widen() * x[idx[k] as usize];
+        }
+        *yi += total;
+    }
+}
+
+/// Y += S X over raw CSR slices and a [cols, k] column block, generic
+/// over the value dtype.
+fn spmm_add_w<E: WeightElem>(
+    indptr: &[u32],
+    indices: &[u32],
+    vals: &[E],
+    x: &[f32],
+    y: &mut [f32],
+    k: usize,
+) {
+    let rows = indptr.len() - 1;
+    const CB: usize = 128; // column block (floats per lane pass)
+    for cb in (0..k).step_by(CB) {
+        let cw = CB.min(k - cb);
+        for i in 0..rows {
+            let lo = indptr[i] as usize;
+            let hi = indptr[i + 1] as usize;
+            if lo == hi {
+                continue;
+            }
+            let yrow = &mut y[i * k + cb..i * k + cb + cw];
+            for (j, v) in indices[lo..hi].iter().zip(&vals[lo..hi]) {
+                let v = v.widen();
+                let xrow = &x[*j as usize * k + cb..*j as usize * k + cb + cw];
+                for (yc, &xc) in yrow.iter_mut().zip(xrow) {
+                    *yc += v * xc;
+                }
+            }
+        }
     }
 }
 
@@ -258,7 +317,9 @@ mod tests {
         assert!(bad.validate().is_err());
 
         let mut bad = csr.clone();
-        bad.data.pop(); // nnz mismatch
+        let mut vals = bad.data.to_vec();
+        vals.pop(); // nnz mismatch
+        bad.data = crate::linalg::WeightBuf::F32(vals);
         assert!(bad.validate().is_err());
     }
 
@@ -338,6 +399,36 @@ mod tests {
                 csr.value_grads_add(&xs[c], &gs[c], 1, &mut summed);
             }
             slices_close(&batched, &summed, 1e-4, 1e-4, "value grads")
+        });
+    }
+
+    #[test]
+    fn f16_spmm_bit_matches_quantized_f32() {
+        // narrowed values must give bit-identical results to quantizing
+        // the values in f32 — the kernel only widens, never reorders
+        check(10, |rng| {
+            let n = 2 + rng.below(24);
+            let k = 1 + rng.below(8);
+            let csr = Csr::from_coo(&random_coo(rng, n, 3 * n));
+            let mut q = csr.clone();
+            {
+                let vals = q.data.as_f32_mut();
+                crate::util::fp16::quantize_f16(vals);
+            }
+            let mut h = csr.clone();
+            h.narrow_to_f16();
+            assert_eq!(h.dtype(), crate::linalg::Dtype::F16);
+            assert_eq!(h.resident_value_bytes() * 2, csr.resident_value_bytes());
+            h.validate().map_err(|e| format!("f16 csr invalid: {e}"))?;
+            let x: Vec<f32> = (0..n * k).map(|_| rng.gaussian_f32()).collect();
+            let mut yq = vec![0.0f32; n * k];
+            let mut yh = vec![0.0f32; n * k];
+            q.spmm_add(&x, &mut yq, k);
+            h.spmm_add(&x, &mut yh, k);
+            if yq != yh {
+                return Err("f16 spmm != quantized f32 spmm".into());
+            }
+            Ok(())
         });
     }
 

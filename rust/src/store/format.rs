@@ -135,23 +135,36 @@ pub fn method_from_code(c: u8) -> Option<Method> {
 
 // --------------------------------------------------------------- encoding
 
-/// Append a matrix section; `dtype` is `DT_F32` or `DT_F16`.
+/// Append a matrix section; `dtype` is `DT_F32` or `DT_F16`. The source
+/// matrix may be resident at either dtype: f16-resident bits are written
+/// verbatim for a `DT_F16` section (a lossless byte copy — re-saving a
+/// natively-loaded variant never requantizes), and widened exactly for
+/// `DT_F32`.
 pub fn put_matrix(out: &mut Vec<u8>, m: &Matrix, dtype: u8) {
+    use crate::linalg::WeightBuf;
     put_u32(out, m.rows as u32);
     put_u32(out, m.cols as u32);
     out.push(dtype);
-    match dtype {
-        DT_F32 => {
-            for v in &m.data {
-                out.extend_from_slice(&v.to_le_bytes());
+    match (dtype, &m.data) {
+        (DT_F32, WeightBuf::F32(v)) => {
+            for x in v {
+                out.extend_from_slice(&x.to_le_bytes());
             }
         }
-        _ => out.extend_from_slice(&fp16::encode_f16_le(&m.data)),
+        (DT_F32, WeightBuf::F16(bits)) => {
+            for &h in bits {
+                out.extend_from_slice(&fp16::f16_to_f32(h).to_le_bytes());
+            }
+        }
+        (_, WeightBuf::F32(v)) => out.extend_from_slice(&fp16::encode_f16_le(v)),
+        (_, WeightBuf::F16(bits)) => out.extend_from_slice(&fp16::encode_f16_bits_le(bits)),
     }
 }
 
-/// Append a CSR section (values fp16).
+/// Append a CSR section (values fp16; f16-resident values are written
+/// verbatim, f32-resident ones are quantized).
 pub fn put_csr(out: &mut Vec<u8>, s: &Csr) {
+    use crate::linalg::WeightBuf;
     put_u32(out, s.rows as u32);
     put_u32(out, s.cols as u32);
     put_u32(out, s.nnz() as u32);
@@ -162,7 +175,10 @@ pub fn put_csr(out: &mut Vec<u8>, s: &Csr) {
         put_u32(out, j);
     }
     out.push(DT_F16);
-    out.extend_from_slice(&fp16::encode_f16_le(&s.data));
+    match &s.data {
+        WeightBuf::F32(v) => out.extend_from_slice(&fp16::encode_f16_le(v)),
+        WeightBuf::F16(bits) => out.extend_from_slice(&fp16::encode_f16_bits_le(bits)),
+    }
 }
 
 fn put_node(out: &mut Vec<u8>, node: &HssNode) {
@@ -227,30 +243,54 @@ pub fn encode_payload(m: &CompressedMatrix) -> Vec<u8> {
 
 // --------------------------------------------------------------- decoding
 
-/// Parse a matrix section.
+/// Parse a matrix section, widening fp16 payloads to f32 (the
+/// back-compatible load; [`get_matrix_native`] keeps the on-disk dtype).
 pub fn get_matrix(r: &mut ByteReader) -> Result<Matrix> {
+    get_matrix_as(r, false)
+}
+
+/// Parse a matrix section keeping the on-disk dtype: a `DT_F16` payload
+/// becomes an f16-resident matrix — no f32 buffer is ever allocated.
+pub fn get_matrix_native(r: &mut ByteReader) -> Result<Matrix> {
+    get_matrix_as(r, true)
+}
+
+fn get_matrix_as(r: &mut ByteReader, native: bool) -> Result<Matrix> {
     let rows = r.u32()? as usize;
     let cols = r.u32()? as usize;
     let dtype = r.u8()?;
     let count = rows
         .checked_mul(cols)
         .ok_or_else(|| anyhow::anyhow!("matrix {rows}x{cols} overflows"))?;
-    let data = match dtype {
-        DT_F32 => r
-            .take(count.checked_mul(4).ok_or_else(|| anyhow::anyhow!("matrix too large"))?)?
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect(),
-        DT_F16 => fp16::decode_f16_le(
-            r.take(count.checked_mul(2).ok_or_else(|| anyhow::anyhow!("matrix too large"))?)?,
-        ),
+    match dtype {
+        DT_F32 => {
+            let data = r
+                .take(count.checked_mul(4).ok_or_else(|| anyhow::anyhow!("matrix too large"))?)?
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            Ok(Matrix::from_vec(rows, cols, data))
+        }
+        DT_F16 => {
+            let bytes =
+                r.take(count.checked_mul(2).ok_or_else(|| anyhow::anyhow!("matrix too large"))?)?;
+            if native {
+                Ok(Matrix::from_f16_bits(rows, cols, fp16::decode_f16_bits_le(bytes)))
+            } else {
+                Ok(Matrix::from_vec(rows, cols, fp16::decode_f16_le(bytes)))
+            }
+        }
         d => bail!("matrix: unknown dtype code {d}"),
-    };
-    Ok(Matrix::from_vec(rows, cols, data))
+    }
 }
 
-/// Parse and structurally validate a CSR section.
+/// Parse and structurally validate a CSR section (widening load; see
+/// [`get_matrix`] vs [`get_matrix_native`]).
 pub fn get_csr(r: &mut ByteReader) -> Result<Csr> {
+    get_csr_as(r, false)
+}
+
+fn get_csr_as(r: &mut ByteReader, native: bool) -> Result<Csr> {
     let rows = r.u32()? as usize;
     let cols = r.u32()? as usize;
     let nnz = r.u32()? as usize;
@@ -269,12 +309,16 @@ pub fn get_csr(r: &mut ByteReader) -> Result<Csr> {
         .collect();
     let dtype = r.u8()?;
     let data = match dtype {
-        DT_F16 => fp16::decode_f16_le(r.take(nnz * 2)?),
-        DT_F32 => r
-            .take(nnz.checked_mul(4).ok_or_else(|| anyhow::anyhow!("csr too large"))?)?
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect(),
+        DT_F16 if native => {
+            crate::linalg::WeightBuf::F16(fp16::decode_f16_bits_le(r.take(nnz * 2)?))
+        }
+        DT_F16 => crate::linalg::WeightBuf::F32(fp16::decode_f16_le(r.take(nnz * 2)?)),
+        DT_F32 => crate::linalg::WeightBuf::F32(
+            r.take(nnz.checked_mul(4).ok_or_else(|| anyhow::anyhow!("csr too large"))?)?
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect(),
+        ),
         d => bail!("csr: unknown dtype code {d}"),
     };
     let csr = Csr {
@@ -303,26 +347,28 @@ fn get_perm(r: &mut ByteReader, n: usize) -> Result<Permutation> {
     Ok(Permutation::from_vec(p))
 }
 
-fn get_node(r: &mut ByteReader, depth: usize) -> Result<HssNode> {
+fn get_node(r: &mut ByteReader, depth: usize, native: bool) -> Result<HssNode> {
     if depth > MAX_NODE_DEPTH {
         bail!("hss tree deeper than {MAX_NODE_DEPTH} (corrupt file)");
     }
     match r.u8()? {
-        NODE_LEAF => Ok(HssNode::Leaf { d: get_matrix(r)? }),
+        NODE_LEAF => Ok(HssNode::Leaf {
+            d: get_matrix_as(r, native)?,
+        }),
         NODE_BRANCH => {
             let n = r.u32()? as usize;
-            let sparse = get_csr(r)?;
+            let sparse = get_csr_as(r, native)?;
             let perm = match r.u8()? {
                 0 => Permutation::identity(n),
                 1 => get_perm(r, n)?,
                 p => bail!("unknown permutation tag {p}"),
             };
-            let u0 = get_matrix(r)?;
-            let r0 = get_matrix(r)?;
-            let u1 = get_matrix(r)?;
-            let r1 = get_matrix(r)?;
-            let c0 = Box::new(get_node(r, depth + 1)?);
-            let c1 = Box::new(get_node(r, depth + 1)?);
+            let u0 = get_matrix_as(r, native)?;
+            let r0 = get_matrix_as(r, native)?;
+            let u1 = get_matrix_as(r, native)?;
+            let r1 = get_matrix_as(r, native)?;
+            let c0 = Box::new(get_node(r, depth + 1, native)?);
+            let c1 = Box::new(get_node(r, depth + 1, native)?);
             Ok(HssNode::Branch {
                 n,
                 sparse,
@@ -339,21 +385,32 @@ fn get_node(r: &mut ByteReader, depth: usize) -> Result<HssNode> {
     }
 }
 
-/// Deserialize one payload back into a [`CompressedMatrix`], consuming the
-/// whole slice and validating structure.
+/// Deserialize one payload back into a [`CompressedMatrix`], widening
+/// fp16 sections to f32 (the back-compatible load).
 pub fn decode_payload(kind: u8, payload: &[u8]) -> Result<CompressedMatrix> {
+    decode_payload_as(kind, payload, false)
+}
+
+/// Deserialize one payload keeping every section's on-disk dtype: fp16
+/// factors come back f16-resident, so the decoded matrix occupies the
+/// bytes the format pays for — the serving load path.
+pub fn decode_payload_native(kind: u8, payload: &[u8]) -> Result<CompressedMatrix> {
+    decode_payload_as(kind, payload, true)
+}
+
+fn decode_payload_as(kind: u8, payload: &[u8], native: bool) -> Result<CompressedMatrix> {
     let mut r = ByteReader::new(payload);
     let m = match kind {
         KIND_DENSE => {
-            let w = get_matrix(&mut r)?;
+            let w = get_matrix_as(&mut r, native)?;
             if w.rows != w.cols {
                 bail!("dense entry not square: {}x{}", w.rows, w.cols);
             }
             CompressedMatrix::Dense { w }
         }
         KIND_LOWRANK => {
-            let l = get_matrix(&mut r)?;
-            let rm = get_matrix(&mut r)?;
+            let l = get_matrix_as(&mut r, native)?;
+            let rm = get_matrix_as(&mut r, native)?;
             if l.cols != rm.rows {
                 bail!("lowrank: l is {}x{} but r is {}x{}", l.rows, l.cols, rm.rows, rm.cols);
             }
@@ -370,7 +427,7 @@ pub fn decode_payload(kind: u8, payload: &[u8]) -> Result<CompressedMatrix> {
             let sparse = match r.u8()? {
                 0 => None,
                 1 => {
-                    let s = get_csr(&mut r)?;
+                    let s = get_csr_as(&mut r, native)?;
                     if s.rows != l.rows || s.cols != rm.cols {
                         bail!(
                             "lowrank: spike matrix {}x{} vs factors {}x{}",
@@ -387,7 +444,7 @@ pub fn decode_payload(kind: u8, payload: &[u8]) -> Result<CompressedMatrix> {
             CompressedMatrix::LowRank { l, r: rm, sparse }
         }
         KIND_HSS => {
-            let tree = get_node(&mut r, 0)?;
+            let tree = get_node(&mut r, 0, native)?;
             tree.validate().map_err(anyhow::Error::msg)?;
             CompressedMatrix::Hss { tree }
         }
@@ -397,6 +454,21 @@ pub fn decode_payload(kind: u8, payload: &[u8]) -> Result<CompressedMatrix> {
         bail!("{} trailing bytes after payload", r.remaining());
     }
     Ok(m)
+}
+
+/// Test-only: rewrite a v2 `HSB1` image as version 1 (drop the save-seq
+/// header field, recompute the crc) — lets tests exercise pre-v2 files
+/// without keeping binary fixtures around.
+#[cfg(test)]
+pub(crate) fn downgrade_image_to_v1(v2: &[u8]) -> Vec<u8> {
+    let mut v1 = Vec::with_capacity(v2.len().saturating_sub(8));
+    v1.extend_from_slice(&v2[..4]); // magic
+    v1.extend_from_slice(&1u16.to_le_bytes()); // version 1
+    v1.extend_from_slice(&v2[6..8]); // flags
+    v1.extend_from_slice(&v2[16..v2.len() - 4]); // count + entries (skip the u64 seq)
+    let crc = crate::util::binio::crc32(&v1);
+    v1.extend_from_slice(&crc.to_le_bytes());
+    v1
 }
 
 #[cfg(test)]
@@ -433,6 +505,42 @@ mod tests {
             // fp16 quantization of the stored factors bounds the drift
             slices_close(&back.matvec(&x), &c.matvec(&x), 2e-2, 2e-2, m.name()).unwrap();
         }
+    }
+
+    /// The f16-native load: factors stay at the on-disk dtype (half the
+    /// resident bytes), numerics are bit-identical to the widening load,
+    /// and re-encoding is a lossless byte copy (no requantization drift).
+    #[test]
+    fn native_decode_keeps_dtype_and_matches_widened_load() {
+        use crate::linalg::Dtype;
+        for m in [Method::SSvd, Method::SHssRcm] {
+            let c = compressed(48, m, 8);
+            let payload = encode_payload(&c);
+            let wide = decode_payload(kind_of(&c), &payload).unwrap();
+            let native = decode_payload_native(kind_of(&c), &payload).unwrap();
+            assert_eq!(native.weights_dtype(), Dtype::F16, "{m:?}");
+            assert_eq!(wide.weights_dtype(), Dtype::F32, "{m:?}");
+            assert_eq!(
+                native.resident_weight_bytes() * 2,
+                wide.resident_weight_bytes(),
+                "{m:?}"
+            );
+            // format accounting is residency-independent
+            assert_eq!(native.params(), wide.params(), "{m:?}");
+            assert_eq!(native.bytes(), wide.bytes(), "{m:?}");
+            // widened and native loads compute bit-identical matvecs
+            let mut rng = Rng::new(21);
+            let x: Vec<f32> = (0..48).map(|_| rng.gaussian_f32()).collect();
+            assert_eq!(native.matvec(&x), wide.matvec(&x), "{m:?}");
+            // re-saving a natively-loaded entry copies the f16 bits verbatim
+            assert_eq!(encode_payload(&native), payload, "{m:?}");
+        }
+        // the dense baseline stays f32 either way (bit-exact round-trips)
+        let d = compressed(32, Method::Dense, 9);
+        let payload = encode_payload(&d);
+        let native = decode_payload_native(KIND_DENSE, &payload).unwrap();
+        assert_eq!(native.weights_dtype(), Dtype::F32);
+        assert_eq!(encode_payload(&native), payload);
     }
 
     #[test]

@@ -20,7 +20,53 @@
 //!   variant and rebuilds a [`crate::model::CompressedModel`] without
 //!   recompression — the input to `Coordinator::swap_variant`.
 //!
-//! Format details live in [`format`]; the binary primitives (magic,
+//! **The store's dtype is the serving dtype**: [`StoreFile::load_native`]
+//! (what `CompressedModel::from_store` uses) keeps fp16 sections
+//! f16-resident as raw `u16` bit patterns — no load-time widening, no f32
+//! factor buffer ever allocated — and the batched kernels widen
+//! lane-by-lane in-register. A served variant is therefore resident at
+//! the bytes the format pays for (half of an f32-widened load), with
+//! numerics bit-identical to widening at load. [`StoreFile::load`] remains
+//! the widening path for training and compatibility; `finetune` trains
+//! f32 and narrows back to fp16 on save.
+//!
+//! ## `HSB1` format spec (version 2)
+//!
+//! Little-endian throughout; crc32 (IEEE, via [`crate::util::binio`])
+//! over every byte before the footer.
+//!
+//! ```text
+//! header:  "HSB1" · u16 version · u16 flags · [v2+: u64 save_seq]
+//!          · u32 entry_count
+//! entry:   u32 name_len · name-bytes · u8 kind(0=dense,1=lowrank,2=hss)
+//!          · u8 method (255 = unknown) · f64 rel_error
+//!          · u64 payload_len · payload
+//! footer:  u32 crc32
+//! ```
+//!
+//! Header v2 fields: `save_seq` is a monotonically increasing sequence
+//! number stamped by `ModelStore::save_model` (retention orders by it
+//! exactly; v1 files parse as seq 0, tie-broken by mtime then name).
+//! `flags` is reserved (written 0, ignored on read).
+//!
+//! Payload grammar (dtype tags: 0 = f32, 1 = f16):
+//!
+//! ```text
+//! matrix  := u32 rows · u32 cols · u8 dtype · values
+//! csr     := u32 rows · u32 cols · u32 nnz · indptr u32×(rows+1)
+//!            · indices u32×nnz · u8 dtype · values
+//! dense   := matrix(f32)                         (bit-exact baseline)
+//! lowrank := matrix l(f16) · matrix r(f16) · u8 has_sparse · [csr]
+//! node    := u8 0 · matrix d(f16)
+//!          | u8 1 · u32 n · csr · u8 has_perm · [perm u32×n]
+//!            · matrix u0 · r0 · u1 · r1 · node c0 · node c1
+//! hss     := node
+//! ```
+//!
+//! Every f16 payload is the exact bytes the serving path keeps resident;
+//! re-saving a natively-loaded entry is a verbatim byte copy (no
+//! requantization). The per-entry `payload_len` lets the reader index
+//! sections without decoding them. The binary primitives (magic,
 //! length-prefixed strings, dtype tags, crc32) are shared with the `HWT1`
 //! weight container via [`crate::util::binio`].
 

@@ -327,6 +327,69 @@ mod tests {
         assert_eq!(store.variants(), vec!["a".to_string()]);
     }
 
+    /// Satellite: a directory mixing v1 (no save-seq) and v2 files with
+    /// **equal mtimes** — the worst case for coarse-granularity
+    /// filesystems. `save_model`'s header-only seq peek must not reset
+    /// the sequence, and `prune`'s (seq, mtime, name) ordering must break
+    /// the all-zero-seq equal-mtime tie deterministically by name.
+    #[test]
+    fn prune_tie_break_and_seq_peek_on_mixed_v1_v2_equal_mtimes() {
+        use std::time::{Duration, SystemTime};
+        let base = tiny_base(8);
+        let store = temp_store("v1v2mix");
+        let cm = CompressedModel::compress(
+            base.clone(),
+            Method::SSvd,
+            CompressorConfig {
+                rank: 4,
+                sparsity: 0.1,
+                ..Default::default()
+            },
+        );
+        store.save_model("v2-old", &cm).unwrap(); // seq 1
+        store.save_model("v2-new", &cm).unwrap(); // seq 2
+
+        let fixed = SystemTime::UNIX_EPOCH + Duration::from_secs(1_700_000_000);
+        let write_v1_pair = |names: [&str; 2]| {
+            let v2_bytes = std::fs::read(store.variant_path("v2-old")).unwrap();
+            let v1 = crate::store::format::downgrade_image_to_v1(&v2_bytes);
+            for name in names {
+                let p = store.variant_path(name);
+                std::fs::write(&p, &v1).unwrap();
+                // pin both mtimes to the same instant: seq AND mtime tie
+                std::fs::OpenOptions::new()
+                    .write(true)
+                    .open(&p)
+                    .unwrap()
+                    .set_modified(fixed)
+                    .unwrap();
+            }
+        };
+        write_v1_pair(["v1-a", "v1-b"]);
+        assert_eq!(store.variant_save_seq("v1-a"), Some(0));
+        assert_eq!(store.variant_save_seq("v1-b"), Some(0));
+
+        // the header-only peek sees through the mix: the next save stamps
+        // max(v2 seqs) + 1 — v1 files never reset the counter
+        store.save_model("v2-newest", &cm).unwrap();
+        assert_eq!(store.variant_save_seq("v2-newest"), Some(3));
+
+        // seq is exact: every v2 file outranks every v1 file regardless of
+        // mtime, so prune(3) reclaims exactly the two v1 files
+        let deleted = store.prune(3, None).unwrap();
+        assert_eq!(deleted, vec!["v1-a".to_string(), "v1-b".to_string()]);
+
+        // with seq (0) and mtime tied exactly, the name breaks the tie:
+        // "v1-b" sorts newer than "v1-a", so keeping 4 deletes only v1-a —
+        // deterministically, however coarse the filesystem clock
+        write_v1_pair(["v1-a", "v1-b"]);
+        let deleted = store.prune(4, None).unwrap();
+        assert_eq!(deleted, vec!["v1-a".to_string()]);
+        assert!(store.has_variant("v1-b"));
+        // the surviving v1 file still parses and loads
+        assert!(store.open_variant("v1-b").is_ok());
+    }
+
     #[test]
     fn multiple_variants_coexist() {
         let base = tiny_base(5);

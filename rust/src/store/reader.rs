@@ -7,8 +7,8 @@
 use crate::compress::compressed::BatchWorkspace;
 use crate::compress::CompressedMatrix;
 use crate::store::format::{
-    decode_payload, method_from_code, EntryMeta, FOOTER_BYTES, HEADER_BYTES, KIND_HSS, MAGIC,
-    METHOD_UNKNOWN, MIN_VERSION, VERSION,
+    decode_payload, decode_payload_native, method_from_code, EntryMeta, FOOTER_BYTES,
+    HEADER_BYTES, KIND_HSS, MAGIC, METHOD_UNKNOWN, MIN_VERSION, VERSION,
 };
 use crate::util::binio::{crc32, ByteReader};
 use anyhow::{bail, Context, Result};
@@ -168,13 +168,26 @@ impl StoreFile {
     }
 
     /// Decode one entry into its runtime representation — no recompression,
-    /// just parse + fp16 widen.
+    /// fp16 sections widened to f32 (the training/compatibility load; the
+    /// serving path uses [`StoreFile::load_native`]).
     pub fn load(&self, name: &str) -> Result<CompressedMatrix> {
         let e = self
             .find(name)
             .ok_or_else(|| anyhow::anyhow!("entry '{name}' not in store (have: {})", self.names().join(", ")))?;
         decode_payload(e.meta.kind, &self.buf[e.start..e.start + e.len])
             .with_context(|| format!("decoding entry '{name}'"))
+    }
+
+    /// Decode one entry keeping the **on-disk dtype**: fp16 factors come
+    /// back f16-resident, widened lane-by-lane inside the batched kernels
+    /// — no f32 factor buffer is ever allocated, so the loaded matrix is
+    /// resident at the bytes the format pays for.
+    pub fn load_native(&self, name: &str) -> Result<CompressedMatrix> {
+        let e = self
+            .find(name)
+            .ok_or_else(|| anyhow::anyhow!("entry '{name}' not in store (have: {})", self.names().join(", ")))?;
+        decode_payload_native(e.meta.kind, &self.buf[e.start..e.start + e.len])
+            .with_context(|| format!("decoding entry '{name}' (native dtype)"))
     }
 
     /// Load plus a pre-sized [`BatchWorkspace`], so the caller's first
@@ -185,7 +198,19 @@ impl StoreFile {
         Ok((m, ws))
     }
 
-    /// Decode every entry in file order.
+    /// [`StoreFile::load_native`] plus a pre-sized [`BatchWorkspace`] —
+    /// the cold-start serving load: f16-resident factors, no first-request
+    /// allocation.
+    pub fn load_native_with_workspace(
+        &self,
+        name: &str,
+    ) -> Result<(CompressedMatrix, BatchWorkspace)> {
+        let m = self.load_native(name)?;
+        let ws = m.workspace();
+        Ok((m, ws))
+    }
+
+    /// Decode every entry in file order (widening load).
     pub fn load_all(&self) -> Result<Vec<(String, CompressedMatrix)>> {
         self.entries
             .iter()
@@ -244,6 +269,34 @@ mod tests {
         assert!(file.load("nope").is_err());
     }
 
+    /// Satellite: the f16-native load allocates no f32 factor buffers —
+    /// every loaded weight buffer is u16-resident, at exactly half the
+    /// widened footprint, and serves bit-identical matvecs.
+    #[test]
+    fn native_load_keeps_factors_f16_resident() {
+        use crate::linalg::Dtype;
+        let sw = sample_writer(48);
+        let file = StoreFile::from_bytes(sw.to_bytes()).unwrap();
+        for name in ["lowrank", "hss"] {
+            let (native, mut ws) = file.load_native_with_workspace(name).unwrap();
+            let wide = file.load(name).unwrap();
+            assert_eq!(native.weights_dtype(), Dtype::F16, "{name}");
+            assert_eq!(
+                native.resident_weight_bytes() * 2,
+                wide.resident_weight_bytes(),
+                "{name}"
+            );
+            let mut rng = Rng::new(2);
+            let x: Vec<f32> = (0..48).map(|_| rng.gaussian_f32()).collect();
+            let mut y = vec![0.0; 48];
+            native.matvec_with(&x, &mut y, &mut ws);
+            assert_eq!(y, wide.matvec(&x), "{name}: native != widened numerics");
+        }
+        // dense stays f32 on disk and in memory
+        let d = file.load_native("dense").unwrap();
+        assert_eq!(d.weights_dtype(), Dtype::F32);
+    }
+
     #[test]
     fn file_roundtrip_atomic_write() {
         let dir = std::env::temp_dir().join("hisolo_test_store_reader");
@@ -288,15 +341,9 @@ mod tests {
         let file = StoreFile::from_bytes(v2.clone()).unwrap();
         assert_eq!(file.save_seq(), 42);
 
-        // hand-build the version-1 image (header without the seq field)
-        // around the same entries: old files must keep parsing, as seq 0
-        let mut v1 = Vec::with_capacity(v2.len() - 8);
-        v1.extend_from_slice(&v2[..4]); // magic
-        v1.extend_from_slice(&1u16.to_le_bytes()); // version 1
-        v1.extend_from_slice(&v2[6..8]); // flags
-        v1.extend_from_slice(&v2[16..v2.len() - 4]); // count + entries
-        let crc = crate::util::binio::crc32(&v1);
-        v1.extend_from_slice(&crc.to_le_bytes());
+        // rebuild the same entries as a version-1 image (header without
+        // the seq field): old files must keep parsing, as seq 0
+        let v1 = crate::store::format::downgrade_image_to_v1(&v2);
         let old = StoreFile::from_bytes(v1.clone()).unwrap();
         assert_eq!(old.save_seq(), 0);
         assert_eq!(old.names(), file.names());

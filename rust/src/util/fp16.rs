@@ -97,6 +97,25 @@ pub fn encode_f16_le(xs: &[f32]) -> Vec<u8> {
     out
 }
 
+/// Decode a little-endian f16 buffer into raw bit patterns — the store's
+/// zero-widening load path (no f32 buffer is ever allocated).
+pub fn decode_f16_bits_le(bytes: &[u8]) -> Vec<u16> {
+    bytes
+        .chunks_exact(2)
+        .map(|c| u16::from_le_bytes([c[0], c[1]]))
+        .collect()
+}
+
+/// Encode raw f16 bit patterns as little-endian bytes — the store's
+/// lossless save path for factors that are already f16-resident.
+pub fn encode_f16_bits_le(bits: &[u16]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(bits.len() * 2);
+    for &h in bits {
+        out.extend_from_slice(&h.to_le_bytes());
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -159,6 +178,18 @@ mod tests {
         let enc = encode_f16_le(&xs);
         let dec = decode_f16_le(&enc);
         assert_eq!(dec, xs);
+    }
+
+    #[test]
+    fn bits_codec_is_lossless_and_agrees_with_widening_codec() {
+        let xs = vec![1.0f32, -2.5, 0.12345, 3.0e-5, 65504.0];
+        let enc = encode_f16_le(&xs);
+        let bits = decode_f16_bits_le(&enc);
+        // raw bits round-trip to identical bytes (no requantization)
+        assert_eq!(encode_f16_bits_le(&bits), enc);
+        // widening the bits matches the widening decoder exactly
+        let widened: Vec<f32> = bits.iter().map(|&h| f16_to_f32(h)).collect();
+        assert_eq!(widened, decode_f16_le(&enc));
     }
 
     #[test]

@@ -243,6 +243,88 @@ fn coordinator_serves_correctly_across_store_hot_swap() {
     coord.shutdown();
 }
 
+/// Acceptance: f16-resident serving end-to-end. A store-loaded model
+/// keeps its fp16 factors resident at exactly half the widened bytes, the
+/// coordinator's per-variant gauge reports the halving when the
+/// prefetched hot-swap installs it, and every served NLL matches the
+/// f32-resident serving of the same variant — the widened kernels change
+/// residency, not arithmetic.
+#[test]
+fn f16_resident_model_serves_end_to_end_at_half_the_bytes() {
+    let base = tiny_base();
+    let store = ModelStore::open(temp_dir("f16_serve"));
+    let cm = CompressedModel::compress(base.clone(), Method::SHssRcm, lossless_cfg());
+    store.save_model("shss-rcm", &cm).unwrap();
+
+    // the native load keeps the on-disk dtype; widening doubles residency
+    let f16_model = Arc::new(store.load_model("shss-rcm", base.clone()).unwrap());
+    assert_eq!(f16_model.weights_dtype(), hisolo::linalg::Dtype::F16);
+    let mut f32_model = store.load_model("shss-rcm", base.clone()).unwrap();
+    f32_model.widen_to_f32();
+    let (half, full) = (
+        f16_model.resident_weight_bytes(),
+        f32_model.resident_weight_bytes(),
+    );
+    assert_eq!(half * 2, full, "f16 residency must be exactly half");
+    let f32_model = Arc::new(f32_model);
+
+    let toks: Vec<u32> = (0..3000u32).map(|i| (i * 17 + i / 3) % 64).collect();
+    let ws = windows(&toks, base.cfg.seq_len, 20);
+
+    // start the lane on the f32-resident model…
+    let mut coord = Coordinator::new(CoordinatorConfig {
+        batcher: BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+            capacity: 256,
+        },
+    });
+    coord.add_worker(
+        Variant::Hss,
+        NativeCompressedScorer {
+            model: f32_model,
+            max_batch: 4,
+        },
+    );
+    let before = coord.submit_all(Variant::Hss, &ws).unwrap();
+    assert!(before.iter().all(|r| r.error.is_none()));
+    assert_eq!(
+        coord.metrics.resident_weight_bytes(Variant::Hss),
+        full as u64
+    );
+
+    // …then hot-swap to the f16-resident scorer with background prefetch
+    // (the store parse happens on a helper thread, not the serving lane)
+    let swap_model = f16_model.clone();
+    let ticket = coord
+        .swap_variant_prefetched(Variant::Hss, move || {
+            Ok(NativeCompressedScorer {
+                model: swap_model.clone(),
+                max_batch: 4,
+            })
+        })
+        .unwrap();
+    ticket.wait(Duration::from_secs(30)).unwrap();
+    assert_eq!(
+        coord.metrics.resident_weight_bytes(Variant::Hss),
+        half as u64,
+        "gauge must show the f16 halving after the swap"
+    );
+
+    // perplexity parity: the f16-resident server computes the same NLLs
+    let after = coord.submit_all(Variant::Hss, &ws).unwrap();
+    for (a, b) in after.iter().zip(&before) {
+        assert!(a.error.is_none(), "{:?}", a.error);
+        assert!(
+            (a.nll - b.nll).abs() <= 1e-9 * b.nll.abs().max(1.0),
+            "f16 nll {} vs f32 nll {}",
+            a.nll,
+            b.nll
+        );
+    }
+    coord.shutdown();
+}
+
 /// A swap whose factory fails (missing variant) must leave the old model
 /// serving — a bad rollout can't take the lane down.
 #[test]
