@@ -1,0 +1,160 @@
+//! Batched masked attention evidence: one `attention_batch` call over a
+//! stacked [Σt, d] block vs the pre-batching per-window loop (slice each
+//! window out, run the scalar `causal_mha_scalar`, copy the result back)
+//! at batch widths k ∈ {1, 8, 32} over ragged window lengths, plus the
+//! padding-overhead % the default power-of-two bucket edges would incur
+//! on this length mix.
+//!
+//! The k = 32 numbers are appended to the JSON trajectory file via
+//! `--json <path>`; the final `attention_check` line is asserted by CI:
+//! batched attention must beat the per-window loop at batch width 32.
+//!
+//! Run: `cargo bench --bench attention [-- --d 256 --heads 8 --t 128]`
+
+use hisolo::coordinator::batcher::{bucket_index, default_bucket_edges};
+use hisolo::linalg::Matrix;
+use hisolo::model::attention::{attention_batch, causal_mha_scalar, AttnWorkspace};
+use hisolo::util::cli::Args;
+use hisolo::util::json::{num, obj, s};
+use hisolo::util::timer::{bench, fmt_ns, Table};
+use std::time::Duration;
+
+fn main() {
+    let args = Args::parse(&[]);
+    let d = args.get_usize("d", 256);
+    let heads = args.get_usize("heads", 8);
+    let t_top = args.get_usize("t", 128);
+    let budget = Duration::from_millis(args.get_usize("budget-ms", 200) as u64);
+    assert!(d % heads == 0, "--d must be divisible by --heads");
+
+    println!("== batched masked attention: d={d} heads={heads} t<= {t_top}, ragged k sweep ==");
+    println!("   loop = slice + causal_mha_scalar per window; batched = one attention_batch\n");
+    let mut table = Table::new(&[
+        "k",
+        "per-window loop",
+        "attention_batch",
+        "speedup",
+        "pad overhead",
+        "max |diff|",
+    ]);
+
+    let mut k32: Option<(f64, f64, f64, f64)> = None; // (loop_ns, batch_ns, speedup, pad)
+    for &kw in &[1usize, 8, 32] {
+        // ragged lengths: cycle from t_top down to ~t_top/2 so the batch
+        // straddles real length variance (and one power-of-two edge)
+        let half = (t_top / 2).max(1);
+        let lens: Vec<usize> = (0..kw).map(|i| t_top - (i * 13) % half).collect();
+        let mut offsets = vec![0usize];
+        for &t in &lens {
+            offsets.push(offsets[offsets.len() - 1] + t);
+        }
+        let total = *offsets.last().unwrap();
+        let qm = Matrix::randn(total, d, 1);
+        let km = Matrix::randn(total, d, 2);
+        let vm = Matrix::randn(total, d, 3);
+
+        // per-window loop: the pre-batching serving shape — slice the
+        // window out of the stack, run scalar attention, copy back
+        let mut out_loop = Matrix::zeros(total, d);
+        let loop_stats = bench(
+            || {
+                for w in 0..kw {
+                    let (o0, o1) = (offsets[w], offsets[w + 1]);
+                    let qs = qm.slice(o0, o1, 0, d);
+                    let ks = km.slice(o0, o1, 0, d);
+                    let vs = vm.slice(o0, o1, 0, d);
+                    out_loop.set_block(o0, 0, &causal_mha_scalar(&qs, &ks, &vs, heads));
+                }
+            },
+            2,
+            budget,
+            10_000,
+        );
+
+        let mut ws = AttnWorkspace::default();
+        let mut out_batch = Matrix::zeros(total, d);
+        let batch_stats = bench(
+            || {
+                attention_batch(
+                    std::hint::black_box(&qm),
+                    &km,
+                    &vm,
+                    &offsets,
+                    heads,
+                    &mut out_batch,
+                    &mut ws,
+                )
+            },
+            2,
+            budget,
+            10_000,
+        );
+
+        // sanity: same attention, different kernels
+        let mut max_diff = 0.0f32;
+        for (a, b) in out_batch.data.iter().zip(out_loop.data.iter()) {
+            max_diff = max_diff.max((a - b).abs());
+        }
+        assert!(max_diff < 1e-3, "batched attention diverged: {max_diff}");
+
+        // padding overhead of this length mix under the default edges
+        let edges = default_bucket_edges();
+        let mut by_bucket: Vec<Vec<usize>> = vec![Vec::new(); edges.len() + 1];
+        for &t in &lens {
+            by_bucket[bucket_index(t, &edges)].push(t);
+        }
+        let (mut actual, mut padded) = (0usize, 0usize);
+        for b in by_bucket.iter().filter(|b| !b.is_empty()) {
+            let max_t = *b.iter().max().unwrap();
+            actual += b.iter().sum::<usize>();
+            padded += max_t * b.len();
+        }
+        let pad_pct = 100.0 * (1.0 - actual as f64 / padded as f64);
+
+        let speedup = loop_stats.mean_ns / batch_stats.mean_ns;
+        table.row(&[
+            kw.to_string(),
+            fmt_ns(loop_stats.mean_ns),
+            fmt_ns(batch_stats.mean_ns),
+            format!("{speedup:.2}x"),
+            format!("{pad_pct:.1}%"),
+            format!("{max_diff:.2e}"),
+        ]);
+        if kw == 32 {
+            k32 = Some((loop_stats.mean_ns, batch_stats.mean_ns, speedup, pad_pct));
+        }
+    }
+    table.print();
+
+    let (loop_ns, batch_ns, speedup, pad_pct) = k32.expect("k = 32 case ran");
+    let record = obj(vec![
+        ("bench", s("attention")),
+        ("d", num(d as f64)),
+        ("heads", num(heads as f64)),
+        ("t_top", num(t_top as f64)),
+        ("attn_k32_loop_ns", num(loop_ns)),
+        ("attn_k32_batch_ns", num(batch_ns)),
+        ("attn_k32_speedup", num(speedup)),
+        ("pad_overhead_pct", num(pad_pct)),
+    ]);
+    println!("\nJSON: {record}");
+    if let Some(path) = args.get_path("json") {
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .expect("open json trajectory file");
+        writeln!(f, "{record}").expect("append trajectory line");
+        println!("appended attention trajectory line to {}", path.display());
+    }
+
+    // CI-asserted: one attention_batch call must beat the per-window loop
+    // at batch width 32 (padding overhead reported alongside)
+    let verdict = if speedup > 1.0 { "PASS" } else { "FAIL" };
+    println!(
+        "attention_check: k=32 batched {} vs loop {} speedup={speedup:.2}x pad_overhead={pad_pct:.1}% {verdict}",
+        fmt_ns(batch_ns),
+        fmt_ns(loop_ns)
+    );
+}

@@ -30,11 +30,12 @@ fn main() {
                 max_batch,
                 max_wait: Duration::from_millis(5),
                 capacity: 4096,
+                ..BatcherConfig::default()
             },
         };
 
         // --- native backend ------------------------------------------------
-        let mut coord = Coordinator::new(cfg);
+        let mut coord = Coordinator::new(cfg.clone());
         coord.add_worker(
             Variant::Dense,
             NativeDenseScorer {

@@ -22,6 +22,7 @@ fn main() -> anyhow::Result<()> {
             max_batch: 8,
             max_wait: Duration::from_millis(5),
             capacity: 1024,
+            ..BatcherConfig::default()
         },
     });
 

@@ -53,6 +53,7 @@ fn main() -> anyhow::Result<()> {
             max_batch: 8,
             max_wait: Duration::from_millis(2),
             capacity: 1024,
+            ..BatcherConfig::default()
         },
     });
     coord.add_worker(

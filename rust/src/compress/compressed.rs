@@ -51,14 +51,17 @@ impl CompressedMatrix {
             CompressedMatrix::Hss { tree } => BatchWorkspace {
                 hss: Workspace::for_node_batch(tree, k),
                 t: Vec::new(),
+                stage: Vec::new(),
             },
             CompressedMatrix::LowRank { r, .. } => BatchWorkspace {
                 hss: Workspace::default(),
                 t: vec![0.0; r.rows * k],
+                stage: Vec::new(),
             },
             CompressedMatrix::Dense { .. } => BatchWorkspace {
                 hss: Workspace::default(),
                 t: Vec::new(),
+                stage: Vec::new(),
             },
         }
     }
@@ -78,17 +81,23 @@ impl CompressedMatrix {
     pub fn apply_batch_with(&self, x: &[f32], y: &mut [f32], k: usize, ws: &mut BatchWorkspace) {
         assert!(k > 0, "empty batch");
         match self {
+            // Dense (and the thin LowRank factors below) keep the inline
+            // per-lane widening: staging a whole n×n (or n×rank) factor
+            // would hold a persistent f32 copy that erodes the f16
+            // resident-memory halving. Small blocks — HSS leaves and
+            // couplings, CSR value runs — go through the shared stage.
             CompressedMatrix::Dense { w } => w.apply_batch_into(x, y, k),
             CompressedMatrix::LowRank { l, r, sparse } => {
                 // Y = L (R X) [+ S X] — two thin block-multiplies
-                if ws.t.len() < r.rows * k {
-                    ws.t.resize(r.rows * k, 0.0);
+                let BatchWorkspace { t, stage, .. } = ws;
+                if t.len() < r.rows * k {
+                    t.resize(r.rows * k, 0.0);
                 }
-                let t = &mut ws.t[..r.rows * k];
-                r.apply_batch_into(x, t, k);
-                l.apply_batch_into(t, y, k);
+                let tb = &mut t[..r.rows * k];
+                r.apply_batch_into(x, tb, k);
+                l.apply_batch_into(tb, y, k);
                 if let Some(s) = sparse {
-                    s.spmm_add(x, y, k);
+                    s.spmm_add_staged(x, y, k, stage);
                 }
             }
             CompressedMatrix::Hss { tree } => tree.apply_batch_with(x, y, k, &mut ws.hss),
@@ -218,10 +227,17 @@ impl CompressedMatrix {
 /// Scratch reused across `apply_batch` / `matvec_with` calls; sized for
 /// the widest batch seen so far and grown on demand — a default (empty)
 /// workspace is valid for any matrix and warms up on first use.
+///
+/// `stage` is the f16 staging buffer for sparse value runs (the HSS tree
+/// carries its own, per-block-sized, inside [`Workspace`]): f16-resident
+/// weights are widened wholesale into it once per apply call so the hot
+/// kernels run their pure-f32 form, instead of converting inside the
+/// inner loop per column block.
 #[derive(Default)]
 pub struct BatchWorkspace {
     hss: Workspace,
     t: Vec<f32>,
+    stage: Vec<f32>,
 }
 
 #[cfg(test)]

@@ -16,6 +16,16 @@ pub struct Metrics {
     pub errors: AtomicU64,
     pub batches: AtomicU64,
     pub batched_requests: AtomicU64,
+    /// length-homogeneous buckets scored (each poll splits into ≥ 1)
+    pub bucket_batches: AtomicU64,
+    /// requests across all scored buckets (mean = batch-width gauge)
+    pub bucket_requests: AtomicU64,
+    /// tokens actually scored across all chunks
+    pub batch_tokens_actual: AtomicU64,
+    /// tokens of the rectangular [width × max_len] shape each scored chunk
+    /// pads to on a fixed-shape backend — the padding-overhead gauge's
+    /// denominator
+    pub batch_tokens_padded: AtomicU64,
     /// scorer hot-swaps applied by workers (see `Coordinator::swap_variant`)
     pub swaps: AtomicU64,
     /// per-variant gauge: weight bytes resident in the most recently
@@ -39,6 +49,10 @@ impl Metrics {
             errors: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             batched_requests: AtomicU64::new(0),
+            bucket_batches: AtomicU64::new(0),
+            bucket_requests: AtomicU64::new(0),
+            batch_tokens_actual: AtomicU64::new(0),
+            batch_tokens_padded: AtomicU64::new(0),
             swaps: AtomicU64::new(0),
             resident_weight_bytes: std::array::from_fn(|_| AtomicU64::new(0)),
             latency_buckets: std::array::from_fn(|_| AtomicU64::new(0)),
@@ -100,9 +114,49 @@ impl Metrics {
         }
     }
 
+    /// Record one scored length-bucket chunk: its width, the tokens it
+    /// actually scored, and the tokens its padded rectangular shape would
+    /// hold (`width × max window length`).
+    pub fn record_bucket(&self, width: usize, actual_tokens: u64, padded_tokens: u64) {
+        self.bucket_batches.fetch_add(1, Ordering::Relaxed);
+        self.bucket_requests.fetch_add(width as u64, Ordering::Relaxed);
+        self.batch_tokens_actual
+            .fetch_add(actual_tokens, Ordering::Relaxed);
+        self.batch_tokens_padded
+            .fetch_add(padded_tokens, Ordering::Relaxed);
+    }
+
+    /// Mean requests per scored length-bucket (the batch-width gauge the
+    /// coalescer is trying to keep high).
+    pub fn mean_bucket_width(&self) -> f64 {
+        let b = self.bucket_batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.bucket_requests.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+
+    /// Fraction of the padded batch shape that is padding, in [0, 1):
+    /// `1 − actual / padded`. 0 when every chunk was length-uniform (or
+    /// nothing was scored yet); high values mean the bucket edges are too
+    /// coarse for the traffic's length mix.
+    pub fn padding_overhead(&self) -> f64 {
+        let padded = self.batch_tokens_padded.load(Ordering::Relaxed);
+        if padded == 0 {
+            0.0
+        } else {
+            1.0 - self.batch_tokens_actual.load(Ordering::Relaxed) as f64 / padded as f64
+        }
+    }
+
+    /// One-line summary: counters, batch/bucket widths, latency
+    /// percentiles, then resident bytes **and** padding overhead together
+    /// — the sweep CSV and the coordinator log tell the same memory/shape
+    /// story from the same line.
     pub fn summary(&self) -> String {
         format!(
-            "submitted={} completed={} rejected={} errors={} swaps={} batches={} mean_batch={:.2} p50={}us p95={}us p99={}us resident_bytes[dense]={} resident_bytes[hss]={}",
+            "submitted={} completed={} rejected={} errors={} swaps={} batches={} mean_batch={:.2} bucket_width={:.2} p50={}us p95={}us p99={}us resident_bytes[dense]={} resident_bytes[hss]={} pad_overhead={:.1}%",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
@@ -110,11 +164,13 @@ impl Metrics {
             self.swaps.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.mean_batch_size(),
+            self.mean_bucket_width(),
             self.latency_percentile_us(0.5),
             self.latency_percentile_us(0.95),
             self.latency_percentile_us(0.99),
             self.resident_weight_bytes(Variant::Dense),
             self.resident_weight_bytes(Variant::Hss),
+            100.0 * self.padding_overhead(),
         )
     }
 }
@@ -158,6 +214,24 @@ mod tests {
         m.submitted.fetch_add(3, Ordering::Relaxed);
         let s = m.summary();
         assert!(s.contains("submitted=3"));
+    }
+
+    #[test]
+    fn bucket_and_padding_gauges() {
+        let m = Metrics::new();
+        assert_eq!(m.mean_bucket_width(), 0.0);
+        assert_eq!(m.padding_overhead(), 0.0);
+        // a uniform chunk pads nothing; a ragged one pads to its max
+        m.record_bucket(4, 32, 32); // 4 windows × 8 tokens, uniform
+        m.record_bucket(2, 12, 16); // lengths 4 + 8 padded to 2 × 8
+        assert!((m.mean_bucket_width() - 3.0).abs() < 1e-12);
+        let want = 1.0 - 44.0 / 48.0;
+        assert!((m.padding_overhead() - want).abs() < 1e-12);
+        let s = m.summary();
+        assert!(s.contains("bucket_width=3.00"), "{s}");
+        assert!(s.contains("pad_overhead=8.3%"), "{s}");
+        // resident bytes and padding overhead share the summary line
+        assert!(s.contains("resident_bytes[hss]=0"), "{s}");
     }
 
     #[test]

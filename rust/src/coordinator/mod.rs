@@ -6,6 +6,30 @@
 //! token windows to score; workers own either an AOT PJRT executable
 //! (dense / sHSS graphs) or a native forward pass, batch up to the
 //! executable's static batch size, and return per-window NLL.
+//!
+//! # Serving path: bucket → stack → batched attention
+//!
+//! A polled batch flows through three coalescing stages, each turning
+//! per-request work into one dense block operation:
+//!
+//! 1. **bucket** — [`Batcher::poll_buckets`] splits the poll into
+//!    length-homogeneous buckets ([`BatcherConfig::bucket_edges`], default
+//!    powers of two), so each scored chunk is a near-rectangular token
+//!    block and padding waste on fixed-shape backends stays bounded
+//!    (tracked by [`Metrics::padding_overhead`]);
+//! 2. **stack** — the worker scores each bucket in one `forward_batch`
+//!    call, which stacks the windows into a single tall [Σt, d] activation
+//!    block: every q/k/v projection and MLP matmul runs once per (layer,
+//!    bucket), and a compressed projection traverses its
+//!    sparse-plus-low-rank structure once for the whole bucket;
+//! 3. **batched attention** — `model::attention_batch` consumes the same
+//!    stacked block with a per-window offset table, so even causal
+//!    attention (inherently window-local) runs as packed head-blocked
+//!    kernel calls with zero per-window allocation — there is no
+//!    per-window loop anywhere in the serving pass.
+//!
+//! `eval::perplexity_parallel_batched` applies the same bucketing, so
+//! sweep numbers exercise the identical code path the coordinator serves.
 
 pub mod batcher;
 pub mod metrics;
@@ -13,7 +37,10 @@ pub mod request;
 pub mod server;
 pub mod worker;
 
-pub use batcher::{BatchPoll, Batcher, BatcherConfig};
+pub use batcher::{
+    bucket_by_len, bucket_index, default_bucket_edges, BatchPoll, Batcher, BatcherConfig,
+    BucketPoll,
+};
 pub use metrics::Metrics;
 pub use request::{ScoreRequest, ScoreResponse, Variant};
 pub use server::{Coordinator, CoordinatorConfig, SwapTicket};

@@ -15,7 +15,7 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct CoordinatorConfig {
     pub batcher: BatcherConfig,
 }
@@ -60,7 +60,7 @@ impl Coordinator {
         F: FnOnce() -> anyhow::Result<S> + Send + 'static,
     {
         let lane = self.lanes.entry(variant).or_insert_with(|| VariantLane {
-            batcher: Arc::new(Batcher::new(self.cfg.batcher)),
+            batcher: Arc::new(Batcher::new(self.cfg.batcher.clone())),
             workers: Vec::new(),
             swap_txs: Vec::new(),
         });
@@ -318,6 +318,7 @@ mod tests {
                 max_batch: 4,
                 max_wait: Duration::from_millis(2),
                 capacity: 32,
+                ..BatcherConfig::default()
             },
         });
         c.add_worker(
@@ -482,6 +483,7 @@ mod tests {
                 max_batch: 4,
                 max_wait: Duration::from_millis(2),
                 capacity: 32,
+                ..BatcherConfig::default()
             },
         });
         c.add_worker_factory(Variant::Dense, || -> anyhow::Result<MockScorer> {

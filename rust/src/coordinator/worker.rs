@@ -8,7 +8,7 @@
 //! is served entirely by one scorer, before or after the swap, never torn
 //! across it.
 
-use crate::coordinator::batcher::{BatchPoll, Batcher};
+use crate::coordinator::batcher::{BatchPoll, Batcher, BucketPoll};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{ScoreRequest, ScoreResponse, Variant};
 use crate::eval::perplexity::window_nll;
@@ -103,49 +103,61 @@ pub fn run_worker_swappable(
                 }
             }
         }
-        let batch = match batcher.poll_batch(IDLE_POLL) {
-            BatchPoll::Closed => return,
-            BatchPoll::Idle => continue,
-            BatchPoll::Batch(b) => b,
+        // length-bucketed poll: the batch comes back coalesced into
+        // near-uniform-length buckets, scored bucket-by-bucket, so every
+        // forward_batch call is a dense near-rectangular block; replies
+        // still route per request
+        let buckets = match batcher.poll_buckets(IDLE_POLL, |r: &ScoreRequest| r.window.len()) {
+            BucketPoll::Closed => return,
+            BucketPoll::Idle => continue,
+            BucketPoll::Buckets(b) => b,
         };
-        let size = batch.len();
+        let size: usize = buckets.iter().map(|b| b.len()).sum();
         metrics.record_batch(size);
-        // chunk by the scorer's static batch
-        for chunk in batch.chunks(scorer.max_batch()) {
-            let inputs: Vec<Vec<u32>> = chunk
-                .iter()
-                .map(|r| r.window[..r.window.len() - 1].to_vec())
-                .collect();
-            match scorer.score(&inputs) {
-                Ok(logits) => {
-                    for (req, lg) in chunk.iter().zip(&logits) {
-                        let (nll, tokens) = window_nll(lg, &req.window);
-                        let latency_us = req.submitted.elapsed().as_micros() as u64;
-                        metrics.record_latency_us(latency_us);
-                        metrics.completed.fetch_add(1, Ordering::Relaxed);
-                        let _ = req.reply.send(ScoreResponse {
-                            id: req.id,
-                            variant: req.variant,
-                            nll,
-                            tokens,
-                            latency_us,
-                            batch_size: size,
-                            error: None,
-                        });
+        for bucket in &buckets {
+            // chunk by the scorer's static batch
+            for chunk in bucket.chunks(scorer.max_batch()) {
+                let inputs: Vec<Vec<u32>> = chunk
+                    .iter()
+                    .map(|r| r.window[..r.window.len() - 1].to_vec())
+                    .collect();
+                match scorer.score(&inputs) {
+                    Ok(logits) => {
+                        // gauge only chunks that actually scored, so the
+                        // width/padding numbers stay honest when a lane
+                        // is erroring
+                        let actual: u64 = inputs.iter().map(|w| w.len() as u64).sum();
+                        let max_t = inputs.iter().map(|w| w.len()).max().unwrap_or(0) as u64;
+                        metrics.record_bucket(chunk.len(), actual, max_t * chunk.len() as u64);
+                        for (req, lg) in chunk.iter().zip(&logits) {
+                            let (nll, tokens) = window_nll(lg, &req.window);
+                            let latency_us = req.submitted.elapsed().as_micros() as u64;
+                            metrics.record_latency_us(latency_us);
+                            metrics.completed.fetch_add(1, Ordering::Relaxed);
+                            let _ = req.reply.send(ScoreResponse {
+                                id: req.id,
+                                variant: req.variant,
+                                nll,
+                                tokens,
+                                latency_us,
+                                batch_size: size,
+                                error: None,
+                            });
+                        }
                     }
-                }
-                Err(e) => {
-                    metrics.errors.fetch_add(chunk.len() as u64, Ordering::Relaxed);
-                    for req in chunk {
-                        let _ = req.reply.send(ScoreResponse {
-                            id: req.id,
-                            variant: req.variant,
-                            nll: f64::NAN,
-                            tokens: 0,
-                            latency_us: req.submitted.elapsed().as_micros() as u64,
-                            batch_size: size,
-                            error: Some(format!("{e:#}")),
-                        });
+                    Err(e) => {
+                        metrics.errors.fetch_add(chunk.len() as u64, Ordering::Relaxed);
+                        for req in chunk {
+                            let _ = req.reply.send(ScoreResponse {
+                                id: req.id,
+                                variant: req.variant,
+                                nll: f64::NAN,
+                                tokens: 0,
+                                latency_us: req.submitted.elapsed().as_micros() as u64,
+                                batch_size: size,
+                                error: Some(format!("{e:#}")),
+                            });
+                        }
                     }
                 }
             }
@@ -336,6 +348,7 @@ pub(crate) mod tests {
             max_batch: 4,
             max_wait: Duration::from_millis(1),
             capacity: 64,
+            ..BatcherConfig::default()
         }));
         let metrics = Arc::new(Metrics::new());
         // successor window => near-zero NLL under the mock
@@ -401,6 +414,7 @@ pub(crate) mod tests {
             max_batch: 4,
             max_wait: Duration::from_millis(1),
             capacity: 64,
+            ..BatcherConfig::default()
         }));
         let metrics = Arc::new(Metrics::new());
         let (swap_tx, swap_rx) = channel();
@@ -479,6 +493,7 @@ pub(crate) mod tests {
             max_batch: 8,
             max_wait: Duration::from_millis(20),
             capacity: 64,
+            ..BatcherConfig::default()
         }));
         let metrics = Arc::new(Metrics::new());
         let mut rxs = Vec::new();

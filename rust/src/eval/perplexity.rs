@@ -111,26 +111,64 @@ pub fn perplexity_batched<F: Fn(&[&[u32]]) -> Vec<Matrix>>(
     finish(nll, count)
 }
 
-/// Thread-parallel batched perplexity: threads steal whole chunks of
-/// `max_batch` windows and drive the batched forward per chunk.
+/// Thread-parallel batched perplexity with **length-bucketed chunking**:
+/// windows are first coalesced into the same power-of-two length buckets
+/// the serving batcher uses (`coordinator::batcher::default_bucket_edges`),
+/// then chunked to `max_batch` within each bucket, and threads steal whole
+/// chunks. Every chunk the batched forward sees is therefore a
+/// near-uniform-length block — the identical bucket → stack →
+/// batched-attention path the coordinator serves — and the result is the
+/// same NLL sum regardless of bucketing (windows are independent).
 pub fn perplexity_parallel_batched<F: Fn(&[&[u32]]) -> Vec<Matrix> + Sync>(
     windows: &[Vec<u32>],
     max_batch: usize,
     fwd_batch: F,
     threads: usize,
 ) -> PplResult {
+    use crate::coordinator::batcher::{bucket_index, default_bucket_edges};
     let max_batch = max_batch.max(1);
-    let chunks: Vec<&[Vec<u32>]> = windows.chunks(max_batch).collect();
+    let edges = default_bucket_edges();
+    let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); edges.len() + 1];
+    for (i, w) in windows.iter().enumerate() {
+        buckets[bucket_index(w.len(), &edges)].push(i);
+    }
+    let chunks: Vec<Vec<usize>> = buckets
+        .iter()
+        .flat_map(|b| b.chunks(max_batch).map(|c| c.to_vec()))
+        .collect();
+    let score_chunk = |chunk: &[usize]| -> (f64, usize) {
+        let inputs: Vec<&[u32]> = chunk
+            .iter()
+            .map(|&i| &windows[i][..windows[i].len() - 1])
+            .collect();
+        let logits = fwd_batch(&inputs);
+        assert_eq!(logits.len(), chunk.len(), "scorer returned wrong batch size");
+        let mut nll = 0.0f64;
+        let mut count = 0usize;
+        for (lg, &i) in logits.iter().zip(chunk) {
+            let (n, t) = window_nll(lg, &windows[i]);
+            nll += n;
+            count += t;
+        }
+        (nll, count)
+    };
     if threads <= 1 || chunks.len() <= 1 {
-        return perplexity_batched(windows, max_batch, fwd_batch);
+        let mut nll = 0.0f64;
+        let mut count = 0usize;
+        for chunk in &chunks {
+            let (n, t) = score_chunk(chunk);
+            nll += n;
+            count += t;
+        }
+        return finish(nll, count);
     }
     let next = AtomicUsize::new(0);
     let results: Vec<(f64, usize)> = std::thread::scope(|scope| {
         let mut handles = Vec::new();
         for _ in 0..threads.min(chunks.len()) {
             let next = &next;
-            let fwd = &fwd_batch;
             let chunks = &chunks;
+            let score_chunk = &score_chunk;
             handles.push(scope.spawn(move || {
                 let mut nll = 0.0f64;
                 let mut count = 0usize;
@@ -139,15 +177,9 @@ pub fn perplexity_parallel_batched<F: Fn(&[&[u32]]) -> Vec<Matrix> + Sync>(
                     if i >= chunks.len() {
                         break;
                     }
-                    let chunk = chunks[i];
-                    let inputs: Vec<&[u32]> = chunk.iter().map(|w| &w[..w.len() - 1]).collect();
-                    let logits = fwd(&inputs);
-                    assert_eq!(logits.len(), chunk.len(), "scorer returned wrong batch size");
-                    for (lg, w) in logits.iter().zip(chunk) {
-                        let (n, t) = window_nll(lg, w);
-                        nll += n;
-                        count += t;
-                    }
+                    let (n, t) = score_chunk(&chunks[i]);
+                    nll += n;
+                    count += t;
                 }
                 (nll, count)
             }));
@@ -232,6 +264,36 @@ mod tests {
             assert_eq!(serial.tokens, b.tokens);
             let p = perplexity_parallel_batched(&windows, max_batch, fb, 4);
             assert!((serial.ppl - p.ppl).abs() < 1e-9, "parallel max_batch {max_batch}");
+            assert_eq!(serial.tokens, p.tokens);
+        }
+    }
+
+    #[test]
+    fn bucketed_parallel_matches_serial_on_ragged_lengths() {
+        // lengths straddling several power-of-two bucket edges: the
+        // length-bucketed chunking must reorder evaluation, never results
+        let windows: Vec<Vec<u32>> = (0..13)
+            .map(|s| (0..(5 + s * 7) % 60 + 2).map(|i| ((i + s) * 5) % 64).collect())
+            .collect();
+        let f = uniform_fwd(64);
+        let serial = perplexity(&windows, &f);
+        let fb = |inputs: &[&[u32]]| -> Vec<Matrix> {
+            // every chunk must be length-homogeneous under the default
+            // power-of-two edges
+            let edges = crate::coordinator::batcher::default_bucket_edges();
+            let b0 = crate::coordinator::batcher::bucket_index(inputs[0].len() + 1, &edges);
+            for w in inputs {
+                assert_eq!(
+                    crate::coordinator::batcher::bucket_index(w.len() + 1, &edges),
+                    b0,
+                    "chunk mixes length buckets"
+                );
+            }
+            inputs.iter().map(|t| f(t)).collect()
+        };
+        for threads in [1, 4] {
+            let p = perplexity_parallel_batched(&windows, 4, fb, threads);
+            assert!((serial.ppl - p.ppl).abs() < 1e-9, "threads {threads}");
             assert_eq!(serial.tokens, p.tokens);
         }
     }

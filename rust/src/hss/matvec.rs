@@ -46,13 +46,20 @@ impl HssNode {
         assert_eq!(x.len(), self.n() * k);
         assert_eq!(y.len(), self.n() * k);
         ws.ensure(self, k);
-        self.apply_rec(x, y, k, &mut ws.levels);
+        self.apply_rec(x, y, k, &mut ws.levels, &mut ws.stage);
     }
 
-    fn apply_rec(&self, x: &[f32], y: &mut [f32], k: usize, levels: &mut [LevelBufs]) {
+    fn apply_rec(
+        &self,
+        x: &[f32],
+        y: &mut [f32],
+        k: usize,
+        levels: &mut [LevelBufs],
+        stage: &mut Vec<f32>,
+    ) {
         match self {
             HssNode::Leaf { d } => {
-                d.apply_batch_into(x, y, k);
+                d.apply_batch_into_staged(x, y, k, stage);
             }
             HssNode::Branch {
                 n,
@@ -81,22 +88,23 @@ impl HssNode {
                 // batch splits at the node boundary without copying)
                 let (x0, x1) = xp.split_at(n0 * k);
                 let (y0, y1) = yp.split_at_mut(n0 * k);
-                c0.apply_rec(x0, y0, k, rest);
-                c1.apply_rec(x1, y1, k, rest);
+                c0.apply_rec(x0, y0, k, rest, stage);
+                c1.apply_rec(x1, y1, k, rest, stage);
 
-                // couplings: Y0 += U0 (R0 X1), Y1 += U1 (R1 X0)
+                // couplings: Y0 += U0 (R0 X1), Y1 += U1 (R1 X0) — staged
+                // so f16-resident factors widen once per block per call
                 let t0 = &mut t[..r0.rows * k];
-                r0.apply_batch_into(x1, t0, k);
-                u0.apply_batch_add(t0, y0, k);
+                r0.apply_batch_into_staged(x1, t0, k, stage);
+                u0.apply_batch_add_staged(t0, y0, k, stage);
                 let t1 = &mut t[..r1.rows * k];
-                r1.apply_batch_into(x0, t1, k);
-                u1.apply_batch_add(t1, y1, k);
+                r1.apply_batch_into_staged(x0, t1, k, stage);
+                u1.apply_batch_add_staged(t1, y1, k, stage);
 
                 // (4) inverse-permute up: y.row(perm[i]) = yp.row(i)
                 perm.apply_inv_cols_into(yp, y, k);
 
                 // (1)+(5) add the spike contribution in original coordinates
-                sparse.spmm_add(x, y, k);
+                sparse.spmm_add_staged(x, y, k, stage);
             }
         }
     }
@@ -108,9 +116,17 @@ impl HssNode {
 /// Buffers are sized n·k / rank·k for the widest batch seen so far and
 /// grow on demand — a k = 1 workspace warmed on the request path widens
 /// once when the first batch arrives, then stays allocation-free.
+///
+/// `stage` is the f16 staging buffer shared by every block of the
+/// traversal: each f16-resident leaf / coupling / spike-value run is
+/// widened wholesale into it once per visit, so the hot kernels always
+/// run their f32 monomorphization. It is sized to the largest single
+/// block of the tree (not the whole tree), so the resident-memory halving
+/// of f16 serving survives.
 #[derive(Default)]
 pub struct Workspace {
     levels: Vec<LevelBufs>,
+    stage: Vec<f32>,
 }
 
 struct LevelBufs {
@@ -154,6 +170,39 @@ impl Workspace {
                 }
             }
         }
+        // pre-size the f16 staging buffer so the request path performs no
+        // allocation after warmup (f32-resident trees never touch it)
+        if node.weights_dtype() == crate::linalg::Dtype::F16 {
+            let need = max_block_len(node);
+            if self.stage.len() < need {
+                self.stage.resize(need, 0.0);
+            }
+        }
+    }
+}
+
+/// Largest single weight block (leaf, coupling factor, or spike-value
+/// run) in the tree — the f16 staging buffer's size.
+fn max_block_len(node: &HssNode) -> usize {
+    match node {
+        HssNode::Leaf { d } => d.data.len(),
+        HssNode::Branch {
+            sparse,
+            u0,
+            r0,
+            u1,
+            r1,
+            c0,
+            c1,
+            ..
+        } => sparse
+            .nnz()
+            .max(u0.data.len())
+            .max(r0.data.len())
+            .max(u1.data.len())
+            .max(r1.data.len())
+            .max(max_block_len(c0))
+            .max(max_block_len(c1)),
     }
 }
 

@@ -76,6 +76,19 @@
 //! `Coordinator::swap_variant` (or `swap_variant_prefetched`, which
 //! parses the incoming variant on a helper thread).
 //!
+//! The serving pass itself is **bucket → stack → batched attention**
+//! (the paper's "one sparse and a sequence of thin-matrix
+//! multiplications", end to end): the batcher coalesces polled requests
+//! into power-of-two length buckets (`Batcher::poll_buckets`; padding
+//! overhead is a metrics gauge), each bucket is scored in one
+//! `forward_batch` that stacks its windows into a single tall [Σt, d]
+//! block — one compressed traversal per (layer, projection) for the
+//! whole bucket — and causal attention runs as one
+//! `model::attention_batch` call per layer over that same block, driven
+//! by a per-window offset table. No per-window loop survives anywhere
+//! on the hot path; `eval` buckets identically so sweep numbers measure
+//! the code that serves.
+//!
 //! One-shot compression is only half the paper's deployment story: the
 //! [`train`] module fine-tunes the surviving factor values end-to-end
 //! against the dense teacher (layer-wise ‖W x − Ŵ x‖² calibration with

@@ -199,9 +199,16 @@ impl Matrix {
         out
     }
 
-    /// Write `src` into the block starting at (r0, c0).
+    /// Write `src` into the block starting at (r0, c0). Full-width blocks
+    /// (the attention/logits write-back shape) are one contiguous
+    /// `copy_from_slice`; narrower blocks copy row slices.
     pub fn set_block(&mut self, r0: usize, c0: usize, src: &Matrix) {
         assert!(r0 + src.rows <= self.rows && c0 + src.cols <= self.cols);
+        if c0 == 0 && src.cols == self.cols {
+            let start = r0 * self.cols;
+            self.data[start..start + src.rows * src.cols].copy_from_slice(&src.data);
+            return;
+        }
         for i in 0..src.rows {
             self.row_mut(r0 + i)[c0..c0 + src.cols].copy_from_slice(src.row(i));
         }
@@ -380,6 +387,45 @@ impl Matrix {
         }
     }
 
+    /// [`Matrix::apply_batch_into`] with an f16 staging buffer: an
+    /// f16-resident matrix is pre-widened **wholesale** into `stage` once
+    /// per call (exact), so the hot kernel always runs the pure-f32
+    /// monomorphization instead of converting inside the inner loop; an
+    /// f32-resident matrix skips the staging copy entirely. Bit-identical
+    /// to the unstaged call for either dtype — widening is exact and the
+    /// kernel's arithmetic order is unchanged. `stage` grows on demand and
+    /// is reused across calls (wire it through a `BatchWorkspace`).
+    pub fn apply_batch_into_staged(&self, x: &[f32], y: &mut [f32], k: usize, stage: &mut Vec<f32>) {
+        match &self.data {
+            WeightBuf::F32(_) => self.apply_batch_into(x, y, k),
+            WeightBuf::F16(w) => {
+                assert_eq!(x.len(), self.cols * k, "input block shape mismatch");
+                assert_eq!(y.len(), self.rows * k, "output block shape mismatch");
+                let s = crate::linalg::weightbuf::widen_f16_into(w, stage);
+                if k == 1 {
+                    matvec_into_w(s, self.rows, self.cols, x, y);
+                } else {
+                    y.fill(0.0);
+                    apply_batch_add_w(s, self.rows, self.cols, x, y, k);
+                }
+            }
+        }
+    }
+
+    /// Accumulating form of [`Matrix::apply_batch_into_staged`]
+    /// (Y += A @ X).
+    pub fn apply_batch_add_staged(&self, x: &[f32], y: &mut [f32], k: usize, stage: &mut Vec<f32>) {
+        match &self.data {
+            WeightBuf::F32(_) => self.apply_batch_add(x, y, k),
+            WeightBuf::F16(w) => {
+                assert_eq!(x.len(), self.cols * k, "input block shape mismatch");
+                assert_eq!(y.len(), self.rows * k, "output block shape mismatch");
+                let s = crate::linalg::weightbuf::widen_f16_into(w, stage);
+                apply_batch_add_w(s, self.rows, self.cols, x, y, k);
+            }
+        }
+    }
+
     /// Symmetric permutation A[p, p] (rows and columns).
     pub fn permute_sym(&self, perm: &[usize]) -> Matrix {
         assert!(self.is_square());
@@ -501,7 +547,10 @@ fn matvec_t_add_w<E: WeightElem>(w: &[E], rows: usize, cols: usize, x: &[f32], y
 
 /// Y += W X over a raw row-major weight slice and [cols, k] column block.
 /// Each weight element is widened once and reused across all k lanes.
-fn apply_batch_add_w<E: WeightElem>(
+/// Public as the slice-level axpy kernel: batched attention drives its
+/// softmax · V context rows through it ([1, t] weights × [t, head_dim]
+/// values), so P·V is the same thin multiply as every other kernel.
+pub fn apply_batch_add_w<E: WeightElem>(
     w: &[E],
     rows: usize,
     cols: usize,
@@ -828,6 +877,60 @@ mod tests {
         aq.matmul_bt_into(&bt, &mut c1);
         ah.matmul_bt_into(&bt, &mut c2);
         assert_eq!(c1, c2);
+    }
+
+    /// The staging contract: pre-widening an f16-resident matrix into the
+    /// scratch and running the f32 kernel is bit-identical to the inline
+    /// widening path, for both overwrite and accumulate forms, with the
+    /// stage reused (stale) across calls.
+    #[test]
+    fn staged_apply_bit_matches_unstaged() {
+        check(10, |rng| {
+            let rows = 3 + rng.below(30);
+            let cols = 3 + rng.below(30);
+            let k = 1 + rng.below(9);
+            let mut h = Matrix::randn(rows, cols, rng.next_u64());
+            h.narrow_to_f16();
+            let x: Vec<f32> = (0..cols * k).map(|_| rng.gaussian_f32()).collect();
+            let mut stage = vec![7.0f32; 3]; // undersized and stale
+            let mut y1 = vec![0.0f32; rows * k];
+            let mut y2 = vec![1.0f32; rows * k]; // stale output must be overwritten
+            h.apply_batch_into(&x, &mut y1, k);
+            h.apply_batch_into_staged(&x, &mut y2, k, &mut stage);
+            if y1 != y2 {
+                return Err("staged apply_batch_into != unstaged (bitwise)".into());
+            }
+            let mut a1 = y1.clone();
+            let mut a2 = y1.clone();
+            h.apply_batch_add(&x, &mut a1, k);
+            h.apply_batch_add_staged(&x, &mut a2, k, &mut stage);
+            if a1 != a2 {
+                return Err("staged apply_batch_add != unstaged (bitwise)".into());
+            }
+            // f32-resident matrices bypass the stage entirely
+            let f = Matrix::randn(rows, cols, rng.next_u64());
+            let before = stage.clone();
+            let mut y3 = vec![0.0f32; rows * k];
+            let mut y4 = vec![0.0f32; rows * k];
+            f.apply_batch_into(&x, &mut y3, k);
+            f.apply_batch_into_staged(&x, &mut y4, k, &mut stage);
+            if y3 != y4 || stage != before {
+                return Err("f32 staged path must bypass the stage".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn set_block_full_width_fast_path() {
+        let src = Matrix::randn(3, 5, 41);
+        let mut dst = Matrix::from_fn(6, 5, |_, _| 9.0);
+        dst.set_block(2, 0, &src);
+        for i in 0..3 {
+            assert_eq!(dst.row(2 + i), src.row(i));
+        }
+        assert!(dst.row(0).iter().all(|&v| v == 9.0));
+        assert!(dst.row(5).iter().all(|&v| v == 9.0));
     }
 
     #[test]

@@ -176,6 +176,22 @@ impl WeightBuf {
     }
 }
 
+/// Widen raw binary16 bit patterns into a reusable f32 staging buffer
+/// (exact; one pass, trivially vectorizable) and return the widened
+/// prefix. `stage` grows on demand and is never shrunk, so a workspace-
+/// owned buffer is allocation-free after warmup. This is the f16 staging
+/// path of the batched apply engine: one wholesale widen per block per
+/// call instead of per-element conversion inside the hot kernel's lanes.
+pub fn widen_f16_into<'a>(bits: &[u16], stage: &'a mut Vec<f32>) -> &'a [f32] {
+    if stage.len() < bits.len() {
+        stage.resize(bits.len(), 0.0);
+    }
+    for (s, &b) in stage.iter_mut().zip(bits.iter()) {
+        *s = f16_to_f32(b);
+    }
+    &stage[..bits.len()]
+}
+
 impl From<Vec<f32>> for WeightBuf {
     fn from(v: Vec<f32>) -> WeightBuf {
         WeightBuf::F32(v)

@@ -507,6 +507,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
             max_batch: args.get_usize("max-batch", 8),
             max_wait: Duration::from_millis(args.get_usize("max-wait-ms", 5) as u64),
             capacity: args.get_usize("capacity", 1024),
+            // window-length coalescing: "pow2" (default), "none", or a
+            // comma-separated list of ascending bucket edges
+            bucket_edges: match args.get_str("bucket-edges", "pow2").as_str() {
+                "pow2" => hisolo::coordinator::batcher::default_bucket_edges(),
+                "none" => Vec::new(),
+                spec => {
+                    let edges = spec
+                        .split(',')
+                        .map(|e| e.trim().parse::<usize>())
+                        .collect::<std::result::Result<Vec<_>, _>>()
+                        .map_err(|e| anyhow::anyhow!("bad --bucket-edges '{spec}': {e}"))?;
+                    // bucket_index picks the first edge >= len, so the
+                    // homogeneity guarantee needs strictly ascending,
+                    // nonzero edges
+                    if edges[0] == 0 || edges.windows(2).any(|w| w[0] >= w[1]) {
+                        bail!("--bucket-edges '{spec}' must be strictly ascending and nonzero");
+                    }
+                    edges
+                }
+            },
         },
     };
     let mut coord = Coordinator::new(coordinator_cfg);

@@ -1,0 +1,317 @@
+//! Batched masked attention — the last per-window loop in serving, killed.
+//!
+//! `forward_batch` stacks every window's activations into one tall [Σt, d]
+//! block so projections and MLP run as single thin-matrix multiplies; this
+//! module does the same for attention. [`attention_batch`] walks a
+//! per-window offset table over the stacked Q/K/V blocks and, per (window,
+//! head), packs the K/V head slices contiguous, forms the causal score rows
+//! with the shared [`gemm_nt_add`] dot kernel, and applies the softmax
+//! weights to V with the shared [`apply_batch_add_w`] axpy kernel — the
+//! same thin multiplies every other kernel in the stack runs. All scratch
+//! (packed head slices, softmax row) lives in a reusable [`AttnWorkspace`]
+//! sized to the longest window, so a serving batch performs **zero
+//! per-window allocation**: one `attention_batch` call replaces k
+//! `causal_mha` calls that each allocated score/output matrices.
+//!
+//! [`causal_mha`] is kept as the single-window (k = 1) case of the same
+//! code path — mirroring how `matvec_with` is the k = 1 case of
+//! `apply_batch` — so batched and per-window serving are bit-identical by
+//! construction, which the property tests pin. The pre-batching scalar
+//! implementation survives as [`causal_mha_scalar`], the independent
+//! numerical reference for tests and the per-window arm of
+//! `benches/attention.rs`.
+
+use crate::linalg::matrix::{apply_batch_add_w, gemm_nt_add};
+use crate::linalg::Matrix;
+
+/// Reusable scratch for [`attention_batch`]: packed per-head K/V slices
+/// and one softmax row, sized to the longest window seen so far (grown on
+/// demand, never shrunk). Q needs no packing — each query's head slice is
+/// already a contiguous [1, hd] row read exactly once. A default
+/// workspace is valid for any call and warms up on first use; after
+/// warmup the batched attention allocates nothing.
+#[derive(Default)]
+pub struct AttnWorkspace {
+    /// packed [t, hd] head slice of K (rows contiguous, unlike the strided
+    /// head columns of the stacked [Σt, d] block)
+    kh: Vec<f32>,
+    /// packed [t, hd] head slice of V
+    vh: Vec<f32>,
+    /// one causal score/softmax row (≤ t_max entries live per query)
+    probs: Vec<f32>,
+}
+
+impl AttnWorkspace {
+    /// Grow the buffers to fit windows up to `t_max` rows at head width
+    /// `hd` (idempotent; only ever grows).
+    pub fn ensure(&mut self, t_max: usize, hd: usize) {
+        if self.kh.len() < t_max * hd {
+            self.kh.resize(t_max * hd, 0.0);
+            self.vh.resize(t_max * hd, 0.0);
+        }
+        if self.probs.len() < t_max {
+            self.probs.resize(t_max, 0.0);
+        }
+    }
+}
+
+/// Multi-head causal attention over a stacked batch of windows.
+///
+/// `q`/`k`/`v` are the stacked [Σt, d] projection outputs of
+/// `forward_batch`; `offsets` is the per-window offset table
+/// (`offsets[w]..offsets[w + 1]` are window w's rows, so
+/// `offsets = [0, t₀, t₀+t₁, …, Σt]`). Attention never crosses a window
+/// boundary: rows of `out` in window w attend only to earlier rows of the
+/// same window. `out` must be [Σt, d]; every row is fully overwritten.
+///
+/// Per (window, head) the K/V head slices are packed contiguous, each causal
+/// score row is one `gemm_nt_add` over the packed prefix (the same dot
+/// kernel as every dense multiply — and only the causal half of the
+/// scores is ever formed), and the softmax-weighted sum over V is one
+/// `apply_batch_add_w` with k = head_dim. The single-window case is
+/// exactly [`causal_mha`].
+pub fn attention_batch(
+    q: &Matrix,
+    k: &Matrix,
+    v: &Matrix,
+    offsets: &[usize],
+    n_heads: usize,
+    out: &mut Matrix,
+    ws: &mut AttnWorkspace,
+) {
+    let d = q.cols;
+    assert!(
+        offsets.len() >= 2 && offsets[0] == 0,
+        "offset table must be [0, ..., total]"
+    );
+    let total = *offsets.last().unwrap();
+    assert_eq!(q.rows, total, "q rows != offset total");
+    assert_eq!((k.rows, k.cols), (total, d), "k shape mismatch");
+    assert_eq!((v.rows, v.cols), (total, d), "v shape mismatch");
+    assert_eq!((out.rows, out.cols), (total, d), "output shape mismatch");
+    assert!(
+        n_heads > 0 && d % n_heads == 0,
+        "d_model {d} not divisible by n_heads {n_heads}"
+    );
+    let hd = d / n_heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let t_max = offsets.windows(2).map(|w| w[1] - w[0]).max().unwrap_or(0);
+    ws.ensure(t_max, hd);
+    let AttnWorkspace { kh, vh, probs } = ws;
+
+    for wi in 0..offsets.len() - 1 {
+        let (off, end) = (offsets[wi], offsets[wi + 1]);
+        assert!(end >= off && end <= total, "offset table not monotone");
+        let t = end - off;
+        if t == 0 {
+            continue;
+        }
+        for h in 0..n_heads {
+            let c0 = h * hd;
+            // pack the K/V head slices contiguous: strided [t, d] columns
+            // c0..c0+hd become row-major [t, hd] blocks, so the t² score
+            // and context passes stream dense cache lines (Q is consumed
+            // one already-contiguous row at a time — no copy needed)
+            for i in 0..t {
+                kh[i * hd..(i + 1) * hd].copy_from_slice(&k.row(off + i)[c0..c0 + hd]);
+                vh[i * hd..(i + 1) * hd].copy_from_slice(&v.row(off + i)[c0..c0 + hd]);
+            }
+            for i in 0..t {
+                // causal score row: only keys 0..=i are ever formed
+                let pr = &mut probs[..=i];
+                pr.fill(0.0);
+                let qi = &q.row(off + i)[c0..c0 + hd];
+                gemm_nt_add(qi, &kh[..(i + 1) * hd], 1, i + 1, hd, pr);
+                // softmax (streaming max, same order as the scalar ref)
+                let mut maxs = f32::NEG_INFINITY;
+                for p in pr.iter_mut() {
+                    *p *= scale;
+                    maxs = maxs.max(*p);
+                }
+                let mut denom = 0.0f32;
+                for p in pr.iter_mut() {
+                    *p = (*p - maxs).exp();
+                    denom += *p;
+                }
+                let inv = 1.0 / denom;
+                for p in pr.iter_mut() {
+                    *p *= inv;
+                }
+                // context row: out[off+i, c0..c0+hd] = probs · V[0..=i]
+                let orow = &mut out.row_mut(off + i)[c0..c0 + hd];
+                orow.fill(0.0);
+                apply_batch_add_w(&probs[..=i], 1, i + 1, &vh[..(i + 1) * hd], orow, hd);
+            }
+        }
+    }
+}
+
+/// Multi-head causal attention for one window: the single-window (k = 1)
+/// case of [`attention_batch`] — same kernels, same bits. q, k, v:
+/// [t, d] → [t, d].
+pub fn causal_mha(q: &Matrix, k: &Matrix, v: &Matrix, n_heads: usize) -> Matrix {
+    let mut out = Matrix::zeros(q.rows, q.cols);
+    let mut ws = AttnWorkspace::default();
+    attention_batch(q, k, v, &[0, q.rows], n_heads, &mut out, &mut ws);
+    out
+}
+
+/// The pre-batching scalar reference: per-query streaming-softmax causal
+/// attention reading the strided head slices in place. Kept as an
+/// independent numerical cross-check for [`attention_batch`] (property
+/// tests) and as the per-window arm of `benches/attention.rs`; serving
+/// never calls it.
+pub fn causal_mha_scalar(q: &Matrix, k: &Matrix, v: &Matrix, n_heads: usize) -> Matrix {
+    let t = q.rows;
+    let d = q.cols;
+    let hd = d / n_heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut out = Matrix::zeros(t, d);
+    let mut probs = vec![0.0f32; t];
+    for h in 0..n_heads {
+        let c0 = h * hd;
+        for i in 0..t {
+            let qi = &q.row(i)[c0..c0 + hd];
+            // scores over keys 0..=i (causal), streaming softmax
+            let mut maxs = f32::NEG_INFINITY;
+            for j in 0..=i {
+                let kj = &k.row(j)[c0..c0 + hd];
+                let s = crate::linalg::matrix::dot(qi, kj, hd) * scale;
+                probs[j] = s;
+                maxs = maxs.max(s);
+            }
+            let mut denom = 0.0f32;
+            for p in probs[..=i].iter_mut() {
+                *p = (*p - maxs).exp();
+                denom += *p;
+            }
+            let inv = 1.0 / denom;
+            let orow = &mut out.row_mut(i)[c0..c0 + hd];
+            for j in 0..=i {
+                let w = probs[j] * inv;
+                let vj = &v.row(j)[c0..c0 + hd];
+                for (o, &vv) in orow.iter_mut().zip(vj) {
+                    *o += w * vv;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, slices_close};
+
+    fn stacked(total: usize, d: usize, seed: u64) -> (Matrix, Matrix, Matrix) {
+        (
+            Matrix::randn(total, d, seed),
+            Matrix::randn(total, d, seed + 1),
+            Matrix::randn(total, d, seed + 2),
+        )
+    }
+
+    /// The tentpole equivalence property: one batched call over ragged
+    /// windows (t = 1 and single-window degenerate cases included) is
+    /// **bit-for-bit** the per-window `causal_mha` answer — batching and
+    /// workspace reuse change layout, never bits.
+    #[test]
+    fn attention_batch_bit_matches_per_window_causal_mha() {
+        check(12, |rng| {
+            let heads = 1 + rng.below(4);
+            let hd = 4 + rng.below(5);
+            let d = heads * hd;
+            let n_windows = 1 + rng.below(4);
+            let ts: Vec<usize> = (0..n_windows).map(|_| 1 + rng.below(12)).collect();
+            let mut offsets = vec![0usize];
+            for &t in &ts {
+                offsets.push(offsets[offsets.len() - 1] + t);
+            }
+            let total = *offsets.last().unwrap();
+            let (q, k, v) = stacked(total, d, rng.next_u64());
+            let mut out = Matrix::zeros(total, d);
+            // a reused (and, after the first window, stale) workspace must
+            // not leak between windows
+            let mut ws = AttnWorkspace::default();
+            attention_batch(&q, &k, &v, &offsets, heads, &mut out, &mut ws);
+            for w in 0..n_windows {
+                let (o0, o1) = (offsets[w], offsets[w + 1]);
+                let solo = causal_mha(
+                    &q.slice(o0, o1, 0, d),
+                    &k.slice(o0, o1, 0, d),
+                    &v.slice(o0, o1, 0, d),
+                    heads,
+                );
+                let got = out.slice(o0, o1, 0, d);
+                if got.data.as_f32() != solo.data.as_f32() {
+                    return Err(format!("window {w}: batched != per-window (bitwise)"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Independent cross-check: the kernel-driven path agrees with the
+    /// pre-batching scalar implementation to fp tolerance (different
+    /// accumulation grouping in the P·V pass, same math).
+    #[test]
+    fn attention_batch_matches_scalar_reference() {
+        check(10, |rng| {
+            let heads = 1 + rng.below(4);
+            let d = heads * (4 + rng.below(5));
+            let t = 1 + rng.below(14);
+            let (q, k, v) = stacked(t, d, rng.next_u64());
+            let batched = causal_mha(&q, &k, &v, heads);
+            let scalar = causal_mha_scalar(&q, &k, &v, heads);
+            slices_close(&batched.data, &scalar.data, 1e-5, 1e-5, "vs scalar")
+        });
+    }
+
+    #[test]
+    fn uniform_v_rows_sum_to_one() {
+        let t = 8;
+        let d = 16;
+        let q = Matrix::randn(t, d, 4);
+        let k = Matrix::randn(t, d, 5);
+        let v = Matrix::from_fn(t, d, |_i, _j| 1.0);
+        let o = causal_mha(&q, &k, &v, 4);
+        for val in o.data.iter() {
+            assert!((val - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn single_token_window_passes_v_through() {
+        let d = 12;
+        let (q, k, v) = stacked(1, d, 7);
+        let o = causal_mha(&q, &k, &v, 3);
+        slices_close(&o.data, &v.data, 1e-6, 1e-6, "t=1").unwrap();
+    }
+
+    #[test]
+    fn empty_window_in_offset_table_is_skipped() {
+        let d = 8;
+        let (q, k, v) = stacked(5, d, 9);
+        let mut out = Matrix::zeros(5, d);
+        let mut ws = AttnWorkspace::default();
+        // window layout [3, 0, 2]: the empty middle window contributes no
+        // rows and must not disturb its neighbours
+        attention_batch(&q, &k, &v, &[0, 3, 3, 5], 2, &mut out, &mut ws);
+        let a = causal_mha(&q.slice(0, 3, 0, d), &k.slice(0, 3, 0, d), &v.slice(0, 3, 0, d), 2);
+        let b = causal_mha(&q.slice(3, 5, 0, d), &k.slice(3, 5, 0, d), &v.slice(3, 5, 0, d), 2);
+        assert_eq!(out.slice(0, 3, 0, d).data.as_f32(), a.data.as_f32());
+        assert_eq!(out.slice(3, 5, 0, d).data.as_f32(), b.data.as_f32());
+    }
+
+    #[test]
+    fn out_rows_fully_overwritten() {
+        let d = 8;
+        let (q, k, v) = stacked(6, d, 11);
+        let mut stale = Matrix::from_fn(6, d, |_, _| 42.0);
+        let mut ws = AttnWorkspace::default();
+        attention_batch(&q, &k, &v, &[0, 6], 2, &mut stale, &mut ws);
+        let fresh = causal_mha(&q, &k, &v, 2);
+        assert_eq!(stale.data.as_f32(), fresh.data.as_f32());
+    }
+}

@@ -3,11 +3,14 @@
 //! tokenizer, the native forward pass, and the compressed-projection
 //! variant used by the evaluation harness.
 
+pub mod attention;
 pub mod compressed_model;
 pub mod config;
 pub mod tokenizer;
 pub mod transformer;
 pub mod weights;
+
+pub use attention::{attention_batch, causal_mha, AttnWorkspace};
 
 pub use compressed_model::CompressedModel;
 pub use config::ModelConfig;

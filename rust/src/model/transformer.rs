@@ -12,6 +12,18 @@ use crate::model::weights::WeightFile;
 use crate::model::ModelConfig;
 use anyhow::Result;
 
+use crate::model::attention::{attention_batch, AttnWorkspace};
+
+thread_local! {
+    /// Per-thread attention scratch for the serving forward pass: sized to
+    /// the longest window seen on this thread and only ever grown, so one
+    /// workspace serves every layer of every batch with zero per-window
+    /// allocation after warmup (the attention twin of
+    /// `compressed_model::PROJECT_WS`).
+    static ATTN_WS: std::cell::RefCell<AttnWorkspace> =
+        std::cell::RefCell::new(AttnWorkspace::default());
+}
+
 /// Which projection a [`QkvProjector`] is asked for.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Proj {
@@ -158,8 +170,9 @@ impl Transformer {
     /// are stacked into one tall [Σt, d] block, so a compressed projector
     /// traverses its sparse-plus-low-rank structure once per (layer,
     /// projection) for the entire batch instead of once per window (or,
-    /// pre-batching, once per token). Only causal attention — inherently
-    /// per-window — loops over row ranges.
+    /// pre-batching, once per token). Attention runs as one
+    /// [`attention_batch`] call per layer, driven by the windows' offset
+    /// table — there is no per-window loop left in the pass.
     pub fn forward_batch_with<P: QkvProjector>(&self, windows: &[&[u32]], proj: &P) -> Vec<Matrix> {
         self.forward_batch_inner(windows, proj, None)
     }
@@ -200,6 +213,13 @@ impl Transformer {
             assert!(t <= self.cfg.seq_len, "window longer than seq_len");
         }
         let total: usize = ts.iter().sum();
+        // per-window offset table: window w occupies rows
+        // offsets[w]..offsets[w + 1] of every stacked block
+        let mut offsets = Vec::with_capacity(ts.len() + 1);
+        offsets.push(0usize);
+        for &t in &ts {
+            offsets.push(offsets[offsets.len() - 1] + t);
+        }
 
         // embeddings, windows stacked row-major (window-major order)
         let mut h = Matrix::zeros(total, d);
@@ -229,16 +249,13 @@ impl Transformer {
             let q = proj.project(li, Proj::Q, &a);
             let k = proj.project(li, Proj::K, &a);
             let v = proj.project(li, Proj::V, &a);
-            // causal attention never crosses a window boundary
+            // one batched masked attention over the whole stack; the
+            // offset table keeps causal attention inside window boundaries
             let mut o = Matrix::zeros(total, d);
-            let mut off = 0;
-            for &t in &ts {
-                let qs = q.slice(off, off + t, 0, d);
-                let ks = k.slice(off, off + t, 0, d);
-                let vs = v.slice(off, off + t, 0, d);
-                o.set_block(off, 0, &causal_mha(&qs, &ks, &vs, self.cfg.n_heads));
-                off += t;
-            }
+            ATTN_WS.with(|ws| {
+                let ws = &mut ws.borrow_mut();
+                attention_batch(&q, &k, &v, &offsets, self.cfg.n_heads, &mut o, ws)
+            });
             let oh = o.matmul(&l.wo);
             h = h.add(&oh);
 
@@ -327,45 +344,6 @@ pub fn gelu(x: f32) -> f32 {
     0.5 * x * (1.0 + (0.797_884_6 * (x + 0.044715 * x * x * x)).tanh())
 }
 
-/// Multi-head causal attention. q,k,v: [t, d] → [t, d].
-pub fn causal_mha(q: &Matrix, k: &Matrix, v: &Matrix, n_heads: usize) -> Matrix {
-    let t = q.rows;
-    let d = q.cols;
-    let hd = d / n_heads;
-    let scale = 1.0 / (hd as f32).sqrt();
-    let mut out = Matrix::zeros(t, d);
-    let mut probs = vec![0.0f32; t];
-    for h in 0..n_heads {
-        let c0 = h * hd;
-        for i in 0..t {
-            let qi = &q.row(i)[c0..c0 + hd];
-            // scores over keys 0..=i (causal), streaming softmax
-            let mut maxs = f32::NEG_INFINITY;
-            for j in 0..=i {
-                let kj = &k.row(j)[c0..c0 + hd];
-                let s = crate::linalg::matrix::dot(qi, kj, hd) * scale;
-                probs[j] = s;
-                maxs = maxs.max(s);
-            }
-            let mut denom = 0.0f32;
-            for p in probs[..=i].iter_mut() {
-                *p = (*p - maxs).exp();
-                denom += *p;
-            }
-            let inv = 1.0 / denom;
-            let orow = &mut out.row_mut(i)[c0..c0 + hd];
-            for j in 0..=i {
-                let w = probs[j] * inv;
-                let vj = &v.row(j)[c0..c0 + hd];
-                for (o, &vv) in orow.iter_mut().zip(vj) {
-                    *o += w * vv;
-                }
-            }
-        }
-    }
-    out
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -440,15 +418,18 @@ mod tests {
     }
 
     #[test]
-    fn attention_uniform_v_rows_sum_to_one() {
-        let t = 8;
-        let d = 16;
-        let q = Matrix::randn(t, d, 4);
-        let k = Matrix::randn(t, d, 5);
-        let v = Matrix::from_fn(t, d, |_i, _j| 1.0);
-        let o = causal_mha(&q, &k, &v, 4);
-        for val in &o.data {
-            assert!((val - 1.0).abs() < 1e-5);
+    fn forward_batch_bit_matches_per_window_forward() {
+        // the serving-path guarantee behind bucketing: a window's logits do
+        // not depend on which batch it rode in — bit-for-bit, including a
+        // t = 1 degenerate window
+        let m = Transformer::random(tiny_cfg(), 11);
+        let w1: Vec<u32> = (0..16).map(|i| (i * 5) % 64).collect();
+        let w2: Vec<u32> = vec![3];
+        let w3: Vec<u32> = (0..7).map(|i| (i * 13 + 4) % 64).collect();
+        let batch = m.forward_batch(&[&w1, &w2, &w3]);
+        for (w, lg) in [&w1, &w2, &w3].iter().zip(&batch) {
+            let solo = m.forward(w);
+            assert_eq!(lg.data.as_f32(), solo.data.as_f32(), "window len {}", w.len());
         }
     }
 

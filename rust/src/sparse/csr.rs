@@ -159,6 +159,27 @@ impl Csr {
         }
     }
 
+    /// [`Csr::spmm_add`] with an f16 staging buffer: an f16-resident value
+    /// run is pre-widened wholesale into `stage` once per call (exact), so
+    /// the gather/axpy loop streams plain f32 values instead of converting
+    /// per stored value per column block; f32-resident values skip the
+    /// stage. Bit-identical to the unstaged call for either dtype.
+    pub fn spmm_add_staged(&self, x: &[f32], y: &mut [f32], k: usize, stage: &mut Vec<f32>) {
+        match &self.data {
+            WeightBuf::F32(_) => self.spmm_add(x, y, k),
+            WeightBuf::F16(v) => {
+                assert_eq!(x.len(), self.cols * k, "input block shape mismatch");
+                assert_eq!(y.len(), self.rows * k, "output block shape mismatch");
+                let s = crate::linalg::weightbuf::widen_f16_into(v, stage);
+                if k == 1 {
+                    spmv_add_w(&self.indptr, &self.indices, s, x, y);
+                } else {
+                    spmm_add_w(&self.indptr, &self.indices, s, x, y, k);
+                }
+            }
+        }
+    }
+
     /// Value gradients with a frozen sparsity pattern, batched: for the
     /// loss L = ½‖Y − T‖² with Y = S X + …, the gradient of the stored
     /// value at (row i, column j) is Σ_c G[i,c]·X[j,c] — a k-wide dot over
@@ -427,6 +448,26 @@ mod tests {
             h.spmm_add(&x, &mut yh, k);
             if yq != yh {
                 return Err("f16 spmm != quantized f32 spmm".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn staged_spmm_bit_matches_unstaged() {
+        check(10, |rng| {
+            let n = 2 + rng.below(24);
+            let k = 1 + rng.below(8);
+            let mut h = Csr::from_coo(&random_coo(rng, n, 3 * n));
+            h.narrow_to_f16();
+            let x: Vec<f32> = (0..n * k).map(|_| rng.gaussian_f32()).collect();
+            let mut y1 = vec![0.5f32; n * k];
+            let mut y2 = vec![0.5f32; n * k];
+            let mut stage = vec![9.0f32; 1]; // undersized and stale
+            h.spmm_add(&x, &mut y1, k);
+            h.spmm_add_staged(&x, &mut y2, k, &mut stage);
+            if y1 != y2 {
+                return Err("staged spmm != unstaged (bitwise)".into());
             }
             Ok(())
         });

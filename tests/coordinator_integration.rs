@@ -39,6 +39,7 @@ fn coordinator_ppl_matches_direct_eval() {
             max_batch: 4,
             max_wait: Duration::from_millis(2),
             capacity: 64,
+            ..BatcherConfig::default()
         },
     });
     coord.add_worker(
@@ -109,6 +110,79 @@ fn dense_and_compressed_lanes_agree_at_high_rank() {
     coord.shutdown();
 }
 
+/// The bucketing satellite: under simulated mixed-length traffic, a
+/// length-bucketed coordinator must (a) answer every request exactly once
+/// — no drops, no duplicates — and (b) return per-request NLLs identical
+/// to an unbucketed coordinator's, because a window's logits are
+/// independent of which batch it rode in (pinned bit-for-bit at the
+/// transformer level by `forward_batch_bit_matches_per_window_forward`).
+#[test]
+fn bucketed_serving_matches_unbucketed_and_drops_nothing() {
+    let model = tiny_model();
+    // ragged windows straddling the 4/8/16 bucket edges (scored lengths
+    // 2..=16), repeated so polls mix lengths
+    let toks: Vec<u32> = (0..4000u32).map(|i| (i * 31 + i / 5) % 64).collect();
+    let mut ws: Vec<Vec<u32>> = Vec::new();
+    for rep in 0..6usize {
+        for len in [3usize, 5, 8, 9, 13, 17] {
+            let start = (rep * 97 + len * 11) % (toks.len() - len - 1);
+            ws.push(toks[start..start + len].to_vec());
+        }
+    }
+
+    let mk = |edges: Vec<usize>| {
+        let mut coord = Coordinator::new(CoordinatorConfig {
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(2),
+                capacity: 256,
+                bucket_edges: edges,
+            },
+        });
+        coord.add_worker(
+            Variant::Dense,
+            NativeDenseScorer {
+                model: model.clone(),
+                max_batch: 8,
+            },
+        );
+        coord
+    };
+
+    let bucketed = mk(vec![4, 8, 16]);
+    let plain = mk(Vec::new());
+    let rb = bucketed.submit_all(Variant::Dense, &ws).unwrap();
+    let rp = plain.submit_all(Variant::Dense, &ws).unwrap();
+
+    // exactly one response per request, ids unique and order-preserved
+    assert_eq!(rb.len(), ws.len());
+    let mut ids: Vec<u64> = rb.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), ws.len(), "duplicate responses");
+    for (b, p) in rb.iter().zip(&rp) {
+        assert!(b.error.is_none() && p.error.is_none());
+        assert_eq!(b.tokens, p.tokens);
+        assert_eq!(b.nll, p.nll, "bucketing changed a request's NLL");
+    }
+    let completed = bucketed
+        .metrics
+        .completed
+        .load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(completed as usize, ws.len());
+    // bucketed chunks are length-homogeneous: within a power-of-two
+    // bucket, lengths differ by < 2×, so padding overhead is bounded
+    // below 50% no matter how the polls landed (an unbucketed chunk
+    // mixing t = 2 with t = 16 can waste far more)
+    let po_b = bucketed.metrics.padding_overhead();
+    assert!(po_b < 0.5, "bucketed pad overhead {po_b} >= 50%");
+    // the summary surfaces the new gauges alongside resident bytes
+    let s = bucketed.metrics.summary();
+    assert!(s.contains("pad_overhead=") && s.contains("bucket_width="), "{s}");
+    bucketed.shutdown();
+    plain.shutdown();
+}
+
 #[test]
 fn backpressure_surfaces_as_errors_not_hangs() {
     let model = tiny_model();
@@ -117,6 +191,7 @@ fn backpressure_surfaces_as_errors_not_hangs() {
             max_batch: 2,
             max_wait: Duration::from_millis(1),
             capacity: 2, // tiny queue
+            ..BatcherConfig::default()
         },
     });
     coord.add_worker(

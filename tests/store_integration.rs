@@ -181,6 +181,7 @@ fn coordinator_serves_correctly_across_store_hot_swap() {
             max_batch: 4,
             max_wait: Duration::from_millis(2),
             capacity: 256,
+            ..BatcherConfig::default()
         },
     });
     // cold start the lane from the store
@@ -277,6 +278,7 @@ fn f16_resident_model_serves_end_to_end_at_half_the_bytes() {
             max_batch: 4,
             max_wait: Duration::from_millis(2),
             capacity: 256,
+            ..BatcherConfig::default()
         },
     });
     coord.add_worker(

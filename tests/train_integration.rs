@@ -114,6 +114,7 @@ fn refined_variant_roundtrips_through_store_and_hotswap() {
             max_batch: 4,
             max_wait: Duration::from_millis(2),
             capacity: 256,
+            ..BatcherConfig::default()
         },
     });
     coord.add_worker(
