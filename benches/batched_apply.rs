@@ -172,9 +172,42 @@ fn main() {
         fmt_ns(cal_stats.mean_ns)
     );
 
-    // one-line JSON trajectory record (k = 32 per variant×dtype + resident
-    // bytes + calibration)
     let (hss_f32, hss_f16, hss_ns32, hss_ns16) = hss_check.expect("shss-rcm case ran");
+
+    // span-overhead check (CI-asserted): the observability guards wrapping
+    // every spmm/hss_walk/lowrank call must cost ≤ 2% of a k = 32 shss-rcm
+    // apply. Measure one guard's enter+drop cost in a tight loop, count how
+    // many guards one apply actually opens (global span-count delta), and
+    // compare against the measured apply time.
+    let reg = hisolo::obs::registry();
+    let span_stats = bench(
+        || {
+            for _ in 0..1000 {
+                let _s = hisolo::obs::Span::enter(hisolo::obs::Stage::Spmm);
+            }
+        },
+        2,
+        budget,
+        10_000,
+    );
+    let span_ns = span_stats.mean_ns / 1000.0;
+    let before = reg.total_count();
+    student.apply_batch(&xb, &mut gb, &mut ws);
+    let spans_per_apply = reg.total_count() - before;
+    let overhead_pct = if reg.enabled() {
+        spans_per_apply as f64 * span_ns / hss_ns32 * 100.0
+    } else {
+        0.0
+    };
+    println!(
+        "span_overhead_check: {spans_per_apply} spans x {span_ns:.0}ns = {overhead_pct:.3}% \
+         of k=32 shss-rcm apply ({}) {}",
+        fmt_ns(hss_ns32),
+        if overhead_pct <= 2.0 { "PASS" } else { "FAIL" }
+    );
+
+    // one-line JSON trajectory record (k = 32 per variant×dtype + resident
+    // bytes + calibration + the per-stage span breakdown)
     let record = obj(vec![
         ("bench", s("batched_apply")),
         ("n", num(n as f64)),
@@ -184,6 +217,8 @@ fn main() {
         ("hss_resident_bytes_f16", num(hss_f16 as f64)),
         ("calib_batch", num(batch as f64)),
         ("calib_rows_per_s", num(rows_per_s)),
+        ("span_overhead_pct", num(overhead_pct)),
+        ("stages", reg.to_json()),
     ]);
     println!("\nJSON: {record}");
     if let Some(path) = args.get_path("json") {

@@ -94,8 +94,17 @@ impl CompressedMatrix {
                     t.resize(r.rows * k, 0.0);
                 }
                 let tb = &mut t[..r.rows * k];
-                r.apply_batch_into(x, tb, k);
-                l.apply_batch_into(tb, y, k);
+                {
+                    // the `lowrank` stage is exactly the two thin factor
+                    // multiplies; the sparse correction reports as `spmm`
+                    let _span = crate::obs::Span::enter(crate::obs::Stage::LowRank);
+                    crate::obs::count_flops(
+                        r.apply_flops(k) + l.apply_flops(k),
+                        (r.resident_bytes() + l.resident_bytes()) as u64,
+                    );
+                    r.apply_batch_into(x, tb, k);
+                    l.apply_batch_into(tb, y, k);
+                }
                 if let Some(s) = sparse {
                     s.spmm_add_staged(x, y, k, stage);
                 }

@@ -203,6 +203,7 @@ impl<T> Batcher<T> {
     pub fn poll_buckets<F: Fn(&T) -> usize>(&self, idle_wait: Duration, len_of: F) -> BucketPoll<T> {
         match self.poll_batch(idle_wait) {
             BatchPoll::Batch(b) => {
+                let _span = crate::obs::Span::enter(crate::obs::Stage::BucketForm);
                 BucketPoll::Buckets(bucket_by_len(b, &self.cfg.bucket_edges, len_of))
             }
             BatchPoll::Idle => BucketPoll::Idle,

@@ -1,12 +1,15 @@
-//! Lock-free serving metrics: request counters, a log-bucketed latency
-//! histogram with percentile queries, and a per-variant gauge of the
-//! resident weight bytes the installed scorers hold (the f16-serving
-//! halving shows up here, not just in benches).
+//! Lock-free serving metrics: request counters, log-bucketed latency
+//! histograms with percentile queries (end-to-end, queue-wait, and
+//! service — the worker stamps them so queue + service sums exactly to
+//! end-to-end per request), queue-depth / in-flight gauges, a per-variant
+//! gauge of resident weight bytes, and a structured [`Metrics::to_json`]
+//! snapshot that folds in the per-stage span registry
+//! ([`crate::obs::registry`]).
 
 use crate::coordinator::request::Variant;
+use crate::obs::histogram::LogHistogram;
+use crate::util::json::{num, obj, Json};
 use std::sync::atomic::{AtomicU64, Ordering};
-
-const BUCKETS: usize = 40; // log2 buckets over 1us .. ~1099s
 
 /// Atomic metrics registry (one per coordinator).
 pub struct Metrics {
@@ -28,10 +31,24 @@ pub struct Metrics {
     pub batch_tokens_padded: AtomicU64,
     /// scorer hot-swaps applied by workers (see `Coordinator::swap_variant`)
     pub swaps: AtomicU64,
+    /// requests dequeued but not yet replied to (gauge; workers inc/dec)
+    pub in_flight: AtomicU64,
     /// per-variant gauge: weight bytes resident in the most recently
     /// installed scorer (set at worker start and on every hot-swap)
     resident_weight_bytes: [AtomicU64; Variant::COUNT],
-    latency_buckets: [AtomicU64; BUCKETS],
+    /// per-variant gauge: queued (not yet dequeued) requests, sampled by
+    /// the reporter thread / shutdown path via
+    /// `Coordinator::sample_queue_depths`
+    queue_depth: [AtomicU64; Variant::COUNT],
+    /// end-to-end submit→reply latency of completed requests
+    latency: LogHistogram,
+    latency_total_us: AtomicU64,
+    /// submit→dequeue wait of completed requests
+    queue_wait: LogHistogram,
+    queue_wait_total_us: AtomicU64,
+    /// dequeue→reply service time of completed requests
+    service: LogHistogram,
+    service_total_us: AtomicU64,
 }
 
 impl Default for Metrics {
@@ -54,8 +71,15 @@ impl Metrics {
             batch_tokens_actual: AtomicU64::new(0),
             batch_tokens_padded: AtomicU64::new(0),
             swaps: AtomicU64::new(0),
+            in_flight: AtomicU64::new(0),
             resident_weight_bytes: std::array::from_fn(|_| AtomicU64::new(0)),
-            latency_buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            queue_depth: std::array::from_fn(|_| AtomicU64::new(0)),
+            latency: LogHistogram::new(),
+            latency_total_us: AtomicU64::new(0),
+            queue_wait: LogHistogram::new(),
+            queue_wait_total_us: AtomicU64::new(0),
+            service: LogHistogram::new(),
+            service_total_us: AtomicU64::new(0),
         }
     }
 
@@ -71,9 +95,29 @@ impl Metrics {
         self.resident_weight_bytes[variant.index()].load(Ordering::Relaxed)
     }
 
+    /// Store a sampled queue depth for `variant` (gauge semantics).
+    pub fn set_queue_depth(&self, variant: Variant, depth: u64) {
+        self.queue_depth[variant.index()].store(depth, Ordering::Relaxed);
+    }
+
+    /// Most recently sampled queue depth for `variant`.
+    pub fn queue_depth(&self, variant: Variant) -> u64 {
+        self.queue_depth[variant.index()].load(Ordering::Relaxed)
+    }
+
     pub fn record_latency_us(&self, us: u64) {
-        let b = (64 - us.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
-        self.latency_buckets[b].fetch_add(1, Ordering::Relaxed);
+        self.latency.record_us(us);
+        self.latency_total_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn record_queue_wait_us(&self, us: u64) {
+        self.queue_wait.record_us(us);
+        self.queue_wait_total_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn record_service_us(&self, us: u64) {
+        self.service.record_us(us);
+        self.service_total_us.fetch_add(us, Ordering::Relaxed);
     }
 
     pub fn record_batch(&self, size: usize) {
@@ -84,24 +128,32 @@ impl Metrics {
 
     /// Approximate latency percentile (upper bucket bound), p in [0,1].
     pub fn latency_percentile_us(&self, p: f64) -> u64 {
-        let counts: Vec<u64> = self
-            .latency_buckets
-            .iter()
-            .map(|b| b.load(Ordering::Relaxed))
-            .collect();
-        let total: u64 = counts.iter().sum();
-        if total == 0 {
-            return 0;
-        }
-        let want = ((p * total as f64).ceil() as u64).clamp(1, total);
-        let mut acc = 0u64;
-        for (i, c) in counts.iter().enumerate() {
-            acc += c;
-            if acc >= want {
-                return 1u64 << (i + 1); // upper bound of bucket i
-            }
-        }
-        1u64 << BUCKETS
+        self.latency.percentile_us(p)
+    }
+
+    /// Approximate queue-wait percentile (upper bucket bound), p in [0,1].
+    pub fn queue_wait_percentile_us(&self, p: f64) -> u64 {
+        self.queue_wait.percentile_us(p)
+    }
+
+    /// Approximate service-time percentile (upper bucket bound), p in [0,1].
+    pub fn service_percentile_us(&self, p: f64) -> u64 {
+        self.service.percentile_us(p)
+    }
+
+    /// Exact mean end-to-end latency in µs (0 when nothing completed).
+    pub fn mean_latency_us(&self) -> f64 {
+        mean(&self.latency, &self.latency_total_us)
+    }
+
+    /// Exact mean queue wait in µs (0 when nothing completed).
+    pub fn mean_queue_wait_us(&self) -> f64 {
+        mean(&self.queue_wait, &self.queue_wait_total_us)
+    }
+
+    /// Exact mean service time in µs (0 when nothing completed).
+    pub fn mean_service_us(&self) -> f64 {
+        mean(&self.service, &self.service_total_us)
     }
 
     /// Mean requests per executed batch.
@@ -151,12 +203,13 @@ impl Metrics {
     }
 
     /// One-line summary: counters, batch/bucket widths, latency
-    /// percentiles, then resident bytes **and** padding overhead together
-    /// — the sweep CSV and the coordinator log tell the same memory/shape
-    /// story from the same line.
+    /// percentiles (p50/p95/p99/p999) with the queue/service split, then
+    /// resident bytes **and** padding overhead together — the sweep CSV
+    /// and the coordinator log tell the same memory/shape story from the
+    /// same line.
     pub fn summary(&self) -> String {
         format!(
-            "submitted={} completed={} rejected={} errors={} swaps={} batches={} mean_batch={:.2} bucket_width={:.2} p50={}us p95={}us p99={}us resident_bytes[dense]={} resident_bytes[hss]={} pad_overhead={:.1}%",
+            "submitted={} completed={} rejected={} errors={} swaps={} batches={} mean_batch={:.2} bucket_width={:.2} p50={}us p95={}us p99={}us p999={}us queue_p50={}us service_p50={}us queue_depth[dense]={} queue_depth[hss]={} in_flight={} resident_bytes[dense]={} resident_bytes[hss]={} pad_overhead={:.1}%",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
@@ -168,10 +221,99 @@ impl Metrics {
             self.latency_percentile_us(0.5),
             self.latency_percentile_us(0.95),
             self.latency_percentile_us(0.99),
+            self.latency_percentile_us(0.999),
+            self.queue_wait_percentile_us(0.5),
+            self.service_percentile_us(0.5),
+            self.queue_depth(Variant::Dense),
+            self.queue_depth(Variant::Hss),
+            self.in_flight.load(Ordering::Relaxed),
             self.resident_weight_bytes(Variant::Dense),
             self.resident_weight_bytes(Variant::Hss),
             100.0 * self.padding_overhead(),
         )
+    }
+
+    /// Structured snapshot of everything this registry knows, plus the
+    /// process-wide per-stage span breakdown, as a [`Json`] value
+    /// (`BTreeMap`-backed, so the key set and order are stable). Written
+    /// by the serve reporter (`--metrics-json`) and round-trippable
+    /// through [`Json::parse`] — counts are finite, means are 0 when
+    /// empty, never NaN.
+    pub fn to_json(&self) -> Json {
+        let hist_json = |h: &LogHistogram, total: &AtomicU64| {
+            obj(vec![
+                ("count", num(h.count() as f64)),
+                ("mean_us", num(mean(h, total))),
+                ("p50_us", num(h.percentile_us(0.5) as f64)),
+                ("p95_us", num(h.percentile_us(0.95) as f64)),
+                ("p99_us", num(h.percentile_us(0.99) as f64)),
+                ("p999_us", num(h.percentile_us(0.999) as f64)),
+            ])
+        };
+        let per_variant = |f: &dyn Fn(Variant) -> u64| {
+            obj(vec![
+                ("dense", num(f(Variant::Dense) as f64)),
+                ("hss", num(f(Variant::Hss) as f64)),
+            ])
+        };
+        obj(vec![
+            (
+                "counters",
+                obj(vec![
+                    ("submitted", num(self.submitted.load(Ordering::Relaxed) as f64)),
+                    ("completed", num(self.completed.load(Ordering::Relaxed) as f64)),
+                    ("rejected", num(self.rejected.load(Ordering::Relaxed) as f64)),
+                    ("errors", num(self.errors.load(Ordering::Relaxed) as f64)),
+                    ("swaps", num(self.swaps.load(Ordering::Relaxed) as f64)),
+                    ("batches", num(self.batches.load(Ordering::Relaxed) as f64)),
+                    (
+                        "batched_requests",
+                        num(self.batched_requests.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "bucket_batches",
+                        num(self.bucket_batches.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "bucket_requests",
+                        num(self.bucket_requests.load(Ordering::Relaxed) as f64),
+                    ),
+                ]),
+            ),
+            ("latency", hist_json(&self.latency, &self.latency_total_us)),
+            (
+                "queue_wait",
+                hist_json(&self.queue_wait, &self.queue_wait_total_us),
+            ),
+            ("service", hist_json(&self.service, &self.service_total_us)),
+            (
+                "gauges",
+                obj(vec![
+                    ("queue_depth", per_variant(&|v| self.queue_depth(v))),
+                    (
+                        "in_flight",
+                        num(self.in_flight.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "resident_bytes",
+                        per_variant(&|v| self.resident_weight_bytes(v)),
+                    ),
+                    ("mean_batch", num(self.mean_batch_size())),
+                    ("mean_bucket_width", num(self.mean_bucket_width())),
+                    ("padding_overhead", num(self.padding_overhead())),
+                ]),
+            ),
+            ("stages", crate::obs::registry().to_json()),
+        ])
+    }
+}
+
+fn mean(h: &LogHistogram, total_us: &AtomicU64) -> f64 {
+    let c = h.count();
+    if c == 0 {
+        0.0
+    } else {
+        total_us.load(Ordering::Relaxed) as f64 / c as f64
     }
 }
 
@@ -190,7 +332,8 @@ mod tests {
         let p50 = m.latency_percentile_us(0.5);
         let p95 = m.latency_percentile_us(0.95);
         let p99 = m.latency_percentile_us(0.99);
-        assert!(p50 <= p95 && p95 <= p99);
+        let p999 = m.latency_percentile_us(0.999);
+        assert!(p50 <= p95 && p95 <= p99 && p99 <= p999);
         assert!(p50 >= 1000 && p50 <= 2048, "{p50}");
     }
 
@@ -198,6 +341,9 @@ mod tests {
     fn empty_percentile_zero() {
         let m = Metrics::new();
         assert_eq!(m.latency_percentile_us(0.99), 0);
+        assert_eq!(m.queue_wait_percentile_us(0.99), 0);
+        assert_eq!(m.service_percentile_us(0.99), 0);
+        assert_eq!(m.mean_latency_us(), 0.0);
     }
 
     #[test]
@@ -214,6 +360,8 @@ mod tests {
         m.submitted.fetch_add(3, Ordering::Relaxed);
         let s = m.summary();
         assert!(s.contains("submitted=3"));
+        assert!(s.contains("p999="), "{s}");
+        assert!(s.contains("queue_depth[dense]="), "{s}");
     }
 
     #[test]
@@ -246,5 +394,108 @@ mod tests {
         m.set_resident_weight_bytes(Variant::Hss, 2048);
         assert_eq!(m.resident_weight_bytes(Variant::Hss), 2048);
         assert!(m.summary().contains("resident_bytes[hss]=2048"));
+    }
+
+    #[test]
+    fn queue_depth_gauge_overwrites() {
+        let m = Metrics::new();
+        assert_eq!(m.queue_depth(Variant::Dense), 0);
+        m.set_queue_depth(Variant::Dense, 17);
+        m.set_queue_depth(Variant::Dense, 3);
+        assert_eq!(m.queue_depth(Variant::Dense), 3);
+    }
+
+    #[test]
+    fn queue_plus_service_mean_decomposes_exactly() {
+        let m = Metrics::new();
+        // worker invariant: latency = queue + service, per request
+        for (q, s) in [(100u64, 900u64), (250, 750), (10, 40)] {
+            m.record_queue_wait_us(q);
+            m.record_service_us(s);
+            m.record_latency_us(q + s);
+        }
+        let sum = m.mean_queue_wait_us() + m.mean_service_us();
+        assert!((sum - m.mean_latency_us()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn to_json_roundtrips_with_stable_keys() {
+        let m = Metrics::new();
+        m.submitted.fetch_add(5, Ordering::Relaxed);
+        m.record_latency_us(1234);
+        m.record_queue_wait_us(234);
+        m.record_service_us(1000);
+        m.set_queue_depth(Variant::Hss, 7);
+        let j = m.to_json();
+        let text = j.to_string();
+        for key in ["queue_wait", "queue_depth", "hss_walk", "p999_us", "in_flight"] {
+            assert!(text.contains(&format!("\"{key}\"")), "missing {key}: {text}");
+        }
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back, j, "to_json must round-trip through util::json");
+        // key set is stable as more samples arrive
+        m.record_latency_us(999_999);
+        m.record_batch(4);
+        assert_eq!(keys(&m.to_json()), keys(&j));
+    }
+
+    /// Satellite: 8 threads hammer latency/queue/service/gauges at once;
+    /// totals are exact and percentiles monotone afterwards.
+    #[test]
+    fn concurrent_recording_is_lossless() {
+        let m = std::sync::Arc::new(Metrics::new());
+        let threads = 8;
+        let per = 1_000u64;
+        std::thread::scope(|s| {
+            for t in 0..threads {
+                let m = m.clone();
+                s.spawn(move || {
+                    for i in 0..per {
+                        m.record_queue_wait_us(i);
+                        m.record_service_us(10 * (i + 1));
+                        m.record_latency_us(i + 10 * (i + 1));
+                        m.completed.fetch_add(1, Ordering::Relaxed);
+                        m.set_queue_depth(Variant::Dense, i);
+                        m.in_flight.fetch_add(1, Ordering::Relaxed);
+                        m.in_flight.fetch_sub(1, Ordering::Relaxed);
+                        let _ = t;
+                    }
+                });
+            }
+        });
+        let n = threads * per;
+        assert_eq!(m.completed.load(Ordering::Relaxed), n);
+        assert_eq!(m.in_flight.load(Ordering::Relaxed), 0);
+        // exact totals: sum_i i + sum_i 10(i+1) per thread
+        let q_per: u64 = (0..per).sum();
+        let s_per: u64 = (0..per).map(|i| 10 * (i + 1)).sum();
+        let sum = m.mean_queue_wait_us() + m.mean_service_us();
+        assert!((sum - m.mean_latency_us()).abs() < 1e-6);
+        assert!(
+            (m.mean_queue_wait_us() - q_per as f64 / per as f64).abs() < 1e-9,
+            "{}",
+            m.mean_queue_wait_us()
+        );
+        assert!((m.mean_service_us() - s_per as f64 / per as f64).abs() < 1e-9);
+        let p50 = m.latency_percentile_us(0.5);
+        let p999 = m.latency_percentile_us(0.999);
+        assert!(p50 <= p999);
+        assert!(m.queue_depth(Variant::Dense) < per);
+    }
+
+    fn keys(j: &Json) -> Vec<String> {
+        fn walk(j: &Json, prefix: &str, out: &mut Vec<String>) {
+            if let Json::Obj(map) = j {
+                for (k, v) in map {
+                    let path = format!("{prefix}/{k}");
+                    walk(v, &path, out);
+                    out.push(path);
+                }
+            }
+        }
+        let mut out = Vec::new();
+        walk(j, "", &mut out);
+        out.sort();
+        out
     }
 }

@@ -30,6 +30,24 @@
 //!
 //! `eval::perplexity_parallel_batched` applies the same bucketing, so
 //! sweep numbers exercise the identical code path the coordinator serves.
+//!
+//! # Observability
+//!
+//! Every request's end-to-end latency is split at the dequeue instant:
+//! **queue_wait** (submit → worker poll) + **service** (poll → reply)
+//! sum exactly to the recorded latency, each with its own histogram in
+//! [`Metrics`] (p50/p95/p99/p999). Inside service time, the hot path is
+//! traced by [`crate::obs`] span guards under the fixed stage taxonomy —
+//! `bucket_form` (length coalescing), `spmm` / `hss_walk` / `lowrank`
+//! (compressed apply), `attention`, `mlp`, `softmax` (scoring), and
+//! `reply_route` / `swap_install` (coordination) — recorded at call-site
+//! granularity only, never inside per-row loops (see the span-guard
+//! rules in `obs`). `Batcher` queue depth and worker in-flight counts
+//! are gauges: `Coordinator::start_reporter` samples them each tick,
+//! logs the one-line `Metrics::summary`, and can rewrite a
+//! `Metrics::to_json` snapshot file (`hisolo serve --metrics-json <path>
+//! --metrics-interval-secs N`). `HISOLO_LOG=off` silences the reporter's
+//! logging; `HISOLO_TRACE=off` disables the span guards themselves.
 
 pub mod batcher;
 pub mod metrics;

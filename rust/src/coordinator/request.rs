@@ -64,6 +64,10 @@ pub struct ScoreResponse {
     pub tokens: usize,
     /// end-to-end latency (queue + batch wait + execute)
     pub latency_us: u64,
+    /// submit→dequeue share of `latency_us` — the worker stamps one
+    /// dequeue instant per polled batch, so `latency_us - queue_us` is
+    /// this request's service time and the two halves sum exactly
+    pub queue_us: u64,
     /// how many requests shared the executed batch
     pub batch_size: usize,
     pub error: Option<String>,
@@ -94,6 +98,7 @@ mod tests {
             nll: 2.0 * 10.0_f64.ln(),
             tokens: 2,
             latency_us: 1,
+            queue_us: 0,
             batch_size: 1,
             error: None,
         };

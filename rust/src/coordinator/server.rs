@@ -9,7 +9,8 @@ use crate::coordinator::worker::{
     run_worker_init_failed, run_worker_swappable, BoxScorer, Scorer, SwapRequest,
 };
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -27,6 +28,14 @@ struct VariantLane {
     swap_txs: Vec<Mutex<Sender<SwapRequest>>>,
 }
 
+/// The metrics reporter thread: periodically samples queue depths into
+/// the gauges, logs the one-line summary (silenced by `HISOLO_LOG=off`),
+/// and optionally rewrites a JSON snapshot file.
+struct Reporter {
+    stop: Arc<AtomicBool>,
+    handle: JoinHandle<()>,
+}
+
 /// The serving coordinator. Register one or more scorers per variant, then
 /// `submit` windows and collect responses.
 pub struct Coordinator {
@@ -34,6 +43,7 @@ pub struct Coordinator {
     pub metrics: Arc<Metrics>,
     next_id: AtomicU64,
     cfg: CoordinatorConfig,
+    reporter: Option<Reporter>,
 }
 
 impl Coordinator {
@@ -43,6 +53,7 @@ impl Coordinator {
             metrics: Arc::new(Metrics::new()),
             next_id: AtomicU64::new(0),
             cfg,
+            reporter: None,
         }
     }
 
@@ -242,8 +253,70 @@ impl Coordinator {
         self.lanes.get(&variant).map_or(0, |l| l.workers.len())
     }
 
-    /// Close all queues and join workers.
+    /// Sample every lane's queue length into the per-variant queue-depth
+    /// gauge (the reporter thread does this each tick; call it directly
+    /// before reading `metrics.queue_depth` / taking a final snapshot).
+    pub fn sample_queue_depths(&self) {
+        for (variant, lane) in self.lanes.iter() {
+            self.metrics
+                .set_queue_depth(*variant, lane.batcher.len() as u64);
+        }
+    }
+
+    /// Start the periodic metrics reporter: every `interval` it samples
+    /// queue depths, logs the one-line summary at info level (set
+    /// `HISOLO_LOG=off` to silence it in benches/tests), and — when
+    /// `json_path` is given — atomically rewrites that file with the
+    /// [`Metrics::to_json`] snapshot. Register workers first: the thread
+    /// samples the lanes that exist at call time. A second call replaces
+    /// the previous reporter; `shutdown` stops it.
+    pub fn start_reporter(&mut self, interval: Duration, json_path: Option<PathBuf>) {
+        self.stop_reporter();
+        let stop = Arc::new(AtomicBool::new(false));
+        let lanes: Vec<(Variant, Arc<Batcher<ScoreRequest>>)> = self
+            .lanes
+            .iter()
+            .map(|(v, l)| (*v, l.batcher.clone()))
+            .collect();
+        let metrics = self.metrics.clone();
+        let stop2 = stop.clone();
+        let handle = std::thread::spawn(move || {
+            loop {
+                // sleep in short slices so shutdown never waits a full tick
+                let mut slept = Duration::ZERO;
+                while slept < interval && !stop2.load(Ordering::Relaxed) {
+                    let step = (interval - slept).min(Duration::from_millis(50));
+                    std::thread::sleep(step);
+                    slept += step;
+                }
+                if stop2.load(Ordering::Relaxed) {
+                    return;
+                }
+                for (variant, batcher) in &lanes {
+                    metrics.set_queue_depth(*variant, batcher.len() as u64);
+                }
+                crate::log_info!("metrics: {}", metrics.summary());
+                if let Some(path) = &json_path {
+                    if let Err(e) = std::fs::write(path, format!("{}\n", metrics.to_json())) {
+                        crate::log_warn!("metrics snapshot write failed: {e}");
+                    }
+                }
+            }
+        });
+        self.reporter = Some(Reporter { stop, handle });
+    }
+
+    fn stop_reporter(&mut self) {
+        if let Some(r) = self.reporter.take() {
+            r.stop.store(true, Ordering::Relaxed);
+            let _ = r.handle.join();
+        }
+    }
+
+    /// Close all queues and join workers (reporter first, so no tick
+    /// observes half-closed lanes).
     pub fn shutdown(mut self) {
+        self.stop_reporter();
         for (_, lane) in self.lanes.iter() {
             lane.batcher.close();
         }
@@ -536,6 +609,41 @@ mod tests {
             .unwrap();
         assert!(resp.error.is_none());
         c.shutdown();
+    }
+
+    #[test]
+    fn reporter_emits_json_snapshot_and_samples_queue_depth() {
+        let mut c = coordinator_with_mock(false);
+        let path = std::env::temp_dir().join(format!(
+            "hisolo-metrics-{}-{:?}.json",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        c.start_reporter(Duration::from_millis(20), Some(path.clone()));
+        let resps = c
+            .submit_all(Variant::Dense, &[(0..9).collect(), (0..9).collect()])
+            .unwrap();
+        assert!(resps.iter().all(|r| r.error.is_none()));
+        // wait for at least one tick to land on disk
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        let text = loop {
+            if let Ok(t) = std::fs::read_to_string(&path) {
+                if !t.is_empty() {
+                    break t;
+                }
+            }
+            assert!(std::time::Instant::now() < deadline, "no snapshot written");
+            std::thread::sleep(Duration::from_millis(10));
+        };
+        let j = crate::util::json::Json::parse(text.trim()).unwrap();
+        assert!(j.get("queue_wait").is_some(), "{text}");
+        assert!(j.get("gauges").unwrap().get("queue_depth").is_some());
+        assert!(j.get("stages").unwrap().get("hss_walk").is_some());
+        c.sample_queue_depths(); // drained queue samples as depth 0
+        assert_eq!(c.metrics.queue_depth(Variant::Dense), 0);
+        c.shutdown(); // stops + joins the reporter before closing lanes
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -13,11 +13,12 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{ScoreRequest, ScoreResponse, Variant};
 use crate::eval::perplexity::window_nll;
 use crate::linalg::Matrix;
+use crate::obs::{Span, Stage};
 use crate::util::logging::{log, Level};
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// How long an idle worker waits on the queue before checking its swap
 /// mailbox — the upper bound on swap latency under zero traffic.
@@ -83,6 +84,9 @@ pub fn run_worker_swappable(
     metrics.set_resident_weight_bytes(variant, scorer.resident_weight_bytes());
     loop {
         while let Ok(req) = swaps.try_recv() {
+            // the span covers factory + install: the full time this lane
+            // is busy with the swap instead of scoring
+            let _swap_span = Span::enter(Stage::SwapInstall);
             match (req.factory)() {
                 Ok(next) => {
                     scorer = next;
@@ -112,8 +116,13 @@ pub fn run_worker_swappable(
             BucketPoll::Idle => continue,
             BucketPoll::Buckets(b) => b,
         };
+        // one dequeue instant for the whole poll: each request's
+        // queue_wait (submit→here) and service (here→reply) halves sum
+        // exactly to its end-to-end latency
+        let dequeued = Instant::now();
         let size: usize = buckets.iter().map(|b| b.len()).sum();
         metrics.record_batch(size);
+        metrics.in_flight.fetch_add(size as u64, Ordering::Relaxed);
         for bucket in &buckets {
             // chunk by the scorer's static batch
             for chunk in bucket.chunks(scorer.max_batch()) {
@@ -131,15 +140,24 @@ pub fn run_worker_swappable(
                         metrics.record_bucket(chunk.len(), actual, max_t * chunk.len() as u64);
                         for (req, lg) in chunk.iter().zip(&logits) {
                             let (nll, tokens) = window_nll(lg, &req.window);
-                            let latency_us = req.submitted.elapsed().as_micros() as u64;
+                            let queue_d = dequeued.saturating_duration_since(req.submitted);
+                            let queue_us = queue_d.as_micros() as u64;
+                            let service_us = dequeued.elapsed().as_micros() as u64;
+                            let latency_us = queue_us + service_us;
+                            crate::obs::registry().record(Stage::QueueWait, queue_d);
+                            metrics.record_queue_wait_us(queue_us);
+                            metrics.record_service_us(service_us);
                             metrics.record_latency_us(latency_us);
                             metrics.completed.fetch_add(1, Ordering::Relaxed);
+                            metrics.in_flight.fetch_sub(1, Ordering::Relaxed);
+                            let _route_span = Span::enter(Stage::ReplyRoute);
                             let _ = req.reply.send(ScoreResponse {
                                 id: req.id,
                                 variant: req.variant,
                                 nll,
                                 tokens,
                                 latency_us,
+                                queue_us,
                                 batch_size: size,
                                 error: None,
                             });
@@ -148,12 +166,16 @@ pub fn run_worker_swappable(
                     Err(e) => {
                         metrics.errors.fetch_add(chunk.len() as u64, Ordering::Relaxed);
                         for req in chunk {
+                            metrics.in_flight.fetch_sub(1, Ordering::Relaxed);
                             let _ = req.reply.send(ScoreResponse {
                                 id: req.id,
                                 variant: req.variant,
                                 nll: f64::NAN,
                                 tokens: 0,
                                 latency_us: req.submitted.elapsed().as_micros() as u64,
+                                queue_us: dequeued
+                                    .saturating_duration_since(req.submitted)
+                                    .as_micros() as u64,
                                 batch_size: size,
                                 error: Some(format!("{e:#}")),
                             });
@@ -179,10 +201,12 @@ pub fn run_worker_init_failed(
 ) {
     loop {
         while let Ok(req) = swaps.try_recv() {
+            let swap_span = Span::enter(Stage::SwapInstall);
             match (req.factory)() {
                 Ok(scorer) => {
                     metrics.swaps.fetch_add(1, Ordering::Relaxed);
                     let _ = req.ack.send(Ok(()));
+                    drop(swap_span);
                     return run_worker_swappable(variant, scorer, batcher, metrics, swaps);
                 }
                 Err(e) => {
@@ -202,6 +226,7 @@ pub fn run_worker_init_failed(
                         nll: f64::NAN,
                         tokens: 0,
                         latency_us: 0,
+                        queue_us: 0,
                         batch_size: 0,
                         error: Some(format!("worker init failed: {init_err}")),
                     });
@@ -375,9 +400,15 @@ pub(crate) mod tests {
         assert!(resp.error.is_none());
         assert!(resp.nll < 1e-3, "nll {}", resp.nll);
         assert_eq!(resp.tokens, 8);
+        // lifecycle split: queue share never exceeds the whole
+        assert!(resp.queue_us <= resp.latency_us, "{resp:?}");
         batcher.close();
         h.join().unwrap();
         assert_eq!(metrics.completed.load(Ordering::Relaxed), 1);
+        // queue + service means decompose the mean latency exactly
+        let sum = metrics.mean_queue_wait_us() + metrics.mean_service_us();
+        assert!((sum - metrics.mean_latency_us()).abs() < 1e-9);
+        assert_eq!(metrics.in_flight.load(Ordering::Relaxed), 0);
     }
 
     #[test]

@@ -15,6 +15,9 @@ pub struct PplResult {
 /// Mean next-token NLL of one window given its logits [t, vocab];
 /// targets are `window[1..=t]`.
 pub fn window_nll(logits: &Matrix, window: &[u32]) -> (f64, usize) {
+    // one `softmax` span per window (all t rows of output log-softmax),
+    // never per row — see the span-guard rules in `crate::obs`
+    let _span = crate::obs::Span::enter(crate::obs::Stage::Softmax);
     let t = logits.rows;
     assert!(window.len() >= t + 1);
     let mut total = 0.0f64;

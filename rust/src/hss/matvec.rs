@@ -45,6 +45,10 @@ impl HssNode {
         assert!(k > 0, "empty batch");
         assert_eq!(x.len(), self.n() * k);
         assert_eq!(y.len(), self.n() * k);
+        // one span per traversal entry, never inside apply_rec: the
+        // per-branch sparse corrections open their own `spmm` spans,
+        // which therefore nest inside this `hss_walk` total
+        let _span = crate::obs::Span::enter(crate::obs::Stage::HssWalk);
         ws.ensure(self, k);
         self.apply_rec(x, y, k, &mut ws.levels, &mut ws.stage);
     }

@@ -94,6 +94,23 @@
 //! against the dense teacher (layer-wise ‖W x − Ŵ x‖² calibration with
 //! SGD/Adam, frozen sparsity patterns), and the refined model rides the
 //! same store → hot-swap path (`hisolo finetune` on the CLI).
+//!
+//! # Observability
+//!
+//! The serving stack is traced at stage granularity by [`obs`]: RAII span
+//! guards around every batched kernel call (`spmm`, `hss_walk`, `lowrank`,
+//! `attention`, `mlp`, `softmax`) and every coordinator hop (`queue_wait`,
+//! `bucket_form`, `reply_route`, `swap_install`), each backed by the same
+//! lock-free log-bucketed histogram the coordinator's `Metrics` uses for
+//! request latency. `Metrics` additionally splits every request's
+//! end-to-end latency into queue-wait + service (they sum exactly) and
+//! carries queue-depth / in-flight gauges. `Metrics::to_json()` exports
+//! the whole picture — counters, p50/p95/p99/p999, gauges, per-stage
+//! breakdown — through [`util::json`]; `hisolo serve --metrics-json <path>
+//! --metrics-interval-secs N` emits periodic snapshots, and
+//! `HISOLO_LOG=off` / `HISOLO_TRACE=off` silence the reporter and the span
+//! guards respectively. See [`obs`] for the stage taxonomy and the
+//! span-guard rules for hot loops.
 
 pub mod compress;
 pub mod coordinator;
@@ -102,6 +119,7 @@ pub mod eval;
 pub mod hss;
 pub mod linalg;
 pub mod model;
+pub mod obs;
 pub mod runtime;
 pub mod sparse;
 pub mod store;

@@ -350,6 +350,14 @@ impl Matrix {
     /// with X kept hot in cache by blocking over A's columns. f16-resident
     /// weights are widened once per element and reused across all k lanes
     /// — the batch is what amortizes the u16 → f32 conversion.
+    /// Flop count of one `apply_batch_*` call at batch width `k`: one
+    /// multiply plus one add per weight element per lane. Instrumented
+    /// call sites feed this to [`crate::obs::count_flops`] so the
+    /// feature-gated per-stage counters stay in sync with the kernels.
+    pub fn apply_flops(&self, k: usize) -> u64 {
+        2 * (self.rows * self.cols) as u64 * k as u64
+    }
+
     pub fn apply_batch_add(&self, x: &[f32], y: &mut [f32], k: usize) {
         assert_eq!(x.len(), self.cols * k, "input block shape mismatch");
         assert_eq!(y.len(), self.rows * k, "output block shape mismatch");

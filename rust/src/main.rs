@@ -59,6 +59,14 @@ COMMANDS:
       [--max-wait-ms 5] [--native]  (--native uses the Rust fwd, no PJRT)
       [--from-store store [--store-variant shss-rcm]]  (with --native:
       cold-start the hss lane from the HSB1 store instead of recompressing)
+      [--synthetic [--tiny]]  (with --native: random base model over a
+      synthetic token stream — no artifacts needed; smoke runs)
+      [--metrics-json path]  (write a Metrics::to_json() snapshot — the
+      reporter refreshes it periodically, plus one final write)
+      [--metrics-interval-secs 5]  (reporter period: queue-depth gauges
+      sampled + one-line summary logged; silence with HISOLO_LOG=off)
+      [--json traj.jsonl]  (append the serve trajectory record: latency
+      p50/p99/p999, queue/service split, per-stage span breakdown)
 
 Artifacts default to ./artifacts (override with --artifacts or
 HISOLO_ARTIFACTS). Build them with `make artifacts`.";
@@ -494,14 +502,50 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let dir = artifacts_path(args);
-    let a = ArtifactDir::load(&dir)?;
     let n_requests = args.get_usize("requests", 64);
     let variant_sel = args.get_str("variant", "both");
     let native = args.flag("native");
+    let synthetic_mode = args.flag("synthetic");
     let from_store = args.get_path("from-store");
     if from_store.is_some() && !native {
         bail!("--from-store requires --native (the PJRT path loads AOT graphs, not HSB1 stores)");
     }
+    if synthetic_mode && !native {
+        bail!("--synthetic requires --native (PJRT graphs are compiled against trained artifacts)");
+    }
+
+    // model + scoring stream: trained artifacts by default, or
+    // (--synthetic [--tiny]) a random base model over a synthetic token
+    // stream so smoke runs need no artifacts on disk. The native base
+    // model is built once here and shared across lanes.
+    let (base_model, seq_len, tokens): (Option<Arc<Transformer>>, usize, Vec<u32>) =
+        if synthetic_mode {
+            let mcfg = if args.flag("tiny") {
+                ModelConfig {
+                    vocab: 64,
+                    d_model: 64,
+                    n_heads: 4,
+                    n_layers: 2,
+                    d_ff: 128,
+                    seq_len: 32,
+                }
+            } else {
+                ModelConfig::default()
+            };
+            let seed = args.get_usize("seed", 7) as u64;
+            let model = Arc::new(Transformer::random(mcfg, seed));
+            (Some(model), mcfg.seq_len, synthetic::token_stream(20_000, mcfg.vocab))
+        } else {
+            let a = ArtifactDir::load(&dir)?;
+            let corpus = Corpus::load(&dir.join("corpus_test.txt"))?;
+            let model = if native {
+                let weights = WeightFile::load(&dir.join("model.hwt"))?;
+                Some(Arc::new(Transformer::from_weights(&weights, a.model_config)?))
+            } else {
+                None
+            };
+            (model, a.model_config.seq_len, corpus.tokens)
+        };
     let coordinator_cfg = CoordinatorConfig {
         batcher: BatcherConfig {
             max_batch: args.get_usize("max-batch", 8),
@@ -537,8 +581,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     for &v in &variants {
         if native {
-            let weights = WeightFile::load(&dir.join("model.hwt"))?;
-            let model = Arc::new(Transformer::from_weights(&weights, a.model_config)?);
+            let model = base_model.clone().expect("native path built the base model");
             match v {
                 Variant::Dense => coord.add_worker(
                     v,
@@ -598,13 +641,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     }
 
-    let corpus = Corpus::load(&dir.join("corpus_test.txt"))?;
-    let ws = windows(&corpus.tokens, a.model_config.seq_len, n_requests);
+    let ws = windows(&tokens, seq_len, n_requests);
+    if ws.is_empty() {
+        bail!("token stream too short for seq_len {seq_len}");
+    }
     println!(
         "serving {} requests per variant ({} mode)",
         ws.len(),
         if native { "native" } else { "pjrt" }
     );
+
+    // periodic metrics reporter: samples queue-depth gauges, logs the
+    // one-line summary, and (with --metrics-json) overwrites the snapshot
+    // file with Metrics::to_json() each interval
+    let metrics_json = args.get_path("metrics-json");
+    let interval_secs = args.get_usize("metrics-interval-secs", 5);
+    if metrics_json.is_some() || args.get("metrics-interval-secs").is_some() {
+        coord.start_reporter(
+            Duration::from_secs(interval_secs.max(1) as u64),
+            metrics_json.clone(),
+        );
+    }
 
     let mut t = Table::new(&[
         "variant",
@@ -615,10 +672,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "p95 ms",
         "mean batch",
     ]);
+    let mut total_completed = 0usize;
     for &v in &variants {
         let t0 = Instant::now();
         let resps = coord.submit_all(v, &ws)?;
         let wall = t0.elapsed().as_secs_f64();
+        total_completed += resps.len();
         let errors = resps.iter().filter(|r| r.error.is_some()).count();
         if errors > 0 {
             bail!(
@@ -643,8 +702,63 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ]);
     }
     t.print();
+    coord.sample_queue_depths();
+    println!("\nstage breakdown (where each served token's microseconds went):");
+    hisolo::obs::registry().table().print();
     println!("metrics: {}", coord.metrics.summary());
+
+    // SLO accounting must close: the worker computes e2e latency as
+    // queue_us + service_us per request, so the means decompose exactly
+    // (the tolerance only absorbs float summation order). CI greps PASS.
+    let q_mean = coord.metrics.mean_queue_wait_us();
+    let svc_mean = coord.metrics.mean_service_us();
+    let e2e_mean = coord.metrics.mean_latency_us();
+    let ratio = if e2e_mean > 0.0 {
+        (q_mean + svc_mean) / e2e_mean
+    } else {
+        0.0
+    };
+    let decomposed = e2e_mean > 0.0 && (0.95..=1.05).contains(&ratio);
+    println!(
+        "latency_decomposition: queue_wait_mean={q_mean:.0}us + service_mean={svc_mean:.0}us \
+         vs e2e_mean={e2e_mean:.0}us (ratio {ratio:.3}) {}",
+        if decomposed { "PASS" } else { "FAIL" }
+    );
+
+    // final snapshot (the reporter may not have fired since the last
+    // completions) + one-line JSON trajectory record for the benches file
+    if let Some(path) = &metrics_json {
+        std::fs::write(path, format!("{}\n", coord.metrics.to_json()))
+            .with_context(|| format!("write metrics snapshot {}", path.display()))?;
+        println!("wrote metrics snapshot to {}", path.display());
+    }
+    if let Some(path) = args.get_path("json") {
+        use hisolo::util::json::{num, obj, s};
+        use std::io::Write;
+        let m = &coord.metrics;
+        let record = obj(vec![
+            ("bench", s("serve")),
+            ("requests", num(total_completed as f64)),
+            ("latency_p50_us", num(m.latency_percentile_us(0.50) as f64)),
+            ("latency_p99_us", num(m.latency_percentile_us(0.99) as f64)),
+            ("latency_p999_us", num(m.latency_percentile_us(0.999) as f64)),
+            ("queue_wait_p50_us", num(m.queue_wait_percentile_us(0.50) as f64)),
+            ("service_p50_us", num(m.service_percentile_us(0.50) as f64)),
+            ("mean_batch", num(m.mean_batch_size())),
+            ("stages", hisolo::obs::registry().to_json()),
+        ]);
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .with_context(|| format!("open json trajectory file {}", path.display()))?;
+        writeln!(f, "{record}")?;
+        println!("appended serve trajectory line to {}", path.display());
+    }
     coord.shutdown();
+    if !decomposed {
+        bail!("latency decomposition check failed (ratio {ratio:.3})");
+    }
     Ok(())
 }
 

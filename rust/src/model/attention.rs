@@ -20,6 +20,15 @@
 //! implementation survives as [`causal_mha_scalar`], the independent
 //! numerical reference for tests and the per-window arm of
 //! `benches/attention.rs`.
+//!
+//! # Observability
+//!
+//! The whole batched call reports under one `attention` span opened by
+//! the transformer's forward (`obs::Stage::Attention`). Nothing inside
+//! this module carries its own guards: the per-(window, head) loop and
+//! the per-query softmax rows run tens of thousands of times per batch,
+//! far below the ~microsecond granularity where a span guard's two clock
+//! reads stay invisible — see the span-guard rules in [`crate::obs`].
 
 use crate::linalg::matrix::{apply_batch_add_w, gemm_nt_add};
 use crate::linalg::Matrix;

@@ -1,6 +1,17 @@
 //! Transformer with compressed q/k/v projections — the deployable unit the
 //! paper produces (everything else left dense, matching §5's targeting of
 //! q_proj/k_proj/v_proj only).
+//!
+//! # Observability
+//!
+//! A forward through this model is fully covered by the stage spans of
+//! [`crate::obs`]: the compressed q/k/v applies report as `lowrank` +
+//! `spmm` (and `hss_walk` when the factor is hierarchical), the attention
+//! kernel as `attention`, the dense FFN as `mlp`, and the output
+//! log-softmax as `softmax`. Dense projections inside the base
+//! transformer are deliberately unspanned — they are the baseline the
+//! compressed stages are compared against, and the `mlp` stage already
+//! bounds their cost class.
 
 use crate::compress::pipeline::{compress_model_qkv, summarize, LayerReport};
 use crate::compress::{CompressedMatrix, CompressorConfig, Method};

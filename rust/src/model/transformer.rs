@@ -251,31 +251,39 @@ impl Transformer {
             let v = proj.project(li, Proj::V, &a);
             // one batched masked attention over the whole stack; the
             // offset table keeps causal attention inside window boundaries
+            // (the span covers the attention_batch call only — per-row
+            // softmax inside it is far too hot for guards)
             let mut o = Matrix::zeros(total, d);
-            ATTN_WS.with(|ws| {
-                let ws = &mut ws.borrow_mut();
-                attention_batch(&q, &k, &v, &offsets, self.cfg.n_heads, &mut o, ws)
-            });
+            {
+                let _span = crate::obs::Span::enter(crate::obs::Stage::Attention);
+                ATTN_WS.with(|ws| {
+                    let ws = &mut ws.borrow_mut();
+                    attention_batch(&q, &k, &v, &offsets, self.cfg.n_heads, &mut o, ws)
+                });
+            }
             let oh = o.matmul(&l.wo);
             h = h.add(&oh);
 
             // mlp block (row-wise, so the stack batches it for free)
-            let m = layernorm(&h, &l.ln2_g, &l.ln2_b);
-            let mut ff = m.matmul(&l.w1);
-            for i in 0..total {
-                let row = ff.row_mut(i);
-                for (x, b) in row.iter_mut().zip(&l.b1) {
-                    *x = gelu(*x + *b);
+            {
+                let _span = crate::obs::Span::enter(crate::obs::Stage::Mlp);
+                let m = layernorm(&h, &l.ln2_g, &l.ln2_b);
+                let mut ff = m.matmul(&l.w1);
+                for i in 0..total {
+                    let row = ff.row_mut(i);
+                    for (x, b) in row.iter_mut().zip(&l.b1) {
+                        *x = gelu(*x + *b);
+                    }
                 }
-            }
-            let mut ff2 = ff.matmul(&l.w2);
-            for i in 0..total {
-                let row = ff2.row_mut(i);
-                for (x, b) in row.iter_mut().zip(&l.b2) {
-                    *x += *b;
+                let mut ff2 = ff.matmul(&l.w2);
+                for i in 0..total {
+                    let row = ff2.row_mut(i);
+                    for (x, b) in row.iter_mut().zip(&l.b2) {
+                        *x += *b;
+                    }
                 }
+                h = h.add(&ff2);
             }
-            h = h.add(&ff2);
         }
 
         // calibration capture needs only the per-layer inputs — skip the

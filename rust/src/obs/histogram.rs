@@ -1,0 +1,132 @@
+//! Lock-free log2-bucketed histogram — the one bucket scheme shared by the
+//! serving [`Metrics`](crate::coordinator::Metrics) latency histograms and
+//! the per-stage span registry ([`crate::obs::StageRegistry`]), so every
+//! percentile in the system is computed by the same walk over the same
+//! bucket bounds.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// log2 buckets over 1us .. ~1099s; bucket `i` holds values whose highest
+/// set bit is `i`, i.e. `[2^i, 2^(i+1))` microseconds (values ≥ 2^39 us
+/// saturate into the last bucket).
+pub const BUCKETS: usize = 40;
+
+/// Bucket index for a microsecond value (0 maps to bucket 0).
+#[inline]
+pub fn bucket_of(us: u64) -> usize {
+    (64 - us.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1)
+}
+
+/// Upper bound (us) of bucket `i` — what percentile queries report.
+#[inline]
+pub fn bucket_upper_us(i: usize) -> u64 {
+    1u64 << (i + 1)
+}
+
+/// Percentile over a bucket-count snapshot: walks counts to the
+/// `ceil(p·total)`-th sample and returns that bucket's upper bound; 0 when
+/// empty. `p` in [0, 1].
+pub fn percentile_from_counts(counts: &[u64], p: f64) -> u64 {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 0;
+    }
+    let want = ((p * total as f64).ceil() as u64).clamp(1, total);
+    let mut acc = 0u64;
+    for (i, c) in counts.iter().enumerate() {
+        acc += c;
+        if acc >= want {
+            return bucket_upper_us(i);
+        }
+    }
+    bucket_upper_us(counts.len() - 1)
+}
+
+/// A fixed-size log2 histogram of microsecond values. All operations are
+/// relaxed atomics: concurrent recorders never contend on a lock, and
+/// readers see a (possibly slightly stale) consistent-enough snapshot.
+pub struct LogHistogram {
+    buckets: [AtomicU64; BUCKETS],
+}
+
+impl LogHistogram {
+    pub fn new() -> LogHistogram {
+        LogHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    #[inline]
+    pub fn record_us(&self, us: u64) {
+        self.buckets[bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Snapshot of all bucket counts.
+    pub fn counts(&self) -> [u64; BUCKETS] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
+    }
+
+    /// Total samples recorded.
+    pub fn count(&self) -> u64 {
+        self.counts().iter().sum()
+    }
+
+    /// Approximate percentile (upper bucket bound), p in [0, 1]; 0 if empty.
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        percentile_from_counts(&self.counts(), p)
+    }
+
+    pub fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_bounds() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 0);
+        assert_eq!(bucket_of(2), 1);
+        assert_eq!(bucket_of(3), 1);
+        assert_eq!(bucket_of(1024), 10);
+        assert_eq!(bucket_of(u64::MAX), BUCKETS - 1);
+        assert_eq!(bucket_upper_us(0), 2);
+        assert_eq!(bucket_upper_us(10), 2048);
+    }
+
+    #[test]
+    fn percentiles_walk_and_saturate() {
+        let h = LogHistogram::new();
+        assert_eq!(h.percentile_us(0.99), 0);
+        for us in [10u64, 100, 1000, 10_000, 100_000] {
+            for _ in 0..100 {
+                h.record_us(us);
+            }
+        }
+        assert_eq!(h.count(), 500);
+        let p50 = h.percentile_us(0.5);
+        assert!((1000..=2048).contains(&p50), "{p50}");
+        assert!(h.percentile_us(0.5) <= h.percentile_us(0.95));
+        assert!(h.percentile_us(0.95) <= h.percentile_us(0.999));
+    }
+
+    #[test]
+    fn reset_clears() {
+        let h = LogHistogram::new();
+        h.record_us(7);
+        assert_eq!(h.count(), 1);
+        h.reset();
+        assert_eq!(h.count(), 0);
+    }
+}

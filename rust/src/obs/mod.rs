@@ -1,0 +1,558 @@
+//! Stage-level span tracing: where every microsecond of a served token goes.
+//!
+//! The paper's hardware-friendliness claim is a *cost-structure* claim —
+//! HSS matvec "reduces to one sparse and a sequence of thin-matrix
+//! multiplications" — so end-to-end latency alone cannot validate it. This
+//! module decomposes a served request into a fixed taxonomy of stages
+//! ([`Stage`]), each backed by a lock-free log-bucketed histogram (the same
+//! bucket scheme as the serving `Metrics`, see [`histogram`]), recorded by
+//! RAII [`Span`] guards cheap enough (~2 `Instant::now` calls, two relaxed
+//! atomic adds) to wrap every `apply_batch` / `attention_batch` /
+//! `spmm_add` call on the hot path.
+//!
+//! # Stage taxonomy
+//!
+//! | stage | covers |
+//! |---|---|
+//! | `queue_wait` | submit → dequeue (recorded by the worker, not a guard) |
+//! | `bucket_form` | length-coalescing a polled batch into buckets |
+//! | `spmm` | CSR sparse multiply (`Csr::spmm_add` / `spmm_add_staged`) |
+//! | `hss_walk` | one blocked HSS tree traversal (`HssNode::apply_batch_with`) |
+//! | `lowrank` | the two thin factor multiplies of a low-rank apply |
+//! | `attention` | one `attention_batch` call over the stacked block |
+//! | `mlp` | one transformer FFN block (ln2 → gelu matmuls → residual) |
+//! | `softmax` | output log-softmax + NLL (`window_nll`) |
+//! | `reply_route` | routing one scored response back to its submitter |
+//! | `swap_install` | building + installing a hot-swapped scorer |
+//!
+//! Stages are **not disjoint**: `spmm` spans fired inside an HSS traversal
+//! nest within the enclosing `hss_walk` span, so stage totals answer "how
+//! much time was spent inside X", not "stage times sum to wall clock". The
+//! request-lifecycle split that *does* sum exactly — queue_wait + service =
+//! end-to-end — lives in `coordinator::Metrics`.
+//!
+//! # Span-guard rules for hot loops
+//!
+//! Instrument at **call-site granularity** (one span per `apply_batch`, per
+//! `attention_batch`, per `window_nll`), never inside per-row / per-element
+//! inner loops: a guard costs ~40–80ns, which is noise around a batched
+//! kernel call but would dominate a row of streaming attention softmax.
+//! The batched-apply bench measures this and asserts span overhead ≤ 2% of
+//! a k=32 compressed apply (`span_overhead_check` in CI).
+//!
+//! Tracing is on by default; set `HISOLO_TRACE=off` (or call
+//! `registry().set_enabled(false)`) to reduce every guard to a single
+//! relaxed load with no clock reads. Flop/byte counters per stage are
+//! compiled out unless the zero-dependency `obs-flops` cargo feature is
+//! enabled; with it, kernels call [`count_flops`] and the counts attribute
+//! to the innermost active span on the calling thread.
+
+pub mod histogram;
+
+use crate::util::json::{num, obj, Json};
+use crate::util::timer::{fmt_ns, Table};
+use histogram::LogHistogram;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::{Duration, Instant};
+
+/// Static stage IDs — the fixed taxonomy every span records under.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    QueueWait,
+    BucketForm,
+    Spmm,
+    HssWalk,
+    LowRank,
+    Attention,
+    Mlp,
+    Softmax,
+    ReplyRoute,
+    SwapInstall,
+}
+
+impl Stage {
+    pub const COUNT: usize = 10;
+
+    pub const ALL: [Stage; Stage::COUNT] = [
+        Stage::QueueWait,
+        Stage::BucketForm,
+        Stage::Spmm,
+        Stage::HssWalk,
+        Stage::LowRank,
+        Stage::Attention,
+        Stage::Mlp,
+        Stage::Softmax,
+        Stage::ReplyRoute,
+        Stage::SwapInstall,
+    ];
+
+    /// Stable snake_case name — the JSON export key and CI grep target.
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::QueueWait => "queue_wait",
+            Stage::BucketForm => "bucket_form",
+            Stage::Spmm => "spmm",
+            Stage::HssWalk => "hss_walk",
+            Stage::LowRank => "lowrank",
+            Stage::Attention => "attention",
+            Stage::Mlp => "mlp",
+            Stage::Softmax => "softmax",
+            Stage::ReplyRoute => "reply_route",
+            Stage::SwapInstall => "swap_install",
+        }
+    }
+
+    /// Dense index into per-stage arrays (`0..Stage::COUNT`).
+    pub fn index(self) -> usize {
+        self as usize
+    }
+}
+
+/// Per-stage accumulators: exact count + total (ns) for precise means and
+/// throughput math, a log-bucketed µs histogram for percentiles, and
+/// (feature-gated) flop/byte counters so tokens/s and bytes/token are
+/// derivable per stage.
+pub struct StageStats {
+    count: AtomicU64,
+    total_ns: AtomicU64,
+    hist: LogHistogram,
+    #[cfg(feature = "obs-flops")]
+    flops: AtomicU64,
+    #[cfg(feature = "obs-flops")]
+    bytes: AtomicU64,
+}
+
+impl StageStats {
+    fn new() -> StageStats {
+        StageStats {
+            count: AtomicU64::new(0),
+            total_ns: AtomicU64::new(0),
+            hist: LogHistogram::new(),
+            #[cfg(feature = "obs-flops")]
+            flops: AtomicU64::new(0),
+            #[cfg(feature = "obs-flops")]
+            bytes: AtomicU64::new(0),
+        }
+    }
+
+    fn reset(&self) {
+        self.count.store(0, Ordering::Relaxed);
+        self.total_ns.store(0, Ordering::Relaxed);
+        self.hist.reset();
+        #[cfg(feature = "obs-flops")]
+        {
+            self.flops.store(0, Ordering::Relaxed);
+            self.bytes.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+/// The span registry: one [`StageStats`] per stage, all lock-free. Usually
+/// accessed through the process-wide instance ([`registry`]); tests build
+/// their own for exact-total assertions.
+pub struct StageRegistry {
+    stages: [StageStats; Stage::COUNT],
+    enabled: AtomicBool,
+}
+
+impl StageRegistry {
+    pub fn new() -> StageRegistry {
+        StageRegistry {
+            stages: std::array::from_fn(|_| StageStats::new()),
+            enabled: AtomicBool::new(true),
+        }
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Enable/disable span recording. Disabled guards skip the clock reads
+    /// entirely, so a disabled registry costs one relaxed load per span.
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn record_ns(&self, stage: Stage, ns: u64) {
+        let s = &self.stages[stage.index()];
+        s.count.fetch_add(1, Ordering::Relaxed);
+        s.total_ns.fetch_add(ns, Ordering::Relaxed);
+        s.hist.record_us(ns / 1_000);
+    }
+
+    #[inline]
+    pub fn record(&self, stage: Stage, d: Duration) {
+        self.record_ns(stage, d.as_nanos() as u64);
+    }
+
+    pub fn count(&self, stage: Stage) -> u64 {
+        self.stages[stage.index()].count.load(Ordering::Relaxed)
+    }
+
+    pub fn total_ns(&self, stage: Stage) -> u64 {
+        self.stages[stage.index()].total_ns.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_ns(&self, stage: Stage) -> f64 {
+        let c = self.count(stage);
+        if c == 0 {
+            0.0
+        } else {
+            self.total_ns(stage) as f64 / c as f64
+        }
+    }
+
+    /// Approximate stage-duration percentile in µs (upper bucket bound).
+    pub fn percentile_us(&self, stage: Stage, p: f64) -> u64 {
+        self.stages[stage.index()].hist.percentile_us(p)
+    }
+
+    /// Spans recorded across all stages — the bench uses deltas of this to
+    /// count spans fired by one instrumented call.
+    pub fn total_count(&self) -> u64 {
+        Stage::ALL.iter().map(|&s| self.count(s)).sum()
+    }
+
+    /// Flops attributed to `stage` via [`count_flops`] (0 unless the
+    /// `obs-flops` feature is enabled).
+    pub fn flops(&self, stage: Stage) -> u64 {
+        #[cfg(feature = "obs-flops")]
+        {
+            self.stages[stage.index()].flops.load(Ordering::Relaxed)
+        }
+        #[cfg(not(feature = "obs-flops"))]
+        {
+            let _ = stage;
+            0
+        }
+    }
+
+    /// Bytes attributed to `stage` via [`count_flops`] (0 unless the
+    /// `obs-flops` feature is enabled).
+    pub fn bytes(&self, stage: Stage) -> u64 {
+        #[cfg(feature = "obs-flops")]
+        {
+            self.stages[stage.index()].bytes.load(Ordering::Relaxed)
+        }
+        #[cfg(not(feature = "obs-flops"))]
+        {
+            let _ = stage;
+            0
+        }
+    }
+
+    #[cfg(feature = "obs-flops")]
+    fn add_counters(&self, stage: Stage, flops: u64, bytes: u64) {
+        let s = &self.stages[stage.index()];
+        s.flops.fetch_add(flops, Ordering::Relaxed);
+        s.bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Zero every stage (bench/test isolation; gauges elsewhere untouched).
+    pub fn reset(&self) {
+        for s in &self.stages {
+            s.reset();
+        }
+    }
+
+    /// Structured snapshot: `{stage_name: {count, total_us, mean_us,
+    /// p50_us, p95_us, p99_us, p999_us}}` (+ `flops`/`bytes` under the
+    /// `obs-flops` feature). Key set is stable — BTreeMap order, fixed
+    /// stage names.
+    pub fn to_json(&self) -> Json {
+        let mut stages = Vec::new();
+        for &st in Stage::ALL.iter() {
+            // mut is only exercised by the feature-gated pushes below
+            #[cfg_attr(not(feature = "obs-flops"), allow(unused_mut))]
+            let mut fields = vec![
+                ("count", num(self.count(st) as f64)),
+                ("total_us", num(self.total_ns(st) as f64 / 1e3)),
+                ("mean_us", num(self.mean_ns(st) / 1e3)),
+                ("p50_us", num(self.percentile_us(st, 0.50) as f64)),
+                ("p95_us", num(self.percentile_us(st, 0.95) as f64)),
+                ("p99_us", num(self.percentile_us(st, 0.99) as f64)),
+                ("p999_us", num(self.percentile_us(st, 0.999) as f64)),
+            ];
+            #[cfg(feature = "obs-flops")]
+            {
+                fields.push(("flops", num(self.flops(st) as f64)));
+                fields.push(("bytes", num(self.bytes(st) as f64)));
+            }
+            stages.push((st.name(), obj(fields)));
+        }
+        obj(stages)
+    }
+
+    /// The per-stage latency-breakdown table printed in shutdown summaries.
+    /// `share %` is each stage's total over the sum of all stage totals —
+    /// a within-table share, not a wall-clock fraction (stages nest).
+    pub fn table(&self) -> Table {
+        let grand: u64 = Stage::ALL.iter().map(|&s| self.total_ns(s)).sum();
+        let mut t = Table::new(&[
+            "stage", "count", "total", "mean", "p50", "p99", "p999", "share %",
+        ]);
+        for &st in Stage::ALL.iter() {
+            let total = self.total_ns(st);
+            let share = if grand == 0 {
+                0.0
+            } else {
+                100.0 * total as f64 / grand as f64
+            };
+            t.row(&[
+                st.name().to_string(),
+                self.count(st).to_string(),
+                fmt_ns(total as f64),
+                fmt_ns(self.mean_ns(st)),
+                format!("{}us", self.percentile_us(st, 0.50)),
+                format!("{}us", self.percentile_us(st, 0.99)),
+                format!("{}us", self.percentile_us(st, 0.999)),
+                format!("{share:.1}"),
+            ]);
+        }
+        t
+    }
+}
+
+impl Default for StageRegistry {
+    fn default() -> Self {
+        StageRegistry::new()
+    }
+}
+
+static GLOBAL: OnceLock<StageRegistry> = OnceLock::new();
+
+/// The process-wide span registry. First access honors `HISOLO_TRACE=off`
+/// (or `0`) to start disabled; everything else starts enabled.
+pub fn registry() -> &'static StageRegistry {
+    GLOBAL.get_or_init(|| {
+        let r = StageRegistry::new();
+        if matches!(
+            std::env::var("HISOLO_TRACE").as_deref(),
+            Ok("off") | Ok("0")
+        ) {
+            r.set_enabled(false);
+        }
+        r
+    })
+}
+
+#[cfg(feature = "obs-flops")]
+thread_local! {
+    /// Innermost-active-span stack: `count_flops` attributes to the top.
+    static STAGE_STACK: std::cell::RefCell<Vec<Stage>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
+/// RAII span guard: stamps `Instant::now()` on enter, records the elapsed
+/// time into the global registry on drop. When tracing is disabled the
+/// guard is inert (no clock reads). Bind it (`let _span = ...`) — `let _`
+/// drops immediately and records a ~0ns span.
+pub struct Span {
+    stage: Stage,
+    start: Option<Instant>,
+}
+
+impl Span {
+    #[inline]
+    pub fn enter(stage: Stage) -> Span {
+        if !registry().enabled() {
+            return Span { stage, start: None };
+        }
+        #[cfg(feature = "obs-flops")]
+        STAGE_STACK.with(|s| s.borrow_mut().push(stage));
+        Span {
+            stage,
+            start: Some(Instant::now()),
+        }
+    }
+}
+
+impl Drop for Span {
+    #[inline]
+    fn drop(&mut self) {
+        if let Some(t0) = self.start {
+            registry().record_ns(self.stage, t0.elapsed().as_nanos() as u64);
+            #[cfg(feature = "obs-flops")]
+            STAGE_STACK.with(|s| {
+                s.borrow_mut().pop();
+            });
+        }
+    }
+}
+
+/// Attribute `flops` floating-point operations and `bytes` of weight
+/// traffic to the innermost active span on this thread. Compiles to a
+/// no-op unless the `obs-flops` feature is enabled, so kernels stay
+/// stage-agnostic and cost nothing in default builds.
+#[inline]
+pub fn count_flops(flops: u64, bytes: u64) {
+    #[cfg(feature = "obs-flops")]
+    STAGE_STACK.with(|s| {
+        if let Some(&st) = s.borrow().last() {
+            registry().add_counters(st, flops, bytes);
+        }
+    });
+    #[cfg(not(feature = "obs-flops"))]
+    let _ = (flops, bytes);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_names_and_indices_stable() {
+        assert_eq!(Stage::ALL.len(), Stage::COUNT);
+        for (i, &s) in Stage::ALL.iter().enumerate() {
+            assert_eq!(s.index(), i);
+        }
+        assert_eq!(Stage::QueueWait.name(), "queue_wait");
+        assert_eq!(Stage::HssWalk.name(), "hss_walk");
+        assert_eq!(Stage::ReplyRoute.name(), "reply_route");
+    }
+
+    #[test]
+    fn record_and_query() {
+        let r = StageRegistry::new();
+        r.record_ns(Stage::Spmm, 5_000); // 5us
+        r.record_ns(Stage::Spmm, 7_000);
+        assert_eq!(r.count(Stage::Spmm), 2);
+        assert_eq!(r.total_ns(Stage::Spmm), 12_000);
+        assert!((r.mean_ns(Stage::Spmm) - 6_000.0).abs() < 1e-9);
+        let p50 = r.percentile_us(Stage::Spmm, 0.5);
+        assert!((4..=8).contains(&p50), "{p50}");
+        assert_eq!(r.count(Stage::Attention), 0);
+        assert_eq!(r.mean_ns(Stage::Attention), 0.0);
+    }
+
+    #[test]
+    fn span_guard_records_into_global() {
+        let reg = registry();
+        let was = reg.enabled();
+        reg.set_enabled(true);
+        let before = reg.count(Stage::SwapInstall);
+        {
+            let _span = Span::enter(Stage::SwapInstall);
+            std::hint::black_box(3 + 4);
+        }
+        // other parallel tests may also record; count only moves up
+        assert!(reg.count(Stage::SwapInstall) > before);
+        reg.set_enabled(was);
+    }
+
+    #[test]
+    fn disabled_span_records_nothing() {
+        // exercise the inert-guard path on a private registry by driving
+        // the guard logic manually (the global one is shared with other
+        // parallel tests, so "nothing changed" can't be asserted there)
+        let r = StageRegistry::new();
+        r.set_enabled(false);
+        assert!(!r.enabled());
+        if r.enabled() {
+            r.record_ns(Stage::Mlp, 1);
+        }
+        assert_eq!(r.count(Stage::Mlp), 0);
+    }
+
+    /// Satellite: 8 threads hammer one registry; totals are exact, stage
+    /// percentiles monotone, and the JSON key set stable across snapshots.
+    #[test]
+    fn concurrent_recording_exact_totals_and_stable_keys() {
+        let r = std::sync::Arc::new(StageRegistry::new());
+        let threads = 8;
+        let per = 1_000u64;
+        let keys_before = json_keys(&r.to_json());
+        std::thread::scope(|s| {
+            for t in 0..threads {
+                let r = r.clone();
+                s.spawn(move || {
+                    for i in 0..per {
+                        // spread across stages and buckets
+                        let st = Stage::ALL[(t + i as usize) % Stage::COUNT];
+                        r.record_ns(st, (i + 1) * 1_000);
+                    }
+                });
+            }
+        });
+        assert_eq!(r.total_count(), threads as u64 * per);
+        let total: u64 = Stage::ALL.iter().map(|&s| r.total_ns(s)).sum();
+        // each thread records sum_{i=1..per} i*1000 ns
+        let per_thread: u64 = (1..=per).map(|i| i * 1_000).sum();
+        assert_eq!(total, threads as u64 * per_thread);
+        for &st in Stage::ALL.iter() {
+            let p50 = r.percentile_us(st, 0.50);
+            let p99 = r.percentile_us(st, 0.99);
+            let p999 = r.percentile_us(st, 0.999);
+            assert!(p50 <= p99 && p99 <= p999, "{}: {p50} {p99} {p999}", st.name());
+        }
+        assert_eq!(json_keys(&r.to_json()), keys_before, "key set must be stable");
+    }
+
+    #[test]
+    fn json_roundtrips_and_has_required_keys() {
+        let r = StageRegistry::new();
+        r.record_ns(Stage::HssWalk, 123_456);
+        let j = r.to_json();
+        let text = j.to_string();
+        assert!(text.contains("\"hss_walk\""));
+        assert!(text.contains("\"p999_us\""));
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back, j);
+    }
+
+    #[test]
+    fn table_lists_every_stage() {
+        let r = StageRegistry::new();
+        r.record_ns(Stage::Attention, 1_000_000);
+        let rendered = r.table().to_string();
+        for &st in Stage::ALL.iter() {
+            assert!(rendered.contains(st.name()), "{rendered}");
+        }
+        assert!(rendered.contains("100.0"), "{rendered}"); // attention holds all time
+    }
+
+    #[test]
+    fn flop_counters_inert_or_attributed() {
+        let reg = registry();
+        let was = reg.enabled();
+        reg.set_enabled(true);
+        let before = reg.flops(Stage::Spmm);
+        {
+            let _span = Span::enter(Stage::Spmm);
+            count_flops(640, 64);
+        }
+        let gained = reg.flops(Stage::Spmm) - before;
+        if cfg!(feature = "obs-flops") {
+            assert!(gained >= 640, "{gained}");
+        } else {
+            assert_eq!(gained, 0);
+        }
+        reg.set_enabled(was);
+        // outside any span this must be a safe no-op either way
+        count_flops(1, 1);
+    }
+
+    /// Recursively collect the key paths of a JSON value.
+    fn json_keys(j: &Json) -> Vec<String> {
+        fn walk(j: &Json, prefix: &str, out: &mut Vec<String>) {
+            if let Json::Obj(m) = j {
+                for (k, v) in m {
+                    let path = if prefix.is_empty() {
+                        k.clone()
+                    } else {
+                        format!("{prefix}.{k}")
+                    };
+                    walk(v, &path, out);
+                    out.push(path);
+                }
+            }
+        }
+        let mut out = Vec::new();
+        walk(j, "", &mut out);
+        out.sort();
+        out
+    }
+}

@@ -148,6 +148,18 @@ impl Csr {
     /// so a wide batch never thrashes the X working set. f16-resident
     /// values widen once per nnz per column block.
     pub fn spmm_add(&self, x: &[f32], y: &mut [f32], k: usize) {
+        // one span per public entry; `spmm_add_staged` has its own, and
+        // both route here through the span-free inner body so a staged
+        // call never double-counts the stage
+        let _span = crate::obs::Span::enter(crate::obs::Stage::Spmm);
+        crate::obs::count_flops(
+            2 * self.nnz() as u64 * k as u64,
+            self.resident_value_bytes() as u64,
+        );
+        self.spmm_add_inner(x, y, k);
+    }
+
+    fn spmm_add_inner(&self, x: &[f32], y: &mut [f32], k: usize) {
         assert_eq!(x.len(), self.cols * k, "input block shape mismatch");
         assert_eq!(y.len(), self.rows * k, "output block shape mismatch");
         if k == 1 {
@@ -165,8 +177,13 @@ impl Csr {
     /// per stored value per column block; f32-resident values skip the
     /// stage. Bit-identical to the unstaged call for either dtype.
     pub fn spmm_add_staged(&self, x: &[f32], y: &mut [f32], k: usize, stage: &mut Vec<f32>) {
+        let _span = crate::obs::Span::enter(crate::obs::Stage::Spmm);
+        crate::obs::count_flops(
+            2 * self.nnz() as u64 * k as u64,
+            self.resident_value_bytes() as u64,
+        );
         match &self.data {
-            WeightBuf::F32(_) => self.spmm_add(x, y, k),
+            WeightBuf::F32(_) => self.spmm_add_inner(x, y, k),
             WeightBuf::F16(v) => {
                 assert_eq!(x.len(), self.cols * k, "input block shape mismatch");
                 assert_eq!(y.len(), self.rows * k, "output block shape mismatch");

@@ -1,6 +1,10 @@
 //! Minimal leveled logger writing to stderr, controlled by `HISOLO_LOG`
-//! (error|warn|info|debug; default info). Kept allocation-free on the
-//! disabled path so hot loops can carry debug logging.
+//! (off|error|warn|info|debug; default info). `off` silences every level
+//! — benches and tests set it so the coordinator's metrics reporter
+//! thread stays quiet in captured output. Unrecognized values warn once
+//! to stderr and fall back to `info` instead of being silently eaten.
+//! Kept allocation-free on the disabled path so hot loops can carry
+//! debug logging.
 
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::time::Instant;
@@ -14,27 +18,69 @@ pub enum Level {
     Debug = 3,
 }
 
-static LEVEL: AtomicU8 = AtomicU8::new(255); // 255 = uninitialised
+// Stored encoding: 0 = off, 1..=4 = Level + 1, UNINIT = not yet read
+// from the environment. `off` must sort below Error, hence the shift.
+const OFF: u8 = 0;
+const UNINIT: u8 = 255;
+
+static LEVEL: AtomicU8 = AtomicU8::new(UNINIT);
 static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+static BAD_VALUE_WARNING: std::sync::Once = std::sync::Once::new();
+
+fn encode(level: Option<Level>) -> u8 {
+    match level {
+        None => OFF,
+        Some(l) => l as u8 + 1,
+    }
+}
+
+/// Parse an `HISOLO_LOG` value. Outer `None` = unrecognized; inner
+/// `None` = logging off.
+pub fn parse_level(value: &str) -> Option<Option<Level>> {
+    match value {
+        "off" | "none" | "0" => Some(None),
+        "error" => Some(Some(Level::Error)),
+        "warn" | "warning" => Some(Some(Level::Warn)),
+        "info" => Some(Some(Level::Info)),
+        "debug" => Some(Some(Level::Debug)),
+        _ => None,
+    }
+}
+
+/// Override the level programmatically (`None` = off). Tests and benches
+/// use this to silence the reporter without touching the environment.
+pub fn set_level(level: Option<Level>) {
+    LEVEL.store(encode(level), Ordering::Relaxed);
+}
 
 fn init_level() -> u8 {
-    let lvl = match std::env::var("HISOLO_LOG").as_deref() {
-        Ok("error") => Level::Error,
-        Ok("warn") => Level::Warn,
-        Ok("debug") => Level::Debug,
-        _ => Level::Info,
-    } as u8;
-    LEVEL.store(lvl, Ordering::Relaxed);
-    lvl
+    let enc = match std::env::var("HISOLO_LOG") {
+        Err(_) => encode(Some(Level::Info)),
+        Ok(v) => match parse_level(&v) {
+            Some(l) => encode(l),
+            None => {
+                // direct eprintln: the logger itself is what's misconfigured
+                BAD_VALUE_WARNING.call_once(|| {
+                    eprintln!(
+                        "[logging] unrecognized HISOLO_LOG={v:?} \
+                         (expected off|error|warn|info|debug); using info"
+                    );
+                });
+                encode(Some(Level::Info))
+            }
+        },
+    };
+    LEVEL.store(enc, Ordering::Relaxed);
+    enc
 }
 
 #[inline]
 pub fn enabled(level: Level) -> bool {
     let mut cur = LEVEL.load(Ordering::Relaxed);
-    if cur == 255 {
+    if cur == UNINIT {
         cur = init_level();
     }
-    (level as u8) <= cur
+    encode(Some(level)) <= cur
 }
 
 pub fn log(level: Level, args: std::fmt::Arguments<'_>) {
@@ -88,6 +134,35 @@ mod tests {
     fn level_ordering() {
         assert!(Level::Error < Level::Warn);
         assert!(Level::Info < Level::Debug);
+    }
+
+    #[test]
+    fn parse_accepts_all_spellings() {
+        assert_eq!(parse_level("off"), Some(None));
+        assert_eq!(parse_level("none"), Some(None));
+        assert_eq!(parse_level("0"), Some(None));
+        assert_eq!(parse_level("error"), Some(Some(Level::Error)));
+        assert_eq!(parse_level("warn"), Some(Some(Level::Warn)));
+        assert_eq!(parse_level("warning"), Some(Some(Level::Warn)));
+        assert_eq!(parse_level("info"), Some(Some(Level::Info)));
+        assert_eq!(parse_level("debug"), Some(Some(Level::Debug)));
+        assert_eq!(parse_level("verbose"), None);
+        assert_eq!(parse_level(""), None);
+    }
+
+    #[test]
+    fn set_level_off_disables_everything() {
+        // LEVEL is process-global, so restore it before returning: other
+        // tests sharing the binary must see their configured level.
+        let prev = LEVEL.load(Ordering::Relaxed);
+        set_level(None);
+        assert!(!enabled(Level::Error));
+        assert!(!enabled(Level::Debug));
+        set_level(Some(Level::Warn));
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        LEVEL.store(prev, Ordering::Relaxed);
     }
 
     #[test]

@@ -18,6 +18,18 @@ pub struct Stats {
     pub stddev_ns: f64,
 }
 
+/// Percentile of an ascending-sorted sample slice (nearest-rank) —
+/// [`Stats`]' percentile rule, exported for any exact-sample consumer.
+/// The observability histograms (`crate::obs`) intentionally do *not*
+/// use this: they are lock-free log-bucketed counters with no retained
+/// samples, so they report upper bucket bounds instead (see
+/// `obs::histogram::percentile_from_counts`).
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let n = sorted.len();
+    sorted[((p * n as f64) as usize).min(n - 1)]
+}
+
 impl Stats {
     pub fn from_samples(mut ns: Vec<f64>) -> Stats {
         assert!(!ns.is_empty());
@@ -25,7 +37,7 @@ impl Stats {
         let n = ns.len();
         let mean = ns.iter().sum::<f64>() / n as f64;
         let var = ns.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
-        let pct = |p: f64| ns[((p * n as f64) as usize).min(n - 1)];
+        let pct = |p: f64| percentile_sorted(&ns, p);
         Stats {
             iters: n,
             mean_ns: mean,
@@ -103,32 +115,35 @@ impl Table {
         self.rows.push(cells.to_vec());
     }
 
-    pub fn to_string(&self) -> String {
+    pub fn print(&self) {
+        print!("{self}");
+    }
+}
+
+// Display rather than an inherent `to_string` (clippy: inherent_to_string)
+// so the table composes with `format!`/`write!` and still gets
+// `ToString::to_string` for free.
+impl std::fmt::Display for Table {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
         for row in &self.rows {
             for (i, c) in row.iter().enumerate() {
                 widths[i] = widths[i].max(c.len());
             }
         }
-        let mut out = String::new();
-        let line = |cells: &[String], widths: &[usize], out: &mut String| {
+        let line = |cells: &[String], f: &mut std::fmt::Formatter<'_>| -> std::fmt::Result {
             for (i, c) in cells.iter().enumerate() {
-                out.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+                write!(f, "{:<w$}  ", c, w = widths[i])?;
             }
-            out.push('\n');
+            writeln!(f)
         };
-        line(&self.headers, &widths, &mut out);
+        line(&self.headers, f)?;
         let total: usize = widths.iter().sum::<usize>() + widths.len() * 2;
-        out.push_str(&"-".repeat(total));
-        out.push('\n');
+        writeln!(f, "{}", "-".repeat(total))?;
         for row in &self.rows {
-            line(row, &widths, &mut out);
+            line(row, f)?;
         }
-        out
-    }
-
-    pub fn print(&self) {
-        print!("{}", self.to_string());
+        Ok(())
     }
 }
 
@@ -172,6 +187,22 @@ mod tests {
         let s = t.to_string();
         assert!(s.contains("sHSS-RCM"));
         assert!(s.lines().count() == 4);
+    }
+
+    #[test]
+    fn percentile_sorted_nearest_rank() {
+        let v: Vec<f64> = (1..=10).map(|x| x as f64).collect();
+        assert_eq!(percentile_sorted(&v, 0.0), 1.0);
+        assert_eq!(percentile_sorted(&v, 0.50), 6.0);
+        assert_eq!(percentile_sorted(&v, 0.99), 10.0);
+        assert_eq!(percentile_sorted(&[7.0], 0.999), 7.0);
+    }
+
+    #[test]
+    fn table_displays_via_format() {
+        let mut t = Table::new(&["a"]);
+        t.row(&["x".into()]);
+        assert!(format!("{t}").contains('x'));
     }
 
     #[test]
