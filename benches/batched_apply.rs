@@ -176,20 +176,30 @@ fn main() {
 
     // span-overhead check (CI-asserted): the observability guards wrapping
     // every spmm/hss_walk/lowrank call must cost ≤ 2% of a k = 32 shss-rcm
-    // apply. Measure one guard's enter+drop cost in a tight loop, count how
-    // many guards one apply actually opens (global span-count delta), and
-    // compare against the measured apply time.
+    // apply — measured WITH flight recording enabled, so the gate covers
+    // the full cost of a guard: registry aggregate + per-batch span capture
+    // + the ring flush amortized by end_batch. Measure one guard's
+    // enter+drop cost in a tight loop inside a live batch context, count
+    // how many guards one apply actually opens (global span-count delta),
+    // and compare against the measured apply time.
     let reg = hisolo::obs::registry();
+    let rec = hisolo::obs::recorder::recorder();
+    let was_recording = rec.enabled();
+    rec.set_enabled(true);
     let span_stats = bench(
         || {
+            let flight = rec.begin_batch();
             for _ in 0..1000 {
                 let _s = hisolo::obs::Span::enter(hisolo::obs::Stage::Spmm);
             }
+            rec.end_batch(flight, &[]);
         },
         2,
         budget,
         10_000,
     );
+    rec.set_enabled(was_recording);
+    rec.reset();
     let span_ns = span_stats.mean_ns / 1000.0;
     let before = reg.total_count();
     student.apply_batch(&xb, &mut gb, &mut ws);

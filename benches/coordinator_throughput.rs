@@ -3,26 +3,57 @@
 //!
 //! Exercises the full L3 path: batcher -> worker -> PJRT executable (AOT
 //! L2 graph with L1 Pallas kernels) when artifacts exist, else the native
-//! forward pass.
+//! forward pass. Every run ends with a one-line JSON trajectory record
+//! (per-case req/s and latency percentiles); `--json <path>` appends it
+//! to a file, `--tiny` shrinks the model for CI smoke runs, and
+//! `--requests N` sets the request count (default 48).
 //!
-//!     cargo bench --bench coordinator_throughput
+//!     cargo bench --bench coordinator_throughput [-- --tiny --requests 24
+//!         --json traj.jsonl]
 
 mod common;
 
 use hisolo::coordinator::worker::{NativeCompressedScorer, NativeDenseScorer};
 use hisolo::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, Variant};
 use hisolo::compress::{CompressorConfig, Method};
-use hisolo::model::{CompressedModel, WeightFile};
+use hisolo::data::dataset::windows;
+use hisolo::data::synthetic;
+use hisolo::model::{CompressedModel, ModelConfig, Transformer, WeightFile};
 use hisolo::runtime::{ArtifactDir, Runtime};
+use hisolo::util::cli::Args;
+use hisolo::util::json::{num, obj, s, Json};
 use hisolo::util::timer::Table;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 fn main() {
-    let env = common::load_env(48);
+    let args = Args::parse(&["tiny"]);
+    let n_requests = args.get_usize("requests", 48);
+    let env = if args.flag("tiny") {
+        // same shrunken config `hisolo serve --synthetic --tiny` uses, so
+        // the CI smoke trajectory tracks the code path the smoke serves
+        let cfg = ModelConfig {
+            vocab: 64,
+            d_model: 64,
+            n_heads: 4,
+            n_layers: 2,
+            d_ff: 128,
+            seq_len: 32,
+        };
+        let toks = synthetic::token_stream(20_000, cfg.vocab);
+        common::BenchEnv {
+            model: Arc::new(Transformer::random(cfg, 7)),
+            windows: windows(&toks, cfg.seq_len, n_requests),
+            from_artifacts: false,
+            dir: None,
+        }
+    } else {
+        common::load_env(n_requests)
+    };
     let mut t = Table::new(&[
         "backend", "variant", "max_batch", "req/s", "p50 ms", "p95 ms", "mean batch",
     ]);
+    let mut cases_json: Vec<(String, Json)> = Vec::new();
 
     for max_batch in [1usize, 8] {
         let cfg = CoordinatorConfig {
@@ -61,7 +92,7 @@ fn main() {
             },
         );
         for variant in [Variant::Dense, Variant::Hss] {
-            run_case(&coord, variant, &env.windows, "native", max_batch, &mut t);
+            run_case(&coord, variant, &env.windows, "native", max_batch, &mut t, &mut cases_json);
         }
         coord.shutdown();
 
@@ -86,7 +117,7 @@ fn main() {
                 });
             }
             for variant in [Variant::Dense, Variant::Hss] {
-                run_case(&coord, variant, &env.windows, "pjrt", max_batch, &mut t);
+                run_case(&coord, variant, &env.windows, "pjrt", max_batch, &mut t, &mut cases_json);
             }
             coord.shutdown();
         }
@@ -97,6 +128,26 @@ fn main() {
         "\npaper claim: compressed models retain full inference speed (batched\n\
          kernels); batching ablation shows the coordinator's max_batch lever."
     );
+
+    // one-line JSON trajectory record (per backend×variant×max_batch case)
+    let record = obj(vec![
+        ("bench", s("coordinator_throughput")),
+        ("requests", num(env.windows.len() as f64)),
+        ("tiny", Json::Bool(args.flag("tiny"))),
+        ("from_artifacts", Json::Bool(env.from_artifacts)),
+        ("cases", Json::Obj(cases_json.into_iter().collect())),
+    ]);
+    println!("\nJSON: {record}");
+    if let Some(path) = args.get_path("json") {
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .expect("open json trajectory file");
+        writeln!(f, "{record}").expect("append trajectory line");
+        println!("appended coordinator trajectory line to {}", path.display());
+    }
 }
 
 fn run_case(
@@ -106,6 +157,7 @@ fn run_case(
     backend: &str,
     max_batch: usize,
     t: &mut Table,
+    cases_json: &mut Vec<(String, Json)>,
 ) {
     // warmup (compile/camp the executable)
     let _ = coord.submit_all(variant, &windows[..2.min(windows.len())]);
@@ -119,13 +171,25 @@ fn run_case(
     lat.sort_unstable();
     let mean_batch =
         resps.iter().map(|r| r.batch_size).sum::<usize>() as f64 / resps.len() as f64;
+    let req_per_s = resps.len() as f64 / wall;
+    let p50_us = lat[lat.len() / 2];
+    let p95_us = lat[(lat.len() * 95 / 100).min(lat.len() - 1)];
     t.row(&[
         backend.to_string(),
         variant.name().to_string(),
         max_batch.to_string(),
-        format!("{:.1}", resps.len() as f64 / wall),
-        format!("{:.1}", lat[lat.len() / 2] as f64 / 1e3),
-        format!("{:.1}", lat[lat.len() * 95 / 100] as f64 / 1e3),
+        format!("{req_per_s:.1}"),
+        format!("{:.1}", p50_us as f64 / 1e3),
+        format!("{:.1}", p95_us as f64 / 1e3),
         format!("{mean_batch:.2}"),
     ]);
+    cases_json.push((
+        format!("{backend}_{}_b{max_batch}", variant.name()),
+        obj(vec![
+            ("req_per_s", num(req_per_s)),
+            ("p50_us", num(p50_us as f64)),
+            ("p95_us", num(p95_us as f64)),
+            ("mean_batch", num(mean_batch)),
+        ]),
+    ));
 }

@@ -9,7 +9,20 @@
 use crate::coordinator::request::Variant;
 use crate::obs::histogram::LogHistogram;
 use crate::util::json::{num, obj, Json};
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// SLO error-budget fraction for a p99 target: 1% of requests may exceed
+/// the target before the budget is spent. `burn_rate = violation_rate /
+/// SLO_EPSILON`, so burn 1.0 means "exactly on budget", above 1.0 means
+/// the budget is burning faster than it accrues.
+pub const SLO_EPSILON: f64 = 0.01;
+
+/// Reporter ticks retained by the rolling SLO window (window burn rate
+/// covers the last `SLO_WINDOW_TICKS × reporter interval` of traffic).
+pub const SLO_WINDOW_TICKS: usize = 60;
 
 /// Atomic metrics registry (one per coordinator).
 pub struct Metrics {
@@ -49,6 +62,22 @@ pub struct Metrics {
     /// dequeue→reply service time of completed requests
     service: LogHistogram,
     service_total_us: AtomicU64,
+    /// construction instant — `uptime_secs` in snapshots, so consumers of
+    /// `--metrics-json` can turn counter deltas into rates
+    started: Instant,
+    /// snapshots taken so far; `to_json` stamps `snapshot_seq` from it so
+    /// successive snapshots are strictly ordered even within one second
+    snapshot_seq: AtomicU64,
+    /// SLO p99 latency target in µs (0 = SLO accounting off)
+    slo_target_us: AtomicU64,
+    /// completed requests counted against the SLO since the target was set
+    slo_total: AtomicU64,
+    /// of those, requests whose end-to-end latency exceeded the target
+    slo_bad: AtomicU64,
+    /// rolling window of cumulative `(total, bad)` pairs, one per reporter
+    /// tick (bounded at [`SLO_WINDOW_TICKS`]); the window burn rate is
+    /// computed against the oldest retained tick
+    slo_window: Mutex<VecDeque<(u64, u64)>>,
 }
 
 impl Default for Metrics {
@@ -80,6 +109,80 @@ impl Metrics {
             queue_wait_total_us: AtomicU64::new(0),
             service: LogHistogram::new(),
             service_total_us: AtomicU64::new(0),
+            started: Instant::now(),
+            snapshot_seq: AtomicU64::new(0),
+            slo_target_us: AtomicU64::new(0),
+            slo_total: AtomicU64::new(0),
+            slo_bad: AtomicU64::new(0),
+            slo_window: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    /// Seconds since this registry was constructed.
+    pub fn uptime_secs(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Arm SLO accounting against a p99 latency target (0 disarms). Every
+    /// subsequently recorded latency counts toward the error budget.
+    pub fn set_slo_target_us(&self, us: u64) {
+        self.slo_target_us.store(us, Ordering::Relaxed);
+    }
+
+    /// The armed SLO p99 target in µs (0 when SLO accounting is off).
+    pub fn slo_target_us(&self) -> u64 {
+        self.slo_target_us.load(Ordering::Relaxed)
+    }
+
+    /// Requests counted against the SLO and how many violated the target.
+    pub fn slo_counts(&self) -> (u64, u64) {
+        let total = self.slo_total.load(Ordering::Relaxed);
+        (total, self.slo_bad.load(Ordering::Relaxed))
+    }
+
+    /// Lifetime burn rate: `(violations / total) / SLO_EPSILON`. 1.0 means
+    /// the p99 error budget is being consumed exactly as fast as it
+    /// accrues; 0 when the SLO is off or nothing completed yet.
+    pub fn slo_burn_rate(&self) -> f64 {
+        let (total, bad) = self.slo_counts();
+        if total == 0 {
+            0.0
+        } else {
+            (bad as f64 / total as f64) / SLO_EPSILON
+        }
+    }
+
+    /// Burn rate over the rolling window (the last [`SLO_WINDOW_TICKS`]
+    /// reporter ticks): same definition as [`Metrics::slo_burn_rate`] but
+    /// against the deltas since the oldest retained tick, so a recovered
+    /// service stops alerting once the bad minutes age out.
+    pub fn slo_window_burn_rate(&self) -> f64 {
+        let (total, bad) = self.slo_counts();
+        let window = self.slo_window.lock().unwrap();
+        let (t0, b0) = window.front().copied().unwrap_or((0, 0));
+        let dt = total.saturating_sub(t0);
+        let db = bad.saturating_sub(b0);
+        if dt == 0 {
+            0.0
+        } else {
+            (db as f64 / dt as f64) / SLO_EPSILON
+        }
+    }
+
+    /// Fraction of the p99 error budget still unspent, in [0, 1]:
+    /// `max(0, 1 − burn_rate)`.
+    pub fn slo_budget_remaining(&self) -> f64 {
+        (1.0 - self.slo_burn_rate()).max(0.0)
+    }
+
+    /// Advance the rolling SLO window by one tick (the reporter thread
+    /// calls this once per interval).
+    pub fn slo_tick(&self) {
+        let counts = self.slo_counts();
+        let mut window = self.slo_window.lock().unwrap();
+        window.push_back(counts);
+        while window.len() > SLO_WINDOW_TICKS {
+            window.pop_front();
         }
     }
 
@@ -108,6 +211,13 @@ impl Metrics {
     pub fn record_latency_us(&self, us: u64) {
         self.latency.record_us(us);
         self.latency_total_us.fetch_add(us, Ordering::Relaxed);
+        let target = self.slo_target_us();
+        if target > 0 {
+            self.slo_total.fetch_add(1, Ordering::Relaxed);
+            if us > target {
+                self.slo_bad.fetch_add(1, Ordering::Relaxed);
+            }
+        }
     }
 
     pub fn record_queue_wait_us(&self, us: u64) {
@@ -209,7 +319,7 @@ impl Metrics {
     /// same line.
     pub fn summary(&self) -> String {
         format!(
-            "submitted={} completed={} rejected={} errors={} swaps={} batches={} mean_batch={:.2} bucket_width={:.2} p50={}us p95={}us p99={}us p999={}us queue_p50={}us service_p50={}us queue_depth[dense]={} queue_depth[hss]={} in_flight={} resident_bytes[dense]={} resident_bytes[hss]={} pad_overhead={:.1}%",
+            "submitted={} completed={} rejected={} errors={} swaps={} batches={} mean_batch={:.2} bucket_width={:.2} p50={}us p95={}us p99={}us p999={}us queue_p50={}us service_p50={}us queue_depth[dense]={} queue_depth[hss]={} in_flight={} resident_bytes[dense]={} resident_bytes[hss]={} pad_overhead={:.1}% slo_target={}us slo_burn={:.2} slo_window_burn={:.2}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
@@ -230,6 +340,9 @@ impl Metrics {
             self.resident_weight_bytes(Variant::Dense),
             self.resident_weight_bytes(Variant::Hss),
             100.0 * self.padding_overhead(),
+            self.slo_target_us(),
+            self.slo_burn_rate(),
+            self.slo_window_burn_rate(),
         )
     }
 
@@ -256,7 +369,27 @@ impl Metrics {
                 ("hss", num(f(Variant::Hss) as f64)),
             ])
         };
+        let (slo_total, slo_bad) = self.slo_counts();
         obj(vec![
+            // monotone per-registry sequence + wall uptime: successive
+            // snapshots are strictly ordered and counter deltas divide
+            // into rates without the consumer keeping its own clock
+            (
+                "snapshot_seq",
+                num((self.snapshot_seq.fetch_add(1, Ordering::Relaxed) + 1) as f64),
+            ),
+            ("uptime_secs", num(self.uptime_secs())),
+            (
+                "slo",
+                obj(vec![
+                    ("target_us", num(self.slo_target_us() as f64)),
+                    ("total", num(slo_total as f64)),
+                    ("violations", num(slo_bad as f64)),
+                    ("burn_rate", num(self.slo_burn_rate())),
+                    ("window_burn_rate", num(self.slo_window_burn_rate())),
+                    ("budget_remaining", num(self.slo_budget_remaining())),
+                ]),
+            ),
             (
                 "counters",
                 obj(vec![
@@ -437,6 +570,74 @@ mod tests {
         m.record_latency_us(999_999);
         m.record_batch(4);
         assert_eq!(keys(&m.to_json()), keys(&j));
+    }
+
+    /// Satellite: successive `--metrics-json` snapshots must be diffable —
+    /// `snapshot_seq` strictly increases and `uptime_secs` never moves
+    /// backwards, so consumers can order snapshots and compute rates.
+    #[test]
+    fn snapshots_strictly_ordered() {
+        let m = Metrics::new();
+        let mut prev_seq = 0.0;
+        let mut prev_up = -1.0;
+        for _ in 0..5 {
+            let j = m.to_json();
+            let seq = j.get("snapshot_seq").unwrap().as_f64().unwrap();
+            let up = j.get("uptime_secs").unwrap().as_f64().unwrap();
+            assert!(seq > prev_seq, "seq {seq} after {prev_seq}");
+            assert!(up >= prev_up, "uptime {up} after {prev_up}");
+            prev_seq = seq;
+            prev_up = up;
+        }
+    }
+
+    #[test]
+    fn slo_burn_rate_accounting() {
+        let m = Metrics::new();
+        // off by default: latencies don't count against any budget
+        m.record_latency_us(10_000_000);
+        assert_eq!(m.slo_counts(), (0, 0));
+        assert_eq!(m.slo_burn_rate(), 0.0);
+
+        m.set_slo_target_us(1_000);
+        // 100 requests, 2 violations: rate 2% against a 1% budget → burn 2
+        for i in 0..100u64 {
+            m.record_latency_us(if i < 2 { 5_000 } else { 500 });
+        }
+        assert_eq!(m.slo_counts(), (100, 2));
+        assert!((m.slo_burn_rate() - 2.0).abs() < 1e-12);
+        assert_eq!(m.slo_budget_remaining(), 0.0);
+
+        // rolling window: after a tick, only post-tick traffic counts —
+        // a clean stretch drives the window burn to 0 while the lifetime
+        // burn still remembers the bad spell
+        m.slo_tick();
+        for _ in 0..100 {
+            m.record_latency_us(500);
+        }
+        assert_eq!(m.slo_window_burn_rate(), 0.0);
+        assert!(m.slo_burn_rate() > 0.0);
+
+        let j = m.to_json();
+        let slo = j.get("slo").unwrap();
+        assert_eq!(slo.get("target_us").unwrap().as_f64(), Some(1_000.0));
+        assert_eq!(slo.get("violations").unwrap().as_f64(), Some(2.0));
+        assert!(slo.get("burn_rate").unwrap().as_f64().unwrap() > 0.0);
+        let s = m.summary();
+        assert!(s.contains("slo_target=1000us"), "{s}");
+        assert!(s.contains("slo_burn="), "{s}");
+    }
+
+    #[test]
+    fn slo_window_is_bounded() {
+        let m = Metrics::new();
+        m.set_slo_target_us(100);
+        for _ in 0..(SLO_WINDOW_TICKS + 20) {
+            m.record_latency_us(50);
+            m.slo_tick();
+        }
+        assert!(m.slo_window.lock().unwrap().len() <= SLO_WINDOW_TICKS);
+        assert_eq!(m.slo_window_burn_rate(), 0.0);
     }
 
     /// Satellite: 8 threads hammer latency/queue/service/gauges at once;

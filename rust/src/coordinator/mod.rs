@@ -48,6 +48,33 @@
 //! `Metrics::to_json` snapshot file (`hisolo serve --metrics-json <path>
 //! --metrics-interval-secs N`). `HISOLO_LOG=off` silences the reporter's
 //! logging; `HISOLO_TRACE=off` disables the span guards themselves.
+//!
+//! ## Per-request tracing (flight recorder)
+//!
+//! [`Coordinator::submit`] mints a [`TraceId`] per request
+//! ([`ScoreRequest::trace`], echoed on [`ScoreResponse::trace`]), so one
+//! request is followable batcher → bucket → worker → reply. When
+//! recording is on (`hisolo serve --trace-out`), the worker wraps every
+//! scored chunk in a `FlightRecorder::begin_batch`/`end_batch` pair: the
+//! kernel spans that fire while the chunk scores attribute to the batch,
+//! and through it to **all** member trace IDs — the honest cost model of
+//! batched serving. Memory is bounded: events live in fixed-capacity
+//! seqlock rings (oldest overwritten on wrap) plus a slowest-N tail
+//! reserve that survives wraparound; see `crate::obs::recorder` for the
+//! ring layout, capacities, and the Chrome trace-event export schema
+//! consumed by `hisolo trace`.
+//!
+//! ## SLO burn-rate accounting
+//!
+//! `Metrics::set_slo_target_us` arms a p99 error budget: a request
+//! "violates" when its end-to-end latency exceeds the target, the budget
+//! allows [`metrics::SLO_EPSILON`] (1%) violations, and `burn_rate =
+//! violation_rate / SLO_EPSILON`. The reporter thread advances a rolling
+//! window each tick (`Metrics::slo_tick`), so `slo_window_burn_rate`
+//! forgets a bad spell once it ages past [`metrics::SLO_WINDOW_TICKS`]
+//! ticks while the lifetime rate remembers it. Surfaced in the summary
+//! line, the `slo` object of `Metrics::to_json`, and serve's
+//! `slo_burn_check` output.
 
 pub mod batcher;
 pub mod metrics;
@@ -61,5 +88,7 @@ pub use batcher::{
 };
 pub use metrics::Metrics;
 pub use request::{ScoreRequest, ScoreResponse, Variant};
+
+pub use crate::obs::TraceId;
 pub use server::{Coordinator, CoordinatorConfig, SwapTicket};
 pub use worker::{BoxScorer, Scorer, ScorerFactory, SwapRequest};

@@ -1,5 +1,6 @@
 //! Request/response types for the scoring service.
 
+use crate::obs::TraceId;
 use std::sync::mpsc::Sender;
 use std::time::Instant;
 
@@ -47,6 +48,9 @@ impl std::str::FromStr for Variant {
 /// A scoring request: one token window; the response reports its NLL.
 pub struct ScoreRequest {
     pub id: u64,
+    /// End-to-end trace id, minted at submission and propagated through
+    /// batcher → bucket → worker → reply (see `obs::recorder`).
+    pub trace: TraceId,
     pub variant: Variant,
     /// window of seq_len + 1 tokens (inputs + targets)
     pub window: Vec<u32>,
@@ -58,6 +62,9 @@ pub struct ScoreRequest {
 #[derive(Clone, Debug)]
 pub struct ScoreResponse {
     pub id: u64,
+    /// The request's trace id, echoed back so callers can correlate the
+    /// reply with flight-recorder timelines and exported traces.
+    pub trace: TraceId,
     pub variant: Variant,
     /// total NLL over the window (nats) and token count
     pub nll: f64,
@@ -94,6 +101,7 @@ mod tests {
     fn response_ppl() {
         let r = ScoreResponse {
             id: 0,
+            trace: TraceId(1),
             variant: Variant::Dense,
             nll: 2.0 * 10.0_f64.ln(),
             tokens: 2,

@@ -220,6 +220,9 @@ impl Coordinator {
         let (tx, rx) = channel();
         let req = ScoreRequest {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            // mint the end-to-end trace id here: it rides the request
+            // through batcher → bucket → worker and is echoed on the reply
+            trace: crate::obs::TraceId::next(),
             variant,
             window,
             submitted: Instant::now(),
@@ -295,6 +298,9 @@ impl Coordinator {
                 for (variant, batcher) in &lanes {
                     metrics.set_queue_depth(*variant, batcher.len() as u64);
                 }
+                // advance the rolling SLO window once per tick, so the
+                // window burn rate covers the last ~window·interval
+                metrics.slo_tick();
                 crate::log_info!("metrics: {}", metrics.summary());
                 if let Some(path) = &json_path {
                     if let Err(e) = std::fs::write(path, format!("{}\n", metrics.to_json())) {
@@ -430,6 +436,21 @@ mod tests {
         }
         // batching actually happened (mean batch > 1 given burst submit)
         assert!(c.metrics.mean_batch_size() >= 1.0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn trace_ids_minted_unique_and_echoed() {
+        let c = coordinator_with_mock(false);
+        let windows: Vec<Vec<u32>> = (0..6u32)
+            .map(|s| (s..s + 9).map(|v| v % 16).collect())
+            .collect();
+        let resps = c.submit_all(Variant::Dense, &windows).unwrap();
+        // every reply carries its request's trace id; submit order is
+        // response order here, so the minted ids are strictly increasing
+        let traces: Vec<u64> = resps.iter().map(|r| r.trace.0).collect();
+        assert!(traces.iter().all(|&t| t > 0));
+        assert!(traces.windows(2).all(|w| w[0] < w[1]), "{traces:?}");
         c.shutdown();
     }
 

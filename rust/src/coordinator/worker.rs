@@ -13,6 +13,7 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{ScoreRequest, ScoreResponse, Variant};
 use crate::eval::perplexity::window_nll;
 use crate::linalg::Matrix;
+use crate::obs::recorder::{self, RequestEvent};
 use crate::obs::{Span, Stage};
 use crate::util::logging::{log, Level};
 use std::sync::atomic::Ordering;
@@ -57,6 +58,16 @@ pub type ScorerFactory = Box<dyn FnOnce() -> anyhow::Result<BoxScorer> + Send>;
 pub struct SwapRequest {
     pub factory: ScorerFactory,
     pub ack: Sender<Result<(), String>>,
+}
+
+/// Lifecycle split for one reply: `queue` is submit→dequeue, `service` is
+/// dequeue→now, and `latency` is exactly their sum. Every reply path
+/// (success, score error, init-failed drain) reports the same split —
+/// returns `(queue_us, service_us, latency_us)`.
+pub(crate) fn lifecycle_us(submitted: Instant, dequeued: Instant) -> (u64, u64, u64) {
+    let queue_us = dequeued.saturating_duration_since(submitted).as_micros() as u64;
+    let service_us = dequeued.elapsed().as_micros() as u64;
+    (queue_us, service_us, queue_us + service_us)
 }
 
 /// Run the worker loop until the batcher closes (no hot-swap mailbox).
@@ -130,6 +141,13 @@ pub fn run_worker_swappable(
                     .iter()
                     .map(|r| r.window[..r.window.len() - 1].to_vec())
                     .collect();
+                // flight recorder: every kernel span fired on this thread
+                // while the chunk scores (inside `scorer.score` and
+                // `window_nll`) attributes to this batch, and thereby to
+                // every member trace id
+                let rec = recorder::recorder();
+                let flight = rec.begin_batch();
+                let mut completions: Vec<RequestEvent> = Vec::new();
                 match scorer.score(&inputs) {
                     Ok(logits) => {
                         // gauge only chunks that actually scored, so the
@@ -140,19 +158,31 @@ pub fn run_worker_swappable(
                         metrics.record_bucket(chunk.len(), actual, max_t * chunk.len() as u64);
                         for (req, lg) in chunk.iter().zip(&logits) {
                             let (nll, tokens) = window_nll(lg, &req.window);
-                            let queue_d = dequeued.saturating_duration_since(req.submitted);
-                            let queue_us = queue_d.as_micros() as u64;
-                            let service_us = dequeued.elapsed().as_micros() as u64;
-                            let latency_us = queue_us + service_us;
-                            crate::obs::registry().record(Stage::QueueWait, queue_d);
+                            let (queue_us, service_us, latency_us) =
+                                lifecycle_us(req.submitted, dequeued);
+                            crate::obs::registry()
+                                .record(Stage::QueueWait, Duration::from_micros(queue_us));
                             metrics.record_queue_wait_us(queue_us);
                             metrics.record_service_us(service_us);
                             metrics.record_latency_us(latency_us);
                             metrics.completed.fetch_add(1, Ordering::Relaxed);
                             metrics.in_flight.fetch_sub(1, Ordering::Relaxed);
+                            if flight.active() {
+                                completions.push(RequestEvent {
+                                    trace: req.trace,
+                                    batch: 0, // stamped by end_batch
+                                    submit_us: rec.offset_us(req.submitted),
+                                    queue_us,
+                                    service_us,
+                                    window_len: req.window.len() as u32,
+                                    variant: req.variant.index() as u8,
+                                    error: false,
+                                });
+                            }
                             let _route_span = Span::enter(Stage::ReplyRoute);
                             let _ = req.reply.send(ScoreResponse {
                                 id: req.id,
+                                trace: req.trace,
                                 variant: req.variant,
                                 nll,
                                 tokens,
@@ -167,21 +197,35 @@ pub fn run_worker_swappable(
                         metrics.errors.fetch_add(chunk.len() as u64, Ordering::Relaxed);
                         for req in chunk {
                             metrics.in_flight.fetch_sub(1, Ordering::Relaxed);
+                            let (queue_us, service_us, latency_us) =
+                                lifecycle_us(req.submitted, dequeued);
+                            if flight.active() {
+                                completions.push(RequestEvent {
+                                    trace: req.trace,
+                                    batch: 0,
+                                    submit_us: rec.offset_us(req.submitted),
+                                    queue_us,
+                                    service_us,
+                                    window_len: req.window.len() as u32,
+                                    variant: req.variant.index() as u8,
+                                    error: true,
+                                });
+                            }
                             let _ = req.reply.send(ScoreResponse {
                                 id: req.id,
+                                trace: req.trace,
                                 variant: req.variant,
                                 nll: f64::NAN,
                                 tokens: 0,
-                                latency_us: req.submitted.elapsed().as_micros() as u64,
-                                queue_us: dequeued
-                                    .saturating_duration_since(req.submitted)
-                                    .as_micros() as u64,
+                                latency_us,
+                                queue_us,
                                 batch_size: size,
                                 error: Some(format!("{e:#}")),
                             });
                         }
                     }
                 }
+                rec.end_batch(flight, &completions);
             }
         }
     }
@@ -218,15 +262,19 @@ pub fn run_worker_init_failed(
             BatchPoll::Closed => return,
             BatchPoll::Idle => continue,
             BatchPoll::Batch(batch) => {
+                let dequeued = Instant::now();
                 for req in batch {
                     metrics.errors.fetch_add(1, Ordering::Relaxed);
+                    let (queue_us, _service_us, latency_us) =
+                        lifecycle_us(req.submitted, dequeued);
                     let _ = req.reply.send(ScoreResponse {
                         id: req.id,
+                        trace: req.trace,
                         variant: req.variant,
                         nll: f64::NAN,
                         tokens: 0,
-                        latency_us: 0,
-                        queue_us: 0,
+                        latency_us,
+                        queue_us,
                         batch_size: 0,
                         error: Some(format!("worker init failed: {init_err}")),
                     });
@@ -358,6 +406,8 @@ pub(crate) mod tests {
         (
             ScoreRequest {
                 id,
+                // deterministic per-test trace so replies can assert the echo
+                trace: crate::obs::TraceId(id + 1000),
                 variant: Variant::Dense,
                 window,
                 submitted: Instant::now(),
@@ -397,6 +447,7 @@ pub(crate) mod tests {
         });
         let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
         assert_eq!(resp.id, 7);
+        assert_eq!(resp.trace, crate::obs::TraceId(1007), "trace echoed on reply");
         assert!(resp.error.is_none());
         assert!(resp.nll < 1e-3, "nll {}", resp.nll);
         assert_eq!(resp.tokens, 8);
@@ -434,9 +485,26 @@ pub(crate) mod tests {
         });
         let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
         assert!(resp.error.is_some());
+        // satellite: error replies carry the same lifecycle split as
+        // successes — queue + service sums to latency, never hardcoded 0
+        assert_eq!(resp.trace, crate::obs::TraceId(1001));
+        assert!(resp.queue_us <= resp.latency_us, "{resp:?}");
         batcher.close();
         h.join().unwrap();
         assert_eq!(metrics.errors.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn lifecycle_helper_sums_exactly_on_every_path() {
+        let submitted = Instant::now() - Duration::from_millis(5);
+        let dequeued = Instant::now();
+        let (q, s, l) = lifecycle_us(submitted, dequeued);
+        assert_eq!(q + s, l);
+        assert!(q >= 4_000, "queue {q}us should reflect the 5ms wait");
+        // submit after dequeue (clock skew shape): queue clamps to 0
+        let (q2, s2, l2) = lifecycle_us(Instant::now() + Duration::from_millis(5), dequeued);
+        assert_eq!(q2, 0);
+        assert_eq!(q2 + s2, l2);
     }
 
     #[test]

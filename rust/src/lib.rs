@@ -111,6 +111,29 @@
 //! `HISOLO_LOG=off` / `HISOLO_TRACE=off` silence the reporter and the span
 //! guards respectively. See [`obs`] for the stage taxonomy and the
 //! span-guard rules for hot loops.
+//!
+//! Aggregates answer "where do microseconds go on average"; the
+//! **per-request flight recorder** (`obs::recorder`) answers "why was
+//! *this* request slow". Every request is minted a `TraceId` at
+//! `Coordinator::submit` and carries it to the reply; the worker opens a
+//! batch context per scored chunk so each kernel span attributes to every
+//! trace the batch served. Events land in bounded lock-light rings
+//! (~3 MiB at the default capacities — memory never grows with uptime;
+//! old events are overwritten), while **tail sampling** keeps the
+//! slowest-N requests *with a copy of their batch's spans* across
+//! wraparound. `hisolo serve --trace-out t.json` enables recording and
+//! writes a Chrome trace-event / Perfetto JSON export; `hisolo trace
+//! t.json` prints per-trace critical paths offline. `HISOLO_TRACE=off`
+//! also strips kernel spans from traces (span guards are inert), leaving
+//! request lifecycles only.
+//!
+//! **SLO burn rate**: `hisolo serve --slo-p99-us N` arms an error budget
+//! in `Metrics` — 1% of requests may exceed the target p99
+//! (`SLO_EPSILON`); `burn_rate = violation_rate / 0.01`, so burn 1.0
+//! consumes the budget exactly as fast as it accrues. The lifetime rate,
+//! a rolling-window rate (advanced once per reporter tick), and the
+//! remaining budget surface in `Metrics::summary`, `Metrics::to_json`
+//! (`slo` object), and serve's `slo_burn_check` line.
 
 pub mod compress;
 pub mod coordinator;

@@ -67,6 +67,16 @@ COMMANDS:
       sampled + one-line summary logged; silence with HISOLO_LOG=off)
       [--json traj.jsonl]  (append the serve trajectory record: latency
       p50/p99/p999, queue/service split, per-stage span breakdown)
+      [--trace-out trace.json]  (per-request flight recorder: write a
+      Chrome trace-event / Perfetto JSON timeline with trace IDs,
+      per-batch stage spans, and tail-sampled slow requests)
+      [--slo-p99-us N]  (SLO burn-rate accounting against a p99 latency
+      target: prints a slo_burn_check line, fills the metrics `slo`
+      object, and the reporter tracks a rolling-window burn rate)
+  trace <file>                  analyze a --trace-out export offline:
+                                per-trace critical paths for the slowest
+                                requests and a per-bucket stage breakdown
+      [--top 5]  (how many slow traces to expand)
 
 Artifacts default to ./artifacts (override with --artifacts or
 HISOLO_ARTIFACTS). Build them with `make artifacts`.";
@@ -85,6 +95,7 @@ fn main() {
         "save" => cmd_save(&args),
         "finetune" => cmd_finetune(&args),
         "serve" => cmd_serve(&args),
+        "trace" => cmd_trace(&args),
         other => {
             eprintln!("unknown command '{other}'\n{USAGE}");
             std::process::exit(2);
@@ -514,6 +525,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
         bail!("--synthetic requires --native (PJRT graphs are compiled against trained artifacts)");
     }
 
+    // per-request flight recorder: enabled only when a trace is requested,
+    // so default serving pays one thread-local check per span
+    let trace_out = args.get_path("trace-out");
+    if trace_out.is_some() {
+        hisolo::obs::recorder::recorder().set_enabled(true);
+        if !hisolo::obs::registry().enabled() {
+            eprintln!(
+                "WARN: HISOLO_TRACE=off — the trace will contain request lifecycles \
+                 but no kernel stage spans"
+            );
+        }
+    }
+
     // model + scoring stream: trained artifacts by default, or
     // (--synthetic [--tiny]) a random base model over a synthetic token
     // stream so smoke runs need no artifacts on disk. The native base
@@ -574,6 +598,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         },
     };
     let mut coord = Coordinator::new(coordinator_cfg);
+    // arm SLO accounting before any request completes, so every latency
+    // counts against the error budget
+    let slo_target = args.get_usize("slo-p99-us", 0) as u64;
+    if slo_target > 0 {
+        coord.metrics.set_slo_target_us(slo_target);
+    }
     let variants: Vec<Variant> = match variant_sel.as_str() {
         "both" => vec![Variant::Dense, Variant::Hss],
         v => vec![v.parse().map_err(anyhow::Error::msg)?],
@@ -725,6 +755,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
         if decomposed { "PASS" } else { "FAIL" }
     );
 
+    // SLO burn rate: violation rate over the 1% p99 error budget. Burn
+    // above 1.0 means the budget is being consumed faster than it accrues
+    // — an operational signal, not a smoke failure, so no bail here.
+    if slo_target > 0 {
+        let (total, bad) = coord.metrics.slo_counts();
+        let burn = coord.metrics.slo_burn_rate();
+        println!(
+            "slo_burn_check: target_p99={slo_target}us total={total} violations={bad} \
+             burn_rate={burn:.3} budget_remaining={:.3} {}",
+            coord.metrics.slo_budget_remaining(),
+            if burn <= 1.0 { "PASS" } else { "FAIL" }
+        );
+    }
+
     // final snapshot (the reporter may not have fired since the last
     // completions) + one-line JSON trajectory record for the benches file
     if let Some(path) = &metrics_json {
@@ -755,10 +799,193 @@ fn cmd_serve(args: &Args) -> Result<()> {
         writeln!(f, "{record}")?;
         println!("appended serve trajectory line to {}", path.display());
     }
+    if let Some(path) = &trace_out {
+        let export = hisolo::obs::recorder::recorder().export();
+        std::fs::write(path, format!("{}\n", export.json))
+            .with_context(|| format!("write trace {}", path.display()))?;
+        println!(
+            "wrote trace: {} requests ({} tail-sampled), {} stage spans, {} dropped -> {} \
+             (load in Perfetto / chrome://tracing, or run `hisolo trace {}`)",
+            export.requests,
+            export.tail_sampled,
+            export.span_events,
+            export.dropped_spans,
+            path.display(),
+            path.display()
+        );
+    }
     coord.shutdown();
     if !decomposed {
         bail!("latency decomposition check failed (ratio {ratio:.3})");
     }
+    Ok(())
+}
+
+/// Stable display name for a variant index recorded in a trace export
+/// (the export stores `Variant::index()` so `obs` stays decoupled from
+/// the coordinator types).
+fn variant_label(idx: usize) -> String {
+    [Variant::Dense, Variant::Hss]
+        .iter()
+        .find(|v| v.index() == idx)
+        .map(|v| v.name().to_string())
+        .unwrap_or_else(|| format!("variant{idx}"))
+}
+
+/// `trace` — offline analysis of a Chrome trace-event file written by
+/// `serve --trace-out`: joins request events to the stage spans of the
+/// batch that served them (via `args.batch`), prints the critical path of
+/// the slowest traces, and aggregates a per-bucket stage breakdown keyed
+/// by next-power-of-two window length (the serve-time bucket edges are
+/// not recorded in the export).
+fn cmd_trace(args: &Args) -> Result<()> {
+    use std::collections::{BTreeMap, BTreeSet};
+
+    let path = args
+        .positional()
+        .get(1)
+        .context("usage: hisolo trace <trace.json> [--top 5]")?;
+    let text = std::fs::read_to_string(path).with_context(|| format!("read {path}"))?;
+    let j = hisolo::util::json::Json::parse(text.trim())
+        .map_err(|e| anyhow::anyhow!("parse {path}: {e}"))?;
+    let events = j
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .context("no traceEvents array — not a trace-event export?")?;
+
+    struct Req {
+        trace: u64,
+        batch: u64,
+        dur: f64,
+        queue_us: f64,
+        service_us: f64,
+        len: u64,
+        variant: String,
+        tail: bool,
+        error: bool,
+    }
+    let mut reqs: Vec<Req> = Vec::new();
+    // batch -> stage name -> (span count, total µs)
+    let mut spans: BTreeMap<u64, BTreeMap<String, (u64, f64)>> = BTreeMap::new();
+    for ev in events {
+        let name = ev.get("name").and_then(|n| n.as_str()).unwrap_or("");
+        let cat = ev.get("cat").and_then(|c| c.as_str()).unwrap_or("");
+        let top = |k: &str| ev.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+        let argf = |k: &str| {
+            ev.get("args")
+                .and_then(|a| a.get(k))
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0)
+        };
+        if name == "request" {
+            let argb = |k: &str| {
+                ev.get("args")
+                    .and_then(|a| a.get(k))
+                    .and_then(|v| v.as_bool())
+                    .unwrap_or(false)
+            };
+            reqs.push(Req {
+                trace: argf("trace") as u64,
+                batch: argf("batch") as u64,
+                dur: top("dur"),
+                queue_us: argf("queue_us"),
+                service_us: argf("service_us"),
+                len: argf("len") as u64,
+                variant: variant_label(argf("variant") as usize),
+                tail: argb("tail_sampled"),
+                error: argb("error"),
+            });
+        } else if cat == "stage" {
+            let slot = spans
+                .entry(argf("batch") as u64)
+                .or_default()
+                .entry(name.to_string())
+                .or_insert((0, 0.0));
+            slot.0 += 1;
+            slot.1 += top("dur");
+        }
+    }
+    if reqs.is_empty() {
+        bail!("no request events in {path}");
+    }
+
+    reqs.sort_by(|a, b| b.dur.partial_cmp(&a.dur).unwrap_or(std::cmp::Ordering::Equal));
+    let top_n = args.get_usize("top", 5).min(reqs.len());
+    println!(
+        "{}: {} requests ({} tail-sampled), {} batches with stage spans",
+        path,
+        reqs.len(),
+        reqs.iter().filter(|r| r.tail).count(),
+        spans.len()
+    );
+    println!("\nslowest {top_n} traces (critical path: queue wait, then the serving batch's stages by time — stages nest, so shares can overlap):");
+    for r in &reqs[..top_n] {
+        let mut path_parts = vec![format!("queue_wait {:.0}us", r.queue_us)];
+        match spans.get(&r.batch) {
+            Some(stages) => {
+                let mut by_time: Vec<(&String, &(u64, f64))> = stages.iter().collect();
+                by_time.sort_by(|a, b| {
+                    b.1 .1.partial_cmp(&a.1 .1).unwrap_or(std::cmp::Ordering::Equal)
+                });
+                for (stage, (count, total)) in by_time.iter().take(4) {
+                    path_parts.push(format!("{stage} {total:.0}us x{count}"));
+                }
+            }
+            None => path_parts.push(format!(
+                "service {:.0}us (batch spans wrapped out of the ring)",
+                r.service_us
+            )),
+        }
+        println!(
+            "  trace {} [{} len={} batch={}{}{}] {:.0}us: {}",
+            r.trace,
+            r.variant,
+            r.len,
+            r.batch,
+            if r.tail { " tail-sampled" } else { "" },
+            if r.error { " ERROR" } else { "" },
+            r.dur,
+            path_parts.join(" -> ")
+        );
+    }
+
+    // per-bucket breakdown: a batch is length-homogeneous, so its spans
+    // count once per bucket (via the set), never once per member request
+    let mut buckets: BTreeMap<u64, (u64, f64, BTreeSet<u64>)> = BTreeMap::new();
+    for r in &reqs {
+        let edge = r.len.max(1).next_power_of_two();
+        let b = buckets.entry(edge).or_default();
+        b.0 += 1;
+        b.1 += r.dur;
+        b.2.insert(r.batch);
+    }
+    println!("\nper-bucket stage breakdown (bucketed by next-pow2 window length):");
+    let mut t = Table::new(&["bucket<=", "requests", "mean e2e", "dominant stages (total us)"]);
+    for (edge, (n, total_dur, batches)) in &buckets {
+        let mut stage_tot: BTreeMap<&str, f64> = BTreeMap::new();
+        for b in batches {
+            if let Some(stages) = spans.get(b) {
+                for (stage, (_c, tot)) in stages {
+                    *stage_tot.entry(stage.as_str()).or_default() += *tot;
+                }
+            }
+        }
+        let mut ranked: Vec<(&str, f64)> = stage_tot.into_iter().collect();
+        ranked.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal));
+        let desc = ranked
+            .iter()
+            .take(3)
+            .map(|(stage, us)| format!("{stage}={us:.0}"))
+            .collect::<Vec<_>>()
+            .join(" ");
+        t.row(&[
+            edge.to_string(),
+            n.to_string(),
+            format!("{:.0}us", total_dur / *n as f64),
+            if desc.is_empty() { "(no spans)".to_string() } else { desc },
+        ]);
+    }
+    t.print();
     Ok(())
 }
 

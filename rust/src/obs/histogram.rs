@@ -122,6 +122,47 @@ mod tests {
     }
 
     #[test]
+    fn empty_percentile_is_zero_at_every_p() {
+        let h = LogHistogram::new();
+        for p in [0.0, 0.5, 0.99, 0.999, 1.0] {
+            assert_eq!(h.percentile_us(p), 0, "p={p}");
+        }
+        assert_eq!(percentile_from_counts(&[0u64; BUCKETS], 0.5), 0);
+    }
+
+    #[test]
+    fn single_sample_dominates_every_percentile() {
+        let h = LogHistogram::new();
+        h.record_us(300); // bucket 8: [256, 512)
+        assert_eq!(h.count(), 1);
+        // With one sample, every percentile (including p=0, which clamps
+        // `want` up to 1) lands on that sample's bucket upper bound.
+        for p in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(h.percentile_us(p), 512, "p={p}");
+        }
+    }
+
+    #[test]
+    fn top_bucket_saturates_beyond_range() {
+        let h = LogHistogram::new();
+        // All of these exceed the 2^39 us bucket-39 lower bound — the log2
+        // range is exhausted, so they must pile into the last bucket rather
+        // than index out of bounds.
+        for us in [1u64 << 39, 1u64 << 45, u64::MAX] {
+            assert_eq!(bucket_of(us), BUCKETS - 1, "us={us}");
+            h.record_us(us);
+        }
+        let counts = h.counts();
+        assert_eq!(counts[BUCKETS - 1], 3);
+        assert_eq!(counts[..BUCKETS - 1].iter().sum::<u64>(), 0);
+        // Saturated percentile reports the top bucket's upper bound, 2^40.
+        assert_eq!(h.percentile_us(0.99), 1u64 << 40);
+        // The final fallback return (acc never reaching `want` is impossible,
+        // but the explicit tail) agrees with the same bound.
+        assert_eq!(bucket_upper_us(BUCKETS - 1), 1u64 << 40);
+    }
+
+    #[test]
     fn reset_clears() {
         let h = LogHistogram::new();
         h.record_us(7);

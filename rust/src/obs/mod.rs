@@ -46,8 +46,18 @@
 //! compiled out unless the zero-dependency `obs-flops` cargo feature is
 //! enabled; with it, kernels call [`count_flops`] and the counts attribute
 //! to the innermost active span on the calling thread.
+//!
+//! On top of the aggregate registry, the [`recorder`] submodule adds a
+//! *per-request* flight recorder: trace IDs minted at submission, span
+//! timelines captured per scored batch into bounded lock-light rings,
+//! tail sampling of the slowest traces, and Chrome/Perfetto trace-event
+//! export (`hisolo serve --trace-out` / `hisolo trace`). See its module
+//! docs for the memory bound and export schema.
 
 pub mod histogram;
+pub mod recorder;
+
+pub use recorder::{FlightRecorder, RequestEvent, SpanEvent, TraceId};
 
 use crate::util::json::{num, obj, Json};
 use crate::util::timer::{fmt_ns, Table};
@@ -374,7 +384,11 @@ impl Drop for Span {
     #[inline]
     fn drop(&mut self) {
         if let Some(t0) = self.start {
-            registry().record_ns(self.stage, t0.elapsed().as_nanos() as u64);
+            let dur = t0.elapsed();
+            registry().record_ns(self.stage, dur.as_nanos() as u64);
+            // per-request flight recording: one thread-local check when no
+            // batch context is open on this thread (see `recorder`)
+            recorder::note_span(self.stage, t0, dur);
             #[cfg(feature = "obs-flops")]
             STAGE_STACK.with(|s| {
                 s.borrow_mut().pop();

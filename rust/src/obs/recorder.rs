@@ -1,0 +1,837 @@
+//! Per-request flight recorder: trace IDs end-to-end, lock-light span
+//! rings, tail sampling, and Chrome/Perfetto trace-event export.
+//!
+//! The stage registry ([`super::StageRegistry`]) aggregates — it can say
+//! `hss_walk` holds 60% of served microseconds, but not *why this specific
+//! p99 request was slow*. The flight recorder answers that question:
+//!
+//! - every [`crate::coordinator::ScoreRequest`] is minted a process-unique,
+//!   monotone [`TraceId`] at submission, carried through batcher → bucket →
+//!   worker → reply;
+//! - the worker opens a **batch context** ([`FlightRecorder::begin_batch`])
+//!   around each scored chunk: every [`super::Span`] guard that fires on
+//!   that thread while the context is open (one `hss_walk`, `attention`,
+//!   `mlp`, … per kernel call) is captured as a timestamped event tagged
+//!   with the batch id — a batch span thereby attributes to *all* trace IDs
+//!   the batch served, which is the truthful cost model of batched serving;
+//! - at reply time each request contributes a [`RequestEvent`] (submit
+//!   offset, queue/service split, window length, variant, error flag)
+//!   keyed by both its trace and its batch, so offline tools can join
+//!   requests to the kernel work that served them.
+//!
+//! # Memory bound and wraparound
+//!
+//! Events land in fixed-capacity rings of atomic words (default
+//! [`SPAN_RING_CAP`] span slots + [`REQ_RING_CAP`] request slots, ~3 MiB
+//! total): writers reserve a slot with one `fetch_add` and publish it
+//! seqlock-style (odd seq while writing, even when done), so recording
+//! never takes a lock and never allocates on the hot path. When the ring
+//! wraps, the oldest events are overwritten — except that **tail
+//! sampling** keeps a separate bounded reserve ([`TAIL_TRACES`] traces) of
+//! the slowest requests seen so far *with a copy of their batch's spans*,
+//! so the export always contains the timeline of the slowest-percentile
+//! traces even after hours of wraparound. Per-batch span capture is
+//! bounded by [`MAX_BATCH_SPANS`]; overflow is counted, not recorded.
+//!
+//! # Export schema
+//!
+//! [`FlightRecorder::export`] emits Chrome trace-event JSON (loadable in
+//! Perfetto / `chrome://tracing`): `{"traceEvents": [...]}` where every
+//! event is a `"ph":"X"` complete event with `ts`/`dur` in microseconds
+//! since the recorder epoch. Requests render as two events on `pid` 1
+//! (one track per trace id): `request` spanning submit → reply and
+//! `queue_wait` spanning its queue share, with
+//! `args: {trace, batch, len, variant, queue_us, service_us,
+//! tail_sampled, error}`. Stage spans render on `pid` 2, one track per
+//! worker thread, with `args: {batch}` as the join key. `hisolo trace
+//! <file>` consumes the same schema offline to print per-trace critical
+//! paths and per-bucket stage breakdowns.
+//!
+//! Recording is off by default (zero cost beyond one thread-local check
+//! per span); `hisolo serve --trace-out <path>` switches it on. With
+//! `HISOLO_TRACE=off` the span guards themselves are inert, so a trace
+//! taken that way contains request lifecycles but no kernel spans.
+
+use super::Stage;
+use crate::util::json::{num, obj, s, Json};
+use std::cell::RefCell;
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+/// Span-ring capacity (slots) of the process-wide recorder.
+pub const SPAN_RING_CAP: usize = 65_536;
+/// Request-ring capacity (slots) of the process-wide recorder.
+pub const REQ_RING_CAP: usize = 16_384;
+/// Max spans captured per batch context; overflow is counted as dropped.
+pub const MAX_BATCH_SPANS: usize = 4_096;
+/// Slow traces retained by tail sampling (top-N by end-to-end latency).
+pub const TAIL_TRACES: usize = 32;
+
+/// Process-unique, monotone per-request trace identifier. Minted once at
+/// `Coordinator::submit` and propagated on both the request and the reply,
+/// so every hop of a request's life can be joined offline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TraceId(pub u64);
+
+static NEXT_TRACE: AtomicU64 = AtomicU64::new(0);
+
+impl TraceId {
+    /// Mint the next trace id: strictly monotone and unique process-wide
+    /// (ids from concurrent minters never collide, and each thread's
+    /// sequence of minted ids is increasing).
+    pub fn next() -> TraceId {
+        TraceId(NEXT_TRACE.fetch_add(1, Ordering::Relaxed) + 1)
+    }
+}
+
+/// One kernel-stage span captured inside a batch context.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpanEvent {
+    /// Batch (scored chunk) this span served — the join key to requests.
+    pub batch: u64,
+    pub stage: Stage,
+    /// Worker-thread number (small dense id, for the export's `tid`).
+    pub tid: u64,
+    /// Start offset from the recorder epoch, µs.
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+/// One request's completed lifecycle, recorded at reply time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RequestEvent {
+    pub trace: TraceId,
+    /// Batch that scored it (0 until [`FlightRecorder::end_batch`] stamps it).
+    pub batch: u64,
+    /// Submit-instant offset from the recorder epoch, µs.
+    pub submit_us: u64,
+    pub queue_us: u64,
+    pub service_us: u64,
+    /// Window length in tokens (the offline bucket key).
+    pub window_len: u32,
+    /// `Variant::index()` of the serving lane.
+    pub variant: u8,
+    pub error: bool,
+}
+
+impl RequestEvent {
+    /// End-to-end latency: the worker computes it as exactly queue + service.
+    pub fn latency_us(&self) -> u64 {
+        self.queue_us + self.service_us
+    }
+}
+
+// --- lock-light ring ------------------------------------------------------
+
+/// Seqlock slot: `seq` is 0 when never written, `2·idx+1` while record
+/// `idx` is being written, `2·idx+2` once it is published. Readers accept
+/// a slot only when they observe the same even, nonzero seq before and
+/// after reading the payload words — a torn read (writer lapping the
+/// reader) is detected and skipped, never returned.
+struct Slot<const W: usize> {
+    seq: AtomicU64,
+    words: [AtomicU64; W],
+}
+
+struct AtomicRing<const W: usize> {
+    slots: Vec<Slot<W>>,
+    /// Total records ever pushed (slot = head % capacity).
+    head: AtomicU64,
+}
+
+impl<const W: usize> AtomicRing<W> {
+    fn new(cap: usize) -> AtomicRing<W> {
+        AtomicRing {
+            slots: (0..cap.max(1))
+                .map(|_| Slot {
+                    seq: AtomicU64::new(0),
+                    words: std::array::from_fn(|_| AtomicU64::new(0)),
+                })
+                .collect(),
+            head: AtomicU64::new(0),
+        }
+    }
+
+    fn push(&self, words: [u64; W]) {
+        let idx = self.head.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(idx % self.slots.len() as u64) as usize];
+        slot.seq.store(2 * idx + 1, Ordering::Release);
+        for (w, v) in slot.words.iter().zip(words) {
+            w.store(v, Ordering::Relaxed);
+        }
+        slot.seq.store(2 * idx + 2, Ordering::Release);
+    }
+
+    /// Total records ever pushed (≥ what the ring still holds).
+    fn pushed(&self) -> u64 {
+        self.head.load(Ordering::Relaxed)
+    }
+
+    /// Consistent snapshot of the surviving records, oldest first.
+    fn drain(&self) -> Vec<[u64; W]> {
+        let mut out: Vec<(u64, [u64; W])> = Vec::new();
+        for slot in &self.slots {
+            let s1 = slot.seq.load(Ordering::Acquire);
+            if s1 == 0 || s1 % 2 == 1 {
+                continue; // never written, or mid-write
+            }
+            let words = std::array::from_fn(|i| slot.words[i].load(Ordering::Relaxed));
+            let s2 = slot.seq.load(Ordering::Acquire);
+            if s1 != s2 {
+                continue; // torn by a lapping writer
+            }
+            out.push(((s1 - 2) / 2, words));
+        }
+        out.sort_unstable_by_key(|(idx, _)| *idx);
+        out.into_iter().map(|(_, w)| w).collect()
+    }
+
+    fn reset(&self) {
+        for slot in &self.slots {
+            slot.seq.store(0, Ordering::Relaxed);
+        }
+        self.head.store(0, Ordering::Relaxed);
+    }
+}
+
+// --- batch context --------------------------------------------------------
+
+struct BatchCtx {
+    batch: u64,
+    tid: u64,
+    epoch: Instant,
+    spans: Vec<SpanEvent>,
+    dropped: u64,
+}
+
+thread_local! {
+    static CTX: RefCell<Option<BatchCtx>> = const { RefCell::new(None) };
+    static WORKER_TID: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+}
+
+static NEXT_TID: AtomicU64 = AtomicU64::new(0);
+
+fn worker_tid() -> u64 {
+    WORKER_TID.with(|t| {
+        if t.get() == 0 {
+            t.set(NEXT_TID.fetch_add(1, Ordering::Relaxed) + 1);
+        }
+        t.get()
+    })
+}
+
+/// Capture one finished span into the thread's open batch context, if any.
+/// Called from [`super::Span`]'s drop; one thread-local check when no
+/// context is open, so idle cost is independent of recorder state.
+#[inline]
+pub(crate) fn note_span(stage: Stage, start: Instant, dur: Duration) {
+    CTX.with(|c| {
+        if let Some(ctx) = c.borrow_mut().as_mut() {
+            if ctx.spans.len() >= MAX_BATCH_SPANS {
+                ctx.dropped += 1;
+                return;
+            }
+            ctx.spans.push(SpanEvent {
+                batch: ctx.batch,
+                stage,
+                tid: ctx.tid,
+                start_us: start
+                    .checked_duration_since(ctx.epoch)
+                    .unwrap_or_default()
+                    .as_micros() as u64,
+                dur_us: dur.as_micros() as u64,
+            });
+        }
+    });
+}
+
+/// Open-batch handle returned by [`FlightRecorder::begin_batch`]. Pass it
+/// back to [`FlightRecorder::end_batch`] with the batch's request events;
+/// if the batch is abandoned (panic, early return) the drop impl clears
+/// the thread-local context so later batches don't inherit stale spans.
+pub struct BatchGuard {
+    batch: u64,
+    active: bool,
+}
+
+impl BatchGuard {
+    /// Whether this batch is actually recording (false when the recorder
+    /// is disabled — callers can skip building [`RequestEvent`]s).
+    pub fn active(&self) -> bool {
+        self.active
+    }
+}
+
+impl Drop for BatchGuard {
+    fn drop(&mut self) {
+        if self.active {
+            CTX.with(|c| *c.borrow_mut() = None);
+        }
+    }
+}
+
+// --- tail sampling --------------------------------------------------------
+
+#[derive(Clone)]
+struct SlowTrace {
+    req: RequestEvent,
+    /// The serving batch's spans, shared across slow members of one batch.
+    spans: Arc<Vec<SpanEvent>>,
+}
+
+// --- the recorder ---------------------------------------------------------
+
+/// The flight recorder: see the module docs for the full story. One
+/// process-wide instance lives behind [`recorder`]; tests build their own
+/// with [`FlightRecorder::with_caps`] for exact assertions.
+pub struct FlightRecorder {
+    enabled: AtomicBool,
+    epoch: Instant,
+    next_batch: AtomicU64,
+    spans: AtomicRing<4>,
+    reqs: AtomicRing<6>,
+    tail: Mutex<Vec<SlowTrace>>,
+    tail_cap: usize,
+    dropped_spans: AtomicU64,
+}
+
+impl FlightRecorder {
+    pub fn new() -> FlightRecorder {
+        FlightRecorder::with_caps(SPAN_RING_CAP, REQ_RING_CAP, TAIL_TRACES)
+    }
+
+    /// Recorder with explicit ring / tail capacities (tests exercise
+    /// wraparound with tiny rings).
+    pub fn with_caps(span_cap: usize, req_cap: usize, tail_cap: usize) -> FlightRecorder {
+        FlightRecorder {
+            enabled: AtomicBool::new(false),
+            epoch: Instant::now(),
+            next_batch: AtomicU64::new(0),
+            spans: AtomicRing::new(span_cap),
+            reqs: AtomicRing::new(req_cap),
+            tail: Mutex::new(Vec::new()),
+            tail_cap,
+            dropped_spans: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Switch recording on/off. Off (the default) makes [`begin_batch`]
+    /// return an inert guard, so the serving path's only recording cost is
+    /// one relaxed load per batch plus one thread-local check per span.
+    ///
+    /// [`begin_batch`]: FlightRecorder::begin_batch
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Microsecond offset of `t` from the recorder epoch (0 if earlier).
+    pub fn offset_us(&self, t: Instant) -> u64 {
+        t.checked_duration_since(self.epoch)
+            .unwrap_or_default()
+            .as_micros() as u64
+    }
+
+    /// Open a batch context on the calling thread: until the matching
+    /// [`FlightRecorder::end_batch`], every span fired on this thread is
+    /// captured and attributed to this batch.
+    pub fn begin_batch(&self) -> BatchGuard {
+        if !self.enabled() {
+            return BatchGuard { batch: 0, active: false };
+        }
+        let batch = self.next_batch.fetch_add(1, Ordering::Relaxed) + 1;
+        CTX.with(|c| {
+            *c.borrow_mut() = Some(BatchCtx {
+                batch,
+                tid: worker_tid(),
+                epoch: self.epoch,
+                spans: Vec::new(),
+                dropped: 0,
+            })
+        });
+        BatchGuard { batch, active: true }
+    }
+
+    /// Close a batch context: flush its captured spans into the span ring,
+    /// record each member request (its `batch` field is stamped here), and
+    /// offer every member to the tail reserve — the slowest
+    /// [`TAIL_TRACES`]-by-latency requests keep a copy of the batch's
+    /// spans that outlives ring wraparound.
+    pub fn end_batch(&self, mut guard: BatchGuard, completions: &[RequestEvent]) {
+        if !guard.active {
+            return;
+        }
+        guard.active = false;
+        let ctx = match CTX.with(|c| c.borrow_mut().take()) {
+            Some(ctx) if ctx.batch == guard.batch => ctx,
+            _ => return, // nested/foreign context; nothing safe to flush
+        };
+        for ev in &ctx.spans {
+            let packed = ev.stage.index() as u64 | (ev.tid << 8);
+            self.spans.push([ev.batch, packed, ev.start_us, ev.dur_us]);
+        }
+        if ctx.dropped > 0 {
+            self.dropped_spans.fetch_add(ctx.dropped, Ordering::Relaxed);
+        }
+        let shared: Arc<Vec<SpanEvent>> = Arc::new(ctx.spans);
+        let mut tail = self.tail.lock().unwrap();
+        for c in completions {
+            let mut ev = *c;
+            ev.batch = guard.batch;
+            self.reqs.push([
+                ev.trace.0,
+                ev.batch,
+                ev.submit_us,
+                ev.queue_us,
+                ev.service_us,
+                ev.window_len as u64 | ((ev.variant as u64) << 32) | ((ev.error as u64) << 40),
+            ]);
+            // tail sampling: keep the top-N slowest requests seen so far
+            if tail.len() < self.tail_cap {
+                tail.push(SlowTrace { req: ev, spans: shared.clone() });
+            } else {
+                let min = tail.iter().enumerate().min_by_key(|(_, t)| t.req.latency_us());
+                if let Some((mi, _)) = min {
+                    if ev.latency_us() > tail[mi].req.latency_us() {
+                        tail[mi] = SlowTrace { req: ev, spans: shared.clone() };
+                    }
+                }
+            }
+        }
+    }
+
+    /// Surviving span events, oldest first (ring snapshot).
+    pub fn span_events(&self) -> Vec<SpanEvent> {
+        self.spans
+            .drain()
+            .into_iter()
+            .map(|[batch, packed, start_us, dur_us]| SpanEvent {
+                batch,
+                stage: Stage::ALL[(packed & 0xff) as usize % Stage::COUNT],
+                tid: packed >> 8,
+                start_us,
+                dur_us,
+            })
+            .collect()
+    }
+
+    /// Surviving request events, oldest first (ring snapshot).
+    pub fn request_events(&self) -> Vec<RequestEvent> {
+        self.reqs
+            .drain()
+            .into_iter()
+            .map(|[trace, batch, submit_us, queue_us, service_us, packed]| RequestEvent {
+                trace: TraceId(trace),
+                batch,
+                submit_us,
+                queue_us,
+                service_us,
+                window_len: (packed & 0xffff_ffff) as u32,
+                variant: ((packed >> 32) & 0xff) as u8,
+                error: (packed >> 40) & 1 == 1,
+            })
+            .collect()
+    }
+
+    /// Trace ids currently held by the tail reserve (slowest-N).
+    pub fn tail_traces(&self) -> Vec<TraceId> {
+        self.tail.lock().unwrap().iter().map(|t| t.req.trace).collect()
+    }
+
+    /// Spans dropped by per-batch capture overflow ([`MAX_BATCH_SPANS`]).
+    pub fn dropped_spans(&self) -> u64 {
+        self.dropped_spans.load(Ordering::Relaxed)
+    }
+
+    /// Total span / request events ever recorded (including overwritten).
+    pub fn recorded(&self) -> (u64, u64) {
+        (self.spans.pushed(), self.reqs.pushed())
+    }
+
+    /// Clear everything (bench/test isolation).
+    pub fn reset(&self) {
+        self.spans.reset();
+        self.reqs.reset();
+        self.tail.lock().unwrap().clear();
+        self.dropped_spans.store(0, Ordering::Relaxed);
+    }
+
+    /// Build the Chrome trace-event export (see the module docs for the
+    /// schema). Ring survivors and the tail reserve are merged — a trace
+    /// whose ring slots were overwritten still exports completely if it
+    /// was tail-sampled — and every tail-sampled request is flagged
+    /// `tail_sampled: true` in its args.
+    pub fn export(&self) -> TraceExport {
+        let tail: Vec<SlowTrace> = self.tail.lock().unwrap().clone();
+        let tail_set: BTreeSet<u64> = tail.iter().map(|t| t.req.trace.0).collect();
+
+        // batch -> spans: ring survivors first, tail copies fill the gaps
+        let mut by_batch: BTreeMap<u64, Vec<SpanEvent>> = BTreeMap::new();
+        for ev in self.span_events() {
+            by_batch.entry(ev.batch).or_default().push(ev);
+        }
+        for t in &tail {
+            by_batch
+                .entry(t.req.batch)
+                .or_insert_with(|| t.spans.as_ref().clone());
+        }
+        // trace -> request: ring survivors first, tail fills the gaps
+        let mut by_trace: BTreeMap<u64, RequestEvent> = BTreeMap::new();
+        for ev in self.request_events() {
+            by_trace.insert(ev.trace.0, ev);
+        }
+        for t in &tail {
+            by_trace.entry(t.req.trace.0).or_insert(t.req);
+        }
+
+        let mut events: Vec<Json> = vec![
+            meta_event(1, "requests (one track per trace id)"),
+            meta_event(2, "workers (stage spans per thread)"),
+        ];
+        let mut tail_sampled = 0usize;
+        for (tid, req) in &by_trace {
+            let tailed = tail_set.contains(tid);
+            tail_sampled += tailed as usize;
+            events.push(obj(vec![
+                ("name", s("request")),
+                ("cat", s("request")),
+                ("ph", s("X")),
+                ("ts", num(req.submit_us as f64)),
+                ("dur", num(req.latency_us() as f64)),
+                ("pid", num(1.0)),
+                ("tid", num(*tid as f64)),
+                (
+                    "args",
+                    obj(vec![
+                        ("trace", num(*tid as f64)),
+                        ("batch", num(req.batch as f64)),
+                        ("len", num(req.window_len as f64)),
+                        ("variant", num(req.variant as f64)),
+                        ("queue_us", num(req.queue_us as f64)),
+                        ("service_us", num(req.service_us as f64)),
+                        ("tail_sampled", Json::Bool(tailed)),
+                        ("error", Json::Bool(req.error)),
+                    ]),
+                ),
+            ]));
+            events.push(obj(vec![
+                ("name", s("queue_wait")),
+                ("cat", s("request")),
+                ("ph", s("X")),
+                ("ts", num(req.submit_us as f64)),
+                ("dur", num(req.queue_us as f64)),
+                ("pid", num(1.0)),
+                ("tid", num(*tid as f64)),
+                ("args", obj(vec![("batch", num(req.batch as f64))])),
+            ]));
+        }
+        let mut span_events = 0usize;
+        for spans in by_batch.values() {
+            for ev in spans {
+                span_events += 1;
+                events.push(obj(vec![
+                    ("name", s(ev.stage.name())),
+                    ("cat", s("stage")),
+                    ("ph", s("X")),
+                    ("ts", num(ev.start_us as f64)),
+                    ("dur", num(ev.dur_us as f64)),
+                    ("pid", num(2.0)),
+                    ("tid", num(ev.tid as f64)),
+                    ("args", obj(vec![("batch", num(ev.batch as f64))])),
+                ]));
+            }
+        }
+        let requests = by_trace.len();
+        TraceExport {
+            json: obj(vec![
+                ("displayTimeUnit", s("ms")),
+                ("traceEvents", Json::Arr(events)),
+            ]),
+            span_events,
+            requests,
+            tail_sampled,
+            dropped_spans: self.dropped_spans(),
+        }
+    }
+}
+
+impl Default for FlightRecorder {
+    fn default() -> Self {
+        FlightRecorder::new()
+    }
+}
+
+fn meta_event(pid: u64, name: &str) -> Json {
+    obj(vec![
+        ("name", s("process_name")),
+        ("ph", s("M")),
+        ("pid", num(pid as f64)),
+        ("tid", num(0.0)),
+        ("args", obj(vec![("name", s(name))])),
+    ])
+}
+
+/// The export payload plus its headline counts (for serve's summary line).
+pub struct TraceExport {
+    pub json: Json,
+    pub span_events: usize,
+    pub requests: usize,
+    pub tail_sampled: usize,
+    pub dropped_spans: u64,
+}
+
+static GLOBAL: OnceLock<FlightRecorder> = OnceLock::new();
+
+/// The process-wide flight recorder (disabled until someone calls
+/// [`FlightRecorder::set_enabled`] — `hisolo serve --trace-out` does).
+pub fn recorder() -> &'static FlightRecorder {
+    GLOBAL.get_or_init(FlightRecorder::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Span;
+
+    fn req(trace: u64, queue_us: u64, service_us: u64) -> RequestEvent {
+        RequestEvent {
+            trace: TraceId(trace),
+            batch: 0,
+            submit_us: 0,
+            queue_us,
+            service_us,
+            window_len: 33,
+            variant: 1,
+            error: false,
+        }
+    }
+
+    #[test]
+    fn trace_ids_unique_and_monotone_across_8_threads() {
+        let per = 500usize;
+        let mut all: Vec<Vec<u64>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..8)
+                .map(|_| {
+                    s.spawn(move || {
+                        let ids: Vec<u64> = (0..per).map(|_| TraceId::next().0).collect();
+                        // per-thread: strictly monotone
+                        assert!(ids.windows(2).all(|w| w[0] < w[1]));
+                        ids
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let mut flat: Vec<u64> = all.drain(..).flatten().collect();
+        flat.sort_unstable();
+        flat.dedup();
+        assert_eq!(flat.len(), 8 * per, "trace ids must be unique");
+    }
+
+    #[test]
+    fn batch_ctx_captures_spans_and_fans_out_to_members() {
+        let r = FlightRecorder::with_caps(64, 64, 8);
+        r.set_enabled(true);
+        let reg = crate::obs::registry();
+        let was = reg.enabled();
+        reg.set_enabled(true);
+        let g = r.begin_batch();
+        assert!(g.active());
+        {
+            let _a = Span::enter(Stage::HssWalk);
+            let _b = Span::enter(Stage::Spmm);
+        }
+        r.end_batch(g, &[req(101, 10, 90), req(102, 20, 80)]);
+        reg.set_enabled(was);
+
+        let spans = r.span_events();
+        assert_eq!(spans.len(), 2);
+        let batch = spans[0].batch;
+        assert!(batch > 0);
+        assert!(spans.iter().all(|e| e.batch == batch));
+        let stages: Vec<Stage> = spans.iter().map(|e| e.stage).collect();
+        assert!(stages.contains(&Stage::HssWalk) && stages.contains(&Stage::Spmm));
+
+        // both member requests share the batch id — the fan-out join key
+        let reqs = r.request_events();
+        assert_eq!(reqs.len(), 2);
+        assert!(reqs.iter().all(|e| e.batch == batch));
+        assert_eq!(reqs[0].trace, TraceId(101));
+        assert_eq!(reqs[1].trace, TraceId(102));
+        assert_eq!(reqs[0].latency_us(), 100);
+        assert_eq!(reqs[0].window_len, 33);
+        assert_eq!(reqs[0].variant, 1);
+        assert!(!reqs[0].error);
+    }
+
+    #[test]
+    fn disabled_recorder_is_inert() {
+        let r = FlightRecorder::with_caps(8, 8, 2);
+        assert!(!r.enabled());
+        let g = r.begin_batch();
+        assert!(!g.active());
+        r.end_batch(g, &[req(1, 1, 1)]);
+        assert!(r.span_events().is_empty());
+        assert!(r.request_events().is_empty());
+        assert!(r.tail_traces().is_empty());
+    }
+
+    /// Satellite: ring wraparound under 8 concurrent writers — every
+    /// drained record is consistent (no torn reads), capacity bounds hold,
+    /// and the slowest trace survives the wrap via the tail reserve.
+    #[test]
+    fn ring_wraparound_under_8_concurrent_writers() {
+        let cap = 64usize;
+        let r = std::sync::Arc::new(FlightRecorder::with_caps(cap, cap, 4));
+        r.set_enabled(true);
+        let per = 200usize;
+        std::thread::scope(|sc| {
+            for t in 0..8u64 {
+                let r = r.clone();
+                sc.spawn(move || {
+                    for i in 0..per {
+                        let g = r.begin_batch();
+                        // bypass Span guards (global registry state is
+                        // shared with parallel tests): capture directly
+                        note_span(
+                            Stage::ALL[i % Stage::COUNT],
+                            Instant::now(),
+                            Duration::from_micros(5),
+                        );
+                        let trace = TraceId::next();
+                        // one request per batch; thread 7's last request is
+                        // made very slow so tail sampling must keep it
+                        let slow = (t == 7 && i == per - 1) as u64;
+                        r.end_batch(
+                            g,
+                            &[RequestEvent {
+                                trace,
+                                batch: 0,
+                                submit_us: 0,
+                                queue_us: 1 + slow * 1_000_000,
+                                service_us: 1,
+                                window_len: 9,
+                                variant: 0,
+                                error: false,
+                            }],
+                        );
+                    }
+                });
+            }
+        });
+        let (spans_pushed, reqs_pushed) = r.recorded();
+        assert_eq!(spans_pushed, 8 * per as u64);
+        assert_eq!(reqs_pushed, 8 * per as u64);
+        let spans = r.span_events();
+        let reqs = r.request_events();
+        assert!(spans.len() <= cap, "{}", spans.len());
+        assert!(reqs.len() <= cap);
+        assert!(!reqs.is_empty());
+        // consistency: every surviving record decodes to sane fields
+        for e in &reqs {
+            assert!(e.trace.0 > 0 && e.batch > 0 && e.window_len == 9);
+        }
+        for e in &spans {
+            assert!(e.batch > 0 && e.dur_us >= 5);
+        }
+        // the slow outlier survived the wrap in the tail reserve
+        let tail: Vec<TraceId> = r.tail_traces();
+        assert!(!tail.is_empty() && tail.len() <= 4);
+        let export = r.export();
+        assert!(export.tail_sampled >= 1);
+        let text = export.json.to_string();
+        assert!(text.contains("\"ph\":\"X\""));
+        // the tail-sampled slow request exports with its batch's spans
+        // even though its ring slots were overwritten long ago
+        assert!(text.contains("\"tail_sampled\":true"), "{text}");
+    }
+
+    #[test]
+    fn tail_reserve_keeps_the_slowest() {
+        let r = FlightRecorder::with_caps(16, 16, 2);
+        r.set_enabled(true);
+        for (trace, lat) in [(1u64, 10u64), (2, 500), (3, 20), (4, 900), (5, 30)] {
+            let g = r.begin_batch();
+            r.end_batch(g, &[req(trace, 0, lat)]);
+        }
+        let mut tail: Vec<u64> = r.tail_traces().iter().map(|t| t.0).collect();
+        tail.sort_unstable();
+        assert_eq!(tail, vec![2, 4], "top-2 by latency");
+    }
+
+    #[test]
+    fn export_schema_has_duration_events_and_roundtrips() {
+        let r = FlightRecorder::with_caps(32, 32, 4);
+        r.set_enabled(true);
+        let reg = crate::obs::registry();
+        let was = reg.enabled();
+        reg.set_enabled(true);
+        let g = r.begin_batch();
+        {
+            let _a = Span::enter(Stage::Attention);
+        }
+        r.end_batch(g, &[req(7, 40, 60)]);
+        reg.set_enabled(was);
+        let export = r.export();
+        assert_eq!(export.requests, 1);
+        assert!(export.span_events >= 1);
+        let text = export.json.to_string();
+        // Perfetto-loadable: traceEvents array of ph:X complete events
+        assert!(text.contains("\"traceEvents\""));
+        assert!(text.contains("\"ph\":\"X\""));
+        assert!(text.contains("\"attention\""));
+        assert!(text.contains("\"queue_wait\""));
+        let back = Json::parse(&text).unwrap();
+        let evs = back.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(evs.len() >= 4); // 2 meta + request + queue_wait + span
+        // request event joins to its batch through args.batch
+        let req_ev = evs
+            .iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str()) == Some("request"))
+            .unwrap();
+        let arg_batch = |e: &Json| {
+            e.get("args")
+                .and_then(|a| a.get("batch"))
+                .and_then(|b| b.as_f64())
+                .unwrap()
+        };
+        let batch = arg_batch(req_ev);
+        let span_ev = evs
+            .iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str()) == Some("attention"))
+            .unwrap();
+        assert_eq!(arg_batch(span_ev), batch);
+    }
+
+    #[test]
+    fn batch_span_capture_is_bounded() {
+        let r = FlightRecorder::with_caps(8, 8, 2);
+        r.set_enabled(true);
+        let g = r.begin_batch();
+        for _ in 0..(MAX_BATCH_SPANS + 10) {
+            note_span(Stage::Spmm, Instant::now(), Duration::from_micros(1));
+        }
+        r.end_batch(g, &[]);
+        assert_eq!(r.dropped_spans(), 10);
+    }
+
+    #[test]
+    fn abandoned_batch_clears_thread_context() {
+        let r = FlightRecorder::with_caps(8, 8, 2);
+        r.set_enabled(true);
+        {
+            let _g = r.begin_batch(); // dropped without end_batch
+        }
+        // a fresh batch starts clean: no stale spans from the abandoned one
+        let g2 = r.begin_batch();
+        r.end_batch(g2, &[req(9, 1, 1)]);
+        assert!(r.span_events().is_empty());
+        assert_eq!(r.request_events().len(), 1);
+    }
+}
