@@ -12,10 +12,11 @@
 //! Run: `cargo bench --bench attention [-- --d 256 --heads 8 --t 128]`
 
 use hisolo::coordinator::batcher::{bucket_index, default_bucket_edges};
+use hisolo::linalg::simd;
 use hisolo::linalg::Matrix;
 use hisolo::model::attention::{attention_batch, causal_mha_scalar, AttnWorkspace};
 use hisolo::util::cli::Args;
-use hisolo::util::json::{num, obj, s};
+use hisolo::util::json::{num, obj, s, Json};
 use hisolo::util::timer::{bench, fmt_ns, Table};
 use std::time::Duration;
 
@@ -126,6 +127,95 @@ fn main() {
     }
     table.print();
 
+    // simd kernel race (CI-asserted): the attention-side kernels — the
+    // fused scale+max+exp+normalize softmax row, the layernorm row the
+    // fused residual epilogues run, and the whole batched attention call —
+    // against their scalar arms. Arms are bit-identical by contract, so
+    // the race is pure throughput; PASS requires every scalar/simd time
+    // ratio ≥ 0.95 (1.0 minus measurement noise). With no accelerated arm
+    // on this host the race would time the same code twice — identity,
+    // auto-PASS.
+    let best = simd::active_level();
+    let mut simd_entries: Vec<(String, Json)> = vec![("level".to_string(), s(best.name()))];
+    if best == simd::SimdLevel::Scalar {
+        println!("\nsimd_check: level=scalar (no accelerated arm on this host) PASS");
+    } else {
+        let race = |f: &mut dyn FnMut()| -> f64 {
+            let prev = simd::force_level(simd::SimdLevel::Scalar);
+            let scalar_ns = bench(|| f(), 2, budget, 10_000).mean_ns;
+            simd::force_level(best);
+            let simd_ns = bench(|| f(), 2, budget, 10_000).mean_ns;
+            simd::force_level(prev);
+            scalar_ns / simd_ns
+        };
+
+        // softmax over a t_top-long score row (the longest window's inner
+        // loop), re-seeded from pre-softmax scores each rep
+        let scores: Vec<f32> = (0..t_top).map(|i| -(((i * 31) % 97) as f32) * 0.07).collect();
+        let mut p = scores.clone();
+        let r_soft = race(&mut || {
+            let kt = simd::kernels();
+            for _ in 0..64 {
+                p.copy_from_slice(std::hint::black_box(&scores));
+                (kt.exp_softmax_row)(&mut p, 0.125);
+            }
+        });
+
+        // layernorm row at width d (the fused residual epilogue's kernel)
+        let g = vec![1.0f32; d];
+        let beta = vec![0.0f32; d];
+        let xrow: Vec<f32> = (0..d).map(|i| ((i * 37) % 19) as f32 * 0.1 - 0.9).collect();
+        let mut orow = vec![0.0f32; d];
+        let r_ln = race(&mut || {
+            let kt = simd::kernels();
+            for _ in 0..64 {
+                (kt.layernorm_row)(std::hint::black_box(&xrow), &g, &beta, 1e-5, &mut orow);
+            }
+        });
+
+        // end to end: the whole batched attention call at batch width 32
+        let kw = 32usize;
+        let half = (t_top / 2).max(1);
+        let lens: Vec<usize> = (0..kw).map(|i| t_top - (i * 13) % half).collect();
+        let mut offs = vec![0usize];
+        for &t in &lens {
+            offs.push(offs[offs.len() - 1] + t);
+        }
+        let total = *offs.last().unwrap();
+        let qm = Matrix::randn(total, d, 21);
+        let km = Matrix::randn(total, d, 22);
+        let vm = Matrix::randn(total, d, 23);
+        let mut om = Matrix::zeros(total, d);
+        let mut ws = AttnWorkspace::default();
+        let r_attn = race(&mut || {
+            attention_batch(
+                std::hint::black_box(&qm),
+                &km,
+                &vm,
+                &offs,
+                heads,
+                &mut om,
+                &mut ws,
+            )
+        });
+
+        let mut min_ratio = f64::INFINITY;
+        for (name, r) in [
+            ("exp_softmax_row", r_soft),
+            ("layernorm_row", r_ln),
+            ("attention_batch", r_attn),
+        ] {
+            simd_entries.push((format!("{name}_ratio"), num(r)));
+            min_ratio = min_ratio.min(r);
+        }
+        let verdict = if min_ratio >= 0.95 { "PASS" } else { "FAIL" };
+        println!(
+            "\nsimd_check: level={} exp_softmax_row={r_soft:.2}x layernorm_row={r_ln:.2}x \
+             attention_batch={r_attn:.2}x min_ratio={min_ratio:.2} {verdict}",
+            best.name()
+        );
+    }
+
     let (loop_ns, batch_ns, speedup, pad_pct) = k32.expect("k = 32 case ran");
     let record = obj(vec![
         ("bench", s("attention")),
@@ -136,6 +226,7 @@ fn main() {
         ("attn_k32_batch_ns", num(batch_ns)),
         ("attn_k32_speedup", num(speedup)),
         ("pad_overhead_pct", num(pad_pct)),
+        ("simd", Json::Obj(simd_entries.into_iter().collect())),
     ]);
     println!("\nJSON: {record}");
     if let Some(path) = args.get_path("json") {

@@ -16,6 +16,7 @@
 
 use hisolo::compress::{Compressor, CompressorConfig, Method};
 use hisolo::data::synthetic;
+use hisolo::linalg::simd;
 use hisolo::linalg::Matrix;
 use hisolo::train::{accumulate_grad, num_params, GradWorkspace, Optimizer, OptimizerKind};
 use hisolo::util::cli::Args;
@@ -216,8 +217,103 @@ fn main() {
         if overhead_pct <= 2.0 { "PASS" } else { "FAIL" }
     );
 
+    // simd kernel race (CI-asserted): each dispatched compute kernel vs
+    // its scalar arm at serving-shaped sizes (a d_model-class lane axis of
+    // 1024). The arms are bit-identical by contract, so the race is purely
+    // about throughput; PASS requires every kernel's scalar/simd time
+    // ratio ≥ 0.95 (1.0 minus measurement noise). When the host has no
+    // accelerated arm the race would time the same code twice, so it is
+    // skipped as an identity and auto-passes.
+    let best = simd::active_level();
+    let mut simd_entries: Vec<(String, Json)> = vec![("level".to_string(), s(best.name()))];
+    if best == simd::SimdLevel::Scalar {
+        println!("\nsimd_check: level=scalar (no accelerated arm on this host) PASS");
+    } else {
+        let kdim = 1024usize; // multiple of simd::LANES: no tail in any arm
+        let reps = 64usize;
+        let mut srng = Rng::new(11);
+        let mut av = vec![0.0f32; kdim];
+        let mut bv = vec![0.0f32; 4 * kdim];
+        srng.fill_gaussian(&mut av);
+        srng.fill_gaussian(&mut bv);
+        let hv: Vec<u16> = bv.iter().map(|&x| hisolo::util::fp16::f32_to_f16(x)).collect();
+        let mut yv = vec![0.0f32; kdim];
+        let mut wide = vec![0.0f32; 4 * kdim];
+        let mut sink = 0.0f32;
+
+        let race = |f: &mut dyn FnMut()| -> f64 {
+            let prev = simd::force_level(simd::SimdLevel::Scalar);
+            let scalar_ns = bench(|| f(), 2, budget, 10_000).mean_ns;
+            simd::force_level(best);
+            let simd_ns = bench(|| f(), 2, budget, 10_000).mean_ns;
+            simd::force_level(prev);
+            scalar_ns / simd_ns
+        };
+
+        let r_dot = race(&mut || {
+            for _ in 0..reps {
+                sink += simd::dot_k(std::hint::black_box(&av), &bv[..kdim]);
+            }
+        });
+        let r_gemm = race(&mut || {
+            let kt = simd::kernels();
+            for _ in 0..reps {
+                let mut acc = [[0.0f32; 8]; 4];
+                (kt.gemm_nt_microkernel)(
+                    std::hint::black_box(&av),
+                    [
+                        &bv[..kdim],
+                        &bv[kdim..2 * kdim],
+                        &bv[2 * kdim..3 * kdim],
+                        &bv[3 * kdim..4 * kdim],
+                    ],
+                    &mut acc,
+                );
+                sink += acc[0][0];
+            }
+        });
+        let r_axpy = race(&mut || {
+            let kt = simd::kernels();
+            for _ in 0..reps {
+                (kt.axpy_k)(1.0001, std::hint::black_box(&av), &mut yv);
+            }
+        });
+        let r_axpy4 = race(&mut || {
+            let kt = simd::kernels();
+            for _ in 0..reps {
+                (kt.axpy4_k)(&[0.1, 0.2, 0.3, 0.4], std::hint::black_box(&bv), kdim, &mut yv);
+            }
+        });
+        let r_widen = race(&mut || {
+            let kt = simd::kernels();
+            for _ in 0..reps {
+                (kt.widen_f16_lanes)(std::hint::black_box(&hv), &mut wide);
+            }
+        });
+        std::hint::black_box(sink);
+
+        let mut min_ratio = f64::INFINITY;
+        for (name, r) in [
+            ("dot", r_dot),
+            ("gemm_mk", r_gemm),
+            ("axpy", r_axpy),
+            ("axpy4", r_axpy4),
+            ("widen_f16", r_widen),
+        ] {
+            simd_entries.push((format!("{name}_ratio"), num(r)));
+            min_ratio = min_ratio.min(r);
+        }
+        let verdict = if min_ratio >= 0.95 { "PASS" } else { "FAIL" };
+        println!(
+            "\nsimd_check: level={} dot={r_dot:.2}x gemm_mk={r_gemm:.2}x axpy={r_axpy:.2}x \
+             axpy4={r_axpy4:.2}x widen_f16={r_widen:.2}x min_ratio={min_ratio:.2} {verdict}",
+            best.name()
+        );
+    }
+
     // one-line JSON trajectory record (k = 32 per variant×dtype + resident
-    // bytes + calibration + the per-stage span breakdown)
+    // bytes + calibration + simd kernel ratios + the per-stage span
+    // breakdown)
     let record = obj(vec![
         ("bench", s("batched_apply")),
         ("n", num(n as f64)),
@@ -228,6 +324,7 @@ fn main() {
         ("calib_batch", num(batch as f64)),
         ("calib_rows_per_s", num(rows_per_s)),
         ("span_overhead_pct", num(overhead_pct)),
+        ("simd", Json::Obj(simd_entries.into_iter().collect())),
         ("stages", reg.to_json()),
     ]);
     println!("\nJSON: {record}");

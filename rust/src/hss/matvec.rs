@@ -11,6 +11,15 @@
 //! The workspace-based variants reuse per-level scratch buffers (widened
 //! to the batch) so the request-path apply performs no allocation after
 //! warmup.
+//!
+//! Every dense block in the walk (leaves, couplings, spike SpMM) bottoms
+//! out in the runtime-dispatched SIMD kernels of [`crate::linalg::simd`]
+//! via the staged `Matrix`/`Csr` apply paths — the batch width k is the
+//! contiguous lane axis of every multiply here. The serving projector
+//! ([`crate::model::CompressedModel`]) rounds k up to `simd::padded_k`
+//! with zero columns before entering the traversal, so on the serving
+//! path the walk runs whole lane groups with no scalar tails; the
+//! traversal itself is width-agnostic and accepts any k ≥ 1.
 
 use crate::hss::HssNode;
 use crate::linalg::Matrix;

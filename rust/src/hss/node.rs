@@ -1,4 +1,10 @@
 //! The sparse-plus-HSS tree node and dense reconstruction (for testing).
+//!
+//! Leaf and coupling blocks are plain [`Matrix`] values, so the batched
+//! traversal ([`crate::hss::matvec`]) applies them through the
+//! runtime-dispatched SIMD kernel layer ([`crate::linalg::simd`]) like
+//! every other dense multiply in the crate — the tree stores structure,
+//! not kernels.
 
 use crate::linalg::{Matrix, Permutation};
 use crate::sparse::Csr;

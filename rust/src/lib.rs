@@ -89,6 +89,34 @@
 //! on the hot path; `eval` buckets identically so sweep numbers measure
 //! the code that serves.
 //!
+//! # The SIMD kernel layer
+//!
+//! Every dense multiply, widen, softmax, and layernorm on the hot path
+//! bottoms out in [`linalg::simd`]: a small set of explicit-width kernels
+//! (`dot8_acc`, `gemm_nt_microkernel`, `axpy_k`, `widen_f16_lanes`,
+//! `exp_softmax_row`, `layernorm_row`) behind one safe
+//! `simd::kernels() -> &KernelDispatch` table, selected once per process.
+//!
+//! - **Dispatch policy**: runtime detection — AVX2+FMA+F16C on x86_64
+//!   (`is_x86_feature_detected!`), NEON on aarch64, portable scalar
+//!   everywhere else and under `HISOLO_SIMD=off`. No compile-time feature
+//!   flags; one binary serves every host.
+//! - **ULP contract**: every accelerated arm is **bit-identical (0 ULP)**
+//!   to the scalar arm — same multiply/add split (no FMA contraction),
+//!   same 8-lane accumulator shapes reduced by the same
+//!   `simd::hsum8_tree` fold, tails summed sequentially after the tree,
+//!   and a shared polynomial `exp`. Changing the active level can never
+//!   change a logit bit, which is what lets the serving stack keep its
+//!   bit-reproducibility guarantees (batch-invariance, f16 == quantized
+//!   f32) independent of the host CPU.
+//! - **Fusion**: batch widths are rounded up to lane multiples
+//!   (`simd::padded_k`) with zero columns so kernels run tail-free, and
+//!   the transformer folds residual-add + layernorm (+ the f16 re-widen
+//!   on staged paths) into single row passes — the avoided activation
+//!   round-trips surface as `bytes_saved_fusion` in the metrics JSON.
+//!   See [`linalg::simd`] for the full contract and how to add an
+//!   architecture.
+//!
 //! One-shot compression is only half the paper's deployment story: the
 //! [`train`] module fine-tunes the surviving factor values end-to-end
 //! against the dense teacher (layer-wise ‖W x − Ŵ x‖² calibration with

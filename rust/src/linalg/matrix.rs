@@ -13,6 +13,7 @@
 //! structural f32-only ops (`transpose`, `slice`, `row`, …) panic on an
 //! f16-resident matrix, which must be [`Matrix::widen`]ed first.
 
+use crate::linalg::simd;
 use crate::linalg::weightbuf::{Dtype, WeightBuf, WeightElem};
 use crate::util::rng::Rng;
 use std::fmt;
@@ -468,7 +469,11 @@ pub fn gemm_nt_add(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, out: &mut
 }
 
 /// Dtype-generic [`gemm_nt_add`]: either operand may be a widened-on-read
-/// weight slice (f32 or f16-as-u16).
+/// weight slice (f32 or f16-as-u16). Four B rows at a time go through the
+/// dispatched `simd::gemm_nt_microkernel`; each microkernel column is
+/// bit-identical to a standalone `dot_w`, so the 4-way unroll (and the
+/// remainder columns, which use `dot_w` directly) produce the same bits
+/// for every dtype combination and dispatch level.
 pub fn gemm_nt_add_w<A: WeightElem, B: WeightElem>(
     a: &[A],
     b: &[B],
@@ -480,6 +485,10 @@ pub fn gemm_nt_add_w<A: WeightElem, B: WeightElem>(
     assert_eq!(a.len(), m * k, "gemm_nt_add: A shape mismatch");
     assert_eq!(b.len(), n * k, "gemm_nt_add: B shape mismatch");
     assert_eq!(out.len(), m * n, "gemm_nt_add: OUT shape mismatch");
+    let kt = simd::kernels();
+    let k8 = k / simd::LANES * simd::LANES;
+    let mut abuf = [0.0f32; simd::DOT_CHUNK];
+    let mut bbuf = [[0.0f32; simd::DOT_CHUNK]; 4];
     for ib in (0..m).step_by(MC) {
         let imax = (ib + MC).min(m);
         for jb in (0..n).step_by(NC) {
@@ -487,39 +496,97 @@ pub fn gemm_nt_add_w<A: WeightElem, B: WeightElem>(
             for i in ib..imax {
                 let arow = &a[i * k..(i + 1) * k];
                 let orow = &mut out[i * n..(i + 1) * n];
-                for j in jb..jmax {
+                let mut j = jb;
+                while j + 4 <= jmax {
+                    let mut acc = [[0.0f32; 8]; 4];
+                    if !A::NEEDS_WIDEN && !B::NEEDS_WIDEN {
+                        let aw = A::as_f32_lanes(&arow[..k8], &mut []);
+                        let rows = [
+                            B::as_f32_lanes(&b[j * k..j * k + k8], &mut []),
+                            B::as_f32_lanes(&b[(j + 1) * k..(j + 1) * k + k8], &mut []),
+                            B::as_f32_lanes(&b[(j + 2) * k..(j + 2) * k + k8], &mut []),
+                            B::as_f32_lanes(&b[(j + 3) * k..(j + 3) * k + k8], &mut []),
+                        ];
+                        (kt.gemm_nt_microkernel)(aw, rows, &mut acc);
+                    } else {
+                        // f16 operands stage through stack chunks; the
+                        // carried accumulators keep the reduction
+                        // bit-identical to the unchunked f32 path.
+                        let [s0, s1, s2, s3] = &mut bbuf;
+                        let mut p = 0;
+                        while p < k8 {
+                            let c = simd::DOT_CHUNK.min(k8 - p);
+                            let aw = A::as_f32_lanes(&arow[p..p + c], &mut abuf);
+                            let rows = [
+                                B::as_f32_lanes(&b[j * k + p..j * k + p + c], &mut s0[..]),
+                                B::as_f32_lanes(&b[(j + 1) * k + p..(j + 1) * k + p + c], &mut s1[..]),
+                                B::as_f32_lanes(&b[(j + 2) * k + p..(j + 2) * k + p + c], &mut s2[..]),
+                                B::as_f32_lanes(&b[(j + 3) * k + p..(j + 3) * k + p + c], &mut s3[..]),
+                            ];
+                            (kt.gemm_nt_microkernel)(aw, rows, &mut acc);
+                            p += c;
+                        }
+                    }
+                    for (jj, accj) in acc.iter().enumerate() {
+                        let mut t = simd::hsum8_tree(accj);
+                        let brow = &b[(j + jj) * k..(j + jj + 1) * k];
+                        for q in k8..k {
+                            t += arow[q].widen() * brow[q].widen();
+                        }
+                        orow[j + jj] += t;
+                    }
+                    j += 4;
+                }
+                while j < jmax {
                     orow[j] += dot_w(arow, &b[j * k..(j + 1) * k], k);
+                    j += 1;
                 }
             }
         }
     }
 }
 
-/// Unrolled dot product — the innermost kernel of everything dense.
-/// Eight independent accumulators over exact slices: with
-/// `-C target-cpu=native` LLVM turns this into AVX2/AVX-512 FMA lanes
-/// (measured in EXPERIMENTS.md §Perf).
+/// Dot product — the innermost kernel of everything dense. Rides the
+/// dispatched `simd::dot8_acc` (AVX2/NEON lanes, or the lane-mirrored
+/// scalar fallback): 8-lane accumulation over the lane prefix, the
+/// shared `hsum8_tree` fold, then a sequential tail. The reduction shape
+/// is identical at every dispatch level and for every chunk split, so
+/// results are bit-stable across CPUs and staging strategies.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32], k: usize) -> f32 {
     dot_w(a, b, k)
 }
 
-/// Dtype-generic [`dot`]: elements widen in-register as they stream.
+/// Dtype-generic [`dot`]: f16 operands widen through the dispatched
+/// `simd::widen_f16_lanes` in `DOT_CHUNK`-sized stack stages between
+/// `dot8_acc` calls. The accumulator is carried across chunks, so the
+/// chunked f16 path reduces bit-identically to the single-pass f32 path
+/// (pinned by the chunk-carry test in `linalg::simd`).
 #[inline]
 pub fn dot_w<A: WeightElem, B: WeightElem>(a: &[A], b: &[B], k: usize) -> f32 {
     let a = &a[..k];
     let b = &b[..k];
+    let kt = simd::kernels();
+    let k8 = k / simd::LANES * simd::LANES;
     let mut acc = [0.0f32; 8];
-    let chunks = k / 8;
-    for c in 0..chunks {
-        let i = c * 8;
-        let (aa, bb) = (&a[i..i + 8], &b[i..i + 8]);
-        for l in 0..8 {
-            acc[l] += aa[l].widen() * bb[l].widen();
+    if !A::NEEDS_WIDEN && !B::NEEDS_WIDEN {
+        let aw = A::as_f32_lanes(&a[..k8], &mut []);
+        let bw = B::as_f32_lanes(&b[..k8], &mut []);
+        (kt.dot8_acc)(aw, bw, &mut acc);
+    } else {
+        let mut abuf = [0.0f32; simd::DOT_CHUNK];
+        let mut bbuf = [0.0f32; simd::DOT_CHUNK];
+        let mut p = 0;
+        while p < k8 {
+            let c = simd::DOT_CHUNK.min(k8 - p);
+            let aw = A::as_f32_lanes(&a[p..p + c], &mut abuf);
+            let bw = B::as_f32_lanes(&b[p..p + c], &mut bbuf);
+            (kt.dot8_acc)(aw, bw, &mut acc);
+            p += c;
         }
     }
-    let mut total = acc.iter().sum::<f32>();
-    for i in chunks * 8..k {
+    let mut total = simd::hsum8_tree(&acc);
+    for i in k8..k {
         total += a[i].widen() * b[i].widen();
     }
     total
@@ -542,12 +609,18 @@ fn matvec_add_w<E: WeightElem>(w: &[E], rows: usize, cols: usize, x: &[f32], y: 
 /// y += Wᵀ x over a raw row-major weight slice (caller zeroes y for the
 /// overwriting form).
 fn matvec_t_add_w<E: WeightElem>(w: &[E], rows: usize, cols: usize, x: &[f32], y: &mut [f32]) {
+    let kt = simd::kernels();
+    let mut wbuf = [0.0f32; NC];
     for i in 0..rows {
         let xi = x[i];
         if xi != 0.0 {
             let row = &w[i * cols..(i + 1) * cols];
-            for (yj, &r) in y.iter_mut().zip(row) {
-                *yj += xi * r.widen();
+            let mut p = 0;
+            while p < cols {
+                let c = NC.min(cols - p);
+                let rw = E::as_f32_lanes(&row[p..p + c], &mut wbuf);
+                (kt.axpy_k)(xi, rw, &mut y[p..p + c]);
+                p += c;
             }
         }
     }
@@ -570,34 +643,23 @@ pub fn apply_batch_add_w<E: WeightElem>(
         matvec_add_w(w, rows, cols, x, y);
         return;
     }
+    let kt = simd::kernels();
+    let mut wbuf = [0.0f32; NC];
     for jb in (0..cols).step_by(NC) {
         let jmax = (jb + NC).min(cols);
         for i in 0..rows {
-            let arow = &w[i * cols..(i + 1) * cols];
+            // One block of this weight row, widened wholesale (f16) or
+            // viewed in place (f32) — the single widening path.
+            let aw = E::as_f32_lanes(&w[i * cols + jb..i * cols + jmax], &mut wbuf);
             let yrow = &mut y[i * k..(i + 1) * k];
-            let mut j = jb;
-            while j + 4 <= jmax {
-                let (a0, a1, a2, a3) = (
-                    arow[j].widen(),
-                    arow[j + 1].widen(),
-                    arow[j + 2].widen(),
-                    arow[j + 3].widen(),
-                );
-                let x0 = &x[j * k..(j + 1) * k];
-                let x1 = &x[(j + 1) * k..(j + 2) * k];
-                let x2 = &x[(j + 2) * k..(j + 3) * k];
-                let x3 = &x[(j + 3) * k..(j + 4) * k];
-                for c in 0..k {
-                    yrow[c] += a0 * x0[c] + a1 * x1[c] + a2 * x2[c] + a3 * x3[c];
-                }
+            let mut j = 0;
+            while j + 4 <= aw.len() {
+                let coefs = [aw[j], aw[j + 1], aw[j + 2], aw[j + 3]];
+                (kt.axpy4_k)(&coefs, &x[(jb + j) * k..(jb + j + 4) * k], k, yrow);
                 j += 4;
             }
-            while j < jmax {
-                let aij = arow[j].widen();
-                let xrow = &x[j * k..(j + 1) * k];
-                for c in 0..k {
-                    yrow[c] += aij * xrow[c];
-                }
+            while j < aw.len() {
+                (kt.axpy_k)(aw[j], &x[(jb + j) * k..(jb + j + 1) * k], yrow);
                 j += 1;
             }
         }
@@ -615,20 +677,19 @@ fn apply_batch_t_add_w<E: WeightElem>(
     y: &mut [f32],
     k: usize,
 ) {
+    let kt = simd::kernels();
+    let mut wbuf = [0.0f32; NC];
     for jb in (0..cols).step_by(NC) {
         let jmax = (jb + NC).min(cols);
         for i in 0..rows {
-            let arow = &w[i * cols + jb..i * cols + jmax];
+            let aw = E::as_f32_lanes(&w[i * cols + jb..i * cols + jmax], &mut wbuf);
             let xrow = &x[i * k..(i + 1) * k];
-            for (jo, &aij) in arow.iter().enumerate() {
-                let aij = aij.widen();
+            for (jo, &aij) in aw.iter().enumerate() {
                 if aij == 0.0 {
                     continue;
                 }
                 let yrow = &mut y[(jb + jo) * k..(jb + jo + 1) * k];
-                for c in 0..k {
-                    yrow[c] += aij * xrow[c];
-                }
+                (kt.axpy_k)(aij, xrow, yrow);
             }
         }
     }

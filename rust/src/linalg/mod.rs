@@ -4,13 +4,15 @@
 //!
 //! Everything the compression pipeline needs is implemented natively (the
 //! offline environment has no BLAS/LAPACK crates); the hot paths are blocked
-//! and allocation-free per DESIGN.md §10.
+//! and allocation-free per DESIGN.md §10, and route through the
+//! runtime-dispatched SIMD kernel layer in [`simd`].
 
 pub mod matrix;
 pub mod norms;
 pub mod permutation;
 pub mod qr;
 pub mod rsvd;
+pub mod simd;
 pub mod svd;
 pub mod weightbuf;
 

@@ -1,0 +1,1143 @@
+//! Explicit-width SIMD kernel layer with runtime CPU dispatch.
+//!
+//! Every hot kernel in the serving path (`apply_batch_*`, `spmm_add`,
+//! `gemm_nt_add`, attention score/softmax·V, f16 widening, the fused
+//! residual+layernorm epilogue) routes through the fn-pointer table
+//! returned by [`kernels()`]. The table is selected once, lazily, from
+//! runtime CPU detection:
+//!
+//! * **x86_64** — AVX2 arms, taken when `avx2`, `fma` and `f16c` are all
+//!   detected (`is_x86_feature_detected!`). FMA presence gates the level
+//!   but the arms deliberately use separate mul+add so results stay
+//!   bit-identical to the scalar fallback (see the ULP contract below).
+//! * **aarch64** — NEON arms for the mul/add kernels; the transcendental
+//!   and widening entries reuse the scalar arms (bit-compatible by
+//!   construction).
+//! * **anywhere else / `HISOLO_SIMD=off`** — the scalar arms, which are
+//!   the always-correct reference implementation.
+//!
+//! # ULP contract
+//!
+//! Every SIMD arm is **bit-identical** to its scalar arm (0 ULP), not
+//! merely close. This is load-bearing: the repo's test suite pins
+//! f16-resident kernels bitwise against quantized-f32, staged against
+//! unstaged, and batched attention against the per-window loop — a
+//! kernel arm that reassociates differently per level would make those
+//! contracts level-dependent. The rules that make 0 ULP hold:
+//!
+//! * no FMA contraction — every arm does separate mul then add;
+//! * reductions use a fixed 8-lane accumulator shape mirrored by the
+//!   scalar arm, folded by the shared [`hsum8_tree`], with remainder
+//!   elements added sequentially *after* the tree;
+//! * `exp` is the same polynomial (magic-number round-to-nearest-even,
+//!   Cody–Waite argument reduction, degree-5 Horner) evaluated with the
+//!   same operation order in both arms;
+//! * f16→f32 widening via F16C `VCVTPH2PS` matches the software codec in
+//!   `util::fp16` for all 65536 bit patterns (both quiet NaNs by setting
+//!   the same bit and preserve payloads; an exhaustive test pins this).
+//!
+//! Because the arms are interchangeable bit-for-bit, [`force_level`] is
+//! a sound public hook: benches race Scalar vs the detected best, and
+//! the `HISOLO_SIMD=off` env override simply pins the scalar table.
+//!
+//! # How to add an arch
+//!
+//! 1. Add a [`SimdLevel`] variant and a `static` [`KernelDispatch`]
+//!    table for it. Partial tables are fine — point entries you have not
+//!    vectorized at the scalar arms (the NEON table does this for
+//!    `exp_softmax_row`, `widen_f16_lanes` and `layernorm_row`).
+//! 2. Mirror the scalar arm structure exactly: 8-lane accumulators,
+//!    mul+add (no FMA), tree-then-tail reduction. Run the arm-equality
+//!    property tests below on real hardware before enabling detection.
+//! 3. Wire detection into `detect_level()` behind `cfg(target_arch)`.
+//!
+//! Lane width is pinned at [`LANES`] = 8 f32 lanes (one AVX2 vector, two
+//! NEON vectors); [`padded_k`] rounds batch widths up so the k-lane
+//! loops carry no scalar tail.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Pinned f32 lane count of the kernel layer (one AVX2 register).
+pub const LANES: usize = 8;
+
+/// Chunk size (in elements) used by callers that stage f16 weights into
+/// f32 stack buffers between kernel calls. A multiple of [`LANES`], so
+/// chunk boundaries never split an 8-lane group and chunked reductions
+/// are bit-identical to one full-slice pass.
+pub const DOT_CHUNK: usize = 256;
+
+/// Round a batch width up to the lane multiple so the k-lane loops have
+/// no scalar tail. Width 0/1 is left alone: the k = 1 path is the
+/// dedicated matvec code, not the lane loop.
+#[inline]
+pub fn padded_k(k: usize) -> usize {
+    if k <= 1 {
+        k
+    } else {
+        k.div_ceil(LANES) * LANES
+    }
+}
+
+/// Instruction-set level of the active dispatch table.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum SimdLevel {
+    /// Portable scalar arms — the reference implementation.
+    Scalar,
+    /// x86_64 AVX2 (+F16C widening; FMA detected but unused, see docs).
+    Avx2,
+    /// aarch64 NEON (mul/add kernels; transcendentals use scalar arms).
+    Neon,
+}
+
+impl SimdLevel {
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Avx2 => "avx2",
+            SimdLevel::Neon => "neon",
+        }
+    }
+
+    fn code(self) -> u8 {
+        match self {
+            SimdLevel::Scalar => 1,
+            SimdLevel::Avx2 => 2,
+            SimdLevel::Neon => 3,
+        }
+    }
+
+    fn from_code(c: u8) -> SimdLevel {
+        match c {
+            2 => SimdLevel::Avx2,
+            3 => SimdLevel::Neon,
+            _ => SimdLevel::Scalar,
+        }
+    }
+}
+
+/// The dispatch table: one safe fn pointer per kernel. Selected once per
+/// process (or overridden via [`force_level`]); call sites fetch it once
+/// per outer kernel call, not per inner iteration.
+pub struct KernelDispatch {
+    pub level: SimdLevel,
+    /// `acc[l] += a[i*8+l] * b[i*8+l]` over the multiple-of-8 prefix of
+    /// `a`/`b` (callers pass multiple-of-8 slices). The accumulator is
+    /// carried across calls so chunked staging reduces identically to
+    /// one pass; fold with [`hsum8_tree`], then add tail elements
+    /// sequentially.
+    pub dot8_acc: fn(&[f32], &[f32], &mut [f32; 8]),
+    /// Four simultaneous `dot8_acc` against four B rows sharing one A
+    /// row: `acc[j][l] += a[i*8+l] * b[j][i*8+l]`. Each column's
+    /// accumulator is bit-identical to a standalone `dot8_acc`.
+    pub gemm_nt_microkernel: fn(&[f32], [&[f32]; 4], &mut [[f32; 8]; 4]),
+    /// `y[i] += a * x[i]` (element-independent, so any arm is bitwise).
+    pub axpy_k: fn(f32, &[f32], &mut [f32]),
+    /// Four fused axpys from four consecutive stride-`k` rows of `x4`:
+    /// `y[i] += (c0*x0[i] + c1*x1[i]) + (c2*x2[i] + c3*x3[i])` — the
+    /// pairwise sum order is part of the contract.
+    pub axpy4_k: fn(&[f32; 4], &[f32], usize, &mut [f32]),
+    /// `y[i] += x[i]`.
+    pub add_k: fn(&[f32], &mut [f32]),
+    /// f16 bits → f32, one output per input (`dst.len() == src.len()`).
+    /// The single widening primitive: every f16 call-site pattern
+    /// (inline lane widening, staging, CSR value runs) routes here.
+    pub widen_f16_lanes: fn(&[u16], &mut [f32]),
+    /// In-place fused softmax over one score row: scale, subtract the
+    /// row max, exponentiate (polynomial exp, flush below ≈ −87.33),
+    /// normalize. Inputs must be finite (attention scores are).
+    pub exp_softmax_row: fn(&mut [f32], f32),
+    /// One layernorm row: mean/variance via the 8-lane tree reduction,
+    /// then `out[j] = (row[j] - mu) * inv * g[j] + b[j]` with
+    /// `inv = 1/sqrt(var + eps)`.
+    pub layernorm_row: fn(&[f32], &[f32], &[f32], f32, &mut [f32]),
+}
+
+/// Fold the 8-lane accumulator with the canonical pairwise tree. The
+/// tree shape is fixed and shared by every arm:
+/// `((l0+l4)+(l2+l6)) + ((l1+l5)+(l3+l7))`.
+#[inline]
+pub fn hsum8_tree(acc: &[f32; 8]) -> f32 {
+    ((acc[0] + acc[4]) + (acc[2] + acc[6])) + ((acc[1] + acc[5]) + (acc[3] + acc[7]))
+}
+
+/// Full dot product of two f32 slices via the dispatched `dot8_acc`:
+/// 8-lane accumulation over the lane prefix, tree fold, sequential tail.
+#[inline]
+pub fn dot_k(a: &[f32], b: &[f32]) -> f32 {
+    let kt = kernels();
+    let n = a.len().min(b.len());
+    let n8 = n / LANES * LANES;
+    let mut acc = [0.0f32; 8];
+    (kt.dot8_acc)(&a[..n8], &b[..n8], &mut acc);
+    let mut total = hsum8_tree(&acc);
+    for i in n8..n {
+        total += a[i] * b[i];
+    }
+    total
+}
+
+/// Dispatched `y += a * x` over `min(x.len(), y.len())` elements.
+#[inline]
+pub fn axpy_k(a: f32, x: &[f32], y: &mut [f32]) {
+    (kernels().axpy_k)(a, x, y)
+}
+
+// --- dispatch state -------------------------------------------------------
+
+/// 0 = uninitialized; otherwise `SimdLevel::code()`.
+static ACTIVE: AtomicU8 = AtomicU8::new(0);
+
+fn detect_level() -> SimdLevel {
+    if let Ok(v) = std::env::var("HISOLO_SIMD") {
+        let v = v.to_ascii_lowercase();
+        if v == "off" || v == "0" || v == "scalar" {
+            return SimdLevel::Scalar;
+        }
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2")
+            && is_x86_feature_detected!("fma")
+            && is_x86_feature_detected!("f16c")
+        {
+            return SimdLevel::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        // NEON is baseline on aarch64.
+        return SimdLevel::Neon;
+    }
+    #[allow(unreachable_code)]
+    SimdLevel::Scalar
+}
+
+fn level_supported(l: SimdLevel) -> bool {
+    match l {
+        SimdLevel::Scalar => true,
+        SimdLevel::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                is_x86_feature_detected!("avx2")
+                    && is_x86_feature_detected!("fma")
+                    && is_x86_feature_detected!("f16c")
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            {
+                false
+            }
+        }
+        SimdLevel::Neon => cfg!(target_arch = "aarch64"),
+    }
+}
+
+/// The active dispatch level (detects on first call, honouring the
+/// `HISOLO_SIMD` env override: `off`/`0`/`scalar` pins the fallback).
+pub fn active_level() -> SimdLevel {
+    let c = ACTIVE.load(Ordering::Relaxed);
+    if c != 0 {
+        return SimdLevel::from_code(c);
+    }
+    let l = detect_level();
+    // Racing initializers all compute the same value; last store wins.
+    ACTIVE.store(l.code(), Ordering::Relaxed);
+    l
+}
+
+/// Force a specific dispatch level; returns the previous one so callers
+/// can restore it. Requests for a level the CPU does not support are
+/// ignored (the previous level stays active). Sound to flip at any time
+/// because every arm is bit-identical (see the module ULP contract) —
+/// the benches use this to race Scalar against the detected best.
+pub fn force_level(l: SimdLevel) -> SimdLevel {
+    let prev = active_level();
+    if level_supported(l) {
+        ACTIVE.store(l.code(), Ordering::Relaxed);
+    }
+    prev
+}
+
+/// The active kernel table. Fetch once per outer kernel call.
+pub fn kernels() -> &'static KernelDispatch {
+    match active_level() {
+        SimdLevel::Scalar => &SCALAR,
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => &avx2::TABLE,
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => &neon::TABLE,
+        #[allow(unreachable_patterns)]
+        _ => &SCALAR,
+    }
+}
+
+// --- shared exp polynomial constants --------------------------------------
+// Degree-5 polynomial exp (avx_mathfun lineage): magic-number RNE, two-term
+// Cody–Waite reduction, Horner evaluation. Both arms use these constants
+// with the identical operation order.
+
+#[allow(clippy::excessive_precision)]
+mod expc {
+    pub const LOG2E: f32 = 1.44269504088896341;
+    pub const C1: f32 = 0.693359375;
+    pub const C2: f32 = -2.12194440e-4;
+    pub const P0: f32 = 1.9875691500e-4;
+    pub const P1: f32 = 1.3981999507e-3;
+    pub const P2: f32 = 8.3334519073e-3;
+    pub const P3: f32 = 4.1665795894e-2;
+    pub const P4: f32 = 1.6666665459e-1;
+    pub const P5: f32 = 5.0000001201e-1;
+    /// 1.5 * 2^23: adding then subtracting rounds to the nearest integer
+    /// (ties to even) for |v| < 2^22.
+    pub const MAGIC: f32 = 12582912.0;
+    /// Below this, exp underflows past subnormals; lanes flush to zero.
+    pub const LO: f32 = -87.33655;
+}
+
+/// Scalar polynomial exp — the per-element formula both arms evaluate.
+/// Valid for finite x ≤ 0 (softmax feeds `x - max`); flushes to 0 below
+/// [`expc::LO`]. Mul+add only, so the AVX2 lanes reproduce it exactly.
+#[inline]
+fn exp_poly(x: f32) -> f32 {
+    use expc::*;
+    if x < LO {
+        return 0.0;
+    }
+    let t = x * LOG2E + MAGIC;
+    let n = t - MAGIC;
+    let r = (x - n * C1) - n * C2;
+    let mut y = P0;
+    y = y * r + P1;
+    y = y * r + P2;
+    y = y * r + P3;
+    y = y * r + P4;
+    y = y * r + P5;
+    y = y * (r * r) + r;
+    y += 1.0;
+    let pow2n = f32::from_bits((((n as i32) + 127) << 23) as u32);
+    y * pow2n
+}
+
+// --- scalar arms ----------------------------------------------------------
+// Written to mirror the SIMD lane structure exactly: 8-lane groups, the
+// same pairwise sum orders, tree-then-tail reductions.
+
+fn dot8_acc_scalar(a: &[f32], b: &[f32], acc: &mut [f32; 8]) {
+    let n = a.len().min(b.len()) / LANES * LANES;
+    let mut i = 0;
+    while i < n {
+        for l in 0..LANES {
+            acc[l] += a[i + l] * b[i + l];
+        }
+        i += LANES;
+    }
+}
+
+fn gemm_nt_microkernel_scalar(a: &[f32], b: [&[f32]; 4], acc: &mut [[f32; 8]; 4]) {
+    let n = a.len() / LANES * LANES;
+    let mut i = 0;
+    while i < n {
+        for (j, bj) in b.iter().enumerate() {
+            for l in 0..LANES {
+                acc[j][l] += a[i + l] * bj[i + l];
+            }
+        }
+        i += LANES;
+    }
+}
+
+fn axpy_k_scalar(a: f32, x: &[f32], y: &mut [f32]) {
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+fn axpy4_k_scalar(c: &[f32; 4], x4: &[f32], k: usize, y: &mut [f32]) {
+    let x0 = &x4[..k];
+    let x1 = &x4[k..2 * k];
+    let x2 = &x4[2 * k..3 * k];
+    let x3 = &x4[3 * k..4 * k];
+    for (i, yi) in y.iter_mut().enumerate().take(k) {
+        let t01 = c[0] * x0[i] + c[1] * x1[i];
+        let t23 = c[2] * x2[i] + c[3] * x3[i];
+        *yi += t01 + t23;
+    }
+}
+
+fn add_k_scalar(x: &[f32], y: &mut [f32]) {
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += xi;
+    }
+}
+
+fn widen_f16_lanes_scalar(src: &[u16], dst: &mut [f32]) {
+    for (d, &h) in dst.iter_mut().zip(src) {
+        *d = crate::util::fp16::f16_to_f32(h);
+    }
+}
+
+fn exp_softmax_row_scalar(p: &mut [f32], scale: f32) {
+    if p.is_empty() {
+        return;
+    }
+    for v in p.iter_mut() {
+        *v *= scale;
+    }
+    // Row max: max is order-insensitive for finite inputs, so a simple
+    // sequential scan matches the vector lane+reduce result.
+    let mut m = f32::NEG_INFINITY;
+    for &v in p.iter() {
+        m = if m > v { m } else { v };
+    }
+    // exp + sum: 8-lane accumulators over the lane prefix, tree fold,
+    // sequential tail — mirrors the AVX2 arm.
+    let n8 = p.len() / LANES * LANES;
+    let mut acc = [0.0f32; 8];
+    let mut i = 0;
+    while i < n8 {
+        for l in 0..LANES {
+            let e = exp_poly(p[i + l] - m);
+            p[i + l] = e;
+            acc[l] += e;
+        }
+        i += LANES;
+    }
+    let mut denom = hsum8_tree(&acc);
+    for v in p[n8..].iter_mut() {
+        let e = exp_poly(*v - m);
+        *v = e;
+        denom += e;
+    }
+    let inv = 1.0 / denom;
+    for v in p.iter_mut() {
+        *v *= inv;
+    }
+}
+
+fn layernorm_row_scalar(row: &[f32], g: &[f32], b: &[f32], eps: f32, out: &mut [f32]) {
+    let n = row.len();
+    let n8 = n / LANES * LANES;
+    let mut acc = [0.0f32; 8];
+    let mut i = 0;
+    while i < n8 {
+        for l in 0..LANES {
+            acc[l] += row[i + l];
+        }
+        i += LANES;
+    }
+    let mut sum = hsum8_tree(&acc);
+    for &v in &row[n8..] {
+        sum += v;
+    }
+    let mu = sum / n as f32;
+    let mut vacc = [0.0f32; 8];
+    i = 0;
+    while i < n8 {
+        for l in 0..LANES {
+            let d = row[i + l] - mu;
+            vacc[l] += d * d;
+        }
+        i += LANES;
+    }
+    let mut vsum = hsum8_tree(&vacc);
+    for &v in &row[n8..] {
+        let d = v - mu;
+        vsum += d * d;
+    }
+    let var = vsum / n as f32;
+    let inv = 1.0 / (var + eps).sqrt();
+    for j in 0..n {
+        out[j] = (row[j] - mu) * inv * g[j] + b[j];
+    }
+}
+
+static SCALAR: KernelDispatch = KernelDispatch {
+    level: SimdLevel::Scalar,
+    dot8_acc: dot8_acc_scalar,
+    gemm_nt_microkernel: gemm_nt_microkernel_scalar,
+    axpy_k: axpy_k_scalar,
+    axpy4_k: axpy4_k_scalar,
+    add_k: add_k_scalar,
+    widen_f16_lanes: widen_f16_lanes_scalar,
+    exp_softmax_row: exp_softmax_row_scalar,
+    layernorm_row: layernorm_row_scalar,
+};
+
+// --- AVX2 arms ------------------------------------------------------------
+// Every arm mirrors its scalar twin operation-for-operation: separate
+// mul+add (no FMA contraction), the same 8-lane accumulator shapes, and
+// scalar tails that reuse the exact scalar expressions. The `unsafe fn`s
+// carry `#[target_feature]`; the safe wrappers installed in the table are
+// sound because the table is only selected when detection succeeded.
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::*;
+    use std::arch::x86_64::*;
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot8_acc_impl(a: &[f32], b: &[f32], acc: &mut [f32; 8]) {
+        let n = a.len().min(b.len()) / LANES * LANES;
+        let mut av = _mm256_loadu_ps(acc.as_ptr());
+        let mut i = 0;
+        while i < n {
+            let x = _mm256_loadu_ps(a.as_ptr().add(i));
+            let y = _mm256_loadu_ps(b.as_ptr().add(i));
+            av = _mm256_add_ps(av, _mm256_mul_ps(x, y));
+            i += LANES;
+        }
+        _mm256_storeu_ps(acc.as_mut_ptr(), av);
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn gemm_nt_microkernel_impl(a: &[f32], b: [&[f32]; 4], acc: &mut [[f32; 8]; 4]) {
+        let n = a.len() / LANES * LANES;
+        let mut c0 = _mm256_loadu_ps(acc[0].as_ptr());
+        let mut c1 = _mm256_loadu_ps(acc[1].as_ptr());
+        let mut c2 = _mm256_loadu_ps(acc[2].as_ptr());
+        let mut c3 = _mm256_loadu_ps(acc[3].as_ptr());
+        let mut i = 0;
+        while i < n {
+            let av = _mm256_loadu_ps(a.as_ptr().add(i));
+            c0 = _mm256_add_ps(c0, _mm256_mul_ps(av, _mm256_loadu_ps(b[0].as_ptr().add(i))));
+            c1 = _mm256_add_ps(c1, _mm256_mul_ps(av, _mm256_loadu_ps(b[1].as_ptr().add(i))));
+            c2 = _mm256_add_ps(c2, _mm256_mul_ps(av, _mm256_loadu_ps(b[2].as_ptr().add(i))));
+            c3 = _mm256_add_ps(c3, _mm256_mul_ps(av, _mm256_loadu_ps(b[3].as_ptr().add(i))));
+            i += LANES;
+        }
+        _mm256_storeu_ps(acc[0].as_mut_ptr(), c0);
+        _mm256_storeu_ps(acc[1].as_mut_ptr(), c1);
+        _mm256_storeu_ps(acc[2].as_mut_ptr(), c2);
+        _mm256_storeu_ps(acc[3].as_mut_ptr(), c3);
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn axpy_k_impl(a: f32, x: &[f32], y: &mut [f32]) {
+        let n = x.len().min(y.len());
+        let n8 = n / LANES * LANES;
+        let av = _mm256_set1_ps(a);
+        let mut i = 0;
+        while i < n8 {
+            let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+            let yv = _mm256_loadu_ps(y.as_ptr().add(i));
+            let r = _mm256_add_ps(yv, _mm256_mul_ps(av, xv));
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), r);
+            i += LANES;
+        }
+        while i < n {
+            y[i] += a * x[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn axpy4_k_impl(c: &[f32; 4], x4: &[f32], k: usize, y: &mut [f32]) {
+        let n = k.min(y.len());
+        let n8 = n / LANES * LANES;
+        let c0 = _mm256_set1_ps(c[0]);
+        let c1 = _mm256_set1_ps(c[1]);
+        let c2 = _mm256_set1_ps(c[2]);
+        let c3 = _mm256_set1_ps(c[3]);
+        let x0 = x4.as_ptr();
+        let x1 = x4.as_ptr().add(k);
+        let x2 = x4.as_ptr().add(2 * k);
+        let x3 = x4.as_ptr().add(3 * k);
+        let mut i = 0;
+        while i < n8 {
+            let t01 = _mm256_add_ps(
+                _mm256_mul_ps(c0, _mm256_loadu_ps(x0.add(i))),
+                _mm256_mul_ps(c1, _mm256_loadu_ps(x1.add(i))),
+            );
+            let t23 = _mm256_add_ps(
+                _mm256_mul_ps(c2, _mm256_loadu_ps(x2.add(i))),
+                _mm256_mul_ps(c3, _mm256_loadu_ps(x3.add(i))),
+            );
+            let yv = _mm256_loadu_ps(y.as_ptr().add(i));
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), _mm256_add_ps(yv, _mm256_add_ps(t01, t23)));
+            i += LANES;
+        }
+        while i < n {
+            let t01 = c[0] * x4[i] + c[1] * x4[k + i];
+            let t23 = c[2] * x4[2 * k + i] + c[3] * x4[3 * k + i];
+            y[i] += t01 + t23;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn add_k_impl(x: &[f32], y: &mut [f32]) {
+        let n = x.len().min(y.len());
+        let n8 = n / LANES * LANES;
+        let mut i = 0;
+        while i < n8 {
+            let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+            let yv = _mm256_loadu_ps(y.as_ptr().add(i));
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), _mm256_add_ps(yv, xv));
+            i += LANES;
+        }
+        while i < n {
+            y[i] += x[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,f16c")]
+    unsafe fn widen_f16_lanes_impl(src: &[u16], dst: &mut [f32]) {
+        let n = src.len().min(dst.len());
+        let n8 = n / LANES * LANES;
+        let mut i = 0;
+        while i < n8 {
+            let h = _mm_loadu_si128(src.as_ptr().add(i) as *const __m128i);
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i), _mm256_cvtph_ps(h));
+            i += LANES;
+        }
+        while i < n {
+            dst[i] = crate::util::fp16::f16_to_f32(src[i]);
+            i += 1;
+        }
+    }
+
+    /// Eight-lane polynomial exp — same constants and operation order as
+    /// the scalar `exp_poly`, lanes below `expc::LO` masked to zero.
+    #[target_feature(enable = "avx2")]
+    unsafe fn exp8(x: __m256) -> __m256 {
+        use super::expc::*;
+        let t = _mm256_add_ps(_mm256_mul_ps(x, _mm256_set1_ps(LOG2E)), _mm256_set1_ps(MAGIC));
+        let n = _mm256_sub_ps(t, _mm256_set1_ps(MAGIC));
+        let r = _mm256_sub_ps(
+            _mm256_sub_ps(x, _mm256_mul_ps(n, _mm256_set1_ps(C1))),
+            _mm256_mul_ps(n, _mm256_set1_ps(C2)),
+        );
+        let mut y = _mm256_set1_ps(P0);
+        y = _mm256_add_ps(_mm256_mul_ps(y, r), _mm256_set1_ps(P1));
+        y = _mm256_add_ps(_mm256_mul_ps(y, r), _mm256_set1_ps(P2));
+        y = _mm256_add_ps(_mm256_mul_ps(y, r), _mm256_set1_ps(P3));
+        y = _mm256_add_ps(_mm256_mul_ps(y, r), _mm256_set1_ps(P4));
+        y = _mm256_add_ps(_mm256_mul_ps(y, r), _mm256_set1_ps(P5));
+        let r2 = _mm256_mul_ps(r, r);
+        y = _mm256_add_ps(_mm256_mul_ps(y, r2), r);
+        y = _mm256_add_ps(y, _mm256_set1_ps(1.0));
+        let ni = _mm256_cvtps_epi32(n);
+        let pow2 = _mm256_castsi256_ps(_mm256_slli_epi32::<23>(_mm256_add_epi32(
+            ni,
+            _mm256_set1_epi32(127),
+        )));
+        let e = _mm256_mul_ps(y, pow2);
+        let flush = _mm256_cmp_ps::<_CMP_LT_OQ>(x, _mm256_set1_ps(LO));
+        _mm256_andnot_ps(flush, e)
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn exp_softmax_row_impl(p: &mut [f32], scale: f32) {
+        if p.is_empty() {
+            return;
+        }
+        let n = p.len();
+        let n8 = n / LANES * LANES;
+        let sv = _mm256_set1_ps(scale);
+        let mut i = 0;
+        while i < n8 {
+            let v = _mm256_loadu_ps(p.as_ptr().add(i));
+            _mm256_storeu_ps(p.as_mut_ptr().add(i), _mm256_mul_ps(v, sv));
+            i += LANES;
+        }
+        while i < n {
+            p[i] *= scale;
+            i += 1;
+        }
+        let mut m = f32::NEG_INFINITY;
+        let mut mv = _mm256_set1_ps(f32::NEG_INFINITY);
+        i = 0;
+        while i < n8 {
+            mv = _mm256_max_ps(mv, _mm256_loadu_ps(p.as_ptr().add(i)));
+            i += LANES;
+        }
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), mv);
+        for &l in &lanes {
+            m = if m > l { m } else { l };
+        }
+        while i < n {
+            let v = p[i];
+            m = if m > v { m } else { v };
+            i += 1;
+        }
+        let mvv = _mm256_set1_ps(m);
+        let mut acc = _mm256_setzero_ps();
+        i = 0;
+        while i < n8 {
+            let x = _mm256_sub_ps(_mm256_loadu_ps(p.as_ptr().add(i)), mvv);
+            let e = exp8(x);
+            _mm256_storeu_ps(p.as_mut_ptr().add(i), e);
+            acc = _mm256_add_ps(acc, e);
+            i += LANES;
+        }
+        let mut accs = [0.0f32; 8];
+        _mm256_storeu_ps(accs.as_mut_ptr(), acc);
+        let mut denom = hsum8_tree(&accs);
+        while i < n {
+            let e = exp_poly(p[i] - m);
+            p[i] = e;
+            denom += e;
+            i += 1;
+        }
+        let inv = 1.0 / denom;
+        let iv = _mm256_set1_ps(inv);
+        i = 0;
+        while i < n8 {
+            let v = _mm256_loadu_ps(p.as_ptr().add(i));
+            _mm256_storeu_ps(p.as_mut_ptr().add(i), _mm256_mul_ps(v, iv));
+            i += LANES;
+        }
+        while i < n {
+            p[i] *= inv;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn layernorm_row_impl(row: &[f32], g: &[f32], b: &[f32], eps: f32, out: &mut [f32]) {
+        let n = row.len();
+        let n8 = n / LANES * LANES;
+        let mut accv = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < n8 {
+            accv = _mm256_add_ps(accv, _mm256_loadu_ps(row.as_ptr().add(i)));
+            i += LANES;
+        }
+        let mut accs = [0.0f32; 8];
+        _mm256_storeu_ps(accs.as_mut_ptr(), accv);
+        let mut sum = hsum8_tree(&accs);
+        while i < n {
+            sum += row[i];
+            i += 1;
+        }
+        let mu = sum / n as f32;
+        let muv = _mm256_set1_ps(mu);
+        let mut vaccv = _mm256_setzero_ps();
+        i = 0;
+        while i < n8 {
+            let d = _mm256_sub_ps(_mm256_loadu_ps(row.as_ptr().add(i)), muv);
+            vaccv = _mm256_add_ps(vaccv, _mm256_mul_ps(d, d));
+            i += LANES;
+        }
+        let mut vaccs = [0.0f32; 8];
+        _mm256_storeu_ps(vaccs.as_mut_ptr(), vaccv);
+        let mut vsum = hsum8_tree(&vaccs);
+        while i < n {
+            let d = row[i] - mu;
+            vsum += d * d;
+            i += 1;
+        }
+        let var = vsum / n as f32;
+        let inv = 1.0 / (var + eps).sqrt();
+        let iv = _mm256_set1_ps(inv);
+        i = 0;
+        while i < n8 {
+            let d = _mm256_sub_ps(_mm256_loadu_ps(row.as_ptr().add(i)), muv);
+            let scaled = _mm256_mul_ps(_mm256_mul_ps(d, iv), _mm256_loadu_ps(g.as_ptr().add(i)));
+            let r = _mm256_add_ps(scaled, _mm256_loadu_ps(b.as_ptr().add(i)));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), r);
+            i += LANES;
+        }
+        while i < n {
+            out[i] = (row[i] - mu) * inv * g[i] + b[i];
+            i += 1;
+        }
+    }
+
+    // Safe wrappers: only reachable through TABLE, which `kernels()`
+    // returns only after runtime detection confirmed avx2+fma+f16c.
+    fn dot8_acc(a: &[f32], b: &[f32], acc: &mut [f32; 8]) {
+        unsafe { dot8_acc_impl(a, b, acc) }
+    }
+    fn gemm_nt_microkernel(a: &[f32], b: [&[f32]; 4], acc: &mut [[f32; 8]; 4]) {
+        unsafe { gemm_nt_microkernel_impl(a, b, acc) }
+    }
+    fn axpy_k(a: f32, x: &[f32], y: &mut [f32]) {
+        unsafe { axpy_k_impl(a, x, y) }
+    }
+    fn axpy4_k(c: &[f32; 4], x4: &[f32], k: usize, y: &mut [f32]) {
+        unsafe { axpy4_k_impl(c, x4, k, y) }
+    }
+    fn add_k(x: &[f32], y: &mut [f32]) {
+        unsafe { add_k_impl(x, y) }
+    }
+    fn widen_f16_lanes(src: &[u16], dst: &mut [f32]) {
+        unsafe { widen_f16_lanes_impl(src, dst) }
+    }
+    fn exp_softmax_row(p: &mut [f32], scale: f32) {
+        unsafe { exp_softmax_row_impl(p, scale) }
+    }
+    fn layernorm_row(row: &[f32], g: &[f32], b: &[f32], eps: f32, out: &mut [f32]) {
+        unsafe { layernorm_row_impl(row, g, b, eps, out) }
+    }
+
+    pub(super) static TABLE: KernelDispatch = KernelDispatch {
+        level: SimdLevel::Avx2,
+        dot8_acc,
+        gemm_nt_microkernel,
+        axpy_k,
+        axpy4_k,
+        add_k,
+        widen_f16_lanes,
+        exp_softmax_row,
+        layernorm_row,
+    };
+}
+
+// --- NEON arms ------------------------------------------------------------
+// Only the pure mul/add kernels are vectorized; the transcendental and
+// widening entries point at the scalar arms (bit-compatible by
+// definition — see "How to add an arch" in the module docs). NEON is
+// baseline on aarch64, so the intrinsic calls are always valid there.
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::*;
+    use std::arch::aarch64::*;
+
+    fn dot8_acc(a: &[f32], b: &[f32], acc: &mut [f32; 8]) {
+        unsafe {
+            let n = a.len().min(b.len()) / LANES * LANES;
+            let mut lo = vld1q_f32(acc.as_ptr());
+            let mut hi = vld1q_f32(acc.as_ptr().add(4));
+            let mut i = 0;
+            while i < n {
+                let a0 = vld1q_f32(a.as_ptr().add(i));
+                let a1 = vld1q_f32(a.as_ptr().add(i + 4));
+                let b0 = vld1q_f32(b.as_ptr().add(i));
+                let b1 = vld1q_f32(b.as_ptr().add(i + 4));
+                lo = vaddq_f32(lo, vmulq_f32(a0, b0));
+                hi = vaddq_f32(hi, vmulq_f32(a1, b1));
+                i += LANES;
+            }
+            vst1q_f32(acc.as_mut_ptr(), lo);
+            vst1q_f32(acc.as_mut_ptr().add(4), hi);
+        }
+    }
+
+    fn gemm_nt_microkernel(a: &[f32], b: [&[f32]; 4], acc: &mut [[f32; 8]; 4]) {
+        unsafe {
+            let n = a.len() / LANES * LANES;
+            let mut c: [[float32x4_t; 2]; 4] = [[vdupq_n_f32(0.0); 2]; 4];
+            for (j, accj) in acc.iter().enumerate() {
+                c[j][0] = vld1q_f32(accj.as_ptr());
+                c[j][1] = vld1q_f32(accj.as_ptr().add(4));
+            }
+            let mut i = 0;
+            while i < n {
+                let a0 = vld1q_f32(a.as_ptr().add(i));
+                let a1 = vld1q_f32(a.as_ptr().add(i + 4));
+                for (j, bj) in b.iter().enumerate() {
+                    let b0 = vld1q_f32(bj.as_ptr().add(i));
+                    let b1 = vld1q_f32(bj.as_ptr().add(i + 4));
+                    c[j][0] = vaddq_f32(c[j][0], vmulq_f32(a0, b0));
+                    c[j][1] = vaddq_f32(c[j][1], vmulq_f32(a1, b1));
+                }
+                i += LANES;
+            }
+            for (j, accj) in acc.iter_mut().enumerate() {
+                vst1q_f32(accj.as_mut_ptr(), c[j][0]);
+                vst1q_f32(accj.as_mut_ptr().add(4), c[j][1]);
+            }
+        }
+    }
+
+    fn axpy_k(a: f32, x: &[f32], y: &mut [f32]) {
+        unsafe {
+            let n = x.len().min(y.len());
+            let n4 = n / 4 * 4;
+            let av = vdupq_n_f32(a);
+            let mut i = 0;
+            while i < n4 {
+                let xv = vld1q_f32(x.as_ptr().add(i));
+                let yv = vld1q_f32(y.as_ptr().add(i));
+                vst1q_f32(y.as_mut_ptr().add(i), vaddq_f32(yv, vmulq_f32(av, xv)));
+                i += 4;
+            }
+            while i < n {
+                y[i] += a * x[i];
+                i += 1;
+            }
+        }
+    }
+
+    fn axpy4_k(c: &[f32; 4], x4: &[f32], k: usize, y: &mut [f32]) {
+        unsafe {
+            let n = k.min(y.len());
+            let n4 = n / 4 * 4;
+            let c0 = vdupq_n_f32(c[0]);
+            let c1 = vdupq_n_f32(c[1]);
+            let c2 = vdupq_n_f32(c[2]);
+            let c3 = vdupq_n_f32(c[3]);
+            let mut i = 0;
+            while i < n4 {
+                let t01 = vaddq_f32(
+                    vmulq_f32(c0, vld1q_f32(x4.as_ptr().add(i))),
+                    vmulq_f32(c1, vld1q_f32(x4.as_ptr().add(k + i))),
+                );
+                let t23 = vaddq_f32(
+                    vmulq_f32(c2, vld1q_f32(x4.as_ptr().add(2 * k + i))),
+                    vmulq_f32(c3, vld1q_f32(x4.as_ptr().add(3 * k + i))),
+                );
+                let yv = vld1q_f32(y.as_ptr().add(i));
+                vst1q_f32(y.as_mut_ptr().add(i), vaddq_f32(yv, vaddq_f32(t01, t23)));
+                i += 4;
+            }
+            while i < n {
+                let t01 = c[0] * x4[i] + c[1] * x4[k + i];
+                let t23 = c[2] * x4[2 * k + i] + c[3] * x4[3 * k + i];
+                y[i] += t01 + t23;
+                i += 1;
+            }
+        }
+    }
+
+    fn add_k(x: &[f32], y: &mut [f32]) {
+        unsafe {
+            let n = x.len().min(y.len());
+            let n4 = n / 4 * 4;
+            let mut i = 0;
+            while i < n4 {
+                let xv = vld1q_f32(x.as_ptr().add(i));
+                let yv = vld1q_f32(y.as_ptr().add(i));
+                vst1q_f32(y.as_mut_ptr().add(i), vaddq_f32(yv, xv));
+                i += 4;
+            }
+            while i < n {
+                y[i] += x[i];
+                i += 1;
+            }
+        }
+    }
+
+    pub(super) static TABLE: KernelDispatch = KernelDispatch {
+        level: SimdLevel::Neon,
+        dot8_acc,
+        gemm_nt_microkernel,
+        axpy_k,
+        axpy4_k,
+        add_k,
+        widen_f16_lanes: widen_f16_lanes_scalar,
+        exp_softmax_row: exp_softmax_row_scalar,
+        layernorm_row: layernorm_row_scalar,
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn assert_bits_eq(s: &[f32], b: &[f32], what: &str) {
+        assert_eq!(s.len(), b.len(), "{what}: length mismatch");
+        for (i, (x, y)) in s.iter().zip(b).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{what}: bit mismatch at {i}: {x} vs {y}"
+            );
+        }
+    }
+
+    /// Run `f` under the scalar table, then under `best`, restoring the
+    /// previous level; returns (scalar result, best result).
+    fn race<T>(best: SimdLevel, mut f: impl FnMut() -> T) -> (T, T) {
+        let prev = force_level(SimdLevel::Scalar);
+        let s = f();
+        force_level(best);
+        let b = f();
+        force_level(prev);
+        (s, b)
+    }
+
+    /// All dispatched kernels must be bit-identical between the scalar
+    /// arm and the best detected arm, across odd lengths, unaligned
+    /// offsets, lane-remainder tails, empty inputs and f16 inputs. One
+    /// test (not one per kernel) because `force_level` is process-global
+    /// and the test harness runs tests concurrently.
+    #[test]
+    fn simd_arms_bit_match_scalar_reference() {
+        let best = active_level();
+        let mut rng = Rng::new(0xD15EA5E);
+        let lens = [0usize, 1, 2, 5, 7, 8, 9, 15, 16, 17, 31, 32, 33, 63, 64, 67];
+        for &len in &lens {
+            for &off in &[0usize, 1, 3] {
+                let n = off + len;
+                let mut a = vec![0.0f32; n];
+                let mut b = vec![0.0f32; n.max(off + 4 * len.max(1))];
+                let mut y0 = vec![0.0f32; n];
+                rng.fill_gaussian(&mut a);
+                rng.fill_gaussian(&mut b);
+                rng.fill_gaussian(&mut y0);
+                let a = &a[off..];
+                let coef = [a.first().copied().unwrap_or(0.5), -0.25, 1.5, -2.0];
+
+                // dot8_acc over the lane prefix (carried accumulator)
+                let n8 = len / LANES * LANES;
+                let (s, v) = race(best, || {
+                    let mut acc = [0.1f32; 8];
+                    (kernels().dot8_acc)(&a[..n8], &b[off..off + n8], &mut acc);
+                    acc
+                });
+                assert_bits_eq(&s, &v, "dot8_acc");
+
+                // gemm_nt_microkernel: 4 B rows, carried accumulators
+                if 4 * len + off <= b.len() {
+                    let b4 = &b[off..off + 4 * len];
+                    let (s, v) = race(best, || {
+                        let mut acc = [[0.25f32; 8]; 4];
+                        let rows = [
+                            &b4[..n8],
+                            &b4[len..len + n8],
+                            &b4[2 * len..2 * len + n8],
+                            &b4[3 * len..3 * len + n8],
+                        ];
+                        (kernels().gemm_nt_microkernel)(&a[..n8], rows, &mut acc);
+                        acc
+                    });
+                    for j in 0..4 {
+                        assert_bits_eq(&s[j], &v[j], "gemm_nt_microkernel");
+                    }
+                    // each column must equal a standalone dot8_acc
+                    let mut acc1 = [0.25f32; 8];
+                    (kernels().dot8_acc)(&a[..n8], &b4[..n8], &mut acc1);
+                    assert_bits_eq(&acc1, &v[0], "microkernel column vs dot8_acc");
+                }
+
+                // axpy_k / add_k
+                let (s, v) = race(best, || {
+                    let mut y = y0[off.min(y0.len())..].to_vec();
+                    (kernels().axpy_k)(1.75, a, &mut y);
+                    (kernels().add_k)(a, &mut y);
+                    y
+                });
+                assert_bits_eq(&s, &v, "axpy_k/add_k");
+
+                // axpy4_k from 4 stride-len rows
+                if len > 0 && 4 * len + off <= b.len() {
+                    let (s, v) = race(best, || {
+                        let mut y = vec![0.5f32; len];
+                        (kernels().axpy4_k)(&coef, &b[off..off + 4 * len], len, &mut y);
+                        y
+                    });
+                    assert_bits_eq(&s, &v, "axpy4_k");
+                }
+
+                // exp_softmax_row on finite scores
+                let (s, v) = race(best, || {
+                    let mut p: Vec<f32> = a.iter().map(|&x| 3.0 * x).collect();
+                    (kernels().exp_softmax_row)(&mut p, 0.37);
+                    p
+                });
+                assert_bits_eq(&s, &v, "exp_softmax_row");
+
+                // layernorm_row
+                if len > 0 {
+                    let g: Vec<f32> = (0..len).map(|i| 1.0 + 0.01 * i as f32).collect();
+                    let bb: Vec<f32> = (0..len).map(|i| -0.02 * i as f32).collect();
+                    let (s, v) = race(best, || {
+                        let mut out = vec![0.0f32; len];
+                        (kernels().layernorm_row)(a, &g, &bb, 1e-5, &mut out);
+                        out
+                    });
+                    assert_bits_eq(&s, &v, "layernorm_row");
+                }
+
+                // widen_f16_lanes on round-tripped gaussian values
+                let h: Vec<u16> = a.iter().map(|&x| crate::util::fp16::f32_to_f16(x)).collect();
+                let (s, v) = race(best, || {
+                    let mut out = vec![0.0f32; h.len()];
+                    (kernels().widen_f16_lanes)(&h, &mut out);
+                    out
+                });
+                assert_bits_eq(&s, &v, "widen_f16_lanes");
+            }
+        }
+
+        // exhaustive f16 widening: the active arm must match the software
+        // codec for every one of the 65536 bit patterns (incl. NaNs,
+        // which both quiet the same way — payload compared bitwise).
+        let all: Vec<u16> = (0..=u16::MAX).collect();
+        let (s, v) = race(best, || {
+            let mut out = vec![0.0f32; all.len()];
+            (kernels().widen_f16_lanes)(&all, &mut out);
+            out
+        });
+        assert_bits_eq(&s, &v, "widen_f16_lanes exhaustive");
+        for (h, w) in all.iter().zip(&v) {
+            assert_eq!(
+                w.to_bits(),
+                crate::util::fp16::f16_to_f32(*h).to_bits(),
+                "widen arm vs fp16 codec at bits {h:#06x}"
+            );
+        }
+
+        // chunk-carry invariance: dot8_acc split at any lane boundary
+        // reduces identically to one full pass (the staging loops in
+        // matrix.rs rely on this).
+        let mut a = vec![0.0f32; 80];
+        let mut b = vec![0.0f32; 80];
+        rng.fill_gaussian(&mut a);
+        rng.fill_gaussian(&mut b);
+        let mut whole = [0.0f32; 8];
+        (kernels().dot8_acc)(&a, &b, &mut whole);
+        for &split in &[8usize, 24, 40, 72] {
+            let mut acc = [0.0f32; 8];
+            (kernels().dot8_acc)(&a[..split], &b[..split], &mut acc);
+            (kernels().dot8_acc)(&a[split..], &b[split..], &mut acc);
+            assert_bits_eq(&whole, &acc, "dot8_acc chunk carry");
+        }
+    }
+
+    #[test]
+    fn polynomial_exp_tracks_reference_exp() {
+        for i in 0..=8700 {
+            let x = -(i as f64) * 0.01;
+            let e = exp_poly(x as f32) as f64;
+            let r = x.exp();
+            let rel = ((e - r) / r).abs();
+            assert!(rel < 1e-6, "exp_poly({x}) = {e}, want {r} (rel {rel:.2e})");
+        }
+        assert_eq!(exp_poly(0.0), 1.0);
+        assert_eq!(exp_poly(-0.0), 1.0);
+        assert_eq!(exp_poly(-100.0), 0.0);
+    }
+
+    #[test]
+    fn exp_softmax_row_matches_naive_softmax() {
+        let mut rng = Rng::new(7);
+        let mut x = vec![0.0f32; 97];
+        rng.fill_gaussian(&mut x);
+        let scale = 0.125f32;
+        let naive: Vec<f64> = {
+            let m = x
+                .iter()
+                .map(|&v| (v * scale) as f64)
+                .fold(f64::NEG_INFINITY, f64::max);
+            let e: Vec<f64> = x.iter().map(|&v| ((v * scale) as f64 - m).exp()).collect();
+            let d: f64 = e.iter().sum();
+            e.into_iter().map(|v| v / d).collect()
+        };
+        let mut p = x.clone();
+        (kernels().exp_softmax_row)(&mut p, scale);
+        let sum: f64 = p.iter().map(|&v| v as f64).sum();
+        assert!((sum - 1.0).abs() < 1e-5, "softmax row sums to {sum}");
+        for (a, b) in p.iter().zip(&naive) {
+            assert!((*a as f64 - b).abs() < 1e-6, "softmax {a} vs naive {b}");
+        }
+        // empty rows are a no-op, not a panic
+        (kernels().exp_softmax_row)(&mut [], 1.0);
+    }
+
+    #[test]
+    fn padded_k_rounds_to_lane_multiples() {
+        assert_eq!(padded_k(0), 0);
+        assert_eq!(padded_k(1), 1);
+        assert_eq!(padded_k(2), 8);
+        assert_eq!(padded_k(8), 8);
+        assert_eq!(padded_k(9), 16);
+        assert_eq!(padded_k(32), 32);
+        assert_eq!(padded_k(33), 40);
+    }
+}

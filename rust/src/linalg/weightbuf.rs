@@ -73,20 +73,49 @@ impl std::str::FromStr for Dtype {
 /// `widen` is the identity for f32, so the f32 monomorphization compiles
 /// to exactly the pre-dtype-generic kernels.
 pub trait WeightElem: Copy {
+    /// Whether `as_f32_lanes` needs a scratch buffer (true for f16).
+    /// Kernels branch on this const so the pure-f32 monomorphizations
+    /// never touch (or zero-initialize) staging storage.
+    const NEEDS_WIDEN: bool;
+
     fn widen(self) -> f32;
+
+    /// View a run of elements as f32 lanes for the SIMD kernels: the f32
+    /// impl returns the slice itself (zero-copy, scratch untouched); the
+    /// f16 impl widens into the caller's scratch via the dispatched
+    /// `simd::widen_f16_lanes` — the single f16→f32 widening primitive —
+    /// and returns the widened prefix. When `NEEDS_WIDEN`,
+    /// `scratch.len() >= src.len()` is required.
+    fn as_f32_lanes<'a>(src: &'a [Self], scratch: &'a mut [f32]) -> &'a [f32];
 }
 
 impl WeightElem for f32 {
+    const NEEDS_WIDEN: bool = false;
+
     #[inline(always)]
     fn widen(self) -> f32 {
         self
     }
+
+    #[inline(always)]
+    fn as_f32_lanes<'a>(src: &'a [f32], _scratch: &'a mut [f32]) -> &'a [f32] {
+        src
+    }
 }
 
 impl WeightElem for u16 {
+    const NEEDS_WIDEN: bool = true;
+
     #[inline(always)]
     fn widen(self) -> f32 {
         f16_to_f32(self)
+    }
+
+    #[inline]
+    fn as_f32_lanes<'a>(src: &'a [u16], scratch: &'a mut [f32]) -> &'a [f32] {
+        let dst = &mut scratch[..src.len()];
+        (crate::linalg::simd::kernels().widen_f16_lanes)(src, dst);
+        dst
     }
 }
 
@@ -167,28 +196,33 @@ impl WeightBuf {
         }
     }
 
-    /// Widen to f32 residency (exact; idempotent).
+    /// Widen to f32 residency (exact; idempotent). Bulk widening rides
+    /// the same dispatched lane primitive as the kernels.
     pub fn to_f32(&self) -> WeightBuf {
         match self {
             WeightBuf::F32(v) => WeightBuf::F32(v.clone()),
-            WeightBuf::F16(v) => WeightBuf::F32(v.iter().map(|&h| f16_to_f32(h)).collect()),
+            WeightBuf::F16(v) => {
+                let mut out = vec![0.0f32; v.len()];
+                (crate::linalg::simd::kernels().widen_f16_lanes)(v, &mut out);
+                WeightBuf::F32(out)
+            }
         }
     }
 }
 
 /// Widen raw binary16 bit patterns into a reusable f32 staging buffer
-/// (exact; one pass, trivially vectorizable) and return the widened
-/// prefix. `stage` grows on demand and is never shrunk, so a workspace-
-/// owned buffer is allocation-free after warmup. This is the f16 staging
-/// path of the batched apply engine: one wholesale widen per block per
-/// call instead of per-element conversion inside the hot kernel's lanes.
+/// (exact; one pass through the dispatched `simd::widen_f16_lanes`
+/// primitive — F16C on AVX2, the software codec elsewhere) and return
+/// the widened prefix. `stage` grows on demand and is never shrunk, so a
+/// workspace-owned buffer is allocation-free after warmup. This is the
+/// f16 staging path of the batched apply engine: one wholesale widen per
+/// block per call instead of per-element conversion inside the hot
+/// kernel's lanes.
 pub fn widen_f16_into<'a>(bits: &[u16], stage: &'a mut Vec<f32>) -> &'a [f32] {
     if stage.len() < bits.len() {
         stage.resize(bits.len(), 0.0);
     }
-    for (s, &b) in stage.iter_mut().zip(bits.iter()) {
-        *s = f16_to_f32(b);
-    }
+    (crate::linalg::simd::kernels().widen_f16_lanes)(bits, &mut stage[..bits.len()]);
     &stage[..bits.len()]
 }
 

@@ -4,14 +4,19 @@
 //! block so projections and MLP run as single thin-matrix multiplies; this
 //! module does the same for attention. [`attention_batch`] walks a
 //! per-window offset table over the stacked Q/K/V blocks and, per (window,
-//! head), packs the K/V head slices contiguous, forms the causal score rows
-//! with the shared [`gemm_nt_add`] dot kernel, and applies the softmax
-//! weights to V with the shared [`apply_batch_add_w`] axpy kernel — the
-//! same thin multiplies every other kernel in the stack runs. All scratch
-//! (packed head slices, softmax row) lives in a reusable [`AttnWorkspace`]
-//! sized to the longest window, so a serving batch performs **zero
-//! per-window allocation**: one `attention_batch` call replaces k
-//! `causal_mha` calls that each allocated score/output matrices.
+//! head), packs the K/V head slices contiguous at the lane-padded stride
+//! (`simd::padded_k(head_dim)`, zero-filled pad lanes — so the per-key
+//! kernels run whole 8-lane groups with no scalar tail), forms the causal
+//! score rows with the dispatched `dot8_acc` kernel, runs the fused
+//! scale+max+exp+normalize softmax through `simd::exp_softmax_row` (the
+//! exp loop was the last scalar hotspot), and applies the softmax weights
+//! to V with the dispatched axpy — the same SIMD kernel layer every other
+//! kernel in the stack rides ([`crate::linalg::simd`]). All scratch
+//! (packed head slices, softmax row, padded query/context rows) lives in
+//! a reusable [`AttnWorkspace`] sized to the longest window, so a serving
+//! batch performs **zero per-window allocation**: one `attention_batch`
+//! call replaces k `causal_mha` calls that each allocated score/output
+//! matrices.
 //!
 //! [`causal_mha`] is kept as the single-window (k = 1) case of the same
 //! code path — mirroring how `matvec_with` is the k = 1 case of
@@ -30,36 +35,45 @@
 //! far below the ~microsecond granularity where a span guard's two clock
 //! reads stay invisible — see the span-guard rules in [`crate::obs`].
 
-use crate::linalg::matrix::{apply_batch_add_w, gemm_nt_add};
+use crate::linalg::simd;
 use crate::linalg::Matrix;
 
 /// Reusable scratch for [`attention_batch`]: packed per-head K/V slices
-/// and one softmax row, sized to the longest window seen so far (grown on
-/// demand, never shrunk). Q needs no packing — each query's head slice is
-/// already a contiguous [1, hd] row read exactly once. A default
-/// workspace is valid for any call and warms up on first use; after
-/// warmup the batched attention allocates nothing.
+/// (rows padded to the SIMD lane stride so the score/context kernels run
+/// tail-free), one softmax row, and two lane-padded head rows (query in,
+/// context out). Q is only copied when the head width needs padding.
+/// A default workspace is valid for any call and warms up on first use;
+/// after warmup the batched attention allocates nothing.
 #[derive(Default)]
 pub struct AttnWorkspace {
-    /// packed [t, hd] head slice of K (rows contiguous, unlike the strided
-    /// head columns of the stacked [Σt, d] block)
+    /// packed [t, hd_pad] head slice of K (rows contiguous and
+    /// zero-padded to the lane multiple, unlike the strided head columns
+    /// of the stacked [Σt, d] block)
     kh: Vec<f32>,
-    /// packed [t, hd] head slice of V
+    /// packed [t, hd_pad] head slice of V
     vh: Vec<f32>,
     /// one causal score/softmax row (≤ t_max entries live per query)
     probs: Vec<f32>,
+    /// lane-padded copy of one query head row (used when hd_pad != hd)
+    qrow: Vec<f32>,
+    /// lane-padded accumulator for one context head row
+    opad: Vec<f32>,
 }
 
 impl AttnWorkspace {
-    /// Grow the buffers to fit windows up to `t_max` rows at head width
-    /// `hd` (idempotent; only ever grows).
-    pub fn ensure(&mut self, t_max: usize, hd: usize) {
-        if self.kh.len() < t_max * hd {
-            self.kh.resize(t_max * hd, 0.0);
-            self.vh.resize(t_max * hd, 0.0);
+    /// Grow the buffers to fit windows up to `t_max` rows at padded head
+    /// width `hd_pad` (idempotent; only ever grows).
+    pub fn ensure(&mut self, t_max: usize, hd_pad: usize) {
+        if self.kh.len() < t_max * hd_pad {
+            self.kh.resize(t_max * hd_pad, 0.0);
+            self.vh.resize(t_max * hd_pad, 0.0);
         }
         if self.probs.len() < t_max {
             self.probs.resize(t_max, 0.0);
+        }
+        if self.qrow.len() < hd_pad {
+            self.qrow.resize(hd_pad, 0.0);
+            self.opad.resize(hd_pad, 0.0);
         }
     }
 }
@@ -104,9 +118,16 @@ pub fn attention_batch(
     );
     let hd = d / n_heads;
     let scale = 1.0 / (hd as f32).sqrt();
+    // Pack K/V rows at the lane-padded stride so every score dot and
+    // context axpy runs whole 8-lane groups with no scalar tail. The pad
+    // lanes are zero: they contribute exact +0 products to the score
+    // reduction and zero context columns that are never copied out, so
+    // padding is invisible in the results at every dispatch level.
+    let hd_pad = simd::padded_k(hd);
     let t_max = offsets.windows(2).map(|w| w[1] - w[0]).max().unwrap_or(0);
-    ws.ensure(t_max, hd);
-    let AttnWorkspace { kh, vh, probs } = ws;
+    ws.ensure(t_max, hd_pad);
+    let AttnWorkspace { kh, vh, probs, qrow, opad } = ws;
+    let kt = simd::kernels();
 
     for wi in 0..offsets.len() - 1 {
         let (off, end) = (offsets[wi], offsets[wi + 1]);
@@ -118,38 +139,51 @@ pub fn attention_batch(
         for h in 0..n_heads {
             let c0 = h * hd;
             // pack the K/V head slices contiguous: strided [t, d] columns
-            // c0..c0+hd become row-major [t, hd] blocks, so the t² score
-            // and context passes stream dense cache lines (Q is consumed
-            // one already-contiguous row at a time — no copy needed)
+            // c0..c0+hd become row-major [t, hd_pad] blocks, so the t²
+            // score and context passes stream dense cache lines (Q is
+            // consumed one row at a time — copied only if padding is
+            // needed). Pad lanes are re-zeroed per pack because the
+            // workspace is reused across calls with different strides.
             for i in 0..t {
-                kh[i * hd..(i + 1) * hd].copy_from_slice(&k.row(off + i)[c0..c0 + hd]);
-                vh[i * hd..(i + 1) * hd].copy_from_slice(&v.row(off + i)[c0..c0 + hd]);
+                kh[i * hd_pad..i * hd_pad + hd].copy_from_slice(&k.row(off + i)[c0..c0 + hd]);
+                kh[i * hd_pad + hd..(i + 1) * hd_pad].fill(0.0);
+                vh[i * hd_pad..i * hd_pad + hd].copy_from_slice(&v.row(off + i)[c0..c0 + hd]);
+                vh[i * hd_pad + hd..(i + 1) * hd_pad].fill(0.0);
             }
             for i in 0..t {
-                // causal score row: only keys 0..=i are ever formed
+                let qsrc = &q.row(off + i)[c0..c0 + hd];
+                let qi: &[f32] = if hd_pad == hd {
+                    qsrc
+                } else {
+                    qrow[..hd].copy_from_slice(qsrc);
+                    qrow[hd..hd_pad].fill(0.0);
+                    &qrow[..hd_pad]
+                };
+                // causal score row: only keys 0..=i are ever formed, each
+                // via the dispatched dot kernel (tree-then-tail reduction)
                 let pr = &mut probs[..=i];
-                pr.fill(0.0);
-                let qi = &q.row(off + i)[c0..c0 + hd];
-                gemm_nt_add(qi, &kh[..(i + 1) * hd], 1, i + 1, hd, pr);
-                // softmax (streaming max, same order as the scalar ref)
-                let mut maxs = f32::NEG_INFINITY;
-                for p in pr.iter_mut() {
-                    *p *= scale;
-                    maxs = maxs.max(*p);
+                let n8 = qi.len() / simd::LANES * simd::LANES;
+                for (j, pj) in pr.iter_mut().enumerate() {
+                    let krow = &kh[j * hd_pad..j * hd_pad + qi.len()];
+                    let mut acc = [0.0f32; 8];
+                    (kt.dot8_acc)(&qi[..n8], &krow[..n8], &mut acc);
+                    let mut s = simd::hsum8_tree(&acc);
+                    for c in n8..qi.len() {
+                        s += qi[c] * krow[c];
+                    }
+                    *pj = s;
                 }
-                let mut denom = 0.0f32;
-                for p in pr.iter_mut() {
-                    *p = (*p - maxs).exp();
-                    denom += *p;
+                // fused scale + max-subtract + vectorized exp + normalize
+                // (the exp loop was the last scalar hotspot)
+                (kt.exp_softmax_row)(pr, scale);
+                // context row: out[off+i, c0..c0+hd] = probs · V[0..=i],
+                // one dispatched axpy per key over the padded V rows
+                let od = &mut opad[..hd_pad];
+                od.fill(0.0);
+                for (j, &pj) in pr.iter().enumerate() {
+                    (kt.axpy_k)(pj, &vh[j * hd_pad..(j + 1) * hd_pad], od);
                 }
-                let inv = 1.0 / denom;
-                for p in pr.iter_mut() {
-                    *p *= inv;
-                }
-                // context row: out[off+i, c0..c0+hd] = probs · V[0..=i]
-                let orow = &mut out.row_mut(off + i)[c0..c0 + hd];
-                orow.fill(0.0);
-                apply_batch_add_w(&probs[..=i], 1, i + 1, &vh[..(i + 1) * hd], orow, hd);
+                out.row_mut(off + i)[c0..c0 + hd].copy_from_slice(&od[..hd]);
             }
         }
     }

@@ -15,6 +15,7 @@
 
 use crate::compress::pipeline::{compress_model_qkv, summarize, LayerReport};
 use crate::compress::{CompressedMatrix, CompressorConfig, Method};
+use crate::linalg::simd;
 use crate::linalg::Matrix;
 use crate::model::transformer::{Proj, QkvProjector, Transformer};
 use std::sync::Arc;
@@ -235,11 +236,32 @@ impl QkvProjector for CompressedModel {
         // c stores A = Wᵀ so Outᵀ = A · aᵀ: transpose the activations into
         // a column block and run ONE batched traversal for all rows of `a`
         // (every token of every stacked window at once), instead of one
-        // tree walk / spmv per token
-        let xt = a.transpose();
-        let mut yt = Matrix::zeros(a.cols, a.rows);
-        PROJECT_WS.with(|ws| c.apply_batch(&xt, &mut yt, &mut ws.borrow_mut()));
-        yt.transpose()
+        // tree walk / spmv per token. The batch width (k = tokens) is the
+        // SIMD lane axis of every kernel under `apply_batch_with`, so pad
+        // it to a lane multiple with zero columns: input columns are
+        // independent, so the pad lanes stay zero end-to-end and the real
+        // columns are bit-identical — the kernels just run whole lane
+        // groups with no scalar tail.
+        let (t, d) = (a.rows, a.cols);
+        let kp = simd::padded_k(t);
+        let mut xt = vec![0.0f32; d * kp];
+        for i in 0..t {
+            let row = a.row(i);
+            for j in 0..d {
+                xt[j * kp + i] = row[j];
+            }
+        }
+        let mut yt = vec![0.0f32; d * kp];
+        PROJECT_WS.with(|ws| c.apply_batch_with(&xt, &mut yt, kp, &mut ws.borrow_mut()));
+        // transpose back, dropping the pad columns
+        let mut out = Matrix::zeros(t, d);
+        for i in 0..t {
+            let orow = out.row_mut(i);
+            for j in 0..d {
+                orow[j] = yt[j * kp + i];
+            }
+        }
+        out
     }
 }
 

@@ -6,7 +6,30 @@
 //! through it with either dense or compressed q/k/v projections (see
 //! [`crate::model::CompressedModel`]); the AOT HLO executables provide the
 //! serving path and a cross-check.
+//!
+//! # Fused residual + layernorm epilogues
+//!
+//! The batched pass keeps each residual add *pending* instead of
+//! materialising it eagerly: the attention residual is folded into `h`
+//! inside the same row pass that computes ln2's output, and the MLP
+//! residual is carried across the layer boundary and folded inside the
+//! next layer's ln1 (or the final layernorm). Each fusion point
+//! ([`fused_add_layernorm`]) touches every activation row exactly once —
+//! add in place, then [`crate::linalg::simd`]'s `layernorm_row` kernel on
+//! the freshly written (cache-hot) row — where the unfused sequence
+//! (`h = h.add(&r)` allocate+write, then a separate layernorm read) cost
+//! three full [Σt, d] memory round-trips. The avoided traffic is counted
+//! in the always-on `bytes_saved_fusion` gauge
+//! ([`crate::obs::StageRegistry::add_fusion_saved_bytes`]).
+//!
+//! Numerics: f32 addition is commutative and the fused add performs the
+//! same per-element `h[j] + r[j]`, and both the fused path and the public
+//! [`layernorm`] route through the same dispatched `layernorm_row`
+//! kernel, so fusion is bit-invisible — `forward_batch` output and the
+//! `qkv_inputs` capture are bit-identical to an unfused pass over the
+//! same kernels.
 
+use crate::linalg::simd;
 use crate::linalg::Matrix;
 use crate::model::weights::WeightFile;
 use crate::model::ModelConfig;
@@ -236,9 +259,18 @@ impl Transformer {
             off += t;
         }
 
+        // the most recent residual branch (this layer's MLP output) not yet
+        // folded into `h` — each fold fuses with the next layernorm so the
+        // rows make one memory round-trip instead of three
+        let mut pending: Option<Matrix> = None;
+
         for (li, l) in self.layers.iter().enumerate() {
-            // attention block
-            let a = layernorm(&h, &l.ln1_g, &l.ln1_b);
+            // attention block: fold the previous layer's MLP residual (if
+            // any) fused with this layer's ln1
+            let a = match pending.take() {
+                Some(r) => fused_add_layernorm(&mut h, &r, &l.ln1_g, &l.ln1_b),
+                None => layernorm(&h, &l.ln1_g, &l.ln1_b),
+            };
             if let Some(cap) = capture.as_mut() {
                 cap.push(a.clone());
                 if li + 1 == self.layers.len() {
@@ -262,12 +294,12 @@ impl Transformer {
                 });
             }
             let oh = o.matmul(&l.wo);
-            h = h.add(&oh);
 
-            // mlp block (row-wise, so the stack batches it for free)
+            // mlp block (row-wise, so the stack batches it for free); the
+            // attention residual folds into `h` fused with ln2
             {
                 let _span = crate::obs::Span::enter(crate::obs::Stage::Mlp);
-                let m = layernorm(&h, &l.ln2_g, &l.ln2_b);
+                let m = fused_add_layernorm(&mut h, &oh, &l.ln2_g, &l.ln2_b);
                 let mut ff = m.matmul(&l.w1);
                 for i in 0..total {
                     let row = ff.row_mut(i);
@@ -282,7 +314,8 @@ impl Transformer {
                         *x += *b;
                     }
                 }
-                h = h.add(&ff2);
+                // held pending: folds fused with the next layernorm
+                pending = Some(ff2);
             }
         }
 
@@ -293,7 +326,11 @@ impl Transformer {
             return Vec::new();
         }
 
-        let hf = layernorm(&h, &self.lnf_g, &self.lnf_b);
+        // last layer's MLP residual fuses with the final layernorm
+        let hf = match pending.take() {
+            Some(r) => fused_add_layernorm(&mut h, &r, &self.lnf_g, &self.lnf_b),
+            None => layernorm(&h, &self.lnf_g, &self.lnf_b),
+        };
         // tied output head: logits = hf @ tok_embᵀ
         let mut logits = Matrix::zeros(total, self.cfg.vocab);
         hf.matmul_bt_into(&self.tok_emb, &mut logits);
@@ -329,19 +366,39 @@ impl Transformer {
     }
 }
 
-/// Row-wise layernorm matching jax (eps inside rsqrt).
+/// Fused residual epilogue: fold `r` into `h` in place and layernorm each
+/// freshly written row in the same pass. Bit-identical to
+/// `h = h.add(&r); layernorm(&h, g, b)` (same per-element add, same
+/// dispatched `layernorm_row` kernel) but touches every row once while it
+/// is cache-hot instead of allocating a sum matrix and re-reading it — the
+/// avoided two extra [rows, cols] round-trips are credited to the
+/// `bytes_saved_fusion` gauge.
+fn fused_add_layernorm(h: &mut Matrix, r: &Matrix, g: &[f32], b: &[f32]) -> Matrix {
+    assert_eq!((h.rows, h.cols), (r.rows, r.cols), "residual shape");
+    let kt = simd::kernels();
+    let mut out = Matrix::zeros(h.rows, h.cols);
+    for i in 0..h.rows {
+        let hrow = h.row_mut(i);
+        (kt.add_k)(r.row(i), hrow);
+        (kt.layernorm_row)(hrow, g, b, 1e-5, out.row_mut(i));
+    }
+    // unfused: write h+r (1 round-trip) then read it back for layernorm
+    // (another) — fused skips both, keeping only the in-place update
+    crate::obs::registry().add_fusion_saved_bytes(2 * (h.rows * h.cols * 4) as u64);
+    #[cfg(feature = "obs-flops")]
+    // one add + the ~7-flop/element normalize per element, 8 bytes moved
+    crate::obs::count_flops((h.rows * h.cols * 8) as u64, (h.rows * h.cols * 8) as u64);
+    out
+}
+
+/// Row-wise layernorm matching jax (eps inside rsqrt), routed through the
+/// dispatched `layernorm_row` kernel — the same arm the fused epilogues
+/// use, so capture comparisons against this function stay bitwise.
 pub fn layernorm(x: &Matrix, g: &[f32], b: &[f32]) -> Matrix {
+    let kt = simd::kernels();
     let mut out = Matrix::zeros(x.rows, x.cols);
-    let n = x.cols as f32;
     for i in 0..x.rows {
-        let row = x.row(i);
-        let mu: f32 = row.iter().sum::<f32>() / n;
-        let var: f32 = row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / n;
-        let inv = 1.0 / (var + 1e-5).sqrt();
-        let orow = out.row_mut(i);
-        for j in 0..x.cols {
-            orow[j] = (row[j] - mu) * inv * g[j] + b[j];
-        }
+        (kt.layernorm_row)(x.row(i), g, b, 1e-5, out.row_mut(i));
     }
     out
 }

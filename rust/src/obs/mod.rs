@@ -164,6 +164,12 @@ impl StageStats {
 pub struct StageRegistry {
     stages: [StageStats; Stage::COUNT],
     enabled: AtomicBool,
+    /// Bytes of activation-memory round-trips the fused serving epilogues
+    /// avoided (residual-add + layernorm folded into one pass instead of
+    /// three). Always on — one relaxed add per fused call — because the
+    /// fusion win is a headline serving metric, unlike the per-kernel
+    /// flop/byte attribution that stays behind `obs-flops`.
+    fusion_saved: AtomicU64,
 }
 
 impl StageRegistry {
@@ -171,6 +177,7 @@ impl StageRegistry {
         StageRegistry {
             stages: std::array::from_fn(|_| StageStats::new()),
             enabled: AtomicBool::new(true),
+            fusion_saved: AtomicU64::new(0),
         }
     }
 
@@ -261,17 +268,32 @@ impl StageRegistry {
         s.bytes.fetch_add(bytes, Ordering::Relaxed);
     }
 
+    /// Credit `bytes` of avoided activation-memory traffic to the fused
+    /// epilogues. The fused call sites (see
+    /// `transformer::fused_add_layernorm`) report the row round-trips the
+    /// fusion skipped relative to the unfused three-pass sequence.
+    pub fn add_fusion_saved_bytes(&self, bytes: u64) {
+        self.fusion_saved.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Bytes of memory traffic avoided by fusion since the last reset.
+    pub fn fusion_saved_bytes(&self) -> u64 {
+        self.fusion_saved.load(Ordering::Relaxed)
+    }
+
     /// Zero every stage (bench/test isolation; gauges elsewhere untouched).
     pub fn reset(&self) {
         for s in &self.stages {
             s.reset();
         }
+        self.fusion_saved.store(0, Ordering::Relaxed);
     }
 
     /// Structured snapshot: `{stage_name: {count, total_us, mean_us,
     /// p50_us, p95_us, p99_us, p999_us}}` (+ `flops`/`bytes` under the
-    /// `obs-flops` feature). Key set is stable — BTreeMap order, fixed
-    /// stage names.
+    /// `obs-flops` feature), plus the always-on top-level
+    /// `bytes_saved_fusion` gauge. Key set is stable — BTreeMap order,
+    /// fixed stage names.
     pub fn to_json(&self) -> Json {
         let mut stages = Vec::new();
         for &st in Stage::ALL.iter() {
@@ -293,6 +315,7 @@ impl StageRegistry {
             }
             stages.push((st.name(), obj(fields)));
         }
+        stages.push(("bytes_saved_fusion", num(self.fusion_saved_bytes() as f64)));
         obj(stages)
     }
 
@@ -513,8 +536,28 @@ mod tests {
         let text = j.to_string();
         assert!(text.contains("\"hss_walk\""));
         assert!(text.contains("\"p999_us\""));
+        assert!(text.contains("\"bytes_saved_fusion\""));
         let back = Json::parse(&text).unwrap();
         assert_eq!(back, j);
+    }
+
+    #[test]
+    fn fusion_saved_bytes_accumulates_and_resets() {
+        let r = StageRegistry::new();
+        assert_eq!(r.fusion_saved_bytes(), 0);
+        r.add_fusion_saved_bytes(256);
+        r.add_fusion_saved_bytes(44);
+        assert_eq!(r.fusion_saved_bytes(), 300);
+        assert!(r
+            .to_json()
+            .to_string()
+            .contains("\"bytes_saved_fusion\":300"));
+        r.reset();
+        assert_eq!(r.fusion_saved_bytes(), 0);
+        assert!(r
+            .to_json()
+            .to_string()
+            .contains("\"bytes_saved_fusion\":0"));
     }
 
     #[test]

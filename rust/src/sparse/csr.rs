@@ -239,6 +239,12 @@ impl Csr {
 }
 
 /// y += S x over raw CSR slices, generic over the value dtype.
+///
+/// Deliberately scalar (not routed through `linalg::simd`): the k = 1
+/// spmv is gather-bound — each product needs `x[idx[..]]` loaded through
+/// an index indirection, so there is no contiguous lane axis to
+/// vectorize. The batched `spmm_add_w` is where the SIMD layer pays off
+/// (the k columns are contiguous per stored value).
 fn spmv_add_w<E: WeightElem>(indptr: &[u32], indices: &[u32], val: &[E], x: &[f32], y: &mut [f32]) {
     for (i, yi) in y.iter_mut().enumerate() {
         let lo = indptr[i] as usize;
@@ -273,6 +279,7 @@ fn spmm_add_w<E: WeightElem>(
     k: usize,
 ) {
     let rows = indptr.len() - 1;
+    let kt = crate::linalg::simd::kernels();
     const CB: usize = 128; // column block (floats per lane pass)
     for cb in (0..k).step_by(CB) {
         let cw = CB.min(k - cb);
@@ -284,11 +291,12 @@ fn spmm_add_w<E: WeightElem>(
             }
             let yrow = &mut y[i * k + cb..i * k + cb + cw];
             for (j, v) in indices[lo..hi].iter().zip(&vals[lo..hi]) {
-                let v = v.widen();
+                // one dispatched axpy per stored value: the k-lane axis
+                // is contiguous, so SpMM is the same thin kernel as the
+                // dense apply (values widen one scalar at a time — the
+                // gather pattern leaves nothing to lane-batch here)
                 let xrow = &x[*j as usize * k + cb..*j as usize * k + cb + cw];
-                for (yc, &xc) in yrow.iter_mut().zip(xrow) {
-                    *yc += v * xc;
-                }
+                (kt.axpy_k)(v.widen(), xrow, yrow);
             }
         }
     }

@@ -1,0 +1,105 @@
+//! SIMD dispatch integration test — deliberately its own binary so the
+//! `HISOLO_SIMD=off` override is installed **before** anything in the
+//! process touches the dispatch table (detection is once-per-process; a
+//! unit test inside the lib crate races other tests for first touch).
+//!
+//! Covers: the env kill-switch pins the scalar arm, `force_level`
+//! round-trips and ignores unsupported levels, and — the serving
+//! acceptance criterion — a batched end-to-end forward produces
+//! bit-identical logits (hence bit-identical NLL) under the scalar arm
+//! and under every accelerated arm the host supports.
+
+use hisolo::linalg::simd::{self, SimdLevel};
+use hisolo::model::{ModelConfig, Transformer};
+
+/// Mean NLL of each window's next-token predictions from raw logits
+/// (f32 log-sum-exp, deterministic order — bitwise comparable).
+fn nll(logits: &[hisolo::linalg::Matrix], windows: &[&[u32]]) -> f32 {
+    let mut total = 0.0f32;
+    let mut count = 0usize;
+    for (lg, w) in logits.iter().zip(windows) {
+        for i in 0..w.len() - 1 {
+            let row = lg.row(i);
+            let mut m = f32::NEG_INFINITY;
+            for &v in row {
+                if v > m {
+                    m = v;
+                }
+            }
+            let mut z = 0.0f32;
+            for &v in row {
+                z += (v - m).exp();
+            }
+            total += z.ln() + m - row[w[i + 1] as usize];
+            count += 1;
+        }
+    }
+    total / count as f32
+}
+
+#[test]
+fn env_off_pins_scalar_and_accelerated_forward_is_bit_identical() {
+    // must precede the first active_level()/kernels() call in this process
+    std::env::set_var("HISOLO_SIMD", "off");
+    assert_eq!(
+        simd::active_level(),
+        SimdLevel::Scalar,
+        "HISOLO_SIMD=off must pin the scalar arm"
+    );
+
+    // force_level returns the previous level and ignores levels this CPU
+    // cannot run (Scalar itself is always supported)
+    let prev = simd::force_level(SimdLevel::Scalar);
+    assert_eq!(prev, SimdLevel::Scalar);
+    assert_eq!(simd::active_level(), SimdLevel::Scalar);
+
+    let cfg = ModelConfig {
+        vocab: 64,
+        d_model: 32,
+        n_heads: 4,
+        n_layers: 2,
+        d_ff: 64,
+        seq_len: 16,
+    };
+    let m = Transformer::random(cfg, 17);
+    let w1: Vec<u32> = (0..16).map(|i| (i * 5) % 64).collect();
+    let w2: Vec<u32> = (0..9).map(|i| (i * 13 + 4) % 64).collect();
+    let windows: [&[u32]; 2] = [&w1, &w2];
+
+    let scalar_logits = m.forward_batch(&windows);
+    let scalar_nll = nll(&scalar_logits, &windows);
+    assert!(scalar_nll.is_finite());
+
+    // every accelerated level the host supports must reproduce the scalar
+    // pass bit-for-bit (the module's 0-ULP contract, measured end to end)
+    for lvl in [SimdLevel::Avx2, SimdLevel::Neon] {
+        let before = simd::force_level(lvl);
+        assert_eq!(before, SimdLevel::Scalar, "restore bookkeeping");
+        if simd::active_level() != lvl {
+            // unsupported on this host: the force must have been ignored
+            assert_eq!(simd::active_level(), SimdLevel::Scalar);
+            continue;
+        }
+        let fast_logits = m.forward_batch(&windows);
+        for (a, b) in scalar_logits.iter().zip(&fast_logits) {
+            assert_eq!(
+                a.data.as_f32(),
+                b.data.as_f32(),
+                "{} logits differ from scalar",
+                lvl.name()
+            );
+        }
+        let fast_nll = nll(&fast_logits, &windows);
+        assert_eq!(
+            scalar_nll.to_bits(),
+            fast_nll.to_bits(),
+            "{} NLL differs from scalar",
+            lvl.name()
+        );
+        simd::force_level(SimdLevel::Scalar);
+    }
+
+    // leave the process where the env asked it to be
+    simd::force_level(SimdLevel::Scalar);
+    assert_eq!(simd::active_level(), SimdLevel::Scalar);
+}
