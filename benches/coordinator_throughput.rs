@@ -8,8 +8,15 @@
 //! to a file, `--tiny` shrinks the model for CI smoke runs, and
 //! `--requests N` sets the request count (default 48).
 //!
+//! `--sessions` adds a multi-turn session case: 16 sessions prefill a
+//! shared prompt through a paged-KV dense worker, then decode one token
+//! per turn (`submit_prefill`/`submit_decode`), raced against the
+//! equivalent O(t²) full-window rescore traffic through the same
+//! coordinator — decode throughput lands alongside the rescore cases in
+//! the trajectory record.
+//!
 //!     cargo bench --bench coordinator_throughput [-- --tiny --requests 24
-//!         --json traj.jsonl]
+//!         --sessions --json traj.jsonl]
 
 mod common;
 
@@ -18,6 +25,7 @@ use hisolo::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, Variant
 use hisolo::compress::{CompressorConfig, Method};
 use hisolo::data::dataset::windows;
 use hisolo::data::synthetic;
+use hisolo::model::kvcache::DEFAULT_BLOCK_SIZE;
 use hisolo::model::{CompressedModel, ModelConfig, Transformer, WeightFile};
 use hisolo::runtime::{ArtifactDir, Runtime};
 use hisolo::util::cli::Args;
@@ -27,7 +35,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 fn main() {
-    let args = Args::parse(&["tiny"]);
+    let args = Args::parse(&["tiny", "sessions"]);
     let n_requests = args.get_usize("requests", 48);
     let env = if args.flag("tiny") {
         // same shrunken config `hisolo serve --synthetic --tiny` uses, so
@@ -72,6 +80,7 @@ fn main() {
             NativeDenseScorer {
                 model: env.model.clone(),
                 max_batch,
+                kv: None,
             },
         );
         let cm = Arc::new(CompressedModel::compress(
@@ -89,6 +98,7 @@ fn main() {
             NativeCompressedScorer {
                 model: cm,
                 max_batch,
+                kv: None,
             },
         );
         for variant in [Variant::Dense, Variant::Hss] {
@@ -123,6 +133,9 @@ fn main() {
         }
         eprintln!("done max_batch={max_batch}");
     }
+    if args.flag("sessions") {
+        run_sessions_case(&env, &mut t, &mut cases_json);
+    }
     t.print();
     println!(
         "\npaper claim: compressed models retain full inference speed (batched\n\
@@ -148,6 +161,116 @@ fn main() {
         writeln!(f, "{record}").expect("append trajectory line");
         println!("appended coordinator trajectory line to {}", path.display());
     }
+}
+
+/// Multi-turn session traffic through the coordinator: paired sessions
+/// share a prompt (two prefill waves, so the second wave's lookups hit
+/// pages the first wave published), then every turn appends one token
+/// per session via `submit_decode` — timed against the equivalent
+/// pre-session traffic, where every turn rescores its full grown window.
+fn run_sessions_case(env: &common::BenchEnv, t: &mut Table, cases_json: &mut Vec<(String, Json)>) {
+    // windows carry seq_len + 1 tokens (inputs + targets); sessions cache
+    // at most seq_len positions, so decode turns stop there
+    let seq_len = env.model.cfg.seq_len;
+    let n_sessions = 16usize;
+    let prompt = (seq_len / 2).max(1);
+    let mut coord = Coordinator::new(CoordinatorConfig {
+        batcher: BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            capacity: 4096,
+            ..BatcherConfig::default()
+        },
+    });
+    let pages = n_sessions * seq_len.div_ceil(DEFAULT_BLOCK_SIZE) + 8;
+    coord.add_worker(
+        Variant::Dense,
+        NativeDenseScorer::new(env.model.clone(), 8).with_kv_pages(pages),
+    );
+    let window_of = |sid: usize| &env.windows[(sid / 2) % env.windows.len()];
+
+    for wave in 0..2usize {
+        let pending: Vec<_> = (0..n_sessions)
+            .filter(|sid| sid % 2 == wave)
+            .map(|sid| {
+                let w = window_of(sid)[..prompt].to_vec();
+                coord
+                    .submit_prefill(Variant::Dense, sid as u64, w)
+                    .expect("submit prefill")
+            })
+            .collect();
+        for rx in pending {
+            let r = rx.recv().expect("prefill reply");
+            assert!(r.error.is_none(), "prefill: {:?}", r.error);
+        }
+    }
+
+    // decode turns: one token per session per step; the batcher coalesces
+    // the single-token requests into decode-class buckets
+    let t0 = Instant::now();
+    let mut lat: Vec<u64> = Vec::new();
+    let mut batch_sum = 0usize;
+    for i in prompt..seq_len {
+        let pending: Vec<_> = (0..n_sessions)
+            .map(|sid| {
+                coord
+                    .submit_decode(Variant::Dense, sid as u64, vec![window_of(sid)[i]])
+                    .expect("submit decode")
+            })
+            .collect();
+        for rx in pending {
+            let r = rx.recv().expect("decode reply");
+            assert!(r.error.is_none(), "decode: {:?}", r.error);
+            lat.push(r.latency_us);
+            batch_sum += r.batch_size;
+        }
+    }
+    let decoded = (seq_len - prompt) * n_sessions;
+    let decode_tps = decoded as f64 / t0.elapsed().as_secs_f64();
+
+    // the pre-session shape of the same traffic: every turn re-scores the
+    // full grown window (O(t²) tokens across the conversation)
+    let t0 = Instant::now();
+    for i in prompt..seq_len {
+        let grown: Vec<Vec<u32>> =
+            (0..n_sessions).map(|sid| window_of(sid)[..=i].to_vec()).collect();
+        let resps = coord.submit_all(Variant::Dense, &grown).expect("rescore");
+        assert!(resps.iter().all(|r| r.error.is_none()), "rescore errored");
+    }
+    let rescore_tps = decoded as f64 / t0.elapsed().as_secs_f64();
+    let hit_rate = coord.metrics.kv_hit_rate();
+    coord.shutdown();
+
+    lat.sort_unstable();
+    let p50_us = lat[lat.len() / 2];
+    let p95_us = lat[(lat.len() * 95 / 100).min(lat.len() - 1)];
+    t.row(&[
+        "native-kv".to_string(),
+        "dense".to_string(),
+        "8".to_string(),
+        format!("{decode_tps:.1}"),
+        format!("{:.1}", p50_us as f64 / 1e3),
+        format!("{:.1}", p95_us as f64 / 1e3),
+        format!("{:.2}", batch_sum as f64 / lat.len() as f64),
+    ]);
+    println!(
+        "sessions: n={n_sessions} prompt={prompt} decode_tok_per_s={decode_tps:.0} \
+         rescore_tok_per_s={rescore_tps:.0} speedup={:.2}x kv_hit_rate={hit_rate:.3}",
+        decode_tps / rescore_tps
+    );
+    cases_json.push((
+        "sessions_decode".to_string(),
+        obj(vec![
+            ("sessions", num(n_sessions as f64)),
+            ("prompt", num(prompt as f64)),
+            ("decode_tok_per_s", num(decode_tps)),
+            ("rescore_tok_per_s", num(rescore_tps)),
+            ("speedup", num(decode_tps / rescore_tps)),
+            ("kv_hit_rate", num(hit_rate)),
+            ("p50_us", num(p50_us as f64)),
+            ("p95_us", num(p95_us as f64)),
+        ]),
+    ));
 }
 
 fn run_case(

@@ -1,0 +1,253 @@
+//! Incremental decoding evidence: paged-KV decode (one O(t) step per new
+//! token) vs the pre-session serving shape (full-window rescore, O(t²)
+//! across a conversation) at batch widths k ∈ {1, 8, 32}, plus the cache
+//! hit rate under a prefix-sharing workload — every session opens with
+//! the same system-prompt prefix, and odd sessions prefill after even
+//! ones so the shared blocks are already published (`model::kvcache`
+//! defers publishes to the end of a prefill batch).
+//!
+//! Every session prefills t0 tokens (default 256) and decodes to t1
+//! (default 320), so all timed decode steps run at t ≥ 256 — the regime
+//! the CI gate covers. The final `decode_check` line asserts, per batch
+//! width: decode tokens/s beats rescore tokens/s, the prefill + decode
+//! NLL sum is bit-identical to one full-window cache-writing prefill
+//! under both the scalar and the detected-best SIMD level (both paths
+//! read the same f16 page round-trip), and the pool's hit rate is > 0.
+//! `--json <path>` appends a one-line `{"bench":"decode", ...}`
+//! trajectory record.
+//!
+//!     cargo bench --bench decode [-- --tiny --t 320 --prompt 256
+//!         --json traj.jsonl]
+
+use hisolo::data::synthetic;
+use hisolo::eval::perplexity::window_nll;
+use hisolo::linalg::simd;
+use hisolo::model::kvcache::{DEFAULT_BLOCK_SIZE, KvState};
+use hisolo::model::transformer::DenseProjector;
+use hisolo::model::{ModelConfig, Transformer};
+use hisolo::util::cli::Args;
+use hisolo::util::json::{num, obj, s, Json};
+use hisolo::util::timer::Table;
+use std::time::Instant;
+
+struct DecodeRun {
+    decode_tps: f64,
+    hit_rate: f64,
+    bitwise: bool,
+}
+
+/// Prefill `t0` tokens per session (two waves, so the second wave's
+/// shared-prefix lookups hit blocks the first wave published), time the
+/// decode loop t0 → t1 with all sessions batched per step, then check
+/// the accumulated NLLs bit-match a full-window cache-writing prefill
+/// of the grown windows (fresh session ids; single-token decodes add
+/// row NLLs in the same left-to-right order the full prefill uses, so
+/// f64 equality is exact, not approximate).
+fn run_decode(
+    model: &Transformer,
+    proj: &DenseProjector,
+    wins: &[Vec<u32>],
+    t0: usize,
+) -> DecodeRun {
+    let t1 = wins[0].len();
+    let k = wins.len();
+    let mut kv = KvState::for_model(&model.cfg, 2048);
+    let mut totals = vec![0.0f64; k];
+    for wave in 0..2usize {
+        let reqs: Vec<(u64, Vec<u32>)> = wins
+            .iter()
+            .enumerate()
+            .filter(|(sid, _)| sid % 2 == wave)
+            .map(|(sid, w)| (sid as u64, w[..t0].to_vec()))
+            .collect();
+        if reqs.is_empty() {
+            continue;
+        }
+        for (req, res) in reqs.iter().zip(kv.prefill_batch(model, proj, &reqs)) {
+            totals[req.0 as usize] = res.expect("prefill").0;
+        }
+    }
+
+    // the timed O(t) path: one new token per session per step, every
+    // step served by one batched decode over the cached pages
+    let td = Instant::now();
+    for i in t0..t1 {
+        let reqs: Vec<(u64, Vec<u32>)> =
+            (0..k).map(|sid| (sid as u64, vec![wins[sid][i]])).collect();
+        for (req, res) in reqs.iter().zip(kv.decode(model, proj, &reqs)) {
+            totals[req.0 as usize] += res.expect("decode").0;
+        }
+    }
+    let decode_tps = ((t1 - t0) * k) as f64 / td.elapsed().as_secs_f64();
+
+    // bitwise reference: re-prefill the grown windows under fresh ids
+    // (their prompt blocks prefix-share the decode sessions' pages)
+    let reqs: Vec<(u64, Vec<u32>)> = wins
+        .iter()
+        .enumerate()
+        .map(|(sid, w)| (1000 + sid as u64, w.clone()))
+        .collect();
+    let mut bitwise = true;
+    for (sid, res) in kv.prefill_batch(model, proj, &reqs).into_iter().enumerate() {
+        let (nll, ntok) = res.expect("reference prefill");
+        bitwise &= ntok == t1 - 1 && nll.to_bits() == totals[sid].to_bits();
+    }
+    DecodeRun {
+        decode_tps,
+        hit_rate: kv.stats().hit_rate(),
+        bitwise,
+    }
+}
+
+fn main() {
+    let args = Args::parse(&["tiny"]);
+    let t1 = args.get_usize("t", 320);
+    let t0 = args.get_usize("prompt", 256);
+    assert!(t0 >= 256, "--prompt must be >= 256 (the decode_check gate covers t >= 256)");
+    assert!(t1 > t0, "--t must exceed --prompt (something to decode)");
+    let cfg = if args.flag("tiny") {
+        ModelConfig {
+            vocab: 64,
+            d_model: 64,
+            n_heads: 4,
+            n_layers: 2,
+            d_ff: 128,
+            seq_len: t1,
+        }
+    } else {
+        ModelConfig {
+            vocab: 128,
+            d_model: 128,
+            n_heads: 4,
+            n_layers: 2,
+            d_ff: 256,
+            seq_len: t1,
+        }
+    };
+    let model = Transformer::random(cfg, 9);
+    let proj = DenseProjector {
+        layers: &model.layers,
+    };
+
+    // prefix-sharing workload: every session's window opens with the same
+    // block-aligned system-prompt prefix, then diverges
+    let ks = [1usize, 8, 32];
+    let max_k = *ks.last().unwrap();
+    let shared = t0 / 2 / DEFAULT_BLOCK_SIZE * DEFAULT_BLOCK_SIZE;
+    let toks = synthetic::token_stream(shared + max_k * (t1 - shared), cfg.vocab);
+    let wins: Vec<Vec<u32>> = (0..max_k)
+        .map(|sid| {
+            let mut w = toks[..shared].to_vec();
+            let tail = shared + sid * (t1 - shared);
+            w.extend_from_slice(&toks[tail..tail + (t1 - shared)]);
+            w
+        })
+        .collect();
+
+    println!(
+        "== paged-KV decode vs full-window rescore: d={} t0={t0} t1={t1}, k sweep ==",
+        cfg.d_model
+    );
+    println!(
+        "   decode = one batched O(t) step per token; rescore = forward of the grown window\n"
+    );
+    let mut table = Table::new(&[
+        "k",
+        "decode tok/s",
+        "rescore tok/s",
+        "speedup",
+        "kv hit rate",
+        "bitwise",
+    ]);
+    let best = simd::active_level();
+    let mut cases_json: Vec<(String, Json)> = Vec::new();
+    let mut all_pass = true;
+    let mut all_bitwise = true;
+    let mut checks: Vec<String> = Vec::new();
+
+    for &k in &ks {
+        // bitwise gate under the forced scalar arm, then the detected-best
+        // level (identity skip when the host has no accelerated arm) —
+        // the timed decode numbers come from the best-level run
+        let prev = simd::force_level(simd::SimdLevel::Scalar);
+        let scalar_run = run_decode(&model, &proj, &wins[..k], t0);
+        simd::force_level(prev);
+        let best_run = if best == simd::SimdLevel::Scalar {
+            None
+        } else {
+            Some(run_decode(&model, &proj, &wins[..k], t0))
+        };
+        let timed = best_run.as_ref().unwrap_or(&scalar_run);
+        let bitwise = scalar_run.bitwise && best_run.as_ref().is_none_or(|r| r.bitwise);
+
+        // the O(t²) serving shape this bench retires: every new token
+        // re-scores its full grown window through the batched forward
+        let decoded = (t1 - t0) * k;
+        let tr = Instant::now();
+        let mut sink = 0.0f64;
+        for i in t0..t1 {
+            let grown: Vec<&[u32]> = wins[..k].iter().map(|w| &w[..i]).collect();
+            for (sid, lg) in model.forward_batch(&grown).iter().enumerate() {
+                sink += window_nll(lg, &wins[sid][..=i]).0;
+            }
+        }
+        assert!(sink.is_finite());
+        let rescore_tps = decoded as f64 / tr.elapsed().as_secs_f64();
+
+        let speedup = timed.decode_tps / rescore_tps;
+        let pass = timed.decode_tps > rescore_tps && bitwise && timed.hit_rate > 0.0;
+        all_pass &= pass;
+        all_bitwise &= bitwise;
+        checks.push(format!("k={k} speedup={speedup:.2}x"));
+        table.row(&[
+            k.to_string(),
+            format!("{:.0}", timed.decode_tps),
+            format!("{rescore_tps:.0}"),
+            format!("{speedup:.2}x"),
+            format!("{:.3}", timed.hit_rate),
+            bitwise.to_string(),
+        ]);
+        cases_json.push((
+            format!("k{k}"),
+            obj(vec![
+                ("decode_tps", num(timed.decode_tps)),
+                ("rescore_tps", num(rescore_tps)),
+                ("speedup", num(speedup)),
+                ("kv_hit_rate", num(timed.hit_rate)),
+                ("bitwise", Json::Bool(bitwise)),
+            ]),
+        ));
+    }
+    table.print();
+
+    let verdict = if all_pass { "PASS" } else { "FAIL" };
+    println!(
+        "\ndecode_check: t0={t0} t1={t1} simd={} {} bitwise_all={all_bitwise} {verdict}",
+        best.name(),
+        checks.join(" ")
+    );
+
+    let record = obj(vec![
+        ("bench", s("decode")),
+        ("t0", num(t0 as f64)),
+        ("t1", num(t1 as f64)),
+        ("tiny", Json::Bool(args.flag("tiny"))),
+        ("simd_level", s(best.name())),
+        ("cases", Json::Obj(cases_json.into_iter().collect())),
+        ("pass", Json::Bool(all_pass)),
+    ]);
+    println!("\nJSON: {record}");
+    if let Some(path) = args.get_path("json") {
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .expect("open json trajectory file");
+        writeln!(f, "{record}").expect("append trajectory line");
+        println!("appended decode trajectory line to {}", path.display());
+    }
+    if !all_pass {
+        std::process::exit(1);
+    }
+}

@@ -61,6 +61,7 @@ fn main() -> anyhow::Result<()> {
         NativeCompressedScorer {
             model: first,
             max_batch: 8,
+            kv: None,
         },
     );
 
@@ -80,6 +81,7 @@ fn main() -> anyhow::Result<()> {
         Ok(NativeCompressedScorer {
             model,
             max_batch: 8,
+            kv: None,
         })
     })?;
     ticket.wait(Duration::from_secs(10))?;

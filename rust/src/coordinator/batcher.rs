@@ -61,18 +61,40 @@ pub fn bucket_by_len<T, F: Fn(&T) -> usize>(
     edges: &[usize],
     len_of: F,
 ) -> Vec<Vec<T>> {
-    if edges.is_empty() || items.len() <= 1 {
+    bucket_by_key(items, edges, |t| (0, len_of(t)))
+}
+
+/// [`bucket_by_len`] with an extra coalescing **class**: items bucket
+/// within (class, length bucket), so requests that must not share a
+/// scored chunk — rescore vs prefill vs decode — never coalesce even
+/// when their window lengths match. Class separation is unconditional;
+/// empty `edges` only disables the *length* split within a class.
+pub fn bucket_by_key<T, F: Fn(&T) -> (usize, usize)>(
+    items: Vec<T>,
+    edges: &[usize],
+    key_of: F,
+) -> Vec<Vec<T>> {
+    if items.len() <= 1 {
         return vec![items];
     }
     let mut buckets: Vec<Vec<T>> = Vec::new();
-    let mut slot = vec![usize::MAX; edges.len() + 1];
+    let mut slot: Vec<(usize, usize, usize)> = Vec::new(); // (class, len bucket) → bucket
     for item in items {
-        let b = bucket_index(len_of(&item), edges);
-        if slot[b] == usize::MAX {
-            slot[b] = buckets.len();
-            buckets.push(Vec::new());
-        }
-        buckets[slot[b]].push(item);
+        let (class, len) = key_of(&item);
+        let b = if edges.is_empty() {
+            0
+        } else {
+            bucket_index(len, edges)
+        };
+        let at = match slot.iter().find(|&&(c, lb, _)| (c, lb) == (class, b)) {
+            Some(&(_, _, at)) => at,
+            None => {
+                slot.push((class, b, buckets.len()));
+                buckets.push(Vec::new());
+                buckets.len() - 1
+            }
+        };
+        buckets[at].push(item);
     }
     buckets
 }
@@ -201,10 +223,22 @@ impl<T> Batcher<T> {
     /// window lengths. The union of the buckets is exactly the polled
     /// batch — per-item reply routing is untouched.
     pub fn poll_buckets<F: Fn(&T) -> usize>(&self, idle_wait: Duration, len_of: F) -> BucketPoll<T> {
+        self.poll_buckets_keyed(idle_wait, |t| (0, len_of(t)))
+    }
+
+    /// [`Batcher::poll_buckets`] with a (class, length) key: buckets
+    /// never mix classes ([`bucket_by_key`]), which is how decode steps
+    /// coalesce with each other instead of padding against rescore or
+    /// prefill windows in the same poll.
+    pub fn poll_buckets_keyed<F: Fn(&T) -> (usize, usize)>(
+        &self,
+        idle_wait: Duration,
+        key_of: F,
+    ) -> BucketPoll<T> {
         match self.poll_batch(idle_wait) {
             BatchPoll::Batch(b) => {
                 let _span = crate::obs::Span::enter(crate::obs::Stage::BucketForm);
-                BucketPoll::Buckets(bucket_by_len(b, &self.cfg.bucket_edges, len_of))
+                BucketPoll::Buckets(bucket_by_key(b, &self.cfg.bucket_edges, key_of))
             }
             BatchPoll::Idle => BucketPoll::Idle,
             BatchPoll::Closed => BucketPoll::Closed,
@@ -362,6 +396,51 @@ mod tests {
         }
         // empty edge list disables coalescing
         assert_eq!(bucket_by_len(items.clone(), &[], |&l| l), vec![items]);
+    }
+
+    /// Class separation is unconditional: same lengths, different
+    /// classes → different buckets; and with empty edges the classes
+    /// still split (only the length coalescing is disabled).
+    #[test]
+    fn bucket_by_key_never_mixes_classes() {
+        let edges = vec![4usize, 8];
+        // (class, len)
+        let items = vec![(0, 3), (1, 3), (0, 4), (2, 9), (1, 8), (2, 2)];
+        let buckets = bucket_by_key(items.clone(), &edges, |&(c, l)| (c, l));
+        assert_eq!(
+            buckets,
+            vec![
+                vec![(0, 3), (0, 4)],
+                vec![(1, 3)],
+                vec![(2, 9)],
+                vec![(1, 8)],
+                vec![(2, 2)],
+            ]
+        );
+        let no_edges = bucket_by_key(items, &[], |&(c, l)| (c, l));
+        assert_eq!(
+            no_edges,
+            vec![vec![(0, 3), (0, 4)], vec![(1, 3), (1, 8)], vec![(2, 9), (2, 2)]]
+        );
+    }
+
+    #[test]
+    fn poll_buckets_keyed_separates_classes() {
+        let b: Batcher<(usize, usize)> = Batcher::new(BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            capacity: 64,
+            bucket_edges: vec![4, 8],
+        });
+        for it in [(0usize, 2usize), (2, 2), (0, 3), (2, 3)] {
+            b.push(it).unwrap();
+        }
+        match b.poll_buckets_keyed(Duration::from_millis(5), |&(c, l)| (c, l)) {
+            BucketPoll::Buckets(bs) => {
+                assert_eq!(bs, vec![vec![(0, 2), (0, 3)], vec![(2, 2), (2, 3)]]);
+            }
+            _ => panic!("expected buckets"),
+        }
     }
 
     #[test]

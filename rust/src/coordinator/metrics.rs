@@ -46,6 +46,17 @@ pub struct Metrics {
     pub swaps: AtomicU64,
     /// requests dequeued but not yet replied to (gauge; workers inc/dec)
     pub in_flight: AtomicU64,
+    /// paged-KV cache gauges: the latest snapshot a session-serving
+    /// worker published after a prefill/decode batch
+    /// ([`Metrics::set_kv_stats`]). Gauge semantics — each publish
+    /// overwrites; the scorer's own cache counters are the source of
+    /// truth, these are their serving-surface mirror.
+    pub kv_hits: AtomicU64,
+    pub kv_misses: AtomicU64,
+    pub kv_evictions: AtomicU64,
+    pub kv_pages_resident: AtomicU64,
+    pub kv_pages_total: AtomicU64,
+    pub kv_sessions: AtomicU64,
     /// per-variant gauge: weight bytes resident in the most recently
     /// installed scorer (set at worker start and on every hot-swap)
     resident_weight_bytes: [AtomicU64; Variant::COUNT],
@@ -101,6 +112,12 @@ impl Metrics {
             batch_tokens_padded: AtomicU64::new(0),
             swaps: AtomicU64::new(0),
             in_flight: AtomicU64::new(0),
+            kv_hits: AtomicU64::new(0),
+            kv_misses: AtomicU64::new(0),
+            kv_evictions: AtomicU64::new(0),
+            kv_pages_resident: AtomicU64::new(0),
+            kv_pages_total: AtomicU64::new(0),
+            kv_sessions: AtomicU64::new(0),
             resident_weight_bytes: std::array::from_fn(|_| AtomicU64::new(0)),
             queue_depth: std::array::from_fn(|_| AtomicU64::new(0)),
             latency: LogHistogram::new(),
@@ -196,6 +213,31 @@ impl Metrics {
     /// (0 until a worker reports in).
     pub fn resident_weight_bytes(&self, variant: Variant) -> u64 {
         self.resident_weight_bytes[variant.index()].load(Ordering::Relaxed)
+    }
+
+    /// Publish a paged-KV cache snapshot (workers call this after every
+    /// prefill/decode batch). Gauge semantics: each call overwrites the
+    /// previous snapshot wholesale.
+    pub fn set_kv_stats(&self, s: &crate::model::kvcache::KvStatsSnapshot) {
+        self.kv_hits.store(s.hits, Ordering::Relaxed);
+        self.kv_misses.store(s.misses, Ordering::Relaxed);
+        self.kv_evictions.store(s.evictions, Ordering::Relaxed);
+        self.kv_pages_resident.store(s.pages_resident, Ordering::Relaxed);
+        self.kv_pages_total.store(s.pages_total, Ordering::Relaxed);
+        self.kv_sessions.store(s.sessions, Ordering::Relaxed);
+    }
+
+    /// Prefix-cache page hit rate in [0, 1]: shared-block lookups that
+    /// found an already-cached page over all full-block lookups. 0 before
+    /// any session traffic.
+    pub fn kv_hit_rate(&self) -> f64 {
+        let h = self.kv_hits.load(Ordering::Relaxed);
+        let m = self.kv_misses.load(Ordering::Relaxed);
+        if h + m == 0 {
+            0.0
+        } else {
+            h as f64 / (h + m) as f64
+        }
     }
 
     /// Store a sampled queue depth for `variant` (gauge semantics).
@@ -319,7 +361,7 @@ impl Metrics {
     /// same line.
     pub fn summary(&self) -> String {
         format!(
-            "submitted={} completed={} rejected={} errors={} swaps={} batches={} mean_batch={:.2} bucket_width={:.2} p50={}us p95={}us p99={}us p999={}us queue_p50={}us service_p50={}us queue_depth[dense]={} queue_depth[hss]={} in_flight={} resident_bytes[dense]={} resident_bytes[hss]={} pad_overhead={:.1}% slo_target={}us slo_burn={:.2} slo_window_burn={:.2}",
+            "submitted={} completed={} rejected={} errors={} swaps={} batches={} mean_batch={:.2} bucket_width={:.2} p50={}us p95={}us p99={}us p999={}us queue_p50={}us service_p50={}us queue_depth[dense]={} queue_depth[hss]={} in_flight={} resident_bytes[dense]={} resident_bytes[hss]={} pad_overhead={:.1}% slo_target={}us slo_burn={:.2} slo_window_burn={:.2} kv_hit_rate={:.2} kv_pages={}/{} kv_evictions={}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
@@ -343,6 +385,10 @@ impl Metrics {
             self.slo_target_us(),
             self.slo_burn_rate(),
             self.slo_window_burn_rate(),
+            self.kv_hit_rate(),
+            self.kv_pages_resident.load(Ordering::Relaxed),
+            self.kv_pages_total.load(Ordering::Relaxed),
+            self.kv_evictions.load(Ordering::Relaxed),
         )
     }
 
@@ -434,6 +480,25 @@ impl Metrics {
                     ("mean_batch", num(self.mean_batch_size())),
                     ("mean_bucket_width", num(self.mean_bucket_width())),
                     ("padding_overhead", num(self.padding_overhead())),
+                    ("kv_hit_rate", num(self.kv_hit_rate())),
+                    ("kv_hits", num(self.kv_hits.load(Ordering::Relaxed) as f64)),
+                    ("kv_misses", num(self.kv_misses.load(Ordering::Relaxed) as f64)),
+                    (
+                        "kv_evictions",
+                        num(self.kv_evictions.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "kv_pages_resident",
+                        num(self.kv_pages_resident.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "kv_pages_total",
+                        num(self.kv_pages_total.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "kv_sessions",
+                        num(self.kv_sessions.load(Ordering::Relaxed) as f64),
+                    ),
                 ]),
             ),
             ("stages", crate::obs::registry().to_json()),
@@ -527,6 +592,38 @@ mod tests {
         m.set_resident_weight_bytes(Variant::Hss, 2048);
         assert_eq!(m.resident_weight_bytes(Variant::Hss), 2048);
         assert!(m.summary().contains("resident_bytes[hss]=2048"));
+    }
+
+    #[test]
+    fn kv_gauges_overwrite_and_surface_in_summary_and_json() {
+        let m = Metrics::new();
+        assert_eq!(m.kv_hit_rate(), 0.0, "no traffic yet → rate 0, not NaN");
+        use crate::model::kvcache::KvStatsSnapshot;
+        let snap = KvStatsSnapshot {
+            hits: 3,
+            misses: 1,
+            evictions: 2,
+            pages_resident: 40,
+            pages_total: 64,
+            sessions: 5,
+        };
+        m.set_kv_stats(&snap);
+        assert!((m.kv_hit_rate() - 0.75).abs() < 1e-12);
+        // gauge semantics: a later snapshot overwrites wholesale
+        m.set_kv_stats(&KvStatsSnapshot {
+            hits: 3,
+            misses: 3,
+            ..snap
+        });
+        assert!((m.kv_hit_rate() - 0.5).abs() < 1e-12);
+        let s = m.summary();
+        assert!(s.contains("kv_hit_rate=0.50"), "{s}");
+        assert!(s.contains("kv_pages=40/64"), "{s}");
+        assert!(s.contains("kv_evictions=2"), "{s}");
+        let text = m.to_json().to_string();
+        for key in ["kv_hit_rate", "kv_pages_resident", "kv_pages_total", "kv_sessions"] {
+            assert!(text.contains(&format!("\"{key}\"")), "missing {key}: {text}");
+        }
     }
 
     #[test]

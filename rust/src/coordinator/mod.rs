@@ -31,6 +31,58 @@
 //! `eval::perplexity_parallel_batched` applies the same bucketing, so
 //! sweep numbers exercise the identical code path the coordinator serves.
 //!
+//! # Sessions: prefill → paged KV → decode
+//!
+//! The three [`RequestKind`]s split serving into a stateless and a
+//! stateful path. `Score` is the pre-decode path above: every request
+//! rescores its full window, O(t²) total work across a conversation.
+//! `Prefill { session }` opens a session on the lane's scorer: the
+//! window runs through the same cache-writing batched forward once, its
+//! K/V rows land in a paged pool ([`crate::model::kvcache`]), and the
+//! reply scores the window's internal targets. `Decode { session }`
+//! then appends tokens one O(t) step each — a single new query row per
+//! sequence attends over the cached pages, so a conversation costs O(t)
+//! per new token instead of O(t) per *rescore*.
+//!
+//! Cache mechanics (see `model::kvcache` for the layout formula):
+//!
+//! - **Page size** — [`crate::model::kvcache::DEFAULT_BLOCK_SIZE`] (16)
+//!   tokens per page, all layers × K and V interleaved in one page so a
+//!   sequence owns `ceil(len / 16)` pages regardless of depth. 16 keeps
+//!   tail waste ≤ 15 tokens per sequence while page tables stay short.
+//! - **Prefix sharing / COW** — full prompt blocks are published under a
+//!   prefix-chain hash; a later prefill whose prompt shares the prefix
+//!   retains the same pages instead of recomputing them (stored tokens
+//!   are verified, so a hash collision can only miss sharing, never
+//!   alias). Shared pages are immutable; appending into a shared tail
+//!   block copies it first (copy-on-write), so sessions never observe
+//!   each other's writes.
+//! - **Eviction** — sessions are evicted LRU by last-served time when
+//!   the pool runs dry; an evicted session's next decode gets a
+//!   per-request error reply (same lifecycle split as every other arm)
+//!   and the client re-prefills. Sessions in the current batch are never
+//!   evicted.
+//! - **Memory ceiling** — the pool is one f16 slab:
+//!   `n_pages × 2 (K,V) × n_layers × block_size × d_model × 2 bytes`,
+//!   allocated up front (`--kv-pages N`), so serving memory is fixed no
+//!   matter how many sessions arrive.
+//!
+//! Decode requests coalesce into their own buckets
+//! ([`Batcher::poll_buckets_keyed`] keys on `(kind class, len)`), so
+//! single-token decode steps are never padded against full prefill
+//! windows. Workers publish cache counters to [`Metrics`] after every
+//! session batch (`kv_hit_rate`, `kv_pages_resident`, `kv_evictions` in
+//! the summary line and `to_json` gauges). Decode NLLs are bit-identical
+//! to a full-window cache-writing prefill of the same tokens — the
+//! decode kernel replays the batched-attention last-row sequence exactly
+//! (`model::attention::decode_batch`) — so `hisolo serve --decode`
+//! asserts bitwise equality in its `decode_check` line.
+//!
+//! Session affinity is topological: a session lives in one scorer, and
+//! each variant lane owns exactly one scorer, so no routing is needed.
+//! A hot-swap replaces the scorer *and its cache* — sessions opened
+//! before the swap error on their next decode and must re-prefill.
+//!
 //! # Observability
 //!
 //! Every request's end-to-end latency is split at the dequeue instant:
@@ -83,11 +135,11 @@ pub mod server;
 pub mod worker;
 
 pub use batcher::{
-    bucket_by_len, bucket_index, default_bucket_edges, BatchPoll, Batcher, BatcherConfig,
-    BucketPoll,
+    bucket_by_key, bucket_by_len, bucket_index, default_bucket_edges, BatchPoll, Batcher,
+    BatcherConfig, BucketPoll,
 };
 pub use metrics::Metrics;
-pub use request::{ScoreRequest, ScoreResponse, Variant};
+pub use request::{RequestKind, ScoreRequest, ScoreResponse, Variant};
 
 pub use crate::obs::TraceId;
 pub use server::{Coordinator, CoordinatorConfig, SwapTicket};

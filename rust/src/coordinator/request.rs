@@ -45,6 +45,39 @@ impl std::str::FromStr for Variant {
     }
 }
 
+/// What the worker should do with a request's window — stateless rescore
+/// or one hop of a paged-KV session (see `coordinator` module docs for
+/// the prefill → decode lifecycle).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RequestKind {
+    /// full-window rescore (stateless; the pre-decode path)
+    Score,
+    /// open a session: cache the window's K/V, score its internal targets
+    Prefill { session: u64 },
+    /// append the window's tokens to a cached session, one O(t) step each
+    Decode { session: u64 },
+}
+
+impl RequestKind {
+    /// Coalescing class: requests of different kinds never share a
+    /// bucket (`Batcher::poll_buckets_keyed`), so decode steps are not
+    /// padded against full prefill windows.
+    pub fn class(&self) -> usize {
+        match self {
+            RequestKind::Score => 0,
+            RequestKind::Prefill { .. } => 1,
+            RequestKind::Decode { .. } => 2,
+        }
+    }
+
+    pub fn session(&self) -> Option<u64> {
+        match self {
+            RequestKind::Score => None,
+            RequestKind::Prefill { session } | RequestKind::Decode { session } => Some(*session),
+        }
+    }
+}
+
 /// A scoring request: one token window; the response reports its NLL.
 pub struct ScoreRequest {
     pub id: u64,
@@ -52,7 +85,10 @@ pub struct ScoreRequest {
     /// batcher → bucket → worker → reply (see `obs::recorder`).
     pub trace: TraceId,
     pub variant: Variant,
-    /// window of seq_len + 1 tokens (inputs + targets)
+    /// how to score `window` (rescore / session prefill / session decode)
+    pub kind: RequestKind,
+    /// window of seq_len + 1 tokens (inputs + targets); for `Decode`,
+    /// just the tokens to append
     pub window: Vec<u32>,
     pub submitted: Instant,
     pub reply: Sender<ScoreResponse>,

@@ -4,7 +4,7 @@
 
 use crate::coordinator::batcher::{Batcher, BatcherConfig};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::request::{ScoreRequest, ScoreResponse, Variant};
+use crate::coordinator::request::{RequestKind, ScoreRequest, ScoreResponse, Variant};
 use crate::coordinator::worker::{
     run_worker_init_failed, run_worker_swappable, BoxScorer, Scorer, SwapRequest,
 };
@@ -206,11 +206,45 @@ impl Coordinator {
         })
     }
 
-    /// Submit one window; the response arrives on the returned receiver.
-    /// Errors (backpressure / unknown variant) are returned immediately.
+    /// Submit one window for a stateless rescore; the response arrives on
+    /// the returned receiver. Errors (backpressure / unknown variant) are
+    /// returned immediately.
     pub fn submit(
         &self,
         variant: Variant,
+        window: Vec<u32>,
+    ) -> anyhow::Result<Receiver<ScoreResponse>> {
+        self.submit_kind(variant, RequestKind::Score, window)
+    }
+
+    /// Open (or replace) a paged-KV session: cache the window's K/V on
+    /// the lane's scorer under `session` and score its internal targets.
+    /// Requires the lane's scorer to hold a KV cache (`--kv-pages`).
+    pub fn submit_prefill(
+        &self,
+        variant: Variant,
+        session: u64,
+        window: Vec<u32>,
+    ) -> anyhow::Result<Receiver<ScoreResponse>> {
+        self.submit_kind(variant, RequestKind::Prefill { session }, window)
+    }
+
+    /// Append `tokens` to a cached session, one O(t) decode step each —
+    /// the reply's NLL covers exactly those tokens. An unknown or evicted
+    /// session comes back as a per-request error reply.
+    pub fn submit_decode(
+        &self,
+        variant: Variant,
+        session: u64,
+        tokens: Vec<u32>,
+    ) -> anyhow::Result<Receiver<ScoreResponse>> {
+        self.submit_kind(variant, RequestKind::Decode { session }, tokens)
+    }
+
+    fn submit_kind(
+        &self,
+        variant: Variant,
+        kind: RequestKind,
         window: Vec<u32>,
     ) -> anyhow::Result<Receiver<ScoreResponse>> {
         let lane = self
@@ -224,6 +258,7 @@ impl Coordinator {
             // through batcher → bucket → worker and is echoed on the reply
             trace: crate::obs::TraceId::next(),
             variant,
+            kind,
             window,
             submitted: Instant::now(),
             reply: tx,
@@ -410,6 +445,56 @@ mod tests {
             },
         );
         c
+    }
+
+    /// Full session lifecycle through the coordinator: prefill opens the
+    /// session on the lane's scorer, decode appends to it, a scorer
+    /// without a KV cache rejects session traffic with a clear error, and
+    /// the KV gauges land in the metrics snapshot.
+    #[test]
+    fn session_prefill_then_decode_roundtrip() {
+        let mut c = Coordinator::new(CoordinatorConfig {
+            batcher: BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(2),
+                capacity: 32,
+                ..BatcherConfig::default()
+            },
+        });
+        let cfg = crate::model::ModelConfig {
+            vocab: 64,
+            d_model: 32,
+            n_heads: 4,
+            n_layers: 2,
+            d_ff: 64,
+            seq_len: 48,
+        };
+        let model = Arc::new(crate::model::Transformer::random(cfg, 11));
+        c.add_worker(
+            Variant::Dense,
+            crate::coordinator::worker::NativeDenseScorer::new(model, 4).with_kv_pages(32),
+        );
+        let rx = c
+            .submit_prefill(Variant::Dense, 1, (1..=20).collect())
+            .unwrap();
+        let pre = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(pre.error.is_none(), "{:?}", pre.error);
+        assert_eq!(pre.tokens, 19);
+        let rx = c.submit_decode(Variant::Dense, 1, vec![7]).unwrap();
+        let dec = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(dec.error.is_none(), "{:?}", dec.error);
+        assert_eq!(dec.tokens, 1);
+        assert!(dec.nll.is_finite());
+        assert!(c.metrics.kv_pages_resident.load(Ordering::Relaxed) > 0);
+        c.shutdown();
+
+        // a lane whose scorer has no KV cache rejects session traffic
+        let c = coordinator_with_mock(false);
+        let rx = c.submit_decode(Variant::Dense, 1, vec![7]).unwrap();
+        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        let err = resp.error.expect("mock has no KV cache");
+        assert!(err.contains("paged-KV"), "{err}");
+        c.shutdown();
     }
 
     #[test]

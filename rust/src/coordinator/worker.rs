@@ -13,9 +13,11 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{ScoreRequest, ScoreResponse, Variant};
 use crate::eval::perplexity::window_nll;
 use crate::linalg::Matrix;
+use crate::model::kvcache::{KvState, KvStatsSnapshot};
 use crate::obs::recorder::{self, RequestEvent};
 use crate::obs::{Span, Stage};
 use crate::util::logging::{log, Level};
+use std::cell::RefCell;
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
@@ -43,6 +45,33 @@ pub trait Scorer {
     /// in serving logs.
     fn resident_weight_bytes(&self) -> u64 {
         0
+    }
+    /// Open (or replace) paged-KV sessions: one `(session, window)` pair
+    /// per request; the window's K/V is cached and its internal targets
+    /// scored. Per-request failures (bad length, page-pool exhaustion)
+    /// come back as the inner `Err` so one bad request doesn't poison
+    /// its batch; the outer `Err` means the scorer has no KV cache at
+    /// all. Default: no paged-KV support.
+    fn prefill(
+        &self,
+        _reqs: &[(u64, Vec<u32>)],
+    ) -> anyhow::Result<Vec<Result<(f64, usize), String>>> {
+        anyhow::bail!("scorer does not support paged-KV sessions")
+    }
+    /// Append each request's tokens to its cached session, one O(t)
+    /// decode step per token. Same result shape and error split as
+    /// [`Scorer::prefill`]; an unknown or evicted session is a
+    /// per-request `Err`.
+    fn decode(
+        &self,
+        _reqs: &[(u64, Vec<u32>)],
+    ) -> anyhow::Result<Vec<Result<(f64, usize), String>>> {
+        anyhow::bail!("scorer does not support paged-KV sessions")
+    }
+    /// Paged-KV cache counters, when this scorer holds a cache. Workers
+    /// publish the snapshot to `Metrics` after every session batch.
+    fn kv_stats(&self) -> Option<KvStatsSnapshot> {
+        None
     }
 }
 
@@ -118,11 +147,14 @@ pub fn run_worker_swappable(
                 }
             }
         }
-        // length-bucketed poll: the batch comes back coalesced into
-        // near-uniform-length buckets, scored bucket-by-bucket, so every
-        // forward_batch call is a dense near-rectangular block; replies
-        // still route per request
-        let buckets = match batcher.poll_buckets(IDLE_POLL, |r: &ScoreRequest| r.window.len()) {
+        // class+length-bucketed poll: the batch comes back coalesced
+        // into near-uniform-length buckets that never mix request kinds
+        // (score / prefill / decode), so every forward_batch call is a
+        // dense near-rectangular block and decode steps are never padded
+        // against full windows; replies still route per request
+        let buckets = match batcher
+            .poll_buckets_keyed(IDLE_POLL, |r: &ScoreRequest| (r.kind.class(), r.window.len()))
+        {
             BucketPoll::Closed => return,
             BucketPoll::Idle => continue,
             BucketPoll::Buckets(b) => b,
@@ -137,92 +169,127 @@ pub fn run_worker_swappable(
         for bucket in &buckets {
             // chunk by the scorer's static batch
             for chunk in bucket.chunks(scorer.max_batch()) {
-                let inputs: Vec<Vec<u32>> = chunk
-                    .iter()
-                    .map(|r| r.window[..r.window.len() - 1].to_vec())
-                    .collect();
                 // flight recorder: every kernel span fired on this thread
-                // while the chunk scores (inside `scorer.score` and
+                // while the chunk scores (inside the scorer call and
                 // `window_nll`) attributes to this batch, and thereby to
                 // every member trace id
                 let rec = recorder::recorder();
                 let flight = rec.begin_batch();
                 let mut completions: Vec<RequestEvent> = Vec::new();
-                match scorer.score(&inputs) {
-                    Ok(logits) => {
-                        // gauge only chunks that actually scored, so the
-                        // width/padding numbers stay honest when a lane
-                        // is erroring
-                        let actual: u64 = inputs.iter().map(|w| w.len() as u64).sum();
-                        let max_t = inputs.iter().map(|w| w.len()).max().unwrap_or(0) as u64;
-                        metrics.record_bucket(chunk.len(), actual, max_t * chunk.len() as u64);
-                        for (req, lg) in chunk.iter().zip(&logits) {
-                            let (nll, tokens) = window_nll(lg, &req.window);
-                            let (queue_us, service_us, latency_us) =
-                                lifecycle_us(req.submitted, dequeued);
+                // buckets are class-homogeneous (poll key), so the first
+                // request's kind decides the whole chunk's path
+                let class = chunk[0].kind.class();
+                // one outcome per request: `Ok((nll, tokens))` or an error
+                // string — a whole-chunk scorer failure fans out to every
+                // member so each still gets its own lifecycle-split reply
+                let outcomes: Vec<Result<(f64, usize), String>> = match class {
+                    0 => {
+                        let inputs: Vec<Vec<u32>> = chunk
+                            .iter()
+                            .map(|r| r.window[..r.window.len() - 1].to_vec())
+                            .collect();
+                        match scorer.score(&inputs) {
+                            Ok(logits) => {
+                                // gauge only chunks that actually scored,
+                                // so the width/padding numbers stay honest
+                                // when a lane is erroring
+                                let actual: u64 = inputs.iter().map(|w| w.len() as u64).sum();
+                                let max_t =
+                                    inputs.iter().map(|w| w.len()).max().unwrap_or(0) as u64;
+                                metrics.record_bucket(
+                                    chunk.len(),
+                                    actual,
+                                    max_t * chunk.len() as u64,
+                                );
+                                chunk
+                                    .iter()
+                                    .zip(&logits)
+                                    .map(|(req, lg)| Ok(window_nll(lg, &req.window)))
+                                    .collect()
+                            }
+                            Err(e) => {
+                                let msg = format!("{e:#}");
+                                chunk.iter().map(|_| Err(msg.clone())).collect()
+                            }
+                        }
+                    }
+                    _ => {
+                        let reqs: Vec<(u64, Vec<u32>)> = chunk
+                            .iter()
+                            .map(|r| (r.kind.session().unwrap_or(0), r.window.clone()))
+                            .collect();
+                        let res = if class == 1 {
+                            scorer.prefill(&reqs)
+                        } else {
+                            scorer.decode(&reqs)
+                        };
+                        match res {
+                            Ok(per) => {
+                                let actual: u64 =
+                                    chunk.iter().map(|r| r.window.len() as u64).sum();
+                                let max_t =
+                                    chunk.iter().map(|r| r.window.len()).max().unwrap_or(0) as u64;
+                                metrics.record_bucket(
+                                    chunk.len(),
+                                    actual,
+                                    max_t * chunk.len() as u64,
+                                );
+                                per
+                            }
+                            Err(e) => {
+                                let msg = format!("{e:#}");
+                                chunk.iter().map(|_| Err(msg.clone())).collect()
+                            }
+                        }
+                    }
+                };
+                for (req, outcome) in chunk.iter().zip(outcomes) {
+                    let (queue_us, service_us, latency_us) =
+                        lifecycle_us(req.submitted, dequeued);
+                    metrics.in_flight.fetch_sub(1, Ordering::Relaxed);
+                    let (nll, tokens, error) = match outcome {
+                        Ok((nll, tokens)) => {
                             crate::obs::registry()
                                 .record(Stage::QueueWait, Duration::from_micros(queue_us));
                             metrics.record_queue_wait_us(queue_us);
                             metrics.record_service_us(service_us);
                             metrics.record_latency_us(latency_us);
                             metrics.completed.fetch_add(1, Ordering::Relaxed);
-                            metrics.in_flight.fetch_sub(1, Ordering::Relaxed);
-                            if flight.active() {
-                                completions.push(RequestEvent {
-                                    trace: req.trace,
-                                    batch: 0, // stamped by end_batch
-                                    submit_us: rec.offset_us(req.submitted),
-                                    queue_us,
-                                    service_us,
-                                    window_len: req.window.len() as u32,
-                                    variant: req.variant.index() as u8,
-                                    error: false,
-                                });
-                            }
-                            let _route_span = Span::enter(Stage::ReplyRoute);
-                            let _ = req.reply.send(ScoreResponse {
-                                id: req.id,
-                                trace: req.trace,
-                                variant: req.variant,
-                                nll,
-                                tokens,
-                                latency_us,
-                                queue_us,
-                                batch_size: size,
-                                error: None,
-                            });
+                            (nll, tokens, None)
                         }
+                        Err(msg) => {
+                            metrics.errors.fetch_add(1, Ordering::Relaxed);
+                            (f64::NAN, 0, Some(msg))
+                        }
+                    };
+                    if flight.active() {
+                        completions.push(RequestEvent {
+                            trace: req.trace,
+                            batch: 0, // stamped by end_batch
+                            submit_us: rec.offset_us(req.submitted),
+                            queue_us,
+                            service_us,
+                            window_len: req.window.len() as u32,
+                            variant: req.variant.index() as u8,
+                            error: error.is_some(),
+                        });
                     }
-                    Err(e) => {
-                        metrics.errors.fetch_add(chunk.len() as u64, Ordering::Relaxed);
-                        for req in chunk {
-                            metrics.in_flight.fetch_sub(1, Ordering::Relaxed);
-                            let (queue_us, service_us, latency_us) =
-                                lifecycle_us(req.submitted, dequeued);
-                            if flight.active() {
-                                completions.push(RequestEvent {
-                                    trace: req.trace,
-                                    batch: 0,
-                                    submit_us: rec.offset_us(req.submitted),
-                                    queue_us,
-                                    service_us,
-                                    window_len: req.window.len() as u32,
-                                    variant: req.variant.index() as u8,
-                                    error: true,
-                                });
-                            }
-                            let _ = req.reply.send(ScoreResponse {
-                                id: req.id,
-                                trace: req.trace,
-                                variant: req.variant,
-                                nll: f64::NAN,
-                                tokens: 0,
-                                latency_us,
-                                queue_us,
-                                batch_size: size,
-                                error: Some(format!("{e:#}")),
-                            });
-                        }
+                    let _route_span = Span::enter(Stage::ReplyRoute);
+                    let _ = req.reply.send(ScoreResponse {
+                        id: req.id,
+                        trace: req.trace,
+                        variant: req.variant,
+                        nll,
+                        tokens,
+                        latency_us,
+                        queue_us,
+                        batch_size: size,
+                        error,
+                    });
+                }
+                if class != 0 {
+                    if let Some(st) = scorer.kv_stats() {
+                        metrics.set_kv_stats(&st);
                     }
                 }
                 rec.end_batch(flight, &completions);
@@ -286,10 +353,33 @@ pub fn run_worker_init_failed(
 
 /// Native scorer around the dense transformer. A polled batch is scored
 /// in one `forward_batch` call: every layer's projections and MLP run as
-/// one tall matmul over all windows.
+/// one tall matmul over all windows. With `kv` set the scorer also
+/// serves paged-KV sessions (prefill + O(t) decode); the `RefCell` is
+/// sound because a scorer lives on exactly one worker thread, so session
+/// affinity falls out of the one-lane-per-variant topology. Note a
+/// hot-swap replaces the whole scorer, cache included — sessions opened
+/// before a swap error on their next decode.
 pub struct NativeDenseScorer {
     pub model: Arc<crate::model::Transformer>,
     pub max_batch: usize,
+    pub kv: Option<RefCell<KvState>>,
+}
+
+impl NativeDenseScorer {
+    pub fn new(model: Arc<crate::model::Transformer>, max_batch: usize) -> NativeDenseScorer {
+        NativeDenseScorer {
+            model,
+            max_batch,
+            kv: None,
+        }
+    }
+
+    /// Attach a paged-KV cache with `n_pages` pages (enables
+    /// prefill/decode requests on this lane).
+    pub fn with_kv_pages(mut self, n_pages: usize) -> NativeDenseScorer {
+        self.kv = Some(RefCell::new(KvState::for_model(&self.model.cfg, n_pages)));
+        self
+    }
 }
 
 impl Scorer for NativeDenseScorer {
@@ -310,15 +400,72 @@ impl Scorer for NativeDenseScorer {
         // the variant-specific weights are the q/k/v projections, dense f32
         self.model.cfg.qkv_params() as u64 * 4
     }
+
+    fn prefill(
+        &self,
+        reqs: &[(u64, Vec<u32>)],
+    ) -> anyhow::Result<Vec<Result<(f64, usize), String>>> {
+        let Some(kv) = &self.kv else {
+            anyhow::bail!("dense scorer has no KV cache (serve with --kv-pages)");
+        };
+        let proj = crate::model::transformer::DenseProjector {
+            layers: &self.model.layers,
+        };
+        Ok(kv.borrow_mut().prefill_batch(&self.model, &proj, reqs))
+    }
+
+    fn decode(
+        &self,
+        reqs: &[(u64, Vec<u32>)],
+    ) -> anyhow::Result<Vec<Result<(f64, usize), String>>> {
+        let Some(kv) = &self.kv else {
+            anyhow::bail!("dense scorer has no KV cache (serve with --kv-pages)");
+        };
+        let proj = crate::model::transformer::DenseProjector {
+            layers: &self.model.layers,
+        };
+        Ok(kv.borrow_mut().decode(&self.model, &proj, reqs))
+    }
+
+    fn kv_stats(&self) -> Option<KvStatsSnapshot> {
+        self.kv.as_ref().map(|kv| kv.borrow().stats())
+    }
 }
 
 /// Native scorer around a compressed model. A polled batch is scored in
 /// one `forward_batch` call, so each compressed projection traverses its
 /// sparse-plus-low-rank structure **once per batch** instead of once per
-/// request (or, pre-batching, once per token).
+/// request (or, pre-batching, once per token). Paged-KV sessions run the
+/// same cache machinery as the dense lane with the compressed model as
+/// the Q/K/V projector — cached K/V bits are whatever the compressed
+/// projections produced, so decode stays bit-identical to compressed
+/// rescoring.
 pub struct NativeCompressedScorer {
     pub model: Arc<crate::model::CompressedModel>,
     pub max_batch: usize,
+    pub kv: Option<RefCell<KvState>>,
+}
+
+impl NativeCompressedScorer {
+    pub fn new(
+        model: Arc<crate::model::CompressedModel>,
+        max_batch: usize,
+    ) -> NativeCompressedScorer {
+        NativeCompressedScorer {
+            model,
+            max_batch,
+            kv: None,
+        }
+    }
+
+    /// Attach a paged-KV cache with `n_pages` pages.
+    pub fn with_kv_pages(mut self, n_pages: usize) -> NativeCompressedScorer {
+        self.kv = Some(RefCell::new(KvState::for_model(
+            &self.model.base.cfg,
+            n_pages,
+        )));
+        self
+    }
 }
 
 impl Scorer for NativeCompressedScorer {
@@ -341,6 +488,32 @@ impl Scorer for NativeCompressedScorer {
         // to f32 would
         self.model.resident_weight_bytes() as u64
     }
+
+    fn prefill(
+        &self,
+        reqs: &[(u64, Vec<u32>)],
+    ) -> anyhow::Result<Vec<Result<(f64, usize), String>>> {
+        let Some(kv) = &self.kv else {
+            anyhow::bail!("compressed scorer has no KV cache (serve with --kv-pages)");
+        };
+        Ok(kv
+            .borrow_mut()
+            .prefill_batch(&self.model.base, &*self.model, reqs))
+    }
+
+    fn decode(
+        &self,
+        reqs: &[(u64, Vec<u32>)],
+    ) -> anyhow::Result<Vec<Result<(f64, usize), String>>> {
+        let Some(kv) = &self.kv else {
+            anyhow::bail!("compressed scorer has no KV cache (serve with --kv-pages)");
+        };
+        Ok(kv.borrow_mut().decode(&self.model.base, &*self.model, reqs))
+    }
+
+    fn kv_stats(&self) -> Option<KvStatsSnapshot> {
+        self.kv.as_ref().map(|kv| kv.borrow().stats())
+    }
 }
 
 /// PJRT-backed scorer (AOT executable with device-resident weights).
@@ -362,7 +535,7 @@ impl Scorer for crate::runtime::LoadedModel {
 pub(crate) mod tests {
     use super::*;
     use crate::coordinator::batcher::BatcherConfig;
-    use crate::coordinator::request::Variant;
+    use crate::coordinator::request::{RequestKind, Variant};
     use std::sync::mpsc::channel;
     use std::time::{Duration, Instant};
 
@@ -401,7 +574,11 @@ pub(crate) mod tests {
         }
     }
 
-    fn mk_req(id: u64, window: Vec<u32>) -> (ScoreRequest, std::sync::mpsc::Receiver<ScoreResponse>) {
+    fn mk_req_kind(
+        id: u64,
+        kind: RequestKind,
+        window: Vec<u32>,
+    ) -> (ScoreRequest, std::sync::mpsc::Receiver<ScoreResponse>) {
         let (tx, rx) = channel();
         (
             ScoreRequest {
@@ -409,12 +586,17 @@ pub(crate) mod tests {
                 // deterministic per-test trace so replies can assert the echo
                 trace: crate::obs::TraceId(id + 1000),
                 variant: Variant::Dense,
+                kind,
                 window,
                 submitted: Instant::now(),
                 reply: tx,
             },
             rx,
         )
+    }
+
+    fn mk_req(id: u64, window: Vec<u32>) -> (ScoreRequest, std::sync::mpsc::Receiver<ScoreResponse>) {
+        mk_req_kind(id, RequestKind::Score, window)
     }
 
     #[test]
@@ -623,5 +805,97 @@ pub(crate) mod tests {
         batcher.close();
         h.join().unwrap();
         assert_eq!(metrics.completed.load(Ordering::Relaxed), 8);
+    }
+
+    fn tiny_kv_scorer() -> NativeDenseScorer {
+        let cfg = crate::model::ModelConfig {
+            vocab: 64,
+            d_model: 32,
+            n_heads: 4,
+            n_layers: 2,
+            d_ff: 64,
+            seq_len: 48,
+        };
+        NativeDenseScorer::new(Arc::new(crate::model::Transformer::random(cfg, 7)), 4)
+            .with_kv_pages(32)
+    }
+
+    /// Satellite: the `Decode` error arm for an unknown/evicted session
+    /// reports the same exact lifecycle split as successes — the reply's
+    /// `queue_us` reflects the real submit→dequeue wait (never a
+    /// hardcoded zero) and queue + service sum to `latency_us`.
+    #[test]
+    fn decode_unknown_session_error_keeps_lifecycle_split() {
+        let batcher = Arc::new(Batcher::new(BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            capacity: 64,
+            ..BatcherConfig::default()
+        }));
+        let metrics = Arc::new(Metrics::new());
+        // pre-date the submit instant so a dropped queue share would be
+        // visible: the reply must carry ≥ ~5ms of queue time
+        let (mut req, rx) = mk_req_kind(3, RequestKind::Decode { session: 999 }, vec![1, 2]);
+        req.submitted = Instant::now() - Duration::from_millis(5);
+        batcher.push(req).unwrap();
+        let b2 = batcher.clone();
+        let m2 = metrics.clone();
+        let h = std::thread::spawn(move || run_worker(Variant::Dense, tiny_kv_scorer(), b2, m2));
+        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        let err = resp.error.clone().expect("unknown session must error");
+        assert!(err.contains("999"), "error should name the session: {err}");
+        assert!(
+            resp.queue_us >= 4_000,
+            "error reply must keep the queue share: {resp:?}"
+        );
+        assert!(resp.queue_us <= resp.latency_us, "{resp:?}");
+        assert!(resp.nll.is_nan() && resp.tokens == 0);
+        batcher.close();
+        h.join().unwrap();
+        assert_eq!(metrics.errors.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.completed.load(Ordering::Relaxed), 0);
+        assert_eq!(metrics.in_flight.load(Ordering::Relaxed), 0);
+    }
+
+    /// Prefill + decode round-trip through the worker loop: session
+    /// requests dispatch by class, both hops succeed, and the KV gauges
+    /// are published to `Metrics` after the batch.
+    #[test]
+    fn worker_serves_prefill_then_decode_and_publishes_kv_gauges() {
+        let batcher = Arc::new(Batcher::new(BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            capacity: 64,
+            ..BatcherConfig::default()
+        }));
+        let metrics = Arc::new(Metrics::new());
+        let b2 = batcher.clone();
+        let m2 = metrics.clone();
+        let h = std::thread::spawn(move || run_worker(Variant::Dense, tiny_kv_scorer(), b2, m2));
+
+        let prompt: Vec<u32> = (1..=20).collect();
+        let (req, rx) = mk_req_kind(1, RequestKind::Prefill { session: 5 }, prompt);
+        batcher.push(req).unwrap();
+        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_eq!(resp.tokens, 19, "prefill scores the window's targets");
+        assert!(resp.nll.is_finite());
+        assert!(resp.queue_us <= resp.latency_us);
+
+        let (req, rx) = mk_req_kind(2, RequestKind::Decode { session: 5 }, vec![33]);
+        batcher.push(req).unwrap();
+        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_eq!(resp.tokens, 1, "one decode step per appended token");
+        assert!(resp.nll.is_finite());
+
+        batcher.close();
+        h.join().unwrap();
+        assert_eq!(metrics.completed.load(Ordering::Relaxed), 2);
+        assert!(
+            metrics.kv_pages_resident.load(Ordering::Relaxed) > 0,
+            "worker must publish KV occupancy after session batches"
+        );
+        assert!(metrics.kv_misses.load(Ordering::Relaxed) > 0);
     }
 }

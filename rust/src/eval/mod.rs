@@ -5,6 +5,7 @@ pub mod perplexity;
 pub mod sweep;
 
 pub use perplexity::{
-    perplexity, perplexity_batched, perplexity_parallel, perplexity_parallel_batched, PplResult,
+    perplexity, perplexity_batched, perplexity_parallel, perplexity_parallel_batched, row_nll,
+    PplResult,
 };
 pub use sweep::{eval_point, eval_point_dtyped, sweep, sweep_refined, SweepPoint};

@@ -22,19 +22,26 @@ pub fn window_nll(logits: &Matrix, window: &[u32]) -> (f64, usize) {
     assert!(window.len() >= t + 1);
     let mut total = 0.0f64;
     for i in 0..t {
-        let row = logits.row(i);
-        let target = window[i + 1] as usize;
-        // log-softmax, numerically stable
-        let maxv = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
-        let lse: f64 = row
-            .iter()
-            .map(|&v| ((v - maxv) as f64).exp())
-            .sum::<f64>()
-            .ln()
-            + maxv as f64;
-        total += lse - row[target] as f64;
+        total += row_nll(logits.row(i), window[i + 1] as usize);
     }
     (total, t)
+}
+
+/// NLL of one target under one logits row — the per-row unit of
+/// [`window_nll`], split out so the decode path can score tokens one at
+/// a time: accumulated left-to-right in f64, a prefill + per-token
+/// decode sum is **bit-identical** to the full-window total.
+#[inline]
+pub fn row_nll(row: &[f32], target: usize) -> f64 {
+    // log-softmax, numerically stable
+    let maxv = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+    let lse: f64 = row
+        .iter()
+        .map(|&v| ((v - maxv) as f64).exp())
+        .sum::<f64>()
+        .ln()
+        + maxv as f64;
+    lse - row[target] as f64
 }
 
 /// Perplexity over windows with any forward function (dense/compressed/HLO).

@@ -89,6 +89,22 @@
 //! on the hot path; `eval` buckets identically so sweep numbers measure
 //! the code that serves.
 //!
+//! That is the *stateless* path — every request rescores its full
+//! window. Conversations use the **session path** instead: a prefill
+//! request runs the same batched forward once while writing each
+//! layer's K/V rows (f16-quantized in place, so attention consumes the
+//! exact bits the cache holds) into a paged pool
+//! ([`model::kvcache`] — fixed-size token blocks, prefix-hash page
+//! sharing with copy-on-write, LRU session eviction, memory fixed by
+//! `--kv-pages`), and each decode request then appends one token in
+//! O(t): a single new query row per sequence attends over the cached
+//! pages (`model::attention_batch`'s last-row kernel sequence, replayed
+//! by `decode_batch`), so decode NLLs are **bit-identical** to
+//! rescoring the grown window and `hisolo serve --decode` asserts it.
+//! The coordinator buckets decode traffic separately from prefill
+//! (class-keyed bucketing), and cache hit/occupancy gauges ride the
+//! metrics JSON; see [`coordinator`] for the session lifecycle.
+//!
 //! # The SIMD kernel layer
 //!
 //! Every dense multiply, widen, softmax, and layernorm on the hot path

@@ -73,6 +73,16 @@ COMMANDS:
       [--slo-p99-us N]  (SLO burn-rate accounting against a p99 latency
       target: prints a slo_burn_check line, fills the metrics `slo`
       object, and the reporter tracks a rolling-window burn rate)
+      [--kv-pages N]  (with --native: attach a paged KV cache of N
+      fixed-size pages to each lane's scorer, enabling prefill/decode
+      session requests; memory ceiling = N x 2 x layers x 16 x d_model
+      x 2 bytes, allocated up front)
+      [--decode]  (with --native: after the rescore workload, run
+      multi-turn session traffic — prefill shared prompts, then decode
+      one token per step over the paged KV cache — and print a
+      decode_check line asserting decode NLLs are bit-identical to
+      full-window prefill and the prefix cache is hitting; implies
+      --kv-pages 512 unless given)
   trace <file>                  analyze a --trace-out export offline:
                                 per-trace critical paths for the slowest
                                 requests and a per-bucket stage breakdown
@@ -82,7 +92,7 @@ Artifacts default to ./artifacts (override with --artifacts or
 HISOLO_ARTIFACTS). Build them with `make artifacts`.";
 
 fn main() {
-    let args = Args::parse(&["native", "no-rcm", "help", "synthetic", "tiny"]);
+    let args = Args::parse(&["native", "no-rcm", "help", "synthetic", "tiny", "decode"]);
     if args.flag("help") || args.subcommand().is_none() {
         println!("{USAGE}");
         return;
@@ -524,6 +534,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if synthetic_mode && !native {
         bail!("--synthetic requires --native (PJRT graphs are compiled against trained artifacts)");
     }
+    let decode_mode = args.flag("decode");
+    if decode_mode && !native {
+        bail!("--decode requires --native (paged-KV sessions live in the native scorers)");
+    }
+    let kv_pages = args.get_usize("kv-pages", if decode_mode { 512 } else { 0 });
+    if kv_pages > 0 && !native {
+        bail!("--kv-pages requires --native");
+    }
 
     // per-request flight recorder: enabled only when a trace is requested,
     // so default serving pays one thread-local check per span
@@ -613,13 +631,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         if native {
             let model = base_model.clone().expect("native path built the base model");
             match v {
-                Variant::Dense => coord.add_worker(
-                    v,
-                    hisolo::coordinator::worker::NativeDenseScorer {
-                        model,
-                        max_batch: 8,
-                    },
-                ),
+                Variant::Dense => {
+                    let mut scorer =
+                        hisolo::coordinator::worker::NativeDenseScorer::new(model, 8);
+                    if kv_pages > 0 {
+                        scorer = scorer.with_kv_pages(kv_pages);
+                    }
+                    coord.add_worker(v, scorer)
+                }
                 Variant::Hss => {
                     let cm = if let Some(store_dir) = &from_store {
                         // cold start from the HSB1 store: parse only — fp16
@@ -641,13 +660,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
                         let cfg = cfg_from_args(args);
                         Arc::new(CompressedModel::compress(model, Method::SHssRcm, cfg))
                     };
-                    coord.add_worker(
-                        v,
-                        hisolo::coordinator::worker::NativeCompressedScorer {
-                            model: cm,
-                            max_batch: 8,
-                        },
-                    )
+                    let mut scorer =
+                        hisolo::coordinator::worker::NativeCompressedScorer::new(cm, 8);
+                    if kv_pages > 0 {
+                        scorer = scorer.with_kv_pages(kv_pages);
+                    }
+                    coord.add_worker(v, scorer)
                 }
             }
         } else {
@@ -732,6 +750,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ]);
     }
     t.print();
+    // --decode: multi-turn session traffic over the paged KV cache,
+    // raced against the O(t²) full-window rescore pattern, with a
+    // bitwise NLL identity check (decode vs full-window prefill)
+    if decode_mode {
+        for &v in &variants {
+            run_decode_sessions(&coord, v, &ws, seq_len)?;
+        }
+    }
     coord.sample_queue_depths();
     println!("\nstage breakdown (where each served token's microseconds went):");
     hisolo::obs::registry().table().print();
@@ -817,6 +843,125 @@ fn cmd_serve(args: &Args) -> Result<()> {
     coord.shutdown();
     if !decomposed {
         bail!("latency decomposition check failed (ratio {ratio:.3})");
+    }
+    Ok(())
+}
+
+/// `serve --decode` workload: open paired sessions whose prompts share a
+/// prefix (so the paged cache publishes and re-hits prompt pages), decode
+/// the rest of each window one token per step, race the same token
+/// stream through the O(t²) full-window rescore pattern, and assert the
+/// decode NLL totals are bit-identical to a fresh full-window prefill.
+/// Single-token decode steps keep the f64 NLL accumulation order equal
+/// to the full prefill's row sum — that's what makes bitwise equality
+/// (not mere closeness) the right assertion.
+fn run_decode_sessions(
+    coord: &Coordinator,
+    v: Variant,
+    ws: &[Vec<u32>],
+    seq_len: usize,
+) -> Result<()> {
+    use hisolo::model::kvcache::DEFAULT_BLOCK_SIZE;
+    let recv = |rx: std::sync::mpsc::Receiver<hisolo::coordinator::ScoreResponse>,
+                what: &str|
+     -> Result<hisolo::coordinator::ScoreResponse> {
+        let r = rx
+            .recv()
+            .map_err(|e| anyhow::anyhow!("{what}: worker gone: {e}"))?;
+        match r.error {
+            Some(e) => bail!("{what} failed: {e}"),
+            None => Ok(r),
+        }
+    };
+    let n_sessions = ws.len().clamp(2, 8) & !1; // even, pairs share a window
+    // block-aligned prompt ≥ one full block: the pair's second prefill
+    // must find published prompt pages to hit
+    let prompt_len = (seq_len / 2 / DEFAULT_BLOCK_SIZE * DEFAULT_BLOCK_SIZE)
+        .max(DEFAULT_BLOCK_SIZE)
+        .min(seq_len - 1)
+        .max(2);
+    let window_of = |s: usize| &ws[(s / 2) % ws.len()];
+
+    let mut totals = vec![0.0f64; n_sessions];
+    let mut toks = vec![0usize; n_sessions];
+    let t0 = Instant::now();
+    // two prefill waves: evens publish the prompt pages, odds (same
+    // prompts) re-open them as prefix-cache hits
+    for wave in 0..2 {
+        let mut rxs = Vec::new();
+        for s in (0..n_sessions).filter(|s| s % 2 == wave) {
+            let rx = coord.submit_prefill(v, s as u64, window_of(s)[..prompt_len].to_vec())?;
+            rxs.push((s, rx));
+        }
+        for (s, rx) in rxs {
+            let r = recv(rx, "prefill")?;
+            totals[s] += r.nll;
+            toks[s] += r.tokens;
+        }
+    }
+    // decode one token per session per step; the steps coalesce into
+    // decode-class buckets and run as one batched O(t) kernel call
+    let mut decoded = 0usize;
+    for i in prompt_len..seq_len {
+        let mut rxs = Vec::new();
+        for s in 0..n_sessions {
+            let rx = coord.submit_decode(v, s as u64, vec![window_of(s)[i]])?;
+            rxs.push((s, rx));
+        }
+        for (s, rx) in rxs {
+            let r = recv(rx, "decode")?;
+            totals[s] += r.nll;
+            toks[s] += r.tokens;
+            decoded += 1;
+        }
+    }
+    let decode_secs = t0.elapsed().as_secs_f64();
+
+    // rescore arm: the pre-decode O(t²) pattern — rescore the whole
+    // growing window once per new token
+    let t1 = Instant::now();
+    for i in prompt_len..seq_len {
+        let windows: Vec<Vec<u32>> = (0..n_sessions)
+            .map(|s| window_of(s)[..=i].to_vec())
+            .collect();
+        let resps = coord.submit_all(v, &windows)?;
+        if let Some(e) = resps.iter().find_map(|r| r.error.clone()) {
+            bail!("rescore failed: {e}");
+        }
+    }
+    let rescore_secs = t1.elapsed().as_secs_f64();
+
+    // reference: full-window prefill in fresh sessions must reproduce
+    // the prefill+decode NLL totals bit-for-bit
+    let mut bitwise_ok = true;
+    for s in 0..n_sessions {
+        let rx = coord.submit_prefill(v, 1_000 + s as u64, window_of(s)[..seq_len].to_vec())?;
+        let r = recv(rx, "reference prefill")?;
+        if r.nll.to_bits() != totals[s].to_bits() || r.tokens != toks[s] {
+            bitwise_ok = false;
+            eprintln!(
+                "session {s}: decode total nll {} ({} toks) != full prefill {} ({} toks)",
+                totals[s], toks[s], r.nll, r.tokens
+            );
+        }
+    }
+    let hit_rate = coord.metrics.kv_hit_rate();
+    let pass = bitwise_ok && hit_rate > 0.0;
+    println!(
+        "decode_check: variant={} sessions={n_sessions} prompt={prompt_len} decoded={decoded} \
+         decode_tps={:.0} rescore_tps={:.0} speedup={:.2}x bitwise={} kv_hit_rate={hit_rate:.3} {}",
+        v.name(),
+        decoded as f64 / decode_secs.max(1e-12),
+        decoded as f64 / rescore_secs.max(1e-12),
+        rescore_secs.max(1e-12) / decode_secs.max(1e-12),
+        if bitwise_ok { "ok" } else { "MISMATCH" },
+        if pass { "PASS" } else { "FAIL" }
+    );
+    if !pass {
+        bail!(
+            "decode_check failed for {} (bitwise={bitwise_ok} hit_rate={hit_rate})",
+            v.name()
+        );
     }
     Ok(())
 }

@@ -58,6 +58,11 @@ pub struct AttnWorkspace {
     qrow: Vec<f32>,
     /// lane-padded accumulator for one context head row
     opad: Vec<f32>,
+    /// gathered full-width [t, d] K rows for one decode sequence (the
+    /// paged cache widens f16 pages block-by-block into here)
+    kfull: Vec<f32>,
+    /// gathered full-width [t, d] V rows for one decode sequence
+    vfull: Vec<f32>,
 }
 
 impl AttnWorkspace {
@@ -74,6 +79,15 @@ impl AttnWorkspace {
         if self.qrow.len() < hd_pad {
             self.qrow.resize(hd_pad, 0.0);
             self.opad.resize(hd_pad, 0.0);
+        }
+    }
+
+    /// Grow the full-width gather staging for decode sequences up to
+    /// `t_max` cached tokens at model width `d` (idempotent; only grows).
+    pub fn ensure_full(&mut self, t_max: usize, d: usize) {
+        if self.kfull.len() < t_max * d {
+            self.kfull.resize(t_max * d, 0.0);
+            self.vfull.resize(t_max * d, 0.0);
         }
     }
 }
@@ -126,7 +140,7 @@ pub fn attention_batch(
     let hd_pad = simd::padded_k(hd);
     let t_max = offsets.windows(2).map(|w| w[1] - w[0]).max().unwrap_or(0);
     ws.ensure(t_max, hd_pad);
-    let AttnWorkspace { kh, vh, probs, qrow, opad } = ws;
+    let AttnWorkspace { kh, vh, probs, qrow, opad, .. } = ws;
     let kt = simd::kernels();
 
     for wi in 0..offsets.len() - 1 {
@@ -185,6 +199,94 @@ pub fn attention_batch(
                 }
                 out.row_mut(off + i)[c0..c0 + hd].copy_from_slice(&od[..hd]);
             }
+        }
+    }
+}
+
+/// Incremental decode attention: one **new** query row per sequence
+/// against that sequence's cached K/V — the O(t) step that replaces
+/// rescoring the whole window through [`attention_batch`] (O(t²)).
+///
+/// `q` is [k, d] (row s is sequence s's single new query), `lens[s]` is
+/// the sequence's total key count *including* the new token, and
+/// `gather(s, dk, dv)` must fill `dk`/`dv` (each `lens[s] * d`) with the
+/// sequence's full-width K/V rows — in serving this widens f16 pages
+/// block-by-block through the dispatched `widen_f16_lanes` kernel (see
+/// `model::kvcache::PagePool::gather`). `out` is [k, d].
+///
+/// Bit-identity: per (sequence, head) the K/V rows are packed at the
+/// same lane-padded stride and the score → `exp_softmax_row` → axpy
+/// sequence below is the `i = t - 1` iteration of [`attention_batch`]
+/// verbatim, so the decode row is **bit-for-bit** the last output row of
+/// rescoring the full window — the property tests pin this across
+/// dispatch levels.
+pub fn decode_batch(
+    q: &Matrix,
+    lens: &[usize],
+    mut gather: impl FnMut(usize, &mut [f32], &mut [f32]),
+    n_heads: usize,
+    out: &mut Matrix,
+    ws: &mut AttnWorkspace,
+) {
+    let d = q.cols;
+    assert_eq!(q.rows, lens.len(), "one query row per sequence");
+    assert_eq!((out.rows, out.cols), (q.rows, d), "output shape mismatch");
+    assert!(
+        n_heads > 0 && d % n_heads == 0,
+        "d_model {d} not divisible by n_heads {n_heads}"
+    );
+    let hd = d / n_heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let hd_pad = simd::padded_k(hd);
+    let t_max = lens.iter().copied().max().unwrap_or(0);
+    ws.ensure(t_max, hd_pad);
+    ws.ensure_full(t_max, d);
+    let AttnWorkspace { kh, vh, probs, qrow, opad, kfull, vfull } = ws;
+    let kt = simd::kernels();
+
+    for (s, &t) in lens.iter().enumerate() {
+        assert!(t >= 1, "sequence {s} has no keys");
+        let kf = &mut kfull[..t * d];
+        let vf = &mut vfull[..t * d];
+        gather(s, kf, vf);
+        for h in 0..n_heads {
+            let c0 = h * hd;
+            // pack exactly as attention_batch does, reading the gathered
+            // [t, d] rows instead of the stacked block
+            for i in 0..t {
+                kh[i * hd_pad..i * hd_pad + hd].copy_from_slice(&kf[i * d + c0..i * d + c0 + hd]);
+                kh[i * hd_pad + hd..(i + 1) * hd_pad].fill(0.0);
+                vh[i * hd_pad..i * hd_pad + hd].copy_from_slice(&vf[i * d + c0..i * d + c0 + hd]);
+                vh[i * hd_pad + hd..(i + 1) * hd_pad].fill(0.0);
+            }
+            // the single query row is row i = t - 1 of the full window
+            let qsrc = &q.row(s)[c0..c0 + hd];
+            let qi: &[f32] = if hd_pad == hd {
+                qsrc
+            } else {
+                qrow[..hd].copy_from_slice(qsrc);
+                qrow[hd..hd_pad].fill(0.0);
+                &qrow[..hd_pad]
+            };
+            let pr = &mut probs[..t];
+            let n8 = qi.len() / simd::LANES * simd::LANES;
+            for (j, pj) in pr.iter_mut().enumerate() {
+                let krow = &kh[j * hd_pad..j * hd_pad + qi.len()];
+                let mut acc = [0.0f32; 8];
+                (kt.dot8_acc)(&qi[..n8], &krow[..n8], &mut acc);
+                let mut s = simd::hsum8_tree(&acc);
+                for c in n8..qi.len() {
+                    s += qi[c] * krow[c];
+                }
+                *pj = s;
+            }
+            (kt.exp_softmax_row)(pr, scale);
+            let od = &mut opad[..hd_pad];
+            od.fill(0.0);
+            for (j, &pj) in pr.iter().enumerate() {
+                (kt.axpy_k)(pj, &vh[j * hd_pad..(j + 1) * hd_pad], od);
+            }
+            out.row_mut(s)[c0..c0 + hd].copy_from_slice(&od[..hd]);
         }
     }
 }
@@ -308,6 +410,57 @@ mod tests {
             let batched = causal_mha(&q, &k, &v, heads);
             let scalar = causal_mha_scalar(&q, &k, &v, heads);
             slices_close(&batched.data, &scalar.data, 1e-5, 1e-5, "vs scalar")
+        });
+    }
+
+    /// The decode kernel's contract: one new query row against gathered
+    /// K/V is **bit-for-bit** the last output row of rescoring the full
+    /// window through `attention_batch` — ragged lengths and t = 1
+    /// included. (The paged-cache end-to-end version of this property
+    /// lives in `model::kvcache`.)
+    #[test]
+    fn decode_batch_bit_matches_last_row_of_attention_batch() {
+        check(12, |rng| {
+            let heads = 1 + rng.below(4);
+            let hd = 4 + rng.below(5);
+            let d = heads * hd;
+            let n_seqs = 1 + rng.below(5);
+            let ts: Vec<usize> = (0..n_seqs).map(|_| 1 + rng.below(14)).collect();
+            let total: usize = ts.iter().sum();
+            let (qs, ks, vs) = stacked(total, d, rng.next_u64());
+            let mut offsets = vec![0usize];
+            for &t in &ts {
+                offsets.push(offsets[offsets.len() - 1] + t);
+            }
+            // full-window rescore reference
+            let mut full = Matrix::zeros(total, d);
+            let mut ws = AttnWorkspace::default();
+            attention_batch(&qs, &ks, &vs, &offsets, heads, &mut full, &mut ws);
+            // decode arm: last query row of each window, keys gathered
+            let mut q1 = Matrix::zeros(n_seqs, d);
+            for (s, &t) in ts.iter().enumerate() {
+                q1.row_mut(s).copy_from_slice(qs.row(offsets[s] + t - 1));
+            }
+            let mut out = Matrix::zeros(n_seqs, d);
+            decode_batch(
+                &q1,
+                &ts,
+                |s, dk, dv| {
+                    for i in 0..ts[s] {
+                        dk[i * d..(i + 1) * d].copy_from_slice(ks.row(offsets[s] + i));
+                        dv[i * d..(i + 1) * d].copy_from_slice(vs.row(offsets[s] + i));
+                    }
+                },
+                heads,
+                &mut out,
+                &mut ws,
+            );
+            for (s, &t) in ts.iter().enumerate() {
+                if out.row(s) != full.row(offsets[s] + t - 1) {
+                    return Err(format!("seq {s} (t={t}): decode row != rescore last row"));
+                }
+            }
+            Ok(())
         });
     }
 

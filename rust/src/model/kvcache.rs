@@ -1,0 +1,1172 @@
+//! Paged KV cache — the storage side of incremental decoding.
+//!
+//! Serving a conversation by rescoring the whole window is O(t²):
+//! attention recomputes every layer's K/V for every cached token on
+//! every new token. This module keeps those K/V rows **resident between
+//! requests** so a decode step only computes the new token's row and
+//! attends against the cache — O(t) per token, the k = 1 regime the
+//! paper's "one sparse and a sequence of thin-matrix multiplications"
+//! claim describes.
+//!
+//! # Layout (vLLM-style pages)
+//!
+//! The pool is one shared f16-resident [`WeightBuf`] carved into
+//! fixed-size **pages**. A page holds `block_size` consecutive tokens of
+//! one sequence — *all* layers, K and V — so a sequence's cache is just a
+//! per-sequence **block table** (`SeqKv::blocks`) of page ids:
+//!
+//! ```text
+//! page elems = 2 · n_layers · block_size · d_model      (u16 each)
+//! elem(page, layer, kv, slot, j)
+//!   = page·page_elems + ((layer·2 + kv)·block_size + slot)·d_model + j
+//! memory ceiling = n_pages · page_elems · 2 bytes       (fixed at startup)
+//! ```
+//!
+//! Tokens of one (layer, K|V) plane are contiguous, so a decode step
+//! gathers a sequence's keys **block-by-block** with one dispatched
+//! `widen_f16_lanes` call per (page, layer, plane) — the same SIMD lane
+//! primitive the f16-resident weights ride.
+//!
+//! # Sharing, COW, eviction
+//!
+//! Full blocks are published under a **prefix-chain hash** (the key of
+//! block b commits to all tokens 0..(b+1)·block_size; stored block
+//! tokens are verified on lookup, so a hash collision can only miss a
+//! sharing opportunity, never alias wrong keys). A prefill whose leading
+//! blocks hit the index reuses those pages (refcount++) and skips both
+//! the page writes and nothing else — the ULP contract makes the bits it
+//! would have written identical. Pages are **copy-on-write**: published
+//! pages are full and immutable; appending into a *shared partial* tail
+//! (after [`PagePool::fork_seq`]) first copies it ([`PagePool::cow_tail`]).
+//! A free-list allocator recycles pages when a sequence's refcounts drop
+//! to zero; under memory pressure [`KvState`] evicts whole sessions
+//! **LRU-by-session** until the allocation succeeds.
+//!
+//! # Bit-identity with rescoring
+//!
+//! Pages are f16, so the cache-writing prefill *itself* consumes the
+//! f16-round-tripped K/V (`Transformer::prefill_batch_with` quantizes the
+//! projected rows in place before attention). By induction every decode
+//! step's activations are bit-identical to a cache-writing prefill of the
+//! full window at the same position — the property tests below and the
+//! `decode_check` CI gate pin this across `HISOLO_SIMD` dispatch levels.
+
+use crate::linalg::simd;
+use crate::linalg::weightbuf::WeightBuf;
+use crate::model::transformer::QkvProjector;
+use crate::model::{ModelConfig, Transformer};
+use crate::util::fp16::{f16_to_f32, f32_to_f16};
+use std::collections::HashMap;
+
+/// Geometry of one [`PagePool`] (fixed at construction).
+#[derive(Clone, Copy, Debug)]
+pub struct KvCacheConfig {
+    /// tokens per page (16 balances gather width against sharing
+    /// granularity: one page = 16 · d_model · 2 planes · n_layers u16s,
+    /// and a prefix must match in 16-token units to share)
+    pub block_size: usize,
+    /// pool capacity in pages — the memory ceiling is
+    /// `n_pages · page_elems · 2` bytes, allocated once
+    pub n_pages: usize,
+    pub n_layers: usize,
+    pub d_model: usize,
+}
+
+/// Default tokens-per-page (see [`KvCacheConfig::block_size`]).
+pub const DEFAULT_BLOCK_SIZE: usize = 16;
+
+impl KvCacheConfig {
+    /// Page geometry for a model: all layers' K and V planes of
+    /// `block_size` tokens.
+    pub fn for_model(cfg: &ModelConfig, n_pages: usize, block_size: usize) -> KvCacheConfig {
+        KvCacheConfig {
+            block_size,
+            n_pages,
+            n_layers: cfg.n_layers,
+            d_model: cfg.d_model,
+        }
+    }
+
+    /// u16 elements per page.
+    pub fn page_elems(&self) -> usize {
+        2 * self.n_layers * self.block_size * self.d_model
+    }
+
+    /// Resident bytes of the whole pool (the memory ceiling formula).
+    pub fn pool_bytes(&self) -> usize {
+        self.n_pages * self.page_elems() * 2
+    }
+}
+
+/// The page pool has no free page and nothing more can be evicted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolExhausted;
+
+/// A sequence's view of the pool: its block table plus the token count
+/// cached so far. `blocks[b]` holds tokens `b·block_size ..` of the
+/// sequence (every layer's K and V).
+#[derive(Default)]
+pub struct SeqKv {
+    blocks: Vec<u32>,
+    len: usize,
+    /// leading blocks borrowed from the sharing index at prefill — never
+    /// written by this sequence (their bits are already identical)
+    shared_blocks: usize,
+}
+
+impl SeqKv {
+    pub fn new() -> SeqKv {
+        SeqKv::default()
+    }
+
+    /// Tokens cached so far.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Whether block `b` was borrowed from the sharing index at prefill
+    /// (its page must not be written — the bits are already there).
+    pub fn block_is_shared(&self, b: usize) -> bool {
+        b < self.shared_blocks
+    }
+
+    /// Advance the cached-token count after a decode step's writes.
+    pub(crate) fn advance(&mut self, n: usize) {
+        self.len += n;
+    }
+}
+
+/// Chain hash for prefix sharing: the key of block b is
+/// `chain_key(key of block b-1, tokens of block b)`, seeded by
+/// [`KEY_SEED`] — so equal keys mean equal full prefixes (verified
+/// against the stored block tokens on lookup).
+pub fn chain_key(parent: u64, block_tokens: &[u32]) -> u64 {
+    let mut h = parent ^ 0xA076_1D64_78BD_642F;
+    for &t in block_tokens {
+        h = (h ^ t as u64).wrapping_mul(0x0100_0000_01B3);
+        h ^= h >> 29;
+        h = h.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    }
+    h ^ (h >> 32)
+}
+
+/// Seed of every prefix chain (the key "before block 0").
+pub const KEY_SEED: u64 = 0x9E37_79B9_7F4A_7C15;
+
+struct Published {
+    page: u32,
+    tokens: Box<[u32]>,
+}
+
+/// The shared f16 page pool: free-list allocation, per-page refcounts,
+/// and the prefix-hash sharing index. See the module docs for layout.
+pub struct PagePool {
+    cfg: KvCacheConfig,
+    buf: WeightBuf,
+    free: Vec<u32>,
+    refcount: Vec<u32>,
+    /// key a page is published under in `index` (full, immutable pages only)
+    published: Vec<Option<u64>>,
+    index: HashMap<u64, Published>,
+    hits: u64,
+    misses: u64,
+}
+
+impl PagePool {
+    pub fn new(cfg: KvCacheConfig) -> PagePool {
+        assert!(cfg.block_size > 0 && cfg.n_pages > 0 && cfg.d_model > 0 && cfg.n_layers > 0);
+        PagePool {
+            buf: WeightBuf::F16(vec![0u16; cfg.n_pages * cfg.page_elems()]),
+            free: (0..cfg.n_pages as u32).rev().collect(),
+            refcount: vec![0; cfg.n_pages],
+            published: vec![None; cfg.n_pages],
+            index: HashMap::new(),
+            hits: 0,
+            misses: 0,
+            cfg,
+        }
+    }
+
+    pub fn config(&self) -> &KvCacheConfig {
+        &self.cfg
+    }
+
+    pub fn pages_total(&self) -> usize {
+        self.cfg.n_pages
+    }
+
+    pub fn pages_free(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Pages with refcount > 0. The allocator invariant the property
+    /// tests pin: `pages_in_use() + pages_free() == pages_total()` at
+    /// every point of any alloc/free/retain/fork/COW interleaving.
+    pub fn pages_in_use(&self) -> usize {
+        self.cfg.n_pages - self.free.len()
+    }
+
+    /// Actual bytes the pool keeps resident (f16 pages).
+    pub fn resident_bytes(&self) -> usize {
+        self.buf.resident_bytes()
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    pub fn refcount(&self, page: u32) -> u32 {
+        self.refcount[page as usize]
+    }
+
+    fn f16(&self) -> &[u16] {
+        self.buf.as_f16()
+    }
+
+    fn f16_mut(&mut self) -> &mut [u16] {
+        match &mut self.buf {
+            WeightBuf::F16(v) => v,
+            WeightBuf::F32(_) => unreachable!("page pool is always f16-resident"),
+        }
+    }
+
+    /// Element offset of (page, layer, K|V plane) — `block_size · d_model`
+    /// contiguous values.
+    fn plane_base(&self, page: u32, layer: usize, kv: usize) -> usize {
+        page as usize * self.cfg.page_elems()
+            + (layer * 2 + kv) * self.cfg.block_size * self.cfg.d_model
+    }
+
+    /// Take a page off the free list (refcount 0 → 1).
+    pub fn alloc(&mut self) -> Option<u32> {
+        let p = self.free.pop()?;
+        debug_assert_eq!(self.refcount[p as usize], 0);
+        self.refcount[p as usize] = 1;
+        Some(p)
+    }
+
+    pub fn retain(&mut self, page: u32) {
+        assert!(self.refcount[page as usize] > 0, "retain of a free page");
+        self.refcount[page as usize] += 1;
+    }
+
+    /// Drop one reference; the last release unpublishes the page and
+    /// returns it to the free list. Panics on double-free.
+    pub fn release(&mut self, page: u32) {
+        let rc = &mut self.refcount[page as usize];
+        assert!(*rc > 0, "double free of page {page}");
+        *rc -= 1;
+        if *rc == 0 {
+            if let Some(key) = self.published[page as usize].take() {
+                self.index.remove(&key);
+            }
+            self.free.push(page);
+        }
+    }
+
+    /// Look up a full block by its chain key; on a verified hit the page
+    /// is retained for the caller and the hit counter bumps.
+    pub fn lookup_shared(&mut self, key: u64, block_tokens: &[u32]) -> Option<u32> {
+        let page = match self.index.get(&key) {
+            Some(e) if &*e.tokens == block_tokens => e.page,
+            _ => return None,
+        };
+        self.refcount[page as usize] += 1;
+        self.hits += 1;
+        Some(page)
+    }
+
+    /// Count a full-block prefill that could not share (the denominator
+    /// partner of `lookup_shared` hits).
+    pub fn note_miss(&mut self) {
+        self.misses += 1;
+    }
+
+    /// Publish a full, final page under its chain key so later prefills
+    /// with the same prefix share it. First publisher wins; partial
+    /// pages must never be published (they are still appended into).
+    pub fn publish(&mut self, page: u32, key: u64, block_tokens: &[u32]) {
+        if self.published[page as usize].is_some() || self.index.contains_key(&key) {
+            return;
+        }
+        self.published[page as usize] = Some(key);
+        self.index.insert(
+            key,
+            Published {
+                page,
+                tokens: block_tokens.into(),
+            },
+        );
+    }
+
+    /// Release every page of a sequence and clear its table.
+    pub fn free_seq(&mut self, seq: &mut SeqKv) {
+        for &p in &seq.blocks {
+            let rc = &mut self.refcount[p as usize];
+            assert!(*rc > 0, "double free of page {p}");
+            *rc -= 1;
+            if *rc == 0 {
+                if let Some(key) = self.published[p as usize].take() {
+                    self.index.remove(&key);
+                }
+                self.free.push(p);
+            }
+        }
+        seq.blocks.clear();
+        seq.len = 0;
+        seq.shared_blocks = 0;
+    }
+
+    /// Share a whole sequence (refcount++ on every page) — the multi-turn
+    /// fork. The child treats every block as borrowed; appends into a
+    /// shared partial tail go through [`PagePool::cow_tail`] first.
+    pub fn fork_seq(&mut self, seq: &SeqKv) -> SeqKv {
+        for &p in &seq.blocks {
+            self.retain(p);
+        }
+        SeqKv {
+            blocks: seq.blocks.clone(),
+            len: seq.len,
+            shared_blocks: seq.blocks.len(),
+        }
+    }
+
+    /// Copy-on-write for appends: if the tail block is partial and shared
+    /// (or published), copy it into a fresh exclusive page and swap it
+    /// into the table. Returns whether a copy happened.
+    pub fn cow_tail(&mut self, seq: &mut SeqKv) -> Result<bool, PoolExhausted> {
+        if seq.len % self.cfg.block_size == 0 {
+            return Ok(false); // appends start a fresh page
+        }
+        let b = seq.blocks.len() - 1;
+        let old = seq.blocks[b];
+        if self.refcount[old as usize] == 1 && self.published[old as usize].is_none() {
+            return Ok(false); // already exclusive
+        }
+        let new = self.alloc().ok_or(PoolExhausted)?;
+        let elems = self.cfg.page_elems();
+        let (src, dst) = (old as usize * elems, new as usize * elems);
+        self.f16_mut().copy_within(src..src + elems, dst);
+        self.release(old);
+        seq.blocks[b] = new;
+        if seq.shared_blocks > b {
+            seq.shared_blocks = b;
+        }
+        Ok(true)
+    }
+
+    /// Quantize one token's K and V rows to f16 **in place** (so the
+    /// caller's attention consumes exactly the cached bits) and, when
+    /// `store` is set, write the bit patterns into the page holding
+    /// `pos`. `store` is false for shared-prefix rows: the page already
+    /// holds these exact bits (ULP contract + verified token prefix).
+    pub fn write_row(
+        &mut self,
+        seq: &SeqKv,
+        layer: usize,
+        pos: usize,
+        krow: &mut [f32],
+        vrow: &mut [f32],
+        store: bool,
+    ) {
+        let d = self.cfg.d_model;
+        debug_assert_eq!(krow.len(), d);
+        debug_assert_eq!(vrow.len(), d);
+        let page = seq.blocks[pos / self.cfg.block_size];
+        debug_assert!(
+            !store || self.published[page as usize].is_none(),
+            "write into a published (immutable) page"
+        );
+        let slot = pos % self.cfg.block_size;
+        for (kv, row) in [krow, vrow].into_iter().enumerate() {
+            let base = self.plane_base(page, layer, kv) + slot * d;
+            let dst = &mut self.f16_mut()[base..base + d];
+            for (x, h) in row.iter_mut().zip(dst) {
+                let bits = f32_to_f16(*x);
+                *x = f16_to_f32(bits);
+                if store {
+                    *h = bits;
+                }
+            }
+        }
+    }
+
+    /// Widen the first `upto` cached tokens of (sequence, layer) into
+    /// full-width [upto, d] K and V row blocks — one dispatched
+    /// `widen_f16_lanes` call per (page, plane), i.e. gathered
+    /// block-by-block through the SIMD lanes.
+    pub fn gather(
+        &self,
+        seq: &SeqKv,
+        layer: usize,
+        upto: usize,
+        dst_k: &mut [f32],
+        dst_v: &mut [f32],
+    ) {
+        let d = self.cfg.d_model;
+        let bs = self.cfg.block_size;
+        assert!(upto <= seq.blocks.len() * bs, "gather past the block table");
+        assert!(dst_k.len() >= upto * d && dst_v.len() >= upto * d);
+        let kt = simd::kernels();
+        let f16 = self.f16();
+        let mut pos = 0usize;
+        for &page in &seq.blocks {
+            if pos >= upto {
+                break;
+            }
+            let ntok = bs.min(upto - pos);
+            let kb = self.plane_base(page, layer, 0);
+            let vb = self.plane_base(page, layer, 1);
+            (kt.widen_f16_lanes)(&f16[kb..kb + ntok * d], &mut dst_k[pos * d..(pos + ntok) * d]);
+            (kt.widen_f16_lanes)(&f16[vb..vb + ntok * d], &mut dst_v[pos * d..(pos + ntok) * d]);
+            pos += ntok;
+        }
+    }
+}
+
+/// Pool + session counters in one copyable snapshot (what the worker
+/// pushes into `Metrics` after each prefill/decode chunk).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct KvStatsSnapshot {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub pages_resident: u64,
+    pub pages_total: u64,
+    pub sessions: u64,
+}
+
+impl KvStatsSnapshot {
+    /// Share of full-block prefills served from the sharing index.
+    pub fn hit_rate(&self) -> f64 {
+        if self.hits + self.misses == 0 {
+            0.0
+        } else {
+            self.hits as f64 / (self.hits + self.misses) as f64
+        }
+    }
+}
+
+struct Session {
+    seq: SeqKv,
+    /// logits row of the last cached token — predicts the next token, so
+    /// each decode scores its token against these before stepping
+    last_logits: Vec<f32>,
+    last_used: u64,
+}
+
+/// The session table a worker serves decode traffic from: sequences
+/// keyed by session id, the page pool behind them, and LRU-by-session
+/// eviction under memory pressure.
+///
+/// NLL protocol: `prefill_batch` of a p-token prompt scores its p − 1
+/// internal targets and parks the last logits row; each decoded token is
+/// first scored against the parked row, then cached by a
+/// `Transformer::decode_step_with`. Accumulated token-at-a-time (one
+/// f64 add per token, left to right), the prefill + decode total is
+/// **bit-identical** to a cache-writing prefill of the full window.
+pub struct KvState {
+    pool: PagePool,
+    sessions: HashMap<u64, Session>,
+    clock: u64,
+    evictions: u64,
+    seq_len: usize,
+}
+
+impl KvState {
+    pub fn new(cfg: KvCacheConfig, seq_len: usize) -> KvState {
+        KvState {
+            pool: PagePool::new(cfg),
+            sessions: HashMap::new(),
+            clock: 0,
+            evictions: 0,
+            seq_len,
+        }
+    }
+
+    /// Pool sized for a model: `n_pages` pages of [`DEFAULT_BLOCK_SIZE`]
+    /// tokens each.
+    pub fn for_model(cfg: &ModelConfig, n_pages: usize) -> KvState {
+        KvState::new(
+            KvCacheConfig::for_model(cfg, n_pages, DEFAULT_BLOCK_SIZE),
+            cfg.seq_len,
+        )
+    }
+
+    pub fn pool(&self) -> &PagePool {
+        &self.pool
+    }
+
+    pub fn sessions_len(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn has_session(&self, id: u64) -> bool {
+        self.sessions.contains_key(&id)
+    }
+
+    /// Cached token count of a live session.
+    pub fn session_len(&self, id: u64) -> Option<usize> {
+        self.sessions.get(&id).map(|s| s.seq.len())
+    }
+
+    /// Close a session and release its pages. Returns whether it existed.
+    pub fn end_session(&mut self, id: u64) -> bool {
+        match self.sessions.remove(&id) {
+            Some(mut s) => {
+                self.pool.free_seq(&mut s.seq);
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn stats(&self) -> KvStatsSnapshot {
+        KvStatsSnapshot {
+            hits: self.pool.hits,
+            misses: self.pool.misses,
+            evictions: self.evictions,
+            pages_resident: self.pool.pages_in_use() as u64,
+            pages_total: self.pool.pages_total() as u64,
+            sessions: self.sessions.len() as u64,
+        }
+    }
+
+    /// Evict the least-recently-used session (sessions mid-batch are
+    /// temporarily out of the table and therefore safe). Returns false
+    /// when nothing is left to evict.
+    fn evict_lru(&mut self) -> bool {
+        let victim = self
+            .sessions
+            .iter()
+            .min_by_key(|(_, s)| s.last_used)
+            .map(|(&id, _)| id);
+        match victim {
+            Some(id) => {
+                let mut s = self.sessions.remove(&id).unwrap();
+                self.pool.free_seq(&mut s.seq);
+                self.evictions += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn alloc_evicting(&mut self) -> Option<u32> {
+        loop {
+            if let Some(p) = self.pool.alloc() {
+                return Some(p);
+            }
+            if !self.evict_lru() {
+                return None;
+            }
+        }
+    }
+
+    /// Build a block table for a prompt: leading full blocks that hit the
+    /// sharing index are borrowed, the rest allocated (evicting LRU
+    /// sessions under pressure). Returns the table plus the publishes to
+    /// perform once the pages are written.
+    #[allow(clippy::type_complexity)]
+    fn acquire_blocks(
+        &mut self,
+        tokens: &[u32],
+    ) -> Result<(SeqKv, Vec<(usize, u64, Vec<u32>)>), String> {
+        let bs = self.pool.cfg.block_size;
+        let n_blocks = tokens.len().div_ceil(bs);
+        let n_full = tokens.len() / bs;
+        let mut seq = SeqKv::default();
+        let mut pubs = Vec::new();
+        let mut key = KEY_SEED;
+        let mut sharing = true;
+        for b in 0..n_blocks {
+            if b < n_full {
+                let btoks = &tokens[b * bs..(b + 1) * bs];
+                key = chain_key(key, btoks);
+                if sharing {
+                    if let Some(p) = self.pool.lookup_shared(key, btoks) {
+                        seq.blocks.push(p);
+                        seq.shared_blocks += 1;
+                        continue;
+                    }
+                    sharing = false;
+                }
+                self.pool.note_miss();
+                pubs.push((b, key, btoks.to_vec()));
+            }
+            match self.alloc_evicting() {
+                Some(p) => seq.blocks.push(p),
+                None => {
+                    self.pool.free_seq(&mut seq);
+                    return Err(format!(
+                        "kv page pool exhausted ({} pages)",
+                        self.pool.pages_total()
+                    ));
+                }
+            }
+        }
+        Ok((seq, pubs))
+    }
+
+    /// Extend a sequence's block table to hold `n_new` more tokens
+    /// (COW-ing a shared partial tail first); decode steps then never
+    /// allocate. On failure the session is left exactly as it was.
+    fn reserve(&mut self, seq: &mut SeqKv, n_new: usize) -> Result<(), PoolExhausted> {
+        loop {
+            match self.pool.cow_tail(seq) {
+                Ok(_) => break,
+                Err(PoolExhausted) => {
+                    if !self.evict_lru() {
+                        return Err(PoolExhausted);
+                    }
+                }
+            }
+        }
+        let need = (seq.len + n_new).div_ceil(self.pool.cfg.block_size);
+        let before = seq.blocks.len();
+        while seq.blocks.len() < need {
+            match self.alloc_evicting() {
+                Some(p) => seq.blocks.push(p),
+                None => {
+                    while seq.blocks.len() > before {
+                        let p = seq.blocks.pop().unwrap();
+                        self.pool.release(p);
+                    }
+                    return Err(PoolExhausted);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Open (or re-open) sessions: cache each prompt's K/V and score its
+    /// p − 1 internal targets. One `Result` per request — a pool-full or
+    /// bad-window failure never poisons the rest of the batch.
+    pub fn prefill_batch<P: QkvProjector>(
+        &mut self,
+        model: &Transformer,
+        proj: &P,
+        reqs: &[(u64, Vec<u32>)],
+    ) -> Vec<Result<(f64, usize), String>> {
+        self.clock += 1;
+        let clock = self.clock;
+        let mut out: Vec<Result<(f64, usize), String>> =
+            reqs.iter().map(|_| Err(String::new())).collect();
+        let mut acquired: Vec<(usize, SeqKv, Vec<(usize, u64, Vec<u32>)>)> = Vec::new();
+        for (i, (id, tokens)) in reqs.iter().enumerate() {
+            if tokens.is_empty() || tokens.len() > self.seq_len {
+                out[i] = Err(format!(
+                    "prefill window must be 1..={} tokens, got {}",
+                    self.seq_len,
+                    tokens.len()
+                ));
+                continue;
+            }
+            if let Some(&tok) = tokens.iter().find(|&&t| t as usize >= model.cfg.vocab) {
+                out[i] = Err(format!("token {tok} out of vocab range"));
+                continue;
+            }
+            // a re-prefill replaces the session (conversation reset);
+            // within one batch the last request for an id wins
+            if let Some(mut old) = self.sessions.remove(id) {
+                self.pool.free_seq(&mut old.seq);
+            }
+            if let Some(prev) = acquired.iter().position(|(j, _, _)| reqs[*j].0 == *id) {
+                let (j, mut seq, _) = acquired.remove(prev);
+                self.pool.free_seq(&mut seq);
+                out[j] = Err(format!("session {id} re-prefilled later in the same batch"));
+            }
+            match self.acquire_blocks(tokens) {
+                Ok((seq, pubs)) => acquired.push((i, seq, pubs)),
+                Err(e) => out[i] = Err(e),
+            }
+        }
+        if acquired.is_empty() {
+            return out;
+        }
+        let windows: Vec<&[u32]> = acquired.iter().map(|&(i, _, _)| reqs[i].1.as_slice()).collect();
+        let logits = {
+            let mut seq_refs: Vec<&mut SeqKv> = acquired.iter_mut().map(|(_, s, _)| s).collect();
+            model.prefill_batch_with(&windows, proj, &mut self.pool, &mut seq_refs)
+        };
+        for ((i, mut seq, pubs), lg) in acquired.into_iter().zip(logits) {
+            let (id, tokens) = &reqs[i];
+            let p = tokens.len();
+            seq.len = p;
+            let mut nll = 0.0f64;
+            for r in 0..p - 1 {
+                nll += crate::eval::perplexity::row_nll(lg.row(r), tokens[r + 1] as usize);
+            }
+            // the pages are written now — publish the owned full blocks
+            for (b, key, btoks) in pubs {
+                self.pool.publish(seq.blocks[b], key, &btoks);
+            }
+            let last_logits = lg.row(p - 1).to_vec();
+            self.sessions.insert(
+                *id,
+                Session {
+                    seq,
+                    last_logits,
+                    last_used: clock,
+                },
+            );
+            out[i] = Ok((nll, p - 1));
+        }
+        out
+    }
+
+    /// Append tokens to live sessions: each token is scored against the
+    /// session's parked logits, then cached by one O(t) decode step.
+    /// Requests for unknown/evicted sessions (the eviction error arm),
+    /// over-length appends, or an exhausted pool fail **individually**.
+    pub fn decode<P: QkvProjector>(
+        &mut self,
+        model: &Transformer,
+        proj: &P,
+        reqs: &[(u64, Vec<u32>)],
+    ) -> Vec<Result<(f64, usize), String>> {
+        self.clock += 1;
+        let clock = self.clock;
+        let mut out: Vec<Result<(f64, usize), String>> =
+            reqs.iter().map(|_| Err(String::new())).collect();
+        // take live sessions out of the table (also protects them from
+        // the LRU eviction that reserve() may trigger)
+        let mut live: Vec<(usize, u64, Session, f64)> = Vec::new();
+        for (i, (id, tokens)) in reqs.iter().enumerate() {
+            let Some(sess) = self.sessions.remove(id) else {
+                out[i] = Err(format!("unknown, evicted, or duplicate session {id}"));
+                continue;
+            };
+            let verdict = if tokens.is_empty() {
+                Some("empty decode request".to_string())
+            } else if sess.seq.len() + tokens.len() > self.seq_len {
+                Some(format!(
+                    "decode past seq_len {} ({} cached + {} new)",
+                    self.seq_len,
+                    sess.seq.len(),
+                    tokens.len()
+                ))
+            } else {
+                tokens
+                    .iter()
+                    .find(|&&t| t as usize >= model.cfg.vocab)
+                    .map(|tok| format!("token {tok} out of vocab range"))
+            };
+            match verdict {
+                Some(e) => {
+                    out[i] = Err(e);
+                    self.sessions.insert(*id, sess);
+                }
+                None => live.push((i, *id, sess, 0.0)),
+            }
+        }
+        // pre-reserve pages so the step loop never allocates
+        let mut reserved = Vec::with_capacity(live.len());
+        for (i, id, mut sess, nll) in live {
+            match self.reserve(&mut sess.seq, reqs[i].1.len()) {
+                Ok(()) => reserved.push((i, id, sess, nll)),
+                Err(PoolExhausted) => {
+                    out[i] = Err(format!(
+                        "kv page pool exhausted ({} pages)",
+                        self.pool.pages_total()
+                    ));
+                    self.sessions.insert(id, sess);
+                }
+            }
+        }
+        let mut live = reserved;
+        let max_steps = live.iter().map(|&(i, ..)| reqs[i].1.len()).max().unwrap_or(0);
+        for s in 0..max_steps {
+            let mut step_tokens = Vec::new();
+            let mut active: Vec<usize> = Vec::new();
+            for (li, (i, _, sess, nll)) in live.iter_mut().enumerate() {
+                let toks = &reqs[*i].1;
+                if s < toks.len() {
+                    // parked logits predict this token; score before stepping
+                    *nll += crate::eval::perplexity::row_nll(&sess.last_logits, toks[s] as usize);
+                    step_tokens.push(toks[s]);
+                    active.push(li);
+                }
+            }
+            let logits = {
+                let mut refs: Vec<&mut SeqKv> = live
+                    .iter_mut()
+                    .enumerate()
+                    .filter(|(li, _)| active.contains(li))
+                    .map(|(_, (_, _, sess, _))| &mut sess.seq)
+                    .collect();
+                model.decode_step_with(&step_tokens, proj, &mut self.pool, &mut refs)
+            };
+            for (r, &li) in active.iter().enumerate() {
+                live[li].2.last_logits.copy_from_slice(logits.row(r));
+            }
+        }
+        for (i, id, mut sess, nll) in live {
+            sess.last_used = clock;
+            let ntok = reqs[i].1.len();
+            self.sessions.insert(id, sess);
+            out[i] = Ok((nll, ntok));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::transformer::DenseProjector;
+    use crate::util::proptest::check;
+
+    fn tiny_kv_cfg(n_pages: usize, bs: usize) -> KvCacheConfig {
+        KvCacheConfig {
+            block_size: bs,
+            n_pages,
+            n_layers: 2,
+            d_model: 8,
+        }
+    }
+
+    fn tiny_model_cfg() -> ModelConfig {
+        ModelConfig {
+            vocab: 64,
+            d_model: 32,
+            n_heads: 4,
+            n_layers: 2,
+            d_ff: 64,
+            seq_len: 48,
+        }
+    }
+
+    /// Allocator round-trip property: any interleaving of alloc / free /
+    /// retain+release / fork / COW keeps the occupancy invariant
+    /// `in_use + free == total`, never double-frees (release panics are
+    /// the detector), and a full teardown returns every page.
+    #[test]
+    fn page_pool_alloc_free_refcount_cow_round_trip() {
+        check(24, |rng| {
+            let bs = 1 + rng.below(4);
+            let n_pages = 4 + rng.below(24);
+            let mut pool = PagePool::new(tiny_kv_cfg(n_pages, bs));
+            let mut seqs: Vec<SeqKv> = Vec::new();
+            for _ in 0..60 {
+                match rng.below(5) {
+                    // grow a sequence by one block (alloc)
+                    0 => {
+                        if let Some(p) = pool.alloc() {
+                            let mut s = SeqKv::default();
+                            s.blocks.push(p);
+                            s.len = 1 + rng.below(bs); // partial tail
+                            seqs.push(s);
+                        }
+                    }
+                    // free a whole sequence
+                    1 => {
+                        if !seqs.is_empty() {
+                            let mut s = seqs.swap_remove(rng.below(seqs.len()));
+                            pool.free_seq(&mut s);
+                        }
+                    }
+                    // fork (refcount++ on every page)
+                    2 => {
+                        if !seqs.is_empty() {
+                            let f = pool.fork_seq(&seqs[rng.below(seqs.len())]);
+                            seqs.push(f);
+                        }
+                    }
+                    // COW a shared partial tail
+                    3 => {
+                        if !seqs.is_empty() {
+                            let i = rng.below(seqs.len());
+                            let _ = pool.cow_tail(&mut seqs[i]);
+                        }
+                    }
+                    // publish + shared lookup round-trip
+                    _ => {
+                        if !seqs.is_empty() {
+                            let i = rng.below(seqs.len());
+                            if seqs[i].len == bs {
+                                let toks: Vec<u32> = (0..bs as u32).collect();
+                                let key = chain_key(KEY_SEED, &toks);
+                                pool.publish(seqs[i].blocks[0], key, &toks);
+                                if let Some(p) = pool.lookup_shared(key, &toks) {
+                                    let mut s = SeqKv::default();
+                                    s.blocks.push(p);
+                                    s.len = bs;
+                                    s.shared_blocks = 1;
+                                    seqs.push(s);
+                                }
+                            }
+                        }
+                    }
+                }
+                if pool.pages_in_use() + pool.pages_free() != pool.pages_total() {
+                    return Err(format!(
+                        "occupancy broken: {} in use + {} free != {}",
+                        pool.pages_in_use(),
+                        pool.pages_free(),
+                        pool.pages_total()
+                    ));
+                }
+            }
+            for s in &mut seqs {
+                pool.free_seq(s);
+            }
+            if pool.pages_free() != pool.pages_total() {
+                return Err(format!(
+                    "leak: {} of {} pages free after full teardown",
+                    pool.pages_free(),
+                    pool.pages_total()
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cow_preserves_bits_and_isolates_writers() {
+        let cfg = tiny_kv_cfg(4, 2);
+        let d = cfg.d_model;
+        let mut pool = PagePool::new(cfg);
+        let mut a = SeqKv::default();
+        a.blocks.push(pool.alloc().unwrap());
+        let mut krow: Vec<f32> = (0..d).map(|j| j as f32 * 0.25).collect();
+        let mut vrow = krow.clone();
+        pool.write_row(&a, 0, 0, &mut krow, &mut vrow, true);
+        a.len = 1;
+        let mut b = pool.fork_seq(&a);
+        assert_eq!(pool.refcount(a.blocks[0]), 2);
+        assert!(pool.cow_tail(&mut b).unwrap(), "shared partial tail must copy");
+        assert_ne!(a.blocks[0], b.blocks[0]);
+        assert_eq!(pool.refcount(a.blocks[0]), 1);
+        // the copy carried the bits
+        let (mut ka, mut va) = (vec![0.0f32; d], vec![0.0f32; d]);
+        let (mut kb, mut vb) = (vec![0.0f32; d], vec![0.0f32; d]);
+        pool.gather(&a, 0, 1, &mut ka, &mut va);
+        pool.gather(&b, 0, 1, &mut kb, &mut vb);
+        assert_eq!(ka, kb);
+        // writing b's copy no longer affects a
+        let mut k2: Vec<f32> = vec![9.0; d];
+        let mut v2 = k2.clone();
+        pool.write_row(&b, 0, 0, &mut k2, &mut v2, true);
+        let (mut ka2, mut va2) = (vec![0.0f32; d], vec![0.0f32; d]);
+        pool.gather(&a, 0, 1, &mut ka2, &mut va2);
+        assert_eq!(ka, ka2, "COW writer leaked into the parent");
+        pool.free_seq(&mut a);
+        pool.free_seq(&mut b);
+        assert_eq!(pool.pages_free(), pool.pages_total());
+    }
+
+    #[test]
+    fn gather_round_trips_quantized_rows_across_block_boundaries() {
+        let cfg = tiny_kv_cfg(8, 4);
+        let d = cfg.d_model;
+        let bs = cfg.block_size;
+        let mut pool = PagePool::new(cfg);
+        let mut seq = SeqKv::default();
+        for _ in 0..2 {
+            seq.blocks.push(pool.alloc().unwrap());
+        }
+        let t = bs + 2; // crosses a block boundary
+        let mut expect_k = Vec::new();
+        let mut expect_v = Vec::new();
+        for pos in 0..t {
+            let mut k: Vec<f32> = (0..d).map(|j| (pos * d + j) as f32 * 0.1).collect();
+            let mut v: Vec<f32> = (0..d).map(|j| (pos * d + j) as f32 * -0.2).collect();
+            for layer in 0..2 {
+                pool.write_row(&seq, layer, pos, &mut k, &mut v, true);
+            }
+            expect_k.extend_from_slice(&k); // post-quantization values
+            expect_v.extend_from_slice(&v);
+        }
+        seq.len = t;
+        let mut gk = vec![0.0f32; t * d];
+        let mut gv = vec![0.0f32; t * d];
+        pool.gather(&seq, 1, t, &mut gk, &mut gv);
+        assert_eq!(gk, expect_k, "gathered K != quantized-in-place K");
+        assert_eq!(gv, expect_v, "gathered V != quantized-in-place V");
+    }
+
+    /// End-to-end decode bit-identity: decoding token by token over
+    /// cached pages reproduces — **bitwise** — both the logits and the
+    /// NLL total of a cache-writing prefill of the full window, across
+    /// ragged lengths, block-boundary token counts, t = 1 prompts, and
+    /// page-shared prefixes. (CI runs the whole suite under
+    /// `HISOLO_SIMD=off|auto`; the dispatch-level variant of this
+    /// property lives in the decode bench's `decode_check`.)
+    #[test]
+    fn decode_bit_identical_to_full_window_prefill() {
+        let mcfg = tiny_model_cfg();
+        let model = Transformer::random(mcfg, 77);
+        let proj = DenseProjector { layers: &model.layers };
+        check(6, |rng| {
+            let n_seqs = 1 + rng.below(3);
+            let bs = DEFAULT_BLOCK_SIZE;
+            let mut kv = KvState::new(
+                KvCacheConfig::for_model(&model.cfg, 256, bs),
+                model.cfg.seq_len,
+            );
+            // a shared prefix exercises page sharing on later sessions
+            let prefix: Vec<u32> = (0..bs as u32).map(|i| (i * 7 + 3) % 64).collect();
+            let mut full_prompts = 0usize;
+            for s in 0..n_seqs {
+                let id = s as u64;
+                // ragged: t = 1, exact block multiples, and arbitrary
+                let n = match rng.below(4) {
+                    0 => 1,
+                    1 => bs,
+                    2 => 2 * bs,
+                    _ => 2 + rng.below(model.cfg.seq_len - 2),
+                };
+                let mut window: Vec<u32> = prefix.clone();
+                window.extend((0..n as u32).map(|_| rng.below(64) as u32));
+                window.truncate(model.cfg.seq_len);
+                // split into prompt + decoded tail (prompt ≥ 1 token)
+                let p = 1 + rng.below(window.len());
+                if p >= bs {
+                    full_prompts += 1;
+                }
+                let pre = kv.prefill_batch(&model, &proj, &[(id, window[..p].to_vec())]);
+                let (mut nll, mut toks) = pre[0].clone()?;
+                for &tau in &window[p..] {
+                    let r = kv.decode(&model, &proj, &[(id, vec![tau])]);
+                    let (dn, dt) = r[0].clone()?;
+                    nll += dn;
+                    toks += dt;
+                }
+                // reference: cache-writing prefill of the full window in
+                // a fresh session (fresh KvState so no sharing shortcuts)
+                let mut kv2 = KvState::new(
+                    KvCacheConfig::for_model(&model.cfg, 64, bs),
+                    model.cfg.seq_len,
+                );
+                let full = kv2.prefill_batch(&model, &proj, &[(99, window.clone())]);
+                let (fnll, ftoks) = full[0].clone()?;
+                if toks != ftoks {
+                    return Err(format!("token counts differ: {toks} vs {ftoks}"));
+                }
+                if nll.to_bits() != fnll.to_bits() {
+                    return Err(format!(
+                        "decode NLL not bit-identical to full prefill: {nll:?} vs {fnll:?} \
+                         (window {}, prompt {p})",
+                        window.len()
+                    ));
+                }
+            }
+            // later sessions shared the prefix block whenever at least two
+            // prompts covered it (partial blocks are never published)
+            if full_prompts > 1 && kv.pool().hits() == 0 {
+                return Err("no page sharing across sessions with a common prefix".into());
+            }
+            Ok(())
+        });
+    }
+
+    /// Batched decode (several sessions stepping together) is bit-identical
+    /// to decoding each session alone — the decode twin of the
+    /// batch-invariance guarantee `attention_batch` pins for prefill.
+    #[test]
+    fn batched_decode_matches_solo_decode_bitwise() {
+        let mcfg = tiny_model_cfg();
+        let model = Transformer::random(mcfg, 31);
+        let proj = DenseProjector { layers: &model.layers };
+        let windows: Vec<Vec<u32>> = (0..3)
+            .map(|s| (0..20u32).map(|i| (i * 5 + s) % 64).collect())
+            .collect();
+        let run = |batched: bool| -> Vec<f64> {
+            let mut kv = KvState::for_model(&model.cfg, 128);
+            let reqs: Vec<(u64, Vec<u32>)> = windows
+                .iter()
+                .enumerate()
+                .map(|(s, w)| (s as u64, w[..8].to_vec()))
+                .collect();
+            let mut nll: Vec<f64> = kv
+                .prefill_batch(&model, &proj, &reqs)
+                .into_iter()
+                .map(|r| r.unwrap().0)
+                .collect();
+            for step in 8..20 {
+                if batched {
+                    let dreqs: Vec<(u64, Vec<u32>)> = windows
+                        .iter()
+                        .enumerate()
+                        .map(|(s, w)| (s as u64, vec![w[step]]))
+                        .collect();
+                    for (s, r) in kv.decode(&model, &proj, &dreqs).into_iter().enumerate() {
+                        nll[s] += r.unwrap().0;
+                    }
+                } else {
+                    for (s, w) in windows.iter().enumerate() {
+                        let r = kv.decode(&model, &proj, &[(s as u64, vec![w[step]])]);
+                        nll[s] += r.into_iter().next().unwrap().unwrap().0;
+                    }
+                }
+            }
+            nll
+        };
+        let a = run(true);
+        let b = run(false);
+        for (s, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "session {s}: batched != solo decode");
+        }
+    }
+
+    #[test]
+    fn lru_eviction_under_pressure_and_evicted_session_errors() {
+        let mcfg = tiny_model_cfg();
+        let model = Transformer::random(mcfg, 13);
+        let proj = DenseProjector { layers: &model.layers };
+        // room for ~2 sessions of 2 blocks each
+        let mut kv = KvState::new(KvCacheConfig::for_model(&model.cfg, 4, 16), model.cfg.seq_len);
+        let window = |seed: u32| -> Vec<u32> { (0..32u32).map(|i| (i * 3 + seed) % 64).collect() };
+        assert!(kv.prefill_batch(&model, &proj, &[(1, window(1))])[0].is_ok());
+        assert!(kv.prefill_batch(&model, &proj, &[(2, window(2))])[0].is_ok());
+        // session 1 is LRU — the third prefill evicts it
+        assert!(kv.prefill_batch(&model, &proj, &[(3, window(3))])[0].is_ok());
+        assert_eq!(kv.stats().evictions, 1);
+        assert!(!kv.has_session(1));
+        let r = kv.decode(&model, &proj, &[(1, vec![5])]);
+        let e = r[0].as_ref().unwrap_err();
+        assert!(e.contains("session 1"), "unexpected error: {e}");
+        // live sessions still decode
+        assert!(kv.decode(&model, &proj, &[(3, vec![5])])[0].is_ok());
+        // occupancy stays consistent
+        let st = kv.stats();
+        assert_eq!(
+            st.pages_resident + kv.pool().pages_free() as u64,
+            st.pages_total
+        );
+    }
+
+    #[test]
+    fn prefix_sharing_hits_and_hit_rate() {
+        let mcfg = tiny_model_cfg();
+        let model = Transformer::random(mcfg, 5);
+        let proj = DenseProjector { layers: &model.layers };
+        let mut kv = KvState::for_model(&model.cfg, 64);
+        let shared: Vec<u32> = (0..32u32).map(|i| (i * 11) % 64).collect();
+        assert!(kv.prefill_batch(&model, &proj, &[(1, shared.clone())])[0].is_ok());
+        let before = kv.stats();
+        assert_eq!(before.hits, 0);
+        // same prefix, different tail → both full prefix blocks hit
+        let mut w2 = shared.clone();
+        w2.extend([9u32, 7, 5]);
+        assert!(kv.prefill_batch(&model, &proj, &[(2, w2)])[0].is_ok());
+        let after = kv.stats();
+        assert_eq!(after.hits, 2, "both shared full blocks should hit");
+        assert!(after.hit_rate() > 0.0);
+        // shared pages are refcounted, not duplicated
+        assert!(after.pages_resident < 2 * before.pages_resident + 1);
+    }
+}

@@ -6,11 +6,13 @@
 pub mod attention;
 pub mod compressed_model;
 pub mod config;
+pub mod kvcache;
 pub mod tokenizer;
 pub mod transformer;
 pub mod weights;
 
-pub use attention::{attention_batch, causal_mha, AttnWorkspace};
+pub use attention::{attention_batch, causal_mha, decode_batch, AttnWorkspace};
+pub use kvcache::{KvCacheConfig, KvState, KvStatsSnapshot, PagePool, SeqKv};
 
 pub use compressed_model::CompressedModel;
 pub use config::ModelConfig;

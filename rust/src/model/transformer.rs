@@ -35,7 +35,8 @@ use crate::model::weights::WeightFile;
 use crate::model::ModelConfig;
 use anyhow::Result;
 
-use crate::model::attention::{attention_batch, AttnWorkspace};
+use crate::model::attention::{attention_batch, decode_batch, AttnWorkspace};
+use crate::model::kvcache::{PagePool, SeqKv};
 
 thread_local! {
     /// Per-thread attention scratch for the serving forward pass: sized to
@@ -197,7 +198,33 @@ impl Transformer {
     /// [`attention_batch`] call per layer, driven by the windows' offset
     /// table — there is no per-window loop left in the pass.
     pub fn forward_batch_with<P: QkvProjector>(&self, windows: &[&[u32]], proj: &P) -> Vec<Matrix> {
-        self.forward_batch_inner(windows, proj, None)
+        self.forward_batch_inner(windows, proj, None, None)
+    }
+
+    /// Cache-writing prefill: `forward_batch_with` that additionally
+    /// quantizes every layer's K/V rows to f16 **in place** (attention
+    /// consumes the round-tripped values — exactly the bits the pages
+    /// hold) and stores them into each window's paged cache. `seqs[w]`
+    /// must have a block table covering `windows[w].len()` tokens
+    /// (`KvState` acquires it, reusing prefix-shared pages, whose writes
+    /// are skipped). Because decode steps read those same pages, a
+    /// decode continuation is bit-identical to re-prefilling the grown
+    /// window — the rescore reference for every `decode_check`.
+    pub fn prefill_batch_with<P: QkvProjector>(
+        &self,
+        windows: &[&[u32]],
+        proj: &P,
+        pool: &mut PagePool,
+        seqs: &mut [&mut SeqKv],
+    ) -> Vec<Matrix> {
+        assert_eq!(windows.len(), seqs.len(), "one sequence per window");
+        for (w, seq) in windows.iter().zip(seqs.iter()) {
+            assert!(
+                seq.n_blocks() * pool.config().block_size >= w.len(),
+                "block table does not cover the window"
+            );
+        }
+        self.forward_batch_inner(windows, proj, None, Some((pool, seqs)))
     }
 
     /// Calibration inputs for the q/k/v projections: the post-ln1
@@ -220,6 +247,7 @@ impl Transformer {
                 layers: &self.layers,
             },
             Some(&mut cap),
+            None,
         );
         cap
     }
@@ -229,7 +257,12 @@ impl Transformer {
         windows: &[&[u32]],
         proj: &P,
         mut capture: Option<&mut Vec<Matrix>>,
+        mut kv: Option<(&mut PagePool, &mut [&mut SeqKv])>,
     ) -> Vec<Matrix> {
+        assert!(
+            capture.is_none() || kv.is_none(),
+            "capture and cache-writing prefill are exclusive modes"
+        );
         let d = self.cfg.d_model;
         let ts: Vec<usize> = windows.iter().map(|w| w.len()).collect();
         for &t in &ts {
@@ -279,8 +312,26 @@ impl Transformer {
             }
             // one batched projection per q/k/v across every window
             let q = proj.project(li, Proj::Q, &a);
-            let k = proj.project(li, Proj::K, &a);
-            let v = proj.project(li, Proj::V, &a);
+            let mut k = proj.project(li, Proj::K, &a);
+            let mut v = proj.project(li, Proj::V, &a);
+            // cache-writing prefill: quantize K/V through f16 in place
+            // (attention below consumes the round-tripped bits — the same
+            // bits a later decode step gathers back out of the pages) and
+            // store the patterns into each window's pages; blocks
+            // borrowed from the sharing index already hold these exact
+            // bits and are skipped
+            if let Some((pool, seqs)) = kv.as_mut() {
+                let _span = crate::obs::Span::enter(crate::obs::Stage::KvPrefill);
+                let bs = pool.config().block_size;
+                let mut off = 0;
+                for (seq, &t) in seqs.iter_mut().zip(&ts) {
+                    for i in 0..t {
+                        let store = !seq.block_is_shared(i / bs);
+                        pool.write_row(seq, li, i, k.row_mut(off + i), v.row_mut(off + i), store);
+                    }
+                    off += t;
+                }
+            }
             // one batched masked attention over the whole stack; the
             // offset table keeps causal attention inside window boundaries
             // (the span covers the attention_batch call only — per-row
@@ -363,6 +414,116 @@ impl Transformer {
                 layers: &self.layers,
             },
         )
+    }
+
+    /// One incremental decode step: append `tokens[s]` to sequence
+    /// `seqs[s]` and return the [k, vocab] next-token logits — O(t) per
+    /// sequence where rescoring the window is O(t²).
+    ///
+    /// Every layer projects only the k new rows, appends their quantized
+    /// K/V to the tail pages, and runs [`decode_batch`] against the
+    /// gathered cache; the MLP/residual/layernorm epilogues are the
+    /// `forward_batch` code on k rows. Each sequence's block table must
+    /// already cover `len() + 1` tokens with an exclusively owned tail
+    /// (`KvState::reserve` guarantees both), and `seqs[s].len()` advances
+    /// by one on return.
+    ///
+    /// Bit-identity: the appended rows round-trip through f16 exactly as
+    /// a cache-writing prefill's would, and `decode_batch` replays
+    /// `attention_batch`'s last-row kernel sequence over the gathered
+    /// pages — so row s equals, bit for bit, the last logits row of
+    /// [`Transformer::prefill_batch_with`] over the grown window.
+    pub fn decode_step_with<P: QkvProjector>(
+        &self,
+        tokens: &[u32],
+        proj: &P,
+        pool: &mut PagePool,
+        seqs: &mut [&mut SeqKv],
+    ) -> Matrix {
+        let d = self.cfg.d_model;
+        let kreq = tokens.len();
+        assert_eq!(kreq, seqs.len(), "one token per sequence");
+        for seq in seqs.iter() {
+            assert!(seq.len() < self.cfg.seq_len, "sequence at seq_len capacity");
+        }
+        // the new token's embedding at its sequence position
+        let mut h = Matrix::zeros(kreq, d);
+        for (s, (&tok, seq)) in tokens.iter().zip(seqs.iter()).enumerate() {
+            let te = self.tok_emb.row(tok as usize);
+            let pe = self.pos_emb.row(seq.len());
+            let row = h.row_mut(s);
+            for j in 0..d {
+                row[j] = te[j] + pe[j];
+            }
+        }
+        // keys per sequence after this step's append
+        let lens: Vec<usize> = seqs.iter().map(|s| s.len() + 1).collect();
+        let mut pending: Option<Matrix> = None;
+        for (li, l) in self.layers.iter().enumerate() {
+            let a = match pending.take() {
+                Some(r) => fused_add_layernorm(&mut h, &r, &l.ln1_g, &l.ln1_b),
+                None => layernorm(&h, &l.ln1_g, &l.ln1_b),
+            };
+            let q = proj.project(li, Proj::Q, &a);
+            let mut kp = proj.project(li, Proj::K, &a);
+            let mut vp = proj.project(li, Proj::V, &a);
+            let mut o = Matrix::zeros(kreq, d);
+            {
+                let _span = crate::obs::Span::enter(crate::obs::Stage::KvDecode);
+                // append this step's quantized K/V rows to the tail pages
+                for (s, seq) in seqs.iter_mut().enumerate() {
+                    let pos = seq.len();
+                    pool.write_row(seq, li, pos, kp.row_mut(s), vp.row_mut(s), true);
+                }
+                let seqs_ro: &[&mut SeqKv] = seqs;
+                let pool_ro: &PagePool = pool;
+                let _aspan = crate::obs::Span::enter(crate::obs::Stage::Attention);
+                ATTN_WS.with(|ws| {
+                    let ws = &mut ws.borrow_mut();
+                    decode_batch(
+                        &q,
+                        &lens,
+                        |s, dk, dv| {
+                            let _g = crate::obs::Span::enter(crate::obs::Stage::PageGather);
+                            pool_ro.gather(&*seqs_ro[s], li, lens[s], dk, dv);
+                        },
+                        self.cfg.n_heads,
+                        &mut o,
+                        ws,
+                    )
+                });
+            }
+            let oh = o.matmul(&l.wo);
+            {
+                let _span = crate::obs::Span::enter(crate::obs::Stage::Mlp);
+                let m = fused_add_layernorm(&mut h, &oh, &l.ln2_g, &l.ln2_b);
+                let mut ff = m.matmul(&l.w1);
+                for i in 0..kreq {
+                    let row = ff.row_mut(i);
+                    for (x, b) in row.iter_mut().zip(&l.b1) {
+                        *x = gelu(*x + *b);
+                    }
+                }
+                let mut ff2 = ff.matmul(&l.w2);
+                for i in 0..kreq {
+                    let row = ff2.row_mut(i);
+                    for (x, b) in row.iter_mut().zip(&l.b2) {
+                        *x += *b;
+                    }
+                }
+                pending = Some(ff2);
+            }
+        }
+        let hf = match pending.take() {
+            Some(r) => fused_add_layernorm(&mut h, &r, &self.lnf_g, &self.lnf_b),
+            None => layernorm(&h, &self.lnf_g, &self.lnf_b),
+        };
+        let mut logits = Matrix::zeros(kreq, self.cfg.vocab);
+        hf.matmul_bt_into(&self.tok_emb, &mut logits);
+        for seq in seqs.iter_mut() {
+            seq.advance(1);
+        }
+        logits
     }
 }
 

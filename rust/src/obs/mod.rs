@@ -24,6 +24,9 @@
 //! | `softmax` | output log-softmax + NLL (`window_nll`) |
 //! | `reply_route` | routing one scored response back to its submitter |
 //! | `swap_install` | building + installing a hot-swapped scorer |
+//! | `kv_prefill` | cache-writing K/V quantize+store during a prefill layer |
+//! | `kv_decode` | one decode layer: K/V append + paged attention |
+//! | `page_gather` | widening a sequence's f16 pages into the gather staging |
 //!
 //! Stages are **not disjoint**: `spmm` spans fired inside an HSS traversal
 //! nest within the enclosing `hss_walk` span, so stage totals answer "how
@@ -79,10 +82,16 @@ pub enum Stage {
     Softmax,
     ReplyRoute,
     SwapInstall,
+    /// cache-writing K/V quantize+store during a prefill layer
+    KvPrefill,
+    /// one decode layer: K/V append + paged attention
+    KvDecode,
+    /// widening a sequence's f16 pages into the gather staging
+    PageGather,
 }
 
 impl Stage {
-    pub const COUNT: usize = 10;
+    pub const COUNT: usize = 13;
 
     pub const ALL: [Stage; Stage::COUNT] = [
         Stage::QueueWait,
@@ -95,6 +104,9 @@ impl Stage {
         Stage::Softmax,
         Stage::ReplyRoute,
         Stage::SwapInstall,
+        Stage::KvPrefill,
+        Stage::KvDecode,
+        Stage::PageGather,
     ];
 
     /// Stable snake_case name — the JSON export key and CI grep target.
@@ -110,6 +122,9 @@ impl Stage {
             Stage::Softmax => "softmax",
             Stage::ReplyRoute => "reply_route",
             Stage::SwapInstall => "swap_install",
+            Stage::KvPrefill => "kv_prefill",
+            Stage::KvDecode => "kv_decode",
+            Stage::PageGather => "page_gather",
         }
     }
 

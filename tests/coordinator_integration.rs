@@ -47,6 +47,7 @@ fn coordinator_ppl_matches_direct_eval() {
         NativeDenseScorer {
             model: model.clone(),
             max_batch: 4,
+            kv: None,
         },
     );
 
@@ -88,6 +89,7 @@ fn dense_and_compressed_lanes_agree_at_high_rank() {
         NativeDenseScorer {
             model: model.clone(),
             max_batch: 4,
+            kv: None,
         },
     );
     coord.add_worker(
@@ -95,6 +97,7 @@ fn dense_and_compressed_lanes_agree_at_high_rank() {
         NativeCompressedScorer {
             model: cm,
             max_batch: 4,
+            kv: None,
         },
     );
 
@@ -144,6 +147,7 @@ fn bucketed_serving_matches_unbucketed_and_drops_nothing() {
             NativeDenseScorer {
                 model: model.clone(),
                 max_batch: 8,
+                kv: None,
             },
         );
         coord
@@ -199,6 +203,7 @@ fn backpressure_surfaces_as_errors_not_hangs() {
         NativeDenseScorer {
             model: model.clone(),
             max_batch: 2,
+            kv: None,
         },
     );
     let ws = tiny_windows(&model, 64);

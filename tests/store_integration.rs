@@ -192,6 +192,7 @@ fn coordinator_serves_correctly_across_store_hot_swap() {
         NativeCompressedScorer {
             model: first,
             max_batch: 4,
+            kv: None,
         },
     );
 
@@ -221,6 +222,7 @@ fn coordinator_serves_correctly_across_store_hot_swap() {
             Ok(NativeCompressedScorer {
                 model,
                 max_batch: 4,
+                kv: None,
             })
         })
         .unwrap();
@@ -286,6 +288,7 @@ fn f16_resident_model_serves_end_to_end_at_half_the_bytes() {
         NativeCompressedScorer {
             model: f32_model,
             max_batch: 4,
+            kv: None,
         },
     );
     let before = coord.submit_all(Variant::Hss, &ws).unwrap();
@@ -303,6 +306,7 @@ fn f16_resident_model_serves_end_to_end_at_half_the_bytes() {
             Ok(NativeCompressedScorer {
                 model: swap_model.clone(),
                 max_batch: 4,
+                kv: None,
             })
         })
         .unwrap();
@@ -343,6 +347,7 @@ fn failed_store_swap_keeps_lane_healthy() {
         NativeCompressedScorer {
             model,
             max_batch: 4,
+            kv: None,
         },
     );
 
@@ -354,6 +359,7 @@ fn failed_store_swap_keeps_lane_healthy() {
             Ok(NativeCompressedScorer {
                 model,
                 max_batch: 4,
+                kv: None,
             })
         })
         .unwrap();

@@ -122,6 +122,7 @@ fn refined_variant_roundtrips_through_store_and_hotswap() {
         NativeCompressedScorer {
             model: oneshot.clone(),
             max_batch: 4,
+            kv: None,
         },
     );
     let before = coord.submit_all(Variant::Hss, &ws).unwrap();
@@ -137,6 +138,7 @@ fn refined_variant_roundtrips_through_store_and_hotswap() {
             Ok(NativeCompressedScorer {
                 model,
                 max_batch: 4,
+                kv: None,
             })
         })
         .unwrap();
