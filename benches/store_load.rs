@@ -1,26 +1,62 @@
-//! Store bench: cold-start time and on-disk bytes for the HSB1 compressed
-//! store vs the dense HWT1 baseline (which must recompress at load).
+//! Store bench: cold-start time and on-disk bytes for the HSB1/HSB2
+//! compressed stores vs the dense HWT1 baseline (which must recompress at
+//! load), plus the multi-process page-cache-sharing check for the mmap'd
+//! sharded reader.
 //!
 //! The paper's storage claim only pays off in serving if the compressed
-//! artifact is what's on disk: this bench measures (a) recompress-from-dense
-//! (the pre-store cold start), (b) HSB1 parse (the store cold start —
-//! fp16 factors stay f16-resident), and (c) bytes on disk per format.
+//! artifact is what's on disk — and what's *resident*: this bench measures
+//! (a) recompress-from-dense (the pre-store cold start), (b) HSB1 parse
+//! (the store cold start — fp16 factors stay f16-resident), (c) bytes on
+//! disk per format, and (d) with `--procs N` (default 4), N reader
+//! processes loading the same sharded HSB2 variant mmap'd vs buffered:
+//! mmap'd readers borrow their factor bytes straight out of one shared
+//! page-cache copy, so their summed private RSS stays far below the
+//! buffered readers', and their process cold-start skips the read+copy.
 //!
-//!     cargo bench --bench store_load
+//! The `mmap_share_check:` line is the CI gate: PASS requires (1) the
+//! mmap'd readers' summed private RSS <= 0.7x buffered, (2) the best
+//! mmap process cold-start <= the best buffered one, and (3) serving
+//! NLLs bit-identical (`to_bits`) between an mmap-backed and a buffered
+//! load of the same variant. `--json <path>` appends a one-line
+//! `{"bench":"store_load", ...}` trajectory record with `cold_start_us`,
+//! `rss_per_proc_bytes`, and `shard_count`.
+//!
+//!     cargo bench --bench store_load [-- --procs 4 --json traj.jsonl]
 
 mod common;
 
-use hisolo::compress::{compress_model_qkv, Method};
 use hisolo::compress::CompressorConfig;
+use hisolo::compress::{compress_model_qkv, Method};
+use hisolo::eval::perplexity::window_nll;
 use hisolo::model::weights::{Dtype, Tensor, WeightFile};
-use hisolo::store::{StoreFile, StoreWriter};
+use hisolo::model::CompressedModel;
+use hisolo::store::{MmapMode, ModelStore, StoreFile, StoreWriter};
+use hisolo::util::cli::Args;
+use hisolo::util::json::{num, obj, s, Json};
 use hisolo::util::timer::Table;
+use std::io::{BufRead, BufReader, Write};
+use std::sync::Arc;
 use std::time::Instant;
 
+/// Env marker re-execing this binary as a reader child (value: the
+/// `MmapMode`), plus the store dir and variant it should load.
+const CHILD_ENV: &str = "HISOLO_STORE_LOAD_CHILD";
+const STORE_ENV: &str = "HISOLO_STORE_LOAD_STORE";
+const VARIANT_ENV: &str = "HISOLO_STORE_LOAD_VARIANT";
+
 fn main() {
+    // child processes short-circuit before touching artifacts
+    if let Ok(mode) = std::env::var(CHILD_ENV) {
+        run_child(&mode);
+    }
+
+    let args = Args::parse(&[]);
+    let procs = args.get_usize("procs", 4);
+
     let env = common::load_env(4);
     let projections = env.model.qkv_projections();
-    let dir = std::env::temp_dir().join("hisolo_bench_store_load");
+    let dir = std::env::temp_dir().join(format!("hisolo_bench_store_load_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
     std::fs::create_dir_all(&dir).unwrap();
 
     // dense HWT1 baseline: the same q/k/v subset at fp16
@@ -48,6 +84,9 @@ fn main() {
         "disk ratio",
     ]);
 
+    let store = ModelStore::open(dir.join("store"));
+    let mut hsb2_bytes = 0u64;
+    let mut shard_count = 0usize;
     for method in [Method::SSvd, Method::SHss, Method::SHssRcm] {
         let cfg = CompressorConfig {
             rank: 32,
@@ -80,6 +119,23 @@ fn main() {
             best_ms = best_ms.min(t0.elapsed().as_secs_f64() * 1e3);
         }
 
+        // the sHSS-RCM variant also goes out in the sharded HSB2 form —
+        // what the multi-process share check below reads
+        if method == Method::SHssRcm {
+            let entries: Vec<hisolo::store::ShardEntry> = reports
+                .iter()
+                .map(|r| hisolo::store::ShardEntry {
+                    name: r.name.clone(),
+                    method: Some(method),
+                    rel_error: r.rel_error,
+                    matrix: &r.compressed,
+                })
+                .collect();
+            hisolo::store::write_sharded(&store.sharded_path("shss-rcm"), &entries, 1).unwrap();
+            hsb2_bytes = store.variant_bytes("shss-rcm");
+            shard_count = store.open_variant("shss-rcm").unwrap().shard_count();
+        }
+
         t.row(&[
             method.name().to_string(),
             format!("{recompress_s:.3}"),
@@ -95,6 +151,275 @@ fn main() {
     println!(
         "\nclaim check: the HSB1 store turns cold start from O(SVD) into O(read),\n\
          and the compressed variants occupy a fraction of the dense fp16 bytes\n\
-         on disk (disk ratio < 1)."
+         on disk (disk ratio < 1). hsb2 (sharded, aligned): {hsb2_bytes} bytes in\n\
+         {shard_count} shards."
     );
+
+    // ---- serving bitwise check: mmap-backed vs buffered NLLs ------------
+    // same variant, two backings, one tiny forward workload: every NLL
+    // must match to the bit (the zero-copy reader changes *where* bytes
+    // live, never what they are)
+    let bitwise = {
+        let base = Arc::clone(&env.model);
+        let mmap_file = store.open_variant_with("shss-rcm", MmapMode::Auto).unwrap();
+        let buf_file = store
+            .open_variant_with("shss-rcm", MmapMode::Buffered)
+            .unwrap();
+        let cm_mmap = CompressedModel::from_store(base.clone(), &mmap_file).unwrap();
+        let cm_buf = CompressedModel::from_store(base, &buf_file).unwrap();
+        let mut all = true;
+        for w in env.windows.iter().take(2) {
+            let (nll_m, t_m) = window_nll(&cm_mmap.forward(w), w);
+            let (nll_b, t_b) = window_nll(&cm_buf.forward(w), w);
+            all &= t_m == t_b && nll_m.to_bits() == nll_b.to_bits();
+        }
+        println!(
+            "serving backings: mmap={} buffered={} nll_bitwise={all}",
+            mmap_file.is_mapped(),
+            buf_file.is_mapped()
+        );
+        all
+    };
+
+    // ---- multi-process page-cache share check ---------------------------
+    let share = run_share_check(&store, procs);
+
+    let (verdict, pass) = match &share {
+        Some(sh) => {
+            let rss_ok = sh.mmap_priv_kb as f64 <= 0.7 * sh.buffered_priv_kb as f64;
+            let cold_ok = sh.mmap_cold_us <= sh.buffered_cold_us;
+            let p = rss_ok && cold_ok && bitwise;
+            (
+                format!(
+                    "procs={procs} shards={shard_count} \
+                     priv_rss mmap={}kB buffered={}kB (ratio {:.2}, need <=0.70) \
+                     cold_us mmap={} buffered={} bitwise={bitwise} {}",
+                    sh.mmap_priv_kb,
+                    sh.buffered_priv_kb,
+                    sh.mmap_priv_kb as f64 / (sh.buffered_priv_kb.max(1)) as f64,
+                    sh.mmap_cold_us,
+                    sh.buffered_cold_us,
+                    if p { "PASS" } else { "FAIL" }
+                ),
+                p,
+            )
+        }
+        None => (
+            format!("procs={procs} bitwise={bitwise} SKIP (mmap or /proc unavailable)"),
+            bitwise,
+        ),
+    };
+    println!("\nmmap_share_check: {verdict}");
+
+    let record = obj(vec![
+        ("bench", s("store_load")),
+        ("procs", num(procs as f64)),
+        ("shard_count", num(shard_count as f64)),
+        ("hsb2_bytes", num(hsb2_bytes as f64)),
+        (
+            "cold_start_us",
+            num(share.as_ref().map_or(0.0, |sh| sh.mmap_cold_us as f64)),
+        ),
+        (
+            "buffered_cold_start_us",
+            num(share.as_ref().map_or(0.0, |sh| sh.buffered_cold_us as f64)),
+        ),
+        (
+            "rss_per_proc_bytes",
+            num(share
+                .as_ref()
+                .map_or(0.0, |sh| sh.mmap_priv_kb as f64 * 1024.0 / procs.max(1) as f64)),
+        ),
+        (
+            "buffered_rss_per_proc_bytes",
+            num(share
+                .as_ref()
+                .map_or(0.0, |sh| sh.buffered_priv_kb as f64 * 1024.0 / procs.max(1) as f64)),
+        ),
+        ("nll_bitwise", Json::Bool(bitwise)),
+        ("pass", Json::Bool(pass)),
+    ]);
+    println!("\nJSON: {record}");
+    if let Some(path) = args.get_path("json") {
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .expect("open json trajectory file");
+        writeln!(f, "{record}").expect("append trajectory line");
+        println!("appended store_load trajectory line to {}", path.display());
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+    if !pass {
+        std::process::exit(1);
+    }
+}
+
+struct ShareCheck {
+    /// summed Private_Clean+Private_Dirty across the N concurrent readers
+    mmap_priv_kb: u64,
+    buffered_priv_kb: u64,
+    /// best process cold-start (open variant + decode every entry)
+    mmap_cold_us: u64,
+    buffered_cold_us: u64,
+}
+
+/// Spawn `procs` reader children per mode against the sharded variant.
+/// Children load, report their cold-start, hold their decoded model, then
+/// measure private RSS only once *every* sibling holds its mapping (the
+/// two-phase stdin handshake) — file pages mapped by one process count as
+/// private, by N as shared, so concurrency at measure time is the test.
+fn run_share_check(store: &ModelStore, procs: usize) -> Option<ShareCheck> {
+    if procs == 0 || !cfg!(target_os = "linux") {
+        return None;
+    }
+    // a mapping must actually be available (HISOLO_MMAP=off → SKIP, not
+    // a vacuous mmap-vs-mmap FAIL)
+    if !store
+        .open_variant_with("shss-rcm", MmapMode::Auto)
+        .ok()?
+        .is_mapped()
+    {
+        return None;
+    }
+    // prime the page cache so both modes measure process-cold, disk-warm
+    {
+        let f = store
+            .open_variant_with("shss-rcm", MmapMode::Buffered)
+            .ok()?;
+        for name in f.names() {
+            std::hint::black_box(f.load(name).ok()?.n());
+        }
+    }
+    let mut out = ShareCheck {
+        mmap_priv_kb: 0,
+        buffered_priv_kb: 0,
+        mmap_cold_us: u64::MAX,
+        buffered_cold_us: u64::MAX,
+    };
+    for mode in ["buffered", "mmap"] {
+        let (priv_kb, cold_us) = run_reader_fleet(store, procs, mode)?;
+        if mode == "mmap" {
+            out.mmap_priv_kb = priv_kb;
+            out.mmap_cold_us = cold_us;
+        } else {
+            out.buffered_priv_kb = priv_kb;
+            out.buffered_cold_us = cold_us;
+        }
+    }
+    Some(out)
+}
+
+/// One fleet of `procs` children in `mode`; returns (summed private kB,
+/// best cold-start µs). Any child failure aborts the check (None).
+fn run_reader_fleet(store: &ModelStore, procs: usize, mode: &str) -> Option<(u64, u64)> {
+    let exe = std::env::current_exe().ok()?;
+    let mut children = Vec::with_capacity(procs);
+    for _ in 0..procs {
+        let child = std::process::Command::new(&exe)
+            .env(CHILD_ENV, mode)
+            .env(STORE_ENV, store.dir())
+            .env(VARIANT_ENV, "shss-rcm")
+            .stdin(std::process::Stdio::piped())
+            .stdout(std::process::Stdio::piped())
+            .spawn()
+            .ok()?;
+        children.push(child)
+    }
+    let mut pipes: Vec<(std::process::ChildStdin, BufReader<std::process::ChildStdout>)> =
+        Vec::with_capacity(procs);
+    for c in &mut children {
+        let stdin = c.stdin.take()?;
+        let stdout = BufReader::new(c.stdout.take()?);
+        pipes.push((stdin, stdout));
+    }
+    // phase 1: every child loaded (all mappings live concurrently)
+    let mut cold_best = u64::MAX;
+    for (_, stdout) in &mut pipes {
+        let mut line = String::new();
+        stdout.read_line(&mut line).ok()?;
+        let cold_us = field(&line, "cold_us")?;
+        cold_best = cold_best.min(cold_us);
+        if !line.starts_with("LOADED") {
+            return None;
+        }
+    }
+    // phase 2: measure while all siblings hold their load
+    for (stdin, _) in &mut pipes {
+        stdin.write_all(b"measure\n").ok()?;
+    }
+    let mut priv_sum = 0u64;
+    for (_, stdout) in &mut pipes {
+        let mut line = String::new();
+        stdout.read_line(&mut line).ok()?;
+        if !line.starts_with("READY") {
+            return None;
+        }
+        priv_sum += field(&line, "priv_kb")?;
+    }
+    // release + reap
+    drop(pipes);
+    for mut c in children {
+        let _ = c.wait();
+    }
+    Some((priv_sum, cold_best))
+}
+
+/// Extract `key=<u64>` from a child report line.
+fn field(line: &str, key: &str) -> Option<u64> {
+    line.split_whitespace()
+        .find_map(|tok| tok.strip_prefix(&format!("{key}=")))
+        .and_then(|v| v.parse().ok())
+}
+
+/// Reader child: load the variant in the requested mode, report the
+/// cold-start, hold everything decoded, measure private RSS on command,
+/// hold until the parent hangs up. Never returns.
+fn run_child(mode: &str) -> ! {
+    let store_dir = std::env::var(STORE_ENV).expect("child store dir");
+    let variant = std::env::var(VARIANT_ENV).expect("child variant");
+    let mode = if mode == "buffered" {
+        MmapMode::Buffered
+    } else {
+        MmapMode::Auto
+    };
+    let store = ModelStore::open(&store_dir);
+    let t0 = Instant::now();
+    let file = store.open_variant_with(&variant, mode).expect("open variant");
+    let mut held = Vec::new();
+    for name in file.names() {
+        held.push(file.load_native(name).expect("decode entry"));
+    }
+    let cold_us = t0.elapsed().as_micros() as u64;
+    println!("LOADED cold_us={cold_us} mapped={}", file.is_mapped());
+    let stdin = std::io::stdin();
+    let mut line = String::new();
+    stdin.lock().read_line(&mut line).expect("measure command");
+    let (rss_kb, priv_kb) = self_rss_kb();
+    println!("READY rss_kb={rss_kb} priv_kb={priv_kb} entries={}", held.len());
+    // hold the mapping until the parent closes our stdin
+    line.clear();
+    let _ = stdin.lock().read_line(&mut line);
+    std::hint::black_box(held.len());
+    std::process::exit(0);
+}
+
+/// (VmRSS kB, Private_Clean+Private_Dirty kB) of this process. Private
+/// pages are the ones *not* shared with a sibling — the quantity the
+/// zero-copy mmap reader is supposed to shrink.
+fn self_rss_kb() -> (u64, u64) {
+    fn kb(text: &str, key: &str) -> u64 {
+        text.lines()
+            .filter(|l| l.starts_with(key))
+            .filter_map(|l| l.split_whitespace().nth(1))
+            .filter_map(|v| v.parse::<u64>().ok())
+            .sum()
+    }
+    let rss = std::fs::read_to_string("/proc/self/status")
+        .map(|t| kb(&t, "VmRSS:"))
+        .unwrap_or(0);
+    let privs = std::fs::read_to_string("/proc/self/smaps_rollup")
+        .map(|t| kb(&t, "Private_Clean:") + kb(&t, "Private_Dirty:"))
+        .unwrap_or(0);
+    (rss, privs)
 }

@@ -142,5 +142,5 @@ pub use metrics::Metrics;
 pub use request::{RequestKind, ScoreRequest, ScoreResponse, Variant};
 
 pub use crate::obs::TraceId;
-pub use server::{Coordinator, CoordinatorConfig, SwapTicket};
+pub use server::{Coordinator, CoordinatorConfig, LayerProgress, StreamedSwap, SwapTicket};
 pub use worker::{BoxScorer, Scorer, ScorerFactory, SwapRequest};

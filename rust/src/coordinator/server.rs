@@ -206,6 +206,88 @@ impl Coordinator {
         })
     }
 
+    /// [`Coordinator::swap_variant_prefetched`] with **shard streaming**:
+    /// `load` runs once on the helper thread — for a sharded `HSB2`
+    /// variant that is `CompressedModel::from_store_with_progress`, which
+    /// decodes layers across threads and reports each as it lands — and
+    /// every [`LayerProgress`] event is forwarded on the returned
+    /// receiver while the old scorer keeps serving. Once the load
+    /// completes, `make_scorer` builds one scorer per worker off the
+    /// shared result and each worker installs it between batches, so
+    /// per-request consistency is exactly `swap_variant`'s: a request is
+    /// answered wholly by the old or wholly by the new model.
+    ///
+    /// A failed load keeps the old scorers serving; the ticket's `wait`
+    /// reports the error (one failed ack per expected worker).
+    pub fn swap_variant_streamed<T, S, L, F>(
+        &self,
+        variant: Variant,
+        load: L,
+        make_scorer: F,
+    ) -> anyhow::Result<StreamedSwap>
+    where
+        T: Send + 'static,
+        S: Scorer + Send + 'static,
+        L: FnOnce(Sender<LayerProgress>) -> anyhow::Result<T> + Send + 'static,
+        F: Fn(&T) -> anyhow::Result<S> + Send + 'static,
+    {
+        let lane = self
+            .lanes
+            .get(&variant)
+            .ok_or_else(|| anyhow::anyhow!("no worker registered for variant {variant:?}"))?;
+        let (ack_tx, ack_rx) = channel();
+        let (progress_tx, progress_rx) = channel();
+        let txs: Vec<Sender<SwapRequest>> = lane
+            .swap_txs
+            .iter()
+            .map(|m| m.lock().unwrap().clone())
+            .collect();
+        let expected = txs.len();
+        std::thread::spawn(move || {
+            // the expensive part happens once, off every serving lane,
+            // streaming per-layer completions as they happen
+            let loaded = match load(progress_tx) {
+                Ok(t) => t,
+                Err(e) => {
+                    // fail every expected ack so wait() errors promptly
+                    for _ in 0..expected {
+                        let _ = ack_tx.send(Err(format!("{e:#}")));
+                    }
+                    return;
+                }
+            };
+            for tx in txs {
+                match make_scorer(&loaded) {
+                    Ok(scorer) => {
+                        let mut slot = Some(scorer);
+                        let req = SwapRequest {
+                            factory: Box::new(move || {
+                                let s = slot.take().expect("streamed scorer installed once");
+                                Ok(Box::new(s) as BoxScorer)
+                            }),
+                            ack: ack_tx.clone(),
+                        };
+                        if tx.send(req).is_err() {
+                            let gone = "worker exited before the streamed swap arrived";
+                            let _ = ack_tx.send(Err(gone.into()));
+                        }
+                    }
+                    Err(e) => {
+                        let _ = ack_tx.send(Err(format!("{e:#}")));
+                    }
+                }
+            }
+        });
+        Ok(StreamedSwap {
+            ticket: SwapTicket {
+                expected,
+                undelivered: 0,
+                acks: ack_rx,
+            },
+            progress: progress_rx,
+        })
+    }
+
     /// Submit one window for a stateless rescore; the response arrives on
     /// the returned receiver. Errors (backpressure / unknown variant) are
     /// returned immediately.
@@ -367,6 +449,24 @@ impl Coordinator {
             }
         }
     }
+}
+
+/// One layer's q/k/v triple finished decoding during a
+/// [`Coordinator::swap_variant_streamed`] load.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerProgress {
+    pub layer: usize,
+    /// wall time decoding this layer took on its loader thread
+    pub micros: u64,
+}
+
+/// Handle on an in-flight [`Coordinator::swap_variant_streamed`]: the
+/// [`SwapTicket`] resolving the install, plus the live per-layer
+/// progress stream of the background load (the sender side drops when
+/// the load finishes, so iterating the receiver terminates).
+pub struct StreamedSwap {
+    pub ticket: SwapTicket,
+    pub progress: Receiver<LayerProgress>,
 }
 
 /// Handle on an in-flight [`Coordinator::swap_variant`]: one ack per
@@ -630,6 +730,80 @@ mod tests {
             .wait(Duration::from_secs(5))
             .unwrap_err();
         assert!(format!("{err}").contains("store gone mid-prefetch"), "{err}");
+        let resp = c
+            .submit(Variant::Dense, (0..9).collect())
+            .unwrap()
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap();
+        assert!(resp.error.is_none());
+        c.shutdown();
+    }
+
+    #[test]
+    fn streamed_swap_reports_progress_then_installs() {
+        let c = coordinator_with_mock(true); // lane starts failing
+        let swap = c
+            .swap_variant_streamed(
+                Variant::Dense,
+                // stand-in for from_store_with_progress: "decode" 3 layers,
+                // streaming each, and return the shared load result
+                |progress| {
+                    for layer in 0..3usize {
+                        progress
+                            .send(LayerProgress {
+                                layer,
+                                micros: 10 + layer as u64,
+                            })
+                            .unwrap();
+                    }
+                    Ok(Arc::new(42usize))
+                },
+                |loaded: &Arc<usize>| {
+                    assert_eq!(**loaded, 42);
+                    Ok(MockScorer {
+                        vocab: 16,
+                        seq: 8,
+                        batch: 4,
+                        fail: false,
+                    })
+                },
+            )
+            .unwrap();
+        // the progress stream terminates once the load finishes
+        let events: Vec<LayerProgress> = swap.progress.iter().collect();
+        assert_eq!(events.len(), 3);
+        assert_eq!(events[0].layer, 0);
+        assert_eq!(events[2].layer, 2);
+        assert!(events.iter().all(|e| e.micros > 0));
+        swap.ticket.wait(Duration::from_secs(5)).unwrap();
+
+        let resp = c
+            .submit(Variant::Dense, (0..9).collect())
+            .unwrap()
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_eq!(c.metrics.swaps.load(Ordering::Relaxed), 1);
+
+        // a failing load keeps the healthy scorer and fails the ticket
+        let swap = c
+            .swap_variant_streamed(
+                Variant::Dense,
+                |_progress| -> anyhow::Result<Arc<usize>> {
+                    anyhow::bail!("shard gone mid-stream")
+                },
+                |_: &Arc<usize>| {
+                    Ok(MockScorer {
+                        vocab: 16,
+                        seq: 8,
+                        batch: 4,
+                        fail: false,
+                    })
+                },
+            )
+            .unwrap();
+        let err = swap.ticket.wait(Duration::from_secs(5)).unwrap_err();
+        assert!(format!("{err}").contains("shard gone mid-stream"), "{err}");
         let resp = c
             .submit(Variant::Dense, (0..9).collect())
             .unwrap()

@@ -67,14 +67,26 @@
 //! # }
 //! ```
 //!
-//! Whole models go through [`store::ModelStore`] (one `HSB1` file per
-//! variant, entries keyed `(layer, projection)`); the serving
-//! [`coordinator`] cold-starts workers from it **at the store's dtype**
-//! (f16-resident factors — the format's memory claim is the resident
-//! memory claim), reports per-variant `resident_weight_bytes` in its
-//! metrics, and atomically hot-swaps a variant under live traffic via
-//! `Coordinator::swap_variant` (or `swap_variant_prefetched`, which
-//! parses the incoming variant on a helper thread).
+//! Whole models go through [`store::ModelStore`] in one of two on-disk
+//! forms behind the same [`store::VariantFile`] API: a monolithic `HSB1`
+//! file, or the sharded `HSB2` directory (one shard per layer plus a
+//! crc-checked manifest, written shards-first/manifest-last so a variant
+//! is never visible half-written). `HSB2` payloads keep every value run
+//! 8-byte aligned, so on unix the reader mmaps each shard and hands out
+//! weight buffers that **borrow the mapping zero-copy**: N serving
+//! processes share one page-cache copy of a variant, per-process cold
+//! start drops to fault-in time, and the bytes the kernels consume are
+//! bit-for-bit the bytes on disk (`HISOLO_MMAP=off` is the kill-switch
+//! back to buffered reads). The serving [`coordinator`] cold-starts
+//! workers from either form **at the store's dtype** (f16-resident
+//! factors — the format's memory claim is the resident memory claim),
+//! loads layers in parallel (`CompressedModel::from_store`), reports
+//! per-variant `resident_weight_bytes` in its metrics, and atomically
+//! hot-swaps a variant under live traffic via
+//! `Coordinator::swap_variant` (or `swap_variant_prefetched` /
+//! `swap_variant_streamed`, which build the incoming scorer on a helper
+//! thread — the streamed form reporting per-layer progress as shards
+//! decode).
 //!
 //! The serving pass itself is **bucket → stack → batched attention**
 //! (the paper's "one sparse and a sequence of thin-matrix

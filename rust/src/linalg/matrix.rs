@@ -40,7 +40,7 @@ impl Matrix {
         Matrix {
             rows,
             cols,
-            data: WeightBuf::F32(vec![0.0; rows * cols]),
+            data: WeightBuf::F32(vec![0.0; rows * cols].into()),
         }
     }
 
@@ -49,7 +49,7 @@ impl Matrix {
         Matrix {
             rows,
             cols,
-            data: WeightBuf::F32(data),
+            data: WeightBuf::F32(data.into()),
         }
     }
 
@@ -60,7 +60,7 @@ impl Matrix {
         Matrix {
             rows,
             cols,
-            data: WeightBuf::F16(bits),
+            data: WeightBuf::F16(bits.into()),
         }
     }
 

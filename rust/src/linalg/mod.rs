@@ -18,6 +18,6 @@ pub mod weightbuf;
 
 pub use matrix::Matrix;
 pub use permutation::Permutation;
-pub use weightbuf::{Dtype, WeightBuf, WeightElem};
+pub use weightbuf::{Dtype, MapRange, Storage, WeightBuf, WeightElem};
 pub use rsvd::{randomized_svd, RsvdOptions};
 pub use svd::{truncated_svd, Svd};

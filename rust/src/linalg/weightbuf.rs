@@ -119,15 +119,184 @@ impl WeightElem for u16 {
     }
 }
 
+/// Marker for element types a [`MapRange`] may reinterpret mapped bytes
+/// as. Sealed to `f32` and `u16`: both accept every bit pattern, so the
+/// reinterpret in [`MapRange::as_slice`] is sound for exactly these.
+pub trait MapElem: Copy + PartialEq + Send + Sync + 'static + private::Sealed {}
+
+mod private {
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for u16 {}
+}
+
+impl MapElem for f32 {}
+impl MapElem for u16 {}
+
+/// A typed view into a memory-mapped store file: `len` elements of `T`
+/// starting `off` bytes into the mapping. Holding the `Arc` keeps the
+/// mapping alive for as long as any weight borrows it; cloning is an
+/// `Arc` bump, never a copy of the weights.
+#[derive(Clone)]
+pub struct MapRange<T: MapElem> {
+    map: std::sync::Arc<crate::util::mmap::Mmap>,
+    off: usize,
+    len: usize,
+    _elem: std::marker::PhantomData<T>,
+}
+
+impl<T: MapElem> MapRange<T> {
+    /// Build a borrowed view of `len` elements at byte offset `off`, or
+    /// `None` when borrowing would be unsound or wrong: out of bounds,
+    /// misaligned for `T`, or a big-endian host (the store is
+    /// little-endian; a copy-decode is required there). Callers fall back
+    /// to the owned decode path on `None`.
+    pub fn new(
+        map: std::sync::Arc<crate::util::mmap::Mmap>,
+        off: usize,
+        len: usize,
+    ) -> Option<MapRange<T>> {
+        if cfg!(target_endian = "big") {
+            return None;
+        }
+        let bytes = len.checked_mul(std::mem::size_of::<T>())?;
+        let end = off.checked_add(bytes)?;
+        if end > map.len() {
+            return None;
+        }
+        if (map.as_ptr() as usize + off) % std::mem::align_of::<T>() != 0 {
+            return None;
+        }
+        Some(MapRange {
+            map,
+            off,
+            len,
+            _elem: std::marker::PhantomData,
+        })
+    }
+
+    pub fn as_slice(&self) -> &[T] {
+        // SAFETY: construction checked bounds and alignment against the
+        // live mapping (held alive by `self.map`), and `T: MapElem`
+        // accepts every bit pattern.
+        unsafe {
+            std::slice::from_raw_parts(self.map.as_ptr().add(self.off) as *const T, self.len)
+        }
+    }
+}
+
+/// Backing storage for one run of weight values: heap-owned (the decode
+/// path that copies out of the file) or a borrowed window of an mmap'd
+/// store file (the zero-copy serving path). Derefs to `[T]`, so kernels
+/// and every read-only consumer are agnostic to which one they got;
+/// mutation (`as_mut_slice`) is owned-only by construction — training
+/// widens into owned buffers first.
+#[derive(Clone)]
+pub enum Storage<T: MapElem> {
+    Owned(Vec<T>),
+    Mapped(MapRange<T>),
+}
+
+impl<T: MapElem> Storage<T> {
+    pub fn as_slice(&self) -> &[T] {
+        match self {
+            Storage::Owned(v) => v,
+            Storage::Mapped(m) => m.as_slice(),
+        }
+    }
+
+    /// Mutable access to the values; panics for mapped storage (the
+    /// mapping is `PROT_READ` and shared between processes — every write
+    /// path must copy to owned first, which `to_f32` widening does).
+    pub fn as_mut_slice(&mut self) -> &mut [T] {
+        match self {
+            Storage::Owned(v) => v,
+            Storage::Mapped(_) => {
+                panic!("mmap-backed weight buffer is read-only (copy to owned before mutating)")
+            }
+        }
+    }
+
+    pub fn is_mapped(&self) -> bool {
+        matches!(self, Storage::Mapped(_))
+    }
+
+    /// The values as an owned `Vec`, copying only when mapped.
+    pub fn into_owned(self) -> Vec<T> {
+        match self {
+            Storage::Owned(v) => v,
+            Storage::Mapped(m) => m.as_slice().to_vec(),
+        }
+    }
+}
+
+impl<T: MapElem> From<Vec<T>> for Storage<T> {
+    fn from(v: Vec<T>) -> Storage<T> {
+        Storage::Owned(v)
+    }
+}
+
+impl<T: MapElem> std::ops::Deref for Storage<T> {
+    type Target = [T];
+
+    fn deref(&self) -> &[T] {
+        self.as_slice()
+    }
+}
+
+impl<T: MapElem> std::ops::DerefMut for Storage<T> {
+    fn deref_mut(&mut self) -> &mut [T] {
+        self.as_mut_slice()
+    }
+}
+
+impl<T: MapElem> PartialEq for Storage<T> {
+    fn eq(&self, other: &Storage<T>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<'a, T: MapElem> IntoIterator for &'a Storage<T> {
+    type Item = &'a T;
+    type IntoIter = std::slice::Iter<'a, T>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.as_slice().iter()
+    }
+}
+
+impl<T: MapElem> std::fmt::Debug for Storage<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Storage::{}[{}]",
+            if self.is_mapped() { "Mapped" } else { "Owned" },
+            self.as_slice().len()
+        )
+    }
+}
+
 /// Dtype-generic element storage: f32 values, or f16 stored as raw `u16`
 /// bit patterns (the store's on-disk representation, kept resident).
+/// Either dtype may be heap-owned or a zero-copy borrow of an mmap'd
+/// store file — see [`Storage`]; numerics are identical (same bytes
+/// through the same kernels), only who owns the bytes differs.
 #[derive(Clone, PartialEq)]
 pub enum WeightBuf {
-    F32(Vec<f32>),
-    F16(Vec<u16>),
+    F32(Storage<f32>),
+    F16(Storage<u16>),
 }
 
 impl WeightBuf {
+    /// Whether the values borrow an mmap'd store file rather than owning
+    /// heap memory (shared page-cache bytes across serving processes).
+    pub fn is_mapped(&self) -> bool {
+        match self {
+            WeightBuf::F32(v) => v.is_mapped(),
+            WeightBuf::F16(v) => v.is_mapped(),
+        }
+    }
+
     pub fn len(&self) -> usize {
         match self {
             WeightBuf::F32(v) => v.len(),
@@ -188,23 +357,29 @@ impl WeightBuf {
         }
     }
 
-    /// Narrow to f16 residency (round-to-nearest-even; idempotent).
+    /// Narrow to f16 residency (round-to-nearest-even; idempotent). A
+    /// mapped f16 buffer stays mapped — narrowing is the serving path,
+    /// which never mutates.
     pub fn to_f16(&self) -> WeightBuf {
         match self {
-            WeightBuf::F32(v) => WeightBuf::F16(v.iter().map(|&x| f32_to_f16(x)).collect()),
+            WeightBuf::F32(v) => {
+                WeightBuf::F16(v.iter().map(|&x| f32_to_f16(x)).collect::<Vec<u16>>().into())
+            }
             WeightBuf::F16(v) => WeightBuf::F16(v.clone()),
         }
     }
 
     /// Widen to f32 residency (exact; idempotent). Bulk widening rides
-    /// the same dispatched lane primitive as the kernels.
+    /// the same dispatched lane primitive as the kernels. Always yields
+    /// an **owned** buffer — widening is the training on-ramp, and
+    /// mapped storage is read-only.
     pub fn to_f32(&self) -> WeightBuf {
         match self {
-            WeightBuf::F32(v) => WeightBuf::F32(v.clone()),
+            WeightBuf::F32(v) => WeightBuf::F32(v.as_slice().to_vec().into()),
             WeightBuf::F16(v) => {
                 let mut out = vec![0.0f32; v.len()];
                 (crate::linalg::simd::kernels().widen_f16_lanes)(v, &mut out);
-                WeightBuf::F32(out)
+                WeightBuf::F32(out.into())
             }
         }
     }
@@ -228,13 +403,13 @@ pub fn widen_f16_into<'a>(bits: &[u16], stage: &'a mut Vec<f32>) -> &'a [f32] {
 
 impl From<Vec<f32>> for WeightBuf {
     fn from(v: Vec<f32>) -> WeightBuf {
-        WeightBuf::F32(v)
+        WeightBuf::F32(v.into())
     }
 }
 
 impl From<Vec<u16>> for WeightBuf {
     fn from(v: Vec<u16>) -> WeightBuf {
-        WeightBuf::F16(v)
+        WeightBuf::F16(v.into())
     }
 }
 
@@ -323,6 +498,65 @@ mod tests {
     fn f16_buffer_rejects_f32_deref() {
         let b = WeightBuf::from(vec![1.0f32, 2.0]).to_f16();
         let _ = b[0]; // deref to [f32] must panic, not silently misread
+    }
+
+    #[cfg(unix)]
+    fn map_fixture(tag: &str, bytes: &[u8]) -> std::sync::Arc<crate::util::mmap::Mmap> {
+        let p = std::env::temp_dir().join(format!("hisolo-wbuf-{}-{tag}", std::process::id()));
+        std::fs::write(&p, bytes).unwrap();
+        let m = std::sync::Arc::new(crate::util::mmap::Mmap::map(&p).unwrap());
+        std::fs::remove_file(&p).unwrap(); // mapping outlives the unlink
+        m
+    }
+
+    #[test]
+    #[cfg(unix)]
+    fn mapped_storage_reads_identically_to_owned() {
+        let mut rng = Rng::new(11);
+        let xs: Vec<f32> = (0..513).map(|_| rng.gaussian_f32()).collect();
+        let bits: Vec<u16> = xs.iter().map(|&x| f32_to_f16(x)).collect();
+        let mut bytes = Vec::new();
+        for &b in &bits {
+            bytes.extend_from_slice(&b.to_le_bytes());
+        }
+        let m = map_fixture("identical", &bytes);
+        let range = MapRange::<u16>::new(m, 0, bits.len()).expect("aligned in-bounds borrow");
+        let mapped = WeightBuf::F16(Storage::Mapped(range));
+        let owned = WeightBuf::F16(bits.clone().into());
+        assert!(mapped.is_mapped() && !owned.is_mapped());
+        assert_eq!(mapped, owned); // bitwise: same u16 patterns
+        assert_eq!(mapped.as_f16(), owned.as_f16());
+        assert_eq!(mapped.resident_bytes(), owned.resident_bytes());
+        for i in 0..bits.len() {
+            assert_eq!(mapped.at(i).to_bits(), owned.at(i).to_bits(), "at({i})");
+        }
+        // widening materializes an owned, mutable buffer
+        let widened = mapped.to_f32();
+        assert!(!widened.is_mapped());
+        assert_eq!(widened, owned.to_f32());
+    }
+
+    #[test]
+    #[cfg(unix)]
+    fn map_range_rejects_misaligned_and_out_of_bounds() {
+        let m = map_fixture("bounds", &[0u8; 64]);
+        // u16 needs 2-byte alignment relative to the (page-aligned) map base
+        assert!(MapRange::<u16>::new(m.clone(), 1, 4).is_none());
+        assert!(MapRange::<f32>::new(m.clone(), 2, 4).is_none());
+        // in bounds exactly
+        assert!(MapRange::<u16>::new(m.clone(), 0, 32).is_some());
+        assert!(MapRange::<u16>::new(m.clone(), 0, 33).is_none());
+        assert!(MapRange::<f32>::new(m.clone(), 48, 4).is_some());
+        assert!(MapRange::<f32>::new(m, 52, 4).is_none());
+    }
+
+    #[test]
+    #[cfg(unix)]
+    #[should_panic(expected = "read-only")]
+    fn mapped_storage_rejects_mutation() {
+        let m = map_fixture("readonly", &[0u8; 16]);
+        let mut s = Storage::<f32>::Mapped(MapRange::new(m, 0, 4).unwrap());
+        s.as_mut_slice()[0] = 1.0;
     }
 
     #[test]

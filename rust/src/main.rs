@@ -53,12 +53,18 @@ COMMANDS:
                                 HSB1 artifact store (no recompression at load)
       --method shss-rcm --rank 32 --sparsity 0.3 --depth 3
       [--store store] [--variant <name>] (default: the method name)
-      [--synthetic]  (random base model when artifacts are absent)
+      [--sharded]  (write the HSB2 sharded form: one shard per layer,
+      value runs aligned for zero-copy mmap serving — N processes share
+      one page-cache copy; disable mapping with HISOLO_MMAP=off)
+      [--synthetic [--tiny]]  (random base model when artifacts are
+      absent; --tiny matches serve's smoke config)
   serve                         serve scoring requests via PJRT executables
       [--variant both|dense|hss] [--requests 64] [--max-batch 8]
       [--max-wait-ms 5] [--native]  (--native uses the Rust fwd, no PJRT)
       [--from-store store [--store-variant shss-rcm]]  (with --native:
-      cold-start the hss lane from the HSB1 store instead of recompressing)
+      cold-start the hss lane from the store instead of recompressing;
+      auto-detects monolithic HSB1 vs sharded HSB2 variants — sharded +
+      mmap serves factors zero-copy straight out of the page cache)
       [--synthetic [--tiny]]  (with --native: random base model over a
       synthetic token stream — no artifacts needed; smoke runs)
       [--metrics-json path]  (write a Metrics::to_json() snapshot — the
@@ -92,7 +98,7 @@ Artifacts default to ./artifacts (override with --artifacts or
 HISOLO_ARTIFACTS). Build them with `make artifacts`.";
 
 fn main() {
-    let args = Args::parse(&["native", "no-rcm", "help", "synthetic", "tiny", "decode"]);
+    let args = Args::parse(&["native", "no-rcm", "help", "synthetic", "tiny", "decode", "sharded"]);
     if args.flag("help") || args.subcommand().is_none() {
         println!("{USAGE}");
         return;
@@ -274,7 +280,21 @@ fn base_model(args: &Args) -> Result<Arc<Transformer>> {
         Ok(model)
     } else if args.flag("synthetic") {
         let seed = args.get_usize("seed", 7) as u64;
-        Ok(Arc::new(Transformer::random(ModelConfig::default(), seed)))
+        // --tiny matches serve's smoke config exactly, so a tiny saved
+        // store variant cold-starts under `serve --synthetic --tiny`
+        let mcfg = if args.flag("tiny") {
+            ModelConfig {
+                vocab: 64,
+                d_model: 64,
+                n_heads: 4,
+                n_layers: 2,
+                d_ff: 128,
+                seq_len: 32,
+            }
+        } else {
+            ModelConfig::default()
+        };
+        Ok(Arc::new(Transformer::random(mcfg, seed)))
     } else {
         bail!(
             "artifacts not found at {} — run `make artifacts`, or pass \
@@ -301,7 +321,13 @@ fn cmd_save(args: &Args) -> Result<()> {
     let cm = CompressedModel::compress(model, method, cfg);
     let compress_secs = t0.elapsed().as_secs_f64();
     let store = ModelStore::open(&store_dir);
-    let path = store.save_model(&variant, &cm)?;
+    let path = if args.flag("sharded") {
+        // HSB2: one shard per layer, aligned payloads — the zero-copy
+        // mmap serving form
+        store.save_model_sharded(&variant, &cm)?
+    } else {
+        store.save_model(&variant, &cm)?
+    };
     println!("compress time: {compress_secs:.2}s");
     println!("mean rel error: {:.4}", cm.mean_rel_error());
     println!(
@@ -647,13 +673,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
                         let store = ModelStore::open(store_dir);
                         let vname = args.get_str("store-variant", "shss-rcm");
                         let t0 = Instant::now();
-                        let loaded = Arc::new(store.load_model(&vname, model)?);
+                        // auto-detects the on-disk form: a sharded HSB2
+                        // directory wins over a same-name HSB1 file when
+                        // newer, and layers decode in parallel either way
+                        let file = store.open_variant(&vname)?;
+                        let loaded = Arc::new(CompressedModel::from_store(model, &file)?);
                         println!(
-                            "cold-started '{vname}' from {} in {:.1} ms ({}-resident, {} weight bytes)",
+                            "cold-started '{vname}' from {} in {:.1} ms ({}-resident, {} weight bytes, \
+                             {} shard(s), {} backing)",
                             store_dir.display(),
                             t0.elapsed().as_secs_f64() * 1e3,
                             loaded.weights_dtype(),
-                            loaded.resident_weight_bytes()
+                            loaded.resident_weight_bytes(),
+                            file.shard_count(),
+                            if file.is_mapped() { "mmap" } else { "buffered" }
                         );
                         loaded
                     } else {

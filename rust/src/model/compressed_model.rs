@@ -60,28 +60,56 @@ impl CompressedModel {
         }
     }
 
-    /// Rebuild from an `HSB1` store file **without recompression** — the
-    /// cold-start path. The store must hold `layer{i}.{wq,wk,wv}` for every
-    /// layer of `base`; layer reports are reconstructed from the stored
-    /// metadata (method, compression-time rel error) plus the decoded
-    /// matrices' own storage accounting.
+    /// Rebuild from a store variant **without recompression** — the
+    /// cold-start path. The variant (monolithic `HSB1` or sharded `HSB2`)
+    /// must hold `layer{i}.{wq,wk,wv}` for every layer of `base`; layer
+    /// reports are reconstructed from the stored metadata (method,
+    /// compression-time rel error) plus the decoded matrices' own storage
+    /// accounting.
     ///
     /// Entries keep their **on-disk dtype**: fp16 factors stay f16-resident
     /// (the batched kernels widen lane-by-lane), so a served model is
     /// resident at the bytes the format pays for — no load-time widening.
-    /// Training a store-loaded model requires
-    /// [`CompressedModel::widen_to_f32`] first.
+    /// With a sharded mmap'd variant the factors aren't even copied: the
+    /// weight buffers borrow the mapping, shared page-cache-cold across
+    /// every serving process on the host. Training a store-loaded model
+    /// requires [`CompressedModel::widen_to_f32`] first.
+    ///
+    /// Layers decode **in parallel** across scoped threads — per-layer
+    /// loads are independent (per-shard for `HSB2`, per-section for
+    /// `HSB1`), so cold-start wall time is the slowest layer, not the sum.
     pub fn from_store(
         base: Arc<Transformer>,
-        store: &crate::store::StoreFile,
+        store: &crate::store::VariantFile,
+    ) -> anyhow::Result<CompressedModel> {
+        CompressedModel::from_store_with_progress(base, store, |_, _| {})
+    }
+
+    /// [`CompressedModel::from_store`] invoking `on_layer(layer, took)`
+    /// as each layer's q/k/v triple finishes decoding — the hook the
+    /// streaming hot-swap path uses to surface per-layer progress while
+    /// the load is still running. Called from the loader's worker
+    /// threads, completion order, not layer order.
+    pub fn from_store_with_progress(
+        base: Arc<Transformer>,
+        store: &crate::store::VariantFile,
+        on_layer: impl Fn(usize, std::time::Duration) + Sync,
     ) -> anyhow::Result<CompressedModel> {
         let d = base.cfg.d_model;
         let dense_bytes = d * d * crate::hss::storage::VALUE_BYTES;
-        let mut qkv = Vec::with_capacity(base.cfg.n_layers);
-        let mut reports = Vec::with_capacity(3 * base.cfg.n_layers);
-        let mut method: Option<Method> = None;
-        for layer in 0..base.cfg.n_layers {
+        let n_layers = base.cfg.n_layers;
+
+        // one independently-loadable unit per layer, claimed off a shared
+        // counter so fast layers don't idle a thread while slow ones run
+        type LayerLoad = (Vec<LayerReport>, Vec<CompressedMatrix>);
+        fn load_layer(
+            store: &crate::store::VariantFile,
+            layer: usize,
+            d: usize,
+            dense_bytes: usize,
+        ) -> anyhow::Result<LayerLoad> {
             let mut triple: Vec<CompressedMatrix> = Vec::with_capacity(3);
+            let mut reports = Vec::with_capacity(3);
             for p in [Proj::Q, Proj::K, Proj::V] {
                 let name = crate::store::entry_name(layer, p);
                 let meta = store
@@ -95,11 +123,9 @@ impl CompressedModel {
                         c.n()
                     );
                 }
-                let m = meta.method_or_default();
-                method.get_or_insert(m);
                 reports.push(LayerReport {
                     name,
-                    method: m,
+                    method: meta.method_or_default(),
                     rel_error: meta.rel_error,
                     params: c.params(),
                     bytes: c.bytes(),
@@ -108,6 +134,59 @@ impl CompressedModel {
                 });
                 triple.push(c);
             }
+            Ok((reports, triple))
+        }
+
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(n_layers.max(1));
+        let slots: Vec<std::sync::Mutex<Option<anyhow::Result<LayerLoad>>>> =
+            (0..n_layers).map(|_| std::sync::Mutex::new(None)).collect();
+        let next = std::sync::atomic::AtomicUsize::new(0);
+        let on_layer = &on_layer;
+        if threads <= 1 {
+            for layer in 0..n_layers {
+                let t0 = std::time::Instant::now();
+                let r = load_layer(store, layer, d, dense_bytes);
+                let ok = r.is_ok();
+                *slots[layer].lock().unwrap() = Some(r);
+                if ok {
+                    on_layer(layer, t0.elapsed());
+                }
+            }
+        } else {
+            std::thread::scope(|s| {
+                for _ in 0..threads {
+                    s.spawn(|| loop {
+                        let layer = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        if layer >= n_layers {
+                            break;
+                        }
+                        let t0 = std::time::Instant::now();
+                        let r = load_layer(store, layer, d, dense_bytes);
+                        let ok = r.is_ok();
+                        *slots[layer].lock().unwrap() = Some(r);
+                        if ok {
+                            on_layer(layer, t0.elapsed());
+                        }
+                    });
+                }
+            });
+        }
+
+        let mut qkv = Vec::with_capacity(n_layers);
+        let mut reports = Vec::with_capacity(3 * n_layers);
+        let mut method: Option<Method> = None;
+        for (layer, slot) in slots.into_iter().enumerate() {
+            let (layer_reports, triple) = slot
+                .into_inner()
+                .unwrap()
+                .unwrap_or_else(|| panic!("layer {layer} never loaded"))?;
+            for r in &layer_reports {
+                method.get_or_insert(r.method);
+            }
+            reports.extend(layer_reports);
             let mut it = triple.into_iter();
             qkv.push([
                 it.next().unwrap(),

@@ -184,7 +184,7 @@ impl PagePool {
     pub fn new(cfg: KvCacheConfig) -> PagePool {
         assert!(cfg.block_size > 0 && cfg.n_pages > 0 && cfg.d_model > 0 && cfg.n_layers > 0);
         PagePool {
-            buf: WeightBuf::F16(vec![0u16; cfg.n_pages * cfg.page_elems()]),
+            buf: WeightBuf::F16(vec![0u16; cfg.n_pages * cfg.page_elems()].into()),
             free: (0..cfg.n_pages as u32).rev().collect(),
             refcount: vec![0; cfg.n_pages],
             published: vec![None; cfg.n_pages],

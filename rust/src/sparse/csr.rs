@@ -46,7 +46,7 @@ impl Csr {
             cols: coo.cols,
             indptr,
             indices,
-            data: WeightBuf::F32(data),
+            data: WeightBuf::F32(data.into()),
         }
     }
 
@@ -365,7 +365,7 @@ mod tests {
         let mut bad = csr.clone();
         let mut vals = bad.data.to_vec();
         vals.pop(); // nnz mismatch
-        bad.data = crate::linalg::WeightBuf::F32(vals);
+        bad.data = crate::linalg::WeightBuf::F32(vals.into());
         assert!(bad.validate().is_err());
     }
 

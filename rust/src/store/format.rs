@@ -135,241 +135,86 @@ pub fn method_from_code(c: u8) -> Option<Method> {
 
 // --------------------------------------------------------------- encoding
 
-/// Append a matrix section; `dtype` is `DT_F32` or `DT_F16`. The source
-/// matrix may be resident at either dtype: f16-resident bits are written
-/// verbatim for a `DT_F16` section (a lossless byte copy — re-saving a
-/// natively-loaded variant never requantizes), and widened exactly for
-/// `DT_F32`.
-pub fn put_matrix(out: &mut Vec<u8>, m: &Matrix, dtype: u8) {
-    use crate::linalg::WeightBuf;
-    put_u32(out, m.rows as u32);
-    put_u32(out, m.cols as u32);
-    out.push(dtype);
-    match (dtype, &m.data) {
-        (DT_F32, WeightBuf::F32(v)) => {
-            for x in v {
-                out.extend_from_slice(&x.to_le_bytes());
-            }
-        }
-        (DT_F32, WeightBuf::F16(bits)) => {
-            for &h in bits {
-                out.extend_from_slice(&fp16::f16_to_f32(h).to_le_bytes());
-            }
-        }
-        (_, WeightBuf::F32(v)) => out.extend_from_slice(&fp16::encode_f16_le(v)),
-        (_, WeightBuf::F16(bits)) => out.extend_from_slice(&fp16::encode_f16_bits_le(bits)),
-    }
+/// Value runs in the aligned (`HSB2` shard) grammar land on this boundary
+/// of the file, so an mmap'd shard can hand `[f32]`/`[u16]` views straight
+/// into the mapping (8 covers both element alignments with headroom for
+/// wider loads).
+pub const VALUE_ALIGN: usize = 8;
+
+/// Encoder context: `base` is the absolute file offset `out[0]` lands at,
+/// which is what lets the aligned grammar compute each value run's pad
+/// against the *file*, not the payload.
+struct Enc<'a> {
+    out: &'a mut Vec<u8>,
+    base: usize,
+    aligned: bool,
 }
 
-/// Append a CSR section (values fp16; f16-resident values are written
-/// verbatim, f32-resident ones are quantized).
-pub fn put_csr(out: &mut Vec<u8>, s: &Csr) {
-    use crate::linalg::WeightBuf;
-    put_u32(out, s.rows as u32);
-    put_u32(out, s.cols as u32);
-    put_u32(out, s.nnz() as u32);
-    for &p in &s.indptr {
-        put_u32(out, p);
-    }
-    for &j in &s.indices {
-        put_u32(out, j);
-    }
-    out.push(DT_F16);
-    match &s.data {
-        WeightBuf::F32(v) => out.extend_from_slice(&fp16::encode_f16_le(v)),
-        WeightBuf::F16(bits) => out.extend_from_slice(&fp16::encode_f16_bits_le(bits)),
-    }
-}
-
-fn put_node(out: &mut Vec<u8>, node: &HssNode) {
-    match node {
-        HssNode::Leaf { d } => {
-            out.push(NODE_LEAF);
-            put_matrix(out, d, DT_F16);
+impl Enc<'_> {
+    /// In the aligned grammar, emit the pad-count byte plus that many
+    /// zeros so the next byte sits on a `VALUE_ALIGN` file boundary; the
+    /// unaligned (`HSB1`) grammar emits nothing.
+    fn pad_values(&mut self) {
+        if !self.aligned {
+            return;
         }
-        HssNode::Branch {
-            n,
-            sparse,
-            perm,
-            u0,
-            r0,
-            u1,
-            r1,
-            c0,
-            c1,
-        } => {
-            out.push(NODE_BRANCH);
-            put_u32(out, *n as u32);
-            put_csr(out, sparse);
-            if perm.is_identity() {
-                out.push(0);
-            } else {
-                out.push(1);
-                for &i in perm.indices() {
-                    put_u32(out, i as u32);
+        let pos = self.base + self.out.len() + 1; // first byte after the pad count
+        let pad = (VALUE_ALIGN - pos % VALUE_ALIGN) % VALUE_ALIGN;
+        self.out.push(pad as u8);
+        let new_len = self.out.len() + pad;
+        self.out.resize(new_len, 0);
+    }
+
+    fn put_matrix(&mut self, m: &Matrix, dtype: u8) {
+        use crate::linalg::WeightBuf;
+        put_u32(self.out, m.rows as u32);
+        put_u32(self.out, m.cols as u32);
+        self.out.push(dtype);
+        self.pad_values();
+        match (dtype, &m.data) {
+            (DT_F32, WeightBuf::F32(v)) => {
+                for x in v.as_slice() {
+                    self.out.extend_from_slice(&x.to_le_bytes());
                 }
             }
-            put_matrix(out, u0, DT_F16);
-            put_matrix(out, r0, DT_F16);
-            put_matrix(out, u1, DT_F16);
-            put_matrix(out, r1, DT_F16);
-            put_node(out, c0);
-            put_node(out, c1);
-        }
-    }
-}
-
-/// Serialize one [`CompressedMatrix`] payload (everything after the entry
-/// header).
-pub fn encode_payload(m: &CompressedMatrix) -> Vec<u8> {
-    let mut out = Vec::with_capacity(m.bytes() + 64);
-    match m {
-        CompressedMatrix::Dense { w } => put_matrix(&mut out, w, DT_F32),
-        CompressedMatrix::LowRank { l, r, sparse } => {
-            put_matrix(&mut out, l, DT_F16);
-            put_matrix(&mut out, r, DT_F16);
-            match sparse {
-                Some(s) => {
-                    out.push(1);
-                    put_csr(&mut out, s);
+            (DT_F32, WeightBuf::F16(bits)) => {
+                for &h in bits.as_slice() {
+                    self.out.extend_from_slice(&fp16::f16_to_f32(h).to_le_bytes());
                 }
-                None => out.push(0),
+            }
+            (_, WeightBuf::F32(v)) => self.out.extend_from_slice(&fp16::encode_f16_le(v)),
+            (_, WeightBuf::F16(bits)) => {
+                self.out.extend_from_slice(&fp16::encode_f16_bits_le(bits))
             }
         }
-        CompressedMatrix::Hss { tree } => put_node(&mut out, tree),
     }
-    out
-}
 
-// --------------------------------------------------------------- decoding
-
-/// Parse a matrix section, widening fp16 payloads to f32 (the
-/// back-compatible load; [`get_matrix_native`] keeps the on-disk dtype).
-pub fn get_matrix(r: &mut ByteReader) -> Result<Matrix> {
-    get_matrix_as(r, false)
-}
-
-/// Parse a matrix section keeping the on-disk dtype: a `DT_F16` payload
-/// becomes an f16-resident matrix — no f32 buffer is ever allocated.
-pub fn get_matrix_native(r: &mut ByteReader) -> Result<Matrix> {
-    get_matrix_as(r, true)
-}
-
-fn get_matrix_as(r: &mut ByteReader, native: bool) -> Result<Matrix> {
-    let rows = r.u32()? as usize;
-    let cols = r.u32()? as usize;
-    let dtype = r.u8()?;
-    let count = rows
-        .checked_mul(cols)
-        .ok_or_else(|| anyhow::anyhow!("matrix {rows}x{cols} overflows"))?;
-    match dtype {
-        DT_F32 => {
-            let data = r
-                .take(count.checked_mul(4).ok_or_else(|| anyhow::anyhow!("matrix too large"))?)?
-                .chunks_exact(4)
-                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                .collect();
-            Ok(Matrix::from_vec(rows, cols, data))
+    fn put_csr(&mut self, s: &Csr) {
+        use crate::linalg::WeightBuf;
+        put_u32(self.out, s.rows as u32);
+        put_u32(self.out, s.cols as u32);
+        put_u32(self.out, s.nnz() as u32);
+        for &p in &s.indptr {
+            put_u32(self.out, p);
         }
-        DT_F16 => {
-            let bytes =
-                r.take(count.checked_mul(2).ok_or_else(|| anyhow::anyhow!("matrix too large"))?)?;
-            if native {
-                Ok(Matrix::from_f16_bits(rows, cols, fp16::decode_f16_bits_le(bytes)))
-            } else {
-                Ok(Matrix::from_vec(rows, cols, fp16::decode_f16_le(bytes)))
+        for &j in &s.indices {
+            put_u32(self.out, j);
+        }
+        self.out.push(DT_F16);
+        self.pad_values();
+        match &s.data {
+            WeightBuf::F32(v) => self.out.extend_from_slice(&fp16::encode_f16_le(v)),
+            WeightBuf::F16(bits) => self.out.extend_from_slice(&fp16::encode_f16_bits_le(bits)),
+        }
+    }
+
+    fn put_node(&mut self, node: &HssNode) {
+        match node {
+            HssNode::Leaf { d } => {
+                self.out.push(NODE_LEAF);
+                self.put_matrix(d, DT_F16);
             }
-        }
-        d => bail!("matrix: unknown dtype code {d}"),
-    }
-}
-
-/// Parse and structurally validate a CSR section (widening load; see
-/// [`get_matrix`] vs [`get_matrix_native`]).
-pub fn get_csr(r: &mut ByteReader) -> Result<Csr> {
-    get_csr_as(r, false)
-}
-
-fn get_csr_as(r: &mut ByteReader, native: bool) -> Result<Csr> {
-    let rows = r.u32()? as usize;
-    let cols = r.u32()? as usize;
-    let nnz = r.u32()? as usize;
-    let indptr_len = rows
-        .checked_add(1)
-        .ok_or_else(|| anyhow::anyhow!("csr rows overflow"))?;
-    let indptr: Vec<u32> = r
-        .take(indptr_len.checked_mul(4).ok_or_else(|| anyhow::anyhow!("csr too large"))?)?
-        .chunks_exact(4)
-        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-        .collect();
-    let indices: Vec<u32> = r
-        .take(nnz.checked_mul(4).ok_or_else(|| anyhow::anyhow!("csr too large"))?)?
-        .chunks_exact(4)
-        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-        .collect();
-    let dtype = r.u8()?;
-    let data = match dtype {
-        DT_F16 if native => {
-            crate::linalg::WeightBuf::F16(fp16::decode_f16_bits_le(r.take(nnz * 2)?))
-        }
-        DT_F16 => crate::linalg::WeightBuf::F32(fp16::decode_f16_le(r.take(nnz * 2)?)),
-        DT_F32 => crate::linalg::WeightBuf::F32(
-            r.take(nnz.checked_mul(4).ok_or_else(|| anyhow::anyhow!("csr too large"))?)?
-                .chunks_exact(4)
-                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                .collect(),
-        ),
-        d => bail!("csr: unknown dtype code {d}"),
-    };
-    let csr = Csr {
-        rows,
-        cols,
-        indptr,
-        indices,
-        data,
-    };
-    csr.validate().map_err(anyhow::Error::msg)?;
-    Ok(csr)
-}
-
-fn get_perm(r: &mut ByteReader, n: usize) -> Result<Permutation> {
-    let raw = r.take(n.checked_mul(4).ok_or_else(|| anyhow::anyhow!("perm too large"))?)?;
-    let mut p = Vec::with_capacity(n);
-    let mut seen = vec![false; n];
-    for c in raw.chunks_exact(4) {
-        let i = u32::from_le_bytes([c[0], c[1], c[2], c[3]]) as usize;
-        if i >= n || seen[i] {
-            bail!("permutation entry {i} invalid for n={n}");
-        }
-        seen[i] = true;
-        p.push(i);
-    }
-    Ok(Permutation::from_vec(p))
-}
-
-fn get_node(r: &mut ByteReader, depth: usize, native: bool) -> Result<HssNode> {
-    if depth > MAX_NODE_DEPTH {
-        bail!("hss tree deeper than {MAX_NODE_DEPTH} (corrupt file)");
-    }
-    match r.u8()? {
-        NODE_LEAF => Ok(HssNode::Leaf {
-            d: get_matrix_as(r, native)?,
-        }),
-        NODE_BRANCH => {
-            let n = r.u32()? as usize;
-            let sparse = get_csr_as(r, native)?;
-            let perm = match r.u8()? {
-                0 => Permutation::identity(n),
-                1 => get_perm(r, n)?,
-                p => bail!("unknown permutation tag {p}"),
-            };
-            let u0 = get_matrix_as(r, native)?;
-            let r0 = get_matrix_as(r, native)?;
-            let u1 = get_matrix_as(r, native)?;
-            let r1 = get_matrix_as(r, native)?;
-            let c0 = Box::new(get_node(r, depth + 1, native)?);
-            let c1 = Box::new(get_node(r, depth + 1, native)?);
-            Ok(HssNode::Branch {
+            HssNode::Branch {
                 n,
                 sparse,
                 perm,
@@ -379,81 +224,434 @@ fn get_node(r: &mut ByteReader, depth: usize, native: bool) -> Result<HssNode> {
                 r1,
                 c0,
                 c1,
-            })
+            } => {
+                self.out.push(NODE_BRANCH);
+                put_u32(self.out, *n as u32);
+                self.put_csr(sparse);
+                if perm.is_identity() {
+                    self.out.push(0);
+                } else {
+                    self.out.push(1);
+                    for &i in perm.indices() {
+                        put_u32(self.out, i as u32);
+                    }
+                }
+                self.put_matrix(u0, DT_F16);
+                self.put_matrix(r0, DT_F16);
+                self.put_matrix(u1, DT_F16);
+                self.put_matrix(r1, DT_F16);
+                self.put_node(c0);
+                self.put_node(c1);
+            }
         }
-        t => bail!("unknown hss node tag {t}"),
     }
+
+    fn put_payload(&mut self, m: &CompressedMatrix) {
+        match m {
+            CompressedMatrix::Dense { w } => self.put_matrix(w, DT_F32),
+            CompressedMatrix::LowRank { l, r, sparse } => {
+                self.put_matrix(l, DT_F16);
+                self.put_matrix(r, DT_F16);
+                match sparse {
+                    Some(s) => {
+                        self.out.push(1);
+                        self.put_csr(s);
+                    }
+                    None => self.out.push(0),
+                }
+            }
+            CompressedMatrix::Hss { tree } => self.put_node(tree),
+        }
+    }
+}
+
+/// Append a matrix section; `dtype` is `DT_F32` or `DT_F16`. The source
+/// matrix may be resident at either dtype: f16-resident bits are written
+/// verbatim for a `DT_F16` section (a lossless byte copy — re-saving a
+/// natively-loaded variant never requantizes), and widened exactly for
+/// `DT_F32`.
+pub fn put_matrix(out: &mut Vec<u8>, m: &Matrix, dtype: u8) {
+    Enc {
+        out,
+        base: 0,
+        aligned: false,
+    }
+    .put_matrix(m, dtype);
+}
+
+/// Append a CSR section (values fp16; f16-resident values are written
+/// verbatim, f32-resident ones are quantized).
+pub fn put_csr(out: &mut Vec<u8>, s: &Csr) {
+    Enc {
+        out,
+        base: 0,
+        aligned: false,
+    }
+    .put_csr(s);
+}
+
+/// Serialize one [`CompressedMatrix`] payload (everything after the entry
+/// header) in the unaligned `HSB1` grammar.
+pub fn encode_payload(m: &CompressedMatrix) -> Vec<u8> {
+    let mut out = Vec::with_capacity(m.bytes() + 64);
+    Enc {
+        out: &mut out,
+        base: 0,
+        aligned: false,
+    }
+    .put_payload(m);
+    out
+}
+
+/// Serialize one payload in the aligned `HSB2` grammar: `file_base` is the
+/// absolute file offset the payload's first byte will be written at, and
+/// every value run is preceded by a pad byte + zeros bringing it to a
+/// [`VALUE_ALIGN`] boundary of the file — the property that makes the
+/// mmap'd reader's zero-copy borrows land aligned.
+pub fn encode_payload_aligned(m: &CompressedMatrix, file_base: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity(m.bytes() + 64);
+    Enc {
+        out: &mut out,
+        base: file_base,
+        aligned: true,
+    }
+    .put_payload(m);
+    out
+}
+
+// --------------------------------------------------------------- decoding
+
+/// The mapping a payload is being decoded out of: the mmap plus the
+/// absolute byte offset of the payload's first byte within it. Present
+/// only on the zero-copy path; `None` decodes by copying (the buffered
+/// reader, or `HISOLO_MMAP=off`).
+pub type PayloadMap = Option<(std::sync::Arc<crate::util::mmap::Mmap>, usize)>;
+
+/// Decoder context: the payload cursor plus everything the zero-copy path
+/// needs — whether the aligned (`HSB2`) grammar's pad bytes are present,
+/// and the mapping backing the payload (if any) so value runs can be
+/// handed out as [`crate::linalg::Storage::Mapped`] borrows instead of
+/// copied. Borrowing is strictly opportunistic: any failed precondition
+/// (no map, misalignment in an unaligned `HSB1` file, big-endian host)
+/// falls back to the owned copy, decoding the same bytes to the same
+/// values.
+struct Dec<'a> {
+    r: ByteReader<'a>,
+    native: bool,
+    aligned: bool,
+    map: PayloadMap,
+}
+
+impl<'a> Dec<'a> {
+    /// Consume the aligned grammar's pad-count byte + zeros (no-op for the
+    /// unaligned grammar).
+    fn skip_pad(&mut self) -> Result<()> {
+        if self.aligned {
+            let pad = self.r.u8()? as usize;
+            if pad >= VALUE_ALIGN {
+                bail!("value-run pad {pad} out of range");
+            }
+            self.r.take(pad)?;
+        }
+        Ok(())
+    }
+
+    /// Try to borrow `count` elements of `T` starting at the cursor from
+    /// the backing mapping.
+    fn try_borrow<T: crate::linalg::weightbuf::MapElem>(
+        &self,
+        count: usize,
+    ) -> Option<crate::linalg::MapRange<T>> {
+        let (map, base) = self.map.as_ref()?;
+        crate::linalg::MapRange::new(map.clone(), base + self.r.pos(), count)
+    }
+
+    /// An f32 value run: a zero-copy borrow on the native mapped path,
+    /// an owned decode otherwise.
+    fn values_f32(&mut self, count: usize) -> Result<crate::linalg::Storage<f32>> {
+        self.skip_pad()?;
+        let nbytes = count
+            .checked_mul(4)
+            .ok_or_else(|| anyhow::anyhow!("value run too large"))?;
+        let borrowed = if self.native { self.try_borrow::<f32>(count) } else { None };
+        let bytes = self.r.take(nbytes)?;
+        if let Some(mr) = borrowed {
+            return Ok(crate::linalg::Storage::Mapped(mr));
+        }
+        Ok(crate::linalg::Storage::Owned(
+            bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect(),
+        ))
+    }
+
+    /// An f16 value run kept at its on-disk dtype (native load).
+    fn values_f16_native(&mut self, count: usize) -> Result<crate::linalg::Storage<u16>> {
+        self.skip_pad()?;
+        let nbytes = count
+            .checked_mul(2)
+            .ok_or_else(|| anyhow::anyhow!("value run too large"))?;
+        let borrowed = self.try_borrow::<u16>(count);
+        let bytes = self.r.take(nbytes)?;
+        if let Some(mr) = borrowed {
+            return Ok(crate::linalg::Storage::Mapped(mr));
+        }
+        Ok(crate::linalg::Storage::Owned(fp16::decode_f16_bits_le(bytes)))
+    }
+
+    /// An f16 value run widened to f32 (the back-compatible load; always
+    /// owned — the widened values don't exist in the file).
+    fn values_f16_widened(&mut self, count: usize) -> Result<Vec<f32>> {
+        self.skip_pad()?;
+        let nbytes = count
+            .checked_mul(2)
+            .ok_or_else(|| anyhow::anyhow!("value run too large"))?;
+        Ok(fp16::decode_f16_le(self.r.take(nbytes)?))
+    }
+
+    fn get_matrix(&mut self) -> Result<Matrix> {
+        use crate::linalg::WeightBuf;
+        let rows = self.r.u32()? as usize;
+        let cols = self.r.u32()? as usize;
+        let dtype = self.r.u8()?;
+        let count = rows
+            .checked_mul(cols)
+            .ok_or_else(|| anyhow::anyhow!("matrix {rows}x{cols} overflows"))?;
+        let data = match dtype {
+            DT_F32 => WeightBuf::F32(self.values_f32(count)?),
+            DT_F16 if self.native => WeightBuf::F16(self.values_f16_native(count)?),
+            DT_F16 => WeightBuf::F32(self.values_f16_widened(count)?.into()),
+            d => bail!("matrix: unknown dtype code {d}"),
+        };
+        Ok(Matrix { rows, cols, data })
+    }
+
+    fn get_csr(&mut self) -> Result<Csr> {
+        use crate::linalg::WeightBuf;
+        let rows = self.r.u32()? as usize;
+        let cols = self.r.u32()? as usize;
+        let nnz = self.r.u32()? as usize;
+        let indptr_len = rows
+            .checked_add(1)
+            .ok_or_else(|| anyhow::anyhow!("csr rows overflow"))?;
+        let indptr: Vec<u32> = self
+            .r
+            .take(indptr_len.checked_mul(4).ok_or_else(|| anyhow::anyhow!("csr too large"))?)?
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let indices: Vec<u32> = self
+            .r
+            .take(nnz.checked_mul(4).ok_or_else(|| anyhow::anyhow!("csr too large"))?)?
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let dtype = self.r.u8()?;
+        let data = match dtype {
+            DT_F16 if self.native => WeightBuf::F16(self.values_f16_native(nnz)?),
+            DT_F16 => WeightBuf::F32(self.values_f16_widened(nnz)?.into()),
+            DT_F32 => WeightBuf::F32(self.values_f32(nnz)?),
+            d => bail!("csr: unknown dtype code {d}"),
+        };
+        let csr = Csr {
+            rows,
+            cols,
+            indptr,
+            indices,
+            data,
+        };
+        csr.validate().map_err(anyhow::Error::msg)?;
+        Ok(csr)
+    }
+
+    fn get_perm(&mut self, n: usize) -> Result<Permutation> {
+        let raw = self
+            .r
+            .take(n.checked_mul(4).ok_or_else(|| anyhow::anyhow!("perm too large"))?)?;
+        let mut p = Vec::with_capacity(n);
+        let mut seen = vec![false; n];
+        for c in raw.chunks_exact(4) {
+            let i = u32::from_le_bytes([c[0], c[1], c[2], c[3]]) as usize;
+            if i >= n || seen[i] {
+                bail!("permutation entry {i} invalid for n={n}");
+            }
+            seen[i] = true;
+            p.push(i);
+        }
+        Ok(Permutation::from_vec(p))
+    }
+
+    fn get_node(&mut self, depth: usize) -> Result<HssNode> {
+        if depth > MAX_NODE_DEPTH {
+            bail!("hss tree deeper than {MAX_NODE_DEPTH} (corrupt file)");
+        }
+        match self.r.u8()? {
+            NODE_LEAF => Ok(HssNode::Leaf {
+                d: self.get_matrix()?,
+            }),
+            NODE_BRANCH => {
+                let n = self.r.u32()? as usize;
+                let sparse = self.get_csr()?;
+                let perm = match self.r.u8()? {
+                    0 => Permutation::identity(n),
+                    1 => self.get_perm(n)?,
+                    p => bail!("unknown permutation tag {p}"),
+                };
+                let u0 = self.get_matrix()?;
+                let r0 = self.get_matrix()?;
+                let u1 = self.get_matrix()?;
+                let r1 = self.get_matrix()?;
+                let c0 = Box::new(self.get_node(depth + 1)?);
+                let c1 = Box::new(self.get_node(depth + 1)?);
+                Ok(HssNode::Branch {
+                    n,
+                    sparse,
+                    perm,
+                    u0,
+                    r0,
+                    u1,
+                    r1,
+                    c0,
+                    c1,
+                })
+            }
+            t => bail!("unknown hss node tag {t}"),
+        }
+    }
+
+    fn decode(&mut self, kind: u8) -> Result<CompressedMatrix> {
+        let m = match kind {
+            KIND_DENSE => {
+                let w = self.get_matrix()?;
+                if w.rows != w.cols {
+                    bail!("dense entry not square: {}x{}", w.rows, w.cols);
+                }
+                CompressedMatrix::Dense { w }
+            }
+            KIND_LOWRANK => {
+                let l = self.get_matrix()?;
+                let rm = self.get_matrix()?;
+                if l.cols != rm.rows {
+                    bail!("lowrank: l is {}x{} but r is {}x{}", l.rows, l.cols, rm.rows, rm.cols);
+                }
+                // the runtime represents square matrices (n() reads l.rows and
+                // matvec feeds length-n inputs to r): enforce it here so a
+                // crc-valid but malformed entry can't panic a worker thread
+                if l.rows != rm.cols {
+                    bail!(
+                        "lowrank entry not square: l·r is {}x{}",
+                        l.rows,
+                        rm.cols
+                    );
+                }
+                let sparse = match self.r.u8()? {
+                    0 => None,
+                    1 => {
+                        let s = self.get_csr()?;
+                        if s.rows != l.rows || s.cols != rm.cols {
+                            bail!(
+                                "lowrank: spike matrix {}x{} vs factors {}x{}",
+                                s.rows,
+                                s.cols,
+                                l.rows,
+                                rm.cols
+                            );
+                        }
+                        Some(s)
+                    }
+                    t => bail!("unknown sparse tag {t}"),
+                };
+                CompressedMatrix::LowRank { l, r: rm, sparse }
+            }
+            KIND_HSS => {
+                let tree = self.get_node(0)?;
+                tree.validate().map_err(anyhow::Error::msg)?;
+                CompressedMatrix::Hss { tree }
+            }
+            k => bail!("unknown entry kind {k}"),
+        };
+        if self.r.remaining() != 0 {
+            bail!("{} trailing bytes after payload", self.r.remaining());
+        }
+        Ok(m)
+    }
+}
+
+/// Parse a matrix section, widening fp16 payloads to f32 (the
+/// back-compatible load; [`get_matrix_native`] keeps the on-disk dtype).
+pub fn get_matrix(r: &mut ByteReader) -> Result<Matrix> {
+    get_matrix_standalone(r, false)
+}
+
+/// Parse a matrix section keeping the on-disk dtype: a `DT_F16` payload
+/// becomes an f16-resident matrix — no f32 buffer is ever allocated.
+pub fn get_matrix_native(r: &mut ByteReader) -> Result<Matrix> {
+    get_matrix_standalone(r, true)
+}
+
+fn get_matrix_standalone(r: &mut ByteReader, native: bool) -> Result<Matrix> {
+    // reconstruct a Dec over the reader's remaining bytes, then advance
+    // the caller's cursor by what was consumed
+    let rest = r.take(r.remaining())?;
+    let mut d = Dec {
+        r: ByteReader::new(rest),
+        native,
+        aligned: false,
+        map: None,
+    };
+    let m = d.get_matrix();
+    // rewind the over-take: hand back the unconsumed suffix
+    *r = ByteReader::new(&rest[d.r.pos()..]);
+    m
+}
+
+/// Parse and structurally validate a CSR section (widening load; see
+/// [`get_matrix`] vs [`get_matrix_native`]).
+pub fn get_csr(r: &mut ByteReader) -> Result<Csr> {
+    let rest = r.take(r.remaining())?;
+    let mut d = Dec {
+        r: ByteReader::new(rest),
+        native: false,
+        aligned: false,
+        map: None,
+    };
+    let c = d.get_csr();
+    *r = ByteReader::new(&rest[d.r.pos()..]);
+    c
 }
 
 /// Deserialize one payload back into a [`CompressedMatrix`], widening
 /// fp16 sections to f32 (the back-compatible load).
 pub fn decode_payload(kind: u8, payload: &[u8]) -> Result<CompressedMatrix> {
-    decode_payload_as(kind, payload, false)
+    decode_payload_ext(kind, payload, false, false, None)
 }
 
 /// Deserialize one payload keeping every section's on-disk dtype: fp16
 /// factors come back f16-resident, so the decoded matrix occupies the
 /// bytes the format pays for — the serving load path.
 pub fn decode_payload_native(kind: u8, payload: &[u8]) -> Result<CompressedMatrix> {
-    decode_payload_as(kind, payload, true)
+    decode_payload_ext(kind, payload, true, false, None)
 }
 
-fn decode_payload_as(kind: u8, payload: &[u8], native: bool) -> Result<CompressedMatrix> {
-    let mut r = ByteReader::new(payload);
-    let m = match kind {
-        KIND_DENSE => {
-            let w = get_matrix_as(&mut r, native)?;
-            if w.rows != w.cols {
-                bail!("dense entry not square: {}x{}", w.rows, w.cols);
-            }
-            CompressedMatrix::Dense { w }
-        }
-        KIND_LOWRANK => {
-            let l = get_matrix_as(&mut r, native)?;
-            let rm = get_matrix_as(&mut r, native)?;
-            if l.cols != rm.rows {
-                bail!("lowrank: l is {}x{} but r is {}x{}", l.rows, l.cols, rm.rows, rm.cols);
-            }
-            // the runtime represents square matrices (n() reads l.rows and
-            // matvec feeds length-n inputs to r): enforce it here so a
-            // crc-valid but malformed entry can't panic a worker thread
-            if l.rows != rm.cols {
-                bail!(
-                    "lowrank entry not square: l·r is {}x{}",
-                    l.rows,
-                    rm.cols
-                );
-            }
-            let sparse = match r.u8()? {
-                0 => None,
-                1 => {
-                    let s = get_csr_as(&mut r, native)?;
-                    if s.rows != l.rows || s.cols != rm.cols {
-                        bail!(
-                            "lowrank: spike matrix {}x{} vs factors {}x{}",
-                            s.rows,
-                            s.cols,
-                            l.rows,
-                            rm.cols
-                        );
-                    }
-                    Some(s)
-                }
-                t => bail!("unknown sparse tag {t}"),
-            };
-            CompressedMatrix::LowRank { l, r: rm, sparse }
-        }
-        KIND_HSS => {
-            let tree = get_node(&mut r, 0, native)?;
-            tree.validate().map_err(anyhow::Error::msg)?;
-            CompressedMatrix::Hss { tree }
-        }
-        k => bail!("unknown entry kind {k}"),
-    };
-    if r.remaining() != 0 {
-        bail!("{} trailing bytes after payload", r.remaining());
+/// The full-control decode: `native` keeps on-disk dtypes, `aligned`
+/// selects the `HSB2` pad-byte grammar, and `map` (mmap + absolute offset
+/// of `payload[0]`) enables zero-copy value-run borrows. `payload` must be
+/// the same bytes the mapping holds at that offset.
+pub fn decode_payload_ext(
+    kind: u8,
+    payload: &[u8],
+    native: bool,
+    aligned: bool,
+    map: PayloadMap,
+) -> Result<CompressedMatrix> {
+    Dec {
+        r: ByteReader::new(payload),
+        native,
+        aligned,
+        map,
     }
-    Ok(m)
+    .decode(kind)
 }
 
 /// Test-only: rewrite a v2 `HSB1` image as version 1 (drop the save-seq

@@ -69,13 +69,82 @@
 //! sections without decoding them. The binary primitives (magic,
 //! length-prefixed strings, dtype tags, crc32) are shared with the `HWT1`
 //! weight container via [`crate::util::binio`].
+//!
+//! ## `HSB2` sharded format spec (version 1)
+//!
+//! A sharded variant is a directory `<variant>.hsb2/` holding one shard
+//! file per layer plus `manifest.hsb2`, written shards-first /
+//! manifest-last and deleted manifest-first (so an on-disk manifest always
+//! references complete shards). The point of the split is *zero-copy
+//! serving*: shard readers mmap the file, and the decoder hands out
+//! [`crate::linalg::WeightBuf`] values whose f16/f32 runs **borrow the
+//! mapping** — N serving processes on one host share a single page-cache
+//! copy of the factors, cold-start skips the read+copy entirely, and the
+//! kernels see the same `&[u16]`/`&[f32]` slices they always did (0 ULP
+//! vs the buffered path). `HISOLO_MMAP=off|0|buffered` forces the copying
+//! reader; mmap failure falls back with a once-per-process warning.
+//!
+//! Shard file (`<prefix>.shard`, one per entry-name prefix, i.e. one per
+//! layer for `layer{i}.w{q,k,v}` entries):
+//!
+//! ```text
+//! header:  "HSB2" · u16 version · u16 flags · u32 entry_count
+//! entry:   u32 name_len · name-bytes · u8 kind · u8 method
+//!          · f64 rel_error · u64 payload_len · payload (aligned grammar)
+//! footer:  u32 crc32 over everything above
+//! ```
+//!
+//! The payload grammar is `HSB1`'s with one change: every `values` run is
+//! preceded by `u8 pad_len · pad_len zero bytes` bringing the run's first
+//! byte to a [`format::VALUE_ALIGN`]-byte *file* offset, so a borrow from
+//! the mapping is always correctly aligned for `[u16]`/`[f32]`.
+//!
+//! Manifest (`manifest.hsb2`):
+//!
+//! ```text
+//! header:  "HSBM" · u16 version · u16 flags · u64 save_seq
+//!          · u32 shard_count
+//! shard:   u32 path_len · rel-path-bytes · u64 file_bytes · u32 file_crc
+//!          · u32 entry_count
+//!          entry: u32 name_len · name-bytes · u8 kind · u8 method
+//!                 · f64 rel_error · u64 payload_off · u64 payload_len
+//!                 · u8 dtype
+//! footer:  u32 crc32
+//! ```
+//!
+//! `file_crc` duplicates the shard's own footer crc; `payload_off` is the
+//! payload's absolute offset within its shard file. [`ShardedVariant`]
+//! validates existence + exact length of every shard at open (errors name
+//! the offending shard), crc-verifies each shard lazily on first touch —
+//! so a bit flip in one layer's shard fails only that layer's loads — and
+//! its independent per-shard opens are what `CompressedModel::from_store`
+//! fans out across threads.
 
 pub mod format;
 pub mod model_store;
 pub mod reader;
+pub mod sharded;
 pub mod writer;
 
 pub use format::EntryMeta;
-pub use model_store::{entry_name, ModelStore};
+pub use model_store::{entry_name, ModelStore, VariantFile};
 pub use reader::StoreFile;
+pub use sharded::{write_sharded, ShardEntry, ShardedVariant};
 pub use writer::StoreWriter;
+
+/// Reader backing policy: `Auto` mmaps when the platform and
+/// `HISOLO_MMAP` allow it (falling back to a buffered read otherwise),
+/// `Buffered` always reads into an owned heap buffer. `Buffered` exists
+/// so one process can hold both backings of the same file and compare
+/// them bit-for-bit (see `benches/store_load.rs`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MmapMode {
+    Auto,
+    Buffered,
+}
+
+impl MmapMode {
+    pub(crate) fn wants_mmap(self) -> bool {
+        matches!(self, MmapMode::Auto)
+    }
+}

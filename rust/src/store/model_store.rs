@@ -1,19 +1,96 @@
-//! Variant-keyed registry over `HSB1` files — the coordinator's view of the
-//! store.
+//! Variant-keyed registry over `HSB1` files and `HSB2` shard directories —
+//! the coordinator's view of the store.
 //!
-//! One file per variant (`<dir>/<variant>.hsb1`), each holding every
-//! compressed q/k/v projection as `layer{i}.{wq,wk,wv}` entries. Lookups
-//! are keyed by `(layer, variant)`; whole-model loads rebuild a
-//! [`CompressedModel`] without recompression, which is what makes cold
-//! starts and live hot-swaps (`Coordinator::swap_variant`) cheap.
+//! A variant is either one file (`<dir>/<variant>.hsb1`) or one sharded
+//! directory (`<dir>/<variant>.hsb2/`, see [`crate::store::sharded`]),
+//! each holding every compressed q/k/v projection as
+//! `layer{i}.{wq,wk,wv}` entries. Lookups are keyed by
+//! `(layer, variant)`; [`ModelStore::open_variant`] resolves either form
+//! into a [`VariantFile`] (preferring the newer save-seq when both
+//! exist), and whole-model loads rebuild a [`CompressedModel`] without
+//! recompression — which is what makes cold starts and live hot-swaps
+//! (`Coordinator::swap_variant`) cheap.
 
 use crate::compress::CompressedMatrix;
 use crate::model::transformer::Proj;
 use crate::model::{CompressedModel, Transformer};
-use crate::store::StoreFile;
+use crate::store::format::EntryMeta;
+use crate::store::sharded::{self, ShardedVariant};
+use crate::store::{MmapMode, StoreFile};
 use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
+
+/// An opened variant, whichever on-disk form it takes: a monolithic
+/// `HSB1` file or a sharded `HSB2` directory. One decode surface
+/// (`meta`/`load`/`load_native`) over both, so
+/// [`CompressedModel::from_store`] and the coordinator never branch on
+/// the storage layout.
+pub enum VariantFile {
+    Single(StoreFile),
+    Sharded(ShardedVariant),
+}
+
+impl VariantFile {
+    pub fn names(&self) -> Vec<&str> {
+        match self {
+            VariantFile::Single(f) => f.names(),
+            VariantFile::Sharded(v) => v.names(),
+        }
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&EntryMeta> {
+        match self {
+            VariantFile::Single(f) => f.meta(name),
+            VariantFile::Sharded(v) => v.meta(name),
+        }
+    }
+
+    /// Decode one entry widening f16 to f32 (training/compat path).
+    pub fn load(&self, name: &str) -> Result<CompressedMatrix> {
+        match self {
+            VariantFile::Single(f) => f.load(name),
+            VariantFile::Sharded(v) => v.load(name),
+        }
+    }
+
+    /// Decode one entry at its on-disk dtype — zero-copy out of the
+    /// mapping when the backing is mmap'd.
+    pub fn load_native(&self, name: &str) -> Result<CompressedMatrix> {
+        match self {
+            VariantFile::Single(f) => f.load_native(name),
+            VariantFile::Sharded(v) => v.load_native(name),
+        }
+    }
+
+    pub fn save_seq(&self) -> u64 {
+        match self {
+            VariantFile::Single(f) => f.save_seq(),
+            VariantFile::Sharded(v) => v.save_seq(),
+        }
+    }
+
+    /// Whether payload bytes are served out of an mmap (vs owned heap
+    /// copies).
+    pub fn is_mapped(&self) -> bool {
+        match self {
+            VariantFile::Single(f) => f.is_mapped(),
+            VariantFile::Sharded(v) => v.is_mapped(),
+        }
+    }
+
+    /// Number of independent shard files (1 for a monolithic variant).
+    pub fn shard_count(&self) -> usize {
+        match self {
+            VariantFile::Single(_) => 1,
+            VariantFile::Sharded(v) => v.shard_count(),
+        }
+    }
+
+    pub fn is_sharded(&self) -> bool {
+        matches!(self, VariantFile::Sharded(_))
+    }
+}
 
 /// Canonical entry name for one projection: `layer{layer}.{wq|wk|wv}`.
 pub fn entry_name(layer: usize, proj: Proj) -> String {
@@ -40,24 +117,34 @@ impl ModelStore {
         &self.dir
     }
 
-    /// File backing one variant.
+    /// File backing one variant's monolithic (`HSB1`) form.
     pub fn variant_path(&self, variant: &str) -> PathBuf {
         self.dir.join(format!("{variant}.hsb1"))
     }
 
-    pub fn has_variant(&self, variant: &str) -> bool {
-        self.variant_path(variant).exists()
+    /// Directory backing one variant's sharded (`HSB2`) form.
+    pub fn sharded_path(&self, variant: &str) -> PathBuf {
+        self.dir.join(format!("{variant}.{}", sharded::SHARDED_EXT))
     }
 
-    /// Variant names present on disk (sorted).
+    pub fn has_variant(&self, variant: &str) -> bool {
+        self.variant_path(variant).exists() || self.sharded_path(variant).is_dir()
+    }
+
+    /// Variant names present on disk, either form, deduplicated (sorted).
     pub fn variants(&self) -> Vec<String> {
-        let mut out = Vec::new();
+        let mut out: Vec<String> = Vec::new();
         if let Ok(rd) = std::fs::read_dir(&self.dir) {
             for e in rd.flatten() {
                 let path = e.path();
-                if path.extension().and_then(|x| x.to_str()) == Some("hsb1") {
+                let ext = path.extension().and_then(|x| x.to_str());
+                let single = ext == Some("hsb1") && path.is_file();
+                let is_sharded = ext == Some(sharded::SHARDED_EXT) && path.is_dir();
+                if single || is_sharded {
                     if let Some(stem) = path.file_stem().and_then(|s| s.to_str()) {
-                        out.push(stem.to_string());
+                        if !out.iter().any(|v| v == stem) {
+                            out.push(stem.to_string());
+                        }
                     }
                 }
             }
@@ -79,11 +166,41 @@ impl ModelStore {
         Ok(path)
     }
 
-    /// Save-sequence of one variant (0 for pre-v2 files; None if the file
-    /// is absent or its header unreadable). A header-only peek — no full
-    /// read or crc pass — so `save_model`/`prune` stay O(1) per variant.
+    /// [`ModelStore::save_model`] in the sharded `HSB2` form: one shard
+    /// per layer under `<variant>.hsb2/`, aligned payloads for zero-copy
+    /// mmap serving, shards written before the manifest. Takes the same
+    /// fresh save-sequence number a monolithic save would, so the two
+    /// forms order interchangeably under `prune` and `open_variant`.
+    pub fn save_model_sharded(&self, variant: &str, model: &CompressedModel) -> Result<PathBuf> {
+        std::fs::create_dir_all(&self.dir)
+            .with_context(|| format!("creating store dir {}", self.dir.display()))?;
+        let dir = self.sharded_path(variant);
+        let seq = self.max_save_seq().saturating_add(1);
+        let entries: Vec<sharded::ShardEntry> = model
+            .reports
+            .iter()
+            .map(|r| sharded::ShardEntry {
+                name: r.name.clone(),
+                method: Some(r.method),
+                rel_error: r.rel_error,
+                matrix: &r.compressed,
+            })
+            .collect();
+        sharded::write_sharded(&dir, &entries, seq)?;
+        Ok(dir)
+    }
+
+    /// Save-sequence of one variant (0 for pre-v2 files; None if neither
+    /// form is present or its header unreadable). A header-only peek —
+    /// no full read or crc pass — so `save_model`/`prune` stay O(1) per
+    /// variant. When both forms exist, the newer one's seq wins.
     pub fn variant_save_seq(&self, variant: &str) -> Option<u64> {
-        crate::store::reader::peek_save_seq(&self.variant_path(variant))
+        let single = crate::store::reader::peek_save_seq(&self.variant_path(variant));
+        let shard = sharded::peek_sharded_save_seq(&self.sharded_path(variant));
+        match (single, shard) {
+            (Some(a), Some(b)) => Some(a.max(b)),
+            (a, b) => a.or(b),
+        }
     }
 
     /// Highest save-sequence present in the store (0 when empty).
@@ -95,10 +212,39 @@ impl ModelStore {
             .unwrap_or(0)
     }
 
-    /// Open one variant's store file.
-    pub fn open_variant(&self, variant: &str) -> Result<StoreFile> {
-        StoreFile::open(&self.variant_path(variant))
-            .with_context(|| format!("variant '{variant}'"))
+    /// Open one variant, resolving whichever on-disk form it takes. When
+    /// both a monolithic file and a sharded directory exist under the
+    /// same name, the one with the newer save-seq wins (tie → sharded,
+    /// the zero-copy form).
+    pub fn open_variant(&self, variant: &str) -> Result<VariantFile> {
+        self.open_variant_with(variant, MmapMode::Auto)
+    }
+
+    /// [`ModelStore::open_variant`] with an explicit mmap policy.
+    pub fn open_variant_with(&self, variant: &str, mode: MmapMode) -> Result<VariantFile> {
+        let single_path = self.variant_path(variant);
+        let sharded_dir = self.sharded_path(variant);
+        let single_seq = crate::store::reader::peek_save_seq(&single_path);
+        let sharded_seq = sharded::peek_sharded_save_seq(&sharded_dir);
+        let use_sharded = match (single_seq, sharded_seq) {
+            (Some(a), Some(b)) => b >= a,
+            (None, Some(_)) => true,
+            (Some(_), None) => false,
+            // neither header peeks clean: fall through to whichever open
+            // path exists so the error names the real problem
+            (None, None) => sharded_dir.is_dir() || !single_path.exists(),
+        };
+        if use_sharded {
+            Ok(VariantFile::Sharded(
+                ShardedVariant::open_with(&sharded_dir, mode)
+                    .with_context(|| format!("variant '{variant}'"))?,
+            ))
+        } else {
+            Ok(VariantFile::Single(
+                StoreFile::open_with(&single_path, mode)
+                    .with_context(|| format!("variant '{variant}'"))?,
+            ))
+        }
     }
 
     /// Load a single projection matrix, keyed by `(layer, variant)`.
@@ -112,18 +258,27 @@ impl ModelStore {
     }
 
     /// Cold-start a full [`CompressedModel`] for `base` from disk — no
-    /// recompression, workspaces pre-sized by the reader.
+    /// recompression, layers decoded in parallel, zero-copy out of the
+    /// page cache when the variant is sharded + mmap'd.
     pub fn load_model(&self, variant: &str, base: Arc<Transformer>) -> Result<CompressedModel> {
         let file = self.open_variant(variant)?;
         CompressedModel::from_store(base, &file)
             .with_context(|| format!("building model from variant '{variant}'"))
     }
 
-    /// On-disk bytes of one variant (0 if absent).
+    /// On-disk bytes of one variant, summed over both forms (0 if
+    /// absent).
     pub fn variant_bytes(&self, variant: &str) -> u64 {
-        std::fs::metadata(self.variant_path(variant))
+        let single = std::fs::metadata(self.variant_path(variant))
             .map(|m| m.len())
-            .unwrap_or(0)
+            .unwrap_or(0);
+        let mut shard = 0u64;
+        if let Ok(rd) = std::fs::read_dir(self.sharded_path(variant)) {
+            for e in rd.flatten() {
+                shard += e.metadata().map(|m| m.len()).unwrap_or(0);
+            }
+        }
+        single + shard
     }
 
     /// Retention: keep the newest `keep_last_n` variants and delete the
@@ -137,9 +292,11 @@ impl ModelStore {
     pub fn prune(&self, keep_last_n: usize, active: Option<&str>) -> Result<Vec<String>> {
         let mut entries: Vec<(u64, std::time::SystemTime, String)> = Vec::new();
         for name in self.variants() {
-            let meta = std::fs::metadata(self.variant_path(&name))
-                .with_context(|| format!("stat variant '{name}'"))?;
-            let mtime = meta.modified().unwrap_or(std::time::SystemTime::UNIX_EPOCH);
+            let mtime = std::fs::metadata(self.variant_path(&name))
+                .or_else(|_| std::fs::metadata(self.sharded_path(&name)))
+                .with_context(|| format!("stat variant '{name}'"))?
+                .modified()
+                .unwrap_or(std::time::SystemTime::UNIX_EPOCH);
             // unreadable/corrupt files sort oldest (seq 0) so GC can
             // reclaim them before healthy variants
             let seq = self.variant_save_seq(&name).unwrap_or(0);
@@ -157,8 +314,19 @@ impl ModelStore {
                 kept += 1;
                 continue;
             }
-            std::fs::remove_file(self.variant_path(&name))
-                .with_context(|| format!("deleting variant '{name}'"))?;
+            // a name covers both forms; the sharded one goes manifest-
+            // first, so a reader racing the delete sees a cleanly absent
+            // variant rather than a manifest with missing shards
+            let single = self.variant_path(&name);
+            if single.exists() {
+                std::fs::remove_file(&single)
+                    .with_context(|| format!("deleting variant '{name}'"))?;
+            }
+            let dir = self.sharded_path(&name);
+            if dir.is_dir() {
+                sharded::remove_sharded_variant(&dir)
+                    .with_context(|| format!("deleting sharded variant '{name}'"))?;
+            }
             deleted.push(name);
         }
         deleted.sort();

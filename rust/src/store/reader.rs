@@ -7,18 +7,67 @@
 use crate::compress::compressed::BatchWorkspace;
 use crate::compress::CompressedMatrix;
 use crate::store::format::{
-    decode_payload, decode_payload_native, method_from_code, EntryMeta, FOOTER_BYTES,
-    HEADER_BYTES, KIND_HSS, MAGIC, METHOD_UNKNOWN, MIN_VERSION, VERSION,
+    decode_payload_ext, method_from_code, EntryMeta, FOOTER_BYTES, HEADER_BYTES, KIND_HSS, MAGIC,
+    METHOD_UNKNOWN, MIN_VERSION, VERSION,
 };
-use crate::util::binio::{crc32, ByteReader};
+use crate::util::binio::{crc32, read_full, ByteReader};
+use crate::util::mmap::{map_or_warn, Mmap};
 use anyhow::{bail, Context, Result};
 use std::path::Path;
+use std::sync::Arc;
 
-struct EntryIndex {
-    meta: EntryMeta,
+pub(crate) struct EntryIndex {
+    pub(crate) meta: EntryMeta,
     /// payload byte range within the file buffer
-    start: usize,
-    len: usize,
+    pub(crate) start: usize,
+    pub(crate) len: usize,
+}
+
+/// The raw bytes of an opened store artifact: a private heap copy (the
+/// buffered path) or a shared read-only mapping (the zero-copy path — N
+/// processes opening the same variant share one page-cache copy).
+pub(crate) enum FileBytes {
+    Owned(Vec<u8>),
+    Mapped(Arc<Mmap>),
+}
+
+impl FileBytes {
+    /// Read or map `path` according to `mode` (mmap falls back to a
+    /// buffered read with a one-time warning — see
+    /// [`crate::util::mmap::map_or_warn`]).
+    pub(crate) fn open(path: &Path, mode: crate::store::MmapMode) -> Result<FileBytes> {
+        if mode.wants_mmap() {
+            if let Some(m) = map_or_warn(path) {
+                return Ok(FileBytes::Mapped(m));
+            }
+        }
+        let buf = std::fs::read(path)
+            .with_context(|| format!("reading store file {}", path.display()))?;
+        Ok(FileBytes::Owned(buf))
+    }
+
+    pub(crate) fn is_mapped(&self) -> bool {
+        matches!(self, FileBytes::Mapped(_))
+    }
+
+    /// The backing mapping (for zero-copy payload borrows), if any.
+    pub(crate) fn map(&self) -> Option<&Arc<Mmap>> {
+        match self {
+            FileBytes::Owned(_) => None,
+            FileBytes::Mapped(m) => Some(m),
+        }
+    }
+}
+
+impl std::ops::Deref for FileBytes {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        match self {
+            FileBytes::Owned(v) => v,
+            FileBytes::Mapped(m) => m,
+        }
+    }
 }
 
 /// Header-only peek at a store file's save-sequence number: reads just the
@@ -27,20 +76,14 @@ struct EntryIndex {
 /// when the file is missing, too short, has the wrong magic, or an
 /// unsupported version; version-1 files (which predate the field) read as
 /// `Some(0)`. A corrupt file caught here simply sorts oldest; full
-/// validation still happens on [`StoreFile::open`].
+/// validation still happens on [`StoreFile::open`]. Rides the shared
+/// [`read_full`] loop, so short reads and `EINTR` retry instead of
+/// misreading a live file as corrupt.
 pub fn peek_save_seq(path: &Path) -> Option<u64> {
-    use std::io::Read;
     let mut f = std::fs::File::open(path).ok()?;
     // v2 header: magic(4) version(2) flags(2) save_seq(8)
     let mut head = [0u8; 16];
-    let mut filled = 0;
-    while filled < head.len() {
-        match f.read(&mut head[filled..]) {
-            Ok(0) => break,
-            Ok(n) => filled += n,
-            Err(_) => return None,
-        }
-    }
+    let filled = read_full(&mut f, &mut head).ok()?;
     if filled < 8 || &head[..4] != MAGIC {
         return None;
     }
@@ -53,9 +96,12 @@ pub fn peek_save_seq(path: &Path) -> Option<u64> {
     }
 }
 
-/// A parsed, integrity-checked `HSB1` file.
+/// A parsed, integrity-checked `HSB1` file. The backing bytes are either
+/// a heap buffer or (by default, on unix) a shared read-only mmap; with a
+/// mapped backing, [`StoreFile::load_native`] hands out weight buffers
+/// that *borrow* the mapping wherever the on-disk layout permits.
 pub struct StoreFile {
-    buf: Vec<u8>,
+    buf: FileBytes,
     entries: Vec<EntryIndex>,
     save_seq: u64,
 }
@@ -63,72 +109,33 @@ pub struct StoreFile {
 impl StoreFile {
     /// Read and validate `path`: magic, version, per-section lengths, and
     /// the crc32 footer (any truncation or bit corruption is rejected here,
-    /// before any payload is decoded).
+    /// before any payload is decoded). Maps the file when mmap is
+    /// available (kill-switch: `HISOLO_MMAP=off`).
     pub fn open(path: &Path) -> Result<StoreFile> {
-        let buf = std::fs::read(path)
-            .with_context(|| format!("reading store file {}", path.display()))?;
-        StoreFile::from_bytes(buf).with_context(|| format!("parsing {}", path.display()))
+        StoreFile::open_with(path, crate::store::MmapMode::Auto)
+    }
+
+    /// [`StoreFile::open`] pinned to the buffered (private heap copy)
+    /// reader regardless of environment — the comparison arm for the
+    /// zero-copy path's bitwise-identity checks.
+    pub fn open_buffered(path: &Path) -> Result<StoreFile> {
+        StoreFile::open_with(path, crate::store::MmapMode::Buffered)
+    }
+
+    /// Open with an explicit mmap policy.
+    pub fn open_with(path: &Path, mode: crate::store::MmapMode) -> Result<StoreFile> {
+        let buf = FileBytes::open(path, mode)?;
+        StoreFile::from_file_bytes(buf).with_context(|| format!("parsing {}", path.display()))
     }
 
     /// Parse an in-memory `HSB1` image (the file-free path used by tests
     /// and by transports that already hold the bytes).
     pub fn from_bytes(buf: Vec<u8>) -> Result<StoreFile> {
-        if buf.len() < HEADER_BYTES + FOOTER_BYTES {
-            bail!("file too short ({} bytes) for an HSB1 store", buf.len());
-        }
-        let body = &buf[..buf.len() - FOOTER_BYTES];
-        let footer = &buf[buf.len() - FOOTER_BYTES..];
-        let want = u32::from_le_bytes([footer[0], footer[1], footer[2], footer[3]]);
-        let got = crc32(body);
-        if want != got {
-            bail!("crc mismatch: footer {want:#010x} vs computed {got:#010x} (corrupt or truncated store)");
-        }
+        StoreFile::from_file_bytes(FileBytes::Owned(buf))
+    }
 
-        let mut r = ByteReader::new(body);
-        r.expect_magic(MAGIC, "HSB1")?;
-        let version = r.u16()?;
-        if !(MIN_VERSION..=VERSION).contains(&version) {
-            bail!("unsupported HSB1 version {version} (this build reads {MIN_VERSION}..={VERSION})");
-        }
-        let _flags = r.u16()?;
-        // v1 predates the save-sequence field; old files read as seq 0
-        let save_seq = if version >= 2 { r.u64()? } else { 0 };
-        let count = r.u32()? as usize;
-        let mut entries = Vec::with_capacity(count.min(1024));
-        for _ in 0..count {
-            let name = r.string()?;
-            let kind = r.u8()?;
-            if kind > KIND_HSS {
-                bail!("entry '{name}': unknown kind {kind}");
-            }
-            let method_byte = r.u8()?;
-            let method = if method_byte == METHOD_UNKNOWN {
-                None
-            } else {
-                Some(
-                    method_from_code(method_byte)
-                        .ok_or_else(|| anyhow::anyhow!("entry '{name}': bad method code {method_byte}"))?,
-                )
-            };
-            let rel_error = r.f64()?;
-            let len = r.u64()? as usize;
-            let start = r.pos();
-            r.take(len)
-                .with_context(|| format!("entry '{name}' payload"))?;
-            entries.push(EntryIndex {
-                meta: EntryMeta {
-                    name,
-                    kind,
-                    method,
-                    rel_error,
-                },
-                start,
-                len,
-            });
-        }
-        if r.remaining() != 0 {
-            bail!("{} trailing bytes after the last entry", r.remaining());
-        }
+    fn from_file_bytes(buf: FileBytes) -> Result<StoreFile> {
+        let (entries, save_seq) = parse_hsb1(&buf)?;
         Ok(StoreFile {
             buf,
             entries,
@@ -136,10 +143,22 @@ impl StoreFile {
         })
     }
 
+    /// Whether the backing bytes are a shared mmap (zero-copy serving)
+    /// rather than a private heap copy.
+    pub fn is_mapped(&self) -> bool {
+        self.buf.is_mapped()
+    }
+
     /// Save-sequence number stamped at write time (0 for v1 files and
     /// writers that never set one) — the exact retention ordering key.
     pub fn save_seq(&self) -> u64 {
         self.save_seq
+    }
+
+    /// Decode context for entry payloads: the backing mapping plus the
+    /// absolute offset of the payload within it (None when buffered).
+    fn map_ctx(&self, start: usize) -> crate::store::format::PayloadMap {
+        self.buf.map().map(|m| (m.clone(), start))
     }
 
     pub fn len(&self) -> usize {
@@ -174,7 +193,7 @@ impl StoreFile {
         let e = self
             .find(name)
             .ok_or_else(|| anyhow::anyhow!("entry '{name}' not in store (have: {})", self.names().join(", ")))?;
-        decode_payload(e.meta.kind, &self.buf[e.start..e.start + e.len])
+        decode_payload_ext(e.meta.kind, &self.buf[e.start..e.start + e.len], false, false, None)
             .with_context(|| format!("decoding entry '{name}'"))
     }
 
@@ -186,8 +205,14 @@ impl StoreFile {
         let e = self
             .find(name)
             .ok_or_else(|| anyhow::anyhow!("entry '{name}' not in store (have: {})", self.names().join(", ")))?;
-        decode_payload_native(e.meta.kind, &self.buf[e.start..e.start + e.len])
-            .with_context(|| format!("decoding entry '{name}' (native dtype)"))
+        decode_payload_ext(
+            e.meta.kind,
+            &self.buf[e.start..e.start + e.len],
+            true,
+            false,
+            self.map_ctx(e.start),
+        )
+        .with_context(|| format!("decoding entry '{name}' (native dtype)"))
     }
 
     /// Load plus a pre-sized [`BatchWorkspace`], so the caller's first
@@ -217,6 +242,75 @@ impl StoreFile {
             .map(|e| Ok((e.meta.name.clone(), self.load(&e.meta.name)?)))
             .collect()
     }
+}
+
+/// Validate and index an `HSB1` image: crc footer, magic, version,
+/// save-seq header, and the per-entry section table.
+fn parse_hsb1(buf: &[u8]) -> Result<(Vec<EntryIndex>, u64)> {
+    if buf.len() < HEADER_BYTES + FOOTER_BYTES {
+        bail!("file too short ({} bytes) for an HSB1 store", buf.len());
+    }
+    let body = &buf[..buf.len() - FOOTER_BYTES];
+    let footer = &buf[buf.len() - FOOTER_BYTES..];
+    let want = u32::from_le_bytes([footer[0], footer[1], footer[2], footer[3]]);
+    let got = crc32(body);
+    if want != got {
+        bail!("crc mismatch: footer {want:#010x} vs computed {got:#010x} (corrupt or truncated store)");
+    }
+
+    let mut r = ByteReader::new(body);
+    r.expect_magic(MAGIC, "HSB1")?;
+    let version = r.u16()?;
+    if !(MIN_VERSION..=VERSION).contains(&version) {
+        bail!("unsupported HSB1 version {version} (this build reads {MIN_VERSION}..={VERSION})");
+    }
+    let _flags = r.u16()?;
+    // v1 predates the save-sequence field; old files read as seq 0
+    let save_seq = if version >= 2 { r.u64()? } else { 0 };
+    let count = r.u32()? as usize;
+    let entries = parse_entry_table(&mut r, count)?;
+    if r.remaining() != 0 {
+        bail!("{} trailing bytes after the last entry", r.remaining());
+    }
+    Ok((entries, save_seq))
+}
+
+/// Parse `count` entry headers + payload extents from `r` — the table
+/// layout `HSB1` files and `HSB2` shards share.
+pub(crate) fn parse_entry_table(r: &mut ByteReader, count: usize) -> Result<Vec<EntryIndex>> {
+    let mut entries = Vec::with_capacity(count.min(1024));
+    for _ in 0..count {
+        let name = r.string()?;
+        let kind = r.u8()?;
+        if kind > KIND_HSS {
+            bail!("entry '{name}': unknown kind {kind}");
+        }
+        let method_byte = r.u8()?;
+        let method = if method_byte == METHOD_UNKNOWN {
+            None
+        } else {
+            Some(
+                method_from_code(method_byte)
+                    .ok_or_else(|| anyhow::anyhow!("entry '{name}': bad method code {method_byte}"))?,
+            )
+        };
+        let rel_error = r.f64()?;
+        let len = r.u64()? as usize;
+        let start = r.pos();
+        r.take(len)
+            .with_context(|| format!("entry '{name}' payload"))?;
+        entries.push(EntryIndex {
+            meta: EntryMeta {
+                name,
+                kind,
+                method,
+                rel_error,
+            },
+            start,
+            len,
+        });
+    }
+    Ok(entries)
 }
 
 #[cfg(test)]

@@ -1,0 +1,814 @@
+//! The `HSB2` sharded variant container: per-layer shard files behind a
+//! small manifest, built for mmap'd zero-copy serving and parallel loads.
+//!
+//! A sharded variant is a *directory* `<variant>.hsb2/` holding one shard
+//! file per layer (the layer's `q/k/v` triple — the unit [`super::entry_name`]
+//! already keys on) plus `manifest.hsb2`. Shards carry their own crc32, so
+//! corruption is detected — and isolated — at the granularity of one
+//! layer's factors; the manifest records every shard's length and crc plus
+//! a per-entry index (name, kind, dtype, payload offset/len), so a reader
+//! can reject a missing or truncated shard with an error that names it
+//! before any payload is touched.
+//!
+//! Shard payloads use the **aligned** grammar
+//! ([`format::encode_payload_aligned`]): every f32/f16 value run sits on a
+//! [`format::VALUE_ALIGN`] file boundary, so the mmap'd reader hands out
+//! `WeightBuf` borrows of the mapping itself — N serving processes share
+//! one page-cache copy of the factors (see `store/mod.rs` for the full
+//! format spec, and `benches/store_load.rs --procs` for the measurement).
+//!
+//! Durability contract: shards are written and synced **before** the
+//! manifest, and the finished directory is swapped into place by rename —
+//! a manifest that exists always references complete shards. Deletion
+//! inverts the order (manifest first, [`remove_sharded_variant`]), so no
+//! observer ever finds a manifest pointing at missing shards mid-delete.
+
+use crate::compress::{CompressedMatrix, Method};
+use crate::store::format::{
+    self, kind_of, method_code, method_from_code, EntryMeta, KIND_DENSE, KIND_HSS, METHOD_UNKNOWN,
+};
+use crate::store::reader::{parse_entry_table, EntryIndex, FileBytes};
+use crate::store::MmapMode;
+use crate::util::binio::{
+    crc32, put_f64, put_string, put_u16, put_u32, put_u64, ByteReader, DT_F16, DT_F32,
+};
+use anyhow::{bail, Context, Result};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// Shard file magic.
+pub const SHARD_MAGIC: &[u8; 4] = b"HSB2";
+pub const SHARD_VERSION: u16 = 1;
+/// Manifest magic.
+pub const MANIFEST_MAGIC: &[u8; 4] = b"HSBM";
+pub const MANIFEST_VERSION: u16 = 1;
+/// Manifest file name inside a `<variant>.hsb2/` directory.
+pub const MANIFEST_NAME: &str = "manifest.hsb2";
+
+/// Extension (without dot) of a sharded variant directory.
+pub const SHARDED_EXT: &str = "hsb2";
+
+/// One entry handed to [`write_sharded`].
+pub struct ShardEntry<'a> {
+    pub name: String,
+    pub method: Option<Method>,
+    pub rel_error: f64,
+    pub matrix: &'a CompressedMatrix,
+}
+
+/// Manifest value dtype for an entry (informational: the dtype its value
+/// runs are stored at — the dense baseline is f32, every factor is f16).
+fn entry_dtype(kind: u8) -> u8 {
+    if kind == KIND_DENSE {
+        DT_F32
+    } else {
+        DT_F16
+    }
+}
+
+// ---------------------------------------------------------------- writing
+
+/// Serialize one shard: header, entry table with aligned payloads, crc
+/// footer. Returns the bytes plus each entry's `(payload_off, payload_len)`
+/// for the manifest.
+fn encode_shard(entries: &[&ShardEntry]) -> (Vec<u8>, Vec<(u64, u64)>) {
+    let mut out = Vec::new();
+    out.extend_from_slice(SHARD_MAGIC);
+    put_u16(&mut out, SHARD_VERSION);
+    put_u16(&mut out, 0); // flags, reserved
+    put_u32(&mut out, entries.len() as u32);
+    let mut extents = Vec::with_capacity(entries.len());
+    for e in entries {
+        put_string(&mut out, &e.name);
+        out.push(kind_of(e.matrix));
+        out.push(e.method.map_or(METHOD_UNKNOWN, method_code));
+        put_f64(&mut out, e.rel_error);
+        // the payload begins 8 bytes (its own length field) past here —
+        // that absolute file offset is what the aligned grammar pads from
+        let payload_base = out.len() + 8;
+        let payload = format::encode_payload_aligned(e.matrix, payload_base);
+        put_u64(&mut out, payload.len() as u64);
+        out.extend_from_slice(&payload);
+        extents.push((payload_base as u64, payload.len() as u64));
+    }
+    let crc = crc32(&out);
+    put_u32(&mut out, crc);
+    (out, extents)
+}
+
+/// Write a sharded `HSB2` variant directory at `final_dir`
+/// (`…/<variant>.hsb2`): one shard per entry-name prefix (`layer3.wq` →
+/// `layer3.shard`), shards first, manifest last, everything staged in a
+/// temp directory and swapped into place by rename. Returns total bytes
+/// written (shards + manifest).
+pub fn write_sharded(final_dir: &Path, entries: &[ShardEntry], save_seq: u64) -> Result<u64> {
+    static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    if entries.is_empty() {
+        bail!("refusing to write an empty sharded variant");
+    }
+
+    // group entries into shards by name prefix, preserving first-appearance
+    // order (layer{i}.w{q,k,v} → one shard per layer)
+    let mut groups: Vec<(String, Vec<usize>)> = Vec::new();
+    for (i, e) in entries.iter().enumerate() {
+        let prefix = e.name.split('.').next().unwrap_or(&e.name).to_string();
+        match groups.iter_mut().find(|(p, _)| *p == prefix) {
+            Some((_, v)) => v.push(i),
+            None => groups.push((prefix, vec![i])),
+        }
+    }
+
+    let tmp_dir = match final_dir.file_name() {
+        Some(name) => {
+            let mut n = name.to_os_string();
+            n.push(format!(
+                ".tmp.{}.{}",
+                std::process::id(),
+                SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+            ));
+            final_dir.with_file_name(n)
+        }
+        None => bail!("sharded variant path {} has no file name", final_dir.display()),
+    };
+    std::fs::create_dir_all(&tmp_dir)
+        .with_context(|| format!("creating {}", tmp_dir.display()))?;
+
+    // 1) shards, each written and synced before the manifest references it
+    let mut total: u64 = 0;
+    let mut manifest = Vec::new();
+    manifest.extend_from_slice(MANIFEST_MAGIC);
+    put_u16(&mut manifest, MANIFEST_VERSION);
+    put_u16(&mut manifest, 0); // flags, reserved
+    put_u64(&mut manifest, save_seq);
+    put_u32(&mut manifest, groups.len() as u32);
+    for (prefix, idxs) in &groups {
+        let members: Vec<&ShardEntry> = idxs.iter().map(|&i| &entries[i]).collect();
+        let (bytes, extents) = encode_shard(&members);
+        let rel = format!("{prefix}.shard");
+        write_synced(&tmp_dir.join(&rel), &bytes)?;
+        total += bytes.len() as u64;
+        // the shard's own footer crc doubles as its manifest fingerprint
+        let crc = u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().expect("4-byte footer"));
+        put_string(&mut manifest, &rel);
+        put_u64(&mut manifest, bytes.len() as u64);
+        put_u32(&mut manifest, crc);
+        put_u32(&mut manifest, members.len() as u32);
+        for (m, (off, len)) in members.iter().zip(&extents) {
+            put_string(&mut manifest, &m.name);
+            let kind = kind_of(m.matrix);
+            manifest.push(kind);
+            manifest.push(m.method.map_or(METHOD_UNKNOWN, method_code));
+            put_f64(&mut manifest, m.rel_error);
+            put_u64(&mut manifest, *off);
+            put_u64(&mut manifest, *len);
+            manifest.push(entry_dtype(kind));
+        }
+    }
+    let crc = crc32(&manifest);
+    put_u32(&mut manifest, crc);
+
+    // 2) manifest last: its existence is the commit point of the variant
+    write_synced(&tmp_dir.join(MANIFEST_NAME), &manifest)?;
+    total += manifest.len() as u64;
+    sync_dir(&tmp_dir);
+
+    // 3) swap into place; a replaced variant is renamed aside first so the
+    // final rename never races a reader holding the old directory open
+    if final_dir.exists() {
+        let mut old_name = final_dir
+            .file_name()
+            .expect("checked above")
+            .to_os_string();
+        old_name.push(format!(
+            ".old.{}.{}",
+            std::process::id(),
+            SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+        ));
+        let old_dir = final_dir.with_file_name(old_name);
+        std::fs::rename(final_dir, &old_dir)
+            .with_context(|| format!("renaming previous {} aside", final_dir.display()))?;
+        std::fs::rename(&tmp_dir, final_dir)
+            .with_context(|| format!("renaming {} into place", tmp_dir.display()))?;
+        let _ = std::fs::remove_dir_all(&old_dir);
+    } else {
+        std::fs::rename(&tmp_dir, final_dir)
+            .with_context(|| format!("renaming {} into place", tmp_dir.display()))?;
+    }
+    if let Some(parent) = final_dir.parent() {
+        sync_dir(parent);
+    }
+    Ok(total)
+}
+
+fn write_synced(path: &Path, bytes: &[u8]) -> Result<()> {
+    let mut f =
+        std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?;
+    f.write_all(bytes)
+        .with_context(|| format!("writing {}", path.display()))?;
+    f.sync_all()
+        .with_context(|| format!("syncing {}", path.display()))?;
+    Ok(())
+}
+
+fn sync_dir(dir: &Path) {
+    // best-effort: durability of the rename, not correctness, depends on it
+    if let Ok(d) = std::fs::File::open(dir) {
+        let _ = d.sync_all();
+    }
+}
+
+/// Delete a sharded variant with the manifest removed **first**: the
+/// variant atomically stops being openable, then the shard bytes go. The
+/// inverse of the write ordering, so a manifest on disk always references
+/// complete shards.
+pub fn remove_sharded_variant(dir: &Path) -> std::io::Result<()> {
+    let manifest = dir.join(MANIFEST_NAME);
+    if manifest.exists() {
+        std::fs::remove_file(&manifest)?;
+    }
+    std::fs::remove_dir_all(dir)
+}
+
+// ---------------------------------------------------------------- reading
+
+/// One opened, crc-verified shard file (mmap-backed when available).
+pub struct ShardFile {
+    bytes: FileBytes,
+    entries: Vec<EntryIndex>,
+}
+
+impl ShardFile {
+    /// Open and fully validate one shard: magic, version, entry table, and
+    /// the crc32 footer — a bit flip in this shard fails *this* open and
+    /// no other shard's.
+    pub fn open_with(path: &Path, mode: MmapMode) -> Result<ShardFile> {
+        let bytes = FileBytes::open(path, mode)?;
+        if bytes.len() < 12 + 4 {
+            bail!("shard too short ({} bytes)", bytes.len());
+        }
+        let body = &bytes[..bytes.len() - 4];
+        let footer = &bytes[bytes.len() - 4..];
+        let want = u32::from_le_bytes([footer[0], footer[1], footer[2], footer[3]]);
+        let got = crc32(body);
+        if want != got {
+            bail!("crc mismatch: footer {want:#010x} vs computed {got:#010x} (corrupt or truncated shard)");
+        }
+        let mut r = ByteReader::new(body);
+        r.expect_magic(SHARD_MAGIC, "HSB2 shard")?;
+        let version = r.u16()?;
+        if version != SHARD_VERSION {
+            bail!("unsupported HSB2 shard version {version} (this build reads {SHARD_VERSION})");
+        }
+        let _flags = r.u16()?;
+        let count = r.u32()? as usize;
+        let entries = parse_entry_table(&mut r, count)?;
+        if r.remaining() != 0 {
+            bail!("{} trailing bytes after the last entry", r.remaining());
+        }
+        drop(r);
+        Ok(ShardFile { bytes, entries })
+    }
+
+    pub fn is_mapped(&self) -> bool {
+        self.bytes.is_mapped()
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.iter().map(|e| e.meta.name.as_str()).collect()
+    }
+
+    fn find(&self, name: &str) -> Option<&EntryIndex> {
+        self.entries.iter().find(|e| e.meta.name == name)
+    }
+
+    /// Decode one entry at its on-disk dtype; with a mapped backing the
+    /// value runs borrow the mapping (zero-copy, aligned grammar).
+    pub fn load_native(&self, name: &str) -> Result<CompressedMatrix> {
+        let e = self
+            .find(name)
+            .ok_or_else(|| anyhow::anyhow!("entry '{name}' not in shard (have: {})", self.names().join(", ")))?;
+        let map = self.bytes.map().map(|m| (m.clone(), e.start));
+        format::decode_payload_ext(e.meta.kind, &self.bytes[e.start..e.start + e.len], true, true, map)
+            .with_context(|| format!("decoding entry '{name}' (native dtype)"))
+    }
+
+    /// Decode one entry widening f16 to f32 (the training/compat load;
+    /// always an owned copy).
+    pub fn load(&self, name: &str) -> Result<CompressedMatrix> {
+        let e = self
+            .find(name)
+            .ok_or_else(|| anyhow::anyhow!("entry '{name}' not in shard (have: {})", self.names().join(", ")))?;
+        format::decode_payload_ext(e.meta.kind, &self.bytes[e.start..e.start + e.len], false, true, None)
+            .with_context(|| format!("decoding entry '{name}'"))
+    }
+}
+
+/// One manifest entry: the `HSB1` metadata plus where the payload lives.
+pub struct ManifestEntry {
+    pub meta: EntryMeta,
+    pub payload_off: u64,
+    pub payload_len: u64,
+    /// dominant value dtype of the payload (`DT_F32` for dense, `DT_F16`
+    /// for factors) — informational, for tooling
+    pub dtype: u8,
+}
+
+/// Manifest record of one shard file.
+pub struct ShardMeta {
+    pub rel_path: String,
+    pub file_bytes: u64,
+    pub file_crc: u32,
+    pub entries: Vec<ManifestEntry>,
+}
+
+/// An opened sharded variant: parsed manifest, existence/length-validated
+/// shards, and a lazy cache of opened (crc-verified, possibly mmap'd)
+/// shard files. Shard opens are independent, so N layers can be decoded by
+/// N threads and a corrupt shard fails only the loads that touch it.
+pub struct ShardedVariant {
+    dir: PathBuf,
+    save_seq: u64,
+    manifest_bytes: u64,
+    shards: Vec<ShardMeta>,
+    opened: Vec<Mutex<Option<Arc<ShardFile>>>>,
+    mode: MmapMode,
+}
+
+impl ShardedVariant {
+    /// Open `<variant>.hsb2/`: parse + crc-check the manifest, then verify
+    /// every referenced shard exists at exactly its recorded length. A
+    /// missing or truncated shard is rejected here with an error naming
+    /// it; per-shard crc verification happens at first shard open.
+    pub fn open(dir: &Path) -> Result<ShardedVariant> {
+        ShardedVariant::open_with(dir, MmapMode::Auto)
+    }
+
+    /// [`ShardedVariant::open`] with an explicit mmap policy.
+    pub fn open_with(dir: &Path, mode: MmapMode) -> Result<ShardedVariant> {
+        let manifest_path = dir.join(MANIFEST_NAME);
+        let bytes = std::fs::read(&manifest_path)
+            .with_context(|| format!("reading manifest {}", manifest_path.display()))?;
+        let shards = parse_manifest_body(&bytes)
+            .with_context(|| format!("parsing manifest {}", manifest_path.display()))?;
+        let (save_seq, shards) = shards;
+        // every referenced shard must exist at its recorded length before
+        // the variant opens — a precise early error beats a late decode one
+        for s in &shards {
+            let p = dir.join(&s.rel_path);
+            let found = std::fs::metadata(&p)
+                .map(|m| m.len())
+                .map_err(|e| anyhow::anyhow!("shard '{}' missing: {e}", s.rel_path))
+                .with_context(|| format!("sharded variant {}", dir.display()))?;
+            if found != s.file_bytes {
+                bail!(
+                    "sharded variant {}: shard '{}' truncated or replaced (manifest records {} bytes, found {found})",
+                    dir.display(),
+                    s.rel_path,
+                    s.file_bytes
+                );
+            }
+        }
+        let opened = shards.iter().map(|_| Mutex::new(None)).collect();
+        Ok(ShardedVariant {
+            dir: dir.to_path_buf(),
+            save_seq,
+            manifest_bytes: bytes.len() as u64,
+            shards,
+            opened,
+            mode,
+        })
+    }
+
+    pub fn save_seq(&self) -> u64 {
+        self.save_seq
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Total on-disk footprint: manifest + every shard at its manifest
+    /// length.
+    pub fn total_bytes(&self) -> u64 {
+        self.manifest_bytes + self.shards.iter().map(|s| s.file_bytes).sum::<u64>()
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.entries.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Entry names in manifest order.
+    pub fn names(&self) -> Vec<&str> {
+        self.shards
+            .iter()
+            .flat_map(|s| s.entries.iter().map(|e| e.meta.name.as_str()))
+            .collect()
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&EntryMeta> {
+        self.find(name).map(|(s, e)| &self.shards[s].entries[e].meta)
+    }
+
+    fn find(&self, name: &str) -> Option<(usize, usize)> {
+        for (si, s) in self.shards.iter().enumerate() {
+            if let Some(ei) = s.entries.iter().position(|e| e.meta.name == name) {
+                return Some((si, ei));
+            }
+        }
+        None
+    }
+
+    /// Open (or fetch the cached) shard `i`, crc-verifying on first open
+    /// and cross-checking its entry names against the manifest. Errors
+    /// name the shard and are not cached — a transient failure retries.
+    pub fn shard(&self, i: usize) -> Result<Arc<ShardFile>> {
+        let mut slot = self.opened[i].lock().unwrap();
+        if let Some(f) = slot.as_ref() {
+            return Ok(f.clone());
+        }
+        let meta = &self.shards[i];
+        let path = self.dir.join(&meta.rel_path);
+        let f = ShardFile::open_with(&path, self.mode)
+            .with_context(|| format!("opening shard '{}' of {}", meta.rel_path, self.dir.display()))?;
+        let manifest_names: Vec<&str> = meta.entries.iter().map(|e| e.meta.name.as_str()).collect();
+        if f.names() != manifest_names {
+            bail!(
+                "shard '{}' of {} does not match its manifest (shard entries [{}], manifest [{}])",
+                meta.rel_path,
+                self.dir.display(),
+                f.names().join(", "),
+                manifest_names.join(", ")
+            );
+        }
+        let f = Arc::new(f);
+        *slot = Some(f.clone());
+        Ok(f)
+    }
+
+    /// Whether any opened shard is mmap-backed (opens the first shard if
+    /// none is yet).
+    pub fn is_mapped(&self) -> bool {
+        for slot in &self.opened {
+            if let Some(f) = slot.lock().unwrap().as_ref() {
+                return f.is_mapped();
+            }
+        }
+        self.shard(0).map(|f| f.is_mapped()).unwrap_or(false)
+    }
+
+    /// Decode one entry at its on-disk dtype (zero-copy when mapped).
+    pub fn load_native(&self, name: &str) -> Result<CompressedMatrix> {
+        let (si, _) = self
+            .find(name)
+            .ok_or_else(|| anyhow::anyhow!("entry '{name}' not in variant (have: {})", self.names().join(", ")))?;
+        self.shard(si)?.load_native(name)
+    }
+
+    /// Decode one entry widening to f32.
+    pub fn load(&self, name: &str) -> Result<CompressedMatrix> {
+        let (si, _) = self
+            .find(name)
+            .ok_or_else(|| anyhow::anyhow!("entry '{name}' not in variant (have: {})", self.names().join(", ")))?;
+        self.shard(si)?.load(name)
+    }
+}
+
+/// Parse a manifest image (crc-checked): returns the save-seq and the
+/// shard records.
+fn parse_manifest_body(bytes: &[u8]) -> Result<(u64, Vec<ShardMeta>)> {
+    if bytes.len() < 20 + 4 {
+        bail!("manifest too short ({} bytes)", bytes.len());
+    }
+    let body = &bytes[..bytes.len() - 4];
+    let footer = &bytes[bytes.len() - 4..];
+    let want = u32::from_le_bytes([footer[0], footer[1], footer[2], footer[3]]);
+    let got = crc32(body);
+    if want != got {
+        bail!("crc mismatch: footer {want:#010x} vs computed {got:#010x} (corrupt or truncated manifest)");
+    }
+    let mut r = ByteReader::new(body);
+    r.expect_magic(MANIFEST_MAGIC, "HSB2 manifest")?;
+    let version = r.u16()?;
+    if version != MANIFEST_VERSION {
+        bail!("unsupported manifest version {version} (this build reads {MANIFEST_VERSION})");
+    }
+    let _flags = r.u16()?;
+    let save_seq = r.u64()?;
+    let shard_count = r.u32()? as usize;
+    let mut shards = Vec::with_capacity(shard_count.min(4096));
+    for _ in 0..shard_count {
+        let rel_path = r.string()?;
+        if rel_path.contains('/') || rel_path.contains('\\') || rel_path.contains("..") {
+            bail!("manifest shard path '{rel_path}' escapes the variant directory");
+        }
+        let file_bytes = r.u64()?;
+        let file_crc = r.u32()?;
+        let entry_count = r.u32()? as usize;
+        let mut entries = Vec::with_capacity(entry_count.min(4096));
+        for _ in 0..entry_count {
+            let name = r.string()?;
+            let kind = r.u8()?;
+            if kind > KIND_HSS {
+                bail!("manifest entry '{name}': unknown kind {kind}");
+            }
+            let method_byte = r.u8()?;
+            let method = if method_byte == METHOD_UNKNOWN {
+                None
+            } else {
+                Some(method_from_code(method_byte).ok_or_else(|| {
+                    anyhow::anyhow!("manifest entry '{name}': bad method code {method_byte}")
+                })?)
+            };
+            let rel_error = r.f64()?;
+            let payload_off = r.u64()?;
+            let payload_len = r.u64()?;
+            let dtype = r.u8()?;
+            if dtype != DT_F32 && dtype != DT_F16 {
+                bail!("manifest entry '{name}': unknown dtype code {dtype}");
+            }
+            entries.push(ManifestEntry {
+                meta: EntryMeta {
+                    name,
+                    kind,
+                    method,
+                    rel_error,
+                },
+                payload_off,
+                payload_len,
+                dtype,
+            });
+        }
+        shards.push(ShardMeta {
+            rel_path,
+            file_bytes,
+            file_crc,
+            entries,
+        });
+    }
+    if r.remaining() != 0 {
+        bail!("{} trailing bytes after the last shard record", r.remaining());
+    }
+    Ok((save_seq, shards))
+}
+
+/// Header-only peek at a sharded variant's save-sequence number (the
+/// manifest twin of [`super::reader::peek_save_seq`]): reads 16 bytes of
+/// `manifest.hsb2` through the robust [`crate::util::binio::read_full`]
+/// loop. `None` for anything that isn't a well-formed manifest header.
+pub fn peek_sharded_save_seq(dir: &Path) -> Option<u64> {
+    let head = crate::util::binio::read_file_prefix(&dir.join(MANIFEST_NAME), 16).ok()?;
+    if head.len() < 16 || &head[..4] != MANIFEST_MAGIC {
+        return None;
+    }
+    if u16::from_le_bytes([head[4], head[5]]) != MANIFEST_VERSION {
+        return None;
+    }
+    Some(u64::from_le_bytes(head[8..16].try_into().expect("8-byte slice")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Compressor, CompressorConfig};
+    use crate::data::synthetic;
+    use crate::util::rng::Rng;
+
+    fn sample_entries(n: usize, layers: usize) -> Vec<(String, CompressedMatrix)> {
+        let comp = Compressor::new(CompressorConfig {
+            rank: 8,
+            sparsity: 0.15,
+            depth: 2,
+            min_leaf: 8,
+            ..Default::default()
+        });
+        let mut out = Vec::new();
+        for l in 0..layers {
+            for (pi, proj) in ["wq", "wk", "wv"].iter().enumerate() {
+                let w = synthetic::trained_like(n, (l * 3 + pi) as u64 + 1);
+                let m = comp.compress(&w, Method::SHssRcm);
+                out.push((format!("layer{l}.{proj}"), m));
+            }
+        }
+        out
+    }
+
+    fn write_sample(dir: &Path, n: usize, layers: usize, seq: u64) -> Vec<(String, CompressedMatrix)> {
+        let entries = sample_entries(n, layers);
+        let refs: Vec<ShardEntry> = entries
+            .iter()
+            .map(|(name, m)| ShardEntry {
+                name: name.clone(),
+                method: Some(Method::SHssRcm),
+                rel_error: 0.01,
+                matrix: m,
+            })
+            .collect();
+        write_sharded(dir, &refs, seq).unwrap();
+        entries
+    }
+
+    fn tdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "hisolo-sharded-{}-{tag}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn manifest_roundtrip_and_layout() {
+        let base = tdir("roundtrip");
+        let dir = base.join("v.hsb2");
+        let entries = write_sample(&dir, 32, 3, 7);
+
+        // one shard per layer + the manifest
+        let mut files: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        files.sort();
+        assert_eq!(
+            files,
+            vec!["layer0.shard", "layer1.shard", "layer2.shard", MANIFEST_NAME]
+        );
+
+        let v = ShardedVariant::open(&dir).unwrap();
+        assert_eq!(v.save_seq(), 7);
+        assert_eq!(v.shard_count(), 3);
+        assert_eq!(v.len(), 9);
+        let names: Vec<String> = entries.iter().map(|(n, _)| n.clone()).collect();
+        assert_eq!(v.names(), names.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+        let meta = v.meta("layer1.wk").unwrap();
+        assert_eq!(meta.method, Some(Method::SHssRcm));
+        assert_eq!(peek_sharded_save_seq(&dir), Some(7));
+
+        // every entry decodes and matvec-matches a direct aligned decode
+        let mut rng = Rng::new(5);
+        let x: Vec<f32> = (0..32).map(|_| rng.gaussian_f32()).collect();
+        for (name, want) in &entries {
+            let got = v.load_native(name).unwrap();
+            assert_eq!(got.params(), want.params(), "{name}");
+            // stored factors are fp16-quantized; compare against the
+            // widened decode of the same payload, which must be bitwise
+            let wide = v.load(name).unwrap();
+            assert_eq!(got.matvec(&x), wide.matvec(&x), "{name}");
+        }
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    #[test]
+    fn aligned_value_runs_land_on_boundaries() {
+        // decode with a buffered reader but assert the writer's pads put
+        // every borrowable value run on a VALUE_ALIGN boundary: borrow
+        // construction from an mmap must then never fall back
+        let base = tdir("aligned");
+        let dir = base.join("v.hsb2");
+        write_sample(&dir, 32, 1, 1);
+        let v = ShardedVariant::open_with(&dir, MmapMode::Auto).unwrap();
+        let m = v.load_native("layer0.wq").unwrap();
+        if v.is_mapped() {
+            // with the aligned grammar every f16 factor borrow succeeds
+            assert!(m.resident_weight_bytes() > 0);
+            let mapped = count_mapped(&m);
+            assert!(mapped.1 > 0, "no mapped buffers out of {}", mapped.0);
+            assert_eq!(mapped.0, mapped.1, "borrow fell back to copying somewhere");
+        }
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    /// (total weight buffers, mapped weight buffers) across the matrix.
+    fn count_mapped(m: &CompressedMatrix) -> (usize, usize) {
+        let mut total = 0;
+        let mut mapped = 0;
+        let mut visit = |b: &crate::linalg::WeightBuf| {
+            total += 1;
+            if b.is_mapped() {
+                mapped += 1;
+            }
+        };
+        fn walk_node(n: &crate::hss::HssNode, f: &mut dyn FnMut(&crate::linalg::WeightBuf)) {
+            match n {
+                crate::hss::HssNode::Leaf { d } => f(&d.data),
+                crate::hss::HssNode::Branch {
+                    sparse,
+                    u0,
+                    r0,
+                    u1,
+                    r1,
+                    c0,
+                    c1,
+                    ..
+                } => {
+                    f(&sparse.data);
+                    f(&u0.data);
+                    f(&r0.data);
+                    f(&u1.data);
+                    f(&r1.data);
+                    walk_node(c0, f);
+                    walk_node(c1, f);
+                }
+            }
+        }
+        match m {
+            CompressedMatrix::Dense { w } => visit(&w.data),
+            CompressedMatrix::LowRank { l, r, sparse } => {
+                visit(&l.data);
+                visit(&r.data);
+                if let Some(s) = sparse {
+                    visit(&s.data);
+                }
+            }
+            CompressedMatrix::Hss { tree } => walk_node(tree, &mut visit),
+        }
+        (total, mapped)
+    }
+
+    #[test]
+    fn bit_flip_fails_only_that_shard() {
+        let base = tdir("bitflip");
+        let dir = base.join("v.hsb2");
+        write_sample(&dir, 32, 3, 2);
+        // flip one payload byte deep inside layer1's shard
+        let p = dir.join("layer1.shard");
+        let mut bytes = std::fs::read(&p).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x01;
+        std::fs::write(&p, &bytes).unwrap();
+
+        let v = ShardedVariant::open(&dir).unwrap(); // manifest + lengths still fine
+        // the intact shards load
+        assert!(v.load_native("layer0.wq").is_ok());
+        assert!(v.load_native("layer2.wv").is_ok());
+        // the corrupt shard fails with an error naming it
+        let e = v.load_native("layer1.wk").unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("layer1.shard"), "{msg}");
+        assert!(msg.contains("crc"), "{msg}");
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    #[test]
+    fn missing_and_truncated_shards_named_at_open() {
+        let base = tdir("missing");
+        let dir = base.join("v.hsb2");
+        write_sample(&dir, 32, 2, 3);
+
+        // truncate layer1's shard: open must name it
+        let p = dir.join("layer1.shard");
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 9]).unwrap();
+        let e = ShardedVariant::open(&dir).unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("layer1.shard") && msg.contains("truncated"), "{msg}");
+
+        // remove it entirely: still named
+        std::fs::remove_file(&p).unwrap();
+        let e = ShardedVariant::open(&dir).unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("layer1.shard") && msg.contains("missing"), "{msg}");
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    #[test]
+    fn manifest_crc_and_path_escapes_rejected() {
+        let base = tdir("manifest-bad");
+        let dir = base.join("v.hsb2");
+        write_sample(&dir, 32, 1, 1);
+        let mp = dir.join(MANIFEST_NAME);
+        let mut bytes = std::fs::read(&mp).unwrap();
+        bytes[10] ^= 0x01;
+        std::fs::write(&mp, &bytes).unwrap();
+        let e = ShardedVariant::open(&dir).unwrap_err();
+        assert!(format!("{e:#}").contains("crc"), "{e:#}");
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    #[test]
+    fn rewrite_replaces_variant_atomically() {
+        let base = tdir("rewrite");
+        let dir = base.join("v.hsb2");
+        write_sample(&dir, 32, 2, 1);
+        let v1 = ShardedVariant::open(&dir).unwrap();
+        assert_eq!(v1.save_seq(), 1);
+        // second write of the same variant path swaps the directory
+        write_sample(&dir, 32, 3, 2);
+        let v2 = ShardedVariant::open(&dir).unwrap();
+        assert_eq!(v2.save_seq(), 2);
+        assert_eq!(v2.shard_count(), 3);
+        // no temp/old directories left behind
+        let leftovers: Vec<String> = std::fs::read_dir(&base)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .filter(|n| n != "v.hsb2")
+            .collect();
+        assert!(leftovers.is_empty(), "{leftovers:?}");
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+}

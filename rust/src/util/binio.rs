@@ -60,6 +60,34 @@ pub fn read_exact_vec<R: Read>(r: &mut R, n: usize) -> Result<Vec<u8>> {
     Ok(buf)
 }
 
+/// Fill `buf` as far as the stream allows, retrying through short reads
+/// and `EINTR`, and return how many bytes were actually read (`< buf.len()`
+/// only at end-of-stream). This is the robust read loop every header peek
+/// shares: a signal landing mid-`read` or a filesystem returning short
+/// counts must never be mistaken for a truncated file.
+pub fn read_full<R: Read>(r: &mut R, buf: &mut [u8]) -> std::io::Result<usize> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => break,
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(filled)
+}
+
+/// Read the first `n` bytes of `path` through [`read_full`]. Returns the
+/// (possibly shorter, at EOF) prefix; IO errors propagate.
+pub fn read_file_prefix(path: &std::path::Path, n: usize) -> std::io::Result<Vec<u8>> {
+    let mut f = std::fs::File::open(path)?;
+    let mut buf = vec![0u8; n];
+    let got = read_full(&mut f, &mut buf)?;
+    buf.truncate(got);
+    Ok(buf)
+}
+
 /// Read a u32 length-prefixed utf-8 string.
 pub fn read_string<R: Read>(r: &mut R) -> Result<String> {
     let len = read_u32(r)? as usize;
@@ -289,6 +317,61 @@ mod tests {
         assert_eq!(r.remaining(), 0);
         let e = r.take(1).unwrap_err();
         assert!(format!("{e}").contains("truncated"), "{e}");
+    }
+
+    /// A reader that returns one byte per call and injects `Interrupted`
+    /// before every other read — the short-read/EINTR storm `read_full`
+    /// must ride out.
+    struct HostileReader {
+        data: Vec<u8>,
+        pos: usize,
+        interrupt_next: bool,
+    }
+
+    impl Read for HostileReader {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            if self.interrupt_next {
+                self.interrupt_next = false;
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::Interrupted,
+                    "signal",
+                ));
+            }
+            self.interrupt_next = true;
+            if self.pos >= self.data.len() || buf.is_empty() {
+                return Ok(0);
+            }
+            buf[0] = self.data[self.pos];
+            self.pos += 1;
+            Ok(1)
+        }
+    }
+
+    #[test]
+    fn read_full_survives_short_reads_and_eintr() {
+        let data: Vec<u8> = (0..100u8).collect();
+        let mut r = HostileReader {
+            data: data.clone(),
+            pos: 0,
+            interrupt_next: true,
+        };
+        let mut buf = vec![0u8; 64];
+        assert_eq!(read_full(&mut r, &mut buf).unwrap(), 64);
+        assert_eq!(&buf[..], &data[..64]);
+        // EOF: the remaining 36 bytes fill, the count reports the shortfall
+        let mut rest = vec![0u8; 64];
+        assert_eq!(read_full(&mut r, &mut rest).unwrap(), 36);
+        assert_eq!(&rest[..36], &data[64..]);
+    }
+
+    #[test]
+    fn read_file_prefix_clamps_to_file_length() {
+        let p = std::env::temp_dir().join(format!("hisolo-binio-prefix-{}", std::process::id()));
+        std::fs::write(&p, b"HSBM1234").unwrap();
+        assert_eq!(read_file_prefix(&p, 4).unwrap(), b"HSBM");
+        assert_eq!(read_file_prefix(&p, 64).unwrap(), b"HSBM1234");
+        std::fs::remove_file(&p).unwrap();
+        assert!(read_file_prefix(&p, 4).is_err());
     }
 
     #[test]

@@ -1,0 +1,237 @@
+//! Read-only memory-mapped files for the zero-copy store path.
+//!
+//! The build environment is fully offline (no `libc`/`memmap2` crates), so
+//! this module declares the two syscall wrappers it needs — `mmap` and
+//! `munmap` — directly against the C runtime std already links on unix.
+//! The surface is deliberately tiny: [`Mmap::map`] maps a whole file
+//! `PROT_READ`/`MAP_SHARED` and derefs to `[u8]`; dropping unmaps.
+//!
+//! Why `MAP_SHARED` for a read-only mapping: N serving processes that map
+//! the same variant share one page-cache copy of the factor bytes, which is
+//! the multi-process memory win the `HSB2` sharded store exists for
+//! (`benches/store_load.rs --procs` measures it).
+//!
+//! Rollout safety mirrors the SIMD layer's `HISOLO_SIMD` kill-switch:
+//! `HISOLO_MMAP=off|0|buffered` pins every reader to the buffered
+//! (read-into-heap) path, and any mmap *failure* — unsupported platform,
+//! filesystem that refuses mapping, empty file — degrades to buffered with
+//! a single warning instead of failing the load ([`map_or_warn`]).
+
+use std::fs::File;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+
+/// A read-only mapping of an entire file. `Send + Sync`: the mapping is
+/// immutable for its lifetime and unmapped exactly once on drop.
+pub struct Mmap {
+    ptr: std::ptr::NonNull<u8>,
+    len: usize,
+}
+
+// SAFETY: the mapping is PROT_READ and never handed out mutably; munmap
+// happens once in Drop. Sharing &Mmap across threads is reading immutable
+// memory.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+#[cfg(unix)]
+mod sys {
+    // std links the platform C runtime on unix targets, so declaring the
+    // two symbols we need is dependency-free.
+    extern "C" {
+        pub fn mmap(
+            addr: *mut core::ffi::c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut core::ffi::c_void;
+        pub fn munmap(addr: *mut core::ffi::c_void, len: usize) -> i32;
+    }
+
+    pub const PROT_READ: i32 = 1;
+    pub const MAP_SHARED: i32 = 1;
+    pub const MAP_FAILED: *mut core::ffi::c_void = usize::MAX as *mut core::ffi::c_void;
+}
+
+impl Mmap {
+    /// Map `path` read-only in its entirety. Errors (rather than panics)
+    /// on unsupported platforms, zero-length files, and syscall failure —
+    /// callers fall back to the buffered reader.
+    pub fn map(path: &Path) -> std::io::Result<Mmap> {
+        #[cfg(unix)]
+        {
+            use std::os::unix::io::AsRawFd;
+            let file = File::open(path)?;
+            let len = file.metadata()?.len();
+            if len == 0 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidInput,
+                    "mmap of empty file",
+                ));
+            }
+            let len = usize::try_from(len).map_err(|_| {
+                std::io::Error::new(std::io::ErrorKind::InvalidInput, "file too large to map")
+            })?;
+            // SAFETY: len > 0, fd is a freshly opened readable file; a
+            // MAP_FAILED return is checked below. The fd may be closed
+            // after mmap returns — the mapping keeps its own reference.
+            let ptr = unsafe {
+                sys::mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    sys::PROT_READ,
+                    sys::MAP_SHARED,
+                    file.as_raw_fd(),
+                    0,
+                )
+            };
+            if ptr == sys::MAP_FAILED || ptr.is_null() {
+                return Err(std::io::Error::last_os_error());
+            }
+            Ok(Mmap {
+                ptr: std::ptr::NonNull::new(ptr as *mut u8).unwrap(),
+                len,
+            })
+        }
+        #[cfg(not(unix))]
+        {
+            let _ = path;
+            Err(std::io::Error::new(
+                std::io::ErrorKind::Unsupported,
+                "mmap unsupported on this platform",
+            ))
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl std::ops::Deref for Mmap {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        // SAFETY: ptr/len describe a live PROT_READ mapping until Drop.
+        unsafe { std::slice::from_raw_parts(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        // SAFETY: exactly the (addr, len) pair a successful mmap returned.
+        unsafe {
+            sys::munmap(self.ptr.as_ptr() as *mut core::ffi::c_void, self.len);
+        }
+    }
+}
+
+impl std::fmt::Debug for Mmap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Mmap[{} bytes]", self.len)
+    }
+}
+
+/// Whether the store readers should attempt to mmap at all, honouring the
+/// `HISOLO_MMAP` kill-switch (`off`/`0`/`buffered` pins the buffered
+/// reader; anything else — including unset — is `auto`). Read once.
+pub fn mmap_enabled() -> bool {
+    static ENABLED: OnceLock<bool> = OnceLock::new();
+    *ENABLED.get_or_init(|| {
+        if let Ok(v) = std::env::var("HISOLO_MMAP") {
+            let v = v.to_ascii_lowercase();
+            if v == "off" || v == "0" || v == "buffered" {
+                return false;
+            }
+        }
+        cfg!(unix)
+    })
+}
+
+static MMAP_FALLBACK_WARNED: AtomicBool = AtomicBool::new(false);
+
+/// Try to map `path`, honouring the kill-switch; on any failure warn once
+/// per process and return `None` so the caller serves from the buffered
+/// reader instead. A degraded load path is a log line, never an outage.
+pub fn map_or_warn(path: &Path) -> Option<std::sync::Arc<Mmap>> {
+    if !mmap_enabled() {
+        return None;
+    }
+    match Mmap::map(path) {
+        Ok(m) => Some(std::sync::Arc::new(m)),
+        Err(e) => {
+            if !MMAP_FALLBACK_WARNED.swap(true, Ordering::Relaxed) {
+                crate::log_warn!(
+                    "mmap of {} failed ({e}); falling back to buffered store reads \
+                     (further fallbacks silent)",
+                    path.display()
+                );
+            }
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tmp(name: &str, bytes: &[u8]) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!("hisolo-mmap-{}-{name}", std::process::id()));
+        let mut f = File::create(&p).unwrap();
+        f.write_all(bytes).unwrap();
+        p
+    }
+
+    #[test]
+    #[cfg(unix)]
+    fn maps_file_contents_exactly() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        let p = tmp("contents", &data);
+        let m = Mmap::map(&p).unwrap();
+        assert_eq!(m.len(), data.len());
+        assert_eq!(&m[..], &data[..]);
+        drop(m);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    #[cfg(unix)]
+    fn empty_file_refuses_cleanly() {
+        let p = tmp("empty", b"");
+        assert!(Mmap::map(&p).is_err());
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn missing_file_is_an_error_not_a_panic() {
+        assert!(Mmap::map(Path::new("/nonexistent/hisolo-mmap-test")).is_err());
+    }
+
+    #[test]
+    #[cfg(unix)]
+    fn mapping_is_shareable_across_threads() {
+        let data = vec![7u8; 4096];
+        let p = tmp("threads", &data);
+        let m = std::sync::Arc::new(Mmap::map(&p).unwrap());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let m = m.clone();
+                std::thread::spawn(move || m.iter().map(|&b| b as u64).sum::<u64>())
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 7 * 4096);
+        }
+        std::fs::remove_file(&p).unwrap();
+    }
+}

@@ -10,6 +10,7 @@ pub mod cli;
 pub mod fp16;
 pub mod json;
 pub mod logging;
+pub mod mmap;
 pub mod proptest;
 pub mod rng;
 pub mod timer;

@@ -1,0 +1,208 @@
+//! End-to-end coverage of the sharded `HSB2` store: both on-disk forms
+//! loading identically through the one `ModelStore`/`VariantFile` API,
+//! newer-save-seq resolution between them, per-shard corruption isolation
+//! at the model level, atomic pruning of sharded variants, and the
+//! zero-copy aliasing guarantee — an mmap-backed model's `apply_batch` is
+//! bitwise identical to a buffered load's.
+
+use hisolo::compress::Method;
+use hisolo::compress::CompressorConfig;
+use hisolo::linalg::Matrix;
+use hisolo::model::{CompressedModel, ModelConfig, Transformer};
+use hisolo::store::{MmapMode, ModelStore};
+use hisolo::util::rng::Rng;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("hisolo_sharded_store_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn tiny_base() -> Arc<Transformer> {
+    Arc::new(Transformer::random(
+        ModelConfig {
+            vocab: 64,
+            d_model: 32,
+            n_heads: 4,
+            n_layers: 3,
+            d_ff: 64,
+            seq_len: 16,
+        },
+        21,
+    ))
+}
+
+fn cfg() -> CompressorConfig {
+    CompressorConfig {
+        rank: 8,
+        sparsity: 0.15,
+        depth: 2,
+        min_leaf: 8,
+        ..Default::default()
+    }
+}
+
+/// The monolithic `HSB1` and sharded `HSB2` forms of the same model load
+/// identically through the same API: same reports, same forward logits
+/// to the bit. (The formats differ only in layout and alignment pads —
+/// never in the value bytes.)
+#[test]
+fn both_forms_load_identically_through_same_api() {
+    let base = tiny_base();
+    let store = ModelStore::open(temp_dir("both_forms"));
+    let cm = CompressedModel::compress(base.clone(), Method::SHssRcm, cfg());
+    store.save_model("mono", &cm).unwrap();
+    store.save_model_sharded("sharded", &cm).unwrap();
+    assert_eq!(
+        store.variants(),
+        vec!["mono".to_string(), "sharded".to_string()]
+    );
+
+    let mono = store.open_variant("mono").unwrap();
+    let sharded = store.open_variant("sharded").unwrap();
+    assert!(!mono.is_sharded());
+    assert!(sharded.is_sharded());
+    assert_eq!(sharded.shard_count(), 3, "one shard per layer");
+    assert_eq!(mono.names(), sharded.names());
+
+    let m_model = CompressedModel::from_store(base.clone(), &mono).unwrap();
+    let s_model = CompressedModel::from_store(base.clone(), &sharded).unwrap();
+    for (a, b) in m_model.reports.iter().zip(&s_model.reports) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.params, b.params);
+        assert_eq!(a.bytes, b.bytes);
+        assert_eq!(a.rel_error.to_bits(), b.rel_error.to_bits(), "{}", a.name);
+    }
+    let tokens: Vec<u32> = (0..16).map(|i| (i * 7) % 64).collect();
+    let ya = m_model.forward(&tokens);
+    let yb = s_model.forward(&tokens);
+    for (i, (a, b)) in ya.data.iter().zip(yb.data.iter()).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "logit {i}");
+    }
+}
+
+/// When one variant name exists in both forms, `open_variant` resolves
+/// to the newer save-seq (tie → sharded), and `variant_save_seq` reports
+/// the winning sequence.
+#[test]
+fn open_variant_prefers_newer_form() {
+    let base = tiny_base();
+    let store = ModelStore::open(temp_dir("prefer_newer"));
+    let cm = CompressedModel::compress(base.clone(), Method::SSvd, cfg());
+
+    store.save_model("v", &cm).unwrap(); // seq 1, monolithic
+    store.save_model_sharded("v", &cm).unwrap(); // seq 2, sharded
+    assert_eq!(store.variant_save_seq("v"), Some(2));
+    let f = store.open_variant("v").unwrap();
+    assert!(f.is_sharded(), "sharded form is newer");
+    assert_eq!(f.save_seq(), 2);
+
+    store.save_model("v", &cm).unwrap(); // seq 3, monolithic again
+    assert_eq!(store.variant_save_seq("v"), Some(3));
+    let f = store.open_variant("v").unwrap();
+    assert!(!f.is_sharded(), "monolithic form is newer now");
+    assert_eq!(f.save_seq(), 3);
+}
+
+/// A bit flip inside one layer's shard fails that layer's load — with an
+/// error naming the shard file — while every other layer still decodes.
+#[test]
+fn shard_corruption_isolated_and_named() {
+    let base = tiny_base();
+    let store = ModelStore::open(temp_dir("isolation"));
+    let cm = CompressedModel::compress(base.clone(), Method::SHssRcm, cfg());
+    let dir = store.save_model_sharded("v", &cm).unwrap();
+
+    let shard = dir.join("layer1.shard");
+    let mut bytes = std::fs::read(&shard).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x01;
+    std::fs::write(&shard, &bytes).unwrap();
+
+    let f = store.open_variant("v").unwrap(); // manifest + lengths intact
+    assert!(f.load_native("layer0.wq").is_ok());
+    assert!(f.load_native("layer2.wv").is_ok());
+    let err = format!("{:#}", f.load_native("layer1.wk").unwrap_err());
+    assert!(err.contains("layer1.shard"), "{err}");
+
+    // the whole-model load fails for the same reason, same name
+    let err = format!(
+        "{:#}",
+        CompressedModel::from_store(base.clone(), &f).unwrap_err()
+    );
+    assert!(err.contains("layer1.shard"), "{err}");
+
+    // a missing shard is rejected at open, naming it
+    std::fs::remove_file(&shard).unwrap();
+    let err = format!("{:#}", store.open_variant("v").unwrap_err());
+    assert!(err.contains("layer1.shard") && err.contains("missing"), "{err}");
+}
+
+/// `prune` deletes a sharded variant atomically — directory fully gone,
+/// manifest removed first (no window where a manifest references missing
+/// shards) — and never touches the active variant.
+#[test]
+fn prune_deletes_sharded_variants() {
+    let base = tiny_base();
+    let store = ModelStore::open(temp_dir("prune"));
+    let cm = CompressedModel::compress(base.clone(), Method::SSvd, cfg());
+    for name in ["s0", "s1", "s2"] {
+        store.save_model_sharded(name, &cm).unwrap();
+    }
+    store.save_model("m0", &cm).unwrap(); // seq 4, newest
+
+    // keep 2 newest (m0, s2); s0 is active and immune
+    let deleted = store.prune(2, Some("s0")).unwrap();
+    assert_eq!(deleted, vec!["s1".to_string()]);
+    assert!(!store.sharded_path("s1").exists(), "directory fully removed");
+    assert_eq!(
+        store.variants(),
+        vec!["m0".to_string(), "s0".to_string(), "s2".to_string()]
+    );
+    // survivors still open and load
+    assert!(store.open_variant("s0").is_ok());
+    assert!(store.load_model("s2", base.clone()).is_ok());
+
+    // a manifest-less shard directory (mid-delete crash image) is not a
+    // variant: it can't be opened, and a fresh prune reclaims nothing new
+    let dir = store.sharded_path("s2");
+    std::fs::remove_file(dir.join("manifest.hsb2")).unwrap();
+    assert!(store.open_variant("s2").is_err());
+}
+
+/// The aliasing acceptance check: an mmap-backed model (weight buffers
+/// borrowing the mapping) runs `apply_batch` bitwise identical to a
+/// fully-buffered load of the same variant, entry by entry.
+#[test]
+fn mmap_apply_batch_bitwise_identical_to_buffered() {
+    let base = tiny_base();
+    let store = ModelStore::open(temp_dir("aliasing"));
+    let cm = CompressedModel::compress(base.clone(), Method::SHssRcm, cfg());
+    store.save_model_sharded("v", &cm).unwrap();
+
+    let mapped = store.open_variant_with("v", MmapMode::Auto).unwrap();
+    let buffered = store.open_variant_with("v", MmapMode::Buffered).unwrap();
+    assert!(!buffered.is_mapped());
+    if cfg!(unix) && std::env::var("HISOLO_MMAP").is_err() {
+        assert!(mapped.is_mapped(), "Auto must map on unix");
+    }
+
+    let n = base.cfg.d_model;
+    let k = 5;
+    let mut rng = Rng::new(3);
+    let x = Matrix::from_vec(n, k, (0..n * k).map(|_| rng.gaussian_f32()).collect());
+    for name in buffered.names() {
+        let a = mapped.load_native(name).unwrap();
+        let b = buffered.load_native(name).unwrap();
+        let mut ya = Matrix::zeros(n, k);
+        let mut yb = Matrix::zeros(n, k);
+        a.apply_batch(&x, &mut ya, &mut a.workspace_for(k));
+        b.apply_batch(&x, &mut yb, &mut b.workspace_for(k));
+        for (i, (va, vb)) in ya.data.iter().zip(yb.data.iter()).enumerate() {
+            assert_eq!(va.to_bits(), vb.to_bits(), "{name}[{i}]");
+        }
+    }
+}
